@@ -1,0 +1,83 @@
+//! End-to-end driver: the paper's full evaluation on the simulated
+//! testbed, with payload reductions executed through the compiled HLO
+//! artifacts via PJRT (run `make artifacts` first; falls back to native
+//! with a warning otherwise).
+//!
+//!     cargo run --release --example osu_scan [iters]
+//!
+//! Regenerates every table/figure of the paper's SSIV — Fig. 4 (average
+//! latency), Fig. 5 (minimum latency), Fig. 6 (average on-NIC latency),
+//! Fig. 7 (minimum on-NIC latency) — over the OSU size ladder on 8 nodes,
+//! with result verification against the oracle ON for every cell, then
+//! checks the paper's qualitative claims hold.  Output is what
+//! EXPERIMENTS.md records.
+
+use nfscan::bench::{self, Metric};
+use nfscan::config::{EngineKind, ExpConfig};
+use nfscan::runtime::make_engine;
+
+fn main() -> anyhow::Result<()> {
+    let iters: usize = std::env::args().nth(1).map(|v| v.parse().unwrap()).unwrap_or(300);
+    let mut base: ExpConfig = bench::figure_base(iters);
+    base.engine = EngineKind::Xla;
+    base.verify = true; // every scan checked against the oracle
+    let compute = make_engine(base.engine, "artifacts");
+
+    println!("== nf-scan end-to-end evaluation ==");
+    println!(
+        "testbed: {} simulated nodes | engine: {} | {} measured iterations per cell\n",
+        base.p,
+        compute.name(),
+        iters
+    );
+
+    let sizes = bench::OSU_SIZES;
+    let paper = bench::run_sweep(&base, &bench::paper_series(), sizes, compute.clone());
+    let nf = bench::run_sweep(&base, &bench::nf_series(), sizes, compute);
+
+    println!("Fig. 4 — average MPI_Scan latency (us), 8 nodes");
+    print!("{}", paper.table(Metric::HostAvg).render());
+    println!("\nFig. 5 — minimum MPI_Scan latency (us), 8 nodes");
+    print!("{}", paper.table(Metric::HostMin).render());
+    println!("\nFig. 6 — average on-NIC latency after offload (us)");
+    print!("{}", nf.table(Metric::NicAvg).render());
+    println!("\nFig. 7 — minimum on-NIC latency after offload (us)");
+    print!("{}", nf.table(Metric::NicMin).render());
+
+    // ---- the paper's qualitative claims, asserted ----
+    // The paper's offload packets are single UDP datagrams; its figures
+    // live in the <= few-KB regime.  Beyond ~4KB wire serialization of
+    // the fragments dominates BOTH paths and the offload advantage
+    // legitimately collapses — so claims are asserted where the paper
+    // measured them (single-to-few-fragment sizes).
+    // series order: 0 sw_seq, 1 sw_rd, 2 NF_seq, 3 NF_rd, 4 NF_binomial
+    let avg = |j: usize, i: usize| paper.cells[j][i].0.avg_ns();
+    let min = |j: usize, i: usize| paper.cells[j][i].0.min_ns();
+    let nic_avg = |j: usize, i: usize| nf.cells[j][i].1.avg_ns();
+    let mut checks = Vec::new();
+    for i in 0..sizes.len() {
+        checks.push(("sw_seq has the lowest average latency", avg(0, i) < avg(1, i)));
+        checks.push(("sw_seq min is the global min", min(0, i) <= min(1, i) && min(0, i) <= min(2, i)));
+        if sizes[i] <= 4096 {
+            checks.push(("NF_rd beats sw_rd significantly (paper regime)", avg(3, i) < avg(1, i)));
+        }
+        if sizes[i] <= 1024 {
+            // crossing-dominated regime: the NIC does its work in a small
+            // fraction of what the host observes
+            for j in 0..3 {
+                checks.push((
+                    "on-NIC latency sits far below end-to-end (small messages)",
+                    nic_avg(j, i) * 2.0 < nf.cells[j][i].0.avg_ns(),
+                ));
+            }
+        }
+    }
+    let failed: Vec<_> = checks.iter().filter(|(_, ok)| !ok).collect();
+    println!("\nqualitative checks: {}/{} hold", checks.len() - failed.len(), checks.len());
+    for (what, _) in &failed {
+        println!("  FAILED: {what}");
+    }
+    anyhow::ensure!(failed.is_empty(), "paper-shape checks failed");
+    println!("osu_scan OK — all scans oracle-verified, all paper-shape checks hold");
+    Ok(())
+}

@@ -1,0 +1,8 @@
+// temporary probe: output buffer structure + fast readback path
+use nfscan::runtime::XlaEngine;
+use nfscan::data::{Op, Dtype, Payload};
+fn main() -> anyhow::Result<()> {
+    let e = XlaEngine::load("artifacts")?;
+    e.probe_output_structure()?;
+    Ok(())
+}

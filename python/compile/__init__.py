@@ -1,0 +1,12 @@
+"""Build-time Python for nf-scan (never imported at runtime).
+
+- ``kernels`` — L1 Pallas kernels + pure-jnp oracle.
+- ``model``   — L2 JAX compute graphs over payload blocks.
+- ``aot``     — lowers every (kind x op x dtype) variant to HLO text in
+  ``artifacts/`` for the Rust PJRT runtime.
+"""
+
+import jax
+
+# MPI_DOUBLE payloads need real f64; enable before any tracing happens.
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,29 @@
+"""L1 Pallas kernels for the NetFPGA MPI_Scan datapath.
+
+The NetFPGA combined scan payloads with a hardware adder pipeline streaming
+64-bit words at 125 MHz.  The TPU-shaped analogue implemented here:
+
+- ``combine``  — tiled elementwise ``acc (op) x`` over payload blocks; the
+  BlockSpec tiles the payload through VMEM the way the FPGA streamed words
+  through its pipeline registers.
+- ``scan``     — work-efficient block prefix scan (Hillis-Steele inside a
+  VMEM-resident block), the Pallas analogue of the pipelined dataflow scan
+  circuits of Park & Dai cited by the paper.
+- ``derive``   — the inverse-subtract used by the recursive-doubling
+  multicast optimization (paper SSIII-C): peer = cumulative - own.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret-mode lowers to plain HLO that the Rust
+runtime loads via the xla crate.
+"""
+
+from . import combine, ref, scan  # noqa: F401
+
+OPS = ("sum", "prod", "max", "min")
+INT_OPS = ("band", "bor", "bxor")
+DTYPES = ("i32", "f32", "f64")
+
+#: Fixed AOT block size (elements).  The Rust runtime pads / chunks payloads
+#: to this length.  2048 x f64 = 16 KiB per operand — comfortably VMEM-sized
+#: with double-buffering headroom on a real TPU.
+BLOCK = 2048

@@ -1,0 +1,84 @@
+"""Pallas elementwise-combine kernel: the FPGA adder-pipeline datapath.
+
+On the NetFPGA the collective engine folds an incoming scan payload into a
+buffered partial result word-by-word at line rate.  Here the same datapath
+is a Pallas kernel: the payload is tiled through VMEM in ``TILE``-element
+blocks (BlockSpec plays the role the streaming pipeline registers played)
+and each block is combined on the VPU in one shot.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+#: VMEM tile, in elements.  A (8, 128) float32 tile is the native VPU lane
+#: layout; 1024 elements keeps every dtype's tile a multiple of it.
+TILE = 1024
+
+
+def _combine_kernel(a_ref, b_ref, o_ref, *, op: str):
+    """One VMEM-resident tile: o = a (op) b, fully vectorized on the VPU."""
+    o_ref[...] = ref.binop(op)(a_ref[...], b_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("op",))
+def combine(a, b, *, op: str = "sum"):
+    """Elementwise ``a (op) b`` over equal-shape 1-D payloads.
+
+    Pads to a TILE multiple with the op identity, tiles the payload through
+    VMEM on a 1-D grid, and slices the pad back off.  The pad/identity dance
+    mirrors what the Rust runtime does when it chunks wire payloads into the
+    fixed AOT block size.
+    """
+    assert a.shape == b.shape and a.ndim == 1, (a.shape, b.shape)
+    n = a.shape[0]
+    padded = pl.cdiv(n, TILE) * TILE
+    ident = ref.identity(op, a.dtype)
+    ap = jnp.full((padded,), ident, a.dtype).at[:n].set(a)
+    bp = jnp.full((padded,), ident, b.dtype).at[:n].set(b)
+    out = pl.pallas_call(
+        functools.partial(_combine_kernel, op=op),
+        grid=(padded // TILE,),
+        in_specs=[
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((padded,), a.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(ap, bp)
+    return out[:n]
+
+
+def _derive_kernel(cum_ref, own_ref, o_ref):
+    """Inverse-subtract tile: peer = cumulative - own."""
+    o_ref[...] = cum_ref[...] - own_ref[...]
+
+
+@jax.jit
+def derive(cumulative, own):
+    """Recover a peer's payload from a tagged multicast cumulative message
+    (paper SSIII-C).  Valid for MPI_SUM over exact (integer) types: the rank
+    that cached its own contribution subtracts it from the received
+    cumulative data to reconstruct the peer's message locally."""
+    assert cumulative.shape == own.shape and cumulative.ndim == 1
+    n = cumulative.shape[0]
+    padded = pl.cdiv(n, TILE) * TILE
+    cp = jnp.zeros((padded,), cumulative.dtype).at[:n].set(cumulative)
+    op_ = jnp.zeros((padded,), own.dtype).at[:n].set(own)
+    out = pl.pallas_call(
+        _derive_kernel,
+        grid=(padded // TILE,),
+        in_specs=[
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((padded,), cumulative.dtype),
+        interpret=True,
+    )(cp, op_)
+    return out[:n]

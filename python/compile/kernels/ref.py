@@ -1,0 +1,68 @@
+"""Pure-jnp correctness oracles for the L1 kernels.
+
+These are the single source of truth for what every kernel must compute;
+pytest/hypothesis sweeps the Pallas kernels against them.
+"""
+
+import jax.lax as lax
+import jax.numpy as jnp
+
+#: MPI reduction op -> (binary fn, identity-producing fn(dtype)).
+#: Identities let the runtime pad payloads to the fixed AOT block size
+#: without perturbing results.
+_BINOPS = {
+    "sum": (lambda a, b: a + b, lambda dt: jnp.zeros((), dt)),
+    "prod": (lambda a, b: a * b, lambda dt: jnp.ones((), dt)),
+    "max": (
+        jnp.maximum,
+        lambda dt: jnp.array(
+            jnp.finfo(dt).min if jnp.issubdtype(dt, jnp.floating) else jnp.iinfo(dt).min, dt
+        ),
+    ),
+    "min": (
+        jnp.minimum,
+        lambda dt: jnp.array(
+            jnp.finfo(dt).max if jnp.issubdtype(dt, jnp.floating) else jnp.iinfo(dt).max, dt
+        ),
+    ),
+    "band": (lambda a, b: a & b, lambda dt: jnp.array(-1, dt)),
+    "bor": (lambda a, b: a | b, lambda dt: jnp.zeros((), dt)),
+    "bxor": (lambda a, b: a ^ b, lambda dt: jnp.zeros((), dt)),
+}
+
+
+def binop(op: str):
+    """The associative binary function for MPI op name ``op``."""
+    return _BINOPS[op][0]
+
+
+def identity(op: str, dtype):
+    """The identity element of ``op`` for ``dtype`` (scalar jnp array)."""
+    return _BINOPS[op][1](jnp.dtype(dtype))
+
+
+def combine_ref(a, b, op: str):
+    """Elementwise ``a (op) b`` — what the FPGA adder pipeline computes when
+    an incoming payload is folded into a buffered partial sum."""
+    return binop(op)(a, b)
+
+
+def scan_ref(x, op: str, inclusive: bool = True):
+    """Prefix scan of a 1-D payload with ``op``.
+
+    ``inclusive=True``  -> MPI_Scan semantics (element j includes x[j]);
+    ``inclusive=False`` -> MPI_Exscan (element 0 is the identity).
+    """
+    inc = lax.associative_scan(binop(op), x)
+    if inclusive:
+        return inc
+    ident = jnp.full((1,), identity(op, x.dtype))
+    return jnp.concatenate([ident, inc[:-1]])
+
+
+def derive_ref(cumulative, own):
+    """Inverse-subtract of the multicast optimization (paper SSIII-C):
+    given ``cumulative = peer + own`` recover ``peer``.  Exact only for
+    MPI_SUM over integers, which is why the paper restricts the
+    optimization to MPI_INT / MPI_SUM."""
+    return cumulative - own

@@ -1,0 +1,65 @@
+"""Pallas block prefix-scan kernel.
+
+The Pallas analogue of the pipelined-dataflow scan circuits (Park & Dai)
+the paper cites: a Hillis-Steele ladder over a VMEM-resident block.  Each
+of the log2(BLOCK) ladder steps is a full-width vector shift + combine —
+exactly the structure an FPGA scan pipeline unrolls in space, unrolled here
+in time on the VPU.
+
+Blocks larger than ``BLOCK`` are handled at L2 (``model.chunked_scan``) by
+carrying the last element across chunks with ``lax.scan`` — the same
+block-local-scan + carry decomposition every GPU/FPGA scan in the paper's
+related work uses.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+#: Elements per scan block; must be a power of two for the ladder.
+BLOCK = 2048
+
+
+def _scan_kernel(x_ref, o_ref, *, op: str, n: int):
+    """Hillis-Steele inclusive scan of one VMEM block.
+
+    ``shift`` is materialized with a static concatenate (shapes are static
+    inside the kernel), so each ladder step is one vector op + one combine.
+    """
+    f = ref.binop(op)
+    x = x_ref[...]
+    ident = ref.identity(op, x.dtype)
+    d = 1
+    while d < n:
+        shifted = jnp.concatenate([jnp.full((d,), ident, x.dtype), x[:-d]])
+        x = f(x, shifted)
+        d *= 2
+    o_ref[...] = x
+
+
+@functools.partial(jax.jit, static_argnames=("op", "inclusive"))
+def block_scan(x, *, op: str = "sum", inclusive: bool = True):
+    """Prefix scan of a 1-D payload of at most ``BLOCK`` elements.
+
+    Pads with the op identity to the fixed block size, scans in one VMEM
+    block, slices the pad off.  Exclusive scans shift the inclusive result
+    right by one and inject the identity — identical to how MPI_Exscan
+    relates to MPI_Scan.
+    """
+    assert x.ndim == 1 and x.shape[0] <= BLOCK, x.shape
+    n = x.shape[0]
+    ident = ref.identity(op, x.dtype)
+    xp = jnp.full((BLOCK,), ident, x.dtype).at[:n].set(x)
+    out = pl.pallas_call(
+        functools.partial(_scan_kernel, op=op, n=BLOCK),
+        out_shape=jax.ShapeDtypeStruct((BLOCK,), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp)
+    inc = out[:n]
+    if inclusive:
+        return inc
+    return jnp.concatenate([jnp.full((1,), ident, x.dtype), inc[:-1]])

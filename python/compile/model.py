@@ -1,0 +1,91 @@
+"""L2: JAX compute graphs for the NetFPGA scan datapath.
+
+These are the functions that get AOT-lowered to HLO and executed from the
+Rust hot path.  Every function operates on fixed-size payload blocks
+(``kernels.BLOCK`` elements) because AOT artifacts have static shapes; the
+Rust runtime pads with the op identity / chunks larger payloads.
+
+Exported graph kinds (see ``aot.VARIANTS``):
+
+- ``combine``   — elementwise fold of an incoming payload into a partial
+  result (the per-packet work of every scan algorithm's state machine).
+- ``scan_inc`` / ``scan_exc`` — block-local prefix scan (host-side oracle
+  path and the single-FPGA related-work baseline).
+- ``derive``    — multicast inverse-subtract (recursive doubling, SSIII-C).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import BLOCK, combine as combine_k, ref, scan as scan_k
+
+_DTYPES = {"i32": jnp.int32, "f32": jnp.float32, "f64": jnp.float64}
+
+
+def dtype_of(name: str):
+    """jnp dtype for the manifest dtype name (i32/f32/f64)."""
+    return _DTYPES[name]
+
+
+def make_combine(op: str):
+    """Block combine graph: (a[BLOCK], b[BLOCK]) -> (a (op) b,).
+
+    Returns a 1-tuple because the AOT bridge lowers with
+    ``return_tuple=True`` and the Rust side unwraps with ``to_tuple1``.
+    """
+
+    def fn(a, b):
+        return (combine_k.combine(a, b, op=op),)
+
+    fn.__name__ = f"combine_{op}"
+    return fn
+
+
+def make_scan(op: str, inclusive: bool):
+    """Block prefix-scan graph: (x[BLOCK],) -> (scan(x),)."""
+
+    def fn(x):
+        return (scan_k.block_scan(x, op=op, inclusive=inclusive),)
+
+    fn.__name__ = f"scan_{'inc' if inclusive else 'exc'}_{op}"
+    return fn
+
+
+def make_derive():
+    """Multicast inverse-subtract graph: (cum[BLOCK], own[BLOCK]) -> (peer,)."""
+
+    def fn(cum, own):
+        return (combine_k.derive(cum, own),)
+
+    fn.__name__ = "derive_sub"
+    return fn
+
+
+@functools.partial(jax.jit, static_argnames=("op", "inclusive"))
+def chunked_scan(x, *, op: str = "sum", inclusive: bool = True):
+    """Prefix scan of payloads larger than one block.
+
+    L2 composition over the L1 block kernel: ``lax.scan`` carries the last
+    inclusive element across chunks — the block-local-scan + carry
+    decomposition used by every blocked scan implementation the paper cites
+    (Harris et al. for GPUs, Park & Dai for FPGAs).
+
+    Requires ``len(x)`` to be a multiple of BLOCK (the runtime pads).
+    """
+    n = x.shape[0]
+    assert n % BLOCK == 0, n
+    f = ref.binop(op)
+    chunks = x.reshape(n // BLOCK, BLOCK)
+
+    def step(carry, chunk):
+        inc = scan_k.block_scan(chunk, op=op, inclusive=True)
+        inc = f(carry, inc)
+        out = inc if inclusive else jnp.concatenate([carry[None], inc[:-1]])
+        return inc[-1], out
+
+    ident = ref.identity(op, x.dtype)
+    _, outs = lax.scan(step, jnp.asarray(ident, x.dtype), chunks)
+    return outs.reshape(n)

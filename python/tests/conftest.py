@@ -1,0 +1,10 @@
+import os
+import sys
+
+import jax
+
+# f64 payloads (MPI_DOUBLE) require x64 before any tracing.
+jax.config.update("jax_enable_x64", True)
+
+# Make `compile.*` importable when pytest runs from python/.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

@@ -1,0 +1,193 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes, dtypes and ops; every property asserts
+allclose/exact-equality against the oracle.  This is the CORE correctness
+signal for the compute datapath the Rust runtime executes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from hypothesis.extra.numpy import arrays
+
+from compile.kernels import BLOCK, DTYPES, INT_OPS, OPS, combine, ref, scan
+
+_NP_DTYPES = {"i32": np.int32, "f32": np.float32, "f64": np.float64}
+
+
+# Bounded shape set: every jax trace is cached per shape, and interpret-mode
+# Pallas tracing dominates test runtime — unbounded st.integers shapes would
+# retrace on almost every hypothesis example.  These sizes still cover the
+# edge cases: 1, non-tile-aligned, exactly-tile, tile+1, multi-tile.
+SIZES = [1, 2, 3, 17, 255, combine.TILE - 1, combine.TILE, combine.TILE + 1, 2 * combine.TILE]
+
+
+def payload(dtype_name, sizes=None, op=None):
+    """Strategy for a 1-D payload with values kept small enough that the op
+    over a block stays well-conditioned (no overflow / float blowup).  For
+    float prod, values near 1.0 keep a 2048-long product finite so relative
+    comparison is meaningful."""
+    dt = _NP_DTYPES[dtype_name]
+    if dtype_name == "i32":
+        elems = st.integers(min_value=-7, max_value=7)
+    elif op == "prod":
+        # bounds exactly representable in binary32 (hypothesis requires it)
+        elems = st.floats(
+            min_value=0.90625, max_value=1.09375, allow_nan=False, allow_infinity=False, width=32
+        )
+    else:
+        elems = st.floats(
+            min_value=-4.0, max_value=4.0, allow_nan=False, allow_infinity=False, width=32
+        )
+    return arrays(dt, st.sampled_from(sizes or SIZES), elements=elems)
+
+
+def assert_matches(got, want, dtype_name, scan_scale=None):
+    """Exact match for ints; float tolerance scaled by the accumulated
+    magnitude when comparing scans (Hillis-Steele associates differently
+    from the oracle's associative_scan, so rounding differs legitimately).
+    """
+    got, want = np.asarray(got), np.asarray(want)
+    assert got.dtype == want.dtype
+    assert got.shape == want.shape
+    if dtype_name == "i32":
+        np.testing.assert_array_equal(got, want)
+        return
+    eps = np.finfo(got.dtype).eps
+    atol = 1e-6 if scan_scale is None else 64 * eps * max(scan_scale, 1.0)
+    rtol = 1e-5 if got.dtype == np.float32 else 1e-12
+    np.testing.assert_allclose(got, want, rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------- combine
+
+
+@pytest.mark.parametrize("op", OPS)
+@pytest.mark.parametrize("dt", DTYPES)
+@settings(max_examples=15, deadline=None)
+@given(data=st.data())
+def test_combine_matches_ref(op, dt, data):
+    a = data.draw(payload(dt))
+    b = data.draw(
+        arrays(
+            _NP_DTYPES[dt],
+            a.shape[0],
+            elements=st.integers(-7, 7)
+            if dt == "i32"
+            else st.floats(-4.0, 4.0, allow_nan=False, width=32),
+        )
+    )
+    got = combine.combine(jnp.asarray(a), jnp.asarray(b), op=op)
+    want = ref.combine_ref(jnp.asarray(a), jnp.asarray(b), op)
+    assert_matches(got, want, dt)
+
+
+@pytest.mark.parametrize("op", INT_OPS)
+@settings(max_examples=15, deadline=None)
+@given(data=st.data())
+def test_combine_bitwise_matches_ref(op, data):
+    a = data.draw(arrays(np.int32, st.sampled_from(SIZES), elements=st.integers(-(2**31), 2**31 - 1)))
+    b = data.draw(arrays(np.int32, a.shape[0], elements=st.integers(-(2**31), 2**31 - 1)))
+    got = combine.combine(jnp.asarray(a), jnp.asarray(b), op=op)
+    want = ref.combine_ref(jnp.asarray(a), jnp.asarray(b), op)
+    assert_matches(got, want, "i32")
+
+
+@pytest.mark.parametrize("op", OPS + INT_OPS)
+def test_combine_identity_is_neutral(op):
+    """x (op) identity == x — the property the runtime's padding relies on."""
+    x = jnp.asarray(np.arange(-13, 50, dtype=np.int32))
+    ident = jnp.full_like(x, ref.identity(op, jnp.int32))
+    assert_matches(combine.combine(x, ident, op=op), x, "i32")
+
+
+@pytest.mark.parametrize("dt", DTYPES)
+def test_combine_exact_tile_boundary(dt):
+    """Payloads exactly at 1x and 2x the VMEM tile hit the no-pad path."""
+    for n in (combine.TILE, 2 * combine.TILE):
+        a = jnp.asarray(np.arange(n) % 11, _NP_DTYPES[dt])
+        b = jnp.asarray(np.arange(n) % 7, _NP_DTYPES[dt])
+        assert_matches(
+            combine.combine(a, b, op="sum"), ref.combine_ref(a, b, "sum"), dt
+        )
+
+
+def test_combine_associativity_chain():
+    """Folding k payloads in any association order gives the same result —
+    the invariant that lets scan algorithms reassociate partial sums."""
+    rng = np.random.default_rng(0)
+    xs = [jnp.asarray(rng.integers(-5, 5, 100), jnp.int32) for _ in range(5)]
+    left = xs[0]
+    for x in xs[1:]:
+        left = combine.combine(left, x, op="sum")
+    right = xs[-1]
+    for x in reversed(xs[:-1]):
+        right = combine.combine(x, right, op="sum")
+    assert_matches(left, right, "i32")
+
+
+# ---------------------------------------------------------------- derive
+
+
+@settings(max_examples=15, deadline=None)
+@given(data=st.data())
+def test_derive_recovers_peer(data):
+    """cumulative = peer + own  =>  derive(cumulative, own) == peer
+    (the SSIII-C multicast optimization, exact for MPI_INT / MPI_SUM)."""
+    own = data.draw(payload("i32"))
+    peer = data.draw(arrays(np.int32, own.shape[0], elements=st.integers(-7, 7)))
+    cum = combine.combine(jnp.asarray(peer), jnp.asarray(own), op="sum")
+    got = combine.derive(cum, jnp.asarray(own))
+    assert_matches(got, jnp.asarray(peer), "i32")
+
+
+# ---------------------------------------------------------------- scan
+
+
+@pytest.mark.parametrize("op", OPS)
+@pytest.mark.parametrize("dt", DTYPES)
+@pytest.mark.parametrize("inclusive", [True, False])
+@settings(max_examples=8, deadline=None)
+@given(data=st.data())
+def test_block_scan_matches_ref(op, dt, inclusive, data):
+    x = data.draw(payload(dt, sizes=[1, 2, 17, 255, 1024, scan.BLOCK], op=op))
+    got = scan.block_scan(jnp.asarray(x), op=op, inclusive=inclusive)
+    want = ref.scan_ref(jnp.asarray(x), op, inclusive=inclusive)
+    if dt == "i32":
+        assert_matches(got, want, dt)
+        return
+    # A scan of n elements accumulates O(n) rounding steps, and the two
+    # implementations associate differently: compare with O(n*eps) rtol
+    # plus an atol scaled by the accumulated magnitude (for cancellation).
+    eps = float(np.finfo(_NP_DTYPES[dt]).eps)
+    scale = float(np.sum(np.abs(x.astype(np.float64))) or 1.0)
+    np.testing.assert_allclose(
+        np.asarray(got),
+        np.asarray(want),
+        rtol=32 * len(x) * eps,
+        atol=64 * eps * scale,
+    )
+
+
+def test_block_scan_single_element():
+    x = jnp.asarray([42], jnp.int32)
+    assert_matches(scan.block_scan(x, op="sum"), x, "i32")
+    got = scan.block_scan(x, op="sum", inclusive=False)
+    assert_matches(got, jnp.asarray([0], jnp.int32), "i32")
+
+
+def test_block_scan_full_block():
+    x = jnp.asarray(np.ones(scan.BLOCK), jnp.int32)
+    got = scan.block_scan(x, op="sum")
+    assert_matches(got, jnp.arange(1, scan.BLOCK + 1, dtype=jnp.int32), "i32")
+
+
+def test_exclusive_is_shifted_inclusive():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.integers(-9, 9, 777), jnp.int32)
+    inc = scan.block_scan(x, op="sum", inclusive=True)
+    exc = scan.block_scan(x, op="sum", inclusive=False)
+    np.testing.assert_array_equal(np.asarray(exc)[1:], np.asarray(inc)[:-1])
+    assert np.asarray(exc)[0] == 0

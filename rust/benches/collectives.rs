@@ -1,0 +1,54 @@
+//! Extension bench: MPI_Barrier and MPI_Allreduce offload (the other
+//! collectives the paper's packet format reserves; the authors' companion
+//! works [6] and [7]).  Compares software recursive doubling against the
+//! offloaded butterfly and the offloaded binomial tree whose down phase
+//! is ONE multicast per node (the paper's SSIII-D contrast with scan).
+//! `cargo bench --bench collectives`.
+
+use std::rc::Rc;
+
+use nfscan::cluster::Cluster;
+use nfscan::config::{EngineKind, ExpConfig};
+use nfscan::metrics::Table;
+use nfscan::packet::{AlgoType, CollType};
+use nfscan::runtime::make_engine;
+
+fn run(coll: CollType, algo: AlgoType, offloaded: bool, msg: usize, iters: usize) -> f64 {
+    let mut cfg = ExpConfig::default();
+    cfg.coll = coll;
+    cfg.algo = algo;
+    cfg.offloaded = offloaded;
+    cfg.msg_bytes = msg;
+    cfg.iters = iters;
+    cfg.warmup = 8;
+    let compute = make_engine(EngineKind::Native, "artifacts");
+    let mut cluster = Cluster::new(cfg, Rc::clone(&compute));
+    cluster.run().expect("run completes").host_overall().avg_us()
+}
+
+fn main() {
+    let iters = 300;
+
+    println!("MPI_Barrier, 8 nodes ({iters} iters): avg latency (us)");
+    let mut t = Table::new(&["series", "avg_us"]);
+    t.row(vec!["sw_rd".into(), format!("{:.2}", run(CollType::Barrier, AlgoType::RecursiveDoubling, false, 4, iters))]);
+    t.row(vec!["NF_rd".into(), format!("{:.2}", run(CollType::Barrier, AlgoType::RecursiveDoubling, true, 4, iters))]);
+    t.row(vec!["NF_binomial".into(), format!("{:.2}", run(CollType::Barrier, AlgoType::BinomialTree, true, 4, iters))]);
+    print!("{}", t.render());
+
+    println!("\nMPI_Allreduce, 8 nodes ({iters} iters): avg latency (us) vs msg size");
+    let mut t = Table::new(&["msg_size", "sw_rd_us", "NF_rd_us", "NF_binomial_us"]);
+    for msg in [4usize, 64, 1024, 4096] {
+        t.row(vec![
+            nfscan::util::fmt_bytes(msg),
+            format!("{:.2}", run(CollType::Allreduce, AlgoType::RecursiveDoubling, false, msg, iters)),
+            format!("{:.2}", run(CollType::Allreduce, AlgoType::RecursiveDoubling, true, msg, iters)),
+            format!("{:.2}", run(CollType::Allreduce, AlgoType::BinomialTree, true, msg, iters)),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "(the binomial allreduce's down phase is ONE multicast per node —\n\
+         the SSIII-D capability MPI_Scan's per-rank outcomes forbid)"
+    );
+}

@@ -1,0 +1,18 @@
+//! Regenerates the paper's Fig. 4: average MPI_Scan latency vs message
+//! size on 8 nodes, five series (sw_seq, sw_rd, NF_seq, NF_rd,
+//! NF_binomial).  `cargo bench --bench fig4_avg_latency`.
+
+use nfscan::bench::{fig4_table, figure_base, OSU_SIZES};
+use nfscan::config::EngineKind;
+use nfscan::runtime::make_engine;
+
+fn main() {
+    let iters = std::env::var("NFSCAN_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(500);
+    let cfg = figure_base(iters);
+    let compute = make_engine(EngineKind::Native, "artifacts");
+    let t0 = std::time::Instant::now();
+    let table = fig4_table(&cfg, compute, OSU_SIZES);
+    println!("Fig. 4 — average MPI_Scan latency (us), 8 nodes, {iters} iters/cell");
+    print!("{}", table.render());
+    println!("[bench wallclock: {:.2}s]", t0.elapsed().as_secs_f64());
+}

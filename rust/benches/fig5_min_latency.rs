@@ -1,0 +1,17 @@
+//! Regenerates the paper's Fig. 5: minimum MPI_Scan latency vs message
+//! size on 8 nodes.  `cargo bench --bench fig5_min_latency`.
+
+use nfscan::bench::{fig5_table, figure_base, OSU_SIZES};
+use nfscan::config::EngineKind;
+use nfscan::runtime::make_engine;
+
+fn main() {
+    let iters = std::env::var("NFSCAN_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(500);
+    let cfg = figure_base(iters);
+    let compute = make_engine(EngineKind::Native, "artifacts");
+    let t0 = std::time::Instant::now();
+    let table = fig5_table(&cfg, compute, OSU_SIZES);
+    println!("Fig. 5 — minimum MPI_Scan latency (us), 8 nodes, {iters} iters/cell");
+    print!("{}", table.render());
+    println!("[bench wallclock: {:.2}s]", t0.elapsed().as_secs_f64());
+}

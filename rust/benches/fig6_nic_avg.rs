@@ -1,0 +1,18 @@
+//! Regenerates the paper's Fig. 6: average on-NIC latency (the NetFPGA's
+//! offload->release timestamp registers) per offloaded algorithm.
+//! `cargo bench --bench fig6_nic_avg`.
+
+use nfscan::bench::{fig6_table, figure_base, OSU_SIZES};
+use nfscan::config::EngineKind;
+use nfscan::runtime::make_engine;
+
+fn main() {
+    let iters = std::env::var("NFSCAN_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(500);
+    let cfg = figure_base(iters);
+    let compute = make_engine(EngineKind::Native, "artifacts");
+    let t0 = std::time::Instant::now();
+    let table = fig6_table(&cfg, compute, OSU_SIZES);
+    println!("Fig. 6 — average on-NIC latency after offload (us), {iters} iters/cell");
+    print!("{}", table.render());
+    println!("[bench wallclock: {:.2}s]", t0.elapsed().as_secs_f64());
+}

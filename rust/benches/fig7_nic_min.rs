@@ -1,0 +1,17 @@
+//! Regenerates the paper's Fig. 7: minimum on-NIC latency per offloaded
+//! algorithm.  `cargo bench --bench fig7_nic_min`.
+
+use nfscan::bench::{fig7_table, figure_base, OSU_SIZES};
+use nfscan::config::EngineKind;
+use nfscan::runtime::make_engine;
+
+fn main() {
+    let iters = std::env::var("NFSCAN_ITERS").ok().and_then(|v| v.parse().ok()).unwrap_or(500);
+    let cfg = figure_base(iters);
+    let compute = make_engine(EngineKind::Native, "artifacts");
+    let t0 = std::time::Instant::now();
+    let table = fig7_table(&cfg, compute, OSU_SIZES);
+    println!("Fig. 7 — minimum on-NIC latency after offload (us), {iters} iters/cell");
+    print!("{}", table.render());
+    println!("[bench wallclock: {:.2}s]", t0.elapsed().as_secs_f64());
+}

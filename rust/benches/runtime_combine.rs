@@ -1,0 +1,60 @@
+//! Hot-path microbenchmark: the payload-combine datapath, XLA artifacts
+//! (PJRT) vs native Rust, across payload sizes.  This is the real
+//! wallclock cost of the runtime the simulator charges virtual time for,
+//! and the primary L3 perf-iteration target (EXPERIMENTS.md SSPerf).
+//! `cargo bench --bench runtime_combine`.
+
+use nfscan::config::EngineKind;
+use nfscan::data::{Op, Payload};
+use nfscan::metrics::Table;
+use nfscan::runtime::{make_engine, Compute};
+
+fn bench_engine(engine: &dyn Compute, n: usize, reps: usize) -> (f64, f64) {
+    let a = Payload::from_i32(&(0..n as i32).map(|v| v % 17 - 8).collect::<Vec<_>>());
+    let b = Payload::from_i32(&(0..n as i32).map(|v| v % 11 - 5).collect::<Vec<_>>());
+    // warmup (compile on first use for the XLA engine)
+    let mut acc = engine.combine(&a, &b, Op::Sum).unwrap();
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        acc = engine.combine(&acc, &b, Op::Sum).unwrap();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    std::hint::black_box(&acc);
+    let per_call_us = dt / reps as f64 * 1e6;
+    let mbps = (n * 4 * reps) as f64 / dt / 1e6;
+    (per_call_us, mbps)
+}
+
+fn main() {
+    let native = make_engine(EngineKind::Native, "artifacts");
+    let xla = make_engine(EngineKind::Xla, "artifacts");
+    let reps = 2000;
+    let mut t = Table::new(&[
+        "elements",
+        "native_us",
+        "native_MB/s",
+        "xla_us",
+        "xla_MB/s",
+        "xla/native",
+    ]);
+    for n in [64usize, 512, 2048, 8192, 65536] {
+        let (nu, nm) = bench_engine(&*native, n, reps);
+        let (xu, xm) = bench_engine(&*xla, n, reps.min(500));
+        t.row(vec![
+            n.to_string(),
+            format!("{nu:.2}"),
+            format!("{nm:.0}"),
+            format!("{xu:.2}"),
+            format!("{xm:.0}"),
+            format!("{:.1}x", xu / nu),
+        ]);
+    }
+    println!(
+        "combine hot path: i32 MPI_SUM, {} vs {} ({} reps)",
+        native.name(),
+        xla.name(),
+        reps
+    );
+    print!("{}", t.render());
+    println!("(xla column uses the AOT Pallas->HLO artifacts via PJRT; run `make artifacts`)");
+}

@@ -1,0 +1,227 @@
+//! The OSU-style benchmark harness and the figure generators.
+//!
+//! The paper's evaluation runs a modified OSU Micro-Benchmark: back-to-
+//! back MPI_Scan calls per message size, reporting average (Fig. 4) and
+//! minimum (Fig. 5) host-observed latency for five series — sw_seq,
+//! sw_rd, NF_seq, NF_rd, NF_binomial — plus the NIC-timestamped
+//! offload->release latency for the NF series (Figs. 6/7).  Each
+//! `figN_table` regenerates one figure as an aligned table / CSV.
+
+use std::rc::Rc;
+
+use crate::config::ExpConfig;
+use crate::metrics::{us, LatencyStats, RunMetrics, Table};
+use crate::packet::AlgoType;
+use crate::runtime::Compute;
+use crate::util::fmt_bytes;
+
+/// Message sizes of the sweep (bytes).  OSU's classic power-of-four
+/// ladder, up to multi-fragment territory.
+pub const OSU_SIZES: &[usize] = &[4, 16, 64, 256, 1024, 4096, 16384];
+
+/// One line in a figure: (prefix, algorithm).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct Series {
+    pub algo: AlgoType,
+    pub offloaded: bool,
+}
+
+impl Series {
+    pub fn name(&self) -> String {
+        let prefix = if self.offloaded { "NF" } else { "sw" };
+        let a = match self.algo {
+            AlgoType::Sequential => "seq",
+            AlgoType::RecursiveDoubling => "rd",
+            AlgoType::BinomialTree => "binomial",
+        };
+        format!("{prefix}_{a}")
+    }
+}
+
+/// Fig. 4/5 series set.  The paper omits software binomial ("it produced
+/// the worst performance"); we keep the measured set faithful and expose
+/// the omitted series through `all_series` for the ablation benches.
+pub fn paper_series() -> Vec<Series> {
+    vec![
+        Series { algo: AlgoType::Sequential, offloaded: false },
+        Series { algo: AlgoType::RecursiveDoubling, offloaded: false },
+        Series { algo: AlgoType::Sequential, offloaded: true },
+        Series { algo: AlgoType::RecursiveDoubling, offloaded: true },
+        Series { algo: AlgoType::BinomialTree, offloaded: true },
+    ]
+}
+
+pub fn nf_series() -> Vec<Series> {
+    paper_series().into_iter().filter(|s| s.offloaded).collect()
+}
+
+pub fn all_series() -> Vec<Series> {
+    let mut v = paper_series();
+    v.push(Series { algo: AlgoType::BinomialTree, offloaded: false });
+    v
+}
+
+/// Run one (series, msg_size) cell and return its metrics.
+pub fn run_cell(
+    base: &ExpConfig,
+    series: Series,
+    msg_bytes: usize,
+    compute: Rc<dyn Compute>,
+) -> RunMetrics {
+    let mut cfg = base.clone();
+    cfg.algo = series.algo;
+    cfg.offloaded = series.offloaded;
+    cfg.msg_bytes = msg_bytes;
+    cfg.topology = "auto".into();
+    let mut cluster = crate::cluster::Cluster::new(cfg, compute);
+    cluster.run().expect("benchmark run deadlocked")
+}
+
+/// A full sweep: per series, per size, (host latency, nic latency).
+pub struct Sweep {
+    pub series: Vec<Series>,
+    pub sizes: Vec<usize>,
+    /// `cells[series][size] = (host, nic)`.
+    pub cells: Vec<Vec<(LatencyStats, LatencyStats)>>,
+}
+
+pub fn run_sweep(
+    base: &ExpConfig,
+    series: &[Series],
+    sizes: &[usize],
+    compute: Rc<dyn Compute>,
+) -> Sweep {
+    let mut cells = Vec::with_capacity(series.len());
+    for s in series {
+        let mut row = Vec::with_capacity(sizes.len());
+        for &size in sizes {
+            let m = run_cell(base, *s, size, compute.clone());
+            row.push((m.host_overall(), m.nic_overall()));
+        }
+        cells.push(row);
+    }
+    Sweep { series: series.to_vec(), sizes: sizes.to_vec(), cells }
+}
+
+impl Sweep {
+    /// Render one figure: rows = message sizes, columns = series.
+    /// `metric` selects avg/min of host/NIC latency.
+    pub fn table(&self, metric: Metric) -> Table {
+        let mut headers = vec!["msg_size".to_string()];
+        headers.extend(self.series.iter().map(|s| format!("{}_us", s.name())));
+        let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(&hdr_refs);
+        for (i, &size) in self.sizes.iter().enumerate() {
+            let mut row = vec![fmt_bytes(size)];
+            for (j, _) in self.series.iter().enumerate() {
+                let (host, nic) = &self.cells[j][i];
+                let v = match metric {
+                    Metric::HostAvg => host.avg_us(),
+                    Metric::HostMin => host.min_us(),
+                    Metric::NicAvg => nic.avg_us(),
+                    Metric::NicMin => nic.min_us(),
+                };
+                row.push(us(v));
+            }
+            t.row(row);
+        }
+        t
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Metric {
+    HostAvg,
+    HostMin,
+    NicAvg,
+    NicMin,
+}
+
+/// Fig. 4: average end-to-end MPI_Scan latency, five series.
+pub fn fig4_table(base: &ExpConfig, compute: Rc<dyn Compute>, sizes: &[usize]) -> Table {
+    run_sweep(base, &paper_series(), sizes, compute).table(Metric::HostAvg)
+}
+
+/// Fig. 5: minimum end-to-end latency, five series.
+pub fn fig5_table(base: &ExpConfig, compute: Rc<dyn Compute>, sizes: &[usize]) -> Table {
+    run_sweep(base, &paper_series(), sizes, compute).table(Metric::HostMin)
+}
+
+/// Fig. 6: average on-NIC (offload->release) latency, NF series.
+pub fn fig6_table(base: &ExpConfig, compute: Rc<dyn Compute>, sizes: &[usize]) -> Table {
+    run_sweep(base, &nf_series(), sizes, compute).table(Metric::NicAvg)
+}
+
+/// Fig. 7: minimum on-NIC latency, NF series.
+pub fn fig7_table(base: &ExpConfig, compute: Rc<dyn Compute>, sizes: &[usize]) -> Table {
+    run_sweep(base, &nf_series(), sizes, compute).table(Metric::NicMin)
+}
+
+/// Default experiment base for figure regeneration (paper's setup:
+/// 8 nodes, MPI_INT + MPI_SUM, 10M iterations scaled down).
+pub fn figure_base(iters: usize) -> ExpConfig {
+    let mut cfg = ExpConfig::default();
+    cfg.p = 8;
+    cfg.iters = iters;
+    cfg.warmup = 32;
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineKind;
+    use crate::runtime::make_engine;
+
+    fn quick_base() -> ExpConfig {
+        let mut cfg = figure_base(40);
+        cfg.warmup = 8;
+        cfg
+    }
+
+    #[test]
+    fn fig4_shape_holds() {
+        let compute = make_engine(EngineKind::Native, "artifacts");
+        let sizes = [4usize, 1024];
+        let sweep = run_sweep(&quick_base(), &paper_series(), &sizes, compute);
+        // columns: 0 sw_seq, 1 sw_rd, 2 NF_seq, 3 NF_rd, 4 NF_binomial
+        for (i, _) in sizes.iter().enumerate() {
+            let avg = |j: usize| sweep.cells[j][i].0.avg_ns();
+            assert!(avg(0) < avg(1), "sw_seq lowest avg (paper Fig. 4)");
+            assert!(avg(3) < avg(1), "NF_rd beats sw_rd (offload win)");
+        }
+    }
+
+    #[test]
+    fn fig6_nic_latency_far_below_end_to_end() {
+        let compute = make_engine(EngineKind::Native, "artifacts");
+        let sizes = [64usize];
+        let sweep = run_sweep(&quick_base(), &nf_series(), &sizes, compute);
+        for (j, s) in sweep.series.iter().enumerate() {
+            let (host, nic) = &sweep.cells[j][0];
+            assert!(
+                nic.avg_ns() * 2.0 < host.avg_ns(),
+                "{}: on-NIC {} must sit far below end-to-end {}",
+                s.name(),
+                nic.avg_ns(),
+                host.avg_ns()
+            );
+        }
+    }
+
+    #[test]
+    fn tables_render() {
+        let compute = make_engine(EngineKind::Native, "artifacts");
+        let t = fig4_table(&quick_base(), compute, &[4]);
+        let s = t.render();
+        assert!(s.contains("sw_seq_us"));
+        assert!(s.contains("NF_binomial_us"));
+        assert!(s.contains("4B"));
+    }
+
+    #[test]
+    fn series_names_match_paper() {
+        let names: Vec<String> = paper_series().iter().map(|s| s.name()).collect();
+        assert_eq!(names, vec!["sw_seq", "sw_rd", "NF_seq", "NF_rd", "NF_binomial"]);
+    }
+}

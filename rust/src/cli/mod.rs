@@ -1,0 +1,337 @@
+//! Hand-rolled CLI (the offline build has no clap).
+//!
+//! `nfscan <command> [--key value ...]` — see `print_help` for the
+//! command set.  Flag parsing is strict: unknown keys are errors.
+
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::bench;
+use crate::config::{EngineKind, ExpConfig};
+use crate::runtime::{make_engine, Compute};
+
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse `--key value` pairs after the subcommand.  `--flag` followed
+    /// by another `--flag` or end-of-args is treated as boolean true.
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let command = argv.first().cloned().unwrap_or_else(|| "help".to_string());
+        let mut flags = BTreeMap::new();
+        let mut i = 1;
+        while i < argv.len() {
+            let key = argv[i]
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got {:?}", argv[i]))?
+                .to_string();
+            if key.is_empty() {
+                bail!("empty flag name");
+            }
+            let value = match argv.get(i + 1) {
+                Some(v) if !v.starts_with("--") => {
+                    i += 1;
+                    v.clone()
+                }
+                _ => "true".to_string(),
+            };
+            if flags.insert(key.clone(), value).is_some() {
+                bail!("duplicate flag --{key}");
+            }
+            i += 1;
+        }
+        Ok(Args { command, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key}")),
+            None => Ok(default),
+        }
+    }
+
+    /// Apply recognized flags onto an ExpConfig (same keys as the TOML
+    /// [run] section); unknown flags error.
+    pub fn apply_run_flags(&self, cfg: &mut ExpConfig, extra_ok: &[&str]) -> Result<()> {
+        for (k, v) in &self.flags {
+            if extra_ok.contains(&k.as_str()) {
+                continue;
+            }
+            cfg.set_run(k, v).map_err(|e| anyhow!("{e}"))?;
+        }
+        cfg.validate().map_err(|e| anyhow!("{e}"))?;
+        Ok(())
+    }
+}
+
+pub fn print_help() {
+    println!(
+        "nfscan — NetFPGA-offloaded MPI_Scan reproduction (Arap & Swany 2014)
+
+USAGE: nfscan <command> [--key value ...]
+
+COMMANDS
+  quickstart             one offloaded MPI_Scan on 8 simulated nodes
+  run                    one experiment cell; keys = [run] config keys
+                         (--algo rd --offloaded true --msg_bytes 64 ...)
+  fig4|fig5|fig6|fig7    regenerate a paper figure (--iters N, --engine xla,
+                         --sizes 4,64,1024)
+  sweep --config F.toml  run an experiment described by a TOML file
+  selftest               verify the XLA artifact path against native compute
+  perf                   wallclock breakdown of one PJRT combine call
+  help                   this text
+
+Collectives: --coll scan|exscan|allreduce|barrier (allreduce/barrier need
+--algo rd or binomial).  Concurrent communicators: --comms N.
+
+Figures print aligned tables; add --csv true for CSV output."
+    );
+}
+
+/// Build the configured compute engine (artifacts dir from --artifacts).
+pub fn engine_from(args: &Args, cfg: &ExpConfig) -> Rc<dyn Compute> {
+    let dir = args.get("artifacts").unwrap_or(crate::runtime::ARTIFACT_DIR);
+    make_engine(cfg.engine, dir)
+}
+
+pub fn main_with_args(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        "quickstart" => cmd_quickstart(&args),
+        "run" => cmd_run(&args),
+        "fig4" | "fig5" | "fig6" | "fig7" => cmd_figure(&args),
+        "sweep" => cmd_sweep(&args),
+        "selftest" => cmd_selftest(&args),
+        "perf" => cmd_perf(&args),
+        other => bail!("unknown command {other:?} (try `nfscan help`)"),
+    }
+}
+
+fn parse_sizes(args: &Args) -> Result<Vec<usize>> {
+    match args.get("sizes") {
+        Some(s) => s
+            .split(',')
+            .map(|v| v.trim().parse::<usize>().with_context(|| format!("--sizes item {v}")))
+            .collect(),
+        None => Ok(bench::OSU_SIZES.to_vec()),
+    }
+}
+
+fn cmd_quickstart(args: &Args) -> Result<()> {
+    let mut cfg = ExpConfig::default();
+    cfg.iters = 100;
+    cfg.warmup = 8;
+    cfg.verify = true;
+    args.apply_run_flags(&mut cfg, &["artifacts"])?;
+    let compute = engine_from(args, &cfg);
+    println!(
+        "quickstart: {} on {} nodes, {} x {} ({} engine)",
+        cfg.series_name(),
+        cfg.p,
+        cfg.msg_elems(),
+        cfg.dtype.name(),
+        compute.name()
+    );
+    let mut cluster = crate::cluster::Cluster::new(cfg, compute);
+    let m = cluster.run()?;
+    let all = m.host_overall();
+    println!(
+        "ok: {} scans verified | avg {:.2} us | min {:.2} us | on-NIC avg {:.2} us",
+        all.count(),
+        all.avg_us(),
+        all.min_us(),
+        m.nic_overall().avg_us()
+    );
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let mut cfg = ExpConfig::default();
+    args.apply_run_flags(&mut cfg, &["artifacts", "csv", "trace"])?;
+    let compute = engine_from(args, &cfg);
+    let mut cluster = crate::cluster::Cluster::new(cfg.clone(), compute);
+    let want_trace = args.get("trace") == Some("true");
+    if want_trace {
+        cluster.enable_trace(4096);
+    }
+    let m = cluster.run()?;
+    if want_trace {
+        println!("{}", cluster.trace.timeline(cfg.p, 100));
+    }
+    let all = m.host_overall();
+    println!("series      : {}", cfg.series_name());
+    println!("msg_bytes   : {}", cfg.msg_bytes);
+    println!("iterations  : {} x {} ranks", cfg.iters, cfg.p);
+    println!("avg latency : {:.2} us", all.avg_us());
+    println!("min latency : {:.2} us", all.min_us());
+    if cfg.offloaded {
+        let nic = m.nic_overall();
+        println!("on-NIC avg  : {:.2} us", nic.avg_us());
+        println!("on-NIC min  : {:.2} us", nic.min_us());
+    }
+    println!("frames      : {}", m.total_frames());
+    println!("multicasts  : {}", m.multicasts);
+    println!("sim time    : {:.3} ms", m.sim_ns as f64 / 1e6);
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let iters = args.get_usize("iters", 300)?;
+    let mut cfg = bench::figure_base(iters);
+    if let Some(e) = args.get("engine") {
+        cfg.engine =
+            EngineKind::from_name(e).ok_or_else(|| anyhow!("unknown engine {e}"))?;
+    }
+    let sizes = parse_sizes(args)?;
+    let compute = engine_from(args, &cfg);
+    let table = match args.command.as_str() {
+        "fig4" => bench::fig4_table(&cfg, compute, &sizes),
+        "fig5" => bench::fig5_table(&cfg, compute, &sizes),
+        "fig6" => bench::fig6_table(&cfg, compute, &sizes),
+        "fig7" => bench::fig7_table(&cfg, compute, &sizes),
+        _ => unreachable!(),
+    };
+    let title = match args.command.as_str() {
+        "fig4" => "Fig. 4 — average MPI_Scan latency (us), 8 nodes",
+        "fig5" => "Fig. 5 — minimum MPI_Scan latency (us), 8 nodes",
+        "fig6" => "Fig. 6 — average on-NIC latency after offload (us)",
+        _ => "Fig. 7 — minimum on-NIC latency after offload (us)",
+    };
+    println!("{title}");
+    if args.get("csv") == Some("true") {
+        print!("{}", table.to_csv());
+    } else {
+        print!("{}", table.render());
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let path = args.get("config").ok_or_else(|| anyhow!("sweep needs --config FILE"))?;
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let cfg = ExpConfig::from_toml(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+    let compute = engine_from(args, &cfg);
+    let mut cluster = crate::cluster::Cluster::new(cfg.clone(), compute);
+    let m = cluster.run()?;
+    let all = m.host_overall();
+    println!(
+        "{}: avg {:.2} us | min {:.2} us | {} samples",
+        cfg.series_name(),
+        all.avg_us(),
+        all.min_us(),
+        all.count()
+    );
+    Ok(())
+}
+
+fn cmd_selftest(args: &Args) -> Result<()> {
+    use crate::data::{Op, Payload};
+    let dir = args.get("artifacts").unwrap_or(crate::runtime::ARTIFACT_DIR);
+    let xla = crate::runtime::XlaEngine::load(dir)
+        .with_context(|| format!("loading artifacts from {dir} (run `make artifacts`)"))?;
+    let native = crate::runtime::NativeEngine::new();
+    println!("xla engine up: {} artifacts", xla.artifact_count());
+    let mut checked = 0;
+    for op in [Op::Sum, Op::Prod, Op::Max, Op::Min] {
+        for n in [1usize, 100, 2048, 5000] {
+            let a = Payload::from_i32(&(0..n as i32).map(|v| v % 13 - 6).collect::<Vec<_>>());
+            let b = Payload::from_i32(&(0..n as i32).map(|v| v % 7 - 3).collect::<Vec<_>>());
+            let x = xla.combine(&a, &b, op)?;
+            let y = native.combine(&a, &b, op)?;
+            anyhow::ensure!(x == y, "combine {op:?} n={n} mismatch");
+            checked += 1;
+        }
+    }
+    let x = Payload::from_f64(&(0..3000).map(|v| (v % 17) as f64 * 0.25).collect::<Vec<_>>());
+    for inclusive in [true, false] {
+        let a = xla.scan(&x, Op::Sum, inclusive)?;
+        let b = native.scan(&x, Op::Sum, inclusive)?;
+        let (av, bv) = (a.to_f64(), b.to_f64());
+        for (i, (p, q)) in av.iter().zip(bv.iter()).enumerate() {
+            anyhow::ensure!((p - q).abs() < 1e-9, "scan[{i}] {p} vs {q}");
+        }
+        checked += 1;
+    }
+    let own = Payload::from_i32(&(0..2500).map(|v| v % 19).collect::<Vec<_>>());
+    let peer = Payload::from_i32(&(0..2500).map(|v| v % 23 - 11).collect::<Vec<_>>());
+    let cum = native.combine(&peer, &own, Op::Sum)?;
+    anyhow::ensure!(xla.derive(&cum, &own)? == peer, "derive mismatch");
+    checked += 1;
+    println!("selftest ok: {checked} checks, xla == native everywhere");
+    Ok(())
+}
+
+fn cmd_perf(args: &Args) -> Result<()> {
+    let dir = args.get("artifacts").unwrap_or(crate::runtime::ARTIFACT_DIR);
+    let reps = args.get_usize("reps", 500)?;
+    let xla = crate::runtime::XlaEngine::load(dir)
+        .with_context(|| format!("loading artifacts from {dir}"))?;
+    let (lit, exec, read) = xla.probe_breakdown(reps)?;
+    let total = lit + exec + read;
+    println!("combine-call breakdown over one 2048-element block ({reps} reps):");
+    println!("  literal creation : {:>8.2} us ({:>4.1}%)", lit as f64 / 1e3, 100.0 * lit as f64 / total as f64);
+    println!("  pjrt execute     : {:>8.2} us ({:>4.1}%)", exec as f64 / 1e3, 100.0 * exec as f64 / total as f64);
+    println!("  readback+untuple : {:>8.2} us ({:>4.1}%)", read as f64 / 1e3, 100.0 * read as f64 / total as f64);
+    println!("  total            : {:>8.2} us", total as f64 / 1e3);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|v| v.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_flags() {
+        let a = Args::parse(&argv(&["run", "--algo", "rd", "--offloaded", "--iters", "5"]))
+            .unwrap();
+        assert_eq!(a.command, "run");
+        assert_eq!(a.get("algo"), Some("rd"));
+        assert_eq!(a.get("offloaded"), Some("true"), "bare flag is boolean");
+        assert_eq!(a.get_usize("iters", 0).unwrap(), 5);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Args::parse(&argv(&["run", "positional"])).is_err());
+        assert!(Args::parse(&argv(&["run", "--a", "1", "--a", "2"])).is_err());
+    }
+
+    #[test]
+    fn apply_run_flags_roundtrip() {
+        let a = Args::parse(&argv(&["run", "--algo", "binomial", "--msg_bytes", "256"])).unwrap();
+        let mut cfg = ExpConfig::default();
+        a.apply_run_flags(&mut cfg, &[]).unwrap();
+        assert_eq!(cfg.algo, crate::packet::AlgoType::BinomialTree);
+        assert_eq!(cfg.msg_bytes, 256);
+    }
+
+    #[test]
+    fn unknown_flag_is_error() {
+        let a = Args::parse(&argv(&["run", "--bogus", "1"])).unwrap();
+        let mut cfg = ExpConfig::default();
+        assert!(a.apply_run_flags(&mut cfg, &[]).is_err());
+    }
+
+    #[test]
+    fn quickstart_runs() {
+        let a = Args::parse(&argv(&["quickstart", "--iters", "10", "--warmup", "2"])).unwrap();
+        cmd_quickstart(&a).unwrap();
+    }
+}

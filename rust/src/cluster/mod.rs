@@ -1,0 +1,983 @@
+//! The simulated testbed: hosts + NetFPGA cards + cables, driven by the
+//! discrete-event loop.
+//!
+//! This is where the cost model gets charged: host-stack costs on the
+//! software path, crossing costs on the offload path, wire serialization
+//! per frame, NIC pipeline + line-rate combine cycles inside the cards.
+//! The benchmark driver loops back-to-back MPI_Scan calls per rank (the
+//! paper's modified OSU micro-benchmark), records host-observed latency,
+//! and — on the offload path — the NIC's own offload->release timestamps
+//! (Figs. 6/7).
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::config::ExpConfig;
+use crate::data::{Dtype, Op, Payload};
+use crate::fpga::engine::EngineOpts;
+use crate::fpga::{make_engine, EngineCtx, Nic, NicAction};
+use crate::metrics::RunMetrics;
+use crate::mpi::{make_sw, SwAction, SwCtx, SwScanAlgo};
+use crate::net::{
+    frame::fragment, Frame, FrameBody, PortNo, Rank, RouteTable, SwMsg, Topology,
+};
+use crate::offload::{build_request, node_role};
+use crate::packet::{CollPacket, MsgType};
+use crate::runtime::{engine::oracle_prefix, Compute};
+use crate::sim::{EventKind, EventQueue, HostMsg, OffloadRequest, SimTime, SplitMix64};
+
+/// Per-rank host process: the OSU-style benchmark driver plus (software
+/// path) the per-epoch algorithm instances and their unexpected-message
+/// reassembly.
+struct Host {
+    iter: u32,
+    total_iters: u32,
+    call_time: SimTime,
+    in_flight: bool,
+    sw: HashMap<u32, Box<dyn SwScanAlgo>>,
+    sw_reasm: crate::fpga::reassembly::Reassembler<(Rank, u16, u16, u32)>,
+    done: bool,
+}
+
+pub struct Cluster {
+    pub cfg: ExpConfig,
+    topo: Topology,
+    routes: RouteTable,
+    q: EventQueue,
+    hosts: Vec<Host>,
+    nics: Vec<Nic>,
+    compute: Rc<dyn Compute>,
+    pub metrics: RunMetrics,
+    /// Per-epoch contributions for the verify path.
+    contributions: HashMap<u32, Vec<Option<Payload>>>,
+    verified_counts: HashMap<u32, usize>,
+    master_rng: SplitMix64,
+    /// Application mode: caller-provided contributions for iteration 0
+    /// (see [`Cluster::scan_once`]) and the per-rank results collected.
+    injected: Option<Vec<Payload>>,
+    pub results: Vec<Option<Payload>>,
+    /// Milestone trace (disabled by default; `enable_trace` turns it on).
+    pub trace: crate::trace::Trace,
+}
+
+impl Cluster {
+    pub fn new(cfg: ExpConfig, compute: Rc<dyn Compute>) -> Cluster {
+        cfg.validate().expect("invalid experiment config");
+        let topo = cfg.resolve_topology();
+        let routes = RouteTable::build(&topo);
+        let p = cfg.p;
+        let total_iters = (cfg.warmup + cfg.iters) as u32;
+        let ports = topo.ports_used().max(1);
+        Cluster {
+            master_rng: SplitMix64::new(cfg.seed),
+            hosts: (0..p)
+                .map(|_| Host {
+                    iter: 0,
+                    total_iters,
+                    call_time: SimTime::ZERO,
+                    in_flight: false,
+                    sw: HashMap::new(),
+                    sw_reasm: crate::fpga::reassembly::Reassembler::new(64),
+                    done: false,
+                })
+                .collect(),
+            nics: (0..p).map(|r| Nic::new(r, ports)).collect(),
+            compute,
+            metrics: RunMetrics::new(p),
+            contributions: HashMap::new(),
+            verified_counts: HashMap::new(),
+            q: EventQueue::new(),
+            injected: None,
+            results: vec![None; p],
+            trace: crate::trace::Trace::disabled(),
+            topo,
+            routes,
+            cfg,
+        }
+    }
+
+    /// Record the last `cap` milestones (host calls, offloads, results,
+    /// completions) for `Trace::timeline` rendering.
+    pub fn enable_trace(&mut self, cap: usize) {
+        self.trace = crate::trace::Trace::new(cap, true);
+    }
+
+    /// Application entry point: run ONE collective over caller-provided
+    /// per-rank contributions and return each rank's result.  This is the
+    /// MPI_Scan/MPI_Exscan a real program would call — the OSU loop is
+    /// just this, repeated.
+    pub fn scan_once(
+        cfg: ExpConfig,
+        compute: Rc<dyn Compute>,
+        contributions: Vec<Payload>,
+    ) -> Result<(Vec<Payload>, RunMetrics)> {
+        let mut cfg = cfg;
+        cfg.iters = 1;
+        cfg.warmup = 0;
+        assert_eq!(contributions.len(), cfg.p, "one contribution per rank");
+        assert!(
+            contributions.iter().all(|c| c.dtype() == cfg.dtype),
+            "contribution dtype must match config"
+        );
+        cfg.msg_bytes = contributions[0].byte_len();
+        let mut cluster = Cluster::new(cfg, compute);
+        cluster.injected = Some(contributions);
+        let metrics = cluster.run()?;
+        let results = cluster
+            .results
+            .iter()
+            .cloned()
+            .map(|r| r.expect("every rank completed"))
+            .collect();
+        Ok((results, metrics))
+    }
+
+    /// Deterministic per-(rank, epoch) contribution, kept well-conditioned
+    /// for the configured op (so verification compares exact/stable
+    /// values).  MPI_Barrier carries no data.
+    fn gen_payload(cfg: &ExpConfig, rank: Rank, epoch: u32) -> Payload {
+        let mut rng =
+            SplitMix64::new(cfg.seed ^ ((rank as u64) << 40) ^ ((epoch as u64) << 8) ^ 0x9E37);
+        let n = if cfg.coll == crate::packet::CollType::Barrier { 0 } else { cfg.msg_elems() };
+        match cfg.dtype {
+            Dtype::I32 => {
+                let vals: Vec<i32> =
+                    (0..n).map(|_| rng.range_i64(-9, 9) as i32).collect();
+                Payload::from_i32(&vals)
+            }
+            Dtype::F32 => {
+                let vals: Vec<f32> = (0..n)
+                    .map(|_| {
+                        if cfg.op == Op::Prod {
+                            0.9 + 0.2 * rng.next_f64() as f32
+                        } else {
+                            (rng.next_f64() * 8.0 - 4.0) as f32
+                        }
+                    })
+                    .collect();
+                Payload::from_f32(&vals)
+            }
+            Dtype::F64 => {
+                let vals: Vec<f64> = (0..n)
+                    .map(|_| {
+                        if cfg.op == Op::Prod {
+                            0.9 + 0.2 * rng.next_f64()
+                        } else {
+                            rng.next_f64() * 8.0 - 4.0
+                        }
+                    })
+                    .collect();
+                Payload::from_f64(&vals)
+            }
+        }
+    }
+
+    /// Run to completion.  Errors if the system deadlocks (events drained
+    /// but some rank never finished) — the failure-injection tests rely
+    /// on this surfacing instead of hanging.
+    pub fn run(&mut self) -> Result<RunMetrics> {
+        // first calls: random skew per rank + optional forced late rank
+        for rank in 0..self.cfg.p {
+            let mut jitter = if self.cfg.cost.start_jitter_ns > 0 {
+                self.master_rng.next_below(self.cfg.cost.start_jitter_ns)
+            } else {
+                0
+            };
+            if self.cfg.late_rank == Some(rank) {
+                jitter += self.cfg.late_delay_ns;
+            }
+            self.q.push(SimTime::ns(jitter), EventKind::HostStart { rank });
+        }
+        while let Some((now, ev)) = self.q.pop() {
+            match ev {
+                EventKind::HostStart { rank } => self.on_host_start(now, rank),
+                EventKind::HostRecv { rank, msg } => self.on_host_recv(now, rank, msg),
+                EventKind::NicRecv { rank, port, frame } => {
+                    self.on_nic_recv(now, rank, port, frame)
+                }
+                EventKind::NicHostReq { rank, req } => self.on_nic_host_req(now, rank, req),
+            }
+        }
+        for (rank, h) in self.hosts.iter().enumerate() {
+            if !h.done {
+                bail!(
+                    "deadlock: rank {rank} finished {}/{} iterations (algo {}, {})",
+                    h.iter,
+                    h.total_iters,
+                    self.cfg.algo.name(),
+                    self.cfg.series_name()
+                );
+            }
+        }
+        self.metrics.sim_ns = self.q.now().as_ns();
+        for nic in &self.nics {
+            let r = nic.rank;
+            self.metrics.frames_tx[r] = nic.frames_tx;
+            self.metrics.bytes_tx[r] = nic.bytes_tx;
+            self.metrics.frames_forwarded[r] = nic.frames_forwarded;
+        }
+        Ok(self.metrics.clone())
+    }
+
+    // ------------------------------------------------------------ hosts
+
+    fn on_host_start(&mut self, now: SimTime, rank: Rank) {
+        let host = &mut self.hosts[rank];
+        if host.iter >= host.total_iters {
+            host.done = true;
+            return;
+        }
+        assert!(!host.in_flight, "rank {rank} started a call while one is in flight");
+        host.in_flight = true;
+        host.call_time = now;
+        let epoch = host.iter;
+        self.trace.record(now, rank, crate::trace::TraceKind::HostCall, format!("epoch {epoch}"));
+        let payload = match &self.injected {
+            Some(contribs) if epoch == 0 => contribs[rank].clone(),
+            _ => Self::gen_payload(&self.cfg, rank, epoch),
+        };
+        if self.cfg.verify {
+            self.contributions
+                .entry(epoch)
+                .or_insert_with(|| vec![None; self.cfg.p])[rank] = Some(payload.clone());
+        }
+        if self.cfg.offloaded {
+            // craft the HostRequest packet and push it down the
+            // (unoptimized) driver — the first of the two crossings the
+            // paper identifies as the offload overhead.
+            let mut req = build_request(&self.cfg, rank, (epoch & 0xFFFF) as u16, payload);
+            let (comm, _base, gsize) = self.cfg.comm_of(rank);
+            req.comm = comm;
+            req.comm_size = gsize as u16;
+            let at = now + self.cfg.cost.offload_ns(req.payload.byte_len());
+            self.q.push(at, EventKind::NicHostReq { rank, req });
+        } else {
+            // software machines run in communicator-local rank space
+            let (_comm, base, gsize) = self.cfg.comm_of(rank);
+            let algo = self.cfg.algo;
+            let coll = self.cfg.coll;
+            let machine = self.hosts[rank]
+                .sw
+                .entry(epoch)
+                .or_insert_with(|| make_sw(algo, rank - base, gsize, coll));
+            let mut ctx = SwCtx {
+                rank: rank - base,
+                p: gsize,
+                inclusive: coll.inclusive(),
+                op: self.cfg.op,
+                compute: &*self.compute,
+                cost: &self.cfg.cost,
+                elapsed_ns: 0,
+            };
+            let actions = machine.on_call(&mut ctx, &payload);
+            let elapsed = ctx.elapsed_ns;
+            self.process_sw_actions(now, rank, epoch, elapsed, actions);
+        }
+    }
+
+    fn on_host_recv(&mut self, now: SimTime, rank: Rank, msg: HostMsg) {
+        match msg {
+            HostMsg::Sw(m) => {
+                let epoch = m.epoch;
+                let (_comm, base, gsize) = self.cfg.comm_of(rank);
+                let algo = self.cfg.algo;
+                let coll = self.cfg.coll;
+                let machine = self.hosts[rank]
+                    .sw
+                    .entry(epoch)
+                    .or_insert_with(|| make_sw(algo, rank - base, gsize, coll));
+                let mut ctx = SwCtx {
+                    rank: rank - base,
+                    p: gsize,
+                    inclusive: coll.inclusive(),
+                    op: self.cfg.op,
+                    compute: &*self.compute,
+                    cost: &self.cfg.cost,
+                    elapsed_ns: 0,
+                };
+                let actions = machine.on_msg(&mut ctx, &m);
+                let elapsed = ctx.elapsed_ns;
+                self.process_sw_actions(now, rank, epoch, elapsed, actions);
+            }
+            HostMsg::NfResult { epoch, payload, nic_elapsed_ns } => {
+                let iter = self.hosts[rank].iter;
+                debug_assert_eq!(epoch, (iter & 0xFFFF) as u16, "result for wrong epoch");
+                if iter >= self.cfg.warmup as u32 {
+                    self.metrics.nic_elapsed[rank].record(nic_elapsed_ns);
+                }
+                self.complete_iteration(now, rank, iter, payload);
+            }
+        }
+    }
+
+    /// Walk a software activation's actions, charging host costs in
+    /// program order: reduction time first, then one stack hand-off per
+    /// send; completion timestamps where it falls in that order.
+    fn process_sw_actions(
+        &mut self,
+        now: SimTime,
+        rank: Rank,
+        epoch: u32,
+        compute_ns: u64,
+        actions: Vec<SwAction>,
+    ) {
+        // software machines emit communicator-local destinations
+        let (_comm, base, _gsize) = self.cfg.comm_of(rank);
+        let mut t = now + compute_ns;
+        for action in actions {
+            match action {
+                SwAction::Send { dst, kind, step, payload } => {
+                    t = t + self.cfg.cost.sw_send_ns(payload.byte_len());
+                    self.send_sw_message(t, rank, base + dst, kind, step, epoch, payload);
+                }
+                SwAction::Complete { result } => {
+                    self.complete_iteration(t, rank, epoch, result);
+                }
+            }
+        }
+        // retire the machine if it finished all its obligations
+        if self.hosts[rank].sw.get(&epoch).is_some_and(|m| m.done()) {
+            self.hosts[rank].sw.remove(&epoch);
+        }
+    }
+
+    fn complete_iteration(&mut self, at: SimTime, rank: Rank, epoch: u32, result: Payload) {
+        self.trace.record(at, rank, crate::trace::TraceKind::HostComplete, format!("epoch {epoch}"));
+        let host = &mut self.hosts[rank];
+        assert!(host.in_flight, "completion without a call at rank {rank}");
+        host.in_flight = false;
+        let latency = at - host.call_time;
+        if epoch >= self.cfg.warmup as u32 {
+            self.metrics.host_latency[rank].record(latency);
+        }
+        host.iter += 1;
+        let gap = self.cfg.cost.host_call_gap_ns;
+        self.q.push(at + gap, EventKind::HostStart { rank });
+
+        if self.injected.is_some() && epoch == 0 {
+            self.results[rank] = Some(result.clone());
+        }
+        if self.cfg.verify {
+            self.verify_result(rank, epoch, &result);
+        }
+    }
+
+    fn verify_result(&mut self, rank: Rank, epoch: u32, result: &Payload) {
+        let contribs = self
+            .contributions
+            .get(&epoch)
+            .unwrap_or_else(|| panic!("no contributions for epoch {epoch}"));
+        let (_comm, base, gsize) = self.cfg.comm_of(rank);
+        if matches!(self.cfg.coll, crate::packet::CollType::Allreduce | crate::packet::CollType::Barrier)
+        {
+            // every rank of the communicator receives the full reduction;
+            // completion implies all its ranks contributed
+            let present: Vec<Payload> = contribs
+                .iter()
+                .skip(base)
+                .take(gsize)
+                .map(|c| c.clone().expect("allreduce completion implies all contributions"))
+                .collect();
+            let want = oracle_prefix(&*self.compute, &present, self.cfg.op, true, gsize - 1)
+                .expect("oracle");
+            assert_payload_matches(result, &want, rank, epoch, &self.cfg.series_name());
+            let count = self.verified_counts.entry(epoch).or_insert(0);
+            *count += 1;
+            if *count == self.cfg.p {
+                self.contributions.remove(&epoch);
+                self.verified_counts.remove(&epoch);
+            }
+            return;
+        }
+        let inclusive = self.cfg.coll.inclusive();
+        // the scan runs within the rank's communicator: its result
+        // depends only on contributions base..=rank (exclusive: ..rank);
+        // later ranks may not even have called yet.
+        let local = rank - base;
+        let needed = if inclusive { local + 1 } else { local };
+        let present: Vec<Payload> = contribs
+            .iter()
+            .skip(base)
+            .take(needed.max(1))
+            .map(|c| c.clone().unwrap_or_else(|| panic!("missing contribution below {rank}")))
+            .collect();
+        let want = if inclusive {
+            oracle_prefix(&*self.compute, &present, self.cfg.op, true, local).expect("oracle")
+        } else if local == 0 {
+            Payload::identity(self.cfg.dtype, self.cfg.op, self.cfg.msg_elems())
+        } else {
+            // exclusive prefix of rank j == inclusive prefix of rank j-1
+            oracle_prefix(&*self.compute, &present, self.cfg.op, true, local - 1).expect("oracle")
+        };
+        assert_payload_matches(result, &want, rank, epoch, &self.cfg.series_name());
+        let count = self.verified_counts.entry(epoch).or_insert(0);
+        *count += 1;
+        if *count == self.cfg.p {
+            self.contributions.remove(&epoch);
+            self.verified_counts.remove(&epoch);
+        }
+    }
+
+    // ------------------------------------------------------------- wire
+
+    /// Fragment + frame + route one software message into the sender's
+    /// NIC, ready at `ready` (stack hand-off complete).
+    fn send_sw_message(
+        &mut self,
+        ready: SimTime,
+        src: Rank,
+        dst: Rank,
+        kind: crate::net::SwMsgKind,
+        step: u16,
+        epoch: u32,
+        payload: Payload,
+    ) {
+        let count = payload.len() as u32;
+        let algo = self.cfg.algo.wire_code();
+        // SwMsg.src is communicator-local (the algorithms reason in local
+        // rank space); the frame addresses stay global.
+        let (_comm, base, _g) = self.cfg.comm_of(src);
+        for (frag_idx, frag_total, _off, chunk) in fragment(&payload) {
+            let msg = SwMsg {
+                src: src - base,
+                algo,
+                kind,
+                epoch,
+                step,
+                count,
+                frag_idx,
+                frag_total,
+                payload: chunk,
+            };
+            let frame = Frame { src, dst, body: FrameBody::Sw(msg) };
+            self.transmit(src, dst, frame, ready);
+        }
+    }
+
+    /// Transmit one frame from `src`'s NIC towards `dst` (first hop).
+    fn transmit(&mut self, src: Rank, dst: Rank, frame: Frame, ready: SimTime) {
+        let port = self
+            .routes
+            .next_hop(src, dst)
+            .unwrap_or_else(|| panic!("no route {src} -> {dst} on {}", self.topo.name()));
+        self.transmit_on_port(src, port, frame, ready);
+    }
+
+    fn transmit_on_port(&mut self, src: Rank, port: PortNo, frame: Frame, ready: SimTime) {
+        let wire = frame.wire_bytes();
+        let tx_ns = self.cfg.cost.tx_ns(wire);
+        let nic = &mut self.nics[src];
+        let end = nic.tx_reserve(port, ready, tx_ns);
+        nic.note_bytes(wire);
+        let (neighbor, nport) = self
+            .topo
+            .neighbor(src, port)
+            .unwrap_or_else(|| panic!("dangling port {port} on rank {src}"));
+        let arrival = end + self.cfg.cost.link_prop_ns;
+        self.q.push(arrival, EventKind::NicRecv { rank: neighbor, port: nport, frame });
+    }
+
+    // -------------------------------------------------------------- nics
+
+    fn on_nic_recv(&mut self, now: SimTime, rank: Rank, _port: PortNo, frame: Frame) {
+        if frame.dst != rank {
+            // reference-router forwarding path: store-and-forward towards
+            // the destination (topology/algorithm mismatch penalty).
+            self.nics[rank].frames_forwarded += 1;
+            let ready = now + self.cfg.cost.nic_fwd_cycles * 8;
+            let dst = frame.dst;
+            self.transmit(rank, dst, frame, ready);
+            return;
+        }
+        match frame.body {
+            FrameBody::Sw(msg) => {
+                // plain NIC behaviour: climb the host stack; reassemble at
+                // the socket layer, charge the receive cost once per
+                // message.
+                let key = (msg.src, msg.kind as u16, msg.step, msg.epoch);
+                let total_bytes = msg.count as usize * msg.payload.dtype().size();
+                if let Some(whole) =
+                    self.hosts[rank].sw_reasm.add(key, msg.frag_idx, msg.frag_total, msg.payload.clone())
+                {
+                    let full = SwMsg { payload: whole, frag_idx: 0, frag_total: 1, ..msg };
+                    let at = now + self.cfg.cost.sw_recv_ns(total_bytes);
+                    self.q.push(at, EventKind::HostRecv { rank, msg: HostMsg::Sw(full) });
+                }
+            }
+            FrameBody::Coll(pkt) => {
+                let key = (pkt.rank as Rank, pkt.msg_type.wire_code(), pkt.step, pkt.epoch());
+                if let Some(whole) =
+                    self.nics[rank].reasm.add(key, pkt.frag_idx, pkt.frag_total, pkt.payload.clone())
+                {
+                    let full = CollPacket { payload: whole, frag_idx: 0, frag_total: 1, ..pkt };
+                    self.activate_engine(now, rank, full.epoch(), None, Some(full));
+                }
+            }
+        }
+    }
+
+    fn on_nic_host_req(&mut self, now: SimTime, rank: Rank, req: OffloadRequest) {
+        self.trace.record(now, rank, crate::trace::TraceKind::Offload, "request at NIC");
+        self.nics[rank].regs.stamp_offload(req.epoch, now);
+        self.activate_engine(now, rank, req.epoch, Some(req), None);
+    }
+
+    /// Run one engine activation and realize its actions on the wire /
+    /// host boundary.  Engines run in communicator-local rank space; this
+    /// is the (comm_id -> collective state) table of the paper's SSVI.
+    fn activate_engine(
+        &mut self,
+        now: SimTime,
+        rank: Rank,
+        epoch: u16,
+        req: Option<OffloadRequest>,
+        pkt: Option<CollPacket>,
+    ) {
+        let cfg = &self.cfg;
+        let opts = EngineOpts { multicast_opt: cfg.multicast_opt, ack_enabled: cfg.ack_enabled };
+        let (comm, base, gsize) = cfg.comm_of(rank);
+        let comm_key = CollPacket::make_comm_id(comm, epoch);
+        let (algo, coll, op) = (cfg.algo, cfg.coll, cfg.op);
+        let local = rank - base;
+        let nic = &mut self.nics[rank];
+        let engine = nic
+            .engines
+            .entry(comm_key)
+            .or_insert_with(|| make_engine(algo, local, gsize, coll, opts));
+        let mut ctx = EngineCtx {
+            rank: local,
+            p: gsize,
+            inclusive: coll.inclusive(),
+            op,
+            compute: &*self.compute,
+            cost: &self.cfg.cost,
+            cycles: 0,
+        };
+        // the engine sees communicator-local requests
+        let req = req.map(|mut r| {
+            r.rank = local;
+            r
+        });
+        let actions = match (&req, &pkt) {
+            (Some(r), None) => engine.on_host_request(&mut ctx, r),
+            (None, Some(k)) => engine.on_packet(&mut ctx, k),
+            _ => unreachable!("exactly one of req/pkt"),
+        };
+        // packet-generation cost: one per unicast/deliver, ONE per
+        // multicast regardless of fan-out (the SSIII-C saving).
+        let generations = actions.len() as u64;
+        self.metrics.multicasts +=
+            actions.iter().filter(|a| matches!(a, NicAction::Multicast { .. })).count() as u64;
+        let cycles = self.cfg.cost.nic_pipeline_cycles
+            + ctx.cycles
+            + generations * self.cfg.cost.nic_pkt_gen_cycles;
+        let ready = now + cycles * 8;
+        self.nics[rank].check_engine_pressure();
+        self.process_nic_actions(ready, rank, epoch, actions);
+        self.nics[rank].gc_engines();
+    }
+
+    fn process_nic_actions(
+        &mut self,
+        ready: SimTime,
+        rank: Rank,
+        epoch: u16,
+        actions: Vec<NicAction>,
+    ) {
+        // engines emit communicator-local destinations
+        let (_comm, base, _g) = self.cfg.comm_of(rank);
+        for action in actions {
+            match action {
+                NicAction::Send { dst, mt, step, tag, payload } => {
+                    self.send_coll(ready, rank, base + dst, epoch, mt, step, tag, payload);
+                }
+                NicAction::Multicast { dsts, mt, step, tag, payload } => {
+                    // the multicast engine drives all target ports from one
+                    // buffer: every copy becomes ready at the same instant,
+                    // shared ports serialize via the port FIFO.
+                    for dst in dsts {
+                        self.send_coll(
+                            ready,
+                            rank,
+                            base + dst,
+                            epoch,
+                            mt,
+                            step,
+                            tag,
+                            payload.clone(),
+                        );
+                    }
+                }
+                NicAction::Deliver { payload } => {
+                    // release timestamp + the second host crossing
+                    self.trace.record(ready, rank, crate::trace::TraceKind::NicResult, "release");
+                    let elapsed = self.nics[rank].regs.stamp_release(epoch, ready);
+                    let at = ready + self.cfg.cost.result_ns(payload.byte_len());
+                    self.q.push(
+                        at,
+                        EventKind::HostRecv {
+                            rank,
+                            msg: HostMsg::NfResult {
+                                epoch,
+                                payload,
+                                nic_elapsed_ns: elapsed,
+                            },
+                        },
+                    );
+                }
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn send_coll(
+        &mut self,
+        ready: SimTime,
+        src: Rank,
+        dst: Rank,
+        epoch: u16,
+        mt: MsgType,
+        step: u16,
+        tag: u32,
+        payload: Payload,
+    ) {
+        let (coll, algo, op) = (self.cfg.coll, self.cfg.algo, self.cfg.op);
+        let (comm, base, gsize) = self.cfg.comm_of(src);
+        let count = payload.len() as u32;
+        for (frag_idx, frag_total, _off, chunk) in fragment(&payload) {
+            let pkt = CollPacket {
+                comm_id: CollPacket::make_comm_id(comm, epoch),
+                comm_size: gsize as u16,
+                coll_type: coll,
+                algo_type: algo,
+                node_type: node_role(algo, src - base, gsize),
+                msg_type: mt,
+                step,
+                rank: (src - base) as u16,
+                root: 0,
+                operation: op,
+                data_type: payload.dtype(),
+                count,
+                frag_idx,
+                frag_total,
+                tag,
+                payload: chunk,
+            };
+            let frame = Frame { src, dst, body: FrameBody::Coll(pkt) };
+            self.transmit(src, dst, frame, ready);
+        }
+    }
+}
+
+/// Oracle comparison.  Integers must match exactly; floats allow the
+/// association-order rounding every MPI implementation allows (the tree
+/// algorithms fold in a different order than the oracle's left fold).
+fn assert_payload_matches(got: &Payload, want: &Payload, rank: Rank, epoch: u32, series: &str) {
+    assert_eq!(got.dtype(), want.dtype(), "rank {rank} epoch {epoch} dtype ({series})");
+    assert_eq!(got.len(), want.len(), "rank {rank} epoch {epoch} length ({series})");
+    match got.dtype() {
+        Dtype::I32 => assert_eq!(
+            got.to_i32(),
+            want.to_i32(),
+            "rank {rank} epoch {epoch}: scan result does not match oracle ({series})"
+        ),
+        Dtype::F32 => {
+            for (i, (g, w)) in got.to_f32().iter().zip(want.to_f32().iter()).enumerate() {
+                let tol = 1e-4f32.max(w.abs() * 1e-4);
+                assert!(
+                    (g - w).abs() <= tol,
+                    "rank {rank} epoch {epoch} elem {i}: {g} vs oracle {w} ({series})"
+                );
+            }
+        }
+        Dtype::F64 => {
+            for (i, (g, w)) in got.to_f64().iter().zip(want.to_f64().iter()).enumerate() {
+                let tol = 1e-10f64.max(w.abs() * 1e-10);
+                assert!(
+                    (g - w).abs() <= tol,
+                    "rank {rank} epoch {epoch} elem {i}: {g} vs oracle {w} ({series})"
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EngineKind;
+    use crate::packet::{AlgoType, CollType};
+    use crate::runtime::make_engine as make_compute;
+
+    fn run_cfg(mut cfg: ExpConfig) -> RunMetrics {
+        cfg.verify = true;
+        cfg.iters = 20;
+        cfg.warmup = 4;
+        let compute = make_compute(EngineKind::Native, "artifacts");
+        let mut cluster = Cluster::new(cfg, compute);
+        cluster.run().expect("simulation must not deadlock")
+    }
+
+    fn base(algo: AlgoType, offloaded: bool) -> ExpConfig {
+        let mut cfg = ExpConfig::default();
+        cfg.algo = algo;
+        cfg.offloaded = offloaded;
+        cfg.msg_bytes = 64;
+        cfg
+    }
+
+    #[test]
+    fn all_algorithms_verify_both_paths() {
+        for algo in AlgoType::ALL {
+            for offloaded in [false, true] {
+                let m = run_cfg(base(algo, offloaded));
+                let all = m.host_overall();
+                assert_eq!(all.count(), 8 * 20, "{algo:?} offloaded={offloaded}");
+                assert!(all.min_ns() > 0);
+            }
+        }
+    }
+
+    #[test]
+    fn exscan_verifies() {
+        for algo in AlgoType::ALL {
+            let mut cfg = base(algo, true);
+            cfg.coll = CollType::Exscan;
+            run_cfg(cfg);
+        }
+    }
+
+    #[test]
+    fn nic_elapsed_only_on_offload_path() {
+        let m_nf = run_cfg(base(AlgoType::RecursiveDoubling, true));
+        assert_eq!(m_nf.nic_overall().count(), 8 * 20);
+        let m_sw = run_cfg(base(AlgoType::RecursiveDoubling, false));
+        assert_eq!(m_sw.nic_overall().count(), 0);
+    }
+
+    #[test]
+    fn offload_overhead_visible_at_small_sizes() {
+        // the 2-crossing overhead must make NF_rd latency exceed the pure
+        // on-NIC time by at least the two fixed crossing costs.
+        let m = run_cfg(base(AlgoType::RecursiveDoubling, true));
+        let host = m.host_overall().avg_ns();
+        let nic = m.nic_overall().avg_ns();
+        let cost = crate::config::CostModel::default();
+        assert!(
+            host >= nic + (cost.offload_crossing_ns + cost.result_crossing_ns) as f64,
+            "host {host} vs nic {nic}"
+        );
+    }
+
+    #[test]
+    fn offloaded_rd_beats_software_rd() {
+        // the paper's headline: synchronizing algorithms win offloaded
+        let nf = run_cfg(base(AlgoType::RecursiveDoubling, true)).host_overall().avg_ns();
+        let sw = run_cfg(base(AlgoType::RecursiveDoubling, false)).host_overall().avg_ns();
+        assert!(nf < sw, "NF_rd {nf} must beat sw_rd {sw}");
+    }
+
+    #[test]
+    fn software_sequential_has_lowest_average() {
+        // paper Fig. 4: sw sequential's pipelining yields the lowest avg
+        let sw_seq = run_cfg(base(AlgoType::Sequential, false)).host_overall().avg_ns();
+        let sw_rd = run_cfg(base(AlgoType::RecursiveDoubling, false)).host_overall().avg_ns();
+        let nf_seq = run_cfg(base(AlgoType::Sequential, true)).host_overall().avg_ns();
+        assert!(sw_seq < sw_rd, "sw_seq {sw_seq} vs sw_rd {sw_rd}");
+        assert!(sw_seq < nf_seq, "sw_seq {sw_seq} vs NF_seq {nf_seq}");
+    }
+
+    #[test]
+    fn determinism_same_seed_same_metrics() {
+        let a = run_cfg(base(AlgoType::BinomialTree, true));
+        let b = run_cfg(base(AlgoType::BinomialTree, true));
+        assert_eq!(a.host_overall().avg_ns(), b.host_overall().avg_ns());
+        assert_eq!(a.sim_ns, b.sim_ns);
+        assert_eq!(a.total_frames(), b.total_frames());
+    }
+
+    #[test]
+    fn different_seed_different_jitter() {
+        let a = run_cfg(base(AlgoType::RecursiveDoubling, true));
+        let mut cfg = base(AlgoType::RecursiveDoubling, true);
+        cfg.seed = 12345;
+        let b = run_cfg(cfg);
+        // latencies shift with arrival jitter (min may coincide)
+        assert_ne!(a.sim_ns, b.sim_ns);
+    }
+
+    #[test]
+    fn large_messages_fragment_and_verify() {
+        for algo in AlgoType::ALL {
+            for offloaded in [false, true] {
+                let mut cfg = base(algo, offloaded);
+                cfg.msg_bytes = 8192; // ~6 fragments per message
+                cfg.iters = 5;
+                cfg.warmup = 1;
+                let mut c = Cluster::new(
+                    {
+                        cfg.verify = true;
+                        cfg
+                    },
+                    make_compute(EngineKind::Native, "artifacts"),
+                );
+                c.run().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn f64_and_max_op_verify() {
+        let mut cfg = base(AlgoType::BinomialTree, true);
+        cfg.dtype = crate::data::Dtype::F64;
+        cfg.op = Op::Max;
+        cfg.msg_bytes = 128;
+        run_cfg(cfg);
+    }
+
+    #[test]
+    fn late_rank_scenario_verifies_with_multicast() {
+        let mut cfg = base(AlgoType::RecursiveDoubling, true);
+        cfg.p = 4;
+        cfg.late_rank = Some(1);
+        cfg.late_delay_ns = 200_000;
+        cfg.cost.start_jitter_ns = 0;
+        run_cfg(cfg);
+    }
+
+    #[test]
+    fn multicast_opt_taken_and_faster_for_late_rank() {
+        let mk = |opt: bool| {
+            let mut cfg = base(AlgoType::RecursiveDoubling, true);
+            cfg.p = 4;
+            cfg.late_rank = Some(1);
+            cfg.late_delay_ns = 500_000;
+            cfg.cost.start_jitter_ns = 0;
+            cfg.multicast_opt = opt;
+            run_cfg(cfg)
+        };
+        let with = mk(true);
+        let without = mk(false);
+        assert!(with.multicasts > 0, "late rank must take the multicast path");
+        assert_eq!(without.multicasts, 0);
+        // one packet generation saved per multicast: the same frames hit
+        // the wire, earlier.
+        assert_eq!(with.total_frames(), without.total_frames());
+        assert!(
+            with.host_overall().avg_ns() < without.host_overall().avg_ns(),
+            "multicast saves a packet generation: {} vs {}",
+            with.host_overall().avg_ns(),
+            without.host_overall().avg_ns()
+        );
+    }
+
+    #[test]
+    fn sequential_chain_no_forwarding() {
+        let m = run_cfg(base(AlgoType::Sequential, true));
+        assert_eq!(m.frames_forwarded.iter().sum::<u64>(), 0, "chain is 1-hop for seq");
+    }
+
+    #[test]
+    fn topology_mismatch_forces_forwarding() {
+        // sequential on a hypercube: ranks 3<->4 are 3 hops apart
+        let mut cfg = base(AlgoType::Sequential, true);
+        cfg.topology = "hypercube".into();
+        let m = run_cfg(cfg);
+        assert!(m.frames_forwarded.iter().sum::<u64>() > 0);
+    }
+
+    #[test]
+    fn concurrent_communicators_verify_independently() {
+        // the paper SSVI comm_id feature: two disjoint 4-rank
+        // communicators scanning simultaneously on the shared network
+        for algo in AlgoType::ALL {
+            for offloaded in [false, true] {
+                let mut cfg = base(algo, offloaded);
+                cfg.p = 8;
+                cfg.comms = 2;
+                let m = run_cfg(cfg);
+                assert_eq!(m.host_overall().count(), 8 * 20, "{algo:?} nf={offloaded}");
+            }
+        }
+    }
+
+    #[test]
+    fn four_communicators_of_two() {
+        let mut cfg = base(AlgoType::RecursiveDoubling, true);
+        cfg.comms = 4;
+        run_cfg(cfg);
+    }
+
+    #[test]
+    fn allreduce_and_barrier_end_to_end() {
+        for algo in [AlgoType::RecursiveDoubling, AlgoType::BinomialTree] {
+            for offloaded in [false, true] {
+                let mut cfg = base(algo, offloaded);
+                cfg.coll = CollType::Allreduce;
+                run_cfg(cfg);
+                let mut cfg = base(algo, offloaded);
+                cfg.coll = CollType::Barrier;
+                run_cfg(cfg);
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_multicasts_down() {
+        // SSIII-D: the tree allreduce down-phase uses the multicast
+        // engine (one generation, fan-out to all children) — unlike scan
+        let mut cfg = base(AlgoType::BinomialTree, true);
+        cfg.coll = CollType::Allreduce;
+        let m = run_cfg(cfg);
+        assert!(m.multicasts > 0, "tree allreduce must multicast its down phase");
+        let mut cfg = base(AlgoType::BinomialTree, true);
+        cfg.coll = CollType::Scan;
+        let m = run_cfg(cfg);
+        assert_eq!(m.multicasts, 0, "scan down phase cannot multicast (unique prefixes)");
+    }
+
+    #[test]
+    fn offloaded_barrier_beats_software_barrier() {
+        // the headline of the authors' companion work [6]
+        let mk = |offloaded: bool| {
+            let mut cfg = base(AlgoType::RecursiveDoubling, offloaded);
+            cfg.coll = CollType::Barrier;
+            run_cfg(cfg).host_overall().avg_ns()
+        };
+        let nf = mk(true);
+        let sw = mk(false);
+        assert!(nf < sw, "NF_barrier {nf} must beat sw_barrier {sw}");
+    }
+
+    #[test]
+    fn trace_records_call_before_completion() {
+        let mut cfg = base(AlgoType::RecursiveDoubling, true);
+        cfg.iters = 3;
+        cfg.warmup = 0;
+        cfg.verify = true;
+        let compute = make_compute(EngineKind::Native, "artifacts");
+        let mut cluster = Cluster::new(cfg, compute);
+        cluster.enable_trace(256);
+        cluster.run().unwrap();
+        use crate::trace::TraceKind;
+        for r in 0..8 {
+            let call = cluster.trace.first_of(r, TraceKind::HostCall).expect("call traced");
+            let offl = cluster.trace.first_of(r, TraceKind::Offload).expect("offload traced");
+            let done = cluster.trace.first_of(r, TraceKind::HostComplete).expect("done traced");
+            assert!(call < offl && offl < done, "rank {r} milestone order");
+        }
+        let timeline = cluster.trace.timeline(8, 60);
+        assert!(timeline.contains("r0 |"));
+    }
+
+    #[test]
+    fn comm_validation() {
+        let mut cfg = base(AlgoType::RecursiveDoubling, true);
+        cfg.comms = 3;
+        assert!(cfg.validate().is_err(), "3 does not divide 8");
+        cfg.comms = 8;
+        assert!(cfg.validate().is_err(), "groups of 1 are not a collective");
+    }
+}

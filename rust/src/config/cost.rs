@@ -1,0 +1,190 @@
+//! The calibrated cost model: every place the simulation charges time.
+//!
+//! Defaults are 2014-era numbers for the paper's testbed (i5-2400 hosts,
+//! 1 GbE, first-gen NetFPGA with an *unoptimized* host driver — the paper
+//! explicitly notes it lacks zero-copy, interrupt coalescing, pre-allocated
+//! buffers and memory registration).  The relative shapes of Figs. 4-7
+//! depend on the ratios, not the absolute values; DESIGN.md documents the
+//! calibration reasoning.
+
+/// All tunable time constants.  Loaded from the `[cost]` section of an
+/// experiment TOML (see `config::toml`), every field overridable.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CostModel {
+    // ---- wire ----
+    /// Link speed in bits/s (1 GbE).
+    pub link_bandwidth_bps: u64,
+    /// Propagation + PHY latency per hop, ns.
+    pub link_prop_ns: u64,
+
+    // ---- host software stack (the Open MPI / TCP baseline path) ----
+    /// Fixed per-message send-side cost: syscall, TCP/IP stack, MPI
+    /// matching.
+    pub sw_send_overhead_ns: u64,
+    /// Fixed per-message receive-side cost (interrupt, stack climb, MPI
+    /// matching).
+    pub sw_recv_overhead_ns: u64,
+    /// Per-byte copy cost through the stack (user->kernel->wire and back).
+    pub sw_copy_ns_per_byte: f64,
+    /// Fixed cost of one reduction call on the host CPU.
+    pub host_combine_base_ns: u64,
+    /// Per-byte cost of the reduction on the host CPU.
+    pub host_combine_ns_per_byte: f64,
+
+    // ---- host <-> NetFPGA crossing (the unoptimized driver) ----
+    /// Fixed cost to push an offload request down to the card.
+    pub offload_crossing_ns: u64,
+    /// Fixed cost for the result packet to climb back to user space.
+    pub result_crossing_ns: u64,
+    /// Per-byte DMA cost of either crossing.
+    pub crossing_ns_per_byte: f64,
+
+    // ---- NetFPGA datapath (125 MHz = 8 ns/cycle) ----
+    /// Ingress-to-egress latency of the user-data-path pipeline, cycles.
+    pub nic_pipeline_cycles: u64,
+    /// Cycles to process 8 payload bytes in the combine datapath (64-bit
+    /// adder at line rate = 1).
+    pub nic_combine_cycles_per_8b: u64,
+    /// Store-and-forward decision latency for transit (non-collective)
+    /// frames, cycles.
+    pub nic_fwd_cycles: u64,
+    /// Cycles to generate one outgoing packet (header assembly, buffer
+    /// hand-off).  A multicast generates ONE packet for many ports —
+    /// "it does not need to generate separate messages for both ranks"
+    /// (SSIII-C) — which is exactly the saving this constant surfaces.
+    pub nic_pkt_gen_cycles: u64,
+
+    // ---- benchmark driver ----
+    /// Host compute gap between back-to-back MPI_Scan calls.
+    pub host_call_gap_ns: u64,
+    /// Max random skew of each rank's first call (uniform [0, jitter]).
+    pub start_jitter_ns: u64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            link_bandwidth_bps: 1_000_000_000,
+            link_prop_ns: 500,
+            sw_send_overhead_ns: 20_000,
+            sw_recv_overhead_ns: 20_000,
+            sw_copy_ns_per_byte: 2.0,
+            host_combine_base_ns: 500,
+            host_combine_ns_per_byte: 0.5,
+            offload_crossing_ns: 28_000,
+            result_crossing_ns: 28_000,
+            crossing_ns_per_byte: 4.0,
+            nic_pipeline_cycles: 24,
+            nic_combine_cycles_per_8b: 1,
+            nic_fwd_cycles: 16,
+            nic_pkt_gen_cycles: 12,
+            host_call_gap_ns: 2_000,
+            start_jitter_ns: 5_000,
+        }
+    }
+}
+
+impl CostModel {
+    /// Wire serialization time for `bytes` on-wire bytes (including frame
+    /// overhead), ns.  1 GbE = 8 ns/byte.
+    pub fn tx_ns(&self, wire_bytes: usize) -> u64 {
+        let total = (wire_bytes + crate::net::WIRE_OVERHEAD_BYTES) as u64;
+        total * 8_000_000_000 / self.link_bandwidth_bps
+    }
+
+    /// Host-side cost to hand one message of `bytes` to the stack.
+    pub fn sw_send_ns(&self, bytes: usize) -> u64 {
+        self.sw_send_overhead_ns + (bytes as f64 * self.sw_copy_ns_per_byte) as u64
+    }
+
+    /// Host-side cost to receive one message of `bytes` from the stack.
+    pub fn sw_recv_ns(&self, bytes: usize) -> u64 {
+        self.sw_recv_overhead_ns + (bytes as f64 * self.sw_copy_ns_per_byte) as u64
+    }
+
+    /// Host CPU reduction cost.
+    pub fn host_combine_ns(&self, bytes: usize) -> u64 {
+        self.host_combine_base_ns + (bytes as f64 * self.host_combine_ns_per_byte) as u64
+    }
+
+    /// Host -> NIC offload crossing for a request of `bytes` payload.
+    pub fn offload_ns(&self, bytes: usize) -> u64 {
+        self.offload_crossing_ns + (bytes as f64 * self.crossing_ns_per_byte) as u64
+    }
+
+    /// NIC -> host result crossing for `bytes` payload.
+    pub fn result_ns(&self, bytes: usize) -> u64 {
+        self.result_crossing_ns + (bytes as f64 * self.crossing_ns_per_byte) as u64
+    }
+
+    /// NetFPGA combine cycles for `bytes` of payload (64-bit datapath).
+    pub fn nic_combine_cycles(&self, bytes: usize) -> u64 {
+        (bytes as u64).div_ceil(8) * self.nic_combine_cycles_per_8b
+    }
+
+    /// Apply one `key = value` override from the `[cost]` TOML section.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
+        let as_u64 =
+            || value.parse::<u64>().map_err(|e| format!("cost.{key}: bad integer: {e}"));
+        let as_f64 =
+            || value.parse::<f64>().map_err(|e| format!("cost.{key}: bad float: {e}"));
+        match key {
+            "link_bandwidth_bps" => self.link_bandwidth_bps = as_u64()?,
+            "link_prop_ns" => self.link_prop_ns = as_u64()?,
+            "sw_send_overhead_ns" => self.sw_send_overhead_ns = as_u64()?,
+            "sw_recv_overhead_ns" => self.sw_recv_overhead_ns = as_u64()?,
+            "sw_copy_ns_per_byte" => self.sw_copy_ns_per_byte = as_f64()?,
+            "host_combine_base_ns" => self.host_combine_base_ns = as_u64()?,
+            "host_combine_ns_per_byte" => self.host_combine_ns_per_byte = as_f64()?,
+            "offload_crossing_ns" => self.offload_crossing_ns = as_u64()?,
+            "result_crossing_ns" => self.result_crossing_ns = as_u64()?,
+            "crossing_ns_per_byte" => self.crossing_ns_per_byte = as_f64()?,
+            "nic_pipeline_cycles" => self.nic_pipeline_cycles = as_u64()?,
+            "nic_combine_cycles_per_8b" => self.nic_combine_cycles_per_8b = as_u64()?,
+            "nic_fwd_cycles" => self.nic_fwd_cycles = as_u64()?,
+            "nic_pkt_gen_cycles" => self.nic_pkt_gen_cycles = as_u64()?,
+            "host_call_gap_ns" => self.host_call_gap_ns = as_u64()?,
+            "start_jitter_ns" => self.start_jitter_ns = as_u64()?,
+            _ => return Err(format!("unknown cost key: {key}")),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gbe_is_8ns_per_byte() {
+        let c = CostModel::default();
+        // 100 bytes + 24 overhead = 124 bytes = 992 ns
+        assert_eq!(c.tx_ns(100), 992);
+    }
+
+    #[test]
+    fn combine_cycles_line_rate() {
+        let c = CostModel::default();
+        assert_eq!(c.nic_combine_cycles(8), 1);
+        assert_eq!(c.nic_combine_cycles(9), 2);
+        assert_eq!(c.nic_combine_cycles(1432), 179);
+    }
+
+    #[test]
+    fn crossing_dominated_by_fixed_cost_at_small_sizes() {
+        let c = CostModel::default();
+        assert!(c.offload_ns(4) < c.offload_ns(4096));
+        assert!(c.offload_ns(4) > 28_000);
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = CostModel::default();
+        c.set("link_prop_ns", "1000").unwrap();
+        assert_eq!(c.link_prop_ns, 1000);
+        c.set("sw_copy_ns_per_byte", "3.5").unwrap();
+        assert_eq!(c.sw_copy_ns_per_byte, 3.5);
+        assert!(c.set("bogus", "1").is_err());
+        assert!(c.set("link_prop_ns", "abc").is_err());
+    }
+}

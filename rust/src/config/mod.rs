@@ -1,0 +1,333 @@
+//! Experiment configuration: the cost model plus everything a single
+//! simulated run needs (cluster size, algorithm, path, workload).
+
+pub mod cost;
+pub mod toml;
+
+pub use cost::CostModel;
+pub use toml::TomlDoc;
+
+use crate::data::{Dtype, Op};
+use crate::packet::{AlgoType, CollType};
+
+/// Which compute engine executes payload reductions.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum EngineKind {
+    /// Pure-Rust reference path (always available; used by unit tests and
+    /// as the ablation baseline).
+    Native,
+    /// Compiled HLO artifacts via PJRT (the production hot path); falls
+    /// back per-op to native when an artifact is missing.
+    Xla,
+}
+
+impl EngineKind {
+    pub fn from_name(s: &str) -> Option<EngineKind> {
+        match s {
+            "native" => Some(EngineKind::Native),
+            "xla" => Some(EngineKind::Xla),
+            _ => None,
+        }
+    }
+}
+
+/// Full description of one simulated experiment.
+#[derive(Clone, Debug)]
+pub struct ExpConfig {
+    /// Number of ranks (the paper's cluster: 8).
+    pub p: usize,
+    /// Scan algorithm under test.
+    pub algo: AlgoType,
+    /// true = NF_ offloaded path, false = software MPI baseline.
+    pub offloaded: bool,
+    /// Topology name: chain/ring/hypercube, or "auto" to pick the wiring
+    /// the algorithm wants (the paper's manually-configured testbed).
+    pub topology: String,
+    /// Message size in bytes per rank.
+    pub msg_bytes: usize,
+    /// Measured back-to-back iterations (the paper runs 10M; simulated
+    /// runs converge far earlier).
+    pub iters: usize,
+    /// Unmeasured warmup iterations (fills the sequential pipeline).
+    pub warmup: usize,
+    pub coll: CollType,
+    pub op: Op,
+    pub dtype: Dtype,
+    pub seed: u64,
+    pub engine: EngineKind,
+    /// Verify every rank's result against the oracle (tests; off in
+    /// perf benches).
+    pub verify: bool,
+    /// Recursive-doubling multicast + inverse-subtract optimization
+    /// (SSIII-C); ablation benches switch it off.
+    pub multicast_opt: bool,
+    /// Sequential ACK flow control (SSIII-B); the ablation that shows why
+    /// the paper needs it (disabling overflows the single NIC buffer).
+    pub ack_enabled: bool,
+    /// Delay one rank's first call (Fig. 3 late-rank scenarios).
+    pub late_rank: Option<usize>,
+    pub late_delay_ns: u64,
+    /// Number of disjoint communicators running concurrent collectives on
+    /// the shared network (the paper's SSVI comm_id future work).  Ranks
+    /// split into `comms` contiguous groups of p/comms.
+    pub comms: usize,
+    pub cost: CostModel,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        ExpConfig {
+            p: 8,
+            algo: AlgoType::RecursiveDoubling,
+            offloaded: true,
+            topology: "auto".into(),
+            msg_bytes: 4,
+            iters: 1000,
+            warmup: 32,
+            coll: CollType::Scan,
+            op: Op::Sum,
+            dtype: Dtype::I32,
+            seed: 0x4E46_5343414E, // "NFSCAN"
+            engine: EngineKind::Native,
+            verify: false,
+            multicast_opt: true,
+            ack_enabled: true,
+            late_rank: None,
+            late_delay_ns: 0,
+            comms: 1,
+            cost: CostModel::default(),
+        }
+    }
+}
+
+impl ExpConfig {
+    /// Elements per rank for the configured message size.
+    pub fn msg_elems(&self) -> usize {
+        (self.msg_bytes / self.dtype.size()).max(1)
+    }
+
+    /// Ranks per communicator.
+    pub fn group_size(&self) -> usize {
+        self.p / self.comms
+    }
+
+    /// (communicator id, base global rank, group size) of a global rank.
+    pub fn comm_of(&self, rank: usize) -> (u16, usize, usize) {
+        let g = self.group_size();
+        ((rank / g) as u16, rank / g * g, g)
+    }
+
+    /// The topology this experiment actually runs on: "auto" resolves to
+    /// each algorithm's natural wiring (the paper pre-wires the testbed
+    /// per algorithm — §VI "manual configuration").
+    pub fn resolve_topology(&self) -> crate::net::Topology {
+        use crate::net::Topology;
+        let name: &str = if self.topology == "auto" {
+            match self.algo {
+                AlgoType::Sequential => "chain",
+                AlgoType::RecursiveDoubling | AlgoType::BinomialTree => "hypercube",
+            }
+        } else {
+            &self.topology
+        };
+        Topology::by_name(name, self.p)
+            .unwrap_or_else(|| panic!("unknown topology {name} for p={}", self.p))
+    }
+
+    /// Parse an experiment TOML ([run] + [cost] sections).
+    pub fn from_toml(text: &str) -> Result<ExpConfig, String> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = ExpConfig::default();
+        for (k, v) in doc.section("run") {
+            cfg.set_run(k, v)?;
+        }
+        for (k, v) in doc.section("cost") {
+            cfg.cost.set(k, v)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Apply one `[run]` key.
+    pub fn set_run(&mut self, key: &str, v: &str) -> Result<(), String> {
+        match key {
+            "p" => self.p = v.parse().map_err(|e| format!("run.p: {e}"))?,
+            "algo" => {
+                self.algo =
+                    AlgoType::from_name(v).ok_or_else(|| format!("run.algo: unknown {v}"))?
+            }
+            "offloaded" => {
+                self.offloaded = v.parse().map_err(|e| format!("run.offloaded: {e}"))?
+            }
+            "topology" => self.topology = v.to_string(),
+            "msg_bytes" => {
+                self.msg_bytes = v.parse().map_err(|e| format!("run.msg_bytes: {e}"))?
+            }
+            "iters" => self.iters = v.parse().map_err(|e| format!("run.iters: {e}"))?,
+            "warmup" => self.warmup = v.parse().map_err(|e| format!("run.warmup: {e}"))?,
+            "coll" => {
+                self.coll = match v {
+                    "scan" => CollType::Scan,
+                    "exscan" => CollType::Exscan,
+                    "allreduce" => CollType::Allreduce,
+                    "barrier" => CollType::Barrier,
+                    _ => return Err(format!("run.coll: unknown {v}")),
+                }
+            }
+            "op" => self.op = Op::from_name(v).ok_or_else(|| format!("run.op: unknown {v}"))?,
+            "dtype" => {
+                self.dtype =
+                    Dtype::from_name(v).ok_or_else(|| format!("run.dtype: unknown {v}"))?
+            }
+            "seed" => self.seed = v.parse().map_err(|e| format!("run.seed: {e}"))?,
+            "engine" => {
+                self.engine =
+                    EngineKind::from_name(v).ok_or_else(|| format!("run.engine: unknown {v}"))?
+            }
+            "verify" => self.verify = v.parse().map_err(|e| format!("run.verify: {e}"))?,
+            "multicast_opt" => {
+                self.multicast_opt = v.parse().map_err(|e| format!("run.multicast_opt: {e}"))?
+            }
+            "ack_enabled" => {
+                self.ack_enabled = v.parse().map_err(|e| format!("run.ack_enabled: {e}"))?
+            }
+            "late_rank" => {
+                self.late_rank = Some(v.parse().map_err(|e| format!("run.late_rank: {e}"))?)
+            }
+            "late_delay_ns" => {
+                self.late_delay_ns = v.parse().map_err(|e| format!("run.late_delay_ns: {e}"))?
+            }
+            "comms" => self.comms = v.parse().map_err(|e| format!("run.comms: {e}"))?,
+            _ => return Err(format!("unknown run key: {key}")),
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.p < 2 {
+            return Err("p must be >= 2".into());
+        }
+        if self.comms == 0 || self.p % self.comms != 0 {
+            return Err(format!("comms {} must divide p {}", self.comms, self.p));
+        }
+        let group = self.p / self.comms;
+        if group < 2 {
+            return Err("each communicator needs >= 2 ranks".into());
+        }
+        if !crate::util::is_pow2(group)
+            && matches!(self.algo, AlgoType::RecursiveDoubling | AlgoType::BinomialTree)
+        {
+            return Err(format!(
+                "{} requires power-of-two ranks per communicator (paper section II-B), got {group}",
+                self.algo.name()
+            ));
+        }
+        if !self.op.valid_for(self.dtype) {
+            return Err(format!("{} invalid for {}", self.op.name(), self.dtype.name()));
+        }
+        if self.msg_bytes % self.dtype.size() != 0 {
+            return Err(format!(
+                "msg_bytes {} not a multiple of element size {}",
+                self.msg_bytes,
+                self.dtype.size()
+            ));
+        }
+        if self.iters == 0 {
+            return Err("iters must be > 0".into());
+        }
+        match self.coll {
+            CollType::Allreduce | CollType::Barrier => {
+                if self.algo == AlgoType::Sequential {
+                    return Err(format!(
+                        "{:?} has no sequential machine; use rd or binomial",
+                        self.coll
+                    ));
+                }
+                if !crate::util::is_pow2(group) {
+                    return Err(format!("{:?} requires power-of-two ranks", self.coll));
+                }
+            }
+            CollType::Reduce => return Err("MPI_Reduce not implemented".into()),
+            _ => {}
+        }
+        Ok(())
+    }
+
+    /// Short tag for tables: "NF_rd" / "sw_seq" style (paper's naming).
+    pub fn series_name(&self) -> String {
+        let prefix = if self.offloaded { "NF" } else { "sw" };
+        let algo = match self.algo {
+            AlgoType::Sequential => "seq",
+            AlgoType::RecursiveDoubling => "rd",
+            AlgoType::BinomialTree => "binomial",
+        };
+        format!("{prefix}_{algo}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        ExpConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let cfg = ExpConfig::from_toml(
+            r#"
+            [run]
+            p = 16
+            algo = "binomial"
+            offloaded = false
+            msg_bytes = 64
+            dtype = "f64"
+            op = "max"
+            iters = 10
+            [cost]
+            link_prop_ns = 700
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.p, 16);
+        assert_eq!(cfg.algo, AlgoType::BinomialTree);
+        assert!(!cfg.offloaded);
+        assert_eq!(cfg.msg_elems(), 8);
+        assert_eq!(cfg.cost.link_prop_ns, 700);
+        assert_eq!(cfg.series_name(), "sw_binomial");
+    }
+
+    #[test]
+    fn validation_rejects_bad_combinations() {
+        let mut cfg = ExpConfig::default();
+        cfg.p = 6;
+        assert!(cfg.validate().is_err(), "rd needs power of two");
+        cfg.algo = AlgoType::Sequential;
+        assert!(cfg.validate().is_ok(), "sequential handles any p");
+        cfg.op = Op::Band;
+        cfg.dtype = Dtype::F32;
+        assert!(cfg.validate().is_err());
+        cfg = ExpConfig::default();
+        cfg.msg_bytes = 7;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn auto_topology_matches_algorithm() {
+        let mut cfg = ExpConfig::default();
+        cfg.algo = AlgoType::Sequential;
+        assert_eq!(cfg.resolve_topology().name(), "chain");
+        cfg.algo = AlgoType::RecursiveDoubling;
+        assert_eq!(cfg.resolve_topology().name(), "hypercube");
+        cfg.topology = "ring".into();
+        assert_eq!(cfg.resolve_topology().name(), "ring");
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        assert!(ExpConfig::from_toml("[run]\nbogus = 1").is_err());
+        assert!(ExpConfig::from_toml("[cost]\nbogus = 1").is_err());
+    }
+}

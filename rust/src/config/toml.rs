@@ -1,0 +1,174 @@
+//! A minimal TOML-subset parser (sections, key = value, comments).
+//!
+//! The offline build has no serde/toml crates, and experiment configs only
+//! need flat `[section] key = value` files, so we parse exactly that:
+//! bare/quoted strings, integers, floats, booleans.  Anything fancier
+//! (arrays, tables-in-tables, dates) is rejected loudly.
+
+use std::collections::BTreeMap;
+
+/// Parsed file: section -> key -> raw value string (quotes stripped).
+#[derive(Debug, Default, Clone)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, String> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new(); // top-level
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                if name.is_empty() || name.contains('[') {
+                    return Err(format!("line {}: bad section name", lineno + 1));
+                }
+                section = name.to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = k.trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let value = unquote(v.trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            let dup = doc
+                .sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.to_string(), value);
+            if dup.is_some() {
+                return Err(format!("line {}: duplicate key {key}", lineno + 1));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    pub fn section(&self, section: &str) -> impl Iterator<Item = (&str, &str)> {
+        self.sections
+            .get(section)
+            .into_iter()
+            .flat_map(|m| m.iter().map(|(k, v)| (k.as_str(), v.as_str())))
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str) -> Result<Option<usize>, String> {
+        self.get(section, key)
+            .map(|v| v.parse().map_err(|e| format!("{section}.{key}: {e}")))
+            .transpose()
+    }
+
+    pub fn get_u64(&self, section: &str, key: &str) -> Result<Option<u64>, String> {
+        self.get(section, key)
+            .map(|v| v.parse().map_err(|e| format!("{section}.{key}: {e}")))
+            .transpose()
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Result<Option<bool>, String> {
+        self.get(section, key)
+            .map(|v| match v {
+                "true" => Ok(true),
+                "false" => Ok(false),
+                _ => Err(format!("{section}.{key}: expected true/false, got {v}")),
+            })
+            .transpose()
+    }
+}
+
+/// Remove a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Strip surrounding quotes from a string value; reject unsupported TOML.
+fn unquote(v: &str) -> Result<String, String> {
+    if v.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = v.strip_prefix('"') {
+        return inner
+            .strip_suffix('"')
+            .map(|s| s.to_string())
+            .ok_or_else(|| "unterminated string".into());
+    }
+    if v.starts_with('[') || v.starts_with('{') {
+        return Err("arrays/inline tables not supported by the mini parser".into());
+    }
+    Ok(v.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_values() {
+        let doc = TomlDoc::parse(
+            r#"
+            # experiment
+            top = 1
+            [run]
+            p = 8
+            algo = "recursive_doubling"  # inline comment
+            offloaded = true
+            [cost]
+            sw_copy_ns_per_byte = 2.5
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top"), Some("1"));
+        assert_eq!(doc.get_usize("run", "p").unwrap(), Some(8));
+        assert_eq!(doc.get("run", "algo"), Some("recursive_doubling"));
+        assert_eq!(doc.get_bool("run", "offloaded").unwrap(), Some(true));
+        assert_eq!(doc.get("cost", "sw_copy_ns_per_byte"), Some("2.5"));
+        assert_eq!(doc.get("run", "missing"), None);
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = TomlDoc::parse("name = \"a#b\"").unwrap();
+        assert_eq!(doc.get("", "name"), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_are_loud() {
+        assert!(TomlDoc::parse("[unterminated").is_err());
+        assert!(TomlDoc::parse("novalue").is_err());
+        assert!(TomlDoc::parse("k = [1,2]").is_err());
+        assert!(TomlDoc::parse("k = 1\nk = 2").is_err());
+        assert!(TomlDoc::parse("k = \"open").is_err());
+    }
+
+    #[test]
+    fn section_iteration_sorted() {
+        let doc = TomlDoc::parse("[s]\nb = 2\na = 1").unwrap();
+        let kv: Vec<_> = doc.section("s").collect();
+        assert_eq!(kv, vec![("a", "1"), ("b", "2")]);
+    }
+}

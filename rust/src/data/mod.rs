@@ -1,0 +1,184 @@
+//! MPI datatypes, reduction operations, and the typed byte payloads that
+//! flow through the simulated network.
+//!
+//! Mirrors the `data_type` / `operation` fields of the paper's offload
+//! packet (Fig. 1).  Payloads are raw little-endian bytes exactly as they
+//! would sit in a UDP datagram; typed views convert at the edges.
+
+pub mod payload;
+
+pub use payload::Payload;
+
+/// MPI datatype carried in the offload packet's `data_type` field.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum Dtype {
+    /// MPI_INT — the type the paper's multicast optimization requires.
+    I32,
+    /// MPI_FLOAT
+    F32,
+    /// MPI_DOUBLE
+    F64,
+}
+
+impl Dtype {
+    pub const ALL: [Dtype; 3] = [Dtype::I32, Dtype::F32, Dtype::F64];
+
+    /// Bytes per element.
+    pub fn size(self) -> usize {
+        match self {
+            Dtype::I32 | Dtype::F32 => 4,
+            Dtype::F64 => 8,
+        }
+    }
+
+    /// Manifest / CLI name (matches the python side).
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::I32 => "i32",
+            Dtype::F32 => "f32",
+            Dtype::F64 => "f64",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Dtype> {
+        match s {
+            "i32" | "int" | "MPI_INT" => Some(Dtype::I32),
+            "f32" | "float" | "MPI_FLOAT" => Some(Dtype::F32),
+            "f64" | "double" | "MPI_DOUBLE" => Some(Dtype::F64),
+            _ => None,
+        }
+    }
+
+    /// Wire enumeration for the packet's `data_type` field.
+    pub fn wire_code(self) -> u16 {
+        match self {
+            Dtype::I32 => 1,
+            Dtype::F32 => 2,
+            Dtype::F64 => 3,
+        }
+    }
+
+    pub fn from_wire(code: u16) -> Option<Dtype> {
+        match code {
+            1 => Some(Dtype::I32),
+            2 => Some(Dtype::F32),
+            3 => Some(Dtype::F64),
+            _ => None,
+        }
+    }
+}
+
+/// MPI reduction op carried in the packet's `operation` field.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum Op {
+    Sum,
+    Prod,
+    Max,
+    Min,
+    /// Bitwise AND/OR/XOR — integer types only (like MPI_BAND etc).
+    Band,
+    Bor,
+    Bxor,
+}
+
+impl Op {
+    pub const ALL: [Op; 7] = [Op::Sum, Op::Prod, Op::Max, Op::Min, Op::Band, Op::Bor, Op::Bxor];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Op::Sum => "sum",
+            Op::Prod => "prod",
+            Op::Max => "max",
+            Op::Min => "min",
+            Op::Band => "band",
+            Op::Bor => "bor",
+            Op::Bxor => "bxor",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Op> {
+        match s {
+            "sum" | "MPI_SUM" => Some(Op::Sum),
+            "prod" | "MPI_PROD" => Some(Op::Prod),
+            "max" | "MPI_MAX" => Some(Op::Max),
+            "min" | "MPI_MIN" => Some(Op::Min),
+            "band" | "MPI_BAND" => Some(Op::Band),
+            "bor" | "MPI_BOR" => Some(Op::Bor),
+            "bxor" | "MPI_BXOR" => Some(Op::Bxor),
+            _ => None,
+        }
+    }
+
+    /// Bitwise ops are only defined on integer types.
+    pub fn int_only(self) -> bool {
+        matches!(self, Op::Band | Op::Bor | Op::Bxor)
+    }
+
+    pub fn valid_for(self, dt: Dtype) -> bool {
+        !self.int_only() || dt == Dtype::I32
+    }
+
+    /// The paper's SSIII-C multicast optimization needs an exact inverse:
+    /// only (MPI_SUM, MPI_INT) qualifies ("it is perfect for data type
+    /// MPI_INT performing MPI_SUM, since subtraction is inverse of
+    /// addition").
+    pub fn invertible_for(self, dt: Dtype) -> bool {
+        self == Op::Sum && dt == Dtype::I32
+    }
+
+    pub fn wire_code(self) -> u16 {
+        match self {
+            Op::Sum => 1,
+            Op::Prod => 2,
+            Op::Max => 3,
+            Op::Min => 4,
+            Op::Band => 5,
+            Op::Bor => 6,
+            Op::Bxor => 7,
+        }
+    }
+
+    pub fn from_wire(code: u16) -> Option<Op> {
+        Op::ALL.iter().copied().find(|o| o.wire_code() == code)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_roundtrip() {
+        for dt in Dtype::ALL {
+            assert_eq!(Dtype::from_wire(dt.wire_code()), Some(dt));
+            assert_eq!(Dtype::from_name(dt.name()), Some(dt));
+        }
+        assert_eq!(Dtype::from_wire(0), None);
+        assert_eq!(Dtype::from_name("i64"), None);
+    }
+
+    #[test]
+    fn op_roundtrip() {
+        for op in Op::ALL {
+            assert_eq!(Op::from_wire(op.wire_code()), Some(op));
+            assert_eq!(Op::from_name(op.name()), Some(op));
+        }
+        assert_eq!(Op::from_wire(99), None);
+    }
+
+    #[test]
+    fn op_validity_matrix() {
+        assert!(Op::Sum.valid_for(Dtype::F64));
+        assert!(Op::Band.valid_for(Dtype::I32));
+        assert!(!Op::Band.valid_for(Dtype::F32));
+        assert!(Op::Sum.invertible_for(Dtype::I32));
+        assert!(!Op::Sum.invertible_for(Dtype::F32), "float sum is not exactly invertible");
+        assert!(!Op::Max.invertible_for(Dtype::I32), "max has no inverse");
+    }
+
+    #[test]
+    fn mpi_aliases() {
+        assert_eq!(Dtype::from_name("MPI_INT"), Some(Dtype::I32));
+        assert_eq!(Op::from_name("MPI_SUM"), Some(Op::Sum));
+    }
+}

@@ -1,0 +1,244 @@
+//! Typed byte payloads — the scan data as it sits on the wire.
+//!
+//! A payload is little-endian bytes plus its [`Dtype`]; this is exactly the
+//! datagram body the NetFPGA streamed through its adder pipeline.  All
+//! element access converts at the boundary, so payloads can be sliced,
+//! chunked for MTU segmentation, and handed to either compute engine
+//! (native Rust or the compiled XLA artifact) without copying per element.
+
+use std::rc::Rc;
+
+use super::{Dtype, Op};
+
+/// SSPerf notes (EXPERIMENTS.md SSPerf has the iteration log):
+///
+/// - payloads are copy-on-write (`Rc<Vec<u8>>`): the scan state machines
+///   clone payloads liberally (every send, buffer, fold input); with
+///   plain `Vec<u8>` those deep copies were the top simulator cost at
+///   multi-KB message sizes.  `clone()` is a refcount bump.
+/// - `slice()` is a zero-copy *window* (offset+len into the shared
+///   backing): MTU fragmentation of an N-byte message used to copy all N
+///   bytes again; now it is O(fragments).
+#[derive(Clone)]
+pub struct Payload {
+    dtype: Dtype,
+    bytes: Rc<Vec<u8>>,
+    /// window into `bytes` (byte offset / byte length)
+    off: usize,
+    len_b: usize,
+}
+
+impl PartialEq for Payload {
+    fn eq(&self, other: &Self) -> bool {
+        self.dtype == other.dtype && self.bytes() == other.bytes()
+    }
+}
+
+impl std::fmt::Debug for Payload {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Payload({} x{})", self.dtype.name(), self.len())
+    }
+}
+
+impl Payload {
+    pub fn from_bytes(dtype: Dtype, bytes: Vec<u8>) -> Self {
+        assert!(
+            bytes.len() % dtype.size() == 0,
+            "payload length {} not a multiple of element size {}",
+            bytes.len(),
+            dtype.size()
+        );
+        let len_b = bytes.len();
+        Payload { dtype, bytes: Rc::new(bytes), off: 0, len_b }
+    }
+
+    pub fn from_i32(v: &[i32]) -> Self {
+        Payload::from_bytes(Dtype::I32, v.iter().flat_map(|x| x.to_le_bytes()).collect())
+    }
+
+    pub fn from_f32(v: &[f32]) -> Self {
+        Payload::from_bytes(Dtype::F32, v.iter().flat_map(|x| x.to_le_bytes()).collect())
+    }
+
+    pub fn from_f64(v: &[f64]) -> Self {
+        Payload::from_bytes(Dtype::F64, v.iter().flat_map(|x| x.to_le_bytes()).collect())
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        self.dtype
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.len_b / self.dtype.size()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len_b == 0
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.len_b
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        &self.bytes[self.off..self.off + self.len_b]
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        if self.off == 0 && self.len_b == self.bytes.len() {
+            Rc::try_unwrap(self.bytes).unwrap_or_else(|rc| (*rc).clone())
+        } else {
+            self.bytes().to_vec()
+        }
+    }
+
+    pub fn to_i32(&self) -> Vec<i32> {
+        assert_eq!(self.dtype, Dtype::I32);
+        self.bytes().chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect()
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        assert_eq!(self.dtype, Dtype::F32);
+        self.bytes().chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+    }
+
+    pub fn to_f64(&self) -> Vec<f64> {
+        assert_eq!(self.dtype, Dtype::F64);
+        self.bytes().chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect()
+    }
+
+    /// Identity-element payload of `n` elements for (op, dtype) — what the
+    /// runtime pads with so fixed-block artifacts don't perturb results.
+    pub fn identity(dtype: Dtype, op: Op, n: usize) -> Payload {
+        match dtype {
+            Dtype::I32 => Payload::from_i32(&vec![identity_i32(op); n]),
+            Dtype::F32 => Payload::from_f32(&vec![identity_f32(op); n]),
+            Dtype::F64 => Payload::from_f64(&vec![identity_f64(op); n]),
+        }
+    }
+
+    /// Zero-copy sub-range view of elements [start, start+n) — MTU
+    /// chunking shares the backing allocation.
+    pub fn slice(&self, start: usize, n: usize) -> Payload {
+        let es = self.dtype.size();
+        assert!((start + n) * es <= self.len_b, "slice out of range");
+        Payload {
+            dtype: self.dtype,
+            bytes: self.bytes.clone(),
+            off: self.off + start * es,
+            len_b: n * es,
+        }
+    }
+
+    /// Concatenate chunks back together (reassembly).
+    pub fn concat(chunks: &[Payload]) -> Payload {
+        assert!(!chunks.is_empty());
+        let dtype = chunks[0].dtype;
+        let mut bytes = Vec::with_capacity(chunks.iter().map(|c| c.byte_len()).sum());
+        for c in chunks {
+            assert_eq!(c.dtype, dtype);
+            bytes.extend_from_slice(c.bytes());
+        }
+        let len_b = bytes.len();
+        Payload { dtype, bytes: Rc::new(bytes), off: 0, len_b }
+    }
+
+    /// Extend to `n` elements with the op identity (in place;
+    /// materializes the window).
+    pub fn pad_to(&mut self, op: Op, n: usize) {
+        let cur = self.len();
+        if cur < n {
+            let pad = Payload::identity(self.dtype, op, n - cur);
+            let mut v = Vec::with_capacity(n * self.dtype.size());
+            v.extend_from_slice(self.bytes());
+            v.extend_from_slice(pad.bytes());
+            *self = Payload::from_bytes(self.dtype, v);
+        }
+    }
+
+    /// Truncate to `n` elements (in place; O(1) — shrinks the window).
+    pub fn truncate(&mut self, n: usize) {
+        let want = n * self.dtype.size();
+        assert!(want <= self.len_b, "truncate cannot grow");
+        self.len_b = want;
+    }
+}
+
+pub fn identity_i32(op: Op) -> i32 {
+    match op {
+        Op::Sum | Op::Bor | Op::Bxor => 0,
+        Op::Prod => 1,
+        Op::Max => i32::MIN,
+        Op::Min => i32::MAX,
+        Op::Band => -1,
+    }
+}
+
+pub fn identity_f32(op: Op) -> f32 {
+    match op {
+        Op::Sum => 0.0,
+        Op::Prod => 1.0,
+        Op::Max => f32::MIN,
+        Op::Min => f32::MAX,
+        _ => panic!("bitwise op on float payload"),
+    }
+}
+
+pub fn identity_f64(op: Op) -> f64 {
+    match op {
+        Op::Sum => 0.0,
+        Op::Prod => 1.0,
+        Op::Max => f64::MIN,
+        Op::Min => f64::MAX,
+        _ => panic!("bitwise op on float payload"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_typed_views() {
+        let p = Payload::from_i32(&[1, -2, 3]);
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.byte_len(), 12);
+        assert_eq!(p.to_i32(), vec![1, -2, 3]);
+
+        let f = Payload::from_f64(&[1.5, -2.25]);
+        assert_eq!(f.to_f64(), vec![1.5, -2.25]);
+    }
+
+    #[test]
+    fn slice_and_concat_inverse() {
+        let p = Payload::from_i32(&(0..100).collect::<Vec<_>>());
+        let a = p.slice(0, 40);
+        let b = p.slice(40, 60);
+        assert_eq!(Payload::concat(&[a, b]), p);
+    }
+
+    #[test]
+    fn pad_then_truncate_is_identity() {
+        let mut p = Payload::from_f32(&[1.0, 2.0]);
+        let orig = p.clone();
+        p.pad_to(Op::Sum, 8);
+        assert_eq!(p.len(), 8);
+        assert_eq!(p.to_f32()[2..], [0.0; 6]);
+        p.truncate(2);
+        assert_eq!(p, orig);
+    }
+
+    #[test]
+    fn identity_values() {
+        assert_eq!(Payload::identity(Dtype::I32, Op::Max, 2).to_i32(), vec![i32::MIN; 2]);
+        assert_eq!(Payload::identity(Dtype::F64, Op::Prod, 1).to_f64(), vec![1.0]);
+        assert_eq!(Payload::identity(Dtype::I32, Op::Band, 1).to_i32(), vec![-1]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn misaligned_bytes_rejected() {
+        Payload::from_bytes(Dtype::I32, vec![0u8; 7]);
+    }
+}

@@ -1,0 +1,338 @@
+//! Binomial-tree scan state machine (paper SSIII-D).
+//!
+//! Up-phase: rank j receives partials from its trailing_ones(j) children
+//! (child k = j - 2^k) into preallocated buffers, folds them with its own
+//! contribution into a block covering [j - 2^t + 1, j], and sends the
+//! block to parent j + 2^t.  Down-phase: every rank j whose block starts
+//! at 0 (j = 2^t - 1, including the root p-1) already has its prefix; it
+//! sends the prefix to j + 2^(k-1) for each k <= t (paper's rule
+//! "j & (2^k - 1) = 2^k - 1 sends to j + 2^(k-1)").  Receivers combine
+//! the incoming prefix with their buffered block, deliver, and cascade
+//! their own down-phase sends "back-to-back ... at line rate".
+//!
+//! Unlike MPI_Allreduce, the outcome differs per rank, so the down-phase
+//! cannot use the multicast engine — each down message is a distinct
+//! prefix (the paper's SSIII-D observation).
+//!
+//! FLOW CONTROL: back-to-back offloaded scans have the same hazard the
+//! paper's SSIII-B solves for the sequential algorithm — ranks whose
+//! prefix needs no network round-trip (rank 0, and every j = 2^t - 1)
+//! return immediately and can run arbitrarily many epochs ahead of their
+//! parent, overflowing the card's preallocated buffers.  We extend the
+//! paper's ACK mechanism to the up-phase: a parent acknowledges each
+//! child when it consumes the child's block, and a rank does not return
+//! its result to the host until its parent has acknowledged.  For ranks
+//! that wait for a down-phase message anyway the ACK arrives strictly
+//! earlier (the parent consumes before the root can possibly turn
+//! around), so only the "free" base-0 ranks pay — exactly like the
+//! sequential ACK the paper accepted.
+
+use crate::data::Payload;
+use crate::net::Rank;
+use crate::packet::{AlgoType, CollPacket, CollType, MsgType};
+use crate::sim::OffloadRequest;
+
+use super::engine::{CollEngine, EngineCtx, NicAction};
+
+pub struct BinomialEngine {
+    rank: Rank,
+    p: usize,
+    coll: CollType,
+    /// trailing_ones(rank): number of children / up-phase steps.
+    t: u32,
+    called: bool,
+    own: Option<Payload>,
+    /// Preallocated child buffers; slot k holds the block from j - 2^k.
+    child_bufs: Vec<Option<Payload>>,
+    children_seen: usize,
+    /// Fold over child blocks only — covers [j-2^t+1, j-1] (exscan path).
+    children_fold: Option<Payload>,
+    /// Fold over children + own — covers [j-2^t+1, j].
+    block: Option<Payload>,
+    up_sent: bool,
+    /// Incoming down-phase prefix [0, j - 2^t] (non-base-0 ranks).
+    down_in: Option<Payload>,
+    /// Final inclusive prefix [0, j].
+    prefix: Option<Payload>,
+    downs_sent: bool,
+    delivered: bool,
+    /// Result computed but held back until the parent's ACK (see module
+    /// docs on flow control).
+    pending_result: Option<Payload>,
+    /// Parent consumed our up-block.
+    parent_acked: bool,
+    acks_sent: bool,
+    /// Flow control switch (ablation; default on).
+    pub ack_enabled: bool,
+}
+
+impl BinomialEngine {
+    pub fn new(rank: Rank, p: usize, coll: CollType) -> BinomialEngine {
+        assert!(crate::util::is_pow2(p), "binomial tree needs power-of-two ranks");
+        let t = (rank as u64).trailing_ones();
+        BinomialEngine {
+            rank,
+            p,
+            coll,
+            t,
+            called: false,
+            own: None,
+            child_bufs: vec![None; t as usize],
+            children_seen: 0,
+            children_fold: None,
+            block: None,
+            up_sent: false,
+            down_in: None,
+            prefix: None,
+            downs_sent: false,
+            delivered: false,
+            pending_result: None,
+            parent_acked: false,
+            acks_sent: false,
+            ack_enabled: true,
+        }
+    }
+
+    fn is_root(&self) -> bool {
+        self.rank == self.p - 1
+    }
+
+    /// Block starts at rank 0 <=> j == 2^t - 1: prefix known at up-phase
+    /// completion (root included, since p-1 is all ones for 2^k ranks).
+    fn base_is_zero(&self) -> bool {
+        self.rank + 1 == (1usize << self.t)
+    }
+
+    fn try_complete_up(&mut self, ctx: &mut EngineCtx) -> Vec<NicAction> {
+        let mut out = Vec::new();
+        if self.block.is_some()
+            || !self.called
+            || self.children_seen != self.child_bufs.len()
+        {
+            return out;
+        }
+        // fold children in rank order: child t-1 covers the lowest ranks.
+        let mut fold: Option<Payload> = None;
+        for k in (0..self.t as usize).rev() {
+            let c = self.child_bufs[k].clone().unwrap();
+            fold = Some(match fold {
+                Some(f) => ctx.combine(&f, &c),
+                None => c,
+            });
+        }
+        self.children_fold = fold.clone();
+        let own = self.own.clone().unwrap();
+        let block = match fold {
+            Some(f) => ctx.combine(&f, &own),
+            None => own,
+        };
+        self.block = Some(block.clone());
+        if !self.acks_sent {
+            // release every child: its block is consumed, its buffer free
+            self.acks_sent = true;
+            if self.ack_enabled {
+                for k in 0..self.t as u16 {
+                    out.push(NicAction::Send {
+                        dst: self.rank - (1usize << k),
+                        mt: MsgType::Ack,
+                        step: k,
+                        tag: 0,
+                        payload: Payload::identity(block.dtype(), ctx.op, 0),
+                    });
+                }
+            }
+        }
+        if !self.is_root() && !self.up_sent {
+            self.up_sent = true;
+            let parent = self.rank + (1usize << self.t);
+            debug_assert!(parent < self.p);
+            out.push(NicAction::Send {
+                dst: parent,
+                mt: MsgType::Data,
+                step: self.t as u16,
+                tag: 0,
+                payload: block,
+            });
+        }
+        if self.base_is_zero() {
+            self.prefix = Some(self.block.clone().unwrap());
+            out.extend(self.emit_down_and_deliver(ctx));
+        } else if self.down_in.is_some() {
+            // the down prefix raced ahead of our up completion
+            out.extend(self.absorb_down(ctx));
+        }
+        out
+    }
+
+    fn absorb_down(&mut self, ctx: &mut EngineCtx) -> Vec<NicAction> {
+        if self.prefix.is_some() || self.block.is_none() || self.down_in.is_none() {
+            return Vec::new();
+        }
+        let down = self.down_in.clone().unwrap();
+        let block = self.block.clone().unwrap();
+        self.prefix = Some(ctx.combine(&down, &block));
+        self.emit_down_and_deliver(ctx)
+    }
+
+    /// Once the prefix is known: deliver to the host and cascade the
+    /// down-phase sends (generated back-to-back at the hardware).
+    fn emit_down_and_deliver(&mut self, ctx: &mut EngineCtx) -> Vec<NicAction> {
+        let mut out = Vec::new();
+        let prefix = self.prefix.clone().unwrap();
+        if !self.downs_sent {
+            self.downs_sent = true;
+            // paper's rule: for k with j&(2^k-1)==2^k-1, send to j+2^(k-1)
+            for k in (1..=self.t as u16).rev() {
+                let target = self.rank + (1usize << (k - 1));
+                if target < self.p {
+                    out.push(NicAction::Send {
+                        dst: target,
+                        mt: MsgType::Down,
+                        step: k,
+                        tag: 0,
+                        payload: prefix.clone(),
+                    });
+                }
+            }
+        }
+        if !self.delivered && self.pending_result.is_none() {
+            let result = if self.coll.inclusive() {
+                prefix
+            } else {
+                // exclusive: prefix below own = down_in (+ children blocks)
+                match (&self.down_in, &self.children_fold) {
+                    (Some(d), Some(cf)) => ctx.combine(d, cf),
+                    (Some(d), None) => d.clone(),
+                    (None, Some(cf)) => cf.clone(),
+                    (None, None) => ctx.identity(self.own.as_ref().unwrap()),
+                }
+            };
+            self.pending_result = Some(result);
+        }
+        out.extend(self.try_deliver());
+        out
+    }
+
+    /// Deliver the held result once the parent has released us.
+    fn try_deliver(&mut self) -> Vec<NicAction> {
+        let released = self.is_root() || self.parent_acked || !self.ack_enabled;
+        if self.delivered || !released {
+            return Vec::new();
+        }
+        match self.pending_result.take() {
+            Some(result) => {
+                self.delivered = true;
+                vec![NicAction::Deliver { payload: result }]
+            }
+            None => Vec::new(),
+        }
+    }
+}
+
+impl CollEngine for BinomialEngine {
+    fn on_host_request(&mut self, ctx: &mut EngineCtx, req: &OffloadRequest) -> Vec<NicAction> {
+        assert!(!self.called, "duplicate host request");
+        self.called = true;
+        self.own = Some(req.payload.clone());
+        self.try_complete_up(ctx)
+    }
+
+    fn on_packet(&mut self, ctx: &mut EngineCtx, pkt: &CollPacket) -> Vec<NicAction> {
+        match pkt.msg_type {
+            MsgType::Data => {
+                // up-phase child block: sender j - 2^k at slot k
+                let src = pkt.rank as usize;
+                let k = pkt.step as usize;
+                assert!(k < self.child_bufs.len(), "not my child: rank {src} step {k}");
+                assert_eq!(src + (1 << k), self.rank, "child/slot mismatch");
+                assert!(
+                    self.child_bufs[k].is_none(),
+                    "binomial child buffer {k} overrun at rank {}",
+                    self.rank
+                );
+                self.child_bufs[k] = Some(pkt.payload.clone());
+                self.children_seen += 1;
+                self.try_complete_up(ctx)
+            }
+            MsgType::Down => {
+                assert!(self.down_in.is_none(), "duplicate down prefix");
+                assert!(!self.base_is_zero(), "base-0 rank got a down message");
+                self.down_in = Some(pkt.payload.clone());
+                self.absorb_down(ctx)
+            }
+            MsgType::Ack => {
+                // parent consumed our up-block: we may return to the host
+                assert_eq!(
+                    pkt.rank as usize,
+                    self.rank + (1usize << self.t),
+                    "ack must come from the parent"
+                );
+                self.parent_acked = true;
+                self.try_deliver()
+            }
+            other => panic!("binomial engine got unexpected {other:?}"),
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.delivered
+            && self.downs_sent
+            && (self.is_root() || self.up_sent)
+            && (self.t == 0 || self.acks_sent)
+    }
+
+    fn algo(&self) -> AlgoType {
+        AlgoType::BinomialTree
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::engine::testutil::Harness;
+    use crate::packet::{AlgoType, CollType};
+
+    fn contributions(p: usize) -> Vec<Vec<i32>> {
+        (0..p).map(|r| vec![2 * r as i32 + 1, -(r as i32) - 5]).collect()
+    }
+
+    fn orders(p: usize) -> Vec<Vec<usize>> {
+        vec![
+            (0..p).collect(),
+            (0..p).rev().collect(),
+            (0..p).step_by(2).chain((1..p).step_by(2)).collect(),
+        ]
+    }
+
+    #[test]
+    fn scan_various_orders_and_sizes() {
+        for p in [2usize, 4, 8, 16, 32] {
+            for order in orders(p) {
+                let mut h = Harness::new(AlgoType::BinomialTree, p, CollType::Scan, false);
+                h.run_and_check(&contributions(p), &order);
+            }
+        }
+    }
+
+    #[test]
+    fn exscan_various_orders() {
+        for p in [2usize, 4, 8, 16] {
+            for order in orders(p) {
+                let mut h = Harness::new(AlgoType::BinomialTree, p, CollType::Exscan, false);
+                h.run_and_check(&contributions(p), &order);
+            }
+        }
+    }
+
+    #[test]
+    fn root_receives_all_children() {
+        // in p=8, rank 7 has children 6 (k=0), 5 (k=1), 3 (k=2)
+        let h = Harness::new(AlgoType::BinomialTree, 8, CollType::Scan, false);
+        assert_eq!(h.engines[7].algo(), AlgoType::BinomialTree);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_power_of_two_rejected() {
+        Harness::new(AlgoType::BinomialTree, 6, CollType::Scan, false);
+    }
+}

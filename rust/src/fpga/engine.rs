@@ -1,0 +1,301 @@
+//! The collective-offload engine interface — the "user-data-path" module
+//! of the paper's NetFPGA design.
+//!
+//! One engine instance runs ONE collective invocation (one epoch) on one
+//! card.  The NIC creates instances on demand — either when the host's
+//! offload request crosses down, or when a peer's packet arrives first
+//! (late-rank scenarios) — and retires them when [`CollEngine::done`]
+//! reports completion.  That per-epoch lifetime is exactly the
+//! (comm_id, collective_state) table the paper's SSVI sketches as future
+//! work.
+
+use crate::config::CostModel;
+use crate::data::{Op, Payload};
+use crate::net::Rank;
+use crate::packet::{AlgoType, CollPacket, CollType, MsgType};
+use crate::runtime::Compute;
+use crate::sim::OffloadRequest;
+
+/// What an engine instructs its card to do.  The NIC turns these into
+/// framed, fragmented, routed packets (or a host delivery).
+#[derive(Debug)]
+pub enum NicAction {
+    /// Unicast a collective packet to peer `dst`'s card.
+    Send { dst: Rank, mt: MsgType, step: u16, tag: u32, payload: Payload },
+    /// Multicast one packet to several cards at once (the NetFPGA
+    /// multicast engine of the paper's SSIII-C optimization).  Ports are
+    /// driven in parallel; a shared output port serializes naturally.
+    Multicast { dsts: Vec<Rank>, mt: MsgType, step: u16, tag: u32, payload: Payload },
+    /// Deliver the final outcome up to the local host (the Result packet;
+    /// the NIC attaches the elapsed-time register value).
+    Deliver { payload: Payload },
+}
+
+/// Activation context: compute access + cycle accounting.  The engine
+/// charges datapath cycles (combine at line rate) here; the NIC adds the
+/// fixed pipeline latency and converts to virtual time.
+pub struct EngineCtx<'a> {
+    pub rank: Rank,
+    pub p: usize,
+    pub inclusive: bool,
+    pub op: Op,
+    pub compute: &'a dyn Compute,
+    pub cost: &'a CostModel,
+    /// Cycles consumed by this activation's datapath work.
+    pub cycles: u64,
+}
+
+impl EngineCtx<'_> {
+    /// Elementwise combine, charging line-rate cycles (64-bit datapath).
+    pub fn combine(&mut self, a: &Payload, b: &Payload) -> Payload {
+        self.cycles += self.cost.nic_combine_cycles(a.byte_len());
+        self.compute.combine(a, b, self.op).expect("engine combine")
+    }
+
+    /// Inverse-subtract (multicast optimization).  Charges NO extra
+    /// cycles: the subtraction overlaps packet reception — "we do not
+    /// need extra cycles to perform subtraction while streaming the
+    /// data" (SSIII-C).
+    pub fn derive(&mut self, cumulative: &Payload, own: &Payload) -> Payload {
+        self.compute.derive(cumulative, own).expect("engine derive")
+    }
+
+    /// Identity payload (for exclusive-scan rank 0).
+    pub fn identity(&self, like: &Payload) -> Payload {
+        Payload::identity(like.dtype(), self.op, like.len())
+    }
+}
+
+/// One collective state machine (one epoch on one card).
+pub trait CollEngine {
+    /// The local host's offload request arrived (HostRequest packet).
+    fn on_host_request(&mut self, ctx: &mut EngineCtx, req: &OffloadRequest) -> Vec<NicAction>;
+
+    /// A (fully reassembled) peer packet arrived for this epoch.
+    fn on_packet(&mut self, ctx: &mut EngineCtx, pkt: &CollPacket) -> Vec<NicAction>;
+
+    /// True when this instance can be retired (result delivered AND all
+    /// protocol obligations — ACKs, down-phase sends — discharged).
+    fn done(&self) -> bool;
+
+    fn algo(&self) -> AlgoType;
+}
+
+/// Hardware feature switches (ablation benches flip these).
+#[derive(Clone, Copy, Debug)]
+pub struct EngineOpts {
+    /// SSIII-C multicast + inverse-subtract optimization (recursive
+    /// doubling only).
+    pub multicast_opt: bool,
+    /// SSIII-B ACK flow control (sequential only).
+    pub ack_enabled: bool,
+}
+
+impl Default for EngineOpts {
+    fn default() -> Self {
+        EngineOpts { multicast_opt: true, ack_enabled: true }
+    }
+}
+
+/// Instantiate the state machine for a (collective, algorithm) pair.
+pub fn make_engine(
+    algo: AlgoType,
+    rank: Rank,
+    p: usize,
+    coll: CollType,
+    opts: EngineOpts,
+) -> Box<dyn CollEngine> {
+    match coll {
+        CollType::Scan | CollType::Exscan => match algo {
+            AlgoType::Sequential => {
+                let mut e = super::seq::SeqEngine::new(rank, p, coll);
+                e.ack_enabled = opts.ack_enabled;
+                Box::new(e)
+            }
+            AlgoType::RecursiveDoubling => {
+                Box::new(super::rd::RdEngine::new(rank, p, coll, opts.multicast_opt))
+            }
+            AlgoType::BinomialTree => {
+                let mut e = super::binomial::BinomialEngine::new(rank, p, coll);
+                e.ack_enabled = opts.ack_enabled;
+                Box::new(e)
+            }
+        },
+        CollType::Allreduce | CollType::Barrier => match algo {
+            AlgoType::BinomialTree => Box::new(super::allreduce::TreeAllreduce::new(rank, p)),
+            AlgoType::RecursiveDoubling => Box::new(super::allreduce::RdAllreduce::new(rank, p)),
+            AlgoType::Sequential => {
+                panic!("no sequential hardware machine for {coll:?} (use rd/binomial)")
+            }
+        },
+        CollType::Reduce => panic!("MPI_Reduce offload not implemented (coll_type reserved)"),
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    //! Drive engines directly (no network) — shared by the per-algorithm
+    //! unit tests.  A tiny in-memory "wire" delivers actions between
+    //! engines until quiescence, then results are compared to the oracle.
+
+    use std::collections::VecDeque;
+
+    use super::*;
+    use crate::data::Dtype;
+    use crate::packet::NodeType;
+    use crate::runtime::NativeEngine;
+
+    pub struct Harness {
+        pub p: usize,
+        pub coll: CollType,
+        pub op: Op,
+        pub engines: Vec<Box<dyn CollEngine>>,
+        pub results: Vec<Option<Payload>>,
+        queue: VecDeque<(Rank, CollPacket)>, // (dst, packet)
+        compute: NativeEngine,
+        cost: CostModel,
+    }
+
+    impl Harness {
+        pub fn new(algo: AlgoType, p: usize, coll: CollType, multicast_opt: bool) -> Harness {
+            let opts = EngineOpts { multicast_opt, ..Default::default() };
+            Harness {
+                p,
+                coll,
+                op: Op::Sum,
+                engines: (0..p).map(|r| make_engine(algo, r, p, coll, opts)).collect(),
+                results: vec![None; p],
+                queue: VecDeque::new(),
+                compute: NativeEngine::new(),
+                cost: CostModel::default(),
+            }
+        }
+
+        fn enqueue(&mut self, from: Rank, actions: Vec<NicAction>) {
+            for a in actions {
+                match a {
+                    NicAction::Send { dst, mt, step, tag, payload } => {
+                        self.queue.push_back((dst, self.pkt(from, mt, step, tag, payload)));
+                    }
+                    NicAction::Multicast { dsts, mt, step, tag, payload } => {
+                        for dst in dsts {
+                            self.queue.push_back((
+                                dst,
+                                self.pkt(from, mt, step, tag, payload.clone()),
+                            ));
+                        }
+                    }
+                    NicAction::Deliver { payload } => {
+                        assert!(self.results[from].is_none(), "double result at {from}");
+                        self.results[from] = Some(payload);
+                    }
+                }
+            }
+        }
+
+        fn pkt(&self, from: Rank, mt: MsgType, step: u16, tag: u32, payload: Payload) -> CollPacket {
+            CollPacket {
+                comm_id: 0,
+                comm_size: self.p as u16,
+                coll_type: self.coll,
+                algo_type: self.engines[from].algo(),
+                node_type: NodeType::Generic,
+                msg_type: mt,
+                step,
+                rank: from as u16,
+                root: 0,
+                operation: self.op,
+                data_type: payload.dtype(),
+                count: payload.len() as u32,
+                frag_idx: 0,
+                frag_total: 1,
+                tag,
+                payload,
+            }
+        }
+
+        /// Host calls MPI_Scan at `rank` with `own` data.
+        pub fn call(&mut self, rank: Rank, own: Payload) {
+            let req = OffloadRequest {
+                rank,
+                comm: 0,
+                epoch: 0,
+                comm_size: self.p as u16,
+                coll: self.coll,
+                algo: self.engines[rank].algo(),
+                op: self.op,
+                dtype: Dtype::I32,
+                payload: own,
+            };
+            // field-disjoint borrows: engines (mut) + compute/cost (ref)
+            let mut ctx = EngineCtx {
+                rank,
+                p: self.p,
+                inclusive: self.coll.inclusive(),
+                op: self.op,
+                compute: &self.compute,
+                cost: &self.cost,
+                cycles: 0,
+            };
+            let actions = self.engines[rank].on_host_request(&mut ctx, &req);
+            self.enqueue(rank, actions);
+        }
+
+        /// Deliver queued packets until quiescent.
+        pub fn drain(&mut self) {
+            while let Some((dst, pkt)) = self.queue.pop_front() {
+                let mut ctx = EngineCtx {
+                    rank: dst,
+                    p: self.p,
+                    inclusive: self.coll.inclusive(),
+                    op: self.op,
+                    compute: &self.compute,
+                    cost: &self.cost,
+                    cycles: 0,
+                };
+                let actions = self.engines[dst].on_packet(&mut ctx, &pkt);
+                self.enqueue(dst, actions);
+            }
+        }
+
+        /// Run the collective with every rank calling in `order`, then
+        /// assert every rank's result equals the oracle (prefix for
+        /// scans, total for allreduce, empty for barrier).
+        pub fn run_and_check(&mut self, contributions: &[Vec<i32>], order: &[Rank]) {
+            assert_eq!(contributions.len(), self.p);
+            for &r in order {
+                self.call(r, Payload::from_i32(&contributions[r]));
+                self.drain();
+            }
+            let payloads: Vec<Payload> =
+                contributions.iter().map(|c| Payload::from_i32(c)).collect();
+            for r in 0..self.p {
+                let want = match self.coll {
+                    CollType::Scan | CollType::Exscan => crate::runtime::engine::oracle_prefix(
+                        &self.compute,
+                        &payloads,
+                        self.op,
+                        self.coll.inclusive(),
+                        r,
+                    )
+                    .unwrap(),
+                    // allreduce: every rank gets the full reduction
+                    CollType::Allreduce | CollType::Barrier => {
+                        crate::runtime::engine::oracle_prefix(
+                            &self.compute,
+                            &payloads,
+                            self.op,
+                            true,
+                            self.p - 1,
+                        )
+                        .unwrap()
+                    }
+                    CollType::Reduce => unreachable!(),
+                };
+                let got = self.results[r].as_ref().unwrap_or_else(|| panic!("rank {r} no result"));
+                assert_eq!(got.to_i32(), want.to_i32(), "rank {r} wrong {:?} result", self.coll);
+                assert!(self.engines[r].done(), "rank {r} engine not done");
+            }
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! The NetFPGA model: a cycle-approximate first-generation card.
+//!
+//! Everything the paper's hardware design does lives here:
+//!
+//! - [`engine`] — the collective-offload engine interface (the user-data-
+//!   path module of the paper's design) and its activation context;
+//! - [`seq`] / [`rd`] / [`binomial`] — the three per-algorithm hardware
+//!   state machines of SSIII-B/C/D, including the sequential ACK protocol,
+//!   the recursive-doubling multicast + inverse-subtract optimization and
+//!   the binomial up/down phases with preallocated child buffers;
+//! - [`registers`] — the 125 MHz cycle counter and the offload/release
+//!   timestamp registers behind Figs. 6 and 7;
+//! - [`reassembly`] — per-(src, type, step, epoch) fragment buffers for
+//!   messages larger than one MTU;
+//! - [`nic`] — per-card state: port FIFOs, engines per epoch, counters,
+//!   and the reference-NIC IP forwarding passthrough.
+
+pub mod allreduce;
+pub mod binomial;
+pub mod engine;
+pub mod nic;
+pub mod rd;
+pub mod reassembly;
+pub mod registers;
+pub mod seq;
+
+pub use engine::{make_engine, CollEngine, EngineCtx, EngineOpts, NicAction};
+pub use nic::Nic;
+pub use registers::Registers;

@@ -1,0 +1,125 @@
+//! Fragment reassembly for messages larger than one MTU.
+//!
+//! The paper's hardware streams payload words through the combine pipeline
+//! as they arrive; the simulation's equivalent is to buffer fragments (they
+//! arrive in order on a FIFO link) and activate the state machine when the
+//! message is complete, charging line-rate combine cycles for the whole
+//! payload — identical completion time, simpler state.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+use crate::data::Payload;
+
+/// In-progress messages keyed by K (src, type, step, epoch — caller's
+/// choice).  Capacity-limited: the NetFPGA has "preallocated buffers";
+/// exceeding the configured budget is a protocol violation and panics
+/// (the ACK machinery exists to make that impossible).
+#[derive(Debug)]
+pub struct Reassembler<K: Eq + Hash + Clone + std::fmt::Debug> {
+    parts: HashMap<K, Vec<Option<Payload>>>,
+    max_messages: usize,
+}
+
+impl<K: Eq + Hash + Clone + std::fmt::Debug> Reassembler<K> {
+    pub fn new(max_messages: usize) -> Self {
+        Reassembler { parts: HashMap::new(), max_messages }
+    }
+
+    /// Add a fragment; returns the complete payload when all fragments of
+    /// the message have arrived.
+    pub fn add(
+        &mut self,
+        key: K,
+        frag_idx: u16,
+        frag_total: u16,
+        payload: Payload,
+    ) -> Option<Payload> {
+        assert!(frag_total >= 1 && frag_idx < frag_total, "bad fragment indices");
+        if frag_total == 1 {
+            return Some(payload); // fast path: unfragmented
+        }
+        let entry = self.parts.entry(key.clone()).or_insert_with(|| {
+            vec![None; frag_total as usize]
+        });
+        assert_eq!(entry.len(), frag_total as usize, "inconsistent frag_total for {key:?}");
+        assert!(
+            self.parts.len() <= self.max_messages,
+            "reassembly buffer overflow (> {} messages) — flow control failed",
+            self.max_messages
+        );
+        let entry = self.parts.get_mut(&key).unwrap();
+        assert!(entry[frag_idx as usize].is_none(), "duplicate fragment {frag_idx} for {key:?}");
+        entry[frag_idx as usize] = Some(payload);
+        if entry.iter().all(|p| p.is_some()) {
+            let chunks: Vec<Payload> =
+                self.parts.remove(&key).unwrap().into_iter().map(|p| p.unwrap()).collect();
+            Some(Payload::concat(&chunks))
+        } else {
+            None
+        }
+    }
+
+    /// Messages currently buffered (for buffer-occupancy metrics).
+    pub fn pending(&self) -> usize {
+        self.parts.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_fragment_passthrough() {
+        let mut r: Reassembler<u32> = Reassembler::new(4);
+        let p = Payload::from_i32(&[1, 2]);
+        assert_eq!(r.add(1, 0, 1, p.clone()), Some(p));
+        assert_eq!(r.pending(), 0);
+    }
+
+    #[test]
+    fn multi_fragment_in_order() {
+        let mut r: Reassembler<u32> = Reassembler::new(4);
+        let a = Payload::from_i32(&[1, 2]);
+        let b = Payload::from_i32(&[3]);
+        assert_eq!(r.add(7, 0, 2, a), None);
+        assert_eq!(r.pending(), 1);
+        let whole = r.add(7, 1, 2, b).unwrap();
+        assert_eq!(whole.to_i32(), vec![1, 2, 3]);
+        assert_eq!(r.pending(), 0);
+    }
+
+    #[test]
+    fn out_of_order_fragments_ok() {
+        let mut r: Reassembler<u32> = Reassembler::new(4);
+        assert_eq!(r.add(7, 1, 2, Payload::from_i32(&[3])), None);
+        let whole = r.add(7, 0, 2, Payload::from_i32(&[1, 2])).unwrap();
+        assert_eq!(whole.to_i32(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn interleaved_keys() {
+        let mut r: Reassembler<(u32, u32)> = Reassembler::new(4);
+        assert_eq!(r.add((1, 0), 0, 2, Payload::from_i32(&[1])), None);
+        assert_eq!(r.add((2, 0), 0, 2, Payload::from_i32(&[9])), None);
+        assert!(r.add((1, 0), 1, 2, Payload::from_i32(&[2])).is_some());
+        assert!(r.add((2, 0), 1, 2, Payload::from_i32(&[10])).is_some());
+    }
+
+    #[test]
+    #[should_panic]
+    fn duplicate_fragment_panics() {
+        let mut r: Reassembler<u32> = Reassembler::new(4);
+        r.add(7, 0, 2, Payload::from_i32(&[1]));
+        r.add(7, 0, 2, Payload::from_i32(&[1]));
+    }
+
+    #[test]
+    #[should_panic]
+    fn overflow_panics() {
+        let mut r: Reassembler<u32> = Reassembler::new(1);
+        r.add(1, 0, 2, Payload::from_i32(&[1]));
+        r.add(2, 0, 2, Payload::from_i32(&[1]));
+    }
+}

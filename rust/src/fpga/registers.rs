@@ -1,0 +1,83 @@
+//! The NetFPGA's timing registers (paper SSIV):
+//!
+//! "The NetFPGA has 125MHz clock which enables us to create an 8ns
+//! resolution timer.  We initialize a 64-bit counter once the design is
+//! loaded ... We also create two 64-bit timestamp registers to track the
+//! offload and release time of the collective operations."
+//!
+//! The elapsed (release - offload) time is attached to the Result packet —
+//! that is the quantity of Figs. 6/7.
+
+use std::collections::HashMap;
+
+use crate::sim::SimTime;
+
+#[derive(Debug, Default)]
+pub struct Registers {
+    /// Offload timestamp (cycles) per in-flight epoch.
+    offload_cycles: HashMap<u16, u64>,
+}
+
+impl Registers {
+    pub fn new() -> Self {
+        Registers::default()
+    }
+
+    /// The free-running 64-bit cycle counter: virtual ns / 8 (125 MHz).
+    /// Truncation to cycle boundaries is the hardware's 8 ns resolution.
+    pub fn cycles(now: SimTime) -> u64 {
+        now.as_ns() / 8
+    }
+
+    /// Record the offload timestamp: the initial HostRequest packet
+    /// arrived from the local host.
+    pub fn stamp_offload(&mut self, epoch: u16, now: SimTime) {
+        self.offload_cycles.insert(epoch, Self::cycles(now));
+    }
+
+    /// Record the release timestamp (final outcome sent to the host) and
+    /// return the elapsed time in ns, quantized to 8 ns cycles like the
+    /// hardware would report.  Returns 0 if offload was never stamped
+    /// (defensive: a result without a request is a model bug upstream).
+    pub fn stamp_release(&mut self, epoch: u16, now: SimTime) -> u64 {
+        match self.offload_cycles.remove(&epoch) {
+            Some(start) => (Self::cycles(now).saturating_sub(start)) * 8,
+            None => 0,
+        }
+    }
+
+    /// In-flight collective count (for buffer-limit assertions).
+    pub fn in_flight(&self) -> usize {
+        self.offload_cycles.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elapsed_is_cycle_quantized() {
+        let mut r = Registers::new();
+        r.stamp_offload(0, SimTime::ns(100)); // cycle 12
+        let e = r.stamp_release(0, SimTime::ns(1000)); // cycle 125
+        assert_eq!(e, (125 - 12) * 8);
+    }
+
+    #[test]
+    fn epochs_tracked_independently() {
+        let mut r = Registers::new();
+        r.stamp_offload(1, SimTime::ns(0));
+        r.stamp_offload(2, SimTime::ns(800));
+        assert_eq!(r.in_flight(), 2);
+        assert_eq!(r.stamp_release(2, SimTime::ns(1600)), 800);
+        assert_eq!(r.stamp_release(1, SimTime::ns(1600)), 1600);
+        assert_eq!(r.in_flight(), 0);
+    }
+
+    #[test]
+    fn release_without_offload_is_zero() {
+        let mut r = Registers::new();
+        assert_eq!(r.stamp_release(9, SimTime::ns(500)), 0);
+    }
+}

@@ -1,0 +1,233 @@
+//! Sequential scan state machine (paper SSIII-B).
+//!
+//! Rank j waits for the partial prefix from rank j-1, folds in its own
+//! contribution, forwards to j+1 — O(p) steps.  Offloading needs the ACK
+//! protocol the paper describes: back-to-back MPI_Scan calls would
+//! otherwise require unbounded NIC buffering for upstream ranks that run
+//! ahead.  "Rank j does not immediately return after it generates its
+//! final outcome.  It waits for an acknowledgment packet from rank j+1.
+//! The NetFPGA of rank j+1 sends an acknowledgment packet to the NetFPGA
+//! of rank j after it receives the MPI_Scan request from its host and the
+//! packet from rank j.  With this technique ... it can simply require a
+//! single buffer."
+
+use crate::net::Rank;
+use crate::packet::{AlgoType, CollPacket, CollType, MsgType};
+use crate::sim::OffloadRequest;
+
+use super::engine::{CollEngine, EngineCtx, NicAction};
+
+pub struct SeqEngine {
+    rank: Rank,
+    p: usize,
+    coll: CollType,
+    /// Host's offload request received.
+    called: bool,
+    own: Option<crate::data::Payload>,
+    /// The single upstream buffer the ACK protocol guarantees suffices.
+    upstream: Option<crate::data::Payload>,
+    /// Result computed, waiting (possibly) for the downstream ACK.
+    result: Option<crate::data::Payload>,
+    sent_data: bool,
+    sent_ack: bool,
+    got_ack: bool,
+    delivered: bool,
+    /// Disable the result-gating ACK wait (ablation: shows why the paper
+    /// needs it — the no-ack variant overflows the single buffer).
+    pub ack_enabled: bool,
+}
+
+impl SeqEngine {
+    pub fn new(rank: Rank, p: usize, coll: CollType) -> SeqEngine {
+        SeqEngine {
+            rank,
+            p,
+            coll,
+            called: false,
+            own: None,
+            upstream: None,
+            result: None,
+            sent_data: false,
+            sent_ack: false,
+            got_ack: false,
+            delivered: false,
+            ack_enabled: true,
+        }
+    }
+
+    fn is_head(&self) -> bool {
+        self.rank == 0
+    }
+
+    fn is_tail(&self) -> bool {
+        self.rank == self.p - 1
+    }
+
+    /// Advance the machine as far as current inputs allow.
+    fn proceed(&mut self, ctx: &mut EngineCtx) -> Vec<NicAction> {
+        let mut out = Vec::new();
+        if !self.called {
+            return out;
+        }
+        let own = self.own.as_ref().unwrap().clone();
+
+        if self.is_head() {
+            // rank 0 receives nothing: its prefix is its own data.
+            if !self.sent_data {
+                self.sent_data = true;
+                self.result = Some(if self.coll.inclusive() {
+                    own.clone()
+                } else {
+                    ctx.identity(&own)
+                });
+                out.push(NicAction::Send {
+                    dst: 1,
+                    mt: MsgType::Data,
+                    step: 0,
+                    tag: 0,
+                    payload: own,
+                });
+            }
+        } else if let Some(upstream) = self.upstream.clone() {
+            if !self.sent_ack {
+                // both the host request and the upstream packet are here:
+                // release rank j-1 (this is what lets it return).
+                self.sent_ack = true;
+                out.push(NicAction::Send {
+                    dst: self.rank - 1,
+                    mt: MsgType::Ack,
+                    step: 0,
+                    tag: 0,
+                    payload: crate::data::Payload::identity(own.dtype(), ctx.op, 0),
+                });
+            }
+            if self.result.is_none() {
+                let prefix = ctx.combine(&upstream, &own);
+                self.result = Some(if self.coll.inclusive() { prefix.clone() } else { upstream });
+                if !self.is_tail() && !self.sent_data {
+                    self.sent_data = true;
+                    out.push(NicAction::Send {
+                        dst: self.rank + 1,
+                        mt: MsgType::Data,
+                        step: 0,
+                        tag: 0,
+                        payload: prefix,
+                    });
+                }
+            }
+        }
+
+        // deliver when the downstream ACK has released us (tail exempt).
+        if !self.delivered && self.result.is_some() {
+            let released = self.is_tail() || self.got_ack || !self.ack_enabled;
+            if released {
+                self.delivered = true;
+                out.push(NicAction::Deliver { payload: self.result.clone().unwrap() });
+            }
+        }
+        out
+    }
+}
+
+impl CollEngine for SeqEngine {
+    fn on_host_request(&mut self, ctx: &mut EngineCtx, req: &OffloadRequest) -> Vec<NicAction> {
+        assert!(!self.called, "duplicate host request");
+        self.called = true;
+        self.own = Some(req.payload.clone());
+        self.proceed(ctx)
+    }
+
+    fn on_packet(&mut self, ctx: &mut EngineCtx, pkt: &CollPacket) -> Vec<NicAction> {
+        match pkt.msg_type {
+            MsgType::Data => {
+                assert_eq!(pkt.rank as usize, self.rank - 1, "seq data must come from j-1");
+                assert!(
+                    self.upstream.is_none(),
+                    "sequential single-buffer overflow at rank {} — ACK protocol violated",
+                    self.rank
+                );
+                self.upstream = Some(pkt.payload.clone());
+                self.proceed(ctx)
+            }
+            MsgType::Ack => {
+                assert_eq!(pkt.rank as usize, self.rank + 1, "ack must come from j+1");
+                self.got_ack = true;
+                self.proceed(ctx)
+            }
+            other => panic!("seq engine got unexpected {other:?}"),
+        }
+    }
+
+    fn done(&self) -> bool {
+        // all protocol obligations discharged:
+        //  - result delivered to the host
+        //  - downstream released us (or we are the tail / ack disabled)
+        //  - upstream acked (or we are the head)
+        self.delivered
+            && (self.is_head() || self.sent_ack)
+            && (self.is_tail() || self.got_ack || !self.ack_enabled)
+    }
+
+    fn algo(&self) -> AlgoType {
+        AlgoType::Sequential
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::engine::testutil::Harness;
+    use crate::packet::{AlgoType, CollType};
+
+    fn contributions(p: usize) -> Vec<Vec<i32>> {
+        (0..p).map(|r| vec![r as i32 + 1, 10 * (r as i32 + 1)]).collect()
+    }
+
+    #[test]
+    fn scan_in_order_8() {
+        let mut h = Harness::new(AlgoType::Sequential, 8, CollType::Scan, false);
+        let c = contributions(8);
+        h.run_and_check(&c, &(0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scan_reverse_call_order() {
+        // every rank calls before rank 0 does: all partials flow late.
+        let mut h = Harness::new(AlgoType::Sequential, 8, CollType::Scan, false);
+        let c = contributions(8);
+        h.run_and_check(&c, &(0..8).rev().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scan_two_ranks() {
+        let mut h = Harness::new(AlgoType::Sequential, 2, CollType::Scan, false);
+        h.run_and_check(&contributions(2), &[1, 0]);
+    }
+
+    #[test]
+    fn exscan_8() {
+        let mut h = Harness::new(AlgoType::Sequential, 8, CollType::Exscan, false);
+        h.run_and_check(&contributions(8), &(0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn non_power_of_two_p() {
+        // sequential has no power-of-two requirement
+        let mut h = Harness::new(AlgoType::Sequential, 5, CollType::Scan, false);
+        h.run_and_check(&contributions(5), &[3, 0, 4, 1, 2]);
+    }
+
+    #[test]
+    fn ack_releases_upstream_before_tail_finishes() {
+        // rank 0 must be delivered as soon as rank 1 acks, even if the
+        // tail never gets to run: call only ranks 0 and 1 of 3.
+        let mut h = Harness::new(AlgoType::Sequential, 3, CollType::Scan, false);
+        let c = contributions(3);
+        h.call(0, crate::data::Payload::from_i32(&c[0]));
+        h.drain();
+        assert!(h.results[0].is_none(), "rank 0 must wait for rank 1's ack");
+        h.call(1, crate::data::Payload::from_i32(&c[1]));
+        h.drain();
+        assert!(h.results[0].is_some(), "rank 1's ack releases rank 0");
+        assert!(h.results[1].is_none(), "rank 1 still waits for rank 2");
+    }
+}

@@ -1,0 +1,31 @@
+//! nf-scan: in-network offload of MPI parallel prefix scan (MPI_Scan),
+//! reproducing Arap & Swany, "Offloading MPI Parallel Prefix Scan
+//! (MPI_Scan) with the NetFPGA" (2014) on a simulated NetFPGA cluster.
+//!
+//! Architecture (three layers, python never on the simulation path):
+//!
+//! - **L3 (this crate)** — the paper's system: a deterministic discrete-
+//!   event cluster of hosts + NetFPGA NICs ([`sim`], [`net`], [`fpga`]),
+//!   the software-MPI baseline ([`mpi`]), the offload coordinator
+//!   ([`offload`]) and the OSU-style benchmark harness ([`bench`]).
+//! - **L2/L1 (python/compile)** — JAX graphs calling Pallas kernels for
+//!   the payload-combine datapath, AOT-lowered to HLO text artifacts.
+//! - **Runtime bridge** ([`runtime`]) — loads the artifacts via the PJRT
+//!   CPU client (xla crate) and executes every reduction through them.
+
+pub mod bench;
+pub mod cli;
+pub mod cluster;
+pub mod config;
+pub mod data;
+pub mod fpga;
+pub mod metrics;
+pub mod mpi;
+pub mod net;
+pub mod offload;
+pub mod packet;
+pub mod prop;
+pub mod runtime;
+pub mod sim;
+pub mod trace;
+pub mod util;

@@ -1,0 +1,12 @@
+//! nfscan CLI — the leader entrypoint.
+//!
+//! See `nfscan help` (or `cli::print_help`) for commands.  All the logic
+//! lives in the library; this binary only parses argv and reports errors.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = nfscan::cli::main_with_args(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

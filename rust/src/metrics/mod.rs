@@ -1,0 +1,236 @@
+//! Latency statistics and table output — what Figs. 4-7 are made of.
+
+use crate::util::ns_to_us;
+
+/// Streaming min/avg/max over nanosecond samples.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyStats {
+    count: u64,
+    sum_ns: u128,
+    min_ns: u64,
+    max_ns: u64,
+}
+
+impl LatencyStats {
+    pub fn new() -> Self {
+        LatencyStats { count: 0, sum_ns: 0, min_ns: u64::MAX, max_ns: 0 }
+    }
+
+    pub fn record(&mut self, ns: u64) {
+        self.count += 1;
+        self.sum_ns += ns as u128;
+        self.min_ns = self.min_ns.min(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+        self.min_ns = self.min_ns.min(other.min_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn avg_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+
+    pub fn min_ns(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min_ns
+        }
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    pub fn avg_us(&self) -> f64 {
+        self.avg_ns() / 1_000.0
+    }
+
+    pub fn min_us(&self) -> f64 {
+        ns_to_us(self.min_ns())
+    }
+}
+
+/// All measurements of one simulated experiment.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    /// Host-observed MPI_Scan latency per rank (call -> result).
+    pub host_latency: Vec<LatencyStats>,
+    /// On-NIC elapsed time per rank (offload -> release timestamps,
+    /// Figs. 6/7) — NF runs only.
+    pub nic_elapsed: Vec<LatencyStats>,
+    /// Frames / payload bytes that crossed each NIC's ports.
+    pub frames_tx: Vec<u64>,
+    pub bytes_tx: Vec<u64>,
+    /// Frames forwarded in transit (multi-hop topology mismatch metric).
+    pub frames_forwarded: Vec<u64>,
+    /// Multicast packet generations taken (SSIII-C optimization metric).
+    pub multicasts: u64,
+    /// Total simulated duration.
+    pub sim_ns: u64,
+}
+
+impl RunMetrics {
+    pub fn new(p: usize) -> Self {
+        RunMetrics {
+            host_latency: vec![LatencyStats::new(); p],
+            nic_elapsed: vec![LatencyStats::new(); p],
+            frames_tx: vec![0; p],
+            bytes_tx: vec![0; p],
+            frames_forwarded: vec![0; p],
+            multicasts: 0,
+            sim_ns: 0,
+        }
+    }
+
+    /// Cluster-wide host latency (all ranks' samples pooled — the OSU
+    /// reporting convention the paper uses).
+    pub fn host_overall(&self) -> LatencyStats {
+        let mut all = LatencyStats::new();
+        for s in &self.host_latency {
+            all.merge(s);
+        }
+        all
+    }
+
+    pub fn nic_overall(&self) -> LatencyStats {
+        let mut all = LatencyStats::new();
+        for s in &self.nic_elapsed {
+            all.merge(s);
+        }
+        all
+    }
+
+    pub fn total_frames(&self) -> u64 {
+        self.frames_tx.iter().sum()
+    }
+}
+
+/// Fixed-width table writer for figure harnesses (stdout + CSV string).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = fmt_row(&self.headers);
+        out.push('\n');
+        out.push_str(&"-".repeat(out.len() - 1));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format microseconds for tables.
+pub fn us(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let mut s = LatencyStats::new();
+        assert_eq!(s.min_ns(), 0);
+        s.record(10);
+        s.record(30);
+        s.record(20);
+        assert_eq!(s.count(), 3);
+        assert_eq!(s.min_ns(), 10);
+        assert_eq!(s.max_ns(), 30);
+        assert!((s.avg_ns() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_pools_samples() {
+        let mut a = LatencyStats::new();
+        a.record(5);
+        let mut b = LatencyStats::new();
+        b.record(15);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.min_ns(), 5);
+        assert_eq!(a.max_ns(), 15);
+    }
+
+    #[test]
+    fn run_metrics_overall() {
+        let mut m = RunMetrics::new(2);
+        m.host_latency[0].record(100);
+        m.host_latency[1].record(200);
+        let all = m.host_overall();
+        assert_eq!(all.count(), 2);
+        assert!((all.avg_ns() - 150.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["size", "avg_us"]);
+        t.row(vec!["4B".into(), "12.34".into()]);
+        t.row(vec!["1KB".into(), "456.78".into()]);
+        let s = t.render();
+        assert!(s.contains("size"));
+        assert!(s.lines().count() == 4);
+        assert_eq!(t.to_csv().lines().next().unwrap(), "size,avg_us");
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

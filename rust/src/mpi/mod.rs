@@ -1,0 +1,14 @@
+//! The software-MPI substrate: the baseline the paper compares against.
+//!
+//! The same three scan algorithms as the hardware engines, but run on the
+//! host CPU over the kernel network stack (Open MPI's sequential default,
+//! MPICH's recursive doubling, and the binomial tree).  Costs differ from
+//! the offload path — every message pays the host stack's per-message +
+//! per-byte price, but there are no host<->NIC crossings and "the data
+//! transfer is handled in another layer of the MPI stack", so a rank can
+//! complete as soon as it hands its send off (the paper's explanation for
+//! software-sequential's low average latency).
+
+pub mod sw;
+
+pub use sw::{make_sw, SwAction, SwCtx, SwScanAlgo};

@@ -1,0 +1,100 @@
+//! Software MPI_Allreduce / MPI_Barrier — recursive-doubling butterfly
+//! (MPICH's default for small messages), run on the host.  The baseline
+//! the authors' companion works [6][7] compare their offloads against.
+
+use std::collections::HashMap;
+
+use crate::data::Payload;
+use crate::net::{Rank, SwMsg, SwMsgKind};
+use crate::packet::{AlgoType, CollType};
+use crate::util::{is_pow2, log2};
+
+use super::{SwAction, SwCtx, SwScanAlgo};
+
+pub struct SwRdAllreduce {
+    rank: Rank,
+    logp: u16,
+    called: bool,
+    step: u16,
+    value: Option<Payload>,
+    sent: Vec<bool>,
+    inbox: HashMap<u16, Payload>,
+    completed: bool,
+}
+
+impl SwRdAllreduce {
+    pub fn new(rank: Rank, p: usize, coll: CollType) -> SwRdAllreduce {
+        assert!(is_pow2(p), "recursive doubling needs power-of-two ranks");
+        assert!(matches!(coll, CollType::Allreduce | CollType::Barrier));
+        SwRdAllreduce {
+            rank,
+            logp: log2(p) as u16,
+            called: false,
+            step: 0,
+            value: None,
+            sent: vec![false; log2(p) as usize],
+            inbox: HashMap::new(),
+            completed: false,
+        }
+    }
+
+    fn partner(&self, k: u16) -> Rank {
+        self.rank ^ (1usize << k)
+    }
+
+    fn advance(&mut self, ctx: &mut SwCtx) -> Vec<SwAction> {
+        let mut out = Vec::new();
+        if !self.called {
+            return out;
+        }
+        while self.step < self.logp {
+            let k = self.step;
+            if !self.sent[k as usize] {
+                self.sent[k as usize] = true;
+                out.push(SwAction::Send {
+                    dst: self.partner(k),
+                    kind: SwMsgKind::Data,
+                    step: k,
+                    payload: self.value.clone().unwrap(),
+                });
+            }
+            let Some(incoming) = self.inbox.remove(&k) else { break };
+            let partner = self.partner(k);
+            let value = self.value.take().unwrap();
+            self.value = Some(if partner < self.rank {
+                ctx.combine(&incoming, &value)
+            } else {
+                ctx.combine(&value, &incoming)
+            });
+            self.step = k + 1;
+        }
+        if self.step == self.logp && !self.completed {
+            self.completed = true;
+            out.push(SwAction::Complete { result: self.value.clone().unwrap() });
+        }
+        out
+    }
+}
+
+impl SwScanAlgo for SwRdAllreduce {
+    fn on_call(&mut self, ctx: &mut SwCtx, own: &Payload) -> Vec<SwAction> {
+        assert!(!self.called, "duplicate call");
+        self.called = true;
+        self.value = Some(own.clone());
+        self.advance(ctx)
+    }
+
+    fn on_msg(&mut self, ctx: &mut SwCtx, msg: &SwMsg) -> Vec<SwAction> {
+        assert_eq!(msg.src, self.partner(msg.step), "allreduce data from non-partner");
+        assert!(self.inbox.insert(msg.step, msg.payload.clone()).is_none());
+        self.advance(ctx)
+    }
+
+    fn done(&self) -> bool {
+        self.completed
+    }
+
+    fn algo(&self) -> AlgoType {
+        AlgoType::RecursiveDoubling
+    }
+}

@@ -1,0 +1,180 @@
+//! Software binomial-tree scan — the up/down-phase algorithm of the
+//! paper's SSII-B3, run on the host.  Same mathematics as
+//! `fpga::binomial`; the paper measured it as the worst software variant
+//! (two tree traversals of host-stack messages) and omitted it from the
+//! software figures.
+
+use crate::data::Payload;
+use crate::net::{Rank, SwMsg, SwMsgKind};
+use crate::packet::{AlgoType, CollType};
+use crate::util::is_pow2;
+
+use super::{SwAction, SwCtx, SwScanAlgo};
+
+pub struct SwBinomial {
+    rank: Rank,
+    p: usize,
+    coll: CollType,
+    t: u32,
+    called: bool,
+    own: Option<Payload>,
+    child_bufs: Vec<Option<Payload>>,
+    children_seen: usize,
+    children_fold: Option<Payload>,
+    block: Option<Payload>,
+    up_sent: bool,
+    down_in: Option<Payload>,
+    prefix: Option<Payload>,
+    downs_sent: bool,
+    completed: bool,
+}
+
+impl SwBinomial {
+    pub fn new(rank: Rank, p: usize, coll: CollType) -> SwBinomial {
+        assert!(is_pow2(p), "binomial tree needs power-of-two ranks");
+        let t = (rank as u64).trailing_ones();
+        SwBinomial {
+            rank,
+            p,
+            coll,
+            t,
+            called: false,
+            own: None,
+            child_bufs: vec![None; t as usize],
+            children_seen: 0,
+            children_fold: None,
+            block: None,
+            up_sent: false,
+            down_in: None,
+            prefix: None,
+            downs_sent: false,
+            completed: false,
+        }
+    }
+
+    fn is_root(&self) -> bool {
+        self.rank == self.p - 1
+    }
+
+    fn base_is_zero(&self) -> bool {
+        self.rank + 1 == (1usize << self.t)
+    }
+
+    fn try_complete_up(&mut self, ctx: &mut SwCtx) -> Vec<SwAction> {
+        let mut out = Vec::new();
+        if self.block.is_some() || !self.called || self.children_seen != self.child_bufs.len() {
+            return out;
+        }
+        let mut fold: Option<Payload> = None;
+        for k in (0..self.t as usize).rev() {
+            let c = self.child_bufs[k].clone().unwrap();
+            fold = Some(match fold {
+                Some(f) => ctx.combine(&f, &c),
+                None => c,
+            });
+        }
+        self.children_fold = fold.clone();
+        let own = self.own.clone().unwrap();
+        let block = match fold {
+            Some(f) => ctx.combine(&f, &own),
+            None => own,
+        };
+        self.block = Some(block.clone());
+        if !self.is_root() && !self.up_sent {
+            self.up_sent = true;
+            out.push(SwAction::Send {
+                dst: self.rank + (1usize << self.t),
+                kind: SwMsgKind::Up,
+                step: self.t as u16,
+                payload: block,
+            });
+        }
+        if self.base_is_zero() {
+            self.prefix = Some(self.block.clone().unwrap());
+            out.extend(self.finish(ctx));
+        } else if self.down_in.is_some() {
+            out.extend(self.absorb_down(ctx));
+        }
+        out
+    }
+
+    fn absorb_down(&mut self, ctx: &mut SwCtx) -> Vec<SwAction> {
+        if self.prefix.is_some() || self.block.is_none() || self.down_in.is_none() {
+            return Vec::new();
+        }
+        let down = self.down_in.clone().unwrap();
+        let block = self.block.clone().unwrap();
+        self.prefix = Some(ctx.combine(&down, &block));
+        self.finish(ctx)
+    }
+
+    fn finish(&mut self, ctx: &mut SwCtx) -> Vec<SwAction> {
+        let mut out = Vec::new();
+        let prefix = self.prefix.clone().unwrap();
+        if !self.downs_sent {
+            self.downs_sent = true;
+            for k in (1..=self.t as u16).rev() {
+                let target = self.rank + (1usize << (k - 1));
+                if target < self.p {
+                    out.push(SwAction::Send {
+                        dst: target,
+                        kind: SwMsgKind::Down,
+                        step: k,
+                        payload: prefix.clone(),
+                    });
+                }
+            }
+        }
+        if !self.completed {
+            self.completed = true;
+            let result = if self.coll.inclusive() {
+                prefix
+            } else {
+                match (&self.down_in, &self.children_fold) {
+                    (Some(d), Some(cf)) => ctx.combine(d, cf),
+                    (Some(d), None) => d.clone(),
+                    (None, Some(cf)) => cf.clone(),
+                    (None, None) => ctx.identity(self.own.as_ref().unwrap()),
+                }
+            };
+            out.push(SwAction::Complete { result });
+        }
+        out
+    }
+}
+
+impl SwScanAlgo for SwBinomial {
+    fn on_call(&mut self, ctx: &mut SwCtx, own: &Payload) -> Vec<SwAction> {
+        assert!(!self.called, "duplicate call");
+        self.called = true;
+        self.own = Some(own.clone());
+        self.try_complete_up(ctx)
+    }
+
+    fn on_msg(&mut self, ctx: &mut SwCtx, msg: &SwMsg) -> Vec<SwAction> {
+        match msg.kind {
+            SwMsgKind::Up | SwMsgKind::Data => {
+                let k = msg.step as usize;
+                assert!(k < self.child_bufs.len(), "not my child");
+                assert_eq!(msg.src + (1 << k), self.rank, "child/slot mismatch");
+                assert!(self.child_bufs[k].is_none(), "child buffer overrun");
+                self.child_bufs[k] = Some(msg.payload.clone());
+                self.children_seen += 1;
+                self.try_complete_up(ctx)
+            }
+            SwMsgKind::Down => {
+                assert!(self.down_in.is_none(), "duplicate down prefix");
+                self.down_in = Some(msg.payload.clone());
+                self.absorb_down(ctx)
+            }
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.completed
+    }
+
+    fn algo(&self) -> AlgoType {
+        AlgoType::BinomialTree
+    }
+}

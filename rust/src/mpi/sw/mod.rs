@@ -1,0 +1,255 @@
+//! Host-side scan algorithm state machines.
+//!
+//! Each instance runs one collective invocation (one epoch) on one rank,
+//! mirroring `fpga::engine` — but actions hand messages to the *host
+//! stack* and completion means the MPI_Scan call returns.  Messages that
+//! arrive before the local call are buffered in the unexpected-message
+//! queue (software has host RAM; no ACK machinery needed — that asymmetry
+//! is exactly what the paper's SSIII-B is about).
+
+pub mod allreduce;
+pub mod binomial;
+pub mod rd;
+pub mod seq;
+
+use crate::config::CostModel;
+use crate::data::{Op, Payload};
+use crate::net::{Rank, SwMsg, SwMsgKind};
+use crate::packet::{AlgoType, CollType};
+use crate::runtime::Compute;
+
+/// What a host-side machine asks the MPI layer to do.
+#[derive(Debug)]
+pub enum SwAction {
+    /// Hand a message to the stack for `dst` (non-blocking hand-off).
+    Send { dst: Rank, kind: SwMsgKind, step: u16, payload: Payload },
+    /// The MPI_Scan call returns with `result`.
+    Complete { result: Payload },
+}
+
+/// Activation context: compute access + host-CPU time accounting.
+pub struct SwCtx<'a> {
+    pub rank: Rank,
+    pub p: usize,
+    pub inclusive: bool,
+    pub op: Op,
+    pub compute: &'a dyn Compute,
+    pub cost: &'a CostModel,
+    /// Host CPU time consumed by this activation (reduction work).
+    pub elapsed_ns: u64,
+}
+
+impl SwCtx<'_> {
+    /// Elementwise combine on the host CPU.
+    pub fn combine(&mut self, a: &Payload, b: &Payload) -> Payload {
+        self.elapsed_ns += self.cost.host_combine_ns(a.byte_len());
+        self.compute.combine(a, b, self.op).expect("sw combine")
+    }
+
+    pub fn identity(&self, like: &Payload) -> Payload {
+        Payload::identity(like.dtype(), self.op, like.len())
+    }
+}
+
+/// One software collective invocation on one rank.
+pub trait SwScanAlgo {
+    fn on_call(&mut self, ctx: &mut SwCtx, own: &Payload) -> Vec<SwAction>;
+    fn on_msg(&mut self, ctx: &mut SwCtx, msg: &SwMsg) -> Vec<SwAction>;
+    fn done(&self) -> bool;
+    fn algo(&self) -> AlgoType;
+}
+
+pub fn make_sw(algo: AlgoType, rank: Rank, p: usize, coll: CollType) -> Box<dyn SwScanAlgo> {
+    match coll {
+        CollType::Scan | CollType::Exscan => match algo {
+            AlgoType::Sequential => Box::new(seq::SwSeq::new(rank, p, coll)),
+            AlgoType::RecursiveDoubling => Box::new(rd::SwRd::new(rank, p, coll)),
+            AlgoType::BinomialTree => Box::new(binomial::SwBinomial::new(rank, p, coll)),
+        },
+        CollType::Allreduce | CollType::Barrier => {
+            // software baseline: MPICH's recursive doubling regardless of
+            // the requested tree shape (matches the comparison baseline
+            // of the companion works [6][7])
+            Box::new(allreduce::SwRdAllreduce::new(rank, p, coll))
+        }
+        CollType::Reduce => panic!("software MPI_Reduce not implemented"),
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    //! In-memory harness mirroring `fpga::engine::testutil`.
+
+    use std::collections::VecDeque;
+
+    use super::*;
+    use crate::runtime::NativeEngine;
+
+    pub struct SwHarness {
+        pub p: usize,
+        pub coll: CollType,
+        pub op: Op,
+        pub algos: Vec<Box<dyn SwScanAlgo>>,
+        pub results: Vec<Option<Payload>>,
+        queue: VecDeque<(Rank, SwMsg)>,
+        compute: NativeEngine,
+        cost: CostModel,
+    }
+
+    impl SwHarness {
+        pub fn new(algo: AlgoType, p: usize, coll: CollType) -> SwHarness {
+            SwHarness {
+                p,
+                coll,
+                op: Op::Sum,
+                algos: (0..p).map(|r| make_sw(algo, r, p, coll)).collect(),
+                results: vec![None; p],
+                queue: VecDeque::new(),
+                compute: NativeEngine::new(),
+                cost: CostModel::default(),
+            }
+        }
+
+        fn enqueue(&mut self, from: Rank, actions: Vec<SwAction>) {
+            for a in actions {
+                match a {
+                    SwAction::Send { dst, kind, step, payload } => {
+                        let msg = SwMsg {
+                            src: from,
+                            algo: self.algos[from].algo().wire_code(),
+                            kind,
+                            epoch: 0,
+                            step,
+                            count: payload.len() as u32,
+                            frag_idx: 0,
+                            frag_total: 1,
+                            payload,
+                        };
+                        self.queue.push_back((dst, msg));
+                    }
+                    SwAction::Complete { result } => {
+                        assert!(self.results[from].is_none(), "double completion at {from}");
+                        self.results[from] = Some(result);
+                    }
+                }
+            }
+        }
+
+        pub fn call(&mut self, rank: Rank, own: Payload) {
+            // field-disjoint borrows: algos (mut) + compute/cost (ref)
+            let mut ctx = SwCtx {
+                rank,
+                p: self.p,
+                inclusive: self.coll.inclusive(),
+                op: self.op,
+                compute: &self.compute,
+                cost: &self.cost,
+                elapsed_ns: 0,
+            };
+            let actions = self.algos[rank].on_call(&mut ctx, &own);
+            self.enqueue(rank, actions);
+        }
+
+        pub fn drain(&mut self) {
+            while let Some((dst, msg)) = self.queue.pop_front() {
+                let mut ctx = SwCtx {
+                    rank: dst,
+                    p: self.p,
+                    inclusive: self.coll.inclusive(),
+                    op: self.op,
+                    compute: &self.compute,
+                    cost: &self.cost,
+                    elapsed_ns: 0,
+                };
+                let actions = self.algos[dst].on_msg(&mut ctx, &msg);
+                self.enqueue(dst, actions);
+            }
+        }
+
+        pub fn run_and_check(&mut self, contributions: &[Vec<i32>], order: &[Rank]) {
+            for &r in order {
+                self.call(r, Payload::from_i32(&contributions[r]));
+                self.drain();
+            }
+            let payloads: Vec<Payload> =
+                contributions.iter().map(|c| Payload::from_i32(c)).collect();
+            for r in 0..self.p {
+                let want = match self.coll {
+                    CollType::Scan | CollType::Exscan => crate::runtime::engine::oracle_prefix(
+                        &self.compute,
+                        &payloads,
+                        self.op,
+                        self.coll.inclusive(),
+                        r,
+                    )
+                    .unwrap(),
+                    CollType::Allreduce | CollType::Barrier => {
+                        crate::runtime::engine::oracle_prefix(
+                            &self.compute,
+                            &payloads,
+                            self.op,
+                            true,
+                            self.p - 1,
+                        )
+                        .unwrap()
+                    }
+                    CollType::Reduce => unreachable!(),
+                };
+                let got =
+                    self.results[r].as_ref().unwrap_or_else(|| panic!("rank {r} no result"));
+                assert_eq!(
+                    got.to_i32(),
+                    want.to_i32(),
+                    "rank {r} wrong sw {:?} result",
+                    self.coll
+                );
+                assert!(self.algos[r].done(), "rank {r} sw algo not done");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::SwHarness;
+    use super::*;
+
+    fn contributions(p: usize) -> Vec<Vec<i32>> {
+        (0..p).map(|r| vec![r as i32 + 3, 7 - r as i32]).collect()
+    }
+
+    #[test]
+    fn all_algos_all_orders() {
+        for algo in AlgoType::ALL {
+            for p in [2usize, 4, 8, 16] {
+                for coll in [CollType::Scan, CollType::Exscan] {
+                    let orders: Vec<Vec<usize>> = vec![
+                        (0..p).collect(),
+                        (0..p).rev().collect(),
+                        (0..p).step_by(2).chain((1..p).step_by(2)).collect(),
+                    ];
+                    for order in orders {
+                        let mut h = SwHarness::new(algo, p, coll);
+                        h.run_and_check(&contributions(p), &order);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sequential_odd_p() {
+        let mut h = SwHarness::new(AlgoType::Sequential, 7, CollType::Scan);
+        h.run_and_check(&contributions(7), &[6, 5, 4, 3, 2, 1, 0]);
+    }
+
+    #[test]
+    fn allreduce_and_barrier_sw() {
+        for p in [2usize, 4, 8, 16] {
+            let mut h = SwHarness::new(AlgoType::RecursiveDoubling, p, CollType::Allreduce);
+            h.run_and_check(&contributions(p), &(0..p).rev().collect::<Vec<_>>());
+            let mut h = SwHarness::new(AlgoType::RecursiveDoubling, p, CollType::Barrier);
+            h.run_and_check(&vec![vec![]; p], &(0..p).collect::<Vec<_>>());
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Software recursive-doubling scan — MPICH's default algorithm.
+//!
+//! Identical mathematics to `fpga::rd`, minus the hardware-only pieces
+//! (no multicast engine, no inverse-subtract: the host simply keeps both
+//! buffers).  The lockstep pairwise exchanges give it the implicit
+//! synchronization the paper contrasts with the sequential algorithm.
+
+use std::collections::HashMap;
+
+use crate::data::Payload;
+use crate::net::{Rank, SwMsg, SwMsgKind};
+use crate::packet::{AlgoType, CollType};
+use crate::util::{is_pow2, log2};
+
+use super::{SwAction, SwCtx, SwScanAlgo};
+
+pub struct SwRd {
+    rank: Rank,
+    logp: u16,
+    coll: CollType,
+    called: bool,
+    step: u16,
+    partial: Option<Payload>,
+    recv_inc: Option<Payload>,
+    recv_exc: Option<Payload>,
+    sent: Vec<bool>,
+    inbox: HashMap<u16, Payload>,
+    completed: bool,
+}
+
+impl SwRd {
+    pub fn new(rank: Rank, p: usize, coll: CollType) -> SwRd {
+        assert!(is_pow2(p), "recursive doubling needs power-of-two ranks");
+        let logp = log2(p) as u16;
+        SwRd {
+            rank,
+            logp,
+            coll,
+            called: false,
+            step: 0,
+            partial: None,
+            recv_inc: None,
+            recv_exc: None,
+            sent: vec![false; logp as usize],
+            inbox: HashMap::new(),
+            completed: false,
+        }
+    }
+
+    fn partner(&self, k: u16) -> Rank {
+        self.rank ^ (1usize << k)
+    }
+
+    fn advance(&mut self, ctx: &mut SwCtx) -> Vec<SwAction> {
+        let mut out = Vec::new();
+        if !self.called {
+            return out;
+        }
+        while self.step < self.logp {
+            let k = self.step;
+            if !self.sent[k as usize] {
+                self.sent[k as usize] = true;
+                out.push(SwAction::Send {
+                    dst: self.partner(k),
+                    kind: SwMsgKind::Data,
+                    step: k,
+                    payload: self.partial.clone().unwrap(),
+                });
+            }
+            let Some(incoming) = self.inbox.remove(&k) else { break };
+            let partner = self.partner(k);
+            let partial = self.partial.take().unwrap();
+            if partner < self.rank {
+                let inc = self.recv_inc.take().unwrap();
+                self.recv_inc = Some(ctx.combine(&incoming, &inc));
+                self.recv_exc = Some(match self.recv_exc.take() {
+                    Some(exc) => ctx.combine(&incoming, &exc),
+                    None => incoming.clone(),
+                });
+                self.partial = Some(ctx.combine(&incoming, &partial));
+            } else {
+                self.partial = Some(ctx.combine(&partial, &incoming));
+            }
+            self.step = k + 1;
+        }
+        if self.step == self.logp && !self.completed {
+            self.completed = true;
+            let result = if self.coll.inclusive() {
+                self.recv_inc.clone().unwrap()
+            } else {
+                match &self.recv_exc {
+                    Some(exc) => exc.clone(),
+                    None => ctx.identity(self.recv_inc.as_ref().unwrap()),
+                }
+            };
+            out.push(SwAction::Complete { result });
+        }
+        out
+    }
+}
+
+impl SwScanAlgo for SwRd {
+    fn on_call(&mut self, ctx: &mut SwCtx, own: &Payload) -> Vec<SwAction> {
+        assert!(!self.called, "duplicate call");
+        self.called = true;
+        self.partial = Some(own.clone());
+        self.recv_inc = Some(own.clone());
+        self.advance(ctx)
+    }
+
+    fn on_msg(&mut self, ctx: &mut SwCtx, msg: &SwMsg) -> Vec<SwAction> {
+        assert_eq!(msg.src, self.partner(msg.step), "rd data from non-partner");
+        assert!(self.inbox.insert(msg.step, msg.payload.clone()).is_none());
+        self.advance(ctx)
+    }
+
+    fn done(&self) -> bool {
+        self.completed
+    }
+
+    fn algo(&self) -> AlgoType {
+        AlgoType::RecursiveDoubling
+    }
+}

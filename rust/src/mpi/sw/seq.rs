@@ -1,0 +1,89 @@
+//! Software sequential scan — Open MPI's default algorithm.
+//!
+//! No ACKs and no return gating: "once a process produces its partial
+//! sum, it simply returns and continues its execution ... the data
+//! transfer is handled in another layer of the MPI stack" — which is why
+//! this algorithm posts the lowest *average* latency in the paper's
+//! Fig. 4 despite O(p) steps.
+
+use crate::data::Payload;
+use crate::net::{Rank, SwMsg, SwMsgKind};
+use crate::packet::{AlgoType, CollType};
+
+use super::{SwAction, SwCtx, SwScanAlgo};
+
+pub struct SwSeq {
+    rank: Rank,
+    p: usize,
+    coll: CollType,
+    called: bool,
+    own: Option<Payload>,
+    /// Unexpected-message queue slot for the upstream partial.
+    upstream: Option<Payload>,
+    completed: bool,
+}
+
+impl SwSeq {
+    pub fn new(rank: Rank, p: usize, coll: CollType) -> SwSeq {
+        SwSeq { rank, p, coll, called: false, own: None, upstream: None, completed: false }
+    }
+
+    fn proceed(&mut self, ctx: &mut SwCtx) -> Vec<SwAction> {
+        let mut out = Vec::new();
+        if !self.called || self.completed {
+            return out;
+        }
+        let own = self.own.clone().unwrap();
+        if self.rank == 0 {
+            self.completed = true;
+            if self.p > 1 {
+                out.push(SwAction::Send {
+                    dst: 1,
+                    kind: SwMsgKind::Data,
+                    step: 0,
+                    payload: own.clone(),
+                });
+            }
+            let result = if self.coll.inclusive() { own } else { ctx.identity(&own) };
+            out.push(SwAction::Complete { result });
+        } else if let Some(upstream) = self.upstream.clone() {
+            self.completed = true;
+            let prefix = ctx.combine(&upstream, &own);
+            if self.rank + 1 < self.p {
+                out.push(SwAction::Send {
+                    dst: self.rank + 1,
+                    kind: SwMsgKind::Data,
+                    step: 0,
+                    payload: prefix.clone(),
+                });
+            }
+            let result = if self.coll.inclusive() { prefix } else { upstream };
+            out.push(SwAction::Complete { result });
+        }
+        out
+    }
+}
+
+impl SwScanAlgo for SwSeq {
+    fn on_call(&mut self, ctx: &mut SwCtx, own: &Payload) -> Vec<SwAction> {
+        assert!(!self.called, "duplicate call");
+        self.called = true;
+        self.own = Some(own.clone());
+        self.proceed(ctx)
+    }
+
+    fn on_msg(&mut self, ctx: &mut SwCtx, msg: &SwMsg) -> Vec<SwAction> {
+        assert_eq!(msg.src, self.rank - 1, "sequential data must come from j-1");
+        assert!(self.upstream.is_none(), "duplicate upstream partial");
+        self.upstream = Some(msg.payload.clone());
+        self.proceed(ctx)
+    }
+
+    fn done(&self) -> bool {
+        self.completed
+    }
+
+    fn algo(&self) -> AlgoType {
+        AlgoType::Sequential
+    }
+}

@@ -1,0 +1,339 @@
+//! Frames: what actually travels on a cable, plus MTU fragmentation.
+//!
+//! The simulator passes structured frames between NICs (parsing on every
+//! hop would only burn host CPU), but every frame knows its exact on-wire
+//! byte count — serialization time is charged from it — and can be
+//! round-tripped through real bytes (`serialize`/`parse`), which the
+//! packet-format tests and the failure-injection tests exercise.
+
+use crate::data::{Dtype, Payload};
+use crate::packet::{CollPacket, COLL_HDR_LEN};
+
+use super::headers::{
+    EthHeader, Ipv4Header, UdpHeader, ETH_HDR_LEN, IPV4_HDR_LEN, UDP_HDR_LEN,
+};
+use super::{Rank, MTU, NFSCAN_UDP_PORT};
+
+/// Encoded size of the software-MPI message header inside the UDP body.
+pub const SW_HDR_LEN: usize = 24;
+
+/// Max payload-data bytes per frame: MTU minus IP/UDP/collective headers,
+/// rounded down to a multiple of 8 so f64 elements never straddle frames.
+/// 1500 - 20 - 8 - 34 = 1438 -> 1432.
+pub const CHUNK_BYTES: usize = (MTU - IPV4_HDR_LEN - UDP_HDR_LEN - COLL_HDR_LEN) / 8 * 8;
+
+/// A software-MPI point-to-point message fragment (the baseline path:
+/// Open MPI / MPICH over the host stack).
+#[derive(Clone, Debug)]
+pub struct SwMsg {
+    pub src: Rank,
+    /// Which software algorithm this message belongs to (wire code of
+    /// `packet::AlgoType`).
+    pub algo: u16,
+    pub kind: SwMsgKind,
+    /// Iteration number (back-to-back MPI_Scan calls pipeline; the
+    /// receiver must not mix epochs).
+    pub epoch: u32,
+    /// Algorithm step (recursive-doubling stage / tree level).
+    pub step: u16,
+    /// Total element count of the whole message.
+    pub count: u32,
+    pub frag_idx: u16,
+    pub frag_total: u16,
+    pub payload: Payload,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SwMsgKind {
+    /// Sequential chain / recursive-doubling exchange data.
+    Data,
+    /// Binomial up-phase partial.
+    Up,
+    /// Binomial down-phase prefix.
+    Down,
+}
+
+impl SwMsgKind {
+    fn wire_code(self) -> u16 {
+        match self {
+            SwMsgKind::Data => 1,
+            SwMsgKind::Up => 2,
+            SwMsgKind::Down => 3,
+        }
+    }
+
+    fn from_wire(v: u16) -> Option<Self> {
+        match v {
+            1 => Some(SwMsgKind::Data),
+            2 => Some(SwMsgKind::Up),
+            3 => Some(SwMsgKind::Down),
+            _ => None,
+        }
+    }
+}
+
+impl SwMsg {
+    pub fn encoded_len(&self) -> usize {
+        SW_HDR_LEN + self.payload.byte_len()
+    }
+
+    pub fn emit(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(b"SW"); // magic
+        out.extend_from_slice(&self.algo.to_be_bytes());
+        out.extend_from_slice(&self.kind.wire_code().to_be_bytes());
+        out.extend_from_slice(&self.step.to_be_bytes());
+        out.extend_from_slice(&(self.src as u16).to_be_bytes());
+        out.extend_from_slice(&self.payload.dtype().wire_code().to_be_bytes());
+        out.extend_from_slice(&self.epoch.to_be_bytes());
+        out.extend_from_slice(&self.count.to_be_bytes());
+        out.extend_from_slice(&self.frag_idx.to_be_bytes());
+        out.extend_from_slice(&self.frag_total.to_be_bytes());
+        out.extend_from_slice(self.payload.bytes());
+    }
+
+    pub fn parse(b: &[u8]) -> Option<SwMsg> {
+        if b.len() < SW_HDR_LEN || &b[0..2] != b"SW" {
+            return None;
+        }
+        let u16at = |i: usize| u16::from_be_bytes([b[i], b[i + 1]]);
+        let u32at = |i: usize| u32::from_be_bytes([b[i], b[i + 1], b[i + 2], b[i + 3]]);
+        let dtype = Dtype::from_wire(u16at(10))?;
+        let body = &b[SW_HDR_LEN..];
+        if body.len() % dtype.size() != 0 {
+            return None;
+        }
+        Some(SwMsg {
+            src: u16at(8) as Rank,
+            algo: u16at(2),
+            kind: SwMsgKind::from_wire(u16at(4))?,
+            epoch: u32at(12),
+            step: u16at(6),
+            count: u32at(16),
+            frag_idx: u16at(20),
+            frag_total: u16at(22),
+            payload: Payload::from_bytes(dtype, body.to_vec()),
+        })
+    }
+}
+
+/// The UDP body of a frame.
+#[derive(Clone, Debug)]
+pub enum FrameBody {
+    /// NetFPGA collective-offload traffic (Fig. 1 packets).
+    Coll(CollPacket),
+    /// Software-MPI baseline traffic.
+    Sw(SwMsg),
+}
+
+impl FrameBody {
+    pub fn encoded_len(&self) -> usize {
+        match self {
+            FrameBody::Coll(p) => p.encoded_len(),
+            FrameBody::Sw(m) => m.encoded_len(),
+        }
+    }
+}
+
+/// One Ethernet frame in flight.
+#[derive(Clone, Debug)]
+pub struct Frame {
+    pub src: Rank,
+    pub dst: Rank,
+    pub body: FrameBody,
+}
+
+impl Frame {
+    /// Exact bytes this frame occupies from MAC header through UDP body
+    /// (excludes preamble/FCS/IFG — see `net::WIRE_OVERHEAD_BYTES`).
+    pub fn wire_bytes(&self) -> usize {
+        // minimum Ethernet payload is 46 bytes (frames are padded on wire)
+        let l3 = IPV4_HDR_LEN + UDP_HDR_LEN + self.body.encoded_len();
+        ETH_HDR_LEN + l3.max(46)
+    }
+
+    /// Full byte serialization (Ethernet + IPv4 + UDP + body) — the frame
+    /// exactly as it would appear on the cable, checksums included.
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut body = Vec::with_capacity(self.body.encoded_len());
+        match &self.body {
+            FrameBody::Coll(p) => p.emit(&mut body),
+            FrameBody::Sw(m) => m.emit(&mut body),
+        }
+        let mut out = Vec::with_capacity(self.wire_bytes());
+        EthHeader::new(self.src, self.dst).emit(&mut out);
+        Ipv4Header::new(self.src, self.dst, UDP_HDR_LEN + body.len()).emit(&mut out);
+        UdpHeader::new(NFSCAN_UDP_PORT, NFSCAN_UDP_PORT, body.len()).emit(&mut out, &body);
+        out
+    }
+
+    /// Parse wire bytes back into a frame (inverse of `serialize`).
+    pub fn parse(bytes: &[u8]) -> Option<Frame> {
+        let (eth, rest) = EthHeader::parse(bytes)?;
+        let (ip, rest) = Ipv4Header::parse(rest)?;
+        let (udp, _ck, rest) = UdpHeader::parse(rest)?;
+        let body_len = (udp.len as usize).checked_sub(UDP_HDR_LEN)?;
+        let body_bytes = rest.get(..body_len)?;
+        let src = eth.src.to_rank()?;
+        let dst = eth.dst.to_rank()?;
+        if super::headers::rank_of_ip(ip.src)? != src || super::headers::rank_of_ip(ip.dst)? != dst
+        {
+            return None; // L2/L3 address mismatch
+        }
+        let body = if let Some(m) = SwMsg::parse(body_bytes) {
+            FrameBody::Sw(m)
+        } else {
+            FrameBody::Coll(CollPacket::parse(body_bytes)?)
+        };
+        Some(Frame { src, dst, body })
+    }
+}
+
+/// Split a payload into MTU-sized element chunks.  Returns
+/// (frag_idx, frag_total, elem_offset, chunk) per fragment.
+pub fn fragment(payload: &Payload) -> Vec<(u16, u16, usize, Payload)> {
+    let es = payload.dtype().size();
+    let elems_per_chunk = CHUNK_BYTES / es;
+    let n = payload.len();
+    if n == 0 {
+        return vec![(0, 1, 0, payload.clone())];
+    }
+    let total = n.div_ceil(elems_per_chunk);
+    (0..total)
+        .map(|i| {
+            let start = i * elems_per_chunk;
+            let len = elems_per_chunk.min(n - start);
+            (i as u16, total as u16, start, payload.slice(start, len))
+        })
+        .collect()
+}
+
+/// Reassemble fragments (must be in-order and complete).
+pub fn reassemble(chunks: &[Payload]) -> Payload {
+    Payload::concat(chunks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Dtype, Op};
+    use crate::packet::{AlgoType, CollType, MsgType, NodeType};
+
+    fn sw_msg(n: usize) -> SwMsg {
+        SwMsg {
+            src: 2,
+            algo: AlgoType::Sequential.wire_code(),
+            kind: SwMsgKind::Data,
+            epoch: 9,
+            step: 0,
+            count: n as u32,
+            frag_idx: 0,
+            frag_total: 1,
+            payload: Payload::from_i32(&(0..n as i32).collect::<Vec<_>>()),
+        }
+    }
+
+    #[test]
+    fn chunk_bytes_is_mtu_safe_and_aligned() {
+        assert!(CHUNK_BYTES % 8 == 0);
+        assert!(IPV4_HDR_LEN + UDP_HDR_LEN + COLL_HDR_LEN + CHUNK_BYTES <= MTU);
+    }
+
+    #[test]
+    fn sw_roundtrip() {
+        let m = sw_msg(10);
+        let mut buf = Vec::new();
+        m.emit(&mut buf);
+        let back = SwMsg::parse(&buf).unwrap();
+        assert_eq!(back.src, m.src);
+        assert_eq!(back.epoch, m.epoch);
+        assert_eq!(back.payload, m.payload);
+    }
+
+    #[test]
+    fn frame_serialize_parse_roundtrip_sw() {
+        let f = Frame { src: 2, dst: 5, body: FrameBody::Sw(sw_msg(3)) };
+        let bytes = f.serialize();
+        let back = Frame::parse(&bytes).unwrap();
+        assert_eq!(back.src, 2);
+        assert_eq!(back.dst, 5);
+        match back.body {
+            FrameBody::Sw(m) => assert_eq!(m.payload.to_i32(), vec![0, 1, 2]),
+            _ => panic!("wrong body"),
+        }
+    }
+
+    #[test]
+    fn frame_serialize_parse_roundtrip_coll() {
+        let pkt = CollPacket {
+            comm_id: 7,
+            comm_size: 8,
+            coll_type: CollType::Scan,
+            algo_type: AlgoType::BinomialTree,
+            node_type: NodeType::Leaf,
+            msg_type: MsgType::Data,
+            step: 0,
+            rank: 1,
+            root: 0,
+            operation: Op::Sum,
+            data_type: Dtype::F64,
+            count: 2,
+            frag_idx: 0,
+            frag_total: 1,
+            tag: 0,
+            payload: Payload::from_f64(&[1.5, 2.5]),
+        };
+        let f = Frame { src: 1, dst: 3, body: FrameBody::Coll(pkt) };
+        let back = Frame::parse(&f.serialize()).unwrap();
+        match back.body {
+            FrameBody::Coll(p) => assert_eq!(p.payload.to_f64(), vec![1.5, 2.5]),
+            _ => panic!("wrong body"),
+        }
+    }
+
+    #[test]
+    fn min_frame_padding() {
+        // 4-byte scan payload still occupies a minimum-size frame
+        let f = Frame { src: 0, dst: 1, body: FrameBody::Sw(sw_msg(1)) };
+        assert_eq!(f.wire_bytes(), ETH_HDR_LEN + 46.max(IPV4_HDR_LEN + UDP_HDR_LEN + SW_HDR_LEN + 4));
+    }
+
+    #[test]
+    fn fragment_reassemble_roundtrip() {
+        let n = 3 * (CHUNK_BYTES / 4) + 17; // 3 full chunks + tail (i32)
+        let p = Payload::from_i32(&(0..n as i32).collect::<Vec<_>>());
+        let frags = fragment(&p);
+        assert_eq!(frags.len(), 4);
+        assert_eq!(frags[0].1, 4);
+        assert_eq!(frags[3].3.len(), 17);
+        // element offsets ascend by chunk size
+        assert_eq!(frags[1].2, CHUNK_BYTES / 4);
+        let whole = reassemble(&frags.iter().map(|(_, _, _, c)| c.clone()).collect::<Vec<_>>());
+        assert_eq!(whole, p);
+    }
+
+    #[test]
+    fn fragment_empty_payload() {
+        let p = Payload::from_i32(&[]);
+        let frags = fragment(&p);
+        assert_eq!(frags.len(), 1);
+        assert_eq!(frags[0].1, 1);
+    }
+
+    #[test]
+    fn fragment_f64_never_straddles() {
+        let n = CHUNK_BYTES / 8 + 1;
+        let p = Payload::from_f64(&vec![1.0; n]);
+        let frags = fragment(&p);
+        assert_eq!(frags.len(), 2);
+        assert_eq!(frags[0].3.len(), CHUNK_BYTES / 8);
+        assert_eq!(frags[1].3.len(), 1);
+    }
+
+    #[test]
+    fn corrupted_frame_rejected() {
+        let f = Frame { src: 2, dst: 5, body: FrameBody::Sw(sw_msg(3)) };
+        let mut bytes = f.serialize();
+        bytes[20] ^= 0xFF; // corrupt IP header
+        assert!(Frame::parse(&bytes).is_none());
+    }
+}

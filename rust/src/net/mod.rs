@@ -1,0 +1,37 @@
+//! Simulated 1 GbE network substrate.
+//!
+//! The paper's testbed wires NetFPGA ports directly to each other; this
+//! module provides the wire-level pieces: real Ethernet/IPv4/UDP header
+//! layouts ([`headers`]), frames and MTU fragmentation ([`frame`]), the
+//! physical port graph ([`topology`]) and BFS routing tables ([`routing`])
+//! used by the NetFPGA's reference-router forwarding path.
+
+pub mod frame;
+pub mod headers;
+pub mod routing;
+pub mod topology;
+
+pub use frame::{Frame, FrameBody, SwMsg, SwMsgKind, CHUNK_BYTES};
+pub use headers::{EthHeader, Ipv4Header, MacAddr, UdpHeader};
+pub use routing::RouteTable;
+pub use topology::Topology;
+
+/// MPI rank / node index.  Hosts and their NetFPGA share the index.
+pub type Rank = usize;
+
+/// NetFPGA port number (first-gen card: 4 x 1 GbE).
+pub type PortNo = u8;
+
+/// Ports per first-generation NetFPGA card.
+pub const PORTS_PER_CARD: usize = 4;
+
+/// Ethernet frame overhead that occupies the wire but not the frame:
+/// preamble+SFD (8) + FCS (4) + inter-frame gap (12).
+pub const WIRE_OVERHEAD_BYTES: usize = 24;
+
+/// Ethernet MTU (payload bytes available above the 14-byte MAC header).
+pub const MTU: usize = 1500;
+
+/// UDP destination port the offload engine listens on (arbitrary but
+/// fixed, like the paper's specially-crafted UDP messages).
+pub const NFSCAN_UDP_PORT: u16 = 0x4E46; // "NF"

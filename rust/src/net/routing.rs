@@ -1,0 +1,121 @@
+//! Next-hop routing tables for the NetFPGA reference-router forwarding
+//! path.
+//!
+//! When the topology doesn't match the algorithm's communication pattern,
+//! packets between non-adjacent NICs are store-and-forwarded through
+//! intermediate NetFPGAs (the card "maintains the ability to forward
+//! standard IP packets").  Routes are shortest-path BFS, tie-broken by
+//! port number, so they are deterministic.
+
+use std::collections::VecDeque;
+
+use super::topology::Topology;
+use super::{PortNo, Rank};
+
+#[derive(Clone, Debug)]
+pub struct RouteTable {
+    /// `next[src][dst]` = output port at `src` towards `dst`.
+    next: Vec<Vec<Option<PortNo>>>,
+}
+
+impl RouteTable {
+    /// All-pairs next-hop ports via BFS from every destination.
+    pub fn build(topo: &Topology) -> RouteTable {
+        let p = topo.p();
+        let mut next = vec![vec![None; p]; p];
+        for dst in 0..p {
+            // BFS outward from dst; the first hop each node uses to reach
+            // its BFS parent is its next-hop towards dst.
+            let mut dist = vec![usize::MAX; p];
+            dist[dst] = 0;
+            let mut q = VecDeque::from([dst]);
+            while let Some(u) = q.pop_front() {
+                for (port_u, v) in topo.neighbors(u) {
+                    if dist[v] == usize::MAX {
+                        dist[v] = dist[u] + 1;
+                        // v reaches dst by sending to u: find v's port to u.
+                        // neighbor lookup is port-ordered => deterministic.
+                        let _ = port_u;
+                        let port_v = topo.port_towards(v, u).expect("cable is bidirectional");
+                        next[v][dst] = Some(port_v);
+                        q.push_back(v);
+                    }
+                }
+            }
+        }
+        RouteTable { next }
+    }
+
+    /// Output port at `src` for traffic to `dst`; None if unreachable or
+    /// src == dst (local delivery).
+    pub fn next_hop(&self, src: Rank, dst: Rank) -> Option<PortNo> {
+        if src == dst {
+            return None;
+        }
+        self.next[src][dst]
+    }
+
+    /// Hop count from src to dst following the table (for tests/metrics).
+    pub fn hops(&self, topo: &Topology, src: Rank, dst: Rank) -> Option<usize> {
+        let mut cur = src;
+        let mut n = 0;
+        while cur != dst {
+            let port = self.next_hop(cur, dst)?;
+            cur = topo.neighbor(cur, port)?.0;
+            n += 1;
+            if n > topo.p() {
+                return None; // routing loop — must never happen
+            }
+        }
+        Some(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_routes_linear() {
+        let t = Topology::chain(4);
+        let r = RouteTable::build(&t);
+        assert_eq!(r.next_hop(0, 3), Some(1));
+        assert_eq!(r.next_hop(3, 0), Some(0));
+        assert_eq!(r.hops(&t, 0, 3), Some(3));
+        assert_eq!(r.next_hop(2, 2), None);
+    }
+
+    #[test]
+    fn hypercube_all_pairs_reachable_shortest() {
+        let t = Topology::hypercube(8);
+        let r = RouteTable::build(&t);
+        for s in 0..8usize {
+            for d in 0..8usize {
+                if s == d {
+                    continue;
+                }
+                // shortest path in a hypercube = hamming distance
+                let want = (s ^ d).count_ones() as usize;
+                assert_eq!(r.hops(&t, s, d), Some(want), "{s}->{d}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_takes_short_way() {
+        let t = Topology::ring(8);
+        let r = RouteTable::build(&t);
+        assert_eq!(r.hops(&t, 0, 1), Some(1));
+        assert_eq!(r.hops(&t, 0, 7), Some(1), "wraparound is shorter");
+        assert_eq!(r.hops(&t, 0, 4), Some(4));
+    }
+
+    #[test]
+    fn disconnected_unreachable() {
+        // two disjoint cables: 0-1, 2-3
+        let t = Topology::custom("split", 4, &[((0, 0), (1, 0)), ((2, 0), (3, 0))]);
+        let r = RouteTable::build(&t);
+        assert_eq!(r.next_hop(0, 2), None);
+        assert_eq!(r.hops(&t, 0, 3), None);
+    }
+}

@@ -1,0 +1,175 @@
+//! Physical port graph: how the NetFPGA cards are wired together.
+//!
+//! The paper: "The NetFPGA ports were directly connected to each other
+//! establishing a testbed topology" — and admits the node roles / wiring
+//! are manually configured per algorithm.  We provide the wirings each
+//! algorithm wants (chain for sequential, hypercube for recursive
+//! doubling / binomial) plus a ring, and let experiments deliberately
+//! mismatch them to measure the multi-hop forwarding penalty.
+
+use std::collections::BTreeMap;
+
+use super::{PortNo, Rank, PORTS_PER_CARD};
+
+#[derive(Clone, Debug)]
+pub struct Topology {
+    p: usize,
+    name: String,
+    /// (rank, port) -> (rank, port) for every plugged cable, both ways.
+    adj: BTreeMap<(Rank, PortNo), (Rank, PortNo)>,
+}
+
+impl Topology {
+    /// Build from explicit cables.  Panics on port reuse or self-loops —
+    /// a miswired testbed should fail loudly at construction.
+    pub fn custom(name: &str, p: usize, cables: &[((Rank, PortNo), (Rank, PortNo))]) -> Topology {
+        let mut adj = BTreeMap::new();
+        for &(a, b) in cables {
+            assert!(a.0 < p && b.0 < p, "cable endpoint rank out of range");
+            assert_ne!(a.0, b.0, "self-loop cable on rank {}", a.0);
+            assert!(!adj.contains_key(&a), "port {a:?} already cabled");
+            assert!(!adj.contains_key(&b), "port {b:?} already cabled");
+            adj.insert(a, b);
+            adj.insert(b, a);
+        }
+        Topology { p, name: name.to_string(), adj }
+    }
+
+    /// Line: rank j port 1 <-> rank j+1 port 0.  Sequential algorithm's
+    /// natural wiring (every j, j+1 one hop apart).
+    pub fn chain(p: usize) -> Topology {
+        let cables: Vec<_> = (0..p.saturating_sub(1)).map(|j| ((j, 1), (j + 1, 0))).collect();
+        Topology::custom("chain", p, &cables)
+    }
+
+    /// Chain + wraparound cable.
+    pub fn ring(p: usize) -> Topology {
+        assert!(p >= 3, "ring needs >= 3 nodes");
+        let mut cables: Vec<_> = (0..p - 1).map(|j| ((j, 1), (j + 1, 0))).collect();
+        cables.push(((p - 1, 1), (0, 0)));
+        Topology::custom("ring", p, &cables)
+    }
+
+    /// Boolean hypercube: rank j port k <-> rank j^2^k port k.  Natural
+    /// wiring for recursive doubling and the binomial tree (every
+    /// partner/parent differs in exactly one bit).  Dimension > 4 exceeds
+    /// the first-gen card's 4 ports; `strict_ports` rejects that.
+    pub fn hypercube(p: usize) -> Topology {
+        assert!(crate::util::is_pow2(p) && p >= 2, "hypercube needs power-of-two nodes");
+        let dim = crate::util::log2(p) as u8;
+        let mut cables = Vec::new();
+        for j in 0..p {
+            for k in 0..dim {
+                let peer = j ^ (1 << k);
+                if j < peer {
+                    cables.push(((j, k), (peer, k)));
+                }
+            }
+        }
+        Topology::custom("hypercube", p, &cables)
+    }
+
+    pub fn by_name(name: &str, p: usize) -> Option<Topology> {
+        match name {
+            "chain" => Some(Topology::chain(p)),
+            "ring" => Some(Topology::ring(p)),
+            "hypercube" => Some(Topology::hypercube(p)),
+            _ => None,
+        }
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Other end of the cable plugged into (rank, port), if any.
+    pub fn neighbor(&self, rank: Rank, port: PortNo) -> Option<(Rank, PortNo)> {
+        self.adj.get(&(rank, port)).copied()
+    }
+
+    /// Direct port from `rank` towards `dst`, if they share a cable.
+    pub fn port_towards(&self, rank: Rank, dst: Rank) -> Option<PortNo> {
+        self.adj
+            .iter()
+            .find(|&(&(r, _), &(nr, _))| r == rank && nr == dst)
+            .map(|(&(_, port), _)| port)
+    }
+
+    /// All (port, neighbor) pairs of `rank`, port-ordered (determinism).
+    pub fn neighbors(&self, rank: Rank) -> Vec<(PortNo, Rank)> {
+        self.adj
+            .iter()
+            .filter(|&(&(r, _), _)| r == rank)
+            .map(|(&(_, port), &(nr, _))| (port, nr))
+            .collect()
+    }
+
+    /// Highest port number used by any node, +1.
+    pub fn ports_used(&self) -> usize {
+        self.adj.keys().map(|&(_, port)| port as usize + 1).max().unwrap_or(0)
+    }
+
+    /// Does the wiring fit a first-generation NetFPGA (4 ports)?
+    pub fn fits_card(&self) -> bool {
+        self.ports_used() <= PORTS_PER_CARD
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_adjacency() {
+        let t = Topology::chain(4);
+        assert_eq!(t.neighbor(0, 1), Some((1, 0)));
+        assert_eq!(t.neighbor(1, 1), Some((2, 0)));
+        assert_eq!(t.neighbor(0, 0), None, "head has no upstream");
+        assert_eq!(t.port_towards(2, 1), Some(0));
+        assert!(t.fits_card());
+    }
+
+    #[test]
+    fn ring_wraps() {
+        let t = Topology::ring(4);
+        assert_eq!(t.neighbor(3, 1), Some((0, 0)));
+        assert_eq!(t.port_towards(0, 3), Some(0));
+    }
+
+    #[test]
+    fn hypercube_partners_one_hop() {
+        let t = Topology::hypercube(8);
+        for j in 0..8usize {
+            for k in 0..3u8 {
+                let peer = j ^ (1 << k);
+                assert_eq!(t.neighbor(j, k), Some((peer, k)), "rank {j} dim {k}");
+                assert_eq!(t.port_towards(j, peer), Some(k));
+            }
+        }
+        assert!(t.fits_card(), "3-cube uses 3 of 4 ports");
+        assert!(!Topology::hypercube(32).fits_card(), "5-cube exceeds the card");
+    }
+
+    #[test]
+    fn neighbors_sorted_by_port() {
+        let t = Topology::hypercube(8);
+        let n = t.neighbors(5);
+        assert_eq!(n, vec![(0, 4), (1, 7), (2, 1)]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn port_reuse_rejected() {
+        Topology::custom("bad", 3, &[((0, 0), (1, 0)), ((0, 0), (2, 0))]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn self_loop_rejected() {
+        Topology::custom("bad", 2, &[((0, 0), (0, 1))]);
+    }
+}

@@ -1,0 +1,180 @@
+//! Topology self-configuration (paper SSVI future work).
+//!
+//! "We are planning to put hardware logic into the NetFPGA to learn the
+//! topology of the NetFPGA collective network and configure node roles
+//! as appropriate ... eliminating the hardcoding that comes with the
+//! current design."
+//!
+//! This module implements that plan at the model level: each card sends a
+//! hello on every port (one LLDP-style exchange), the collected neighbor
+//! maps are flooded, and every node independently reconstructs the wiring
+//! and classifies it — from which `derive_role_in_hardware` assigns roles
+//! with no software pre-configuration.  Tests assert the derived
+//! configuration equals the manual one for every built-in wiring.
+
+use std::collections::BTreeMap;
+
+use crate::net::{PortNo, Rank, Topology};
+use crate::packet::AlgoType;
+
+/// What one card learns in the hello exchange: its own port -> neighbor.
+pub type NeighborMap = BTreeMap<PortNo, Rank>;
+
+/// Phase 1 — per-card neighbor discovery (one hello per cabled port).
+pub fn discover_neighbors(topo: &Topology, rank: Rank) -> NeighborMap {
+    topo.neighbors(rank).into_iter().collect()
+}
+
+/// Phase 2 — flood: every card's neighbor map reaches every other card.
+/// Returns the global wiring as each card reconstructs it.
+pub fn flood_maps(topo: &Topology) -> Vec<NeighborMap> {
+    (0..topo.p()).map(|r| discover_neighbors(topo, r)).collect()
+}
+
+/// What the discovered wiring looks like, as far as algorithm selection
+/// cares.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum WiringClass {
+    /// Every rank j is cabled to j+1 (and nothing else): sequential's
+    /// natural wiring.
+    Chain,
+    /// A chain plus the wraparound cable.
+    Ring,
+    /// Every rank is cabled to all ranks differing in one bit.
+    Hypercube,
+    /// Anything else: fall back to routing + log-p algorithms.
+    Irregular,
+}
+
+/// Phase 3 — classify the reconstructed wiring.
+pub fn classify(maps: &[NeighborMap]) -> WiringClass {
+    let p = maps.len();
+    let degree_sum: usize = maps.iter().map(|m| m.len()).sum();
+    let is_chain = (0..p).all(|j| {
+        let peers: Vec<Rank> = maps[j].values().copied().collect();
+        let mut want: Vec<Rank> = Vec::new();
+        if j > 0 {
+            want.push(j - 1);
+        }
+        if j + 1 < p {
+            want.push(j + 1);
+        }
+        let mut sorted = peers.clone();
+        sorted.sort_unstable();
+        sorted == want
+    });
+    if is_chain {
+        return WiringClass::Chain;
+    }
+    let is_ring = p >= 3
+        && (0..p).all(|j| {
+            let mut peers: Vec<Rank> = maps[j].values().copied().collect();
+            peers.sort_unstable();
+            let mut want = vec![(j + p - 1) % p, (j + 1) % p];
+            want.sort_unstable();
+            peers == want
+        });
+    if is_ring {
+        return WiringClass::Ring;
+    }
+    if crate::util::is_pow2(p) {
+        let dim = crate::util::log2(p);
+        let is_cube = degree_sum == p * dim as usize
+            && (0..p).all(|j| {
+                maps[j].values().all(|&peer| (j ^ peer).count_ones() == 1)
+                    && maps[j].len() == dim as usize
+            });
+        if is_cube {
+            return WiringClass::Hypercube;
+        }
+    }
+    WiringClass::Irregular
+}
+
+/// The full self-configuration pipeline: discover -> classify -> pick the
+/// algorithm -> derive every node's role in hardware.  Returns
+/// (algorithm, role per rank).
+pub fn self_configure(
+    topo: &Topology,
+    msg_bytes: usize,
+) -> (AlgoType, Vec<crate::packet::NodeType>) {
+    let maps = flood_maps(topo);
+    let class = classify(&maps);
+    let p = topo.p();
+    let algo = match class {
+        WiringClass::Chain | WiringClass::Ring => {
+            super::select_algorithm(topo, msg_bytes, p)
+        }
+        WiringClass::Hypercube => super::select_algorithm(topo, msg_bytes, p),
+        WiringClass::Irregular => AlgoType::BinomialTree, // works over routing
+    };
+    let roles = (0..p)
+        .map(|r| super::roles::derive_role_in_hardware(algo, r as u16, p as u16))
+        .collect();
+    (algo, roles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::offload::node_role;
+
+    #[test]
+    fn classifies_builtin_wirings() {
+        assert_eq!(classify(&flood_maps(&Topology::chain(8))), WiringClass::Chain);
+        assert_eq!(classify(&flood_maps(&Topology::ring(8))), WiringClass::Ring);
+        assert_eq!(classify(&flood_maps(&Topology::hypercube(8))), WiringClass::Hypercube);
+        assert_eq!(classify(&flood_maps(&Topology::hypercube(16))), WiringClass::Hypercube);
+    }
+
+    #[test]
+    fn irregular_detected() {
+        let t = Topology::custom(
+            "y",
+            4,
+            &[((0, 0), (1, 0)), ((0, 1), (2, 0)), ((0, 2), (3, 0))],
+        );
+        assert_eq!(classify(&flood_maps(&t)), WiringClass::Irregular);
+    }
+
+    #[test]
+    fn chain_of_two_is_chain_not_cube() {
+        // p=2: one cable; chain check runs first and wins (either
+        // classification would work for the algorithms)
+        let t = Topology::chain(2);
+        assert_eq!(classify(&flood_maps(&t)), WiringClass::Chain);
+    }
+
+    #[test]
+    fn self_configuration_matches_manual_roles() {
+        for (topo, msg) in [
+            (Topology::chain(8), 4usize),
+            (Topology::hypercube(8), 4),
+            (Topology::hypercube(8), 64 * 1024),
+        ] {
+            let (algo, roles) = self_configure(&topo, msg);
+            for (r, &role) in roles.iter().enumerate() {
+                assert_eq!(
+                    role,
+                    node_role(algo, r, topo.p()),
+                    "rank {r} on {} msg {msg}",
+                    topo.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn neighbor_maps_are_symmetric() {
+        let topo = Topology::hypercube(16);
+        let maps = flood_maps(&topo);
+        for (j, m) in maps.iter().enumerate() {
+            for &peer in m.values() {
+                assert!(
+                    maps[peer].values().any(|&back| back == j),
+                    "cable {j}<->{peer} must appear on both ends"
+                );
+            }
+        }
+    }
+}

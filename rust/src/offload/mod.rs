@@ -1,0 +1,53 @@
+//! The offload coordinator: the host side of NF_Scan.
+//!
+//! Builds the specially-crafted UDP request (Fig. 1), pre-assigns node
+//! roles ("for simplicity, we let the software assign node roles in
+//! advance"), and implements the algorithm-selection intelligence the
+//! paper's introduction promises: "MPI runtime can make an intelligent
+//! selection of algorithms based on the underlying network topology."
+
+pub mod discovery;
+pub mod roles;
+pub mod select;
+
+pub use discovery::{self_configure, WiringClass};
+pub use roles::node_role;
+pub use select::select_algorithm;
+
+use crate::config::ExpConfig;
+use crate::data::Payload;
+use crate::net::Rank;
+use crate::sim::OffloadRequest;
+
+/// Build the offload request rank `rank` sends down to its card for
+/// iteration `epoch` — the decoded HostRequest packet.
+pub fn build_request(cfg: &ExpConfig, rank: Rank, epoch: u16, payload: Payload) -> OffloadRequest {
+    OffloadRequest {
+        rank,
+        comm: 0, // MPI_COMM_WORLD in every paper experiment
+        epoch,
+        comm_size: cfg.p as u16,
+        coll: cfg.coll,
+        algo: cfg.algo,
+        op: cfg.op,
+        dtype: cfg.dtype,
+        payload,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packet::AlgoType;
+
+    #[test]
+    fn request_carries_experiment_parameters() {
+        let mut cfg = ExpConfig::default();
+        cfg.algo = AlgoType::BinomialTree;
+        let req = build_request(&cfg, 3, 17, Payload::from_i32(&[1]));
+        assert_eq!(req.rank, 3);
+        assert_eq!(req.epoch, 17);
+        assert_eq!(req.algo, AlgoType::BinomialTree);
+        assert_eq!(req.comm_size, 8);
+    }
+}

@@ -1,0 +1,88 @@
+//! Pre-assigned node roles (the packet's `node_type` field).
+//!
+//! "The node_type could be derived from the rank and comm_size fields in
+//! the hardware, but for simplicity, we let the software assign node
+//! roles in advance, and let the NetFPGA run the algorithm based on the
+//! assigned node_type role."  `derive_role_in_hardware` is the SSVI
+//! future-work variant: the same mapping computed from (rank, comm_size)
+//! alone, used by the self-configuration path and asserted equal.
+
+use crate::net::Rank;
+use crate::packet::{AlgoType, NodeType};
+
+/// Software-side role pre-assignment.
+pub fn node_role(algo: AlgoType, rank: Rank, p: usize) -> NodeType {
+    match algo {
+        AlgoType::Sequential => {
+            if rank == 0 {
+                NodeType::Head
+            } else if rank == p - 1 {
+                NodeType::Tail
+            } else {
+                NodeType::Mid
+            }
+        }
+        AlgoType::RecursiveDoubling => NodeType::Generic,
+        AlgoType::BinomialTree => {
+            if rank == p - 1 {
+                NodeType::Root
+            } else if (rank as u64).trailing_ones() == 0 {
+                NodeType::Leaf
+            } else {
+                NodeType::Internal
+            }
+        }
+    }
+}
+
+/// The hardware-derivable version (paper SSVI): must agree with the
+/// software assignment for every (rank, comm_size).
+pub fn derive_role_in_hardware(algo: AlgoType, rank: u16, comm_size: u16) -> NodeType {
+    node_role(algo, rank as Rank, comm_size as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_roles() {
+        assert_eq!(node_role(AlgoType::Sequential, 0, 8), NodeType::Head);
+        assert_eq!(node_role(AlgoType::Sequential, 3, 8), NodeType::Mid);
+        assert_eq!(node_role(AlgoType::Sequential, 7, 8), NodeType::Tail);
+    }
+
+    #[test]
+    fn binomial_roles_p8() {
+        // even ranks are leaves; 7 is root; 1, 3, 5 internal
+        assert_eq!(node_role(AlgoType::BinomialTree, 7, 8), NodeType::Root);
+        for r in [0usize, 2, 4, 6] {
+            assert_eq!(node_role(AlgoType::BinomialTree, r, 8), NodeType::Leaf, "rank {r}");
+        }
+        for r in [1usize, 3, 5] {
+            assert_eq!(node_role(AlgoType::BinomialTree, r, 8), NodeType::Internal, "rank {r}");
+        }
+    }
+
+    #[test]
+    fn rd_everyone_generic() {
+        for r in 0..8 {
+            assert_eq!(node_role(AlgoType::RecursiveDoubling, r, 8), NodeType::Generic);
+        }
+    }
+
+    #[test]
+    fn hardware_derivation_agrees_everywhere() {
+        for p in [2u16, 4, 8, 16, 32] {
+            for algo in AlgoType::ALL {
+                for r in 0..p {
+                    assert_eq!(
+                        derive_role_in_hardware(algo, r, p),
+                        node_role(algo, r as Rank, p as usize),
+                        "algo {algo:?} rank {r} p {p}"
+                    );
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,64 @@
+//! Topology-aware algorithm selection.
+//!
+//! The paper (SSI, contribution 3): "We provide different algorithm
+//! selection at the hardware level.  Therefore MPI runtime can make an
+//! intelligent selection of algorithms based on the underlying network
+//! topology."  The policy below encodes what the paper's evaluation
+//! found: the sequential chain wins on a chain wiring at small scale;
+//! hypercube wirings favor recursive doubling at small messages (fewest
+//! serialized hops) and the binomial tree for large multi-fragment
+//! payloads (fewer total exchanged bytes: 2 log p one-directional hops vs
+//! log p bidirectional exchanges).
+
+use crate::net::{Topology, CHUNK_BYTES};
+use crate::packet::AlgoType;
+
+/// Pick the scan algorithm for a given wiring, message size and scale.
+pub fn select_algorithm(topo: &Topology, msg_bytes: usize, p: usize) -> AlgoType {
+    match topo.name() {
+        // chain/ring wirings make j -> j+1 one hop: sequential is the
+        // only algorithm whose pattern maps; it also wins the paper's
+        // 8-node average-latency comparison.  Beyond a couple dozen ranks
+        // its O(p) critical path loses to any log-p algorithm even with
+        // hop penalties (the paper: "not scalable algorithmically").
+        "chain" | "ring" if p <= 16 => AlgoType::Sequential,
+        "chain" | "ring" => AlgoType::BinomialTree,
+        // hypercube: partners are all one hop away.
+        _ => {
+            if msg_bytes <= CHUNK_BYTES {
+                AlgoType::RecursiveDoubling
+            } else {
+                AlgoType::BinomialTree
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_small_scale_picks_sequential() {
+        let t = Topology::chain(8);
+        assert_eq!(select_algorithm(&t, 4, 8), AlgoType::Sequential);
+    }
+
+    #[test]
+    fn chain_large_scale_abandons_sequential() {
+        let t = Topology::chain(64);
+        assert_eq!(select_algorithm(&t, 4, 64), AlgoType::BinomialTree);
+    }
+
+    #[test]
+    fn hypercube_small_messages_pick_rd() {
+        let t = Topology::hypercube(8);
+        assert_eq!(select_algorithm(&t, 64, 8), AlgoType::RecursiveDoubling);
+    }
+
+    #[test]
+    fn hypercube_large_messages_pick_binomial() {
+        let t = Topology::hypercube(8);
+        assert_eq!(select_algorithm(&t, 64 * 1024, 8), AlgoType::BinomialTree);
+    }
+}

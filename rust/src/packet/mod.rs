@@ -1,0 +1,414 @@
+//! The collective-offload packet format of the paper's Figure 1.
+//!
+//! The host informs the NetFPGA "which network-level state machine to
+//! utilize" via a specially-crafted UDP datagram whose body starts with
+//! this header.  All Fig. 1 fields are implemented: `comm_id`, `comm_size`,
+//! `coll_type`, `algo_type`, `node_type`, `msg_type`, `rank`, `root`,
+//! `operation`, `data_type`, `count` — plus two fragmentation fields and a
+//! range `tag` used by the recursive-doubling multicast optimization
+//! (SSIII-C, the "message tagging" of Fig. 3).
+//!
+//! The paper leaves `comm_id` unimplemented ("future work"); here it is
+//! implemented as (communicator, epoch): the low half distinguishes
+//! back-to-back invocations of the collective on the same communicator,
+//! the high half distinguishes communicators (see `fpga::engine`).
+
+use crate::data::{Dtype, Op, Payload};
+
+/// Encoded size of the collective header in the UDP body.
+pub const COLL_HDR_LEN: usize = 36;
+
+/// `coll_type` enumeration.  The format is "intended to support a variety
+/// of collective operations"; this reproduction implements Scan + Exscan
+/// and enumerates the others the packet format reserves.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum CollType {
+    Scan,
+    Exscan,
+    Barrier,
+    Allreduce,
+    Reduce,
+}
+
+impl CollType {
+    pub fn wire_code(self) -> u16 {
+        match self {
+            CollType::Scan => 1,
+            CollType::Exscan => 2,
+            CollType::Barrier => 3,
+            CollType::Allreduce => 4,
+            CollType::Reduce => 5,
+        }
+    }
+
+    pub fn from_wire(v: u16) -> Option<Self> {
+        match v {
+            1 => Some(CollType::Scan),
+            2 => Some(CollType::Exscan),
+            3 => Some(CollType::Barrier),
+            4 => Some(CollType::Allreduce),
+            5 => Some(CollType::Reduce),
+            _ => None,
+        }
+    }
+
+    /// Inclusive/exclusive scan — the only semantic difference between
+    /// MPI_Scan and MPI_Exscan.
+    pub fn inclusive(self) -> bool {
+        matches!(self, CollType::Scan)
+    }
+}
+
+/// `algo_type`: which hardware state machine runs the collective.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+pub enum AlgoType {
+    /// Open MPI's default: rank j waits for j-1's partial, O(p) steps.
+    Sequential,
+    /// MPICH's default ("naive"): log2(p) pairwise exchange steps.
+    RecursiveDoubling,
+    /// Blelloch-style binomial tree: up-phase + down-phase.
+    BinomialTree,
+}
+
+impl AlgoType {
+    pub const ALL: [AlgoType; 3] =
+        [AlgoType::Sequential, AlgoType::RecursiveDoubling, AlgoType::BinomialTree];
+
+    pub fn wire_code(self) -> u16 {
+        match self {
+            AlgoType::Sequential => 1,
+            AlgoType::RecursiveDoubling => 2,
+            AlgoType::BinomialTree => 3,
+        }
+    }
+
+    pub fn from_wire(v: u16) -> Option<Self> {
+        match v {
+            1 => Some(AlgoType::Sequential),
+            2 => Some(AlgoType::RecursiveDoubling),
+            3 => Some(AlgoType::BinomialTree),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            AlgoType::Sequential => "sequential",
+            AlgoType::RecursiveDoubling => "recursive_doubling",
+            AlgoType::BinomialTree => "binomial_tree",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "sequential" | "seq" => Some(AlgoType::Sequential),
+            "recursive_doubling" | "rd" => Some(AlgoType::RecursiveDoubling),
+            "binomial_tree" | "binomial" | "tree" => Some(AlgoType::BinomialTree),
+            _ => None,
+        }
+    }
+}
+
+/// `node_type`: the rank's pre-assigned role in the algorithm.  "The
+/// node_type could be derived from the rank and comm_size fields in the
+/// hardware, but for simplicity, we let the software assign node roles in
+/// advance" — `offload::roles` does that assignment.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum NodeType {
+    /// Recursive doubling: every rank runs the same machine.
+    Generic,
+    /// Sequential: rank 0 (sends first, receives nothing).
+    Head,
+    /// Sequential: interior rank.
+    Mid,
+    /// Sequential: rank p-1 (terminates the chain, no ACK awaited).
+    Tail,
+    /// Binomial: leaf (sends up once, waits for down-phase).
+    Leaf,
+    /// Binomial: internal node (buffers children, then up + down).
+    Internal,
+    /// Binomial: root (highest rank; turns the tree around).
+    Root,
+}
+
+impl NodeType {
+    pub fn wire_code(self) -> u16 {
+        match self {
+            NodeType::Generic => 0,
+            NodeType::Head => 1,
+            NodeType::Mid => 2,
+            NodeType::Tail => 3,
+            NodeType::Leaf => 4,
+            NodeType::Internal => 5,
+            NodeType::Root => 6,
+        }
+    }
+
+    pub fn from_wire(v: u16) -> Option<Self> {
+        match v {
+            0 => Some(NodeType::Generic),
+            1 => Some(NodeType::Head),
+            2 => Some(NodeType::Mid),
+            3 => Some(NodeType::Tail),
+            4 => Some(NodeType::Leaf),
+            5 => Some(NodeType::Internal),
+            6 => Some(NodeType::Root),
+            _ => None,
+        }
+    }
+}
+
+/// `msg_type`: "needed when NetFPGAs communicate between each other ...
+/// what the packet means" — the metadata of inter-NIC packets.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum MsgType {
+    /// Host -> own NIC: offload this collective.
+    HostRequest,
+    /// NIC -> NIC: a partial-scan payload.
+    Data,
+    /// NIC -> NIC: flow-control acknowledgment (sequential algorithm,
+    /// SSIII-B: rank j returns only after the ACK from rank j+1).
+    Ack,
+    /// NIC -> host: the rank's final scan outcome (+ elapsed time).
+    Result,
+    /// NIC -> NIC multicast: tagged cumulative payload covering a rank
+    /// range (SSIII-C optimization); receivers may subtract their own
+    /// cached contribution.
+    CumTagged,
+    /// NIC -> NIC: binomial down-phase prefix.
+    Down,
+}
+
+impl MsgType {
+    pub fn wire_code(self) -> u16 {
+        match self {
+            MsgType::HostRequest => 1,
+            MsgType::Data => 2,
+            MsgType::Ack => 3,
+            MsgType::Result => 4,
+            MsgType::CumTagged => 5,
+            MsgType::Down => 6,
+        }
+    }
+
+    pub fn from_wire(v: u16) -> Option<Self> {
+        match v {
+            1 => Some(MsgType::HostRequest),
+            2 => Some(MsgType::Data),
+            3 => Some(MsgType::Ack),
+            4 => Some(MsgType::Result),
+            5 => Some(MsgType::CumTagged),
+            6 => Some(MsgType::Down),
+            _ => None,
+        }
+    }
+}
+
+/// The decoded collective packet: Fig. 1 header + payload chunk.
+#[derive(Clone, Debug)]
+pub struct CollPacket {
+    /// (communicator << 16) | epoch — see module docs.
+    pub comm_id: u32,
+    pub comm_size: u16,
+    pub coll_type: CollType,
+    pub algo_type: AlgoType,
+    pub node_type: NodeType,
+    pub msg_type: MsgType,
+    /// Algorithm step this packet belongs to (recursive-doubling stage /
+    /// tree level) — inter-NIC metadata like `msg_type`.
+    pub step: u16,
+    /// Sender rank (for HostRequest: the requesting rank).
+    pub rank: u16,
+    /// Unused for MPI_Scan (it has no root); kept per Fig. 1.
+    pub root: u16,
+    pub operation: Op,
+    pub data_type: Dtype,
+    /// Total element count of the *message* (not of this fragment).
+    pub count: u32,
+    /// Fragment index / total for messages larger than one MTU.
+    pub frag_idx: u16,
+    pub frag_total: u16,
+    /// CumTagged: covered rank range, (lo | hi << 16).  Otherwise 0.
+    pub tag: u32,
+    /// This fragment's payload elements (empty for Ack).
+    pub payload: Payload,
+}
+
+impl CollPacket {
+    pub fn comm(&self) -> u16 {
+        (self.comm_id >> 16) as u16
+    }
+
+    pub fn epoch(&self) -> u16 {
+        (self.comm_id & 0xFFFF) as u16
+    }
+
+    pub fn make_comm_id(comm: u16, epoch: u16) -> u32 {
+        ((comm as u32) << 16) | epoch as u32
+    }
+
+    /// Range covered by a CumTagged payload.
+    pub fn tag_range(&self) -> (u16, u16) {
+        ((self.tag & 0xFFFF) as u16, (self.tag >> 16) as u16)
+    }
+
+    pub fn make_tag(lo: u16, hi: u16) -> u32 {
+        (lo as u32) | ((hi as u32) << 16)
+    }
+
+    /// Encoded UDP-body length (header + payload bytes).
+    pub fn encoded_len(&self) -> usize {
+        COLL_HDR_LEN + self.payload.byte_len()
+    }
+
+    /// Serialize to the UDP body (the exact on-wire layout of Fig. 1's
+    /// collective fields, big-endian like the protocol headers).
+    pub fn emit(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.comm_id.to_be_bytes());
+        out.extend_from_slice(&self.comm_size.to_be_bytes());
+        out.extend_from_slice(&self.coll_type.wire_code().to_be_bytes());
+        out.extend_from_slice(&self.algo_type.wire_code().to_be_bytes());
+        out.extend_from_slice(&self.node_type.wire_code().to_be_bytes());
+        out.extend_from_slice(&self.msg_type.wire_code().to_be_bytes());
+        out.extend_from_slice(&self.step.to_be_bytes());
+        out.extend_from_slice(&self.rank.to_be_bytes());
+        out.extend_from_slice(&self.root.to_be_bytes());
+        out.extend_from_slice(&self.operation.wire_code().to_be_bytes());
+        out.extend_from_slice(&self.data_type.wire_code().to_be_bytes());
+        out.extend_from_slice(&self.count.to_be_bytes());
+        out.extend_from_slice(&self.frag_idx.to_be_bytes());
+        out.extend_from_slice(&self.frag_total.to_be_bytes());
+        out.extend_from_slice(&self.tag.to_be_bytes());
+        out.extend_from_slice(self.payload.bytes());
+    }
+
+    /// Parse a UDP body.  Returns None on any malformed field — the
+    /// NetFPGA must never act on a packet it cannot fully decode.
+    pub fn parse(b: &[u8]) -> Option<CollPacket> {
+        if b.len() < COLL_HDR_LEN {
+            return None;
+        }
+        let u16at = |i: usize| u16::from_be_bytes([b[i], b[i + 1]]);
+        let u32at = |i: usize| u32::from_be_bytes([b[i], b[i + 1], b[i + 2], b[i + 3]]);
+        let data_type = Dtype::from_wire(u16at(22))?;
+        let payload_bytes = &b[COLL_HDR_LEN..];
+        if payload_bytes.len() % data_type.size() != 0 {
+            return None;
+        }
+        Some(CollPacket {
+            comm_id: u32at(0),
+            comm_size: u16at(4),
+            coll_type: CollType::from_wire(u16at(6))?,
+            algo_type: AlgoType::from_wire(u16at(8))?,
+            node_type: NodeType::from_wire(u16at(10))?,
+            msg_type: MsgType::from_wire(u16at(12))?,
+            step: u16at(14),
+            rank: u16at(16),
+            root: u16at(18),
+            operation: Op::from_wire(u16at(20)).filter(|op| {
+                // reject op/dtype pairs the hardware has no datapath for
+                op.valid_for(data_type)
+            })?,
+            data_type,
+            count: u32at(24),
+            frag_idx: u16at(28),
+            frag_total: u16at(30),
+            tag: u32at(32),
+            payload: Payload::from_bytes(data_type, payload_bytes.to_vec()),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CollPacket {
+        CollPacket {
+            comm_id: CollPacket::make_comm_id(1, 42),
+            comm_size: 8,
+            coll_type: CollType::Scan,
+            algo_type: AlgoType::RecursiveDoubling,
+            node_type: NodeType::Generic,
+            msg_type: MsgType::Data,
+            step: 2,
+            rank: 3,
+            root: 0,
+            operation: Op::Sum,
+            data_type: Dtype::I32,
+            count: 4,
+            frag_idx: 0,
+            frag_total: 1,
+            tag: 0,
+            payload: Payload::from_i32(&[1, 2, 3, 4]),
+        }
+    }
+
+    #[test]
+    fn emit_parse_roundtrip() {
+        let pkt = sample();
+        let mut buf = Vec::new();
+        pkt.emit(&mut buf);
+        assert_eq!(buf.len(), pkt.encoded_len());
+        let back = CollPacket::parse(&buf).unwrap();
+        assert_eq!(back.comm_id, pkt.comm_id);
+        assert_eq!(back.algo_type, pkt.algo_type);
+        assert_eq!(back.msg_type, pkt.msg_type);
+        assert_eq!(back.step, pkt.step);
+        assert_eq!(back.rank, pkt.rank);
+        assert_eq!(back.payload, pkt.payload);
+    }
+
+    #[test]
+    fn comm_epoch_packing() {
+        let id = CollPacket::make_comm_id(7, 0xBEEF);
+        let mut pkt = sample();
+        pkt.comm_id = id;
+        assert_eq!(pkt.comm(), 7);
+        assert_eq!(pkt.epoch(), 0xBEEF);
+    }
+
+    #[test]
+    fn tag_range_packing() {
+        let mut pkt = sample();
+        pkt.tag = CollPacket::make_tag(0, 1);
+        assert_eq!(pkt.tag_range(), (0, 1));
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let pkt = sample();
+        let mut buf = Vec::new();
+        pkt.emit(&mut buf);
+        assert!(CollPacket::parse(&buf[..COLL_HDR_LEN - 1]).is_none());
+    }
+
+    #[test]
+    fn bad_enum_rejected() {
+        let pkt = sample();
+        let mut buf = Vec::new();
+        pkt.emit(&mut buf);
+        buf[7] = 99; // coll_type
+        assert!(CollPacket::parse(&buf).is_none());
+    }
+
+    #[test]
+    fn invalid_op_dtype_pair_rejected() {
+        let mut pkt = sample();
+        pkt.operation = Op::Band;
+        pkt.data_type = Dtype::F32;
+        pkt.payload = Payload::from_f32(&[1.0]);
+        let mut buf = Vec::new();
+        pkt.emit(&mut buf);
+        assert!(CollPacket::parse(&buf).is_none(), "BAND on float has no hardware datapath");
+    }
+
+    #[test]
+    fn misaligned_payload_rejected() {
+        let pkt = sample();
+        let mut buf = Vec::new();
+        pkt.emit(&mut buf);
+        buf.push(0xAB); // payload no longer multiple of 4
+        assert!(CollPacket::parse(&buf).is_none());
+    }
+}

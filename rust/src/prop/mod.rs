@@ -1,0 +1,93 @@
+//! Quickcheck-lite: a deterministic property-test runner.
+//!
+//! The offline build has no proptest crate; this gives the pieces the
+//! invariant tests need — a seeded case generator driving a closure N
+//! times, with the failing case's seed printed so any failure replays
+//! exactly.
+
+use crate::sim::SplitMix64;
+
+/// Run `prop` against `n` generated cases.  On panic, the case index and
+/// derived seed are attached so the failure is reproducible with
+/// `replay_case`.
+pub fn for_each_case(n: usize, master_seed: u64, mut prop: impl FnMut(&mut SplitMix64)) {
+    let mut master = SplitMix64::new(master_seed);
+    for case in 0..n {
+        let case_seed = master.next_u64();
+        let mut rng = SplitMix64::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(payload) = result {
+            eprintln!(
+                "property failed at case {case}/{n}: replay with replay_case({case_seed:#x})"
+            );
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Re-run a single failing case by its printed seed.
+pub fn replay_case(case_seed: u64, mut prop: impl FnMut(&mut SplitMix64)) {
+    let mut rng = SplitMix64::new(case_seed);
+    prop(&mut rng);
+}
+
+/// Pick one element of a slice.
+pub fn choose<'a, T>(rng: &mut SplitMix64, items: &'a [T]) -> &'a T {
+    &items[rng.next_below(items.len() as u64) as usize]
+}
+
+/// Random i32 vector of length `n` with entries in [-bound, bound].
+pub fn vec_i32(rng: &mut SplitMix64, n: usize, bound: i64) -> Vec<i32> {
+    (0..n).map(|_| rng.range_i64(-bound, bound) as i32).collect()
+}
+
+/// A random permutation of 0..n (Fisher-Yates).
+pub fn permutation(rng: &mut SplitMix64, n: usize) -> Vec<usize> {
+    let mut v: Vec<usize> = (0..n).collect();
+    for i in (1..n).rev() {
+        let j = rng.next_below(i as u64 + 1) as usize;
+        v.swap(i, j);
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut count = 0;
+        for_each_case(25, 1, |_| count += 1);
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        let mut a = Vec::new();
+        for_each_case(5, 42, |rng| a.push(rng.next_u64()));
+        let mut b = Vec::new();
+        for_each_case(5, 42, |rng| b.push(rng.next_u64()));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        for_each_case(20, 7, |rng| {
+            let n = 1 + rng.next_below(20) as usize;
+            let mut p = permutation(rng, n);
+            p.sort_unstable();
+            assert_eq!(p, (0..n).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failure_propagates() {
+        let mut case = 0;
+        for_each_case(10, 3, |_| {
+            case += 1;
+            assert!(case < 5, "fails at the fifth case");
+        });
+    }
+}

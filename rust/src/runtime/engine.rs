@@ -1,0 +1,96 @@
+//! The [`Compute`] trait both engines implement, and engine construction.
+
+use anyhow::Result;
+
+use crate::config::EngineKind;
+use crate::data::{Op, Payload};
+
+/// Payload reductions used across the system.  Implementations must be
+/// deterministic: the simulator's reproducibility property depends on it.
+pub trait Compute {
+    /// Elementwise `a (op) b`; shapes and dtypes must match.
+    fn combine(&self, a: &Payload, b: &Payload, op: Op) -> Result<Payload>;
+
+    /// Prefix scan of a payload (any length; engines chunk internally).
+    fn scan(&self, x: &Payload, op: Op, inclusive: bool) -> Result<Payload>;
+
+    /// Inverse-subtract of the multicast optimization (SSIII-C):
+    /// `peer = cumulative - own`.  Only valid where `op.invertible_for`
+    /// holds (MPI_SUM over MPI_INT).
+    fn derive(&self, cumulative: &Payload, own: &Payload) -> Result<Payload>;
+
+    /// Engine label for logs and tables.
+    fn name(&self) -> &'static str;
+}
+
+/// Build the configured engine.  `Xla` probes the artifact directory and
+/// falls back to native (with a visible warning) when artifacts are
+/// missing — unit tests must run without `make artifacts`.
+pub fn make_engine(kind: EngineKind, artifact_dir: &str) -> std::rc::Rc<dyn Compute> {
+    match kind {
+        EngineKind::Native => std::rc::Rc::new(super::NativeEngine::new()),
+        EngineKind::Xla => match super::XlaEngine::load(artifact_dir) {
+            Ok(e) => std::rc::Rc::new(e),
+            Err(err) => {
+                eprintln!(
+                    "warning: XLA engine unavailable ({err}); falling back to native compute"
+                );
+                std::rc::Rc::new(super::NativeEngine::new())
+            }
+        },
+    }
+}
+
+/// Oracle helper: prefix over a slice of per-rank payloads, as MPI_Scan
+/// (or MPI_Exscan) defines it.  Used by tests and the verify path.
+pub fn oracle_prefix(
+    engine: &dyn Compute,
+    contributions: &[Payload],
+    op: Op,
+    inclusive: bool,
+    rank: usize,
+) -> Result<Payload> {
+    assert!(rank < contributions.len());
+    if !inclusive && rank == 0 {
+        let c = &contributions[0];
+        return Ok(Payload::identity(c.dtype(), op, c.len()));
+    }
+    let last = if inclusive { rank } else { rank - 1 };
+    let mut acc = contributions[0].clone();
+    for c in &contributions[1..=last] {
+        acc = engine.combine(&acc, c, op)?;
+    }
+    Ok(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dtype;
+
+    #[test]
+    fn oracle_prefix_inclusive_exclusive() {
+        let e = super::super::NativeEngine::new();
+        let xs: Vec<Payload> =
+            (1..=4).map(|r| Payload::from_i32(&[r, 10 * r])).collect();
+        let inc = oracle_prefix(&e, &xs, Op::Sum, true, 3).unwrap();
+        assert_eq!(inc.to_i32(), vec![10, 100]);
+        let exc = oracle_prefix(&e, &xs, Op::Sum, false, 3).unwrap();
+        assert_eq!(exc.to_i32(), vec![6, 60]);
+        let exc0 = oracle_prefix(&e, &xs, Op::Sum, false, 0).unwrap();
+        assert_eq!(exc0.to_i32(), vec![0, 0]);
+        assert_eq!(exc0.dtype(), Dtype::I32);
+    }
+
+    #[test]
+    fn make_engine_native_always_works() {
+        let e = make_engine(crate::config::EngineKind::Native, "/nonexistent");
+        assert_eq!(e.name(), "native");
+    }
+
+    #[test]
+    fn make_engine_xla_falls_back_when_missing() {
+        let e = make_engine(crate::config::EngineKind::Xla, "/definitely/not/here");
+        assert_eq!(e.name(), "native");
+    }
+}

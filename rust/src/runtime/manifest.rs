@@ -1,0 +1,171 @@
+//! Parse `artifacts/manifest.txt` — the key=value index `aot.py` writes.
+//!
+//! One line per artifact:
+//! `name=combine_sum_i32 kind=combine op=sum dtype=i32 block=2048 args=2
+//!  file=combine_sum_i32.hlo.txt`
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::{Dtype, Op};
+
+/// What graph an artifact implements.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum ArtifactKind {
+    Combine,
+    ScanInc,
+    ScanExc,
+    Derive,
+}
+
+impl ArtifactKind {
+    fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "combine" => Some(ArtifactKind::Combine),
+            "scan_inc" => Some(ArtifactKind::ScanInc),
+            "scan_exc" => Some(ArtifactKind::ScanExc),
+            "derive" => Some(ArtifactKind::Derive),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub op: Op,
+    pub dtype: Dtype,
+    pub block: usize,
+    pub args: usize,
+    pub path: PathBuf,
+}
+
+#[derive(Debug, Default)]
+pub struct Manifest {
+    entries: HashMap<(ArtifactKind, Op, Dtype), ManifestEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Manifest::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let mut entries = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut fields: HashMap<&str, &str> = HashMap::new();
+            for kv in line.split_whitespace() {
+                let (k, v) = kv
+                    .split_once('=')
+                    .with_context(|| format!("manifest line {}: bad field {kv}", lineno + 1))?;
+                fields.insert(k, v);
+            }
+            let get = |k: &str| -> Result<&str> {
+                fields.get(k).copied().with_context(|| {
+                    format!("manifest line {}: missing field {k}", lineno + 1)
+                })
+            };
+            let kind = ArtifactKind::from_name(get("kind")?)
+                .with_context(|| format!("line {}: bad kind", lineno + 1))?;
+            let op = Op::from_name(get("op")?)
+                .with_context(|| format!("line {}: bad op", lineno + 1))?;
+            let dtype = Dtype::from_name(get("dtype")?)
+                .with_context(|| format!("line {}: bad dtype", lineno + 1))?;
+            let entry = ManifestEntry {
+                name: get("name")?.to_string(),
+                kind,
+                op,
+                dtype,
+                block: get("block")?.parse().context("block")?,
+                args: get("args")?.parse().context("args")?,
+                path: dir.join(get("file")?),
+            };
+            if entry.block != super::AOT_BLOCK {
+                bail!(
+                    "artifact {} compiled for block {} but runtime expects {}",
+                    entry.name,
+                    entry.block,
+                    super::AOT_BLOCK
+                );
+            }
+            if entries.insert((kind, op, dtype), entry).is_some() {
+                bail!("duplicate artifact for {kind:?}/{}/{}", op.name(), dtype.name());
+            }
+        }
+        if entries.is_empty() {
+            bail!("manifest has no entries");
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn get(&self, kind: ArtifactKind, op: Op, dtype: Dtype) -> Option<&ManifestEntry> {
+        self.entries.get(&(kind, op, dtype))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ManifestEntry> {
+        self.entries.values()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# nf-scan AOT manifest: block=2048
+name=combine_sum_i32 kind=combine op=sum dtype=i32 block=2048 args=2 file=combine_sum_i32.hlo.txt
+name=scan_inc_sum_f32 kind=scan_inc op=sum dtype=f32 block=2048 args=1 file=scan_inc_sum_f32.hlo.txt
+";
+
+    #[test]
+    fn parses_entries() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert_eq!(m.len(), 2);
+        let e = m.get(ArtifactKind::Combine, Op::Sum, Dtype::I32).unwrap();
+        assert_eq!(e.args, 2);
+        assert_eq!(e.path, Path::new("/a/combine_sum_i32.hlo.txt"));
+        assert!(m.get(ArtifactKind::Derive, Op::Sum, Dtype::I32).is_none());
+    }
+
+    #[test]
+    fn wrong_block_rejected() {
+        let bad = SAMPLE.replace("block=2048", "block=1024");
+        assert!(Manifest::parse(&bad, Path::new("/a")).is_err());
+    }
+
+    #[test]
+    fn duplicate_rejected() {
+        let dup = format!("{SAMPLE}{}", SAMPLE.lines().nth(1).unwrap());
+        assert!(Manifest::parse(&dup, Path::new("/a")).is_err());
+    }
+
+    #[test]
+    fn empty_rejected() {
+        assert!(Manifest::parse("# nothing\n", Path::new("/a")).is_err());
+    }
+
+    #[test]
+    fn missing_field_rejected() {
+        assert!(Manifest::parse("name=x kind=combine op=sum dtype=i32 block=2048", Path::new("/a"))
+            .is_err());
+    }
+}

@@ -1,0 +1,28 @@
+//! The compute runtime: executes payload reductions for hosts and NICs.
+//!
+//! Two engines implement the same [`Compute`] trait:
+//!
+//! - [`native::NativeEngine`] — pure Rust, always available, the oracle
+//!   and ablation baseline;
+//! - [`xla_rt::XlaEngine`] — loads the AOT HLO artifacts produced by
+//!   `python/compile/aot.py` (Pallas kernel -> JAX graph -> HLO text),
+//!   compiles them once on the PJRT CPU client, and runs every combine /
+//!   scan / derive through the compiled executables.  Python never runs
+//!   at simulation time.
+
+pub mod engine;
+pub mod manifest;
+pub mod native;
+pub mod xla_rt;
+
+pub use engine::{make_engine, Compute};
+pub use manifest::{Manifest, ManifestEntry};
+pub use native::NativeEngine;
+pub use xla_rt::XlaEngine;
+
+/// Block size (elements) the AOT artifacts were compiled for; must match
+/// `python/compile/kernels/__init__.py::BLOCK`.
+pub const AOT_BLOCK: usize = 2048;
+
+/// Default artifact directory, relative to the repo root.
+pub const ARTIFACT_DIR: &str = "artifacts";

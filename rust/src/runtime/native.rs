@@ -1,0 +1,226 @@
+//! Pure-Rust compute engine: the reference datapath.
+//!
+//! Semantics must match `python/compile/kernels/ref.py` exactly — integer
+//! ops wrap (two's complement, like jnp.int32), float ops follow IEEE.
+//! This engine is the correctness oracle for the XLA engine and the
+//! baseline for the `runtime_combine` ablation bench.
+
+use anyhow::{bail, Result};
+
+use crate::data::{payload, Dtype, Op, Payload};
+
+use super::engine::Compute;
+
+#[derive(Default)]
+pub struct NativeEngine;
+
+impl NativeEngine {
+    pub fn new() -> Self {
+        NativeEngine
+    }
+}
+
+macro_rules! zip_op {
+    ($a:expr, $b:expr, $f:expr) => {
+        $a.iter().zip($b.iter()).map(|(&x, &y)| $f(x, y)).collect::<Vec<_>>()
+    };
+}
+
+// SSPerf iteration 4 (REVERTED): a byte-level combine loop (one output
+// allocation, no typed intermediates) measured 66% SLOWER than this
+// typed-vector path — per-element [u8;N] encode/decode defeats the
+// autovectorizer, while to_i32/apply/from_i32 compiles to clean SIMD.
+// Kept as a negative result in EXPERIMENTS.md SSPerf.
+
+// NOTE (SSPerf): the per-op match must stay INSIDE each apply fn with
+// inline closures — hoisting it into a fn-pointer lookup blocked inlining
+// and with it autovectorization (measured regression, see EXPERIMENTS.md).
+fn apply_i32(op: Op, a: &[i32], b: &[i32]) -> Vec<i32> {
+    match op {
+        Op::Sum => zip_op!(a, b, |x: i32, y: i32| x.wrapping_add(y)),
+        Op::Prod => zip_op!(a, b, |x: i32, y: i32| x.wrapping_mul(y)),
+        Op::Max => zip_op!(a, b, |x: i32, y: i32| x.max(y)),
+        Op::Min => zip_op!(a, b, |x: i32, y: i32| x.min(y)),
+        Op::Band => zip_op!(a, b, |x: i32, y: i32| x & y),
+        Op::Bor => zip_op!(a, b, |x: i32, y: i32| x | y),
+        Op::Bxor => zip_op!(a, b, |x: i32, y: i32| x ^ y),
+    }
+}
+
+fn apply_f32(op: Op, a: &[f32], b: &[f32]) -> Vec<f32> {
+    match op {
+        Op::Sum => zip_op!(a, b, |x: f32, y: f32| x + y),
+        Op::Prod => zip_op!(a, b, |x: f32, y: f32| x * y),
+        Op::Max => zip_op!(a, b, |x: f32, y: f32| x.max(y)),
+        Op::Min => zip_op!(a, b, |x: f32, y: f32| x.min(y)),
+        _ => unreachable!("bitwise on float rejected earlier"),
+    }
+}
+
+fn apply_f64(op: Op, a: &[f64], b: &[f64]) -> Vec<f64> {
+    match op {
+        Op::Sum => zip_op!(a, b, |x: f64, y: f64| x + y),
+        Op::Prod => zip_op!(a, b, |x: f64, y: f64| x * y),
+        Op::Max => zip_op!(a, b, |x: f64, y: f64| x.max(y)),
+        Op::Min => zip_op!(a, b, |x: f64, y: f64| x.min(y)),
+        _ => unreachable!("bitwise on float rejected earlier"),
+    }
+}
+
+impl Compute for NativeEngine {
+    fn combine(&self, a: &Payload, b: &Payload, op: Op) -> Result<Payload> {
+        if a.dtype() != b.dtype() || a.len() != b.len() {
+            bail!(
+                "combine shape/dtype mismatch: {:?}x{} vs {:?}x{}",
+                a.dtype(),
+                a.len(),
+                b.dtype(),
+                b.len()
+            );
+        }
+        if !op.valid_for(a.dtype()) {
+            bail!("{} invalid for {}", op.name(), a.dtype().name());
+        }
+        Ok(match a.dtype() {
+            Dtype::I32 => Payload::from_i32(&apply_i32(op, &a.to_i32(), &b.to_i32())),
+            Dtype::F32 => Payload::from_f32(&apply_f32(op, &a.to_f32(), &b.to_f32())),
+            Dtype::F64 => Payload::from_f64(&apply_f64(op, &a.to_f64(), &b.to_f64())),
+        })
+    }
+
+    fn scan(&self, x: &Payload, op: Op, inclusive: bool) -> Result<Payload> {
+        if !op.valid_for(x.dtype()) {
+            bail!("{} invalid for {}", op.name(), x.dtype().name());
+        }
+        fn scan_vec<T: Copy>(xs: &[T], f: impl Fn(T, T) -> T, ident: T, inclusive: bool) -> Vec<T> {
+            let mut acc = ident;
+            xs.iter()
+                .map(|&v| {
+                    if inclusive {
+                        acc = f(acc, v);
+                        acc
+                    } else {
+                        let out = acc;
+                        acc = f(acc, v);
+                        out
+                    }
+                })
+                .collect()
+        }
+        Ok(match x.dtype() {
+            Dtype::I32 => Payload::from_i32(&scan_vec(
+                &x.to_i32(),
+                |a, b| apply_i32(op, &[a], &[b])[0],
+                payload::identity_i32(op),
+                inclusive,
+            )),
+            Dtype::F32 => Payload::from_f32(&scan_vec(
+                &x.to_f32(),
+                |a, b| apply_f32(op, &[a], &[b])[0],
+                payload::identity_f32(op),
+                inclusive,
+            )),
+            Dtype::F64 => Payload::from_f64(&scan_vec(
+                &x.to_f64(),
+                |a, b| apply_f64(op, &[a], &[b])[0],
+                payload::identity_f64(op),
+                inclusive,
+            )),
+        })
+    }
+
+    fn derive(&self, cumulative: &Payload, own: &Payload) -> Result<Payload> {
+        if cumulative.dtype() != Dtype::I32 || own.dtype() != Dtype::I32 {
+            bail!("derive is only exact for MPI_INT (paper SSIII-C)");
+        }
+        if cumulative.len() != own.len() {
+            bail!("derive length mismatch");
+        }
+        let c = cumulative.to_i32();
+        let o = own.to_i32();
+        Ok(Payload::from_i32(&zip_op!(c, o, |x: i32, y: i32| x.wrapping_sub(y))))
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn combine_all_ops_i32() {
+        let e = NativeEngine::new();
+        let a = Payload::from_i32(&[6, -3, 0b1100]);
+        let b = Payload::from_i32(&[2, 5, 0b1010]);
+        let cases = [
+            (Op::Sum, vec![8, 2, 22]),
+            (Op::Prod, vec![12, -15, 120]),
+            (Op::Max, vec![6, 5, 12]),
+            (Op::Min, vec![2, -3, 10]),
+            (Op::Band, vec![2, 5, 0b1000]),
+            (Op::Bor, vec![6, -3, 0b1110]),
+            (Op::Bxor, vec![4, -8, 0b0110]),
+        ];
+        for (op, want) in cases {
+            assert_eq!(e.combine(&a, &b, op).unwrap().to_i32(), want, "{op:?}");
+        }
+    }
+
+    #[test]
+    fn combine_wraps_like_jnp_int32() {
+        let e = NativeEngine::new();
+        let a = Payload::from_i32(&[i32::MAX]);
+        let b = Payload::from_i32(&[1]);
+        assert_eq!(e.combine(&a, &b, Op::Sum).unwrap().to_i32(), vec![i32::MIN]);
+    }
+
+    #[test]
+    fn combine_floats() {
+        let e = NativeEngine::new();
+        let a = Payload::from_f64(&[1.5, -2.0]);
+        let b = Payload::from_f64(&[0.5, 3.0]);
+        assert_eq!(e.combine(&a, &b, Op::Sum).unwrap().to_f64(), vec![2.0, 1.0]);
+        assert_eq!(e.combine(&a, &b, Op::Max).unwrap().to_f64(), vec![1.5, 3.0]);
+    }
+
+    #[test]
+    fn mismatches_rejected() {
+        let e = NativeEngine::new();
+        let a = Payload::from_i32(&[1]);
+        let b = Payload::from_i32(&[1, 2]);
+        assert!(e.combine(&a, &b, Op::Sum).is_err());
+        let f = Payload::from_f32(&[1.0]);
+        assert!(e.combine(&a, &f, Op::Sum).is_err());
+        assert!(e.combine(&f, &f, Op::Band).is_err());
+    }
+
+    #[test]
+    fn scan_matches_definition() {
+        let e = NativeEngine::new();
+        let x = Payload::from_i32(&[1, 2, 3, 4]);
+        assert_eq!(e.scan(&x, Op::Sum, true).unwrap().to_i32(), vec![1, 3, 6, 10]);
+        assert_eq!(e.scan(&x, Op::Sum, false).unwrap().to_i32(), vec![0, 1, 3, 6]);
+        assert_eq!(e.scan(&x, Op::Max, true).unwrap().to_i32(), vec![1, 2, 3, 4]);
+        let f = Payload::from_f32(&[2.0, 0.5]);
+        assert_eq!(e.scan(&f, Op::Prod, true).unwrap().to_f32(), vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn derive_inverts_sum() {
+        let e = NativeEngine::new();
+        let own = Payload::from_i32(&[5, -7, i32::MAX]);
+        let peer = Payload::from_i32(&[3, 11, 1]);
+        let cum = e.combine(&peer, &own, Op::Sum).unwrap();
+        assert_eq!(e.derive(&cum, &own).unwrap().to_i32(), peer.to_i32());
+    }
+
+    #[test]
+    fn derive_rejects_floats() {
+        let e = NativeEngine::new();
+        let f = Payload::from_f32(&[1.0]);
+        assert!(e.derive(&f, &f).is_err());
+    }
+}

@@ -1,0 +1,357 @@
+//! The PJRT engine: runs the AOT-compiled HLO artifacts.
+//!
+//! Load path (see /opt/xla-example/load_hlo/ and DESIGN.md): HLO *text*
+//! -> `HloModuleProto::from_text_file` -> `XlaComputation` -> PJRT CPU
+//! `compile` -> `execute`.  Executables are compiled lazily on first use
+//! and cached for the life of the engine; the simulation hot path then
+//! only pays literal creation + execution.
+//!
+//! Payloads of arbitrary length are chunked to the fixed AOT block
+//! (2048 elements), the tail padded with the op identity — the same
+//! identity-padding contract `python/compile/model.py` documents.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::data::{Dtype, Op, Payload};
+
+use super::engine::Compute;
+use super::manifest::{ArtifactKind, Manifest};
+use super::{NativeEngine, AOT_BLOCK};
+
+pub struct XlaEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    /// Lazily compiled executables.
+    cache: RefCell<HashMap<(ArtifactKind, Op, Dtype), Rc<xla::PjRtLoadedExecutable>>>,
+    /// Ops without artifacts (e.g. scan for non-sum ops) fall back here;
+    /// the fallback is logged once per key.
+    native: NativeEngine,
+    warned: RefCell<std::collections::HashSet<String>>,
+}
+
+impl XlaEngine {
+    /// Load the manifest and bring up the PJRT CPU client.
+    pub fn load(artifact_dir: &str) -> Result<XlaEngine> {
+        let dir = Path::new(artifact_dir);
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(XlaEngine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            native: NativeEngine::new(),
+            warned: RefCell::new(std::collections::HashSet::new()),
+        })
+    }
+
+    pub fn artifact_count(&self) -> usize {
+        self.manifest.len()
+    }
+
+    /// Diagnostics: wallclock breakdown of one combine call on a full
+    /// block — (literal creation, execute, readback) in ns.  Drives the
+    /// SSPerf iteration in EXPERIMENTS.md.
+    pub fn probe_breakdown(&self, reps: usize) -> Result<(u64, u64, u64)> {
+        let exe = self
+            .executable(ArtifactKind::Combine, Op::Sum, Dtype::I32)?
+            .context("combine_sum_i32 artifact required")?;
+        let a = Payload::from_i32(&(0..AOT_BLOCK as i32).collect::<Vec<_>>());
+        let b = Payload::from_i32(&vec![1i32; AOT_BLOCK]);
+        // warmup
+        let la = Self::literal_of(&a)?;
+        let lb = Self::literal_of(&b)?;
+        let _ = exe.execute::<xla::Literal>(&[la, lb]);
+        let (mut t_lit, mut t_exec, mut t_read) = (0u64, 0u64, 0u64);
+        for _ in 0..reps {
+            let t0 = std::time::Instant::now();
+            let la = Self::literal_of(&a)?;
+            let lb = Self::literal_of(&b)?;
+            let t1 = std::time::Instant::now();
+            let out = exe.execute::<xla::Literal>(&[la, lb]).map_err(|e| anyhow!("{e:?}"))?;
+            let t2 = std::time::Instant::now();
+            let p = Self::read_block(&out[0][0], Dtype::I32)?;
+            std::hint::black_box(&p);
+            let t3 = std::time::Instant::now();
+            t_lit += (t1 - t0).as_nanos() as u64;
+            t_exec += (t2 - t1).as_nanos() as u64;
+            t_read += (t3 - t2).as_nanos() as u64;
+        }
+        let n = reps as u64;
+        Ok((t_lit / n, t_exec / n, t_read / n))
+    }
+
+    /// Compile (or fetch cached) the executable for a key.
+    fn executable(
+        &self,
+        kind: ArtifactKind,
+        op: Op,
+        dtype: Dtype,
+    ) -> Result<Option<Rc<xla::PjRtLoadedExecutable>>> {
+        if let Some(exe) = self.cache.borrow().get(&(kind, op, dtype)) {
+            return Ok(Some(exe.clone()));
+        }
+        let Some(entry) = self.manifest.get(kind, op, dtype) else {
+            return Ok(None);
+        };
+        let proto = xla::HloModuleProto::from_text_file(&entry.path)
+            .map_err(|e| anyhow!("loading {}: {e:?}", entry.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", entry.name))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert((kind, op, dtype), exe.clone());
+        Ok(Some(exe))
+    }
+
+    fn warn_fallback(&self, what: &str) {
+        if self.warned.borrow_mut().insert(what.to_string()) {
+            eprintln!("xla engine: no artifact for {what}; using native fallback");
+        }
+    }
+
+    fn element_type(dtype: Dtype) -> xla::ElementType {
+        match dtype {
+            Dtype::I32 => xla::ElementType::S32,
+            Dtype::F32 => xla::ElementType::F32,
+            Dtype::F64 => xla::ElementType::F64,
+        }
+    }
+
+    /// Payload (exactly AOT_BLOCK elements) -> literal.
+    fn literal_of(block: &Payload) -> Result<xla::Literal> {
+        debug_assert_eq!(block.len(), AOT_BLOCK);
+        xla::Literal::create_from_shape_and_untyped_data(
+            Self::element_type(block.dtype()),
+            &[AOT_BLOCK],
+            block.bytes(),
+        )
+        .map_err(|e| anyhow!("literal: {e:?}"))
+    }
+
+    /// Literal (array root, or legacy 1-tuple root) -> payload.
+    fn payload_of(lit: xla::Literal, dtype: Dtype) -> Result<Payload> {
+        let out = match lit.shape() {
+            Ok(xla::Shape::Tuple(_)) => lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?,
+            _ => lit,
+        };
+        Ok(match dtype {
+            Dtype::I32 => {
+                Payload::from_i32(&out.to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?)
+            }
+            Dtype::F32 => {
+                Payload::from_f32(&out.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?)
+            }
+            Dtype::F64 => {
+                Payload::from_f64(&out.to_vec::<f64>().map_err(|e| anyhow!("{e:?}"))?)
+            }
+        })
+    }
+
+    /// Read one output block from the result buffer.
+    ///
+    /// SSPerf notes: artifacts are emitted with a plain *array* root
+    /// (aot.py return_tuple=False), so this is to_literal_sync + one
+    /// typed copy — no tuple decomposition.  We measured the seemingly
+    /// cheaper `PjRtBuffer::copy_raw_to_host_sync` at ~126us/block on
+    /// the TFRT CPU plugin (it stages through a slow raw-copy event
+    /// path), vs ~17us for literal materialization — so the literal path
+    /// stays (see EXPERIMENTS.md SSPerf iteration log).
+    fn read_block(buffer: &xla::PjRtBuffer, dtype: Dtype) -> Result<Payload> {
+        let lit = buffer.to_literal_sync().map_err(|e| anyhow!("sync: {e:?}"))?;
+        Self::payload_of(lit, dtype)
+    }
+
+    /// Run a 2-arg block executable over payload chunks.
+    fn run_binary_chunked(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        a: &Payload,
+        b: &Payload,
+        pad_op: Op,
+    ) -> Result<Payload> {
+        let n = a.len();
+        let mut out_chunks = Vec::with_capacity(n.div_ceil(AOT_BLOCK));
+        let mut i = 0;
+        while i < n {
+            let len = AOT_BLOCK.min(n - i);
+            let mut ca = a.slice(i, len);
+            let mut cb = b.slice(i, len);
+            ca.pad_to(pad_op, AOT_BLOCK);
+            cb.pad_to(pad_op, AOT_BLOCK);
+            let la = Self::literal_of(&ca)?;
+            let lb = Self::literal_of(&cb)?;
+            let out = exe.execute::<xla::Literal>(&[la, lb]).map_err(|e| anyhow!("execute: {e:?}"))?;
+            let mut chunk = Self::read_block(&out[0][0], a.dtype())?;
+            chunk.truncate(len);
+            out_chunks.push(chunk);
+            i += len;
+        }
+        Ok(Payload::concat(&out_chunks))
+    }
+}
+
+impl Compute for XlaEngine {
+    fn combine(&self, a: &Payload, b: &Payload, op: Op) -> Result<Payload> {
+        if a.dtype() != b.dtype() || a.len() != b.len() {
+            bail!("combine shape/dtype mismatch");
+        }
+        if a.is_empty() {
+            return Ok(a.clone());
+        }
+        match self.executable(ArtifactKind::Combine, op, a.dtype())? {
+            Some(exe) => self.run_binary_chunked(&exe, a, b, op),
+            None => {
+                self.warn_fallback(&format!("combine/{}/{}", op.name(), a.dtype().name()));
+                self.native.combine(a, b, op)
+            }
+        }
+    }
+
+    fn scan(&self, x: &Payload, op: Op, inclusive: bool) -> Result<Payload> {
+        if x.is_empty() {
+            return Ok(x.clone());
+        }
+        let kind = if inclusive { ArtifactKind::ScanInc } else { ArtifactKind::ScanExc };
+        let Some(exe) = self.executable(kind, op, x.dtype())? else {
+            self.warn_fallback(&format!(
+                "scan_{}/{}/{}",
+                if inclusive { "inc" } else { "exc" },
+                op.name(),
+                x.dtype().name()
+            ));
+            return self.native.scan(x, op, inclusive);
+        };
+        // inclusive-scan executable per block + carry across blocks; the
+        // exclusive artifact is only valid for the first block (later
+        // blocks must shift by the *inclusive* carry), so multi-block
+        // exclusive scans compose inclusive blocks and shift locally.
+        let n = x.len();
+        if n <= AOT_BLOCK {
+            let mut cx = x.clone();
+            cx.pad_to(op, AOT_BLOCK);
+            let lit = Self::literal_of(&cx)?;
+            let result =
+                exe.execute::<xla::Literal>(&[lit]).map_err(|e| anyhow!("execute: {e:?}"))?;
+            let mut out = Self::read_block(&result[0][0], x.dtype())?;
+            out.truncate(n);
+            return Ok(out);
+        }
+        // multi-block: inclusive scan each block, combine with broadcast
+        // carry, then (if exclusive) shift right by one with the identity.
+        let inc_exe = self
+            .executable(ArtifactKind::ScanInc, op, x.dtype())?
+            .context("multi-block scan needs the inclusive artifact")?;
+        let mut chunks = Vec::new();
+        let mut carry: Option<Payload> = None;
+        let mut i = 0;
+        while i < n {
+            let len = AOT_BLOCK.min(n - i);
+            let mut cx = x.slice(i, len);
+            cx.pad_to(op, AOT_BLOCK);
+            let lit = Self::literal_of(&cx)?;
+            let result =
+                inc_exe.execute::<xla::Literal>(&[lit]).map_err(|e| anyhow!("execute: {e:?}"))?;
+            let mut blk = Self::read_block(&result[0][0], x.dtype())?;
+            blk.truncate(len);
+            if let Some(c) = &carry {
+                // broadcast the scalar carry over the block and combine
+                let cb = broadcast_last(c, len);
+                blk = self.combine(&cb, &blk, op)?;
+            }
+            carry = Some(blk.slice(len - 1, 1));
+            chunks.push(blk);
+            i += len;
+        }
+        let inc = Payload::concat(&chunks);
+        if inclusive {
+            Ok(inc)
+        } else {
+            // exclusive = identity ++ inclusive[..n-1]
+            let mut out = Payload::identity(x.dtype(), op, 1);
+            if n > 1 {
+                out = Payload::concat(&[out, inc.slice(0, n - 1)]);
+            }
+            Ok(out)
+        }
+    }
+
+    fn derive(&self, cumulative: &Payload, own: &Payload) -> Result<Payload> {
+        if cumulative.dtype() != Dtype::I32 {
+            bail!("derive is only exact for MPI_INT (paper SSIII-C)");
+        }
+        if cumulative.len() != own.len() {
+            bail!("derive length mismatch");
+        }
+        if cumulative.is_empty() {
+            return Ok(cumulative.clone());
+        }
+        match self.executable(ArtifactKind::Derive, Op::Sum, Dtype::I32)? {
+            // padding with 0 is sound: 0 - 0 = 0 in the pad region
+            Some(exe) => self.run_binary_chunked(&exe, cumulative, own, Op::Sum),
+            None => {
+                self.warn_fallback("derive/sub/i32");
+                self.native.derive(cumulative, own)
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+/// Payload of `n` copies of `p`'s last element (carry broadcast).
+fn broadcast_last(p: &Payload, n: usize) -> Payload {
+    let last = p.slice(p.len() - 1, 1);
+    Payload::concat(&vec![last; n])
+}
+
+#[cfg(test)]
+mod tests {
+    // Integration tests that need real artifacts live in
+    // rust/tests/integration_runtime.rs (they skip when `make artifacts`
+    // hasn't run).  Here: pure helpers only.
+    use super::*;
+
+    #[test]
+    fn broadcast_last_repeats() {
+        let p = Payload::from_i32(&[1, 2, 3]);
+        assert_eq!(broadcast_last(&p, 4).to_i32(), vec![3, 3, 3, 3]);
+    }
+
+    #[test]
+    fn load_missing_dir_errors() {
+        assert!(XlaEngine::load("/no/such/dir").is_err());
+    }
+}
+
+impl XlaEngine {
+    /// TEMPORARY probe for perf investigation.
+    pub fn probe_output_structure(&self) -> Result<()> {
+        let exe = self
+            .executable(ArtifactKind::Combine, Op::Sum, Dtype::I32)?
+            .context("artifact")?;
+        let a = Payload::from_i32(&(0..AOT_BLOCK as i32).collect::<Vec<_>>());
+        let la = Self::literal_of(&a)?;
+        let lb = Self::literal_of(&a)?;
+        let out = exe.execute::<xla::Literal>(&[la, lb]).map_err(|e| anyhow!("{e:?}"))?;
+        println!("replicas={} buffers_per_replica={}", out.len(), out[0].len());
+        for (i, b) in out[0].iter().enumerate() {
+            println!("buffer {i}: shape={:?}", b.on_device_shape());
+        }
+        // try raw copy from buffer 0
+        let mut dst = vec![0i32; AOT_BLOCK];
+        match out[0][0].copy_raw_to_host_sync(&mut dst, 0) {
+            Ok(()) => println!("raw copy OK: dst[0..4]={:?} (want [0,2,4,6])", &dst[..4]),
+            Err(e) => println!("raw copy failed: {e:?}"),
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,52 @@
+//! Event vocabulary of the simulated cluster.
+//!
+//! Four event kinds cover the whole system: host processes acting, data
+//! crossing the host/NIC boundary (in both directions), and frames
+//! arriving at NIC ports.  Costs (host stack, DMA crossing, wire time) are
+//! charged when the event is *scheduled*; the event fires when the thing
+//! has fully happened.
+
+use crate::data::{Dtype, Op, Payload};
+use crate::net::{Frame, PortNo, Rank, SwMsg};
+use crate::packet::{AlgoType, CollType};
+
+/// A host's request to its own NetFPGA: "run this collective for me".
+/// This is the decoded form of the specially-crafted UDP HostRequest
+/// packet (the crossing cost has already been charged).
+#[derive(Clone, Debug)]
+pub struct OffloadRequest {
+    pub rank: Rank,
+    pub comm: u16,
+    pub epoch: u16,
+    pub comm_size: u16,
+    pub coll: CollType,
+    pub algo: AlgoType,
+    pub op: Op,
+    pub dtype: Dtype,
+    pub payload: Payload,
+}
+
+/// Something delivered up a host's protocol stack to the application.
+#[derive(Clone, Debug)]
+pub enum HostMsg {
+    /// A (reassembled) software-MPI message from a peer rank.
+    Sw(SwMsg),
+    /// The NetFPGA's Result packet: final scan outcome for this rank plus
+    /// the elapsed on-NIC time the hardware timestamping measured
+    /// (offload->release, Figs. 6/7).
+    NfResult { epoch: u16, payload: Payload, nic_elapsed_ns: u64 },
+}
+
+/// One scheduled occurrence in the simulation.
+#[derive(Debug)]
+pub enum EventKind {
+    /// The host process at `rank` takes its next driver action (issue the
+    /// next MPI_Scan of the benchmark loop, typically).
+    HostStart { rank: Rank },
+    /// A message/result finished climbing `rank`'s protocol stack.
+    HostRecv { rank: Rank, msg: HostMsg },
+    /// A frame finished arriving at `rank`'s NIC on `port`.
+    NicRecv { rank: Rank, port: PortNo, frame: Frame },
+    /// An offload request finished crossing from host to NIC.
+    NicHostReq { rank: Rank, req: OffloadRequest },
+}

@@ -1,0 +1,22 @@
+//! Deterministic discrete-event simulation core.
+//!
+//! The paper's testbed is eight hosts with NetFPGA NICs wired together; this
+//! module is the clock and event loop that everything (hosts, NICs, wires)
+//! is scheduled on.  Design points:
+//!
+//! - virtual time is `u64` nanoseconds ([`SimTime`]) — the NetFPGA's 8 ns
+//!   clock tick divides it exactly;
+//! - the queue breaks time ties by insertion sequence number, so identical
+//!   runs replay identically (the property tests rely on this);
+//! - randomness (arrival jitter, compute noise) comes only from the seeded
+//!   [`rng::SplitMix64`], never from the OS.
+
+pub mod event;
+pub mod queue;
+pub mod rng;
+pub mod time;
+
+pub use event::{EventKind, HostMsg, OffloadRequest};
+pub use queue::EventQueue;
+pub use rng::SplitMix64;
+pub use time::SimTime;

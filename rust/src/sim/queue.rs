@@ -1,0 +1,129 @@
+//! The event queue: a binary heap ordered by (time, insertion sequence).
+//!
+//! The sequence number makes simultaneous events pop in insertion order,
+//! which makes whole runs bit-reproducible — the determinism property test
+//! (`rust/tests/prop_invariants.rs`) diffs two full simulations.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::event::EventKind;
+use super::time::SimTime;
+
+struct Entry {
+    time: SimTime,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.time, self.seq).cmp(&(other.time, other.seq))
+    }
+}
+
+#[derive(Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<Entry>>,
+    seq: u64,
+    now: SimTime,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), seq: 0, now: SimTime::ZERO }
+    }
+
+    /// Current virtual time (time of the last popped event).
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `kind` at absolute time `at`.  Panics if `at` is in the
+    /// past — an event scheduled before `now` is always a model bug.
+    pub fn push(&mut self, at: SimTime, kind: EventKind) {
+        assert!(at >= self.now, "event scheduled in the past: {at} < {}", self.now);
+        let entry = Entry { time: at, seq: self.seq, kind };
+        self.seq += 1;
+        self.heap.push(Reverse(entry));
+    }
+
+    /// Pop the earliest event, advancing virtual time to it.
+    pub fn pop(&mut self) -> Option<(SimTime, EventKind)> {
+        let Reverse(e) = self.heap.pop()?;
+        self.now = e.time;
+        Some((e.time, e.kind))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::event::EventKind;
+
+    fn marker(rank: usize) -> EventKind {
+        EventKind::HostStart { rank }
+    }
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(SimTime::ns(30), marker(3));
+        q.push(SimTime::ns(10), marker(1));
+        q.push(SimTime::ns(20), marker(2));
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|(t, _)| t.as_ns()).collect();
+        assert_eq!(order, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn ties_break_by_insertion() {
+        let mut q = EventQueue::new();
+        q.push(SimTime::ns(5), marker(0));
+        q.push(SimTime::ns(5), marker(1));
+        q.push(SimTime::ns(5), marker(2));
+        let ranks: Vec<usize> = std::iter::from_fn(|| q.pop())
+            .map(|(_, k)| match k {
+                EventKind::HostStart { rank } => rank,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(ranks, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn now_advances() {
+        let mut q = EventQueue::new();
+        q.push(SimTime::ns(7), marker(0));
+        assert_eq!(q.now(), SimTime::ZERO);
+        q.pop();
+        assert_eq!(q.now(), SimTime::ns(7));
+    }
+
+    #[test]
+    #[should_panic]
+    fn past_event_panics() {
+        let mut q = EventQueue::new();
+        q.push(SimTime::ns(10), marker(0));
+        q.pop();
+        q.push(SimTime::ns(5), marker(1));
+    }
+}

@@ -1,0 +1,108 @@
+//! Virtual time: u64 nanoseconds since simulation start.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// A point in virtual time (ns).  The NetFPGA's 125 MHz clock is exactly
+/// 8 ns per cycle, so cycle counts convert losslessly.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+
+    pub fn ns(v: u64) -> Self {
+        SimTime(v)
+    }
+
+    pub fn us(v: u64) -> Self {
+        SimTime(v * 1_000)
+    }
+
+    pub fn ms(v: u64) -> Self {
+        SimTime(v * 1_000_000)
+    }
+
+    /// NetFPGA cycles (125 MHz -> 8 ns/cycle).
+    pub fn cycles(c: u64) -> Self {
+        SimTime(c * 8)
+    }
+
+    pub fn as_ns(self) -> u64 {
+        self.0
+    }
+
+    pub fn as_us(self) -> f64 {
+        self.0 as f64 / 1_000.0
+    }
+
+    /// Saturating difference — elapsed time between two stamps.
+    pub fn since(self, earlier: SimTime) -> u64 {
+        self.0.saturating_sub(earlier.0)
+    }
+}
+
+impl Add<u64> for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: u64) -> SimTime {
+        SimTime(self.0 + rhs)
+    }
+}
+
+impl Add<SimTime> for SimTime {
+    type Output = SimTime;
+    fn add(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 + rhs.0)
+    }
+}
+
+impl AddAssign<u64> for SimTime {
+    fn add_assign(&mut self, rhs: u64) {
+        self.0 += rhs;
+    }
+}
+
+impl Sub<SimTime> for SimTime {
+    type Output = u64;
+    fn sub(self, rhs: SimTime) -> u64 {
+        self.0.saturating_sub(rhs.0)
+    }
+}
+
+impl fmt::Debug for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.3}us", self.as_us())
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.3}us", self.as_us())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions() {
+        assert_eq!(SimTime::us(3).as_ns(), 3_000);
+        assert_eq!(SimTime::ms(1).as_ns(), 1_000_000);
+        assert_eq!(SimTime::cycles(125_000_000).as_ns(), 1_000_000_000);
+    }
+
+    #[test]
+    fn arithmetic_and_since() {
+        let t = SimTime::ns(100) + 50;
+        assert_eq!(t.as_ns(), 150);
+        assert_eq!(t.since(SimTime::ns(100)), 50);
+        assert_eq!(SimTime::ns(10).since(SimTime::ns(20)), 0, "saturates");
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(SimTime::ns(1) < SimTime::ns(2));
+        assert_eq!(SimTime::ZERO, SimTime::ns(0));
+    }
+}

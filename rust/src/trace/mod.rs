@@ -1,0 +1,169 @@
+//! Event tracing: a ring buffer of simulation milestones and an ASCII
+//! timeline renderer for debugging scan schedules.
+//!
+//! Used by `nfscan run --trace true` style debugging and by tests that
+//! assert event ordering (e.g. "the ACK precedes the result delivery").
+
+use crate::net::Rank;
+use crate::sim::SimTime;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum TraceKind {
+    HostCall,
+    Offload,
+    NicSend,
+    NicRecvd,
+    NicAck,
+    NicResult,
+    HostComplete,
+}
+
+impl TraceKind {
+    fn glyph(self) -> char {
+        match self {
+            TraceKind::HostCall => 'C',
+            TraceKind::Offload => 'O',
+            TraceKind::NicSend => '>',
+            TraceKind::NicRecvd => '<',
+            TraceKind::NicAck => 'a',
+            TraceKind::NicResult => 'R',
+            TraceKind::HostComplete => '*',
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    pub at: SimTime,
+    pub rank: Rank,
+    pub kind: TraceKind,
+    pub detail: String,
+}
+
+/// Bounded trace recorder (keeps the most recent `cap` events).
+#[derive(Debug)]
+pub struct Trace {
+    events: std::collections::VecDeque<TraceEvent>,
+    cap: usize,
+    enabled: bool,
+}
+
+impl Trace {
+    pub fn new(cap: usize, enabled: bool) -> Trace {
+        Trace { events: std::collections::VecDeque::new(), cap, enabled }
+    }
+
+    pub fn disabled() -> Trace {
+        Trace::new(0, false)
+    }
+
+    pub fn record(&mut self, at: SimTime, rank: Rank, kind: TraceKind, detail: impl Into<String>) {
+        if !self.enabled {
+            return;
+        }
+        if self.events.len() == self.cap {
+            self.events.pop_front();
+        }
+        self.events.push_back(TraceEvent { at, rank, kind, detail: detail.into() });
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.events.iter()
+    }
+
+    /// Events of one rank in time order.
+    pub fn of_rank(&self, rank: Rank) -> Vec<&TraceEvent> {
+        self.events.iter().filter(|e| e.rank == rank).collect()
+    }
+
+    /// Render an ASCII timeline: one row per rank, one column per time
+    /// bucket, the last event glyph in each bucket.
+    pub fn timeline(&self, p: usize, cols: usize) -> String {
+        if self.events.is_empty() {
+            return "(empty trace)".to_string();
+        }
+        let t0 = self.events.front().unwrap().at.as_ns();
+        let t1 = self.events.back().unwrap().at.as_ns().max(t0 + 1);
+        let bucket = ((t1 - t0) / cols as u64).max(1);
+        let mut grid = vec![vec![' '; cols]; p];
+        for e in &self.events {
+            if e.rank < p {
+                let col = (((e.at.as_ns() - t0) / bucket) as usize).min(cols - 1);
+                grid[e.rank][col] = e.kind.glyph();
+            }
+        }
+        let mut out = format!(
+            "timeline {:.1}us..{:.1}us ({:.2}us/col)\n",
+            t0 as f64 / 1e3,
+            t1 as f64 / 1e3,
+            bucket as f64 / 1e3
+        );
+        for (r, row) in grid.iter().enumerate() {
+            out.push_str(&format!("r{r:<2}|{}|\n", row.iter().collect::<String>()));
+        }
+        out.push_str("    C=call O=offload >=send <=recv a=ack R=result *=complete\n");
+        out
+    }
+
+    /// Ordering assertion helper: first index of each kind for a rank.
+    pub fn first_of(&self, rank: Rank, kind: TraceKind) -> Option<SimTime> {
+        self.events.iter().find(|e| e.rank == rank && e.kind == kind).map(|e| e.at)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Trace {
+        let mut t = Trace::new(16, true);
+        t.record(SimTime::us(1), 0, TraceKind::HostCall, "call");
+        t.record(SimTime::us(2), 0, TraceKind::Offload, "offload");
+        t.record(SimTime::us(3), 1, TraceKind::NicRecvd, "data");
+        t.record(SimTime::us(4), 0, TraceKind::HostComplete, "done");
+        t
+    }
+
+    #[test]
+    fn records_in_order() {
+        let t = sample();
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.of_rank(0).len(), 3);
+        assert!(t.first_of(0, TraceKind::HostCall) < t.first_of(0, TraceKind::HostComplete));
+    }
+
+    #[test]
+    fn ring_buffer_caps() {
+        let mut t = Trace::new(2, true);
+        for i in 0..5 {
+            t.record(SimTime::us(i), 0, TraceKind::NicSend, "");
+        }
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.iter().next().unwrap().at, SimTime::us(3));
+    }
+
+    #[test]
+    fn disabled_records_nothing() {
+        let mut t = Trace::disabled();
+        t.record(SimTime::us(1), 0, TraceKind::HostCall, "");
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn timeline_renders() {
+        let t = sample();
+        let s = t.timeline(2, 20);
+        assert!(s.contains("r0 |"));
+        assert!(s.contains('C'));
+        assert!(s.contains('*'));
+        assert_eq!(Trace::disabled().timeline(2, 10), "(empty trace)");
+    }
+}

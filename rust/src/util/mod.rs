@@ -1,0 +1,79 @@
+//! Small shared utilities: power-of-two bit math used by every scan
+//! algorithm, and byte/duration formatting for reports.
+
+/// True iff `p` is a power of two (and non-zero).
+pub fn is_pow2(p: usize) -> bool {
+    p != 0 && (p & (p - 1)) == 0
+}
+
+/// floor(log2(p)); panics on 0.
+pub fn log2(p: usize) -> u32 {
+    assert!(p > 0, "log2(0)");
+    usize::BITS - 1 - p.leading_zeros()
+}
+
+/// Smallest multiple of `m` that is >= `n`.
+pub fn round_up(n: usize, m: usize) -> usize {
+    assert!(m > 0);
+    n.div_ceil(m) * m
+}
+
+/// Human-readable byte count for table headers (powers of two: 4B, 1KB...).
+pub fn fmt_bytes(b: usize) -> String {
+    if b >= 1 << 20 && b % (1 << 20) == 0 {
+        format!("{}MB", b >> 20)
+    } else if b >= 1 << 10 && b % (1 << 10) == 0 {
+        format!("{}KB", b >> 10)
+    } else {
+        format!("{b}B")
+    }
+}
+
+/// Nanoseconds -> microseconds with 2 decimals, the unit of every figure
+/// in the paper.
+pub fn ns_to_us(ns: u64) -> f64 {
+    ns as f64 / 1_000.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2_basics() {
+        assert!(is_pow2(1));
+        assert!(is_pow2(8));
+        assert!(!is_pow2(0));
+        assert!(!is_pow2(6));
+    }
+
+    #[test]
+    fn log2_exact_and_floor() {
+        assert_eq!(log2(1), 0);
+        assert_eq!(log2(2), 1);
+        assert_eq!(log2(8), 3);
+        assert_eq!(log2(9), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn log2_zero_panics() {
+        log2(0);
+    }
+
+    #[test]
+    fn round_up_cases() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(4), "4B");
+        assert_eq!(fmt_bytes(1024), "1KB");
+        assert_eq!(fmt_bytes(1 << 20), "1MB");
+        assert_eq!(fmt_bytes(1500), "1500B");
+    }
+}

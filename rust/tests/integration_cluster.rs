@@ -1,0 +1,172 @@
+//! Cluster-level integration: resource limits, flow-control failure
+//! injection, topology penalties, and the application API.
+
+use std::rc::Rc;
+
+use nfscan::cluster::Cluster;
+use nfscan::config::{EngineKind, ExpConfig};
+use nfscan::data::{Dtype, Op, Payload};
+use nfscan::packet::{AlgoType, CollType};
+use nfscan::runtime::make_engine;
+
+fn native() -> Rc<dyn nfscan::runtime::Compute> {
+    make_engine(EngineKind::Native, "artifacts")
+}
+
+#[test]
+fn scan_once_application_api() {
+    let mut cfg = ExpConfig::default();
+    cfg.algo = AlgoType::BinomialTree;
+    cfg.verify = true;
+    let contributions: Vec<Payload> =
+        (0..8).map(|r| Payload::from_i32(&[r + 1, 2 * (r + 1)])).collect();
+    let (results, metrics) = Cluster::scan_once(cfg, native(), contributions).unwrap();
+    assert_eq!(results[0].to_i32(), vec![1, 2]);
+    assert_eq!(results[7].to_i32(), vec![36, 72]);
+    assert_eq!(metrics.host_overall().count(), 8);
+}
+
+#[test]
+fn exscan_once_rank0_gets_identity() {
+    let mut cfg = ExpConfig::default();
+    cfg.coll = CollType::Exscan;
+    cfg.op = Op::Prod;
+    let contributions: Vec<Payload> = (0..8).map(|r| Payload::from_i32(&[r + 2])).collect();
+    let (results, _) = Cluster::scan_once(cfg, native(), contributions).unwrap();
+    assert_eq!(results[0].to_i32(), vec![1], "prod identity");
+    assert_eq!(results[1].to_i32(), vec![2]);
+    assert_eq!(results[3].to_i32(), vec![2 * 3 * 4]);
+}
+
+#[test]
+#[should_panic(expected = "flow control failed")]
+fn ack_disabled_overflows_nic_buffers() {
+    // failure injection: the paper's SSIII-B ACK removed -> upstream
+    // ranks run ahead until a card's engine table / single buffer
+    // overflows.  The model asserts instead of silently dropping.
+    let mut cfg = ExpConfig::default();
+    cfg.algo = AlgoType::Sequential;
+    cfg.offloaded = true;
+    cfg.ack_enabled = false;
+    cfg.iters = 400;
+    cfg.warmup = 0;
+    let mut cluster = Cluster::new(cfg, native());
+    let _ = cluster.run();
+}
+
+#[test]
+fn topology_mismatch_costs_latency() {
+    // sequential on its natural chain vs forced onto a hypercube:
+    // multi-hop forwarding must cost measurable latency.
+    let run = |topology: &str| {
+        let mut cfg = ExpConfig::default();
+        cfg.algo = AlgoType::Sequential;
+        cfg.offloaded = true;
+        cfg.topology = topology.into();
+        cfg.iters = 50;
+        cfg.warmup = 8;
+        cfg.verify = true;
+        let mut cluster = Cluster::new(cfg, native());
+        cluster.run().unwrap()
+    };
+    let chain = run("chain");
+    let cube = run("hypercube");
+    assert_eq!(chain.frames_forwarded.iter().sum::<u64>(), 0);
+    assert!(cube.frames_forwarded.iter().sum::<u64>() > 0);
+    assert!(
+        cube.host_overall().avg_ns() > chain.host_overall().avg_ns(),
+        "forwarding penalty: cube {} vs chain {}",
+        cube.host_overall().avg_ns(),
+        chain.host_overall().avg_ns()
+    );
+}
+
+#[test]
+fn algorithm_selection_policy_is_sane_end_to_end() {
+    // the policy must pick the fastest measured algorithm per situation
+    use nfscan::offload::select_algorithm;
+    let measure = |algo: AlgoType, msg: usize| {
+        let mut cfg = ExpConfig::default();
+        cfg.algo = algo;
+        cfg.offloaded = true;
+        cfg.msg_bytes = msg;
+        cfg.iters = 60;
+        cfg.warmup = 8;
+        let mut cluster = Cluster::new(cfg, native());
+        cluster.run().unwrap().host_overall().avg_ns()
+    };
+    // hypercube, small message: policy says recursive doubling
+    let topo = nfscan::net::Topology::hypercube(8);
+    assert_eq!(select_algorithm(&topo, 64, 8), AlgoType::RecursiveDoubling);
+    // hypercube, large message: policy says binomial — check it measures
+    // faster than rd at that size
+    assert_eq!(select_algorithm(&topo, 16384, 8), AlgoType::BinomialTree);
+    let rd = measure(AlgoType::RecursiveDoubling, 16384);
+    let bin = measure(AlgoType::BinomialTree, 16384);
+    assert!(bin < rd, "binomial {bin} must beat rd {rd} at 16KB");
+}
+
+#[test]
+fn all_dtypes_and_ops_verify_offloaded() {
+    for dtype in Dtype::ALL {
+        for op in Op::ALL {
+            if !op.valid_for(dtype) {
+                continue;
+            }
+            let mut cfg = ExpConfig::default();
+            cfg.algo = AlgoType::RecursiveDoubling;
+            cfg.offloaded = true;
+            cfg.dtype = dtype;
+            cfg.op = op;
+            cfg.msg_bytes = 16 * dtype.size();
+            cfg.iters = 5;
+            cfg.warmup = 1;
+            cfg.verify = true;
+            let mut cluster = Cluster::new(cfg, native());
+            cluster.run().unwrap_or_else(|e| panic!("{dtype:?}/{op:?}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn seq_supports_non_power_of_two() {
+    for p in [3usize, 5, 7, 12] {
+        let mut cfg = ExpConfig::default();
+        cfg.p = p;
+        cfg.algo = AlgoType::Sequential;
+        cfg.offloaded = true;
+        cfg.iters = 10;
+        cfg.warmup = 2;
+        cfg.verify = true;
+        let mut cluster = Cluster::new(cfg, native());
+        cluster.run().unwrap();
+    }
+}
+
+#[test]
+fn engine_table_stays_bounded_under_pipelining() {
+    // back-to-back scans for a long stretch: the per-card engine table
+    // must stay within the hardware cap (checked inside the NIC on every
+    // activation — this run passing IS the assertion).
+    for algo in AlgoType::ALL {
+        let mut cfg = ExpConfig::default();
+        cfg.algo = algo;
+        cfg.offloaded = true;
+        cfg.iters = 300;
+        cfg.warmup = 0;
+        cfg.cost.start_jitter_ns = 50_000; // heavy skew
+        let mut cluster = Cluster::new(cfg, native());
+        cluster.run().unwrap_or_else(|e| panic!("{algo:?}: {e}"));
+    }
+}
+
+#[test]
+fn warmup_iterations_are_not_measured() {
+    let mut cfg = ExpConfig::default();
+    cfg.iters = 10;
+    cfg.warmup = 90;
+    let mut cluster = Cluster::new(cfg, native());
+    let m = cluster.run().unwrap();
+    assert_eq!(m.host_overall().count(), 8 * 10);
+    assert_eq!(m.nic_overall().count(), 8 * 10);
+}

@@ -1,0 +1,125 @@
+//! Integration: the XLA runtime (AOT Pallas->HLO artifacts via PJRT)
+//! against the native oracle.  Skips gracefully when `make artifacts`
+//! hasn't run (unit tests must not require python).
+
+use nfscan::data::{Dtype, Op, Payload};
+use nfscan::runtime::{Compute, NativeEngine, XlaEngine};
+
+fn xla() -> Option<XlaEngine> {
+    match XlaEngine::load("artifacts") {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("skipping: artifacts not built ({err})");
+            None
+        }
+    }
+}
+
+fn i32_payload(n: usize, k: i32) -> Payload {
+    Payload::from_i32(&(0..n as i32).map(|v| (v * k) % 23 - 11).collect::<Vec<_>>())
+}
+
+#[test]
+fn combine_matches_native_all_ops_i32() {
+    let Some(xla) = xla() else { return };
+    let native = NativeEngine::new();
+    for op in Op::ALL {
+        for n in [1usize, 7, 2048, 2049, 6000] {
+            let a = i32_payload(n, 3);
+            let b = i32_payload(n, 5);
+            let x = xla.combine(&a, &b, op).unwrap();
+            let y = native.combine(&a, &b, op).unwrap();
+            assert_eq!(x, y, "op {op:?} n {n}");
+        }
+    }
+}
+
+#[test]
+fn combine_matches_native_floats() {
+    let Some(xla) = xla() else { return };
+    let native = NativeEngine::new();
+    for op in [Op::Sum, Op::Prod, Op::Max, Op::Min] {
+        let a = Payload::from_f32(&(0..3000).map(|v| (v % 13) as f32 * 0.5 - 3.0).collect::<Vec<_>>());
+        let b = Payload::from_f32(&(0..3000).map(|v| (v % 7) as f32 * 0.25).collect::<Vec<_>>());
+        let x = xla.combine(&a, &b, op).unwrap().to_f32();
+        let y = native.combine(&a, &b, op).unwrap().to_f32();
+        for (i, (p, q)) in x.iter().zip(y.iter()).enumerate() {
+            assert!((p - q).abs() < 1e-6, "f32 {op:?} [{i}]: {p} vs {q}");
+        }
+        let a = Payload::from_f64(&(0..3000).map(|v| (v % 13) as f64 * 0.5 - 3.0).collect::<Vec<_>>());
+        let b = Payload::from_f64(&(0..3000).map(|v| (v % 7) as f64 * 0.25).collect::<Vec<_>>());
+        let x = xla.combine(&a, &b, op).unwrap().to_f64();
+        let y = native.combine(&a, &b, op).unwrap().to_f64();
+        for (i, (p, q)) in x.iter().zip(y.iter()).enumerate() {
+            assert!((p - q).abs() < 1e-12, "f64 {op:?} [{i}]: {p} vs {q}");
+        }
+    }
+}
+
+#[test]
+fn scan_matches_native_across_block_boundary() {
+    let Some(xla) = xla() else { return };
+    let native = NativeEngine::new();
+    for inclusive in [true, false] {
+        for n in [1usize, 100, 2048, 2049, 4096, 5000] {
+            let x = i32_payload(n, 7);
+            let a = xla.scan(&x, Op::Sum, inclusive).unwrap();
+            let b = native.scan(&x, Op::Sum, inclusive).unwrap();
+            assert_eq!(a, b, "i32 scan inclusive={inclusive} n={n}");
+        }
+        // f64 with tolerance (association differs across blocks)
+        let x = Payload::from_f64(&(0..5000).map(|v| (v % 17) as f64 * 0.125).collect::<Vec<_>>());
+        let a = xla.scan(&x, Op::Sum, inclusive).unwrap().to_f64();
+        let b = native.scan(&x, Op::Sum, inclusive).unwrap().to_f64();
+        for (i, (p, q)) in a.iter().zip(b.iter()).enumerate() {
+            assert!((p - q).abs() < 1e-8, "f64 scan [{i}]: {p} vs {q}");
+        }
+    }
+}
+
+#[test]
+fn derive_matches_native() {
+    let Some(xla) = xla() else { return };
+    let native = NativeEngine::new();
+    for n in [1usize, 2048, 3000] {
+        let own = i32_payload(n, 3);
+        let peer = i32_payload(n, 9);
+        let cum = native.combine(&peer, &own, Op::Sum).unwrap();
+        assert_eq!(xla.derive(&cum, &own).unwrap(), peer, "n {n}");
+    }
+}
+
+#[test]
+fn scan_over_padding_is_not_polluted() {
+    // padding with the op identity must not leak into real elements:
+    // max with pad=i32::MIN, min with pad=i32::MAX, prod with pad=1
+    let Some(xla) = xla() else { return };
+    let native = NativeEngine::new();
+    for op in [Op::Max, Op::Min, Op::Prod, Op::Sum] {
+        let n = 2047; // one short of the block: forces a pad element
+        let a = i32_payload(n, 3);
+        let b = i32_payload(n, 5);
+        assert_eq!(
+            xla.combine(&a, &b, op).unwrap(),
+            native.combine(&a, &b, op).unwrap(),
+            "op {op:?}"
+        );
+    }
+}
+
+#[test]
+fn full_cluster_on_xla_engine() {
+    // the paper's experiment with every reduction routed through PJRT
+    let Some(_probe) = xla() else { return };
+    let mut cfg = nfscan::config::ExpConfig::default();
+    cfg.engine = nfscan::config::EngineKind::Xla;
+    cfg.verify = true;
+    cfg.iters = 10;
+    cfg.warmup = 2;
+    cfg.msg_bytes = 64;
+    let compute = nfscan::runtime::make_engine(cfg.engine, "artifacts");
+    assert_eq!(compute.name(), "xla");
+    let mut cluster = nfscan::cluster::Cluster::new(cfg, compute);
+    let m = cluster.run().unwrap();
+    assert_eq!(m.host_overall().count(), 8 * 10);
+}

@@ -1,0 +1,246 @@
+//! Property-based invariants over the whole system (quickcheck-lite
+//! runner from `nfscan::prop` — the offline build has no proptest crate).
+//!
+//! The central invariant: for ANY (algorithm, path, p, op, dtype, message
+//! size, collective flavor, arrival skew, seed), every rank's MPI_Scan
+//! result equals the oracle prefix, and the simulation is bit-deterministic
+//! from its seed.
+
+use std::rc::Rc;
+
+use nfscan::cluster::Cluster;
+use nfscan::config::{EngineKind, ExpConfig};
+use nfscan::data::{Dtype, Op, Payload};
+use nfscan::net::frame::{fragment, reassemble};
+use nfscan::net::{Frame, FrameBody, RouteTable, Topology};
+use nfscan::packet::{AlgoType, CollType};
+use nfscan::prop::{choose, for_each_case, permutation, vec_i32};
+use nfscan::runtime::make_engine;
+use nfscan::sim::SplitMix64;
+
+fn random_cfg(rng: &mut SplitMix64) -> ExpConfig {
+    let mut cfg = ExpConfig::default();
+    cfg.algo = *choose(rng, &AlgoType::ALL);
+    cfg.coll = *choose(
+        rng,
+        &[CollType::Scan, CollType::Scan, CollType::Exscan, CollType::Allreduce, CollType::Barrier],
+    );
+    if matches!(cfg.coll, CollType::Allreduce | CollType::Barrier)
+        && cfg.algo == AlgoType::Sequential
+    {
+        cfg.algo = AlgoType::RecursiveDoubling;
+    }
+    cfg.p = match (cfg.algo, cfg.coll) {
+        (AlgoType::Sequential, CollType::Scan | CollType::Exscan) => {
+            *choose(rng, &[2usize, 3, 5, 8, 13])
+        }
+        _ => *choose(rng, &[2usize, 4, 8, 16]),
+    };
+    cfg.offloaded = rng.next_below(2) == 0;
+    cfg.dtype = *choose(rng, &Dtype::ALL);
+    cfg.op = loop {
+        let op = *choose(rng, &Op::ALL);
+        if op.valid_for(cfg.dtype) {
+            break op;
+        }
+    };
+    // sizes spanning sub-element..multi-fragment
+    let elems = *choose(rng, &[1usize, 3, 17, 360, 1000]);
+    cfg.msg_bytes = elems * cfg.dtype.size();
+    cfg.iters = 3;
+    cfg.warmup = 1;
+    cfg.seed = rng.next_u64();
+    cfg.cost.start_jitter_ns = *choose(rng, &[0u64, 5_000, 200_000]);
+    if rng.next_below(3) == 0 {
+        cfg.late_rank = Some(rng.next_below(cfg.p as u64) as usize);
+        cfg.late_delay_ns = rng.range(10_000, 400_000);
+    }
+    cfg.verify = true;
+    cfg
+}
+
+#[test]
+fn every_rank_matches_oracle_everywhere() {
+    // verification happens inside the cluster (cfg.verify): any mismatch
+    // panics with the series + rank + epoch.
+    for_each_case(60, 0xA11_C0DE, |rng| {
+        let cfg = random_cfg(rng);
+        let compute = make_engine(EngineKind::Native, "artifacts");
+        let mut cluster = Cluster::new(cfg.clone(), compute);
+        cluster.run().unwrap_or_else(|e| {
+            panic!("deadlock for {:?}/{}: {e}", cfg.algo, cfg.series_name())
+        });
+    });
+}
+
+#[test]
+fn simulation_is_deterministic_from_seed() {
+    for_each_case(12, 0xDE7E12, |rng| {
+        let cfg = random_cfg(rng);
+        let run = |cfg: ExpConfig| {
+            let compute = make_engine(EngineKind::Native, "artifacts");
+            let mut cluster = Cluster::new(cfg, compute);
+            cluster.run().unwrap()
+        };
+        let a = run(cfg.clone());
+        let b = run(cfg);
+        assert_eq!(a.sim_ns, b.sim_ns);
+        assert_eq!(a.total_frames(), b.total_frames());
+        assert_eq!(a.host_overall().avg_ns(), b.host_overall().avg_ns());
+        assert_eq!(a.host_overall().min_ns(), b.host_overall().min_ns());
+        assert_eq!(a.nic_overall().avg_ns(), b.nic_overall().avg_ns());
+    });
+}
+
+#[test]
+fn scan_once_matches_oracle_for_arbitrary_payloads() {
+    for_each_case(30, 0x5CA_40CE, |rng| {
+        let algo = *choose(rng, &AlgoType::ALL);
+        let p = *choose(rng, &[2usize, 4, 8]);
+        let n = 1 + rng.next_below(64) as usize;
+        let contributions: Vec<Payload> =
+            (0..p).map(|_| Payload::from_i32(&vec_i32(rng, n, 50))).collect();
+        let mut cfg = ExpConfig::default();
+        cfg.p = p;
+        cfg.algo = algo;
+        cfg.offloaded = true;
+        cfg.verify = true;
+        let compute = make_engine(EngineKind::Native, "artifacts");
+        let (results, _) =
+            Cluster::scan_once(cfg, Rc::clone(&compute), contributions.clone()).unwrap();
+        let mut acc = vec![0i64; n];
+        for (rank, c) in contributions.iter().enumerate() {
+            for (i, v) in c.to_i32().iter().enumerate() {
+                acc[i] += *v as i64;
+            }
+            let got = results[rank].to_i32();
+            for (i, &a) in acc.iter().enumerate() {
+                assert_eq!(got[i] as i64, a, "rank {rank} elem {i} ({algo:?})");
+            }
+        }
+    });
+}
+
+#[test]
+fn fragmentation_roundtrips_any_payload() {
+    for_each_case(100, 0xF4A6, |rng| {
+        let n = 1 + rng.next_below(3000) as usize;
+        let p = Payload::from_i32(&vec_i32(rng, n, 1000));
+        let frags = fragment(&p);
+        assert!(!frags.is_empty());
+        // indices are dense and ascending
+        for (i, (idx, total, _, _)) in frags.iter().enumerate() {
+            assert_eq!(*idx as usize, i);
+            assert_eq!(*total as usize, frags.len());
+        }
+        let whole = reassemble(&frags.iter().map(|(_, _, _, c)| c.clone()).collect::<Vec<_>>());
+        assert_eq!(whole, p);
+    });
+}
+
+#[test]
+fn frame_wire_roundtrip_fuzz() {
+    for_each_case(100, 0xF4A7E, |rng| {
+        let n = rng.next_below(300) as usize;
+        let msg = nfscan::net::SwMsg {
+            src: rng.next_below(200) as usize,
+            algo: 1 + rng.next_below(3) as u16,
+            kind: nfscan::net::SwMsgKind::Data,
+            epoch: rng.next_u64() as u32,
+            step: rng.next_below(16) as u16,
+            count: n as u32,
+            frag_idx: 0,
+            frag_total: 1,
+            payload: Payload::from_i32(&vec_i32(rng, n, i32::MAX as i64)),
+        };
+        let f = Frame {
+            src: msg.src,
+            dst: rng.next_below(200) as usize,
+            body: FrameBody::Sw(msg.clone()),
+        };
+        let back = Frame::parse(&f.serialize()).expect("roundtrip");
+        match back.body {
+            FrameBody::Sw(m) => {
+                assert_eq!(m.src, msg.src);
+                assert_eq!(m.epoch, msg.epoch);
+                assert_eq!(m.payload, msg.payload);
+            }
+            _ => panic!("wrong body"),
+        }
+    });
+}
+
+#[test]
+fn corrupted_frames_never_parse_as_valid() {
+    // flip one random byte: the frame must either fail to parse or parse
+    // into something whose payload differs (no silent corruption into a
+    // "valid" identical-claim frame is possible to assert generally, but
+    // header corruption must be caught by checksums/enums).
+    for_each_case(60, 0xBADF, |rng| {
+        let msg = nfscan::net::SwMsg {
+            src: 2,
+            algo: 1,
+            kind: nfscan::net::SwMsgKind::Data,
+            epoch: 7,
+            step: 0,
+            count: 4,
+            frag_idx: 0,
+            frag_total: 1,
+            payload: Payload::from_i32(&[1, 2, 3, 4]),
+        };
+        let f = Frame { src: 2, dst: 5, body: FrameBody::Sw(msg) };
+        let mut bytes = f.serialize();
+        // corrupt within the IP header: always detected by its checksum
+        let pos = 14 + rng.next_below(20) as usize;
+        let bit = 1u8 << rng.next_below(8);
+        bytes[pos] ^= bit;
+        assert!(
+            Frame::parse(&bytes).is_none(),
+            "IP header corruption at byte {pos} (bit {bit:#x}) must be detected"
+        );
+    });
+}
+
+#[test]
+fn routing_reaches_everyone_on_all_topologies() {
+    for_each_case(40, 0x707, |rng| {
+        let p = *choose(rng, &[2usize, 4, 8, 16]);
+        let topo = match rng.next_below(3) {
+            0 => Topology::chain(p),
+            1 if p >= 3 => Topology::ring(p),
+            _ => Topology::hypercube(p),
+        };
+        let routes = RouteTable::build(&topo);
+        let perm = permutation(rng, p);
+        for (i, &src) in perm.iter().enumerate() {
+            let dst = perm[(i + 1) % p];
+            if src != dst {
+                let hops = routes.hops(&topo, src, dst).expect("reachable");
+                assert!(hops >= 1 && hops < p, "{src}->{dst} hops {hops}");
+            }
+        }
+    });
+}
+
+#[test]
+fn sw_seq_pipeline_latency_beats_first_iteration() {
+    // steady-state pipelining: in back-to-back sw sequential runs, the
+    // minimum latency must be well under a cold full-chain traversal.
+    let mut cfg = ExpConfig::default();
+    cfg.algo = AlgoType::Sequential;
+    cfg.offloaded = false;
+    cfg.iters = 100;
+    cfg.warmup = 8;
+    cfg.verify = true;
+    let compute = make_engine(EngineKind::Native, "artifacts");
+    let mut cluster = Cluster::new(cfg.clone(), compute);
+    let m = cluster.run().unwrap();
+    let cold_chain =
+        (cfg.p as u64 - 1) * (cfg.cost.sw_send_overhead_ns + cfg.cost.sw_recv_overhead_ns);
+    assert!(
+        m.host_overall().min_ns() < cold_chain / 2,
+        "pipelined min {} must beat cold chain {}",
+        m.host_overall().min_ns(),
+        cold_chain
+    );
+}
