@@ -57,7 +57,8 @@ fn main() -> anyhow::Result<()> {
     let mut checks = Vec::new();
     for i in 0..sizes.len() {
         checks.push(("sw_seq has the lowest average latency", avg(0, i) < avg(1, i)));
-        checks.push(("sw_seq min is the global min", min(0, i) <= min(1, i) && min(0, i) <= min(2, i)));
+        let global_min = min(0, i) <= min(1, i) && min(0, i) <= min(2, i);
+        checks.push(("sw_seq min is the global min", global_min));
         if sizes[i] <= 4096 {
             checks.push(("NF_rd beats sw_rd significantly (paper regime)", avg(3, i) < avg(1, i)));
         }

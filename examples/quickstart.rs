@@ -41,8 +41,10 @@ fn main() -> anyhow::Result<()> {
     let expect: i32 = (1..=8).sum();
     assert_eq!(results[7].to_i32()[0], expect, "rank 7 sums 1..=8");
 
-    println!("\nend-to-end latency : {:.2} us (avg over ranks)", metrics.host_overall().avg_us());
-    println!("on-NIC latency     : {:.2} us (offload->release timestamps)", metrics.nic_overall().avg_us());
+    let host_avg = metrics.host_overall().avg_us();
+    let nic_avg = metrics.nic_overall().avg_us();
+    println!("\nend-to-end latency : {host_avg:.2} us (avg over ranks)");
+    println!("on-NIC latency     : {nic_avg:.2} us (offload->release timestamps)");
     println!("frames on the wire : {}", metrics.total_frames());
     println!("\nquickstart OK");
     Ok(())

@@ -1,0 +1,54 @@
+"""Optional-hypothesis shim.
+
+The offline test image may lack the hypothesis wheel (it cannot be pip
+installed there), so test modules import `given` / `settings` / `st` /
+`arrays` from here instead of from hypothesis directly.  With hypothesis
+present this module is a pure re-export; without it, every `@given` test
+degrades to a pytest skip while plain tests in the same module keep
+running.
+"""
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    from hypothesis.extra.numpy import arrays
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Absorbs any strategy-building expression without evaluating it
+        (strategies are constructed at decoration time, before the skip
+        mark can take effect)."""
+
+        def __getattr__(self, name):
+            return self
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __or__(self, other):
+            return self
+
+        def __ror__(self, other):
+            return self
+
+    st = _Strategy()
+
+    def arrays(*args, **kwargs):
+        return _Strategy()
+
+    def settings(*args, **kwargs):
+        def decorate(fn):
+            return fn
+
+        return decorate
+
+    def given(*args, **kwargs):
+        # Keep the original function (pytest.mark.parametrize introspects
+        # its signature); the skip mark fires before fixture resolution,
+        # so the hypothesis-provided parameters are never looked up.
+        return pytest.mark.skip(reason="hypothesis not installed")

@@ -8,9 +8,7 @@ signal for the compute datapath the Rust runtime executes.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
-from hypothesis.extra.numpy import arrays
+from hypcompat import arrays, given, settings, st
 
 from compile.kernels import BLOCK, DTYPES, INT_OPS, OPS, combine, ref, scan
 

@@ -4,9 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
-from hypothesis.extra.numpy import arrays
+from hypcompat import arrays, given, settings, st
 
 from compile import model
 from compile.kernels import BLOCK, DTYPES, OPS, ref

@@ -31,19 +31,22 @@ fn main() {
 
     println!("MPI_Barrier, 8 nodes ({iters} iters): avg latency (us)");
     let mut t = Table::new(&["series", "avg_us"]);
-    t.row(vec!["sw_rd".into(), format!("{:.2}", run(CollType::Barrier, AlgoType::RecursiveDoubling, false, 4, iters))]);
-    t.row(vec!["NF_rd".into(), format!("{:.2}", run(CollType::Barrier, AlgoType::RecursiveDoubling, true, 4, iters))]);
-    t.row(vec!["NF_binomial".into(), format!("{:.2}", run(CollType::Barrier, AlgoType::BinomialTree, true, 4, iters))]);
+    let barrier = |algo, nf| format!("{:.2}", run(CollType::Barrier, algo, nf, 4, iters));
+    t.row(vec!["sw_rd".into(), barrier(AlgoType::RecursiveDoubling, false)]);
+    t.row(vec!["NF_rd".into(), barrier(AlgoType::RecursiveDoubling, true)]);
+    t.row(vec!["NF_binomial".into(), barrier(AlgoType::BinomialTree, true)]);
     print!("{}", t.render());
 
     println!("\nMPI_Allreduce, 8 nodes ({iters} iters): avg latency (us) vs msg size");
     let mut t = Table::new(&["msg_size", "sw_rd_us", "NF_rd_us", "NF_binomial_us"]);
     for msg in [4usize, 64, 1024, 4096] {
+        let allreduce =
+            |algo, nf| format!("{:.2}", run(CollType::Allreduce, algo, nf, msg, iters));
         t.row(vec![
             nfscan::util::fmt_bytes(msg),
-            format!("{:.2}", run(CollType::Allreduce, AlgoType::RecursiveDoubling, false, msg, iters)),
-            format!("{:.2}", run(CollType::Allreduce, AlgoType::RecursiveDoubling, true, msg, iters)),
-            format!("{:.2}", run(CollType::Allreduce, AlgoType::BinomialTree, true, msg, iters)),
+            allreduce(AlgoType::RecursiveDoubling, false),
+            allreduce(AlgoType::RecursiveDoubling, true),
+            allreduce(AlgoType::BinomialTree, true),
         ]);
     }
     print!("{}", t.render());

@@ -36,6 +36,24 @@ impl Series {
         };
         format!("{prefix}_{a}")
     }
+
+    /// Inverse of [`Series::name`] — how grid specs name their series
+    /// axis (`series = ["sw_seq", "NF_rd"]`).
+    pub fn from_name(s: &str) -> Option<Series> {
+        let (prefix, algo) = s.split_once('_')?;
+        let offloaded = match prefix {
+            "NF" => true,
+            "sw" => false,
+            _ => return None,
+        };
+        let algo = match algo {
+            "seq" => AlgoType::Sequential,
+            "rd" => AlgoType::RecursiveDoubling,
+            "binomial" => AlgoType::BinomialTree,
+            _ => return None,
+        };
+        Some(Series { algo, offloaded })
+    }
 }
 
 /// Fig. 4/5 series set.  The paper omits software binomial ("it produced
@@ -223,5 +241,15 @@ mod tests {
     fn series_names_match_paper() {
         let names: Vec<String> = paper_series().iter().map(|s| s.name()).collect();
         assert_eq!(names, vec!["sw_seq", "sw_rd", "NF_seq", "NF_rd", "NF_binomial"]);
+    }
+
+    #[test]
+    fn series_name_round_trips() {
+        for s in all_series() {
+            assert_eq!(Series::from_name(&s.name()), Some(s));
+        }
+        assert_eq!(Series::from_name("hw_rd"), None);
+        assert_eq!(Series::from_name("NF_bogus"), None);
+        assert_eq!(Series::from_name("seq"), None);
     }
 }

@@ -58,6 +58,21 @@ impl Args {
         }
     }
 
+    /// Error on any flag outside `allowed` (commands that don't route
+    /// through [`Args::apply_run_flags`] use this so typos are loud).
+    pub fn ensure_only(&self, allowed: &[&str]) -> Result<()> {
+        for key in self.flags.keys() {
+            if !allowed.contains(&key.as_str()) {
+                bail!(
+                    "unknown flag --{key} for {} (allowed: --{})",
+                    self.command,
+                    allowed.join(", --")
+                );
+            }
+        }
+        Ok(())
+    }
+
     /// Apply recognized flags onto an ExpConfig (same keys as the TOML
     /// [run] section); unknown flags error.
     pub fn apply_run_flags(&self, cfg: &mut ExpConfig, extra_ok: &[&str]) -> Result<()> {
@@ -84,7 +99,13 @@ COMMANDS
                          (--algo rd --offloaded true --msg_bytes 64 ...)
   fig4|fig5|fig6|fig7    regenerate a paper figure (--iters N, --engine xla,
                          --sizes 4,64,1024)
-  sweep --config F.toml  run an experiment described by a TOML file
+  sweep --grid F.toml    expand a grid spec (sizes x p x series) and run
+                         every cell in parallel: --jobs N worker threads,
+                         JSON artifacts under --out DIR (default out/).
+                         --grid figs reproduces Figs. 4-7 in one batch
+                         (fig4.json..fig7.json); artifact bytes are
+                         identical for any --jobs.
+  sweep --config F.toml  legacy: run ONE experiment described by a TOML
   selftest               verify the XLA artifact path against native compute
   perf                   wallclock breakdown of one PJRT combine call
   help                   this text
@@ -219,6 +240,70 @@ fn cmd_figure(args: &Args) -> Result<()> {
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
+    if args.get("config").is_some() {
+        if args.get("grid").is_some() {
+            bail!("--config (single run) and --grid (batch) are mutually exclusive");
+        }
+        return cmd_sweep_single(args);
+    }
+    args.ensure_only(&["grid", "jobs", "out", "artifacts", "engine", "iters", "sizes", "csv"])?;
+    let grid = args
+        .get("grid")
+        .ok_or_else(|| anyhow!("sweep needs --grid FILE|figs (or legacy --config FILE)"))?;
+    let mut spec = if grid == crate::sweep::FIGS_GRID {
+        crate::sweep::GridSpec::figs(args.get_usize("iters", 300)?)
+    } else {
+        let text = std::fs::read_to_string(grid).with_context(|| format!("reading {grid}"))?;
+        let mut spec =
+            crate::sweep::GridSpec::from_toml(&text).map_err(|e| anyhow!("{grid}: {e}"))?;
+        // CLI overrides beat the file's [run]/[grid] values (re-validated
+        // when run_grid expands)
+        if let Some(iters) = args.get("iters") {
+            spec.base.iters = iters.parse().with_context(|| "--iters")?;
+        }
+        spec
+    };
+    if args.get("sizes").is_some() {
+        spec.sizes = parse_sizes(args)?;
+    }
+    if let Some(e) = args.get("engine") {
+        spec.base.engine =
+            EngineKind::from_name(e).ok_or_else(|| anyhow!("unknown engine {e}"))?;
+    }
+    let default_jobs = std::thread::available_parallelism().map_or(1, |n| n.get());
+    let jobs = args.get_usize("jobs", default_jobs)?;
+    let out = std::path::Path::new(args.get("out").unwrap_or("out"));
+    let artifacts = args.get("artifacts").unwrap_or(crate::runtime::ARTIFACT_DIR);
+
+    let n = spec.n_jobs();
+    println!(
+        "sweep {}: {} jobs ({} series x {} p x {} sizes) on {} workers",
+        spec.name,
+        n,
+        spec.series.len(),
+        spec.ps.len(),
+        spec.sizes.len(),
+        jobs.clamp(1, n.max(1))
+    );
+    let t0 = std::time::Instant::now();
+    let report = crate::sweep::run_grid(&spec, jobs, artifacts)?;
+    let wallclock = t0.elapsed().as_secs_f64();
+    if args.get("csv") == Some("true") {
+        print!("{}", report.summary_table().to_csv());
+    } else {
+        print!("{}", report.summary_table().render());
+    }
+    let files = report.write_artifacts(out)?;
+    for f in &files {
+        println!("wrote {}", f.display());
+    }
+    println!("[{n} jobs in {wallclock:.2}s wallclock]");
+    Ok(())
+}
+
+/// Legacy single-experiment sweep (`--config F.toml`).
+fn cmd_sweep_single(args: &Args) -> Result<()> {
+    args.ensure_only(&["config", "artifacts"])?;
     let path = args.get("config").ok_or_else(|| anyhow!("sweep needs --config FILE"))?;
     let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
     let cfg = ExpConfig::from_toml(&text).map_err(|e| anyhow!("{path}: {e}"))?;
@@ -281,9 +366,16 @@ fn cmd_perf(args: &Args) -> Result<()> {
     let (lit, exec, read) = xla.probe_breakdown(reps)?;
     let total = lit + exec + read;
     println!("combine-call breakdown over one 2048-element block ({reps} reps):");
-    println!("  literal creation : {:>8.2} us ({:>4.1}%)", lit as f64 / 1e3, 100.0 * lit as f64 / total as f64);
-    println!("  pjrt execute     : {:>8.2} us ({:>4.1}%)", exec as f64 / 1e3, 100.0 * exec as f64 / total as f64);
-    println!("  readback+untuple : {:>8.2} us ({:>4.1}%)", read as f64 / 1e3, 100.0 * read as f64 / total as f64);
+    let line = |label: &str, ns: u64| {
+        println!(
+            "  {label} : {:>8.2} us ({:>4.1}%)",
+            ns as f64 / 1e3,
+            100.0 * ns as f64 / total as f64
+        );
+    };
+    line("literal creation", lit);
+    line("pjrt execute    ", exec);
+    line("readback+untuple", read);
     println!("  total            : {:>8.2} us", total as f64 / 1e3);
     Ok(())
 }
@@ -333,5 +425,51 @@ mod tests {
     fn quickstart_runs() {
         let a = Args::parse(&argv(&["quickstart", "--iters", "10", "--warmup", "2"])).unwrap();
         cmd_quickstart(&a).unwrap();
+    }
+
+    #[test]
+    fn sweep_grid_end_to_end() {
+        let dir = std::env::temp_dir().join(format!("nfscan_cli_sweep_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let grid = dir.join("grid.toml");
+        std::fs::write(
+            &grid,
+            "[grid]\nname = \"mini\"\nsizes = [4, 64]\nseries = [\"NF_rd\"]\n\
+             [run]\niters = 5\nwarmup = 1\n",
+        )
+        .unwrap();
+        let out = dir.join("out");
+        let a = Args::parse(&argv(&[
+            "sweep",
+            "--grid",
+            grid.to_str().unwrap(),
+            "--jobs",
+            "2",
+            "--out",
+            out.to_str().unwrap(),
+        ]))
+        .unwrap();
+        cmd_sweep(&a).unwrap();
+        let report = std::fs::read_to_string(out.join("mini.json")).unwrap();
+        let doc = crate::metrics::json::Json::parse(&report).unwrap();
+        assert_eq!(doc.get("jobs").unwrap().as_arr().unwrap().len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sweep_without_grid_or_config_errors() {
+        let a = Args::parse(&argv(&["sweep"])).unwrap();
+        let err = cmd_sweep(&a).unwrap_err();
+        assert!(format!("{err}").contains("--grid"));
+    }
+
+    #[test]
+    fn sweep_rejects_typoed_and_conflicting_flags() {
+        let a = Args::parse(&argv(&["sweep", "--grid", "figs", "--iter", "5"])).unwrap();
+        let err = format!("{}", cmd_sweep(&a).unwrap_err());
+        assert!(err.contains("--iter"), "typo must be named: {err}");
+        let a = Args::parse(&argv(&["sweep", "--grid", "figs", "--config", "x.toml"])).unwrap();
+        let err = format!("{}", cmd_sweep(&a).unwrap_err());
+        assert!(err.contains("mutually exclusive"), "{err}");
     }
 }

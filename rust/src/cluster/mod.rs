@@ -344,7 +344,8 @@ impl Cluster {
     }
 
     fn complete_iteration(&mut self, at: SimTime, rank: Rank, epoch: u32, result: Payload) {
-        self.trace.record(at, rank, crate::trace::TraceKind::HostComplete, format!("epoch {epoch}"));
+        let kind = crate::trace::TraceKind::HostComplete;
+        self.trace.record(at, rank, kind, format!("epoch {epoch}"));
         let host = &mut self.hosts[rank];
         assert!(host.in_flight, "completion without a call at rank {rank}");
         host.in_flight = false;
@@ -370,8 +371,8 @@ impl Cluster {
             .get(&epoch)
             .unwrap_or_else(|| panic!("no contributions for epoch {epoch}"));
         let (_comm, base, gsize) = self.cfg.comm_of(rank);
-        if matches!(self.cfg.coll, crate::packet::CollType::Allreduce | crate::packet::CollType::Barrier)
-        {
+        use crate::packet::CollType as Ct;
+        if matches!(self.cfg.coll, Ct::Allreduce | Ct::Barrier) {
             // every rank of the communicator receives the full reduction;
             // completion implies all its ranks contributed
             let present: Vec<Payload> = contribs
@@ -498,9 +499,9 @@ impl Cluster {
                 // message.
                 let key = (msg.src, msg.kind as u16, msg.step, msg.epoch);
                 let total_bytes = msg.count as usize * msg.payload.dtype().size();
-                if let Some(whole) =
-                    self.hosts[rank].sw_reasm.add(key, msg.frag_idx, msg.frag_total, msg.payload.clone())
-                {
+                let reasm = &mut self.hosts[rank].sw_reasm;
+                let whole = reasm.add(key, msg.frag_idx, msg.frag_total, msg.payload.clone());
+                if let Some(whole) = whole {
                     let full = SwMsg { payload: whole, frag_idx: 0, frag_total: 1, ..msg };
                     let at = now + self.cfg.cost.sw_recv_ns(total_bytes);
                     self.q.push(at, EventKind::HostRecv { rank, msg: HostMsg::Sw(full) });
@@ -508,9 +509,9 @@ impl Cluster {
             }
             FrameBody::Coll(pkt) => {
                 let key = (pkt.rank as Rank, pkt.msg_type.wire_code(), pkt.step, pkt.epoch());
-                if let Some(whole) =
-                    self.nics[rank].reasm.add(key, pkt.frag_idx, pkt.frag_total, pkt.payload.clone())
-                {
+                let reasm = &mut self.nics[rank].reasm;
+                let whole = reasm.add(key, pkt.frag_idx, pkt.frag_total, pkt.payload.clone());
+                if let Some(whole) = whole {
                     let full = CollPacket { payload: whole, frag_idx: 0, frag_total: 1, ..pkt };
                     self.activate_engine(now, rank, full.epoch(), None, Some(full));
                 }

@@ -2,8 +2,10 @@
 //!
 //! The offline build has no serde/toml crates, and experiment configs only
 //! need flat `[section] key = value` files, so we parse exactly that:
-//! bare/quoted strings, integers, floats, booleans.  Anything fancier
-//! (arrays, tables-in-tables, dates) is rejected loudly.
+//! bare/quoted strings, integers, floats, booleans, and single-line
+//! arrays of scalars (`sizes = [4, 64, 1024]` — what grid specs need).
+//! Anything fancier (nested arrays, tables-in-tables, dates) is rejected
+//! loudly.
 
 use std::collections::BTreeMap;
 
@@ -91,6 +93,54 @@ impl TomlDoc {
             })
             .transpose()
     }
+
+    /// Read a key as a list of scalars.  Array values (`[a, "b", c]`)
+    /// split on top-level commas with each element unquoted; a scalar
+    /// value promotes to a one-element list (so grid axes accept both
+    /// `p = 8` and `p = [4, 8]`).
+    pub fn get_list(&self, section: &str, key: &str) -> Result<Option<Vec<String>>, String> {
+        let Some(raw) = self.get(section, key) else {
+            return Ok(None);
+        };
+        let Some(inner) = raw.strip_prefix('[') else {
+            return Ok(Some(vec![raw.to_string()]));
+        };
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| format!("{section}.{key}: unterminated array"))?;
+        let mut out = Vec::new();
+        for item in split_top_level_commas(inner) {
+            let item = item.trim();
+            if item.is_empty() {
+                // tolerate a trailing comma: [4, 64,]
+                continue;
+            }
+            if item.starts_with('[') {
+                return Err(format!("{section}.{key}: nested arrays not supported"));
+            }
+            out.push(unquote(item).map_err(|e| format!("{section}.{key}: {e}"))?);
+        }
+        Ok(Some(out))
+    }
+}
+
+/// Split on commas that sit outside quoted strings.
+fn split_top_level_commas(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
 }
 
 /// Remove a `#` comment, respecting quoted strings.
@@ -107,6 +157,7 @@ fn strip_comment(line: &str) -> &str {
 }
 
 /// Strip surrounding quotes from a string value; reject unsupported TOML.
+/// Arrays are stored raw (brackets kept) and split lazily by `get_list`.
 fn unquote(v: &str) -> Result<String, String> {
     if v.is_empty() {
         return Err("empty value".into());
@@ -117,8 +168,14 @@ fn unquote(v: &str) -> Result<String, String> {
             .map(|s| s.to_string())
             .ok_or_else(|| "unterminated string".into());
     }
-    if v.starts_with('[') || v.starts_with('{') {
-        return Err("arrays/inline tables not supported by the mini parser".into());
+    if v.starts_with('[') {
+        if !v.ends_with(']') {
+            return Err("unterminated array (arrays must be single-line)".into());
+        }
+        return Ok(v.to_string());
+    }
+    if v.starts_with('{') {
+        return Err("inline tables not supported by the mini parser".into());
     }
     Ok(v.to_string())
 }
@@ -160,9 +217,45 @@ mod tests {
     fn errors_are_loud() {
         assert!(TomlDoc::parse("[unterminated").is_err());
         assert!(TomlDoc::parse("novalue").is_err());
-        assert!(TomlDoc::parse("k = [1,2]").is_err());
+        assert!(TomlDoc::parse("k = {a = 1}").is_err());
         assert!(TomlDoc::parse("k = 1\nk = 2").is_err());
         assert!(TomlDoc::parse("k = \"open").is_err());
+        assert!(TomlDoc::parse("k = [1, 2").is_err(), "multi-line arrays rejected");
+    }
+
+    #[test]
+    fn arrays_parse_and_split() {
+        let doc = TomlDoc::parse(
+            r#"
+            [grid]
+            sizes = [4, 64, 1024]
+            series = ["sw_seq", "NF_rd"]
+            trailing = [1, 2,]
+            empty = []
+            scalar = 8
+            tricky = ["a,b", "c"]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(
+            doc.get_list("grid", "sizes").unwrap().unwrap(),
+            vec!["4", "64", "1024"]
+        );
+        assert_eq!(
+            doc.get_list("grid", "series").unwrap().unwrap(),
+            vec!["sw_seq", "NF_rd"]
+        );
+        assert_eq!(doc.get_list("grid", "trailing").unwrap().unwrap(), vec!["1", "2"]);
+        assert!(doc.get_list("grid", "empty").unwrap().unwrap().is_empty());
+        assert_eq!(doc.get_list("grid", "scalar").unwrap().unwrap(), vec!["8"]);
+        assert_eq!(doc.get_list("grid", "tricky").unwrap().unwrap(), vec!["a,b", "c"]);
+        assert_eq!(doc.get_list("grid", "missing").unwrap(), None);
+    }
+
+    #[test]
+    fn nested_arrays_rejected() {
+        let doc = TomlDoc::parse("k = [[1], [2]]").unwrap();
+        assert!(doc.get_list("", "k").is_err());
     }
 
     #[test]

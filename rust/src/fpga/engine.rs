@@ -193,7 +193,14 @@ pub(crate) mod testutil {
             }
         }
 
-        fn pkt(&self, from: Rank, mt: MsgType, step: u16, tag: u32, payload: Payload) -> CollPacket {
+        fn pkt(
+            &self,
+            from: Rank,
+            mt: MsgType,
+            step: u16,
+            tag: u32,
+            payload: Payload,
+        ) -> CollPacket {
             CollPacket {
                 comm_id: 0,
                 comm_size: self.p as u16,

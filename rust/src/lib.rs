@@ -13,6 +13,11 @@
 //! - **Runtime bridge** ([`runtime`]) — loads the artifacts via the PJRT
 //!   CPU client (xla crate) and executes every reduction through them.
 
+// The crate builds configs as `let mut cfg = ExpConfig::default(); cfg.x = ..`
+// on purpose (mirrors the TOML [run] override model); the lint would force
+// struct-update syntax on a 17-field struct.
+#![allow(clippy::field_reassign_with_default)]
+
 pub mod bench;
 pub mod cli;
 pub mod cluster;
@@ -27,5 +32,6 @@ pub mod packet;
 pub mod prop;
 pub mod runtime;
 pub mod sim;
+pub mod sweep;
 pub mod trace;
 pub mod util;

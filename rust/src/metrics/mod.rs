@@ -1,9 +1,14 @@
-//! Latency statistics and table output — what Figs. 4-7 are made of.
+//! Latency statistics and table output — what Figs. 4-7 are made of —
+//! plus the hand-rolled [`json`] tree that sweep artifacts serialize to.
+
+pub mod json;
 
 use crate::util::ns_to_us;
 
+use self::json::Json;
+
 /// Streaming min/avg/max over nanosecond samples.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct LatencyStats {
     count: u64,
     sum_ns: u128,
@@ -61,6 +66,38 @@ impl LatencyStats {
     pub fn min_us(&self) -> f64 {
         ns_to_us(self.min_ns())
     }
+
+    /// Serialize to the artifact JSON shape.  `min_ns` uses the accessor
+    /// (0 when empty) so artifacts never carry the internal u64::MAX
+    /// sentinel; `from_json` restores it.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("count".into(), Json::int(self.count)),
+            ("sum_ns".into(), Json::Int(self.sum_ns as i128)),
+            ("min_ns".into(), Json::int(self.min_ns())),
+            ("max_ns".into(), Json::int(self.max_ns)),
+        ])
+    }
+
+    /// Inverse of [`LatencyStats::to_json`].
+    pub fn from_json(j: &Json) -> Result<LatencyStats, String> {
+        let field = |k: &str| {
+            j.get(k)
+                .and_then(|v| v.as_i128())
+                .ok_or_else(|| format!("latency stats: missing integer field {k:?}"))
+        };
+        let count = u64::try_from(field("count")?).map_err(|e| format!("count: {e}"))?;
+        let sum_ns = u128::try_from(field("sum_ns")?).map_err(|e| format!("sum_ns: {e}"))?;
+        let min_ns = u64::try_from(field("min_ns")?).map_err(|e| format!("min_ns: {e}"))?;
+        let max_ns = u64::try_from(field("max_ns")?).map_err(|e| format!("max_ns: {e}"))?;
+        Ok(LatencyStats {
+            count,
+            sum_ns,
+            // restore the empty-stats sentinel the accessor masked
+            min_ns: if count == 0 { u64::MAX } else { min_ns },
+            max_ns,
+        })
+    }
 }
 
 /// All measurements of one simulated experiment.
@@ -115,6 +152,25 @@ impl RunMetrics {
 
     pub fn total_frames(&self) -> u64 {
         self.frames_tx.iter().sum()
+    }
+
+    /// Full-fidelity JSON: cluster-wide summaries plus per-rank detail.
+    pub fn to_json(&self) -> Json {
+        let u64_arr = |v: &[u64]| Json::Arr(v.iter().map(|&x| Json::int(x)).collect());
+        let stats_arr =
+            |v: &[LatencyStats]| Json::Arr(v.iter().map(|s| s.to_json()).collect());
+        Json::Obj(vec![
+            ("host_overall".into(), self.host_overall().to_json()),
+            ("nic_overall".into(), self.nic_overall().to_json()),
+            ("total_frames".into(), Json::int(self.total_frames())),
+            ("multicasts".into(), Json::int(self.multicasts)),
+            ("sim_ns".into(), Json::int(self.sim_ns)),
+            ("host_latency".into(), stats_arr(&self.host_latency)),
+            ("nic_elapsed".into(), stats_arr(&self.nic_elapsed)),
+            ("frames_tx".into(), u64_arr(&self.frames_tx)),
+            ("bytes_tx".into(), u64_arr(&self.bytes_tx)),
+            ("frames_forwarded".into(), u64_arr(&self.frames_forwarded)),
+        ])
     }
 }
 
@@ -232,5 +288,73 @@ mod tests {
     fn row_width_checked() {
         let mut t = Table::new(&["a", "b"]);
         t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn stats_json_round_trip() {
+        let mut s = LatencyStats::new();
+        s.record(1_234);
+        s.record(99);
+        s.record(5_000_000);
+        let back = LatencyStats::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+        // and through actual bytes
+        let text = s.to_json().pretty();
+        let back = LatencyStats::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn empty_stats_json_round_trip() {
+        let s = LatencyStats::new();
+        let j = s.to_json();
+        assert_eq!(j.get("min_ns").unwrap().as_u64(), Some(0), "no u64::MAX sentinel leaks");
+        assert_eq!(LatencyStats::from_json(&j).unwrap(), s);
+    }
+
+    #[test]
+    fn merge_then_serialize_equals_serialize_of_pooled() {
+        // merge + JSON commute: merging two stats and serializing gives
+        // the same artifact as recording all samples into one.
+        let mut a = LatencyStats::new();
+        let mut b = LatencyStats::new();
+        let mut pooled = LatencyStats::new();
+        for (i, ns) in [10u64, 20, 30, 40, 55].iter().enumerate() {
+            if i % 2 == 0 { a.record(*ns) } else { b.record(*ns) }
+            pooled.record(*ns);
+        }
+        a.merge(&b);
+        assert_eq!(a.to_json().pretty(), pooled.to_json().pretty());
+    }
+
+    #[test]
+    fn stats_json_rejects_malformed() {
+        assert!(LatencyStats::from_json(&Json::Null).is_err());
+        assert!(LatencyStats::from_json(&Json::Obj(vec![(
+            "count".into(),
+            Json::str("three")
+        )]))
+        .is_err());
+        assert!(LatencyStats::from_json(&Json::Obj(vec![(
+            "count".into(),
+            Json::Int(-1)
+        )]))
+        .is_err());
+    }
+
+    #[test]
+    fn run_metrics_json_shape() {
+        let mut m = RunMetrics::new(2);
+        m.host_latency[0].record(100);
+        m.host_latency[1].record(200);
+        m.frames_tx = vec![3, 4];
+        m.sim_ns = 12345;
+        let j = m.to_json();
+        assert_eq!(j.get("total_frames").unwrap().as_u64(), Some(7));
+        assert_eq!(j.get("sim_ns").unwrap().as_u64(), Some(12345));
+        let overall =
+            LatencyStats::from_json(j.get("host_overall").unwrap()).unwrap();
+        assert_eq!(overall.count(), 2);
+        assert_eq!(j.get("host_latency").unwrap().as_arr().unwrap().len(), 2);
     }
 }

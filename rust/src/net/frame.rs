@@ -294,7 +294,8 @@ mod tests {
     fn min_frame_padding() {
         // 4-byte scan payload still occupies a minimum-size frame
         let f = Frame { src: 0, dst: 1, body: FrameBody::Sw(sw_msg(1)) };
-        assert_eq!(f.wire_bytes(), ETH_HDR_LEN + 46.max(IPV4_HDR_LEN + UDP_HDR_LEN + SW_HDR_LEN + 4));
+        let payload_min = 46.max(IPV4_HDR_LEN + UDP_HDR_LEN + SW_HDR_LEN + 4);
+        assert_eq!(f.wire_bytes(), ETH_HDR_LEN + payload_min);
     }
 
     #[test]

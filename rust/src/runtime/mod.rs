@@ -13,6 +13,13 @@
 pub mod engine;
 pub mod manifest;
 pub mod native;
+// Without the `xla` cargo feature (the offline default) the PJRT engine
+// is replaced by a stub whose `load` always errors; `make_engine` then
+// falls back to native compute.  See xla_stub.rs.
+#[cfg(feature = "xla")]
+pub mod xla_rt;
+#[cfg(not(feature = "xla"))]
+#[path = "xla_stub.rs"]
 pub mod xla_rt;
 
 pub use engine::{make_engine, Compute};

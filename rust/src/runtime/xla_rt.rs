@@ -187,7 +187,8 @@ impl XlaEngine {
             cb.pad_to(pad_op, AOT_BLOCK);
             let la = Self::literal_of(&ca)?;
             let lb = Self::literal_of(&cb)?;
-            let out = exe.execute::<xla::Literal>(&[la, lb]).map_err(|e| anyhow!("execute: {e:?}"))?;
+            let out =
+                exe.execute::<xla::Literal>(&[la, lb]).map_err(|e| anyhow!("execute: {e:?}"))?;
             let mut chunk = Self::read_block(&out[0][0], a.dtype())?;
             chunk.truncate(len);
             out_chunks.push(chunk);

@@ -1,0 +1,70 @@
+//! Stub [`XlaEngine`] for builds without the `xla` cargo feature.
+//!
+//! The offline build cannot vendor the `xla` crate (PJRT bindings), so
+//! this stub keeps the public surface of `xla_rt.rs` compiling: `load`
+//! always fails, which makes `make_engine(EngineKind::Xla, ..)` fall back
+//! to native compute and lets callers (selftest, integration tests) skip
+//! gracefully.  No instance can ever be constructed, so the trait methods
+//! are unreachable.
+
+use anyhow::{bail, Result};
+
+use crate::data::{Op, Payload};
+
+use super::engine::Compute;
+
+/// Placeholder with the same API as the real PJRT engine.
+pub struct XlaEngine {
+    _unconstructible: (),
+}
+
+impl XlaEngine {
+    /// Always errors: the XLA runtime is not compiled in.
+    pub fn load(artifact_dir: &str) -> Result<XlaEngine> {
+        bail!(
+            "XLA runtime not compiled in (enable the `xla` cargo feature and \
+             provide the xla crate); cannot load artifacts from {artifact_dir}"
+        )
+    }
+
+    pub fn artifact_count(&self) -> usize {
+        0
+    }
+
+    pub fn probe_breakdown(&self, _reps: usize) -> Result<(u64, u64, u64)> {
+        unreachable!("stub XlaEngine cannot be constructed")
+    }
+
+    pub fn probe_output_structure(&self) -> Result<()> {
+        unreachable!("stub XlaEngine cannot be constructed")
+    }
+}
+
+impl Compute for XlaEngine {
+    fn combine(&self, _a: &Payload, _b: &Payload, _op: Op) -> Result<Payload> {
+        unreachable!("stub XlaEngine cannot be constructed")
+    }
+
+    fn scan(&self, _x: &Payload, _op: Op, _inclusive: bool) -> Result<Payload> {
+        unreachable!("stub XlaEngine cannot be constructed")
+    }
+
+    fn derive(&self, _cumulative: &Payload, _own: &Payload) -> Result<Payload> {
+        unreachable!("stub XlaEngine cannot be constructed")
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_always_errors_without_feature() {
+        let err = XlaEngine::load("artifacts").unwrap_err();
+        assert!(format!("{err}").contains("not compiled in"));
+    }
+}

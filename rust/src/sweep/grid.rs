@@ -1,0 +1,276 @@
+//! Grid specs: a cartesian product of experiment axes, expanded into an
+//! ordered job list.
+//!
+//! A grid TOML has three sections:
+//!
+//! ```toml
+//! [grid]
+//! name   = "myexp"                  # artifact basename (default "sweep")
+//! sizes  = [4, 64, 1024]            # msg_bytes axis
+//! p      = [4, 8]                   # cluster-size axis
+//! series = ["sw_rd", "NF_rd"]       # path x algorithm axis
+//!
+//! [run]                             # scalar ExpConfig overrides
+//! iters = 300
+//!
+//! [cost]                            # cost-model overrides
+//! link_prop_ns = 700
+//! ```
+//!
+//! Expansion order is fixed — series outermost, then p, then sizes
+//! innermost — and each job derives its own seed from (master seed, job
+//! index), so the job list is a pure function of the spec: the parallel
+//! runner can execute it with any `--jobs` and merge back into the same
+//! report bytes.
+
+use crate::bench::{self, Series};
+use crate::config::{ExpConfig, TomlDoc};
+use crate::sim::SplitMix64;
+
+/// The built-in grid name that reproduces Figs. 4-7 in one run.
+pub const FIGS_GRID: &str = "figs";
+
+/// A parsed sweep grid: base config + the three axes.
+#[derive(Clone, Debug)]
+pub struct GridSpec {
+    /// Artifact basename; `"figs"` additionally emits fig4..fig7.json.
+    pub name: String,
+    /// Scalar config every job starts from ([run] + [cost] sections).
+    pub base: ExpConfig,
+    pub series: Vec<Series>,
+    pub ps: Vec<usize>,
+    pub sizes: Vec<usize>,
+}
+
+/// One cell of the grid, ready to simulate.
+#[derive(Clone, Debug)]
+pub struct Job {
+    /// Position in grid order — the merge key the runner sorts by.
+    pub index: usize,
+    pub series: Series,
+    pub cfg: ExpConfig,
+}
+
+/// Independent per-job seed: one SplitMix64 step over the master seed
+/// mixed with the job index, so neighbouring jobs get uncorrelated
+/// streams and the mapping never depends on worker scheduling.
+pub fn derive_seed(master: u64, index: u64) -> u64 {
+    SplitMix64::new(master ^ (index + 1).wrapping_mul(0xA076_1D64_78BD_642F)).next_u64()
+}
+
+impl GridSpec {
+    /// Parse a grid TOML (see module docs for the format).
+    pub fn from_toml(text: &str) -> Result<GridSpec, String> {
+        let doc = TomlDoc::parse(text)?;
+        for section in doc.sections() {
+            if !matches!(section, "grid" | "run" | "cost") {
+                return Err(format!(
+                    "unknown section [{section}] (grid files have [grid]/[run]/[cost])"
+                ));
+            }
+        }
+        let mut base = ExpConfig::default();
+        for (k, v) in doc.section("run") {
+            base.set_run(k, v)?;
+        }
+        for (k, v) in doc.section("cost") {
+            base.cost.set(k, v)?;
+        }
+        for (k, _) in doc.section("grid") {
+            if !matches!(k, "name" | "sizes" | "p" | "series") {
+                return Err(format!("unknown grid key: {k} (expected name/sizes/p/series)"));
+            }
+        }
+        let name = doc.get("grid", "name").unwrap_or("sweep").to_string();
+        let name_ok = |c: char| c.is_ascii_alphanumeric() || c == '_' || c == '-';
+        if name.is_empty() || !name.chars().all(name_ok) {
+            return Err(format!("grid.name {name:?} must be a safe file basename"));
+        }
+
+        let parse_usizes = |key: &str, default: usize| -> Result<Vec<usize>, String> {
+            match doc.get_list("grid", key)? {
+                None => Ok(vec![default]),
+                Some(items) if items.is_empty() => Err(format!("grid.{key} is empty")),
+                Some(items) => items
+                    .iter()
+                    .map(|v| v.parse::<usize>().map_err(|e| format!("grid.{key} item {v:?}: {e}")))
+                    .collect(),
+            }
+        };
+        let sizes = parse_usizes("sizes", base.msg_bytes)?;
+        let ps = parse_usizes("p", base.p)?;
+        let series = match doc.get_list("grid", "series")? {
+            None => vec![Series { algo: base.algo, offloaded: base.offloaded }],
+            Some(items) if items.is_empty() => return Err("grid.series is empty".into()),
+            Some(items) => items
+                .iter()
+                .map(|v| {
+                    Series::from_name(v).ok_or_else(|| {
+                        format!("grid.series item {v:?}: unknown (sw|NF)_(seq|rd|binomial)")
+                    })
+                })
+                .collect::<Result<Vec<_>, _>>()?,
+        };
+
+        let spec = GridSpec { name, base, series, ps, sizes };
+        spec.expand()?; // validate every cell loudly at parse time
+        Ok(spec)
+    }
+
+    /// The built-in grid reproducing the paper's evaluation: all five
+    /// measured series x the OSU size ladder on the 8-node testbed.
+    /// `nfscan sweep --grid figs` turns its report into fig4..fig7.json.
+    pub fn figs(iters: usize) -> GridSpec {
+        GridSpec {
+            name: FIGS_GRID.to_string(),
+            base: bench::figure_base(iters),
+            series: bench::paper_series(),
+            ps: vec![8],
+            sizes: bench::OSU_SIZES.to_vec(),
+        }
+    }
+
+    pub fn n_jobs(&self) -> usize {
+        self.series.len() * self.ps.len() * self.sizes.len()
+    }
+
+    /// Expand to the ordered job list (series, then p, then sizes).
+    /// Every cell is validated; an invalid combination (e.g. rd on a
+    /// non-power-of-two p) names the cell it came from.
+    pub fn expand(&self) -> Result<Vec<Job>, String> {
+        let mut jobs = Vec::with_capacity(self.n_jobs());
+        for &series in &self.series {
+            for &p in &self.ps {
+                for &size in &self.sizes {
+                    let index = jobs.len();
+                    let mut cfg = self.base.clone();
+                    cfg.algo = series.algo;
+                    cfg.offloaded = series.offloaded;
+                    cfg.p = p;
+                    cfg.msg_bytes = size;
+                    // topology comes from [run] (default "auto": each
+                    // algorithm's natural wiring) — never overridden here
+                    cfg.seed = derive_seed(self.base.seed, index as u64);
+                    cfg.validate().map_err(|e| {
+                        format!("grid cell {index} ({} p={p} {size}B): {e}", series.name())
+                    })?;
+                    jobs.push(Job { index, series, cfg });
+                }
+            }
+        }
+        Ok(jobs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packet::AlgoType;
+
+    const GRID: &str = r#"
+        [grid]
+        name = "t"
+        sizes = [4, 64]
+        p = [4, 8]
+        series = ["sw_seq", "NF_rd"]
+        [run]
+        iters = 10
+        seed = 7
+        [cost]
+        link_prop_ns = 700
+    "#;
+
+    #[test]
+    fn expansion_is_the_ordered_cartesian_product() {
+        let spec = GridSpec::from_toml(GRID).unwrap();
+        let jobs = spec.expand().unwrap();
+        assert_eq!(jobs.len(), 2 * 2 * 2);
+        // series outermost, p middle, sizes innermost
+        let key = |j: &Job| (j.series.name(), j.cfg.p, j.cfg.msg_bytes);
+        let got: Vec<_> = jobs.iter().map(key).collect();
+        let want = vec![
+            ("sw_seq".to_string(), 4, 4),
+            ("sw_seq".to_string(), 4, 64),
+            ("sw_seq".to_string(), 8, 4),
+            ("sw_seq".to_string(), 8, 64),
+            ("NF_rd".to_string(), 4, 4),
+            ("NF_rd".to_string(), 4, 64),
+            ("NF_rd".to_string(), 8, 4),
+            ("NF_rd".to_string(), 8, 64),
+        ];
+        assert_eq!(got, want);
+        for (i, j) in jobs.iter().enumerate() {
+            assert_eq!(j.index, i);
+            assert_eq!(j.cfg.iters, 10, "[run] scalars apply to every job");
+            assert_eq!(j.cfg.cost.link_prop_ns, 700, "[cost] applies to every job");
+        }
+    }
+
+    #[test]
+    fn run_topology_is_respected() {
+        let spec = GridSpec::from_toml(
+            "[grid]\nsizes = [4]\nseries = [\"NF_rd\"]\n[run]\ntopology = \"ring\"",
+        )
+        .unwrap();
+        let jobs = spec.expand().unwrap();
+        assert_eq!(jobs[0].cfg.topology, "ring", "[run] topology must not be overridden");
+        let spec = GridSpec::from_toml("[grid]\nsizes = [4]").unwrap();
+        assert_eq!(spec.expand().unwrap()[0].cfg.topology, "auto");
+    }
+
+    #[test]
+    fn seeds_are_derived_stable_and_distinct() {
+        let spec = GridSpec::from_toml(GRID).unwrap();
+        let a = spec.expand().unwrap();
+        let b = spec.expand().unwrap();
+        let seeds: Vec<u64> = a.iter().map(|j| j.cfg.seed).collect();
+        assert_eq!(seeds, b.iter().map(|j| j.cfg.seed).collect::<Vec<_>>(), "stable");
+        let mut uniq = seeds.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), seeds.len(), "distinct");
+        for (i, j) in a.iter().enumerate() {
+            assert_eq!(j.cfg.seed, derive_seed(7, i as u64), "pure function of (master, index)");
+            assert_ne!(j.cfg.seed, 7, "jobs never reuse the master seed verbatim");
+        }
+    }
+
+    #[test]
+    fn scalar_axes_promote_and_default() {
+        let spec = GridSpec::from_toml("[grid]\nsizes = 256\n[run]\np = 4").unwrap();
+        assert_eq!(spec.sizes, vec![256]);
+        assert_eq!(spec.ps, vec![4], "missing axis falls back to [run] scalar");
+        assert_eq!(spec.name, "sweep");
+        let jobs = spec.expand().unwrap();
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].series.algo, AlgoType::RecursiveDoubling);
+        assert!(jobs[0].series.offloaded, "series defaults to the base config path");
+    }
+
+    #[test]
+    fn bad_grids_are_loud() {
+        assert!(GridSpec::from_toml("[grid]\nseries = [\"warp_rd\"]").is_err());
+        assert!(GridSpec::from_toml("[grid]\nsizes = []").is_err());
+        assert!(GridSpec::from_toml("[grid]\nbogus = 1").is_err());
+        assert!(GridSpec::from_toml("[grid]\nname = \"../evil\"").is_err());
+        assert!(GridSpec::from_toml("[bogus]\nk = 1").is_err());
+        // rd needs power-of-two p: cell validation fires at parse time
+        let err = GridSpec::from_toml("[grid]\np = [6]\nseries = [\"NF_rd\"]").unwrap_err();
+        assert!(err.contains("power-of-two"), "{err}");
+        // msg_bytes not a dtype multiple
+        assert!(GridSpec::from_toml("[grid]\nsizes = [7]").is_err());
+    }
+
+    #[test]
+    fn figs_grid_matches_the_paper_evaluation() {
+        let spec = GridSpec::figs(300);
+        assert_eq!(spec.name, FIGS_GRID);
+        assert_eq!(spec.ps, vec![8]);
+        assert_eq!(spec.sizes, crate::bench::OSU_SIZES);
+        let names: Vec<String> = spec.series.iter().map(|s| s.name()).collect();
+        assert_eq!(names, vec!["sw_seq", "sw_rd", "NF_seq", "NF_rd", "NF_binomial"]);
+        assert_eq!(spec.n_jobs(), 5 * crate::bench::OSU_SIZES.len());
+        assert_eq!(spec.base.iters, 300);
+        spec.expand().unwrap();
+    }
+}

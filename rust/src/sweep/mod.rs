@@ -1,0 +1,18 @@
+//! The parallel experiment sweep engine behind `nfscan sweep`.
+//!
+//! The paper's results (Figs. 4-7) are grids — message sizes x process
+//! counts x sw/NF paths — and this module turns such a grid into one
+//! batch job: [`grid`] expands a TOML spec (or the built-in `figs` grid)
+//! into an ordered list of `ExpConfig` jobs with derived seeds,
+//! [`runner`] executes them on N worker threads (engine per thread; the
+//! compute handle is `!Send`), and [`report`] merges the per-job
+//! `RunMetrics` into deterministic JSON artifacts whose bytes do not
+//! depend on `--jobs`.
+
+pub mod grid;
+pub mod report;
+pub mod runner;
+
+pub use grid::{derive_seed, GridSpec, Job, FIGS_GRID};
+pub use report::{JobResult, SweepReport, FIGURES};
+pub use runner::run_grid;

@@ -1,0 +1,350 @@
+//! Sweep results: per-job summaries merged (in grid order) into one
+//! report, serialized to deterministic JSON artifacts.
+//!
+//! Byte-stability contract: everything here is a pure function of the
+//! ordered job results, which are themselves a pure function of the grid
+//! spec — so a sweep writes identical artifact bytes no matter how many
+//! worker threads ran it.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::bench::Metric;
+use crate::metrics::json::Json;
+use crate::metrics::{us, LatencyStats, RunMetrics, Table};
+use crate::util::fmt_bytes;
+
+use super::grid::{GridSpec, Job, FIGS_GRID};
+
+/// One simulated grid cell, reduced to what reports need.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub index: usize,
+    pub series: String,
+    pub p: usize,
+    pub msg_bytes: usize,
+    pub seed: u64,
+    pub host: LatencyStats,
+    pub nic: LatencyStats,
+    pub total_frames: u64,
+    pub multicasts: u64,
+    pub sim_ns: u64,
+}
+
+impl JobResult {
+    pub fn from_metrics(job: &Job, m: &RunMetrics) -> JobResult {
+        JobResult {
+            index: job.index,
+            series: job.series.name(),
+            p: job.cfg.p,
+            msg_bytes: job.cfg.msg_bytes,
+            seed: job.cfg.seed,
+            host: m.host_overall(),
+            nic: m.nic_overall(),
+            total_frames: m.total_frames(),
+            multicasts: m.multicasts,
+            sim_ns: m.sim_ns,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("index".into(), Json::int(self.index as u64)),
+            ("series".into(), Json::str(self.series.clone())),
+            ("p".into(), Json::int(self.p as u64)),
+            ("msg_bytes".into(), Json::int(self.msg_bytes as u64)),
+            ("seed".into(), Json::int(self.seed)),
+            ("host".into(), self.host.to_json()),
+            ("nic".into(), self.nic.to_json()),
+            ("total_frames".into(), Json::int(self.total_frames)),
+            ("multicasts".into(), Json::int(self.multicasts)),
+            ("sim_ns".into(), Json::int(self.sim_ns)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<JobResult, String> {
+        let get_u64 = |k: &str| {
+            j.get(k).and_then(|v| v.as_u64()).ok_or_else(|| format!("job: missing field {k:?}"))
+        };
+        Ok(JobResult {
+            index: get_u64("index")? as usize,
+            series: j
+                .get("series")
+                .and_then(|v| v.as_str())
+                .ok_or("job: missing series")?
+                .to_string(),
+            p: get_u64("p")? as usize,
+            msg_bytes: get_u64("msg_bytes")? as usize,
+            seed: get_u64("seed")?,
+            host: LatencyStats::from_json(j.get("host").ok_or("job: missing host")?)?,
+            nic: LatencyStats::from_json(j.get("nic").ok_or("job: missing nic")?)?,
+            total_frames: get_u64("total_frames")?,
+            multicasts: get_u64("multicasts")?,
+            sim_ns: get_u64("sim_ns")?,
+        })
+    }
+
+    fn metric_us(&self, metric: Metric) -> f64 {
+        match metric {
+            Metric::HostAvg => self.host.avg_us(),
+            Metric::HostMin => self.host.min_us(),
+            Metric::NicAvg => self.nic.avg_us(),
+            Metric::NicMin => self.nic.min_us(),
+        }
+    }
+}
+
+/// The four paper figures the built-in `figs` grid reproduces:
+/// (artifact stem, title, metric, offloaded-series-only).
+pub const FIGURES: &[(&str, &str, Metric, bool)] = &[
+    ("fig4", "average MPI_Scan latency (us), 8 nodes", Metric::HostAvg, false),
+    ("fig5", "minimum MPI_Scan latency (us), 8 nodes", Metric::HostMin, false),
+    ("fig6", "average on-NIC latency after offload (us)", Metric::NicAvg, true),
+    ("fig7", "minimum on-NIC latency after offload (us)", Metric::NicMin, true),
+];
+
+/// All job results of one sweep, in grid order.
+#[derive(Clone, Debug)]
+pub struct SweepReport {
+    pub name: String,
+    pub series: Vec<String>,
+    pub ps: Vec<usize>,
+    pub sizes: Vec<usize>,
+    pub jobs: Vec<JobResult>,
+}
+
+impl SweepReport {
+    pub fn new(spec: &GridSpec, jobs: Vec<JobResult>) -> SweepReport {
+        SweepReport {
+            name: spec.name.clone(),
+            series: spec.series.iter().map(|s| s.name()).collect(),
+            ps: spec.ps.clone(),
+            sizes: spec.sizes.clone(),
+            jobs,
+        }
+    }
+
+    /// The full report as one JSON document.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("grid".into(), Json::str(self.name.clone())),
+            (
+                "series".into(),
+                Json::Arr(self.series.iter().map(|s| Json::str(s.clone())).collect()),
+            ),
+            ("p".into(), Json::Arr(self.ps.iter().map(|&p| Json::int(p as u64)).collect())),
+            (
+                "sizes".into(),
+                Json::Arr(self.sizes.iter().map(|&s| Json::int(s as u64)).collect()),
+            ),
+            ("jobs".into(), Json::Arr(self.jobs.iter().map(|j| j.to_json()).collect())),
+        ])
+    }
+
+    fn job_at(&self, series: &str, p: usize, size: usize) -> Option<&JobResult> {
+        self.jobs
+            .iter()
+            .find(|j| j.series == series && j.p == p && j.msg_bytes == size)
+    }
+
+    /// One figure as JSON: rows = sizes, one value column per series.
+    /// Requires a single-p grid (the paper's figures fix the testbed at
+    /// 8 nodes and sweep message size).
+    pub fn figure_json(&self, stem: &str) -> Result<Json, String> {
+        let &(_, title, metric, nf_only) = FIGURES
+            .iter()
+            .find(|(s, ..)| *s == stem)
+            .ok_or_else(|| format!("unknown figure {stem:?}"))?;
+        let &[p] = self.ps.as_slice() else {
+            return Err(format!("figure {stem} needs a single-p grid, got {:?}", self.ps));
+        };
+        let series: Vec<&String> = self
+            .series
+            .iter()
+            .filter(|s| !nf_only || s.starts_with("NF"))
+            .collect();
+        if series.is_empty() {
+            return Err(format!("figure {stem} has no matching series in this grid"));
+        }
+        let mut cols = Vec::with_capacity(series.len());
+        for name in series {
+            let mut values = Vec::with_capacity(self.sizes.len());
+            for &size in &self.sizes {
+                let job = self.job_at(name, p, size).ok_or_else(|| {
+                    format!("figure {stem}: missing cell {name} p={p} {size}B")
+                })?;
+                values.push(Json::Num(job.metric_us(metric)));
+            }
+            cols.push(Json::Obj(vec![
+                ("name".into(), Json::str(name.clone())),
+                ("values_us".into(), Json::Arr(values)),
+            ]));
+        }
+        Ok(Json::Obj(vec![
+            ("figure".into(), Json::str(stem)),
+            ("title".into(), Json::str(title)),
+            (
+                "metric".into(),
+                Json::str(match metric {
+                    Metric::HostAvg => "host_avg_us",
+                    Metric::HostMin => "host_min_us",
+                    Metric::NicAvg => "nic_avg_us",
+                    Metric::NicMin => "nic_min_us",
+                }),
+            ),
+            ("p".into(), Json::int(p as u64)),
+            (
+                "sizes".into(),
+                Json::Arr(self.sizes.iter().map(|&s| Json::int(s as u64)).collect()),
+            ),
+            ("series".into(), Json::Arr(cols)),
+        ]))
+    }
+
+    /// Write `<name>.json` (always) plus fig4..fig7.json for the
+    /// built-in figs grid.  Returns the files written.
+    pub fn write_artifacts(&self, out_dir: &Path) -> Result<Vec<PathBuf>> {
+        std::fs::create_dir_all(out_dir)
+            .with_context(|| format!("creating {}", out_dir.display()))?;
+        let mut written = Vec::new();
+        let mut emit = |stem: &str, doc: &Json| -> Result<()> {
+            let path = out_dir.join(format!("{stem}.json"));
+            std::fs::write(&path, doc.pretty())
+                .with_context(|| format!("writing {}", path.display()))?;
+            written.push(path);
+            Ok(())
+        };
+        emit(&self.name, &self.to_json())?;
+        if self.name == FIGS_GRID {
+            for (stem, ..) in FIGURES {
+                let doc = self.figure_json(stem).map_err(anyhow::Error::msg)?;
+                emit(stem, &doc)?;
+            }
+        }
+        Ok(written)
+    }
+
+    /// Human summary: one row per job.
+    pub fn summary_table(&self) -> Table {
+        let mut t = Table::new(&[
+            "job", "series", "p", "msg_size", "host_avg_us", "host_min_us", "nic_avg_us",
+            "frames",
+        ]);
+        for j in &self.jobs {
+            t.row(vec![
+                j.index.to_string(),
+                j.series.clone(),
+                j.p.to_string(),
+                fmt_bytes(j.msg_bytes),
+                us(j.host.avg_us()),
+                us(j.host.min_us()),
+                us(j.nic.avg_us()),
+                j.total_frames.to_string(),
+            ]);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(samples: &[u64]) -> LatencyStats {
+        let mut s = LatencyStats::new();
+        for &v in samples {
+            s.record(v);
+        }
+        s
+    }
+
+    fn tiny_report() -> SweepReport {
+        let mk = |index: usize, series: &str, size: usize, base: u64| JobResult {
+            index,
+            series: series.into(),
+            p: 8,
+            msg_bytes: size,
+            seed: 1000 + index as u64,
+            host: stats(&[base, base + 2_000]),
+            nic: stats(&[base / 4]),
+            total_frames: 7,
+            multicasts: 0,
+            sim_ns: 1_000_000,
+        };
+        SweepReport {
+            name: "t".into(),
+            series: vec!["sw_seq".into(), "NF_rd".into()],
+            ps: vec![8],
+            sizes: vec![4, 64],
+            jobs: vec![
+                mk(0, "sw_seq", 4, 40_000),
+                mk(1, "sw_seq", 64, 44_000),
+                mk(2, "NF_rd", 4, 20_000),
+                mk(3, "NF_rd", 64, 26_000),
+            ],
+        }
+    }
+
+    #[test]
+    fn job_result_json_round_trip() {
+        let r = tiny_report();
+        for job in &r.jobs {
+            let text = job.to_json().pretty();
+            let back = JobResult::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back.index, job.index);
+            assert_eq!(back.series, job.series);
+            assert_eq!(back.seed, job.seed);
+            assert_eq!(back.host, job.host);
+            assert_eq!(back.nic, job.nic);
+            assert_eq!(back.to_json().pretty(), text, "emission is stable");
+        }
+    }
+
+    #[test]
+    fn figure_json_selects_metric_and_series() {
+        let r = tiny_report();
+        let fig4 = r.figure_json("fig4").unwrap();
+        assert_eq!(fig4.get("metric").unwrap().as_str(), Some("host_avg_us"));
+        let cols = fig4.get("series").unwrap().as_arr().unwrap();
+        assert_eq!(cols.len(), 2, "fig4 keeps software series");
+        assert_eq!(cols[0].get("name").unwrap().as_str(), Some("sw_seq"));
+        let values = cols[0].get("values_us").unwrap().as_arr().unwrap();
+        // host avg of [40000, 42000] ns = 41 us
+        assert_eq!(values[0].as_f64(), Some(41.0));
+
+        let fig6 = r.figure_json("fig6").unwrap();
+        let cols = fig6.get("series").unwrap().as_arr().unwrap();
+        assert_eq!(cols.len(), 1, "fig6 is NF-only");
+        assert_eq!(cols[0].get("name").unwrap().as_str(), Some("NF_rd"));
+
+        assert!(r.figure_json("fig9").is_err());
+    }
+
+    #[test]
+    fn figure_json_reports_missing_cells() {
+        let mut r = tiny_report();
+        r.jobs.remove(1);
+        let err = r.figure_json("fig4").unwrap_err();
+        assert!(err.contains("missing cell"), "{err}");
+    }
+
+    #[test]
+    fn report_json_lists_jobs_in_grid_order() {
+        let r = tiny_report();
+        let doc = Json::parse(&r.to_json().pretty()).unwrap();
+        let jobs = doc.get("jobs").unwrap().as_arr().unwrap();
+        let idx: Vec<u64> =
+            jobs.iter().map(|j| j.get("index").unwrap().as_u64().unwrap()).collect();
+        assert_eq!(idx, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn summary_table_has_a_row_per_job() {
+        let r = tiny_report();
+        let rendered = r.summary_table().render();
+        assert_eq!(rendered.lines().count(), 2 + r.jobs.len());
+        assert!(rendered.contains("NF_rd"));
+        assert!(rendered.contains("64B"));
+    }
+}

@@ -1,0 +1,160 @@
+//! The parallel sweep runner: N worker threads pull jobs off a shared
+//! cursor and run independent `Cluster` simulations.
+//!
+//! Two properties make `--jobs` invisible in the output:
+//!
+//! - every job's `ExpConfig` (seed included) is fixed at expansion time,
+//!   so a simulation result depends only on the job, never on which
+//!   worker ran it or when;
+//! - results land in a per-job slot and are merged back in grid order.
+//!
+//! The compute engine (`Rc<dyn Compute>`) is deliberately `!Send` — the
+//! PJRT client is single-threaded — so each worker constructs its own
+//! engine inside its thread and shares it across the jobs it happens to
+//! claim.
+
+use std::rc::Rc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::cluster::Cluster;
+use crate::config::EngineKind;
+use crate::runtime::{make_engine, Compute, XlaEngine};
+
+use super::grid::{GridSpec, Job};
+use super::report::{JobResult, SweepReport};
+
+/// Probe the XLA path once on the calling thread so the fallback
+/// warning prints a single time — otherwise every worker would re-probe
+/// the artifact directory and repeat it.
+fn resolve_engine_kind(kind: EngineKind, artifact_dir: &str) -> EngineKind {
+    match kind {
+        EngineKind::Xla => match XlaEngine::load(artifact_dir) {
+            Ok(_) => EngineKind::Xla,
+            Err(err) => {
+                eprintln!(
+                    "warning: XLA engine unavailable ({err:#}); sweep falls back to native compute"
+                );
+                EngineKind::Native
+            }
+        },
+        other => other,
+    }
+}
+
+/// Run every cell of `spec` on up to `jobs` worker threads and merge the
+/// results (in grid order) into one report.  Artifacts derived from the
+/// report are byte-identical for any `jobs >= 1`.
+pub fn run_grid(spec: &GridSpec, jobs: usize, artifact_dir: &str) -> Result<SweepReport> {
+    let job_list = spec.expand().map_err(|e| anyhow!(e))?;
+    let n = job_list.len();
+    if n == 0 {
+        bail!("grid {:?} expands to zero jobs", spec.name);
+    }
+    let workers = jobs.clamp(1, n);
+    let engine_kind = resolve_engine_kind(spec.base.engine, artifact_dir);
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<JobResult, String>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| {
+                // per-thread engine: Rc<dyn Compute> must not cross threads
+                let compute = make_engine(engine_kind, artifact_dir);
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let outcome = run_job(&job_list[i], compute.clone());
+                    *slots[i].lock().expect("result slot poisoned") = Some(outcome);
+                }
+            });
+        }
+    });
+
+    let mut results = Vec::with_capacity(n);
+    for (i, slot) in slots.into_iter().enumerate() {
+        match slot.into_inner().expect("result slot poisoned") {
+            Some(Ok(r)) => results.push(r),
+            Some(Err(e)) => {
+                let job = &job_list[i];
+                bail!(
+                    "job {i} ({} p={} {}B) failed: {e}",
+                    job.series.name(),
+                    job.cfg.p,
+                    job.cfg.msg_bytes
+                );
+            }
+            None => bail!("job {i} was never executed (runner bug)"),
+        }
+    }
+    Ok(SweepReport::new(spec, results))
+}
+
+fn run_job(job: &Job, compute: Rc<dyn Compute>) -> Result<JobResult, String> {
+    let mut cluster = Cluster::new(job.cfg.clone(), compute);
+    let metrics = cluster.run().map_err(|e| format!("{e:#}"))?;
+    Ok(JobResult::from_metrics(job, &metrics))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_grid() -> GridSpec {
+        GridSpec::from_toml(
+            r#"
+            [grid]
+            name = "t"
+            sizes = [4, 64]
+            series = ["sw_seq", "NF_rd", "NF_binomial"]
+            [run]
+            p = 8
+            iters = 12
+            warmup = 2
+            "#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn serial_and_parallel_reports_are_identical() {
+        let spec = tiny_grid();
+        let serial = run_grid(&spec, 1, "artifacts").unwrap();
+        for jobs in [2, 4, 16] {
+            let parallel = run_grid(&spec, jobs, "artifacts").unwrap();
+            assert_eq!(
+                serial.to_json().pretty(),
+                parallel.to_json().pretty(),
+                "--jobs {jobs} must not change the merged report"
+            );
+        }
+    }
+
+    #[test]
+    fn report_covers_every_cell_with_samples() {
+        let spec = tiny_grid();
+        let report = run_grid(&spec, 4, "artifacts").unwrap();
+        assert_eq!(report.jobs.len(), spec.n_jobs());
+        for (i, job) in report.jobs.iter().enumerate() {
+            assert_eq!(job.index, i, "merged in grid order");
+            assert_eq!(job.host.count(), 8 * 12, "iters x ranks samples");
+            assert!(job.sim_ns > 0);
+        }
+        // NF series measured on-NIC latency, sw did not
+        assert!(report.jobs.iter().any(|j| j.series == "NF_rd" && j.nic.count() > 0));
+        assert!(report.jobs.iter().all(|j| j.series != "sw_seq" || j.nic.count() == 0));
+    }
+
+    #[test]
+    fn oversubscribed_workers_cap_at_job_count() {
+        let spec = GridSpec::from_toml("[grid]\nsizes = [4]\n[run]\niters = 5\nwarmup = 1")
+            .unwrap();
+        let report = run_grid(&spec, 64, "artifacts").unwrap();
+        assert_eq!(report.jobs.len(), 1);
+    }
+}

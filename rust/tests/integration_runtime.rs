@@ -39,14 +39,16 @@ fn combine_matches_native_floats() {
     let Some(xla) = xla() else { return };
     let native = NativeEngine::new();
     for op in [Op::Sum, Op::Prod, Op::Max, Op::Min] {
-        let a = Payload::from_f32(&(0..3000).map(|v| (v % 13) as f32 * 0.5 - 3.0).collect::<Vec<_>>());
+        let a =
+            Payload::from_f32(&(0..3000).map(|v| (v % 13) as f32 * 0.5 - 3.0).collect::<Vec<_>>());
         let b = Payload::from_f32(&(0..3000).map(|v| (v % 7) as f32 * 0.25).collect::<Vec<_>>());
         let x = xla.combine(&a, &b, op).unwrap().to_f32();
         let y = native.combine(&a, &b, op).unwrap().to_f32();
         for (i, (p, q)) in x.iter().zip(y.iter()).enumerate() {
             assert!((p - q).abs() < 1e-6, "f32 {op:?} [{i}]: {p} vs {q}");
         }
-        let a = Payload::from_f64(&(0..3000).map(|v| (v % 13) as f64 * 0.5 - 3.0).collect::<Vec<_>>());
+        let a =
+            Payload::from_f64(&(0..3000).map(|v| (v % 13) as f64 * 0.5 - 3.0).collect::<Vec<_>>());
         let b = Payload::from_f64(&(0..3000).map(|v| (v % 7) as f64 * 0.25).collect::<Vec<_>>());
         let x = xla.combine(&a, &b, op).unwrap().to_f64();
         let y = native.combine(&a, &b, op).unwrap().to_f64();

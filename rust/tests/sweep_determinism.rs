@@ -1,0 +1,113 @@
+//! Regression: sweep artifacts are byte-identical regardless of worker
+//! count, and the built-in figs grid emits all four figure artifacts.
+
+use std::path::PathBuf;
+
+use nfscan::metrics::json::Json;
+use nfscan::sweep::{run_grid, GridSpec};
+
+const GRID: &str = r#"
+    [grid]
+    name = "det"
+    sizes = [4, 256]
+    p = [4, 8]
+    series = ["sw_seq", "sw_rd", "NF_rd"]
+
+    [run]
+    iters = 15
+    warmup = 3
+    seed = 99
+"#;
+
+fn scratch(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("nfscan_sweep_{tag}_{}", std::process::id()))
+}
+
+#[test]
+fn artifact_bytes_identical_for_jobs_1_and_4() {
+    let spec = GridSpec::from_toml(GRID).unwrap();
+    let d1 = scratch("j1");
+    let d4 = scratch("j4");
+
+    let files1 = run_grid(&spec, 1, "artifacts").unwrap().write_artifacts(&d1).unwrap();
+    let files4 = run_grid(&spec, 4, "artifacts").unwrap().write_artifacts(&d4).unwrap();
+
+    let names = |files: &[PathBuf]| -> Vec<String> {
+        files.iter().map(|f| f.file_name().unwrap().to_string_lossy().into_owned()).collect()
+    };
+    assert_eq!(names(&files1), names(&files4));
+    assert!(!files1.is_empty());
+    for (a, b) in files1.iter().zip(files4.iter()) {
+        let bytes_a = std::fs::read(a).unwrap();
+        let bytes_b = std::fs::read(b).unwrap();
+        assert_eq!(
+            bytes_a,
+            bytes_b,
+            "{} differs between --jobs 1 and --jobs 4",
+            a.file_name().unwrap().to_string_lossy()
+        );
+    }
+
+    std::fs::remove_dir_all(&d1).ok();
+    std::fs::remove_dir_all(&d4).ok();
+}
+
+#[test]
+fn figs_grid_emits_all_four_figures() {
+    // the paper grid, scaled down so the test stays fast; the artifact
+    // set and schema are exactly what `nfscan sweep --grid figs` writes
+    let mut spec = GridSpec::figs(15);
+    spec.base.warmup = 3;
+    spec.sizes = vec![4, 1024];
+
+    let dir = scratch("figs");
+    let report = run_grid(&spec, 4, "artifacts").unwrap();
+    let files = report.write_artifacts(&dir).unwrap();
+    let names: Vec<String> = files
+        .iter()
+        .map(|f| f.file_name().unwrap().to_string_lossy().into_owned())
+        .collect();
+    assert_eq!(names, vec!["figs.json", "fig4.json", "fig5.json", "fig6.json", "fig7.json"]);
+
+    let fig4 = Json::parse(&std::fs::read_to_string(dir.join("fig4.json")).unwrap()).unwrap();
+    let series = fig4.get("series").unwrap().as_arr().unwrap();
+    assert_eq!(series.len(), 5, "fig4 carries all five measured series");
+    let col = |name: &str| -> Vec<f64> {
+        series
+            .iter()
+            .find(|c| c.get("name").unwrap().as_str() == Some(name))
+            .unwrap()
+            .get("values_us")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap())
+            .collect()
+    };
+    // paper shape survives the sweep pipeline: offload beats software rd
+    for (nf, sw) in col("NF_rd").iter().zip(col("sw_rd").iter()) {
+        assert!(nf < sw, "NF_rd {nf} must beat sw_rd {sw} (paper Fig. 4)");
+    }
+
+    let fig6 = Json::parse(&std::fs::read_to_string(dir.join("fig6.json")).unwrap()).unwrap();
+    assert_eq!(
+        fig6.get("series").unwrap().as_arr().unwrap().len(),
+        3,
+        "fig6 keeps only the NF series"
+    );
+    assert_eq!(fig6.get("metric").unwrap().as_str(), Some("nic_avg_us"));
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn reseeded_master_changes_artifacts() {
+    // the derived-seed scheme must actually feed the simulations: a
+    // different master seed must produce different latency samples
+    let spec_a = GridSpec::from_toml(GRID).unwrap();
+    let spec_b = GridSpec::from_toml(&GRID.replace("seed = 99", "seed = 100")).unwrap();
+    let a = run_grid(&spec_a, 2, "artifacts").unwrap();
+    let b = run_grid(&spec_b, 2, "artifacts").unwrap();
+    assert_ne!(a.to_json().pretty(), b.to_json().pretty());
+}
