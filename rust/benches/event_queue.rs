@@ -1,0 +1,76 @@
+//! Event-core microbenchmark: binary heap vs calendar queue, measured —
+//! not asserted.  `cargo bench --bench event_queue`.
+//!
+//! Two views:
+//! - **hold model** (classic event-queue benchmark): keep N events
+//!   pending, repeatedly pop the earliest and schedule a replacement a
+//!   random sim-typical delta ahead.  This isolates the queue itself.
+//! - **end-to-end**: a p=128 fat-tree offloaded-scan run on the adaptive
+//!   queue, the workload the calendar exists for.
+
+use std::time::Instant;
+
+use nfscan::cluster::Cluster;
+use nfscan::config::{EngineKind, ExpConfig};
+use nfscan::metrics::Table;
+use nfscan::packet::AlgoType;
+use nfscan::runtime::make_engine;
+use nfscan::sim::{EventKind, EventQueue, SimTime, SplitMix64};
+
+/// Delays mimicking the simulation's cost constants: wire serialization,
+/// pipeline exits, stack crossings, call gaps, late ranks.
+const DELTAS: &[u64] = &[120, 500, 992, 2_000, 28_000, 120_000, 2_000_000];
+
+fn hold_model(mut q: EventQueue, held: usize, ops: usize) -> f64 {
+    let mut rng = SplitMix64::new(0xBE9C4);
+    for i in 0..held {
+        q.push(SimTime::ns(rng.next_below(100_000)), EventKind::HostStart { rank: i });
+    }
+    let t0 = Instant::now();
+    for _ in 0..ops {
+        let (now, kind) = q.pop().expect("hold model never drains");
+        let delta = DELTAS[rng.next_below(DELTAS.len() as u64) as usize];
+        q.push(now + delta, kind);
+    }
+    t0.elapsed().as_nanos() as f64 / ops as f64
+}
+
+fn main() {
+    let ops = 400_000;
+    let mut t = Table::new(&["held_events", "heap_ns_op", "calendar_ns_op", "speedup"]);
+    for held in [16usize, 256, 4_096, 65_536] {
+        let heap = hold_model(EventQueue::with_heap(), held, ops);
+        let cal = hold_model(EventQueue::with_calendar(), held, ops);
+        t.row(vec![
+            held.to_string(),
+            format!("{heap:.1}"),
+            format!("{cal:.1}"),
+            format!("{:.2}x", heap / cal),
+        ]);
+    }
+    println!("hold model: pop-min + reschedule, {ops} ops (ns/op)");
+    print!("{}", t.render());
+    println!();
+
+    let mut cfg = ExpConfig::default();
+    cfg.p = 128;
+    cfg.algo = AlgoType::RecursiveDoubling;
+    cfg.offloaded = true;
+    cfg.topology = "fattree".into();
+    cfg.msg_bytes = 64;
+    cfg.iters = 60;
+    cfg.warmup = 8;
+    let compute = make_engine(EngineKind::Native, "artifacts");
+    let t0 = Instant::now();
+    let mut cluster = Cluster::new(cfg, compute);
+    let m = cluster.run().expect("fat-tree run completes");
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "end-to-end: p=128 fat-tree NF_rd, 60 iters — {:.2}s wallclock, \
+         {} frames ({} via switch trunks), sim {:.3} ms",
+        wall,
+        m.total_frames(),
+        m.switch_frames_tx,
+        m.sim_ns as f64 / 1e6
+    );
+}

@@ -99,12 +99,13 @@ COMMANDS
                          (--algo rd --offloaded true --msg_bytes 64 ...)
   fig4|fig5|fig6|fig7    regenerate a paper figure (--iters N, --engine xla,
                          --sizes 4,64,1024)
-  sweep --grid F.toml    expand a grid spec (sizes x p x series) and run
-                         every cell in parallel: --jobs N worker threads,
-                         JSON artifacts under --out DIR (default out/).
-                         --grid figs reproduces Figs. 4-7 in one batch
-                         (fig4.json..fig7.json); artifact bytes are
-                         identical for any --jobs.
+  sweep --grid F.toml    expand a grid spec (sizes x p x series x topology)
+                         and run every cell in parallel: --jobs N worker
+                         threads, JSON artifacts under --out DIR (default
+                         out/).  --grid figs reproduces Figs. 4-7 in one
+                         batch (fig4.json..fig7.json); artifact bytes are
+                         identical for any --jobs.  --topology a,b and
+                         --sizes n,m override the file's axes.
   sweep --config F.toml  legacy: run ONE experiment described by a TOML
   selftest               verify the XLA artifact path against native compute
   perf                   wallclock breakdown of one PJRT combine call
@@ -112,6 +113,10 @@ COMMANDS
 
 Collectives: --coll scan|exscan|allreduce|barrier (allreduce/barrier need
 --algo rd or binomial).  Concurrent communicators: --comms N.
+
+Topologies (--topology): chain | ring | hypercube (direct NetFPGA wiring,
+the paper's testbed), star[:group] | fattree[:k] (hierarchical switch
+fabrics for p = 64..512), auto (each algorithm's natural direct wiring).
 
 Figures print aligned tables; add --csv true for CSV output."
     );
@@ -246,7 +251,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         }
         return cmd_sweep_single(args);
     }
-    args.ensure_only(&["grid", "jobs", "out", "artifacts", "engine", "iters", "sizes", "csv"])?;
+    args.ensure_only(&[
+        "grid", "jobs", "out", "artifacts", "engine", "iters", "sizes", "topology", "csv",
+    ])?;
     let grid = args
         .get("grid")
         .ok_or_else(|| anyhow!("sweep needs --grid FILE|figs (or legacy --config FILE)"))?;
@@ -266,6 +273,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     if args.get("sizes").is_some() {
         spec.sizes = parse_sizes(args)?;
     }
+    if let Some(topos) = args.get("topology") {
+        spec.topologies = topos.split(',').map(|t| t.trim().to_string()).collect();
+    }
     if let Some(e) = args.get("engine") {
         spec.base.engine =
             EngineKind::from_name(e).ok_or_else(|| anyhow!("unknown engine {e}"))?;
@@ -277,14 +287,48 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
     let n = spec.n_jobs();
     println!(
-        "sweep {}: {} jobs ({} series x {} p x {} sizes) on {} workers",
+        "sweep {}: {} jobs ({} series x {} topologies x {} p x {} sizes) on {} workers",
         spec.name,
         n,
         spec.series.len(),
+        spec.topologies.len(),
         spec.ps.len(),
         spec.sizes.len(),
         jobs.clamp(1, n.max(1))
     );
+    // direct (switchless) wirings past the first-gen card's 4 ports are
+    // idealized hardware — simulate them, but say so loudly; the
+    // hierarchical presets exist so real cards never need more ports.
+    // Only unique (resolved spec, p) pairs are built — not the whole
+    // job list, which run_grid expands anyway.
+    let mut pairs = std::collections::BTreeSet::new();
+    for &series in &spec.series {
+        for topo in &spec.topologies {
+            for &p in &spec.ps {
+                let mut cfg = spec.base.clone();
+                cfg.algo = series.algo;
+                cfg.topology = topo.clone();
+                cfg.p = p;
+                pairs.insert((cfg.topology_spec().to_string(), p));
+            }
+        }
+    }
+    let overcabled: Vec<String> = pairs
+        .into_iter()
+        .filter_map(|(s, p)| {
+            crate::net::Topology::build(&s, p)
+                .ok()
+                .filter(|t| t.switches() == 0 && !t.fits_card())
+                .map(|t| format!("{} p={}", t.name(), p))
+        })
+        .collect();
+    if !overcabled.is_empty() {
+        println!(
+            "warning: direct wirings exceeding the NetFPGA's 4 ports (idealized hardware, \
+             not buildable on first-gen cards): {}",
+            overcabled.join(", ")
+        );
+    }
     let t0 = std::time::Instant::now();
     let report = crate::sweep::run_grid(&spec, jobs, artifacts)?;
     let wallclock = t0.elapsed().as_secs_f64();
@@ -453,6 +497,40 @@ mod tests {
         let report = std::fs::read_to_string(out.join("mini.json")).unwrap();
         let doc = crate::metrics::json::Json::parse(&report).unwrap();
         assert_eq!(doc.get("jobs").unwrap().as_arr().unwrap().len(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sweep_topology_axis_from_cli() {
+        let dir = std::env::temp_dir().join(format!("nfscan_cli_topo_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let grid = dir.join("grid.toml");
+        std::fs::write(
+            &grid,
+            "[grid]\nname = \"topo\"\nsizes = [4]\nseries = [\"NF_rd\"]\n\
+             [run]\niters = 5\nwarmup = 1\np = 8\n",
+        )
+        .unwrap();
+        let out = dir.join("out");
+        let a = Args::parse(&argv(&[
+            "sweep",
+            "--grid",
+            grid.to_str().unwrap(),
+            "--topology",
+            "auto,fattree",
+            "--jobs",
+            "2",
+            "--out",
+            out.to_str().unwrap(),
+        ]))
+        .unwrap();
+        cmd_sweep(&a).unwrap();
+        let report = std::fs::read_to_string(out.join("topo.json")).unwrap();
+        let doc = crate::metrics::json::Json::parse(&report).unwrap();
+        let jobs = doc.get("jobs").unwrap().as_arr().unwrap();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].get("topology").unwrap().as_str(), Some("auto"));
+        assert_eq!(jobs[1].get("topology").unwrap().as_str(), Some("fattree"));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -69,7 +69,6 @@ impl Cluster {
         let routes = RouteTable::build(&topo);
         let p = cfg.p;
         let total_iters = (cfg.warmup + cfg.iters) as u32;
-        let ports = topo.ports_used().max(1);
         Cluster {
             master_rng: SplitMix64::new(cfg.seed),
             hosts: (0..p)
@@ -78,16 +77,20 @@ impl Cluster {
                     total_iters,
                     call_time: SimTime::ZERO,
                     in_flight: false,
-                    sw: HashMap::new(),
+                    sw: HashMap::with_capacity(4),
                     sw_reasm: crate::fpga::reassembly::Reassembler::new(64),
                     done: false,
                 })
                 .collect(),
-            nics: (0..p).map(|r| Nic::new(r, ports)).collect(),
+            // one NIC per graph node: rank NICs first, then the switches
+            // of the hierarchical topologies (forward-only)
+            nics: (0..topo.nodes()).map(|n| Nic::new(n, topo.ports_of(n).max(1))).collect(),
             compute,
             metrics: RunMetrics::new(p),
-            contributions: HashMap::new(),
-            verified_counts: HashMap::new(),
+            // a handful of epochs are ever in flight at once (flow
+            // control bounds pipelining) — presize for that steady state
+            contributions: HashMap::with_capacity(if cfg.verify { 8 } else { 0 }),
+            verified_counts: HashMap::with_capacity(if cfg.verify { 8 } else { 0 }),
             q: EventQueue::new(),
             injected: None,
             results: vec![None; p],
@@ -214,9 +217,16 @@ impl Cluster {
         self.metrics.sim_ns = self.q.now().as_ns();
         for nic in &self.nics {
             let r = nic.rank;
-            self.metrics.frames_tx[r] = nic.frames_tx;
-            self.metrics.bytes_tx[r] = nic.bytes_tx;
-            self.metrics.frames_forwarded[r] = nic.frames_forwarded;
+            if r < self.cfg.p {
+                self.metrics.frames_tx[r] = nic.frames_tx;
+                self.metrics.bytes_tx[r] = nic.bytes_tx;
+                self.metrics.frames_forwarded[r] = nic.frames_forwarded;
+            } else {
+                // switch nodes pool into the trunk counters
+                self.metrics.switch_frames_tx += nic.frames_tx;
+                self.metrics.switch_bytes_tx += nic.bytes_tx;
+                self.metrics.switch_frames_forwarded += nic.frames_forwarded;
+            }
         }
         Ok(self.metrics.clone())
     }
@@ -484,10 +494,19 @@ impl Cluster {
 
     fn on_nic_recv(&mut self, now: SimTime, rank: Rank, _port: PortNo, frame: Frame) {
         if frame.dst != rank {
-            // reference-router forwarding path: store-and-forward towards
-            // the destination (topology/algorithm mismatch penalty).
+            // store-and-forward towards the destination: either the
+            // reference-router path of an intermediate NetFPGA (topology/
+            // algorithm mismatch penalty) or a switch of the hierarchical
+            // presets.  Each hop charges its forwarding latency here and
+            // wire serialization + propagation in `transmit` — shared
+            // trunks serialize through the output-port FIFO.
             self.nics[rank].frames_forwarded += 1;
-            let ready = now + self.cfg.cost.nic_fwd_cycles * 8;
+            let fwd_ns = if rank >= self.cfg.p {
+                self.cfg.cost.switch_fwd_ns
+            } else {
+                self.cfg.cost.nic_fwd_cycles * 8
+            };
+            let ready = now + fwd_ns;
             let dst = frame.dst;
             self.transmit(rank, dst, frame, ready);
             return;
@@ -887,6 +906,50 @@ mod tests {
         cfg.topology = "hypercube".into();
         let m = run_cfg(cfg);
         assert!(m.frames_forwarded.iter().sum::<u64>() > 0);
+    }
+
+    #[test]
+    fn star_topology_verifies_and_uses_trunks() {
+        // every flow crosses at least one switch: host NICs never forward
+        // themselves, the switch layer carries everything
+        let mut cfg = base(AlgoType::RecursiveDoubling, true);
+        cfg.topology = "star:4".into();
+        let m = run_cfg(cfg);
+        assert_eq!(m.host_overall().count(), 8 * 20);
+        assert_eq!(m.frames_forwarded.iter().sum::<u64>(), 0, "hosts are leaves");
+        assert!(m.switch_frames_forwarded > 0, "switches carried the traffic");
+        assert!(m.switch_frames_tx >= m.switch_frames_forwarded);
+    }
+
+    #[test]
+    fn fattree_verifies_all_algorithms_and_paths() {
+        for algo in AlgoType::ALL {
+            for offloaded in [false, true] {
+                let mut cfg = base(algo, offloaded);
+                cfg.topology = "fattree".into();
+                cfg.iters = 8;
+                cfg.warmup = 2;
+                cfg.verify = true;
+                let compute = make_compute(EngineKind::Native, "artifacts");
+                let mut cluster = Cluster::new(cfg, compute);
+                let m = cluster.run().unwrap_or_else(|e| panic!("{algo:?} nf={offloaded}: {e}"));
+                assert!(m.switch_frames_forwarded > 0, "{algo:?} nf={offloaded}");
+            }
+        }
+    }
+
+    #[test]
+    fn switch_hop_cost_is_charged() {
+        // same workload, slower switches -> strictly higher latency
+        let mk = |switch_fwd_ns: u64| {
+            let mut cfg = base(AlgoType::RecursiveDoubling, true);
+            cfg.topology = "fattree".into();
+            cfg.cost.switch_fwd_ns = switch_fwd_ns;
+            run_cfg(cfg).host_overall().avg_ns()
+        };
+        let fast = mk(100);
+        let slow = mk(20_000);
+        assert!(slow > fast, "switch forwarding must cost latency: {slow} vs {fast}");
     }
 
     #[test]

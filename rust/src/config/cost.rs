@@ -54,6 +54,12 @@ pub struct CostModel {
     /// (SSIII-C) — which is exactly the saving this constant surfaces.
     pub nic_pkt_gen_cycles: u64,
 
+    // ---- inter-switch fabric (hierarchical topologies) ----
+    /// Store-and-forward latency of one switch hop (lookup + buffer),
+    /// ns.  Wire serialization and trunk contention are charged
+    /// separately per port, so this is processing latency only.
+    pub switch_fwd_ns: u64,
+
     // ---- benchmark driver ----
     /// Host compute gap between back-to-back MPI_Scan calls.
     pub host_call_gap_ns: u64,
@@ -78,6 +84,7 @@ impl Default for CostModel {
             nic_combine_cycles_per_8b: 1,
             nic_fwd_cycles: 16,
             nic_pkt_gen_cycles: 12,
+            switch_fwd_ns: 1_000,
             host_call_gap_ns: 2_000,
             start_jitter_ns: 5_000,
         }
@@ -143,6 +150,7 @@ impl CostModel {
             "nic_combine_cycles_per_8b" => self.nic_combine_cycles_per_8b = as_u64()?,
             "nic_fwd_cycles" => self.nic_fwd_cycles = as_u64()?,
             "nic_pkt_gen_cycles" => self.nic_pkt_gen_cycles = as_u64()?,
+            "switch_fwd_ns" => self.switch_fwd_ns = as_u64()?,
             "host_call_gap_ns" => self.host_call_gap_ns = as_u64()?,
             "start_jitter_ns" => self.start_jitter_ns = as_u64()?,
             _ => return Err(format!("unknown cost key: {key}")),

@@ -40,8 +40,11 @@ pub struct ExpConfig {
     pub algo: AlgoType,
     /// true = NF_ offloaded path, false = software MPI baseline.
     pub offloaded: bool,
-    /// Topology name: chain/ring/hypercube, or "auto" to pick the wiring
-    /// the algorithm wants (the paper's manually-configured testbed).
+    /// Topology spec: `chain`/`ring`/`hypercube` (direct NetFPGA-to-
+    /// NetFPGA wirings), `star[:group]`/`fattree[:k]` (hierarchical
+    /// multi-switch fabrics that scale past one 4-port card per host),
+    /// or `"auto"` to pick the direct wiring the algorithm wants (the
+    /// paper's manually-configured testbed).
     pub topology: String,
     /// Message size in bytes per rank.
     pub msg_bytes: usize,
@@ -117,21 +120,25 @@ impl ExpConfig {
         ((rank / g) as u16, rank / g * g, g)
     }
 
-    /// The topology this experiment actually runs on: "auto" resolves to
-    /// each algorithm's natural wiring (the paper pre-wires the testbed
-    /// per algorithm — §VI "manual configuration").
-    pub fn resolve_topology(&self) -> crate::net::Topology {
-        use crate::net::Topology;
-        let name: &str = if self.topology == "auto" {
+    /// The spec [`ExpConfig::resolve_topology`] will build: "auto"
+    /// resolves to each algorithm's natural direct wiring (the paper
+    /// pre-wires the testbed per algorithm — §VI "manual configuration").
+    pub fn topology_spec(&self) -> &str {
+        if self.topology == "auto" {
             match self.algo {
                 AlgoType::Sequential => "chain",
                 AlgoType::RecursiveDoubling | AlgoType::BinomialTree => "hypercube",
             }
         } else {
             &self.topology
-        };
-        Topology::by_name(name, self.p)
-            .unwrap_or_else(|| panic!("unknown topology {name} for p={}", self.p))
+        }
+    }
+
+    /// The topology this experiment actually runs on.
+    pub fn resolve_topology(&self) -> crate::net::Topology {
+        let name = self.topology_spec();
+        crate::net::Topology::build(name, self.p)
+            .unwrap_or_else(|e| panic!("topology {name} for p={}: {e}", self.p))
     }
 
     /// Parse an experiment TOML ([run] + [cost] sections).
@@ -235,6 +242,13 @@ impl ExpConfig {
         if self.iters == 0 {
             return Err("iters must be > 0".into());
         }
+        // build (and discard) the resolved wiring so bad specs fail at
+        // config time with the cell that owns them, not mid-sweep —
+        // "auto" included: it resolves to a hypercube whose p constraint
+        // (power of two over the WHOLE cluster, not per communicator)
+        // is stricter than the group check above
+        crate::net::Topology::build(self.topology_spec(), self.p)
+            .map_err(|e| format!("topology: {e}"))?;
         match self.coll {
             CollType::Allreduce | CollType::Barrier => {
                 if self.algo == AlgoType::Sequential {
@@ -323,6 +337,21 @@ mod tests {
         assert_eq!(cfg.resolve_topology().name(), "hypercube");
         cfg.topology = "ring".into();
         assert_eq!(cfg.resolve_topology().name(), "ring");
+    }
+
+    #[test]
+    fn hierarchical_topologies_validate() {
+        let mut cfg = ExpConfig::default();
+        cfg.topology = "fattree".into();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.resolve_topology().name(), "fattree:4");
+        cfg.topology = "star:2".into();
+        cfg.validate().unwrap();
+        cfg.topology = "fattree:3".into();
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("even"), "{err}");
+        cfg.topology = "warp".into();
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

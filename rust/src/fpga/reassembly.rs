@@ -23,7 +23,9 @@ pub struct Reassembler<K: Eq + Hash + Clone + std::fmt::Debug> {
 
 impl<K: Eq + Hash + Clone + std::fmt::Debug> Reassembler<K> {
     pub fn new(max_messages: usize) -> Self {
-        Reassembler { parts: HashMap::new(), max_messages }
+        // presized to the budget: the per-NIC maps sit on the hot receive
+        // path and must never rehash mid-run
+        Reassembler { parts: HashMap::with_capacity(max_messages), max_messages }
     }
 
     /// Add a fragment; returns the complete payload when all fragments of

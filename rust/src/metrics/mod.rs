@@ -113,6 +113,12 @@ pub struct RunMetrics {
     pub bytes_tx: Vec<u64>,
     /// Frames forwarded in transit (multi-hop topology mismatch metric).
     pub frames_forwarded: Vec<u64>,
+    /// Traffic pooled over the switch nodes of hierarchical topologies
+    /// (inter-switch trunks): frames / bytes transmitted and frames
+    /// store-and-forwarded.  All zero on the direct-wired presets.
+    pub switch_frames_tx: u64,
+    pub switch_bytes_tx: u64,
+    pub switch_frames_forwarded: u64,
     /// Multicast packet generations taken (SSIII-C optimization metric).
     pub multicasts: u64,
     /// Total simulated duration.
@@ -127,6 +133,9 @@ impl RunMetrics {
             frames_tx: vec![0; p],
             bytes_tx: vec![0; p],
             frames_forwarded: vec![0; p],
+            switch_frames_tx: 0,
+            switch_bytes_tx: 0,
+            switch_frames_forwarded: 0,
             multicasts: 0,
             sim_ns: 0,
         }
@@ -163,6 +172,9 @@ impl RunMetrics {
             ("host_overall".into(), self.host_overall().to_json()),
             ("nic_overall".into(), self.nic_overall().to_json()),
             ("total_frames".into(), Json::int(self.total_frames())),
+            ("switch_frames_tx".into(), Json::int(self.switch_frames_tx)),
+            ("switch_bytes_tx".into(), Json::int(self.switch_bytes_tx)),
+            ("switch_frames_forwarded".into(), Json::int(self.switch_frames_forwarded)),
             ("multicasts".into(), Json::int(self.multicasts)),
             ("sim_ns".into(), Json::int(self.sim_ns)),
             ("host_latency".into(), stats_arr(&self.host_latency)),

@@ -14,7 +14,7 @@ pub mod topology;
 pub use frame::{Frame, FrameBody, SwMsg, SwMsgKind, CHUNK_BYTES};
 pub use headers::{EthHeader, Ipv4Header, MacAddr, UdpHeader};
 pub use routing::RouteTable;
-pub use topology::Topology;
+pub use topology::{NodeId, Topology};
 
 /// MPI rank / node index.  Hosts and their NetFPGA share the index.
 pub type Rank = usize;

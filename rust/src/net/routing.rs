@@ -4,8 +4,11 @@
 //! When the topology doesn't match the algorithm's communication pattern,
 //! packets between non-adjacent NICs are store-and-forwarded through
 //! intermediate NetFPGAs (the card "maintains the ability to forward
-//! standard IP packets").  Routes are shortest-path BFS, tie-broken by
-//! port number, so they are deterministic.
+//! standard IP packets") — and, on the hierarchical presets, through
+//! switch nodes that never terminate traffic at all.  Routes are
+//! shortest-path BFS, tie-broken by port number, so they are
+//! deterministic; every flow between two hosts always takes the same
+//! single path, which is what makes shared-trunk contention observable.
 
 use std::collections::VecDeque;
 
@@ -14,28 +17,33 @@ use super::{PortNo, Rank};
 
 #[derive(Clone, Debug)]
 pub struct RouteTable {
-    /// `next[src][dst]` = output port at `src` towards `dst`.
+    /// `next[node][dst]` = output port at `node` towards rank `dst`.
+    /// Rows cover every graph node (switches included); columns only
+    /// ranks — frames are never addressed to a switch.
     next: Vec<Vec<Option<PortNo>>>,
 }
 
 impl RouteTable {
-    /// All-pairs next-hop ports via BFS from every destination.
+    /// All-pairs next-hop ports via BFS from every destination rank.
     pub fn build(topo: &Topology) -> RouteTable {
+        let nodes = topo.nodes();
         let p = topo.p();
-        let mut next = vec![vec![None; p]; p];
+        let mut next = vec![vec![None; p]; nodes];
+        let mut dist = vec![usize::MAX; nodes];
+        let mut q = VecDeque::new();
         for dst in 0..p {
             // BFS outward from dst; the first hop each node uses to reach
             // its BFS parent is its next-hop towards dst.
-            let mut dist = vec![usize::MAX; p];
+            dist.iter_mut().for_each(|d| *d = usize::MAX);
             dist[dst] = 0;
-            let mut q = VecDeque::from([dst]);
+            q.clear();
+            q.push_back(dst);
             while let Some(u) = q.pop_front() {
-                for (port_u, v) in topo.neighbors(u) {
+                for &(_, v) in topo.neighbors(u) {
                     if dist[v] == usize::MAX {
                         dist[v] = dist[u] + 1;
                         // v reaches dst by sending to u: find v's port to u.
                         // neighbor lookup is port-ordered => deterministic.
-                        let _ = port_u;
                         let port_v = topo.port_towards(v, u).expect("cable is bidirectional");
                         next[v][dst] = Some(port_v);
                         q.push_back(v);
@@ -46,24 +54,24 @@ impl RouteTable {
         RouteTable { next }
     }
 
-    /// Output port at `src` for traffic to `dst`; None if unreachable or
-    /// src == dst (local delivery).
-    pub fn next_hop(&self, src: Rank, dst: Rank) -> Option<PortNo> {
-        if src == dst {
+    /// Output port at `node` for traffic to rank `dst`; None if
+    /// unreachable or node == dst (local delivery).
+    pub fn next_hop(&self, node: usize, dst: Rank) -> Option<PortNo> {
+        if node == dst {
             return None;
         }
-        self.next[src][dst]
+        self.next[node][dst]
     }
 
     /// Hop count from src to dst following the table (for tests/metrics).
-    pub fn hops(&self, topo: &Topology, src: Rank, dst: Rank) -> Option<usize> {
+    pub fn hops(&self, topo: &Topology, src: usize, dst: Rank) -> Option<usize> {
         let mut cur = src;
         let mut n = 0;
         while cur != dst {
             let port = self.next_hop(cur, dst)?;
             cur = topo.neighbor(cur, port)?.0;
             n += 1;
-            if n > topo.p() {
+            if n > topo.nodes() {
                 return None; // routing loop — must never happen
             }
         }
@@ -117,5 +125,46 @@ mod tests {
         let r = RouteTable::build(&t);
         assert_eq!(r.next_hop(0, 2), None);
         assert_eq!(r.hops(&t, 0, 3), None);
+    }
+
+    #[test]
+    fn star_routes_through_leaf_and_core() {
+        let t = Topology::star(10, 4).unwrap();
+        let r = RouteTable::build(&t);
+        // same leaf: host -> leaf -> host
+        assert_eq!(r.hops(&t, 0, 1), Some(2));
+        // different leaves: host -> leaf -> core -> leaf -> host
+        assert_eq!(r.hops(&t, 0, 9), Some(4));
+        // the first hop of any host is its single uplink port
+        for h in 0..10usize {
+            assert_eq!(r.next_hop(h, (h + 1) % 10), Some(0));
+        }
+    }
+
+    #[test]
+    fn fattree_diameter_and_reachability() {
+        // k=4, 16 hosts: same edge 2 hops, same pod 4, cross pod 6
+        let t = Topology::fattree(16, 4).unwrap();
+        let r = RouteTable::build(&t);
+        assert_eq!(r.hops(&t, 0, 1), Some(2), "same edge switch");
+        assert_eq!(r.hops(&t, 0, 2), Some(4), "same pod, other edge");
+        assert_eq!(r.hops(&t, 0, 15), Some(6), "cross pod");
+        for s in 0..16usize {
+            for d in 0..16usize {
+                if s != d {
+                    let h = r.hops(&t, s, d).expect("reachable");
+                    assert!(h >= 2 && h <= 6, "{s}->{d} took {h} hops");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_fattree_path_longer_than_p() {
+        // k=2 holds exactly 2 hosts but the path is 6 hops — the loop
+        // guard must be on node count, not rank count
+        let t = Topology::fattree(2, 2).unwrap();
+        let r = RouteTable::build(&t);
+        assert_eq!(r.hops(&t, 0, 1), Some(6));
     }
 }

@@ -1,4 +1,5 @@
-//! Physical port graph: how the NetFPGA cards are wired together.
+//! Physical port graph: how the NetFPGA cards — and, past the paper's
+//! 4-node ceiling, the switches between them — are wired together.
 //!
 //! The paper: "The NetFPGA ports were directly connected to each other
 //! establishing a testbed topology" — and admits the node roles / wiring
@@ -6,33 +7,87 @@
 //! algorithm wants (chain for sequential, hypercube for recursive
 //! doubling / binomial) plus a ring, and let experiments deliberately
 //! mismatch them to measure the multi-hop forwarding penalty.
+//!
+//! The paper names scaling as open work (SSVI): one 4-port card per host
+//! caps the direct wirings at toy sizes.  The hierarchical presets lift
+//! that cap by adding *switch nodes* — graph nodes `p..p+switches` that
+//! carry no rank and no host, only forward frames:
+//!
+//! - `star:<g>` — leaf switches of `g` hosts each, all uplinked to one
+//!   core switch (two-level tree; every inter-leaf flow shares the leaf's
+//!   single trunk, so trunk contention is the interesting failure mode);
+//! - `fattree:<k>` — the classic k-ary fat-tree (k pods of k/2 edge +
+//!   k/2 aggregation switches, (k/2)^2 cores; up to k^3/4 hosts, filled
+//!   in pod order when p is smaller).
+//!
+//! Hosts in hierarchical presets use exactly one NIC port (port 0), so a
+//! first-generation card always suffices — that is the point.
 
 use std::collections::BTreeMap;
 
 use super::{PortNo, Rank, PORTS_PER_CARD};
 
+/// A graph node: ranks are `0..p`, switches are `p..p+switches`.
+pub type NodeId = usize;
+
 #[derive(Clone, Debug)]
 pub struct Topology {
     p: usize,
+    switches: usize,
     name: String,
-    /// (rank, port) -> (rank, port) for every plugged cable, both ways.
-    adj: BTreeMap<(Rank, PortNo), (Rank, PortNo)>,
+    /// (node, port) -> (node, port) for every plugged cable, both ways.
+    adj: BTreeMap<(NodeId, PortNo), (NodeId, PortNo)>,
+    /// Per-node adjacency, port-ordered (deterministic iteration without
+    /// walking the whole map — the BFS route build is O(V+E) per
+    /// destination because of this).
+    nbr: Vec<Vec<(PortNo, NodeId)>>,
 }
 
 impl Topology {
-    /// Build from explicit cables.  Panics on port reuse or self-loops —
-    /// a miswired testbed should fail loudly at construction.
-    pub fn custom(name: &str, p: usize, cables: &[((Rank, PortNo), (Rank, PortNo))]) -> Topology {
+    /// Checked assembly shared by every preset.  `cables` endpoints may
+    /// reference switch nodes (`>= p`); errors name the offending cable.
+    fn assemble(
+        name: &str,
+        p: usize,
+        switches: usize,
+        cables: &[((NodeId, PortNo), (NodeId, PortNo))],
+    ) -> Result<Topology, String> {
+        let nodes = p + switches;
         let mut adj = BTreeMap::new();
         for &(a, b) in cables {
-            assert!(a.0 < p && b.0 < p, "cable endpoint rank out of range");
-            assert_ne!(a.0, b.0, "self-loop cable on rank {}", a.0);
-            assert!(!adj.contains_key(&a), "port {a:?} already cabled");
-            assert!(!adj.contains_key(&b), "port {b:?} already cabled");
+            if a.0 >= nodes || b.0 >= nodes {
+                return Err(format!(
+                    "cable endpoint node out of range: {a:?} <-> {b:?} (nodes = {nodes})"
+                ));
+            }
+            if a.0 == b.0 {
+                return Err(format!("self-loop cable on node {}", a.0));
+            }
+            if adj.contains_key(&a) {
+                return Err(format!("port {a:?} already cabled"));
+            }
+            if adj.contains_key(&b) {
+                return Err(format!("port {b:?} already cabled"));
+            }
             adj.insert(a, b);
             adj.insert(b, a);
         }
-        Topology { p, name: name.to_string(), adj }
+        let mut nbr: Vec<Vec<(PortNo, NodeId)>> = vec![Vec::new(); nodes];
+        for (&(node, port), &(peer, _)) in &adj {
+            // BTreeMap iteration is (node, port)-ordered, so each list
+            // comes out port-sorted.
+            nbr[node].push((port, peer));
+        }
+        Ok(Topology { p, switches, name: name.to_string(), adj, nbr })
+    }
+
+    /// Build from explicit rank-to-rank cables.  Panics on port reuse or
+    /// self-loops — a miswired testbed should fail loudly at construction.
+    pub fn custom(name: &str, p: usize, cables: &[((Rank, PortNo), (Rank, PortNo))]) -> Topology {
+        for &(a, b) in cables {
+            assert!(a.0 < p && b.0 < p, "cable endpoint rank out of range");
+        }
+        Topology::assemble(name, p, 0, cables).unwrap_or_else(|e| panic!("{name}: {e}"))
     }
 
     /// Line: rank j port 1 <-> rank j+1 port 0.  Sequential algorithm's
@@ -53,7 +108,7 @@ impl Topology {
     /// Boolean hypercube: rank j port k <-> rank j^2^k port k.  Natural
     /// wiring for recursive doubling and the binomial tree (every
     /// partner/parent differs in exactly one bit).  Dimension > 4 exceeds
-    /// the first-gen card's 4 ports; `strict_ports` rejects that.
+    /// the first-gen card's 4 ports; `fits_card` reports that.
     pub fn hypercube(p: usize) -> Topology {
         assert!(crate::util::is_pow2(p) && p >= 2, "hypercube needs power-of-two nodes");
         let dim = crate::util::log2(p) as u8;
@@ -69,53 +124,208 @@ impl Topology {
         Topology::custom("hypercube", p, &cables)
     }
 
-    pub fn by_name(name: &str, p: usize) -> Option<Topology> {
-        match name {
-            "chain" => Some(Topology::chain(p)),
-            "ring" => Some(Topology::ring(p)),
-            "hypercube" => Some(Topology::hypercube(p)),
-            _ => None,
+    /// Star-of-switches: `ceil(p/group)` leaf switches of up to `group`
+    /// hosts each, all uplinked to one core switch.  Degenerates to a
+    /// single switch when one leaf suffices.  Host h sits on leaf h/group
+    /// port h%group; each host uses NIC port 0 only.
+    pub fn star(p: usize, group: usize) -> Result<Topology, String> {
+        if group == 0 {
+            return Err("star group size must be >= 1".into());
+        }
+        if group > PortNo::MAX as usize {
+            return Err(format!("star group {group} exceeds the port-number range"));
+        }
+        let leaves = p.div_ceil(group);
+        if leaves > PortNo::MAX as usize {
+            return Err(format!(
+                "star needs {leaves} leaf switches for p={p}, exceeding the core port range"
+            ));
+        }
+        let mut cables: Vec<((NodeId, PortNo), (NodeId, PortNo))> = Vec::new();
+        if leaves == 1 {
+            // one switch, every host attached directly
+            let sw = p;
+            for h in 0..p {
+                cables.push(((h, 0), (sw, h as PortNo)));
+            }
+            return Topology::assemble(&format!("star:{group}"), p, 1, &cables);
+        }
+        let leaf = |l: usize| p + l;
+        let core = p + leaves;
+        for h in 0..p {
+            cables.push(((h, 0), (leaf(h / group), (h % group) as PortNo)));
+        }
+        for l in 0..leaves {
+            // leaf trunk: one uplink port shared by every flow leaving it
+            cables.push(((leaf(l), group as PortNo), (core, l as PortNo)));
+        }
+        Topology::assemble(&format!("star:{group}"), p, leaves + 1, &cables)
+    }
+
+    /// k-ary fat-tree (Leiserson / Al-Fares): k pods, each with k/2 edge
+    /// and k/2 aggregation switches; (k/2)^2 core switches; capacity
+    /// k^3/4 hosts.  `p` may be below capacity — hosts fill in pod order
+    /// and surplus edge ports dangle.  All switches have radix k.
+    pub fn fattree(p: usize, k: usize) -> Result<Topology, String> {
+        if k < 2 || k % 2 != 0 {
+            return Err(format!("fat-tree arity k={k} must be even and >= 2"));
+        }
+        if k > 64 {
+            return Err(format!("fat-tree arity k={k} is unreasonably large (max 64)"));
+        }
+        let half = k / 2;
+        let capacity = k * k * k / 4;
+        if p > capacity {
+            return Err(format!("fat-tree k={k} holds at most {capacity} hosts, got p={p}"));
+        }
+        let hosts_per_pod = half * half;
+        // node numbering: pod x holds edges then aggs at p + x*k;
+        // cores follow after all pods.
+        let edge = |x: usize, e: usize| p + x * k + e;
+        let agg = |x: usize, a: usize| p + x * k + half + a;
+        let core = |c: usize| p + k * k + c;
+        let switches = k * k + half * half;
+        let mut cables: Vec<((NodeId, PortNo), (NodeId, PortNo))> = Vec::new();
+        for h in 0..p {
+            let x = h / hosts_per_pod;
+            let e = (h % hosts_per_pod) / half;
+            let slot = h % half;
+            cables.push(((h, 0), (edge(x, e), slot as PortNo)));
+        }
+        for x in 0..k {
+            for e in 0..half {
+                for a in 0..half {
+                    // edge uplink a <-> agg a's down port e
+                    cables.push(((edge(x, e), (half + a) as PortNo), (agg(x, a), e as PortNo)));
+                }
+            }
+            for a in 0..half {
+                for i in 0..half {
+                    // agg a reaches core group a; core port = pod index
+                    cables.push(((agg(x, a), (half + i) as PortNo), (core(a * half + i), x as PortNo)));
+                }
+            }
+        }
+        Topology::assemble(&format!("fattree:{k}"), p, switches, &cables)
+    }
+
+    /// Smallest even arity whose fat-tree holds `p` hosts.
+    pub fn fattree_arity_for(p: usize) -> usize {
+        let mut k = 2;
+        while k * k * k / 4 < p {
+            k += 2;
+        }
+        k
+    }
+
+    /// Parse and build a topology spec: `chain`, `ring`, `hypercube`,
+    /// `star[:group]` (group defaults to 4, one leaf port per host slot),
+    /// `fattree[:k]` (k defaults to the smallest even arity holding p).
+    /// Errors describe both unknown names and p-incompatible presets.
+    pub fn build(spec: &str, p: usize) -> Result<Topology, String> {
+        let (base, param) = match spec.split_once(':') {
+            Some((b, v)) => {
+                let v: usize = v
+                    .parse()
+                    .map_err(|e| format!("topology {spec:?}: bad parameter {v:?}: {e}"))?;
+                (b, Some(v))
+            }
+            None => (spec, None),
+        };
+        match base {
+            "chain" => {
+                if param.is_some() {
+                    return Err("chain takes no parameter".into());
+                }
+                Ok(Topology::chain(p))
+            }
+            "ring" => {
+                if param.is_some() {
+                    return Err("ring takes no parameter".into());
+                }
+                if p < 3 {
+                    return Err(format!("ring needs >= 3 nodes, got p={p}"));
+                }
+                Ok(Topology::ring(p))
+            }
+            "hypercube" => {
+                if param.is_some() {
+                    return Err("hypercube takes no parameter".into());
+                }
+                if !crate::util::is_pow2(p) || p < 2 {
+                    return Err(format!("hypercube needs power-of-two nodes, got p={p}"));
+                }
+                Ok(Topology::hypercube(p))
+            }
+            "star" => Topology::star(p, param.unwrap_or(4)),
+            "fattree" => {
+                let k = param.unwrap_or_else(|| Topology::fattree_arity_for(p));
+                Topology::fattree(p, k)
+            }
+            other => Err(format!(
+                "unknown topology {other:?} (chain|ring|hypercube|star[:g]|fattree[:k])"
+            )),
         }
     }
 
+    pub fn by_name(name: &str, p: usize) -> Option<Topology> {
+        Topology::build(name, p).ok()
+    }
+
+    /// Number of ranks (hosts).  Switch nodes are NOT counted here.
     pub fn p(&self) -> usize {
         self.p
+    }
+
+    /// Switch nodes in the graph (0 for the direct-wired presets).
+    pub fn switches(&self) -> usize {
+        self.switches
+    }
+
+    /// Total graph nodes: ranks then switches.
+    pub fn nodes(&self) -> usize {
+        self.p + self.switches
+    }
+
+    /// Is this node a switch (forwards only, hosts no rank)?
+    pub fn is_switch(&self, node: NodeId) -> bool {
+        node >= self.p
     }
 
     pub fn name(&self) -> &str {
         &self.name
     }
 
-    /// Other end of the cable plugged into (rank, port), if any.
-    pub fn neighbor(&self, rank: Rank, port: PortNo) -> Option<(Rank, PortNo)> {
-        self.adj.get(&(rank, port)).copied()
+    /// Other end of the cable plugged into (node, port), if any.
+    pub fn neighbor(&self, node: NodeId, port: PortNo) -> Option<(NodeId, PortNo)> {
+        self.adj.get(&(node, port)).copied()
     }
 
-    /// Direct port from `rank` towards `dst`, if they share a cable.
-    pub fn port_towards(&self, rank: Rank, dst: Rank) -> Option<PortNo> {
-        self.adj
-            .iter()
-            .find(|&(&(r, _), &(nr, _))| r == rank && nr == dst)
-            .map(|(&(_, port), _)| port)
+    /// Direct port from `node` towards `dst`, if they share a cable.
+    pub fn port_towards(&self, node: NodeId, dst: NodeId) -> Option<PortNo> {
+        self.nbr[node].iter().find(|&&(_, peer)| peer == dst).map(|&(port, _)| port)
     }
 
-    /// All (port, neighbor) pairs of `rank`, port-ordered (determinism).
-    pub fn neighbors(&self, rank: Rank) -> Vec<(PortNo, Rank)> {
-        self.adj
-            .iter()
-            .filter(|&(&(r, _), _)| r == rank)
-            .map(|(&(_, port), &(nr, _))| (port, nr))
-            .collect()
+    /// All (port, neighbor) pairs of `node`, port-ordered (determinism).
+    /// Borrowed, not cloned — the BFS route build walks this per visit.
+    pub fn neighbors(&self, node: NodeId) -> &[(PortNo, NodeId)] {
+        &self.nbr[node]
+    }
+
+    /// Ports in use at one node (highest cabled port + 1).
+    pub fn ports_of(&self, node: NodeId) -> usize {
+        self.nbr[node].last().map(|&(port, _)| port as usize + 1).unwrap_or(0)
     }
 
     /// Highest port number used by any node, +1.
     pub fn ports_used(&self) -> usize {
-        self.adj.keys().map(|&(_, port)| port as usize + 1).max().unwrap_or(0)
+        (0..self.nodes()).map(|n| self.ports_of(n)).max().unwrap_or(0)
     }
 
-    /// Does the wiring fit a first-generation NetFPGA (4 ports)?
+    /// Does the wiring fit a first-generation NetFPGA (4 ports) at every
+    /// HOST?  Switch radix is unconstrained — switches are not cards.
     pub fn fits_card(&self) -> bool {
-        self.ports_used() <= PORTS_PER_CARD
+        (0..self.p).all(|r| self.ports_of(r) <= PORTS_PER_CARD)
     }
 }
 
@@ -131,6 +341,8 @@ mod tests {
         assert_eq!(t.neighbor(0, 0), None, "head has no upstream");
         assert_eq!(t.port_towards(2, 1), Some(0));
         assert!(t.fits_card());
+        assert_eq!(t.switches(), 0);
+        assert_eq!(t.nodes(), 4);
     }
 
     #[test]
@@ -158,7 +370,7 @@ mod tests {
     fn neighbors_sorted_by_port() {
         let t = Topology::hypercube(8);
         let n = t.neighbors(5);
-        assert_eq!(n, vec![(0, 4), (1, 7), (2, 1)]);
+        assert_eq!(n, &[(0, 4), (1, 7), (2, 1)]);
     }
 
     #[test]
@@ -171,5 +383,90 @@ mod tests {
     #[should_panic]
     fn self_loop_rejected() {
         Topology::custom("bad", 2, &[((0, 0), (0, 1))]);
+    }
+
+    #[test]
+    fn star_two_level_shape() {
+        // 10 hosts in groups of 4: 3 leaves + 1 core
+        let t = Topology::star(10, 4).unwrap();
+        assert_eq!(t.p(), 10);
+        assert_eq!(t.switches(), 4);
+        assert_eq!(t.nodes(), 14);
+        assert!(t.fits_card(), "hosts use one port each");
+        for h in 0..10usize {
+            let up = t.neighbor(h, 0).expect("host uplink");
+            assert_eq!(up.0, 10 + h / 4, "host {h} on its leaf");
+            assert!(t.is_switch(up.0));
+        }
+        // each leaf's trunk lands on the core (node 13) at the leaf index
+        for l in 0..3usize {
+            assert_eq!(t.neighbor(10 + l, 4), Some((13, l as PortNo)));
+        }
+        // leaf 0 is full (4 hosts + trunk), leaf 2 holds hosts 8..10
+        assert_eq!(t.ports_of(10), 5);
+        assert_eq!(t.ports_of(13), 3, "core has one port per leaf");
+    }
+
+    #[test]
+    fn star_degenerates_to_single_switch() {
+        let t = Topology::star(4, 8).unwrap();
+        assert_eq!(t.switches(), 1);
+        for h in 0..4usize {
+            assert_eq!(t.neighbor(h, 0), Some((4, h as PortNo)));
+        }
+    }
+
+    #[test]
+    fn fattree_shape_k4() {
+        // k=4: 16 hosts, 4 pods x (2 edge + 2 agg), 4 cores = 20 switches
+        let t = Topology::fattree(16, 4).unwrap();
+        assert_eq!(t.p(), 16);
+        assert_eq!(t.switches(), 20);
+        assert_eq!(t.nodes(), 36);
+        assert!(t.fits_card());
+        // every switch has radix k = 4
+        for sw in 16..36usize {
+            assert_eq!(t.ports_of(sw), 4, "switch {sw}");
+        }
+        // host 0: pod 0 edge 0 slot 0
+        assert_eq!(t.neighbor(0, 0), Some((16, 0)));
+        // host 5: pod 1 (hosts_per_pod = 4), edge 0, slot 1
+        assert_eq!(t.neighbor(5, 0), Some((16 + 4, 1)));
+    }
+
+    #[test]
+    fn fattree_partial_population() {
+        // 6 hosts on the 16-host k=4 tree: all switches built, hosts
+        // fill pods 0 and 1 only
+        let t = Topology::fattree(6, 4).unwrap();
+        assert_eq!(t.switches(), 20);
+        for h in 0..6usize {
+            assert!(t.neighbor(h, 0).is_some(), "host {h} attached");
+        }
+    }
+
+    #[test]
+    fn fattree_arity_selection() {
+        assert_eq!(Topology::fattree_arity_for(2), 2);
+        assert_eq!(Topology::fattree_arity_for(16), 4);
+        assert_eq!(Topology::fattree_arity_for(17), 6);
+        assert_eq!(Topology::fattree_arity_for(128), 8);
+        assert_eq!(Topology::fattree_arity_for(256), 12);
+    }
+
+    #[test]
+    fn build_parses_specs() {
+        assert_eq!(Topology::build("chain", 5).unwrap().name(), "chain");
+        assert_eq!(Topology::build("star", 10).unwrap().name(), "star:4");
+        assert_eq!(Topology::build("star:2", 10).unwrap().switches(), 6);
+        assert_eq!(Topology::build("fattree", 8).unwrap().name(), "fattree:4");
+        assert_eq!(Topology::build("fattree:6", 54).unwrap().p(), 54);
+        assert!(Topology::build("fattree:3", 8).is_err(), "odd arity");
+        assert!(Topology::build("fattree:4", 17).is_err(), "over capacity");
+        assert!(Topology::build("ring", 2).is_err());
+        assert!(Topology::build("hypercube", 6).is_err());
+        assert!(Topology::build("warp", 8).is_err());
+        assert!(Topology::build("star:x", 8).is_err());
+        assert!(Topology::build("chain:2", 8).is_err());
     }
 }

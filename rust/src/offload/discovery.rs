@@ -22,7 +22,7 @@ pub type NeighborMap = BTreeMap<PortNo, Rank>;
 
 /// Phase 1 — per-card neighbor discovery (one hello per cabled port).
 pub fn discover_neighbors(topo: &Topology, rank: Rank) -> NeighborMap {
-    topo.neighbors(rank).into_iter().collect()
+    topo.neighbors(rank).iter().copied().collect()
 }
 
 /// Phase 2 — flood: every card's neighbor map reaches every other card.

@@ -1,0 +1,160 @@
+//! Cross-validation property: for random (p <= 32, algorithm, Scan or
+//! Exscan, op, dtype, topology preset), the software path, the offload
+//! path and the `oracle_prefix` left fold must agree elementwise on
+//! every rank.
+//!
+//! This triangulates the three implementations against each other over
+//! the whole new topology space: a cost-model bug can shift latencies
+//! without tripping this, but any *semantic* divergence — a wrong fold
+//! order, a dropped fragment on a multi-hop route, a switch misdelivery —
+//! breaks the agreement somewhere in the random space.
+
+use std::rc::Rc;
+
+use crate::cluster::Cluster;
+use crate::config::{EngineKind, ExpConfig};
+use crate::data::{Dtype, Op, Payload};
+use crate::packet::{AlgoType, CollType};
+use crate::prop::{choose, for_each_case, vec_i32};
+use crate::runtime::engine::oracle_prefix;
+use crate::runtime::{make_engine, Compute};
+use crate::sim::SplitMix64;
+
+/// Random experiment: cluster size, algorithm, collective flavor,
+/// op x dtype, topology preset — everything the agreement must hold over.
+fn random_case(rng: &mut SplitMix64) -> ExpConfig {
+    let mut cfg = ExpConfig::default();
+    cfg.algo = *choose(rng, &AlgoType::ALL);
+    cfg.coll = *choose(rng, &[CollType::Scan, CollType::Scan, CollType::Exscan]);
+    cfg.p = match cfg.algo {
+        AlgoType::Sequential => *choose(rng, &[2usize, 3, 5, 9, 17, 32]),
+        _ => *choose(rng, &[2usize, 4, 8, 16, 32]),
+    };
+    // any preset valid for this p, hierarchical ones included
+    let mut topos: Vec<&str> = vec!["auto", "chain", "star:3", "fattree"];
+    if cfg.p >= 3 {
+        topos.push("ring");
+    }
+    if crate::util::is_pow2(cfg.p) {
+        topos.push("hypercube");
+    }
+    cfg.topology = choose(rng, &topos).to_string();
+    cfg.dtype = *choose(rng, &Dtype::ALL);
+    cfg.op = loop {
+        let op = *choose(rng, &Op::ALL);
+        if op.valid_for(cfg.dtype) {
+            break op;
+        }
+    };
+    let elems = *choose(rng, &[1usize, 5, 33]);
+    cfg.msg_bytes = elems * cfg.dtype.size();
+    cfg.seed = rng.next_u64();
+    cfg.cost.start_jitter_ns = *choose(rng, &[0u64, 5_000, 100_000]);
+    cfg.verify = false; // the TEST does the comparing, not the cluster
+    cfg
+}
+
+/// One contribution per rank, well-conditioned for the op (products stay
+/// near 1.0 so float tolerances hold over 32 ranks).
+fn random_contributions(rng: &mut SplitMix64, cfg: &ExpConfig) -> Vec<Payload> {
+    let n = cfg.msg_elems();
+    (0..cfg.p)
+        .map(|_| match cfg.dtype {
+            Dtype::I32 => Payload::from_i32(&vec_i32(rng, n, 9)),
+            Dtype::F32 => Payload::from_f32(
+                &(0..n)
+                    .map(|_| {
+                        if cfg.op == Op::Prod {
+                            0.9 + 0.2 * rng.next_f64() as f32
+                        } else {
+                            (rng.next_f64() * 8.0 - 4.0) as f32
+                        }
+                    })
+                    .collect::<Vec<_>>(),
+            ),
+            Dtype::F64 => Payload::from_f64(
+                &(0..n)
+                    .map(|_| {
+                        if cfg.op == Op::Prod {
+                            0.9 + 0.2 * rng.next_f64()
+                        } else {
+                            rng.next_f64() * 8.0 - 4.0
+                        }
+                    })
+                    .collect::<Vec<_>>(),
+            ),
+        })
+        .collect()
+}
+
+/// Elementwise agreement: exact for integers, association-order rounding
+/// tolerance for floats (the tree algorithms fold in a different order
+/// than the oracle's left fold).
+fn assert_agree(got: &Payload, want: &Payload, what: &str) {
+    assert_eq!(got.dtype(), want.dtype(), "{what}: dtype");
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    match got.dtype() {
+        Dtype::I32 => assert_eq!(got.to_i32(), want.to_i32(), "{what}"),
+        Dtype::F32 => {
+            for (i, (g, w)) in got.to_f32().iter().zip(want.to_f32().iter()).enumerate() {
+                let tol = 1e-4f32.max(w.abs() * 1e-4);
+                assert!((g - w).abs() <= tol, "{what} elem {i}: {g} vs {w}");
+            }
+        }
+        Dtype::F64 => {
+            for (i, (g, w)) in got.to_f64().iter().zip(want.to_f64().iter()).enumerate() {
+                let tol = 1e-10f64.max(w.abs() * 1e-10);
+                assert!((g - w).abs() <= tol, "{what} elem {i}: {g} vs {w}");
+            }
+        }
+    }
+}
+
+/// Oracle result for rank `r`: exactly the `oracle_prefix` the verify
+/// path trusts, inclusive or exclusive per the collective — NOT a local
+/// re-derivation that could drift from it.
+fn oracle_for_rank(
+    compute: &dyn Compute,
+    contribs: &[Payload],
+    cfg: &ExpConfig,
+    r: usize,
+) -> Payload {
+    oracle_prefix(compute, contribs, cfg.op, cfg.coll.inclusive(), r).expect("oracle")
+}
+
+#[test]
+fn software_offload_and_oracle_agree_on_every_rank() {
+    for_each_case(40, 0xC0_55A1, |rng| {
+        let cfg = random_case(rng);
+        let compute = make_engine(EngineKind::Native, "artifacts");
+        let contribs = random_contributions(rng, &cfg);
+
+        let run_path = |offloaded: bool| -> Vec<Payload> {
+            let mut c = cfg.clone();
+            c.offloaded = offloaded;
+            let (results, _) = Cluster::scan_once(c, Rc::clone(&compute), contribs.clone())
+                .unwrap_or_else(|e| {
+                    panic!("{} on {} p={}: {e}", cfg.series_name(), cfg.topology, cfg.p)
+                });
+            results
+        };
+        let sw = run_path(false);
+        let nf = run_path(true);
+
+        let ctx = format!(
+            "{:?}/{:?} {}x{} {:?} {:?} on {}",
+            cfg.algo,
+            cfg.coll,
+            cfg.p,
+            cfg.msg_elems(),
+            cfg.op,
+            cfg.dtype,
+            cfg.topology
+        );
+        for r in 0..cfg.p {
+            let want = oracle_for_rank(&*compute, &contribs, &cfg, r);
+            assert_agree(&sw[r], &want, &format!("software rank {r} ({ctx})"));
+            assert_agree(&nf[r], &want, &format!("offload rank {r} ({ctx})"));
+        }
+    });
+}

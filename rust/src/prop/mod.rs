@@ -5,23 +5,120 @@
 //! times, with the failing case's seed printed so any failure replays
 //! exactly.
 
+use std::sync::Mutex;
+
 use crate::sim::SplitMix64;
+
+#[cfg(test)]
+pub mod cross;
+
+/// Refcount for the global panic-hook suppression: `for_each_case` probes
+/// cases under `catch_unwind`, and without this every *expected* failure
+/// (should_panic-style probes inside properties) would spew the default
+/// hook's backtrace.  Refcounted because the test harness runs many
+/// property tests concurrently and the hook is process-global.
+static HOOK_SUPPRESSIONS: Mutex<usize> = Mutex::new(0);
+
+/// Whatever hook was installed before suppression began; reinstalled
+/// exactly (not the std default) when the last suppressor exits.
+type PanicHook = Box<dyn Fn(&std::panic::PanicHookInfo<'_>) + Send + Sync>;
+static STASHED_HOOK: Mutex<Option<PanicHook>> = Mutex::new(None);
+
+thread_local! {
+    /// file:line:col of this thread's most recent suppressed panic — the
+    /// hook normally prints it, so the failure report must recover it.
+    /// Thread-local so concurrent property tests can't cross-pollute.
+    static LAST_PANIC_LOC: std::cell::RefCell<Option<String>> =
+        const { std::cell::RefCell::new(None) };
+    /// Probe depth of `for_each_case` on THIS thread.  Only panics on a
+    /// probing thread are expected and silenced; a panic on any other
+    /// thread (an unrelated test running concurrently, a sweep worker)
+    /// is forwarded to the stashed hook so its diagnostics survive.
+    static PROBING_HERE: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+}
+
+fn suppress_panic_hook() {
+    PROBING_HERE.with(|d| d.set(d.get() + 1));
+    let mut depth = HOOK_SUPPRESSIONS.lock().unwrap_or_else(|e| e.into_inner());
+    if *depth == 0 {
+        // stash the installed hook and replace it with a recorder that,
+        // for probing threads, keeps only the panic location; payloads
+        // still propagate through catch_unwind untouched.  take_hook
+        // runs before the stash lock is held (see restore for why the
+        // two locks must never nest).
+        let installed = std::panic::take_hook();
+        *STASHED_HOOK.lock().unwrap_or_else(|e| e.into_inner()) = Some(installed);
+        std::panic::set_hook(Box::new(|info| {
+            if PROBING_HERE.with(|d| d.get()) > 0 {
+                let loc = info
+                    .location()
+                    .map(|l| format!("{}:{}:{}", l.file(), l.line(), l.column()));
+                LAST_PANIC_LOC.with(|slot| *slot.borrow_mut() = loc);
+            } else if let Some(prev) =
+                STASHED_HOOK.lock().unwrap_or_else(|e| e.into_inner()).as_ref()
+            {
+                prev(info);
+            }
+        }));
+    }
+    *depth += 1;
+}
+
+fn restore_panic_hook() {
+    PROBING_HERE.with(|d| d.set(d.get() - 1));
+    let mut depth = HOOK_SUPPRESSIONS.lock().unwrap_or_else(|e| e.into_inner());
+    *depth -= 1;
+    if *depth == 0 {
+        // drop our recorder and put the stashed hook back.  Take the
+        // stash in its own statement so the mutex guard is released
+        // BEFORE set_hook touches std's hook lock — holding both would
+        // deadlock against the recorder, which runs under std's lock and
+        // takes STASHED_HOOK.
+        drop(std::panic::take_hook());
+        let prev = STASHED_HOOK.lock().unwrap_or_else(|e| e.into_inner()).take();
+        if let Some(prev) = prev {
+            std::panic::set_hook(prev);
+        }
+    }
+}
 
 /// Run `prop` against `n` generated cases.  On panic, the case index and
 /// derived seed are attached so the failure is reproducible with
-/// `replay_case`.
+/// `replay_case`.  The default panic hook is suppressed while probing, so
+/// expected-failure properties don't spew backtraces; the one failure
+/// that matters is re-raised (with the hook restored) after its replay
+/// seed is printed.
 pub fn for_each_case(n: usize, master_seed: u64, mut prop: impl FnMut(&mut SplitMix64)) {
     let mut master = SplitMix64::new(master_seed);
+    suppress_panic_hook();
+    let mut failure = None;
     for case in 0..n {
         let case_seed = master.next_u64();
         let mut rng = SplitMix64::new(case_seed);
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
         if let Err(payload) = result {
-            eprintln!(
-                "property failed at case {case}/{n}: replay with replay_case({case_seed:#x})"
-            );
-            std::panic::resume_unwind(payload);
+            failure = Some((case, case_seed, payload));
+            break;
         }
+    }
+    restore_panic_hook();
+    if let Some((case, case_seed, payload)) = failure {
+        // the hook was suppressed when the panic fired, so surface the
+        // message here — resume_unwind won't invoke the hook either
+        let msg = payload
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_else(|| "<non-string panic payload>".to_string());
+        let loc = LAST_PANIC_LOC
+            .with(|slot| slot.borrow_mut().take())
+            .map(|l| format!(" at {l}"))
+            .unwrap_or_default();
+        eprintln!(
+            "property failed at case {case}/{n}: {msg}{loc}\n  \
+             replay with replay_case({case_seed:#x})"
+        );
+        std::panic::resume_unwind(payload);
     }
 }
 
@@ -89,5 +186,59 @@ mod tests {
             case += 1;
             assert!(case < 5, "fails at the fifth case");
         });
+    }
+
+    /// The failing property used by the replay round-trip below: fails
+    /// whenever the case's first draw is divisible by 3.
+    fn flaky(rng: &mut SplitMix64) {
+        let v = rng.next_u64();
+        assert!(v % 3 != 0, "divisible by three: {v}");
+    }
+
+    #[test]
+    fn replay_round_trips_the_failing_seed() {
+        // derive case seeds exactly the way for_each_case does and find
+        // the first failing one (P(all 64 pass) = (2/3)^64 ~ 0)
+        let mut master = SplitMix64::new(0xC0FFEE);
+        let mut seeds = Vec::new();
+        let mut failing = None;
+        for i in 0..64 {
+            let s = master.next_u64();
+            seeds.push(s);
+            if SplitMix64::new(s).next_u64() % 3 == 0 {
+                failing = Some((i, s));
+                break;
+            }
+        }
+        let (idx, seed) = failing.expect("a failing case within 64");
+
+        // the runner must fail at exactly that case...
+        let hit = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            for_each_case(idx + 10, 0xC0FFEE, flaky)
+        }));
+        assert!(hit.is_err(), "for_each_case must propagate the failure");
+
+        // ...the printed seed must reproduce it standalone...
+        let replayed =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| replay_case(seed, flaky)));
+        assert!(replayed.is_err(), "replay_case({seed:#x}) must reproduce the failure");
+
+        // ...and every earlier seed must replay clean.
+        for &s in &seeds[..idx] {
+            replay_case(s, flaky);
+        }
+    }
+
+    #[test]
+    fn hook_suppression_survives_nesting() {
+        // nested runners share the process-global hook; suppression must
+        // refcount cleanly and failures must still propagate afterwards
+        for_each_case(3, 11, |_| {
+            for_each_case(2, 12, |_| {});
+        });
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            for_each_case(2, 13, |_| panic!("still propagates"))
+        }));
+        assert!(res.is_err());
     }
 }

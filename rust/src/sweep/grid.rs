@@ -5,23 +5,24 @@
 //!
 //! ```toml
 //! [grid]
-//! name   = "myexp"                  # artifact basename (default "sweep")
-//! sizes  = [4, 64, 1024]            # msg_bytes axis
-//! p      = [4, 8]                   # cluster-size axis
-//! series = ["sw_rd", "NF_rd"]       # path x algorithm axis
+//! name     = "myexp"                  # artifact basename (default "sweep")
+//! sizes    = [4, 64, 1024]            # msg_bytes axis
+//! p        = [4, 8, 64, 256]          # cluster-size axis
+//! series   = ["sw_rd", "NF_rd"]       # path x algorithm axis
+//! topology = ["auto", "fattree"]      # wiring axis (see net::Topology)
 //!
-//! [run]                             # scalar ExpConfig overrides
+//! [run]                               # scalar ExpConfig overrides
 //! iters = 300
 //!
-//! [cost]                            # cost-model overrides
+//! [cost]                              # cost-model overrides
 //! link_prop_ns = 700
 //! ```
 //!
-//! Expansion order is fixed — series outermost, then p, then sizes
-//! innermost — and each job derives its own seed from (master seed, job
-//! index), so the job list is a pure function of the spec: the parallel
-//! runner can execute it with any `--jobs` and merge back into the same
-//! report bytes.
+//! Expansion order is fixed — series outermost, then topology, then p,
+//! then sizes innermost — and each job derives its own seed from (master
+//! seed, job index), so the job list is a pure function of the spec: the
+//! parallel runner can execute it with any `--jobs` and merge back into
+//! the same report bytes.
 
 use crate::bench::{self, Series};
 use crate::config::{ExpConfig, TomlDoc};
@@ -38,6 +39,8 @@ pub struct GridSpec {
     /// Scalar config every job starts from ([run] + [cost] sections).
     pub base: ExpConfig,
     pub series: Vec<Series>,
+    /// Topology specs (`auto`, `chain`, `fattree:8`, ...), one grid axis.
+    pub topologies: Vec<String>,
     pub ps: Vec<usize>,
     pub sizes: Vec<usize>,
 }
@@ -77,8 +80,10 @@ impl GridSpec {
             base.cost.set(k, v)?;
         }
         for (k, _) in doc.section("grid") {
-            if !matches!(k, "name" | "sizes" | "p" | "series") {
-                return Err(format!("unknown grid key: {k} (expected name/sizes/p/series)"));
+            if !matches!(k, "name" | "sizes" | "p" | "series" | "topology") {
+                return Err(format!(
+                    "unknown grid key: {k} (expected name/sizes/p/series/topology)"
+                ));
             }
         }
         let name = doc.get("grid", "name").unwrap_or("sweep").to_string();
@@ -112,7 +117,13 @@ impl GridSpec {
                 .collect::<Result<Vec<_>, _>>()?,
         };
 
-        let spec = GridSpec { name, base, series, ps, sizes };
+        let topologies = match doc.get_list("grid", "topology")? {
+            None => vec![base.topology.clone()],
+            Some(items) if items.is_empty() => return Err("grid.topology is empty".into()),
+            Some(items) => items,
+        };
+
+        let spec = GridSpec { name, base, series, topologies, ps, sizes };
         spec.expand()?; // validate every cell loudly at parse time
         Ok(spec)
     }
@@ -125,36 +136,42 @@ impl GridSpec {
             name: FIGS_GRID.to_string(),
             base: bench::figure_base(iters),
             series: bench::paper_series(),
+            topologies: vec!["auto".to_string()],
             ps: vec![8],
             sizes: bench::OSU_SIZES.to_vec(),
         }
     }
 
     pub fn n_jobs(&self) -> usize {
-        self.series.len() * self.ps.len() * self.sizes.len()
+        self.series.len() * self.topologies.len() * self.ps.len() * self.sizes.len()
     }
 
-    /// Expand to the ordered job list (series, then p, then sizes).
-    /// Every cell is validated; an invalid combination (e.g. rd on a
-    /// non-power-of-two p) names the cell it came from.
+    /// Expand to the ordered job list (series, then topology, then p,
+    /// then sizes).  Every cell is validated; an invalid combination
+    /// (e.g. rd on a non-power-of-two p, a hypercube cell at a p that
+    /// isn't one) names the cell it came from.
     pub fn expand(&self) -> Result<Vec<Job>, String> {
         let mut jobs = Vec::with_capacity(self.n_jobs());
         for &series in &self.series {
-            for &p in &self.ps {
-                for &size in &self.sizes {
-                    let index = jobs.len();
-                    let mut cfg = self.base.clone();
-                    cfg.algo = series.algo;
-                    cfg.offloaded = series.offloaded;
-                    cfg.p = p;
-                    cfg.msg_bytes = size;
-                    // topology comes from [run] (default "auto": each
-                    // algorithm's natural wiring) — never overridden here
-                    cfg.seed = derive_seed(self.base.seed, index as u64);
-                    cfg.validate().map_err(|e| {
-                        format!("grid cell {index} ({} p={p} {size}B): {e}", series.name())
-                    })?;
-                    jobs.push(Job { index, series, cfg });
+            for topo in &self.topologies {
+                for &p in &self.ps {
+                    for &size in &self.sizes {
+                        let index = jobs.len();
+                        let mut cfg = self.base.clone();
+                        cfg.algo = series.algo;
+                        cfg.offloaded = series.offloaded;
+                        cfg.topology = topo.clone();
+                        cfg.p = p;
+                        cfg.msg_bytes = size;
+                        cfg.seed = derive_seed(self.base.seed, index as u64);
+                        cfg.validate().map_err(|e| {
+                            format!(
+                                "grid cell {index} ({} {topo} p={p} {size}B): {e}",
+                                series.name()
+                            )
+                        })?;
+                        jobs.push(Job { index, series, cfg });
+                    }
                 }
             }
         }
@@ -213,9 +230,40 @@ mod tests {
         )
         .unwrap();
         let jobs = spec.expand().unwrap();
-        assert_eq!(jobs[0].cfg.topology, "ring", "[run] topology must not be overridden");
+        assert_eq!(jobs[0].cfg.topology, "ring", "[run] topology seeds the default axis");
         let spec = GridSpec::from_toml("[grid]\nsizes = [4]").unwrap();
         assert_eq!(spec.expand().unwrap()[0].cfg.topology, "auto");
+    }
+
+    #[test]
+    fn topology_axis_expands_between_series_and_p() {
+        let spec = GridSpec::from_toml(
+            r#"
+            [grid]
+            sizes = [4]
+            p = [4, 8]
+            series = ["NF_rd", "NF_binomial"]
+            topology = ["auto", "star:4", "fattree"]
+            [run]
+            iters = 5
+            "#,
+        )
+        .unwrap();
+        assert_eq!(spec.n_jobs(), 2 * 3 * 2);
+        let jobs = spec.expand().unwrap();
+        let key = |j: &Job| (j.series.name(), j.cfg.topology.clone(), j.cfg.p);
+        assert_eq!(key(&jobs[0]), ("NF_rd".into(), "auto".into(), 4));
+        assert_eq!(key(&jobs[1]), ("NF_rd".into(), "auto".into(), 8));
+        assert_eq!(key(&jobs[2]), ("NF_rd".into(), "star:4".into(), 4));
+        assert_eq!(key(&jobs[5]), ("NF_rd".into(), "fattree".into(), 8));
+        assert_eq!(key(&jobs[6]), ("NF_binomial".into(), "auto".into(), 4));
+        // a bad topology cell is loud and names itself
+        let err = GridSpec::from_toml(
+            "[grid]\nsizes = [4]\ntopology = [\"hypercube\"]\np = [6]\n\
+             [run]\nalgo = \"seq\"",
+        )
+        .unwrap_err();
+        assert!(err.contains("hypercube"), "{err}");
     }
 
     #[test]

@@ -22,12 +22,17 @@ use super::grid::{GridSpec, Job, FIGS_GRID};
 pub struct JobResult {
     pub index: usize,
     pub series: String,
+    /// Topology spec of the cell, as the grid named it ("auto",
+    /// "fattree", "star:8", ...).
+    pub topology: String,
     pub p: usize,
     pub msg_bytes: usize,
     pub seed: u64,
     pub host: LatencyStats,
     pub nic: LatencyStats,
     pub total_frames: u64,
+    /// Frames the switch fabric transmitted (0 on direct wirings).
+    pub switch_frames: u64,
     pub multicasts: u64,
     pub sim_ns: u64,
 }
@@ -37,12 +42,14 @@ impl JobResult {
         JobResult {
             index: job.index,
             series: job.series.name(),
+            topology: job.cfg.topology.clone(),
             p: job.cfg.p,
             msg_bytes: job.cfg.msg_bytes,
             seed: job.cfg.seed,
             host: m.host_overall(),
             nic: m.nic_overall(),
             total_frames: m.total_frames(),
+            switch_frames: m.switch_frames_tx,
             multicasts: m.multicasts,
             sim_ns: m.sim_ns,
         }
@@ -52,12 +59,14 @@ impl JobResult {
         Json::Obj(vec![
             ("index".into(), Json::int(self.index as u64)),
             ("series".into(), Json::str(self.series.clone())),
+            ("topology".into(), Json::str(self.topology.clone())),
             ("p".into(), Json::int(self.p as u64)),
             ("msg_bytes".into(), Json::int(self.msg_bytes as u64)),
             ("seed".into(), Json::int(self.seed)),
             ("host".into(), self.host.to_json()),
             ("nic".into(), self.nic.to_json()),
             ("total_frames".into(), Json::int(self.total_frames)),
+            ("switch_frames".into(), Json::int(self.switch_frames)),
             ("multicasts".into(), Json::int(self.multicasts)),
             ("sim_ns".into(), Json::int(self.sim_ns)),
         ])
@@ -74,12 +83,19 @@ impl JobResult {
                 .and_then(|v| v.as_str())
                 .ok_or("job: missing series")?
                 .to_string(),
+            // absent in pre-topology artifacts: default to the old world
+            topology: j
+                .get("topology")
+                .and_then(|v| v.as_str())
+                .unwrap_or("auto")
+                .to_string(),
             p: get_u64("p")? as usize,
             msg_bytes: get_u64("msg_bytes")? as usize,
             seed: get_u64("seed")?,
             host: LatencyStats::from_json(j.get("host").ok_or("job: missing host")?)?,
             nic: LatencyStats::from_json(j.get("nic").ok_or("job: missing nic")?)?,
             total_frames: get_u64("total_frames")?,
+            switch_frames: j.get("switch_frames").and_then(|v| v.as_u64()).unwrap_or(0),
             multicasts: get_u64("multicasts")?,
             sim_ns: get_u64("sim_ns")?,
         })
@@ -109,6 +125,7 @@ pub const FIGURES: &[(&str, &str, Metric, bool)] = &[
 pub struct SweepReport {
     pub name: String,
     pub series: Vec<String>,
+    pub topologies: Vec<String>,
     pub ps: Vec<usize>,
     pub sizes: Vec<usize>,
     pub jobs: Vec<JobResult>,
@@ -119,6 +136,7 @@ impl SweepReport {
         SweepReport {
             name: spec.name.clone(),
             series: spec.series.iter().map(|s| s.name()).collect(),
+            topologies: spec.topologies.clone(),
             ps: spec.ps.clone(),
             sizes: spec.sizes.clone(),
             jobs,
@@ -132,6 +150,10 @@ impl SweepReport {
             (
                 "series".into(),
                 Json::Arr(self.series.iter().map(|s| Json::str(s.clone())).collect()),
+            ),
+            (
+                "topology".into(),
+                Json::Arr(self.topologies.iter().map(|t| Json::str(t.clone())).collect()),
             ),
             ("p".into(), Json::Arr(self.ps.iter().map(|&p| Json::int(p as u64)).collect())),
             (
@@ -159,6 +181,12 @@ impl SweepReport {
         let &[p] = self.ps.as_slice() else {
             return Err(format!("figure {stem} needs a single-p grid, got {:?}", self.ps));
         };
+        if self.topologies.len() > 1 {
+            return Err(format!(
+                "figure {stem} needs a single-topology grid, got {:?}",
+                self.topologies
+            ));
+        }
         let series: Vec<&String> = self
             .series
             .iter()
@@ -228,13 +256,14 @@ impl SweepReport {
     /// Human summary: one row per job.
     pub fn summary_table(&self) -> Table {
         let mut t = Table::new(&[
-            "job", "series", "p", "msg_size", "host_avg_us", "host_min_us", "nic_avg_us",
-            "frames",
+            "job", "series", "topology", "p", "msg_size", "host_avg_us", "host_min_us",
+            "nic_avg_us", "frames",
         ]);
         for j in &self.jobs {
             t.row(vec![
                 j.index.to_string(),
                 j.series.clone(),
+                j.topology.clone(),
                 j.p.to_string(),
                 fmt_bytes(j.msg_bytes),
                 us(j.host.avg_us()),
@@ -263,18 +292,21 @@ mod tests {
         let mk = |index: usize, series: &str, size: usize, base: u64| JobResult {
             index,
             series: series.into(),
+            topology: "auto".into(),
             p: 8,
             msg_bytes: size,
             seed: 1000 + index as u64,
             host: stats(&[base, base + 2_000]),
             nic: stats(&[base / 4]),
             total_frames: 7,
+            switch_frames: 0,
             multicasts: 0,
             sim_ns: 1_000_000,
         };
         SweepReport {
             name: "t".into(),
             series: vec!["sw_seq".into(), "NF_rd".into()],
+            topologies: vec!["auto".into()],
             ps: vec![8],
             sizes: vec![4, 64],
             jobs: vec![
@@ -319,6 +351,14 @@ mod tests {
         assert_eq!(cols[0].get("name").unwrap().as_str(), Some("NF_rd"));
 
         assert!(r.figure_json("fig9").is_err());
+    }
+
+    #[test]
+    fn figure_json_rejects_multi_topology_grids() {
+        let mut r = tiny_report();
+        r.topologies = vec!["auto".into(), "fattree".into()];
+        let err = r.figure_json("fig4").unwrap_err();
+        assert!(err.contains("single-topology"), "{err}");
     }
 
     #[test]

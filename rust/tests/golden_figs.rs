@@ -1,0 +1,56 @@
+//! Golden-artifact regression: a committed reference `fig4.json`
+//! produced by the seed cost model, byte-compared against a fresh
+//! `sweep --grid figs --jobs 2` run on every `cargo test`.
+//!
+//! The jobs-count determinism test (`sweep_determinism.rs`) only proves a
+//! sweep agrees with *itself*; this one pins the absolute numbers, so a
+//! silent cost-model change (a default constant nudged, a charge moved,
+//! a fold reordered) fails loudly instead of drifting the figures.
+//!
+//! Blessing: if `tests/golden/fig4.json` does not exist yet, the test
+//! writes the freshly computed artifact there and passes with a notice —
+//! commit the generated file to arm the regression.  To intentionally
+//! re-bless after a deliberate cost-model change, delete the file and
+//! re-run `cargo test`.
+
+use std::path::PathBuf;
+
+use nfscan::sweep::{run_grid, GridSpec};
+
+/// The golden contract: the built-in figs grid (five paper series x the
+/// OSU size ladder, p = 8) at a fixed iteration count, merged over two
+/// workers.  Everything here is deterministic from the spec.
+const GOLDEN_ITERS: usize = 20;
+const GOLDEN_JOBS: usize = 2;
+
+fn golden_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/fig4.json")
+}
+
+#[test]
+fn fig4_matches_committed_golden() {
+    let spec = GridSpec::figs(GOLDEN_ITERS);
+    let report = run_grid(&spec, GOLDEN_JOBS, "artifacts").expect("figs grid runs");
+    let fresh = report.figure_json("fig4").expect("fig4 renders").pretty();
+
+    let path = golden_path();
+    if !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).expect("mkdir tests/golden");
+        std::fs::write(&path, &fresh).expect("write golden");
+        eprintln!(
+            "golden fig4.json was missing — blessed a fresh one at {}; \
+             commit it to arm the cost-model regression gate",
+            path.display()
+        );
+        return;
+    }
+    let committed = std::fs::read_to_string(&path).expect("read golden");
+    assert_eq!(
+        fresh,
+        committed,
+        "fig4 drifted from the committed golden ({}).  If the cost-model \
+         change is intentional, delete the file and re-run cargo test to \
+         re-bless; otherwise this is a silent regression.",
+        path.display()
+    );
+}

@@ -37,6 +37,11 @@ fn random_cfg(rng: &mut SplitMix64) -> ExpConfig {
         _ => *choose(rng, &[2usize, 4, 8, 16]),
     };
     cfg.offloaded = rng.next_below(2) == 0;
+    if rng.next_below(3) == 0 {
+        // sometimes run on a hierarchical fabric instead of the
+        // algorithm's natural direct wiring (valid at every p above)
+        cfg.topology = choose(rng, &["star:4", "fattree"]).to_string();
+    }
     cfg.dtype = *choose(rng, &Dtype::ALL);
     cfg.op = loop {
         let op = *choose(rng, &Op::ALL);
@@ -204,10 +209,12 @@ fn corrupted_frames_never_parse_as_valid() {
 #[test]
 fn routing_reaches_everyone_on_all_topologies() {
     for_each_case(40, 0x707, |rng| {
-        let p = *choose(rng, &[2usize, 4, 8, 16]);
-        let topo = match rng.next_below(3) {
+        let p = *choose(rng, &[2usize, 4, 8, 16, 64]);
+        let topo = match rng.next_below(5) {
             0 => Topology::chain(p),
             1 if p >= 3 => Topology::ring(p),
+            2 => Topology::star(p, *choose(rng, &[2usize, 4, 8])).unwrap(),
+            3 => Topology::fattree(p, Topology::fattree_arity_for(p)).unwrap(),
             _ => Topology::hypercube(p),
         };
         let routes = RouteTable::build(&topo);
@@ -216,7 +223,11 @@ fn routing_reaches_everyone_on_all_topologies() {
             let dst = perm[(i + 1) % p];
             if src != dst {
                 let hops = routes.hops(&topo, src, dst).expect("reachable");
-                assert!(hops >= 1 && hops < p, "{src}->{dst} hops {hops}");
+                assert!(
+                    hops >= 1 && hops < topo.nodes(),
+                    "{src}->{dst} hops {hops} on {}",
+                    topo.name()
+                );
             }
         }
     });

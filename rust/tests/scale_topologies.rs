@@ -1,0 +1,98 @@
+//! Scaling past the paper's testbed: end-to-end runs on the hierarchical
+//! multi-switch topologies at p = 64..256, with every rank's result still
+//! verified against the oracle (`cfg.verify`).
+//!
+//! The paper evaluates on "a small configuration" and names scaling as
+//! open work (SSVI); NIC-based collective trees only get interesting once
+//! they span many switches.  These tests pin down that the simulator's
+//! scaled fabrics stay correct and that host-observed latency grows
+//! O(log p), not O(p), along the fat-tree axis.
+
+use nfscan::cluster::Cluster;
+use nfscan::config::{EngineKind, ExpConfig};
+use nfscan::metrics::RunMetrics;
+use nfscan::packet::AlgoType;
+use nfscan::runtime::make_engine;
+
+fn run(p: usize, topology: &str, algo: AlgoType, iters: usize) -> RunMetrics {
+    let mut cfg = ExpConfig::default();
+    cfg.p = p;
+    cfg.algo = algo;
+    cfg.offloaded = true;
+    cfg.topology = topology.into();
+    cfg.msg_bytes = 4;
+    cfg.iters = iters;
+    cfg.warmup = 1;
+    cfg.verify = true;
+    cfg.cost.start_jitter_ns = 0;
+    let compute = make_engine(EngineKind::Native, "artifacts");
+    let mut cluster = Cluster::new(cfg, compute);
+    cluster.run().unwrap_or_else(|e| panic!("{algo:?} p={p} on {topology}: {e}"))
+}
+
+#[test]
+fn fattree_p64_verifies_all_tree_algorithms() {
+    for algo in [AlgoType::RecursiveDoubling, AlgoType::BinomialTree] {
+        let m = run(64, "fattree", algo, 3);
+        assert_eq!(m.host_overall().count(), 64 * 3, "{algo:?}");
+        assert!(m.switch_frames_forwarded > 0, "{algo:?} must cross the fabric");
+        assert_eq!(
+            m.frames_forwarded.iter().sum::<u64>(),
+            0,
+            "{algo:?}: hosts are leaves; only switches forward"
+        );
+    }
+}
+
+#[test]
+fn star_p64_verifies_and_trunk_serializes() {
+    // 8 leaves of 8 hosts: every cross-leaf flow squeezes through one
+    // uplink, so the trunk must carry (and serialize) real traffic
+    let m = run(64, "star:8", AlgoType::RecursiveDoubling, 3);
+    assert_eq!(m.host_overall().count(), 64 * 3);
+    assert!(m.switch_frames_tx > m.total_frames() / 2, "trunks carry most frames");
+}
+
+#[test]
+fn sequential_scales_past_the_card_on_a_chain() {
+    // the direct chain needs no switches at any p — the paper's wiring,
+    // just longer; 100 ranks exercises deep pipelining
+    let m = run(100, "chain", AlgoType::Sequential, 3);
+    assert_eq!(m.host_overall().count(), 100 * 3);
+    assert_eq!(m.switch_frames_tx, 0);
+}
+
+#[test]
+fn fattree_latency_grows_logarithmically() {
+    // p 8 -> 64 is log-factor 2 (3 -> 6 recursive-doubling steps); the
+    // fat-tree adds a bounded number of switch hops per step, so the
+    // host-observed average must grow clearly sublinearly: well under
+    // the 8x of an O(p) algorithm, around the 2x of O(log p).
+    let lat8 = run(8, "fattree", AlgoType::RecursiveDoubling, 6).host_overall().avg_ns();
+    let lat64 = run(64, "fattree", AlgoType::RecursiveDoubling, 6).host_overall().avg_ns();
+    assert!(lat64 > lat8, "more ranks cannot be free: {lat64} vs {lat8}");
+    assert!(
+        lat64 < 3.0 * lat8,
+        "p=64 fat-tree latency {lat64} must stay near 2x the p=8 latency {lat8} (O(log p)), \
+         nowhere near the 8x of O(p)"
+    );
+}
+
+/// The acceptance-criteria smoke at p=256 (k=12 fat-tree, 436 graph
+/// nodes).  Heavy for the debug-mode tier-1 run, so it is `#[ignore]`d
+/// there; CI runs it in release via `cargo test --release -- --ignored`.
+#[test]
+#[ignore = "p=256 release-mode smoke; run with --release -- --ignored"]
+fn fattree_p256_smoke_verifies() {
+    let m = run(256, "fattree", AlgoType::RecursiveDoubling, 3);
+    assert_eq!(m.host_overall().count(), 256 * 3);
+    assert!(m.switch_frames_forwarded > 0);
+    // O(log p) check at scale: 256 ranks = 8 steps vs 64 ranks = 6
+    let lat64 = run(64, "fattree", AlgoType::RecursiveDoubling, 3).host_overall().avg_ns();
+    let lat256 = m.host_overall().avg_ns();
+    assert!(lat256 > lat64);
+    assert!(
+        lat256 < 2.5 * lat64,
+        "p=256 latency {lat256} must grow like log p over p=64's {lat64}"
+    );
+}
