@@ -1,0 +1,107 @@
+//! Handler-VM dispatch-overhead bench: what does running a collective
+//! as an interpreted packet program cost over the fixed-function state
+//! machine?  Measured, not asserted — `cargo bench --bench handler_vm`.
+//!
+//! Two views:
+//! - **activation micro**: engine construction + one `on_host_request`
+//!   activation of the recursive-doubling allreduce, VM program vs
+//!   native state machine.  Construction stays inside the timed loop on
+//!   purpose — the cluster builds one engine per epoch, so the real
+//!   dispatch path pays flow-scratchpad setup (VM) vs a plain struct
+//!   (fixed-function) exactly once per collective too;
+//! - **end-to-end**: a p=8 64B scan cell on both offload paths —
+//!   simulated latency (the VM charges per-instruction cycles, so its
+//!   *modeled* latency is higher too), host wallclock, and the
+//!   handler_instrs / handler_stalls counters per epoch.
+
+use std::time::Instant;
+
+use nfscan::cluster::Cluster;
+use nfscan::config::{CostModel, EngineKind, ExpConfig};
+use nfscan::data::{Dtype, Op, Payload};
+use nfscan::fpga::allreduce::RdAllreduce;
+use nfscan::fpga::engine::{CollEngine, EngineCtx};
+use nfscan::metrics::Table;
+use nfscan::nic::handler_engine;
+use nfscan::packet::{AlgoType, CollType};
+use nfscan::runtime::{make_engine, NativeEngine};
+use nfscan::sim::OffloadRequest;
+
+fn activation_ns(mut mk: impl FnMut() -> Box<dyn CollEngine>, reps: usize) -> f64 {
+    let compute = NativeEngine::new();
+    let cost = CostModel::default();
+    let req = OffloadRequest {
+        rank: 0,
+        comm: 0,
+        epoch: 0,
+        comm_size: 2,
+        coll: CollType::Allreduce,
+        algo: AlgoType::RecursiveDoubling,
+        op: Op::Sum,
+        dtype: Dtype::I32,
+        payload: Payload::from_i32(&(0..16).collect::<Vec<i32>>()),
+    };
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        let mut engine = mk();
+        let mut ctx = EngineCtx {
+            rank: 0,
+            p: 2,
+            inclusive: false,
+            op: Op::Sum,
+            compute: &compute,
+            cost: &cost,
+            cycles: 0,
+            instrs: 0,
+            stalls: 0,
+        };
+        let actions = engine.on_host_request(&mut ctx, &req);
+        std::hint::black_box(&actions);
+    }
+    t0.elapsed().as_nanos() as f64 / reps as f64
+}
+
+fn cell(handler: bool, iters: usize) -> (f64, f64, u64, u64) {
+    let mut cfg = ExpConfig::default();
+    cfg.p = 8;
+    cfg.msg_bytes = 64;
+    cfg.iters = iters;
+    cfg.warmup = 32;
+    cfg.handler = handler;
+    let compute = make_engine(EngineKind::Native, "artifacts");
+    let t0 = Instant::now();
+    let mut cluster = Cluster::new(cfg, compute);
+    let m = cluster.run().expect("bench run");
+    let wall = t0.elapsed().as_secs_f64();
+    (m.host_overall().avg_us(), wall, m.handler_instrs, m.handler_stalls)
+}
+
+fn main() {
+    let reps = 200_000;
+    let vm = activation_ns(|| handler_engine(CollType::Allreduce), reps);
+    let ff = activation_ns(|| Box::new(RdAllreduce::new(0, 2)), reps);
+    let mut t = Table::new(&["activation", "ns_per_call", "overhead"]);
+    t.row(vec!["fixed-function".into(), format!("{ff:.1}"), "1.00x".into()]);
+    t.row(vec!["handler VM".into(), format!("{vm:.1}"), format!("{:.2}x", vm / ff)]);
+    println!("allreduce on_host_request activation, {reps} reps (host wallclock)");
+    print!("{}", t.render());
+    println!();
+
+    let iters = 1_500;
+    let (ff_us, ff_wall, _, _) = cell(false, iters);
+    let (vm_us, vm_wall, instrs, stalls) = cell(true, iters);
+    let epochs = (iters + 32) as u64;
+    let mut t = Table::new(&[
+        "path", "sim_avg_us", "wallclock_s", "instrs_per_epoch", "stalls_per_epoch",
+    ]);
+    t.row(vec!["NF_rd".into(), format!("{ff_us:.2}"), format!("{ff_wall:.2}"), "0".into(), "0".into()]);
+    t.row(vec![
+        "handler:scan".into(),
+        format!("{vm_us:.2}"),
+        format!("{vm_wall:.2}"),
+        format!("{}", instrs / epochs),
+        format!("{}", stalls / epochs),
+    ]);
+    println!("p=8 64B scan cell, {iters} iters (simulated latency + host wallclock)");
+    print!("{}", t.render());
+}

@@ -11,7 +11,7 @@ use std::rc::Rc;
 
 use crate::config::ExpConfig;
 use crate::metrics::{us, LatencyStats, RunMetrics, Table};
-use crate::packet::AlgoType;
+use crate::packet::{AlgoType, CollType};
 use crate::runtime::Compute;
 use crate::util::fmt_bytes;
 
@@ -19,16 +19,79 @@ use crate::util::fmt_bytes;
 /// ladder, up to multi-fragment territory.
 pub const OSU_SIZES: &[usize] = &[4, 16, 64, 256, 1024, 4096, 16384];
 
-/// One line in a figure: (prefix, algorithm).
+/// Which datapath a series measures.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SeriesPath {
+    /// Host software MPI over the kernel stack (`sw_*`).
+    Sw,
+    /// Fixed-function NetFPGA state machines (`NF_*`).
+    Offload,
+    /// sPIN-style handler-VM programs (`handler[:coll]`).
+    Handler,
+}
+
+/// One line in a figure: datapath x algorithm, plus (for handler
+/// series) an optionally pinned collective.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub struct Series {
     pub algo: AlgoType,
-    pub offloaded: bool,
+    pub path: SeriesPath,
+    /// `handler:<coll>` series pin the collective; None = base config's.
+    pub coll: Option<CollType>,
 }
 
 impl Series {
+    pub fn sw(algo: AlgoType) -> Series {
+        Series { algo, path: SeriesPath::Sw, coll: None }
+    }
+
+    pub fn nf(algo: AlgoType) -> Series {
+        Series { algo, path: SeriesPath::Offload, coll: None }
+    }
+
+    /// Handler-VM series; programs pick their own algorithm, so the
+    /// `algo` field only steers "auto" topology resolution.
+    pub fn handler(coll: Option<CollType>) -> Series {
+        Series { algo: AlgoType::RecursiveDoubling, path: SeriesPath::Handler, coll }
+    }
+
+    /// The series a bare config runs as (the default grid axis).
+    /// Handler configs pin their collective so the artifact label
+    /// round-trips with `ExpConfig::series_name` ("handler:exscan").
+    pub fn of_config(cfg: &ExpConfig) -> Series {
+        let path = if cfg.handler {
+            SeriesPath::Handler
+        } else if cfg.offloaded {
+            SeriesPath::Offload
+        } else {
+            SeriesPath::Sw
+        };
+        let coll = if cfg.handler { Some(cfg.coll) } else { None };
+        Series { algo: cfg.algo, path, coll }
+    }
+
+    pub fn offloaded(&self) -> bool {
+        self.path != SeriesPath::Sw
+    }
+
+    /// Overwrite the config fields this series pins.
+    pub fn apply(&self, cfg: &mut ExpConfig) {
+        cfg.algo = self.algo;
+        cfg.offloaded = self.path != SeriesPath::Sw;
+        cfg.handler = self.path == SeriesPath::Handler;
+        if let Some(coll) = self.coll {
+            cfg.coll = coll;
+        }
+    }
+
     pub fn name(&self) -> String {
-        let prefix = if self.offloaded { "NF" } else { "sw" };
+        if self.path == SeriesPath::Handler {
+            return match self.coll {
+                Some(c) => format!("handler:{}", c.name()),
+                None => "handler".to_string(),
+            };
+        }
+        let prefix = if self.offloaded() { "NF" } else { "sw" };
         let a = match self.algo {
             AlgoType::Sequential => "seq",
             AlgoType::RecursiveDoubling => "rd",
@@ -38,12 +101,19 @@ impl Series {
     }
 
     /// Inverse of [`Series::name`] — how grid specs name their series
-    /// axis (`series = ["sw_seq", "NF_rd"]`).
+    /// axis (`series = ["sw_seq", "NF_rd", "handler:exscan"]`).
     pub fn from_name(s: &str) -> Option<Series> {
+        if s == "handler" {
+            return Some(Series::handler(None));
+        }
+        if let Some(coll) = s.strip_prefix("handler:") {
+            let coll = CollType::from_name(coll).filter(|c| *c != CollType::Reduce)?;
+            return Some(Series::handler(Some(coll)));
+        }
         let (prefix, algo) = s.split_once('_')?;
-        let offloaded = match prefix {
-            "NF" => true,
-            "sw" => false,
+        let path = match prefix {
+            "NF" => SeriesPath::Offload,
+            "sw" => SeriesPath::Sw,
             _ => return None,
         };
         let algo = match algo {
@@ -52,7 +122,31 @@ impl Series {
             "binomial" => AlgoType::BinomialTree,
             _ => return None,
         };
-        Some(Series { algo, offloaded })
+        Some(Series { algo, path, coll: None })
+    }
+
+    /// Expand one series-axis token: the bare `"handler"` token fans out
+    /// to all five handler collectives (the sweepable "which collective
+    /// is offloaded" axis); every other token is a single series.
+    pub fn expand_name(s: &str) -> Option<Vec<Series>> {
+        if s == "handler" {
+            return Some(handler_series());
+        }
+        Series::from_name(s).map(|one| vec![one])
+    }
+
+    /// Expand a whole series axis (grid list or comma-split CLI value);
+    /// the error names the offending token.  Shared by `sweep::grid` and
+    /// the `--series` override so the vocabulary can't drift.
+    pub fn expand_list<S: AsRef<str>>(tokens: &[S]) -> Result<Vec<Series>, String> {
+        let mut v = Vec::new();
+        for tok in tokens {
+            let tok = tok.as_ref().trim();
+            v.extend(Series::expand_name(tok).ok_or_else(|| {
+                format!("series {tok:?}: unknown ((sw|NF)_(seq|rd|binomial) or handler[:coll])")
+            })?);
+        }
+        Ok(v)
     }
 }
 
@@ -61,22 +155,28 @@ impl Series {
 /// the omitted series through `all_series` for the ablation benches.
 pub fn paper_series() -> Vec<Series> {
     vec![
-        Series { algo: AlgoType::Sequential, offloaded: false },
-        Series { algo: AlgoType::RecursiveDoubling, offloaded: false },
-        Series { algo: AlgoType::Sequential, offloaded: true },
-        Series { algo: AlgoType::RecursiveDoubling, offloaded: true },
-        Series { algo: AlgoType::BinomialTree, offloaded: true },
+        Series::sw(AlgoType::Sequential),
+        Series::sw(AlgoType::RecursiveDoubling),
+        Series::nf(AlgoType::Sequential),
+        Series::nf(AlgoType::RecursiveDoubling),
+        Series::nf(AlgoType::BinomialTree),
     ]
 }
 
 pub fn nf_series() -> Vec<Series> {
-    paper_series().into_iter().filter(|s| s.offloaded).collect()
+    paper_series().into_iter().filter(|s| s.offloaded()).collect()
 }
 
 pub fn all_series() -> Vec<Series> {
     let mut v = paper_series();
-    v.push(Series { algo: AlgoType::BinomialTree, offloaded: false });
+    v.push(Series::sw(AlgoType::BinomialTree));
     v
+}
+
+/// One handler series per VM collective — what the bare `"handler"`
+/// series token expands to.
+pub fn handler_series() -> Vec<Series> {
+    CollType::HANDLER_SET.iter().map(|&c| Series::handler(Some(c))).collect()
 }
 
 /// Run one (series, msg_size) cell and return its metrics.
@@ -87,8 +187,7 @@ pub fn run_cell(
     compute: Rc<dyn Compute>,
 ) -> RunMetrics {
     let mut cfg = base.clone();
-    cfg.algo = series.algo;
-    cfg.offloaded = series.offloaded;
+    series.apply(&mut cfg);
     cfg.msg_bytes = msg_bytes;
     cfg.topology = "auto".into();
     let mut cluster = crate::cluster::Cluster::new(cfg, compute);
@@ -245,11 +344,43 @@ mod tests {
 
     #[test]
     fn series_name_round_trips() {
-        for s in all_series() {
+        for s in all_series().into_iter().chain(handler_series()) {
             assert_eq!(Series::from_name(&s.name()), Some(s));
         }
         assert_eq!(Series::from_name("hw_rd"), None);
         assert_eq!(Series::from_name("NF_bogus"), None);
         assert_eq!(Series::from_name("seq"), None);
+        assert_eq!(Series::from_name("handler:reduce"), None);
+        assert_eq!(Series::from_name("handler:warp"), None);
+    }
+
+    #[test]
+    fn handler_token_expands_to_all_five_collectives() {
+        let all = Series::expand_name("handler").unwrap();
+        let names: Vec<String> = all.iter().map(|s| s.name()).collect();
+        assert_eq!(
+            names,
+            vec![
+                "handler:scan",
+                "handler:exscan",
+                "handler:allreduce",
+                "handler:bcast",
+                "handler:barrier"
+            ]
+        );
+        assert_eq!(Series::expand_name("NF_rd").unwrap().len(), 1);
+        assert_eq!(Series::expand_name("warp"), None);
+    }
+
+    #[test]
+    fn series_apply_pins_the_path_and_collective() {
+        let mut cfg = ExpConfig::default();
+        Series::from_name("handler:exscan").unwrap().apply(&mut cfg);
+        assert!(cfg.handler && cfg.offloaded);
+        assert_eq!(cfg.coll, CollType::Exscan);
+        cfg.validate().unwrap();
+        Series::from_name("sw_seq").unwrap().apply(&mut cfg);
+        assert!(!cfg.handler && !cfg.offloaded);
+        assert_eq!(cfg.coll, CollType::Exscan, "non-handler series keep the collective");
     }
 }

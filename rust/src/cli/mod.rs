@@ -101,18 +101,30 @@ COMMANDS
                          --sizes 4,64,1024)
   sweep --grid F.toml    expand a grid spec (sizes x p x series x topology)
                          and run every cell in parallel: --jobs N worker
-                         threads, JSON artifacts under --out DIR (default
-                         out/).  --grid figs reproduces Figs. 4-7 in one
-                         batch (fig4.json..fig7.json); artifact bytes are
-                         identical for any --jobs.  --topology a,b and
-                         --sizes n,m override the file's axes.
+                         threads (default: all cores; the banner shows the
+                         resolved count), JSON artifacts under --out DIR
+                         (default out/).  --grid figs reproduces Figs. 4-7
+                         in one batch (fig4.json..fig7.json); artifact
+                         bytes are identical for any --jobs.  --topology
+                         a,b / --sizes n,m / --series a,b override the
+                         file's axes.
   sweep --config F.toml  legacy: run ONE experiment described by a TOML
+  values                 run ONE collective with deterministic per-rank
+                         data and dump each rank's result bytes as JSON
+                         (--series handler:scan --out f.json); used by CI
+                         to prove handler results == offload/sw results
   selftest               verify the XLA artifact path against native compute
   perf                   wallclock breakdown of one PJRT combine call
   help                   this text
 
-Collectives: --coll scan|exscan|allreduce|barrier (allreduce/barrier need
---algo rd or binomial).  Concurrent communicators: --comms N.
+Collectives: --coll scan|exscan|allreduce|barrier|bcast (allreduce/barrier
+need --algo rd or binomial; bcast needs the handler VM or the sw path).
+Concurrent communicators: --comms N.
+
+Series: (sw|NF)_(seq|rd|binomial) plus the programmable-NIC path
+handler[:coll] — `--series handler` sweeps all five handler collectives
+(scan, exscan, allreduce, bcast, barrier) as sPIN-style packet programs
+on the simulated card (`--handler true` on run/quickstart).
 
 Topologies (--topology): chain | ring | hypercube (direct NetFPGA wiring,
 the paper's testbed), star[:group] | fattree[:k] (hierarchical switch
@@ -139,6 +151,7 @@ pub fn main_with_args(argv: &[String]) -> Result<()> {
         "run" => cmd_run(&args),
         "fig4" | "fig5" | "fig6" | "fig7" => cmd_figure(&args),
         "sweep" => cmd_sweep(&args),
+        "values" => cmd_values(&args),
         "selftest" => cmd_selftest(&args),
         "perf" => cmd_perf(&args),
         other => bail!("unknown command {other:?} (try `nfscan help`)"),
@@ -252,7 +265,8 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         return cmd_sweep_single(args);
     }
     args.ensure_only(&[
-        "grid", "jobs", "out", "artifacts", "engine", "iters", "sizes", "topology", "csv",
+        "grid", "jobs", "out", "artifacts", "engine", "iters", "sizes", "topology", "series",
+        "csv",
     ])?;
     let grid = args
         .get("grid")
@@ -276,10 +290,17 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     if let Some(topos) = args.get("topology") {
         spec.topologies = topos.split(',').map(|t| t.trim().to_string()).collect();
     }
+    if let Some(series) = args.get("series") {
+        let tokens: Vec<&str> = series.split(',').collect();
+        spec.series =
+            crate::bench::Series::expand_list(&tokens).map_err(|e| anyhow!("--{e}"))?;
+    }
     if let Some(e) = args.get("engine") {
         spec.base.engine =
             EngineKind::from_name(e).ok_or_else(|| anyhow!("unknown engine {e}"))?;
     }
+    // --jobs defaults to every core; the banner always shows the
+    // RESOLVED worker count so batch logs are self-describing.
     let default_jobs = std::thread::available_parallelism().map_or(1, |n| n.get());
     let jobs = args.get_usize("jobs", default_jobs)?;
     let out = std::path::Path::new(args.get("out").unwrap_or("out"));
@@ -287,14 +308,15 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
     let n = spec.n_jobs();
     println!(
-        "sweep {}: {} jobs ({} series x {} topologies x {} p x {} sizes) on {} workers",
+        "sweep {}: {} jobs ({} series x {} topologies x {} p x {} sizes) on {} workers{}",
         spec.name,
         n,
         spec.series.len(),
         spec.topologies.len(),
         spec.ps.len(),
         spec.sizes.len(),
-        jobs.clamp(1, n.max(1))
+        jobs.clamp(1, n.max(1)),
+        if args.get("jobs").is_some() { "" } else { " (auto: available parallelism)" }
     );
     // direct (switchless) wirings past the first-gen card's 4 ports are
     // idealized hardware — simulate them, but say so loudly; the
@@ -313,20 +335,36 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             }
         }
     }
-    let overcabled: Vec<String> = pairs
-        .into_iter()
-        .filter_map(|(s, p)| {
-            crate::net::Topology::build(&s, p)
-                .ok()
-                .filter(|t| t.switches() == 0 && !t.fits_card())
-                .map(|t| format!("{} p={}", t.name(), p))
-        })
-        .collect();
+    let mut overcabled = Vec::new();
+    let mut fat_leaves = Vec::new();
+    for (s, p) in pairs {
+        let Ok(t) = crate::net::Topology::build(&s, p) else { continue };
+        if t.switches() == 0 && !t.fits_card() {
+            overcabled.push(format!("{} p={}", t.name(), p));
+        } else if s.starts_with("star")
+            && t.switches() > 1
+            && t.max_leaf_radix() > crate::net::PORTS_PER_CARD
+        {
+            // star leaves are NetFPGA-class boxes: g hosts + 1 trunk
+            // must fit the 4-port card, i.e. star:3 at most.  The core —
+            // including the degenerate single-hub star, which models a
+            // plain Ethernet switch — is a real switch with
+            // unconstrained radix.
+            fat_leaves.push(format!("{} p={} (leaf radix {})", t.name(), p, t.max_leaf_radix()));
+        }
+    }
     if !overcabled.is_empty() {
         println!(
             "warning: direct wirings exceeding the NetFPGA's 4 ports (idealized hardware, \
              not buildable on first-gen cards): {}",
             overcabled.join(", ")
+        );
+    }
+    if !fat_leaves.is_empty() {
+        println!(
+            "warning: star leaf groups exceeding the NetFPGA's 4 ports (a leaf carries its \
+             g hosts plus the trunk uplink; use star:3 or smaller on first-gen cards): {}",
+            fat_leaves.join(", ")
         );
     }
     let t0 = std::time::Instant::now();
@@ -342,6 +380,50 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         println!("wrote {}", f.display());
     }
     println!("[{n} jobs in {wallclock:.2}s wallclock]");
+    Ok(())
+}
+
+/// Dump each rank's result bytes for ONE deterministic collective —
+/// the handler-conformance probe.  The per-rank contributions depend
+/// only on (seed, rank, dtype, op, msg size), never on the path, so CI
+/// runs this once per offload path and byte-compares the files: handler
+/// results must equal fixed-function / software results exactly, while
+/// latencies are free to differ.
+fn cmd_values(args: &Args) -> Result<()> {
+    use crate::metrics::json::Json;
+    let mut cfg = ExpConfig::default();
+    cfg.iters = 1;
+    cfg.warmup = 0;
+    if let Some(name) = args.get("series") {
+        let series = crate::bench::Series::from_name(name)
+            .ok_or_else(|| anyhow!("--series {name:?}: unknown series"))?;
+        series.apply(&mut cfg);
+    }
+    args.apply_run_flags(&mut cfg, &["series", "out", "artifacts"])?;
+    let compute = engine_from(args, &cfg);
+    let contribs: Vec<_> =
+        (0..cfg.p).map(|r| crate::cluster::Cluster::gen_payload(&cfg, r, 0)).collect();
+    let (results, _metrics) =
+        crate::cluster::Cluster::scan_once(cfg.clone(), compute, contribs)?;
+    let hex: Vec<Json> = results
+        .iter()
+        .map(|p| Json::str(p.bytes().iter().map(|b| format!("{b:02x}")).collect::<String>()))
+        .collect();
+    let doc = Json::Obj(vec![
+        ("coll".into(), Json::str(cfg.coll.name())),
+        ("op".into(), Json::str(cfg.op.name())),
+        ("dtype".into(), Json::str(cfg.dtype.name())),
+        ("p".into(), Json::int(cfg.p as u64)),
+        ("msg_bytes".into(), Json::int(cfg.msg_bytes as u64)),
+        ("results_hex".into(), Json::Arr(hex)),
+    ]);
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, doc.pretty()).with_context(|| format!("writing {path}"))?;
+            println!("wrote {path} ({} ranks, {})", cfg.p, cfg.series_name());
+        }
+        None => println!("{}", doc.pretty()),
+    }
     Ok(())
 }
 
@@ -531,6 +613,70 @@ mod tests {
         assert_eq!(jobs.len(), 2);
         assert_eq!(jobs[0].get("topology").unwrap().as_str(), Some("auto"));
         assert_eq!(jobs[1].get("topology").unwrap().as_str(), Some("fattree"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sweep_series_override_expands_handler() {
+        let dir = std::env::temp_dir().join(format!("nfscan_cli_hnd_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let grid = dir.join("grid.toml");
+        std::fs::write(
+            &grid,
+            "[grid]\nname = \"hnd\"\nsizes = [4]\nseries = [\"NF_rd\"]\n\
+             [run]\niters = 3\nwarmup = 1\np = 4\n",
+        )
+        .unwrap();
+        let out = dir.join("out");
+        let a = Args::parse(&argv(&[
+            "sweep",
+            "--grid",
+            grid.to_str().unwrap(),
+            "--series",
+            "handler",
+            "--jobs",
+            "2",
+            "--out",
+            out.to_str().unwrap(),
+        ]))
+        .unwrap();
+        cmd_sweep(&a).unwrap();
+        let report = std::fs::read_to_string(out.join("hnd.json")).unwrap();
+        let doc = crate::metrics::json::Json::parse(&report).unwrap();
+        let jobs = doc.get("jobs").unwrap().as_arr().unwrap();
+        assert_eq!(jobs.len(), 5, "bare handler token fans out to all five collectives");
+        let names: Vec<&str> =
+            jobs.iter().map(|j| j.get("series").unwrap().as_str().unwrap()).collect();
+        assert!(names.contains(&"handler:bcast"), "{names:?}");
+        assert!(jobs.iter().all(|j| j.get("handler_instrs").unwrap().as_u64().unwrap() > 0));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn values_conformance_handler_equals_fixed_function() {
+        let dir = std::env::temp_dir().join(format!("nfscan_cli_val_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let emit = |series: &str, file: &str| {
+            let out = dir.join(file);
+            let a = Args::parse(&argv(&[
+                "values",
+                "--series",
+                series,
+                "--p",
+                "4",
+                "--msg_bytes",
+                "64",
+                "--out",
+                out.to_str().unwrap(),
+            ]))
+            .unwrap();
+            cmd_values(&a).unwrap();
+            std::fs::read_to_string(out).unwrap()
+        };
+        let vm = emit("handler:scan", "h.json");
+        let ff = emit("NF_rd", "o.json");
+        assert_eq!(vm, ff, "handler scan bytes must equal the fixed-function path");
+        assert!(vm.contains("results_hex"));
         std::fs::remove_dir_all(&dir).ok();
     }
 

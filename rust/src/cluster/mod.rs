@@ -139,8 +139,10 @@ impl Cluster {
 
     /// Deterministic per-(rank, epoch) contribution, kept well-conditioned
     /// for the configured op (so verification compares exact/stable
-    /// values).  MPI_Barrier carries no data.
-    fn gen_payload(cfg: &ExpConfig, rank: Rank, epoch: u32) -> Payload {
+    /// values).  MPI_Barrier carries no data.  Public because the
+    /// handler-conformance CLI (`nfscan values`) feeds the exact same
+    /// data through different offload paths and byte-compares results.
+    pub fn gen_payload(cfg: &ExpConfig, rank: Rank, epoch: u32) -> Payload {
         let mut rng =
             SplitMix64::new(cfg.seed ^ ((rank as u64) << 40) ^ ((epoch as u64) << 8) ^ 0x9E37);
         let n = if cfg.coll == crate::packet::CollType::Barrier { 0 } else { cfg.msg_elems() };
@@ -382,6 +384,20 @@ impl Cluster {
             .unwrap_or_else(|| panic!("no contributions for epoch {epoch}"));
         let (_comm, base, gsize) = self.cfg.comm_of(rank);
         use crate::packet::CollType as Ct;
+        if self.cfg.coll == Ct::Bcast {
+            // every rank must receive the communicator root's contribution
+            let want = contribs[base]
+                .clone()
+                .expect("bcast completion implies the root contributed");
+            assert_payload_matches(result, &want, rank, epoch, &self.cfg.series_name());
+            let count = self.verified_counts.entry(epoch).or_insert(0);
+            *count += 1;
+            if *count == self.cfg.p {
+                self.contributions.remove(&epoch);
+                self.verified_counts.remove(&epoch);
+            }
+            return;
+        }
         if matches!(self.cfg.coll, Ct::Allreduce | Ct::Barrier) {
             // every rank of the communicator receives the full reduction;
             // completion implies all its ranks contributed
@@ -560,12 +576,18 @@ impl Cluster {
         let (comm, base, gsize) = cfg.comm_of(rank);
         let comm_key = CollPacket::make_comm_id(comm, epoch);
         let (algo, coll, op) = (cfg.algo, cfg.coll, cfg.op);
+        let handler = cfg.handler;
         let local = rank - base;
         let nic = &mut self.nics[rank];
-        let engine = nic
-            .engines
-            .entry(comm_key)
-            .or_insert_with(|| make_engine(algo, local, gsize, coll, opts));
+        let engine = nic.engines.entry(comm_key).or_insert_with(|| {
+            if handler {
+                // sPIN-style path: one handler-VM flow per invocation
+                // instead of a fixed-function state machine
+                crate::nic::handler_engine(coll)
+            } else {
+                make_engine(algo, local, gsize, coll, opts)
+            }
+        });
         let mut ctx = EngineCtx {
             rank: local,
             p: gsize,
@@ -574,6 +596,8 @@ impl Cluster {
             compute: &*self.compute,
             cost: &self.cfg.cost,
             cycles: 0,
+            instrs: 0,
+            stalls: 0,
         };
         // the engine sees communicator-local requests
         let req = req.map(|mut r| {
@@ -593,6 +617,8 @@ impl Cluster {
         let cycles = self.cfg.cost.nic_pipeline_cycles
             + ctx.cycles
             + generations * self.cfg.cost.nic_pkt_gen_cycles;
+        self.metrics.handler_instrs += ctx.instrs;
+        self.metrics.handler_stalls += ctx.stalls;
         let ready = now + cycles * 8;
         self.nics[rank].check_engine_pressure();
         self.process_nic_actions(ready, rank, epoch, actions);
@@ -1000,6 +1026,83 @@ mod tests {
         cfg.coll = CollType::Scan;
         let m = run_cfg(cfg);
         assert_eq!(m.multicasts, 0, "scan down phase cannot multicast (unique prefixes)");
+    }
+
+    #[test]
+    fn handler_vm_all_collectives_verify() {
+        for coll in CollType::HANDLER_SET {
+            let mut cfg = base(AlgoType::RecursiveDoubling, true);
+            cfg.handler = true;
+            cfg.coll = coll;
+            let m = run_cfg(cfg);
+            assert_eq!(m.host_overall().count(), 8 * 20, "{coll:?}");
+            assert_eq!(m.nic_overall().count(), 8 * 20, "{coll:?} measures on-NIC time");
+            assert!(m.handler_instrs > 0, "{coll:?} retired VM instructions");
+        }
+    }
+
+    #[test]
+    fn handler_values_equal_fixed_function_values() {
+        // one collective end-to-end over the real network on both offload
+        // paths: the result bytes must match exactly (latencies may not)
+        for coll in [CollType::Scan, CollType::Exscan, CollType::Allreduce] {
+            let run_path = |handler: bool| -> Vec<Payload> {
+                let mut cfg = base(AlgoType::RecursiveDoubling, true);
+                cfg.coll = coll;
+                cfg.handler = handler;
+                cfg.verify = true;
+                let contribs: Vec<Payload> =
+                    (0..cfg.p).map(|r| Cluster::gen_payload(&cfg, r, 0)).collect();
+                let compute = make_compute(EngineKind::Native, "artifacts");
+                let (results, _) = Cluster::scan_once(cfg, compute, contribs).unwrap();
+                results
+            };
+            let vm = run_path(true);
+            let ff = run_path(false);
+            for r in 0..8 {
+                assert_eq!(vm[r].bytes(), ff[r].bytes(), "{coll:?} rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn handler_stalls_counted_for_late_ranks() {
+        let mut cfg = base(AlgoType::RecursiveDoubling, true);
+        cfg.handler = true;
+        cfg.p = 4;
+        cfg.late_rank = Some(1);
+        cfg.late_delay_ns = 200_000;
+        cfg.cost.start_jitter_ns = 0;
+        let m = run_cfg(cfg);
+        assert!(m.handler_stalls > 0, "buffered packets park the handler");
+    }
+
+    #[test]
+    fn handler_instruction_cost_is_charged() {
+        let mk = |instr_cycles: u64| {
+            let mut cfg = base(AlgoType::RecursiveDoubling, true);
+            cfg.handler = true;
+            cfg.cost.handler_instr_cycles = instr_cycles;
+            run_cfg(cfg).host_overall().avg_ns()
+        };
+        let fast = mk(1);
+        let slow = mk(100);
+        assert!(slow > fast, "per-instruction cycles must cost latency: {slow} vs {fast}");
+    }
+
+    #[test]
+    fn handler_on_fattree_and_concurrent_communicators() {
+        let mut cfg = base(AlgoType::RecursiveDoubling, true);
+        cfg.handler = true;
+        cfg.topology = "fattree".into();
+        let m = run_cfg(cfg);
+        assert!(m.switch_frames_forwarded > 0);
+
+        let mut cfg = base(AlgoType::RecursiveDoubling, true);
+        cfg.handler = true;
+        cfg.comms = 2;
+        cfg.coll = CollType::Exscan;
+        run_cfg(cfg);
     }
 
     #[test]

@@ -54,6 +54,16 @@ pub struct CostModel {
     /// (SSIII-C) — which is exactly the saving this constant surfaces.
     pub nic_pkt_gen_cycles: u64,
 
+    // ---- handler VM (sPIN-style programmable per-packet programs) ----
+    /// Cycles charged per executed VM instruction (the handler core runs
+    /// in the same 125 MHz domain as the fixed-function pipeline).
+    pub handler_instr_cycles: u64,
+    /// Cycles per 8 payload bytes moved by the VM (scratchpad stores,
+    /// frame emission, host delivery).  Combine work is charged through
+    /// `nic_combine_cycles` — the VM's ALU IS the fixed-function
+    /// datapath, so compute costs stay identical across both paths.
+    pub handler_copy_cycles_per_8b: u64,
+
     // ---- inter-switch fabric (hierarchical topologies) ----
     /// Store-and-forward latency of one switch hop (lookup + buffer),
     /// ns.  Wire serialization and trunk contention are charged
@@ -84,6 +94,8 @@ impl Default for CostModel {
             nic_combine_cycles_per_8b: 1,
             nic_fwd_cycles: 16,
             nic_pkt_gen_cycles: 12,
+            handler_instr_cycles: 1,
+            handler_copy_cycles_per_8b: 1,
             switch_fwd_ns: 1_000,
             host_call_gap_ns: 2_000,
             start_jitter_ns: 5_000,
@@ -129,6 +141,12 @@ impl CostModel {
         (bytes as u64).div_ceil(8) * self.nic_combine_cycles_per_8b
     }
 
+    /// Handler-VM cycles to move `bytes` of payload (store / emit /
+    /// deliver through the 64-bit scratchpad port).
+    pub fn handler_copy_cycles(&self, bytes: usize) -> u64 {
+        (bytes as u64).div_ceil(8) * self.handler_copy_cycles_per_8b
+    }
+
     /// Apply one `key = value` override from the `[cost]` TOML section.
     pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
         let as_u64 =
@@ -150,6 +168,8 @@ impl CostModel {
             "nic_combine_cycles_per_8b" => self.nic_combine_cycles_per_8b = as_u64()?,
             "nic_fwd_cycles" => self.nic_fwd_cycles = as_u64()?,
             "nic_pkt_gen_cycles" => self.nic_pkt_gen_cycles = as_u64()?,
+            "handler_instr_cycles" => self.handler_instr_cycles = as_u64()?,
+            "handler_copy_cycles_per_8b" => self.handler_copy_cycles_per_8b = as_u64()?,
             "switch_fwd_ns" => self.switch_fwd_ns = as_u64()?,
             "host_call_gap_ns" => self.host_call_gap_ns = as_u64()?,
             "start_jitter_ns" => self.start_jitter_ns = as_u64()?,

@@ -40,6 +40,10 @@ pub struct ExpConfig {
     pub algo: AlgoType,
     /// true = NF_ offloaded path, false = software MPI baseline.
     pub offloaded: bool,
+    /// Offloaded collectives run as handler-VM programs (`nic::vm`)
+    /// instead of the fixed-function `fpga::` state machines.  Implies
+    /// `offloaded`; selected by the `handler[:coll]` series.
+    pub handler: bool,
     /// Topology spec: `chain`/`ring`/`hypercube` (direct NetFPGA-to-
     /// NetFPGA wirings), `star[:group]`/`fattree[:k]` (hierarchical
     /// multi-switch fabrics that scale past one 4-port card per host),
@@ -83,6 +87,7 @@ impl Default for ExpConfig {
             p: 8,
             algo: AlgoType::RecursiveDoubling,
             offloaded: true,
+            handler: false,
             topology: "auto".into(),
             msg_bytes: 4,
             iters: 1000,
@@ -166,6 +171,7 @@ impl ExpConfig {
             "offloaded" => {
                 self.offloaded = v.parse().map_err(|e| format!("run.offloaded: {e}"))?
             }
+            "handler" => self.handler = v.parse().map_err(|e| format!("run.handler: {e}"))?,
             "topology" => self.topology = v.to_string(),
             "msg_bytes" => {
                 self.msg_bytes = v.parse().map_err(|e| format!("run.msg_bytes: {e}"))?
@@ -173,13 +179,8 @@ impl ExpConfig {
             "iters" => self.iters = v.parse().map_err(|e| format!("run.iters: {e}"))?,
             "warmup" => self.warmup = v.parse().map_err(|e| format!("run.warmup: {e}"))?,
             "coll" => {
-                self.coll = match v {
-                    "scan" => CollType::Scan,
-                    "exscan" => CollType::Exscan,
-                    "allreduce" => CollType::Allreduce,
-                    "barrier" => CollType::Barrier,
-                    _ => return Err(format!("run.coll: unknown {v}")),
-                }
+                self.coll =
+                    CollType::from_name(v).ok_or_else(|| format!("run.coll: unknown {v}"))?
             }
             "op" => self.op = Op::from_name(v).ok_or_else(|| format!("run.op: unknown {v}"))?,
             "dtype" => {
@@ -249,9 +250,19 @@ impl ExpConfig {
         // is stricter than the group check above
         crate::net::Topology::build(self.topology_spec(), self.p)
             .map_err(|e| format!("topology: {e}"))?;
+        if self.handler {
+            if !self.offloaded {
+                return Err("handler VM is an offload path; set offloaded = true".into());
+            }
+            if !crate::util::is_pow2(group) {
+                return Err(format!(
+                    "handler programs need power-of-two ranks per communicator, got {group}"
+                ));
+            }
+        }
         match self.coll {
             CollType::Allreduce | CollType::Barrier => {
-                if self.algo == AlgoType::Sequential {
+                if self.algo == AlgoType::Sequential && !self.handler {
                     return Err(format!(
                         "{:?} has no sequential machine; use rd or binomial",
                         self.coll
@@ -261,14 +272,31 @@ impl ExpConfig {
                     return Err(format!("{:?} requires power-of-two ranks", self.coll));
                 }
             }
+            CollType::Bcast => {
+                if self.offloaded && !self.handler {
+                    return Err(
+                        "MPI_Bcast has no fixed-function machine; offload it via the \
+                         handler VM (series handler:bcast / --handler true) or run the \
+                         software path"
+                            .into(),
+                    );
+                }
+                if !crate::util::is_pow2(group) {
+                    return Err("bcast requires power-of-two ranks".into());
+                }
+            }
             CollType::Reduce => return Err("MPI_Reduce not implemented".into()),
             _ => {}
         }
         Ok(())
     }
 
-    /// Short tag for tables: "NF_rd" / "sw_seq" style (paper's naming).
+    /// Short tag for tables: "NF_rd" / "sw_seq" style (paper's naming);
+    /// the handler VM path is named by its collective ("handler:exscan").
     pub fn series_name(&self) -> String {
+        if self.handler {
+            return format!("handler:{}", self.coll.name());
+        }
         let prefix = if self.offloaded { "NF" } else { "sw" };
         let algo = match self.algo {
             AlgoType::Sequential => "seq",
@@ -352,6 +380,32 @@ mod tests {
         assert!(err.contains("even"), "{err}");
         cfg.topology = "warp".into();
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn handler_validation() {
+        let mut cfg = ExpConfig::default();
+        cfg.handler = true;
+        cfg.validate().unwrap();
+        assert_eq!(cfg.series_name(), "handler:scan");
+        cfg.coll = CollType::Bcast;
+        cfg.validate().unwrap();
+        assert_eq!(cfg.series_name(), "handler:bcast");
+        cfg.handler = false;
+        assert!(cfg.validate().is_err(), "bcast offload needs the handler VM");
+        cfg.offloaded = false;
+        cfg.validate().unwrap();
+
+        let mut cfg = ExpConfig::default();
+        cfg.handler = true;
+        cfg.offloaded = false;
+        assert!(cfg.validate().is_err(), "handler implies offload");
+
+        let mut cfg = ExpConfig::default();
+        cfg.handler = true;
+        cfg.algo = AlgoType::Sequential;
+        cfg.p = 6;
+        assert!(cfg.validate().is_err(), "handler programs need power-of-two groups");
     }
 
     #[test]

@@ -43,6 +43,12 @@ pub struct EngineCtx<'a> {
     pub cost: &'a CostModel,
     /// Cycles consumed by this activation's datapath work.
     pub cycles: u64,
+    /// Handler-VM instructions retired by this activation (0 on the
+    /// fixed-function path) — pooled into `metrics.handler_instrs`.
+    pub instrs: u64,
+    /// Handler-VM activations parked waiting for input (`drop`
+    /// terminator) — pooled into `metrics.handler_stalls`.
+    pub stalls: u64,
 }
 
 impl EngineCtx<'_> {
@@ -128,6 +134,10 @@ pub fn make_engine(
                 panic!("no sequential hardware machine for {coll:?} (use rd/binomial)")
             }
         },
+        CollType::Bcast => panic!(
+            "MPI_Bcast has no fixed-function machine — offload it via the handler VM \
+             (nic::programs::handler_engine)"
+        ),
         CollType::Reduce => panic!("MPI_Reduce offload not implemented (coll_type reserved)"),
     }
 }
@@ -159,11 +169,21 @@ pub(crate) mod testutil {
     impl Harness {
         pub fn new(algo: AlgoType, p: usize, coll: CollType, multicast_opt: bool) -> Harness {
             let opts = EngineOpts { multicast_opt, ..Default::default() };
+            Harness::with_engines(p, coll, |r| make_engine(algo, r, p, coll, opts))
+        }
+
+        /// Build with custom engine instances (the handler-VM tests plug
+        /// `nic::programs::handler_engine` in here).
+        pub fn with_engines(
+            p: usize,
+            coll: CollType,
+            mk: impl Fn(Rank) -> Box<dyn CollEngine>,
+        ) -> Harness {
             Harness {
                 p,
                 coll,
                 op: Op::Sum,
-                engines: (0..p).map(|r| make_engine(algo, r, p, coll, opts)).collect(),
+                engines: (0..p).map(mk).collect(),
                 results: vec![None; p],
                 queue: VecDeque::new(),
                 compute: NativeEngine::new(),
@@ -243,6 +263,8 @@ pub(crate) mod testutil {
                 compute: &self.compute,
                 cost: &self.cost,
                 cycles: 0,
+                instrs: 0,
+                stalls: 0,
             };
             let actions = self.engines[rank].on_host_request(&mut ctx, &req);
             self.enqueue(rank, actions);
@@ -259,6 +281,8 @@ pub(crate) mod testutil {
                     compute: &self.compute,
                     cost: &self.cost,
                     cycles: 0,
+                    instrs: 0,
+                    stalls: 0,
                 };
                 let actions = self.engines[dst].on_packet(&mut ctx, &pkt);
                 self.enqueue(dst, actions);
@@ -297,6 +321,8 @@ pub(crate) mod testutil {
                         )
                         .unwrap()
                     }
+                    // every rank receives the root's contribution
+                    CollType::Bcast => payloads[0].clone(),
                     CollType::Reduce => unreachable!(),
                 };
                 let got = self.results[r].as_ref().unwrap_or_else(|| panic!("rank {r} no result"));

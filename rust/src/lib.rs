@@ -5,7 +5,8 @@
 //! Architecture (three layers, python never on the simulation path):
 //!
 //! - **L3 (this crate)** — the paper's system: a deterministic discrete-
-//!   event cluster of hosts + NetFPGA NICs ([`sim`], [`net`], [`fpga`]),
+//!   event cluster of hosts + NetFPGA NICs ([`sim`], [`net`], [`fpga`],
+//!   plus the sPIN-style programmable handler VM in [`nic`]),
 //!   the software-MPI baseline ([`mpi`]), the offload coordinator
 //!   ([`offload`]) and the OSU-style benchmark harness ([`bench`]).
 //! - **L2/L1 (python/compile)** — JAX graphs calling Pallas kernels for
@@ -27,6 +28,7 @@ pub mod fpga;
 pub mod metrics;
 pub mod mpi;
 pub mod net;
+pub mod nic;
 pub mod offload;
 pub mod packet;
 pub mod prop;

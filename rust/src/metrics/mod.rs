@@ -121,6 +121,11 @@ pub struct RunMetrics {
     pub switch_frames_forwarded: u64,
     /// Multicast packet generations taken (SSIII-C optimization metric).
     pub multicasts: u64,
+    /// Handler-VM instructions retired across all cards (0 on the
+    /// fixed-function and software paths).
+    pub handler_instrs: u64,
+    /// Handler-VM activations that parked waiting for input (`drop`).
+    pub handler_stalls: u64,
     /// Total simulated duration.
     pub sim_ns: u64,
 }
@@ -137,6 +142,8 @@ impl RunMetrics {
             switch_bytes_tx: 0,
             switch_frames_forwarded: 0,
             multicasts: 0,
+            handler_instrs: 0,
+            handler_stalls: 0,
             sim_ns: 0,
         }
     }
@@ -176,6 +183,8 @@ impl RunMetrics {
             ("switch_bytes_tx".into(), Json::int(self.switch_bytes_tx)),
             ("switch_frames_forwarded".into(), Json::int(self.switch_frames_forwarded)),
             ("multicasts".into(), Json::int(self.multicasts)),
+            ("handler_instrs".into(), Json::int(self.handler_instrs)),
+            ("handler_stalls".into(), Json::int(self.handler_stalls)),
             ("sim_ns".into(), Json::int(self.sim_ns)),
             ("host_latency".into(), stats_arr(&self.host_latency)),
             ("nic_elapsed".into(), stats_arr(&self.nic_elapsed)),

@@ -1,0 +1,128 @@
+//! Software MPI_Bcast — MPICH's binomial tree rooted at rank 0, run on
+//! the host.  The baseline the handler-VM bcast program is
+//! cross-validated against (`prop::cross`): values must match the root's
+//! contribution bit-for-bit on every rank; only latencies may differ.
+//!
+//! Receive mask: walk `mask = 1, 2, 4, ...` until `rank & mask != 0` —
+//! the parent is `rank - mask`.  Rank 0 exits the walk at `mask == p`
+//! and only forwards.  Forwarding covers every mask below the receive
+//! mask, so the root reaches p-1 in log2(p) message generations.
+
+use crate::data::Payload;
+use crate::net::{Rank, SwMsg, SwMsgKind};
+use crate::packet::AlgoType;
+use crate::util::is_pow2;
+
+use super::{SwAction, SwCtx, SwScanAlgo};
+
+pub struct SwBcast {
+    rank: Rank,
+    p: usize,
+    /// Mask at which this rank receives; `p` for the root (never
+    /// receives).  Forwarding walks the masks strictly below it.
+    recv_mask: usize,
+    called: bool,
+    data: Option<Payload>,
+    forwarded: bool,
+    completed: bool,
+}
+
+impl SwBcast {
+    pub fn new(rank: Rank, p: usize) -> SwBcast {
+        assert!(is_pow2(p), "binomial bcast needs power-of-two ranks");
+        let mut mask = 1;
+        while mask < p && rank & mask == 0 {
+            mask <<= 1;
+        }
+        SwBcast {
+            rank,
+            p,
+            recv_mask: mask,
+            called: false,
+            data: None,
+            forwarded: false,
+            completed: false,
+        }
+    }
+
+    /// Forward + complete once both the local call and the root's data
+    /// are in.  The library acts only on behalf of a process that has
+    /// entered the collective — pre-call data sits in the unexpected-
+    /// message buffer like every other software machine's.
+    fn try_progress(&mut self) -> Vec<SwAction> {
+        let mut out = Vec::new();
+        if !self.called {
+            return out;
+        }
+        let Some(data) = self.data.clone() else { return out };
+        if !self.forwarded {
+            self.forwarded = true;
+            let mut mask = self.recv_mask >> 1;
+            while mask > 0 {
+                let dst = self.rank + mask;
+                if dst < self.p {
+                    out.push(SwAction::Send {
+                        dst,
+                        kind: SwMsgKind::Down,
+                        step: 0,
+                        payload: data.clone(),
+                    });
+                }
+                mask >>= 1;
+            }
+        }
+        if !self.completed {
+            self.completed = true;
+            out.push(SwAction::Complete { result: data });
+        }
+        out
+    }
+}
+
+impl SwScanAlgo for SwBcast {
+    fn on_call(&mut self, _ctx: &mut SwCtx, own: &Payload) -> Vec<SwAction> {
+        assert!(!self.called, "duplicate call");
+        self.called = true;
+        if self.rank == 0 {
+            self.data = Some(own.clone());
+        }
+        self.try_progress()
+    }
+
+    fn on_msg(&mut self, _ctx: &mut SwCtx, msg: &SwMsg) -> Vec<SwAction> {
+        assert_eq!(msg.kind, SwMsgKind::Down, "bcast only carries Down data");
+        assert_ne!(self.rank, 0, "the root never receives");
+        assert_eq!(msg.src, self.rank - self.recv_mask, "bcast data must come from the parent");
+        assert!(self.data.is_none(), "duplicate bcast data");
+        self.data = Some(msg.payload.clone());
+        self.try_progress()
+    }
+
+    fn done(&self) -> bool {
+        self.completed && self.forwarded
+    }
+
+    fn algo(&self) -> AlgoType {
+        AlgoType::BinomialTree
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recv_masks() {
+        // p = 8: rank 0 never receives (mask = p); others at lowest set bit
+        assert_eq!(SwBcast::new(0, 8).recv_mask, 8);
+        assert_eq!(SwBcast::new(1, 8).recv_mask, 1);
+        assert_eq!(SwBcast::new(4, 8).recv_mask, 4);
+        assert_eq!(SwBcast::new(6, 8).recv_mask, 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_power_of_two_rejected() {
+        SwBcast::new(0, 6);
+    }
+}

@@ -8,6 +8,7 @@
 //! is exactly what the paper's SSIII-B is about).
 
 pub mod allreduce;
+pub mod bcast;
 pub mod binomial;
 pub mod rd;
 pub mod seq;
@@ -72,6 +73,7 @@ pub fn make_sw(algo: AlgoType, rank: Rank, p: usize, coll: CollType) -> Box<dyn 
             // of the companion works [6][7])
             Box::new(allreduce::SwRdAllreduce::new(rank, p, coll))
         }
+        CollType::Bcast => Box::new(bcast::SwBcast::new(rank, p)),
         CollType::Reduce => panic!("software MPI_Reduce not implemented"),
     }
 }
@@ -193,6 +195,10 @@ pub(crate) mod testutil {
                         )
                         .unwrap()
                     }
+                    CollType::Bcast => {
+                        // every rank receives the root's contribution
+                        payloads[0].clone()
+                    }
                     CollType::Reduce => unreachable!(),
                 };
                 let got =
@@ -241,6 +247,21 @@ mod tests {
     fn sequential_odd_p() {
         let mut h = SwHarness::new(AlgoType::Sequential, 7, CollType::Scan);
         h.run_and_check(&contributions(7), &[6, 5, 4, 3, 2, 1, 0]);
+    }
+
+    #[test]
+    fn bcast_sw_all_orders() {
+        for p in [2usize, 4, 8, 16] {
+            let orders: Vec<Vec<usize>> = vec![
+                (0..p).collect(),
+                (0..p).rev().collect(),
+                (0..p).step_by(2).chain((1..p).step_by(2)).collect(),
+            ];
+            for order in orders {
+                let mut h = SwHarness::new(AlgoType::BinomialTree, p, CollType::Bcast);
+                h.run_and_check(&contributions(p), &order);
+            }
+        }
     }
 
     #[test]

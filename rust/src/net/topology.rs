@@ -327,6 +327,19 @@ impl Topology {
     pub fn fits_card(&self) -> bool {
         (0..self.p).all(|r| self.ports_of(r) <= PORTS_PER_CARD)
     }
+
+    /// Highest port count over the switches that directly attach hosts
+    /// (the leaf tier; 0 when switchless).  Star leaves are NetFPGA-class
+    /// boxes in the paper's world, so the CLI warns when this exceeds
+    /// [`PORTS_PER_CARD`] on a `star:g` — the core/aggregation tiers are
+    /// real switches with unconstrained radix and are excluded.
+    pub fn max_leaf_radix(&self) -> usize {
+        (self.p..self.nodes())
+            .filter(|&sw| self.nbr[sw].iter().any(|&(_, peer)| peer < self.p))
+            .map(|sw| self.ports_of(sw))
+            .max()
+            .unwrap_or(0)
+    }
 }
 
 #[cfg(test)]
@@ -405,6 +418,20 @@ mod tests {
         // leaf 0 is full (4 hosts + trunk), leaf 2 holds hosts 8..10
         assert_eq!(t.ports_of(10), 5);
         assert_eq!(t.ports_of(13), 3, "core has one port per leaf");
+    }
+
+    #[test]
+    fn max_leaf_radix_reports_host_facing_fan_in_only() {
+        assert_eq!(Topology::chain(4).max_leaf_radix(), 0, "switchless");
+        // star:4 leaves carry 4 hosts + the trunk = radix 5
+        assert_eq!(Topology::star(10, 4).unwrap().max_leaf_radix(), 5);
+        // star:3 leaves fit a 4-port card (3 hosts + trunk)
+        assert_eq!(Topology::star(9, 3).unwrap().max_leaf_radix(), 4);
+        // the core switch (radix = leaf count) is NOT a card: a big
+        // star:3 stays clean even with 22 leaves on the core
+        assert_eq!(Topology::star(64, 3).unwrap().max_leaf_radix(), 4);
+        // degenerate single-switch star: the one switch attaches hosts
+        assert_eq!(Topology::star(6, 8).unwrap().max_leaf_radix(), 6);
     }
 
     #[test]

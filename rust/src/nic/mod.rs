@@ -1,0 +1,28 @@
+//! The programmable NIC: collectives as per-packet handler programs.
+//!
+//! The paper builds ONE collective (MPI_Scan) as a fixed-function
+//! NetFPGA datapath; the durable version of the idea — sPIN (Hoefler et
+//! al. 2017) and its open-hardware descendant FPsPIN (Schneider et al.
+//! 2024) — makes the NIC *programmable*: every collective is a small
+//! handler program run against each arriving message, with bounded
+//! per-flow state and run-to-completion semantics.
+//!
+//! - [`vm`] — the deterministic 16-register handler VM: scratchpad
+//!   load/store, scalar ALU, the shared dtype x op combine datapath,
+//!   `emit`/`deliver`/`drop` intrinsics, per-instruction + per-byte
+//!   costs charged through `config::cost`;
+//! - [`programs`] — the handler programs (scan, exscan, allreduce,
+//!   barrier, bcast) and the [`programs::HandlerEngine`] adapter that
+//!   slots a flow into the NIC's existing engine table.
+//!
+//! The cluster dispatches to this subsystem instead of the `fpga::`
+//! state machines when `ExpConfig::handler` is set (the `handler[:coll]`
+//! series axis).  Results are bit-identical to the fixed-function path —
+//! the VM's vector ALU *is* `EngineCtx::combine` — only latencies (and
+//! the new `handler_instrs` / `handler_stalls` counters) differ.
+
+pub mod programs;
+pub mod vm;
+
+pub use programs::{handler_engine, program_for, HandlerEngine};
+pub use vm::{Activation, Asm, Flow, Instr, Program};

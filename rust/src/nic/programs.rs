@@ -1,0 +1,600 @@
+//! Handler programs: the five offloaded collectives, written against the
+//! [`vm`](super::vm) instruction set.
+//!
+//! Three programs cover the five collectives:
+//!
+//! - **scan** (MPI_Scan + MPI_Exscan, `Env::Inclusive` selects) — the
+//!   recursive-doubling exchange of the paper's SSIII-C, minus the
+//!   multicast optimization (a handler emits plain unicasts; the
+//!   fixed-function path keeps that trick).  Fold order matches
+//!   `fpga::rd::RdEngine` exactly, so results are bit-identical.
+//! - **allreduce** (MPI_Allreduce + MPI_Barrier — a barrier is an
+//!   allreduce with a zero-element payload) — the recursive-doubling
+//!   butterfly of `fpga::allreduce::RdAllreduce`, same fold order.
+//! - **bcast** (MPI_Bcast, root = local rank 0) — a binomial *gather of
+//!   empty ready-tokens* up to the root, then the root's payload
+//!   multiplied down the same tree.  The token phase is what bounds
+//!   epoch skew: a card delivers only after its whole subtree has
+//!   entered the collective, so the NIC's 8-entry engine table can
+//!   never be flooded by a fast root racing ahead.
+//!
+//! Every program runs in communicator-local rank space and reads rank /
+//! p / inclusiveness from the VM environment — one program image serves
+//! every rank of every communicator (the sPIN model: programs are code,
+//! flows are state).
+//!
+//! Scratchpad layout (by convention; slots 16+ are the packet inbox,
+//! indexed by algorithm step):
+//!
+//! | slot | scan            | allreduce    | bcast        |
+//! |------|-----------------|--------------|--------------|
+//! | 0    | called          | called       | called       |
+//! | 1    | step            | step         | t (children) |
+//! | 2    | partial         | value        | up tokens    |
+//! | 3    | inclusive acc   | —            | own payload  |
+//! | 4    | exclusive acc   | —            | total        |
+//! | 5    | sent-through    | sent-through | up sent      |
+//! | 6    | delivered       | delivered    | delivered    |
+
+use std::sync::OnceLock;
+
+use crate::fpga::engine::{CollEngine, EngineCtx, NicAction};
+use crate::packet::{AlgoType, CollPacket, CollType, MsgType};
+use crate::sim::OffloadRequest;
+
+use super::vm::{self, Activation, AluOp, Asm, EnvVal, Flow, Program, Reg};
+
+// Scratchpad slot conventions (see module table).
+const S_CALLED: i64 = 0;
+const S_STEP: i64 = 1;
+const S_PARTIAL: i64 = 2; // scan partial / allreduce value / bcast token count
+const S_INC: i64 = 3; // scan inclusive acc / bcast own payload
+const S_EXC: i64 = 4; // scan exclusive acc / bcast total
+const S_SENT: i64 = 5;
+const S_DONE: i64 = 6;
+/// Packet inbox base: slot 16 + step.
+const INBOX: i64 = 16;
+
+// bcast aliases for readability
+const S_T: i64 = S_STEP;
+const S_UPSEEN: i64 = S_PARTIAL;
+const S_OWN: i64 = S_INC;
+const S_TOTAL: i64 = S_EXC;
+const S_UPSENT: i64 = S_SENT;
+
+/// Load `scratch[slot]` into `dst` (r15 is the reserved slot-pointer
+/// register of these programs).
+fn lds(a: &mut Asm, dst: Reg, slot: i64) {
+    a.imm(15, slot);
+    a.ld(dst, 15);
+}
+
+/// Store `src` into `scratch[slot]`.
+fn sts(a: &mut Asm, slot: i64, src: Reg) {
+    a.imm(15, slot);
+    a.st(15, src);
+}
+
+/// The recursive-doubling scan/exscan program (see module docs).
+fn build_scan() -> Program {
+    use AluOp::*;
+    use EnvVal::*;
+    let mut a = Asm::new();
+    let on_request = a.label();
+    let on_packet = a.label();
+    let advance = a.label();
+    let after_send = a.label();
+    let fold_low = a.label();
+    let exc_has = a.label();
+    let exc_done = a.label();
+    let fold_done = a.label();
+    let finish = a.label();
+    let not_incl = a.label();
+    let exc_ident = a.label();
+    let mark = a.label();
+    let already = a.label();
+    let park = a.label();
+
+    // -- packet: buffer the partner's step-k block; advance if called.
+    a.bind(on_packet);
+    a.env(0, PktStep);
+    a.imm(1, INBOX);
+    a.alu(Add, 13, 0, 1);
+    a.ldpkt(8);
+    a.st(13, 8);
+    lds(&mut a, 4, S_CALLED);
+    a.is_set(4, 4);
+    a.jz(4, park);
+    a.jmp(advance);
+
+    // -- request: partial = inc = own; step = sent = 0.
+    a.bind(on_request);
+    a.ldpkt(8);
+    sts(&mut a, S_PARTIAL, 8);
+    sts(&mut a, S_INC, 8);
+    a.imm(0, 1);
+    sts(&mut a, S_CALLED, 0);
+    a.imm(0, 0);
+    sts(&mut a, S_STEP, 0);
+    sts(&mut a, S_SENT, 0);
+    // falls through into the advance loop
+
+    // -- advance: per step k, send our partial once, then fold the
+    //    partner's block when it is in; stop at the first missing input.
+    a.bind(advance);
+    lds(&mut a, 0, S_STEP); // r0 = k
+    a.imm(1, 1);
+    a.alu(Shl, 2, 1, 0); // r2 = 1 << k
+    a.env(3, P);
+    a.alu(Lt, 4, 2, 3);
+    a.jz(4, finish); // all log2(p) steps folded
+    lds(&mut a, 5, S_SENT);
+    a.alu(Lt, 4, 0, 5); // k < sent -> already sent this step
+    a.jnz(4, after_send);
+    a.env(6, Rank);
+    a.alu(Xor, 7, 6, 2); // partner = rank ^ 2^k
+    lds(&mut a, 8, S_PARTIAL);
+    a.emit(7, MsgType::Data, 0, 8);
+    a.alu(Add, 10, 0, 1);
+    sts(&mut a, S_SENT, 10);
+    a.bind(after_send);
+    a.imm(10, INBOX);
+    a.alu(Add, 13, 0, 10);
+    a.ld(9, 13); // r9 = incoming block (maybe Empty)
+    a.is_set(4, 9);
+    a.jz(4, park); // wait for the partner
+    a.clr(13);
+    a.env(6, Rank);
+    a.alu(Xor, 7, 6, 2);
+    a.alu(Lt, 4, 7, 6); // partner below us?
+    a.jnz(4, fold_low);
+    // higher partner only extends the block partial from the right
+    lds(&mut a, 8, S_PARTIAL);
+    a.combine(8, 8, 9);
+    sts(&mut a, S_PARTIAL, 8);
+    a.jmp(fold_done);
+    a.bind(fold_low);
+    // lower partner extends prefix accumulators + partial from the left
+    lds(&mut a, 8, S_INC);
+    a.combine(8, 9, 8);
+    sts(&mut a, S_INC, 8);
+    lds(&mut a, 8, S_EXC);
+    a.is_set(4, 8);
+    a.jnz(4, exc_has);
+    sts(&mut a, S_EXC, 9);
+    a.jmp(exc_done);
+    a.bind(exc_has);
+    a.combine(8, 9, 8);
+    sts(&mut a, S_EXC, 8);
+    a.bind(exc_done);
+    lds(&mut a, 8, S_PARTIAL);
+    a.combine(8, 9, 8);
+    sts(&mut a, S_PARTIAL, 8);
+    a.bind(fold_done);
+    a.imm(1, 1);
+    a.alu(Add, 10, 0, 1);
+    sts(&mut a, S_STEP, 10);
+    a.jmp(advance);
+
+    // -- finish: deliver inclusive or exclusive accumulator, once.
+    a.bind(finish);
+    lds(&mut a, 4, S_DONE);
+    a.is_set(4, 4);
+    a.jnz(4, already);
+    a.env(4, Inclusive);
+    a.jz(4, not_incl);
+    lds(&mut a, 8, S_INC);
+    a.deliver(8);
+    a.jmp(mark);
+    a.bind(not_incl);
+    lds(&mut a, 8, S_EXC);
+    a.is_set(4, 8);
+    a.jz(4, exc_ident);
+    a.deliver(8);
+    a.jmp(mark);
+    a.bind(exc_ident);
+    // rank 0 exclusive: nothing below us, deliver the op identity
+    lds(&mut a, 8, S_INC);
+    a.ident_like(8, 8);
+    a.deliver(8);
+    a.bind(mark);
+    a.imm(0, 1);
+    sts(&mut a, S_DONE, 0);
+    a.bind(already);
+    a.halt();
+
+    a.bind(park);
+    a.park();
+
+    a.finish("handler:scan", on_request, on_packet)
+}
+
+/// The recursive-doubling butterfly (allreduce; barrier with empty
+/// payloads).
+fn build_allreduce() -> Program {
+    use AluOp::*;
+    use EnvVal::*;
+    let mut a = Asm::new();
+    let on_request = a.label();
+    let on_packet = a.label();
+    let advance = a.label();
+    let after_send = a.label();
+    let fold_low = a.label();
+    let fold_done = a.label();
+    let finish = a.label();
+    let already = a.label();
+    let park = a.label();
+
+    a.bind(on_packet);
+    a.env(0, PktStep);
+    a.imm(1, INBOX);
+    a.alu(Add, 13, 0, 1);
+    a.ldpkt(8);
+    a.st(13, 8);
+    lds(&mut a, 4, S_CALLED);
+    a.is_set(4, 4);
+    a.jz(4, park);
+    a.jmp(advance);
+
+    a.bind(on_request);
+    a.ldpkt(8);
+    sts(&mut a, S_PARTIAL, 8); // running value
+    a.imm(0, 1);
+    sts(&mut a, S_CALLED, 0);
+    a.imm(0, 0);
+    sts(&mut a, S_STEP, 0);
+    sts(&mut a, S_SENT, 0);
+    // falls through
+
+    a.bind(advance);
+    lds(&mut a, 0, S_STEP);
+    a.imm(1, 1);
+    a.alu(Shl, 2, 1, 0);
+    a.env(3, P);
+    a.alu(Lt, 4, 2, 3);
+    a.jz(4, finish);
+    lds(&mut a, 5, S_SENT);
+    a.alu(Lt, 4, 0, 5);
+    a.jnz(4, after_send);
+    a.env(6, Rank);
+    a.alu(Xor, 7, 6, 2);
+    lds(&mut a, 8, S_PARTIAL);
+    a.emit(7, MsgType::Data, 0, 8);
+    a.alu(Add, 10, 0, 1);
+    sts(&mut a, S_SENT, 10);
+    a.bind(after_send);
+    a.imm(10, INBOX);
+    a.alu(Add, 13, 0, 10);
+    a.ld(9, 13);
+    a.is_set(4, 9);
+    a.jz(4, park);
+    a.clr(13);
+    a.env(6, Rank);
+    a.alu(Xor, 7, 6, 2);
+    a.alu(Lt, 4, 7, 6);
+    lds(&mut a, 8, S_PARTIAL);
+    a.jnz(4, fold_low);
+    a.combine(8, 8, 9); // rank-ordered fold: we sit below the partner
+    a.jmp(fold_done);
+    a.bind(fold_low);
+    a.combine(8, 9, 8);
+    a.bind(fold_done);
+    sts(&mut a, S_PARTIAL, 8);
+    a.imm(1, 1);
+    a.alu(Add, 10, 0, 1);
+    sts(&mut a, S_STEP, 10);
+    a.jmp(advance);
+
+    a.bind(finish);
+    lds(&mut a, 4, S_DONE);
+    a.is_set(4, 4);
+    a.jnz(4, already);
+    lds(&mut a, 8, S_PARTIAL);
+    a.deliver(8);
+    a.imm(0, 1);
+    sts(&mut a, S_DONE, 0);
+    a.bind(already);
+    a.halt();
+
+    a.bind(park);
+    a.park();
+
+    a.finish("handler:allreduce", on_request, on_packet)
+}
+
+/// Binomial broadcast rooted at local rank 0: ready-tokens gather up the
+/// tree (bounding epoch skew), then the root's payload flows down it.
+fn build_bcast() -> Program {
+    use AluOp::*;
+    use EnvVal::*;
+    let mut a = Asm::new();
+    let on_request = a.label();
+    let on_packet = a.label();
+    let try_up = a.label();
+    let cnt_ok = a.label();
+    let t_ready = a.label();
+    let t_loop = a.label();
+    let t_store = a.label();
+    let seen_ok = a.label();
+    let root_down = a.label();
+    let handle_down = a.label();
+    let down_deliver = a.label();
+    let down_loop = a.label();
+    let after_down = a.label();
+    let nothing = a.label();
+    let fin = a.label();
+    let park = a.label();
+
+    // -- request: remember own payload (the root's is the broadcast).
+    a.bind(on_request);
+    a.ldpkt(8);
+    sts(&mut a, S_OWN, 8);
+    a.imm(0, 1);
+    sts(&mut a, S_CALLED, 0);
+    a.jmp(try_up);
+
+    // -- packet: an up ready-token (Data) or the root payload (Down).
+    a.bind(on_packet);
+    a.env(0, PktKind);
+    a.imm(1, MsgType::Down.wire_code() as i64);
+    a.alu(Eq, 2, 0, 1);
+    a.jnz(2, handle_down);
+    // up token: count it (tokens may precede the local call)
+    lds(&mut a, 4, S_UPSEEN);
+    a.is_set(5, 4);
+    a.jnz(5, cnt_ok);
+    a.imm(4, 0);
+    a.bind(cnt_ok);
+    a.imm(5, 1);
+    a.alu(Add, 4, 4, 5);
+    sts(&mut a, S_UPSEEN, 4);
+    a.jmp(try_up);
+
+    // -- try_up: once called and all children's tokens are in, send our
+    //    token to the parent (root instead turns the tree around).
+    a.bind(try_up);
+    lds(&mut a, 4, S_CALLED);
+    a.is_set(4, 4);
+    a.jz(4, park);
+    // ensure t = number of children = trailing zeros of rank
+    // (log2(p) for the root)
+    lds(&mut a, 4, S_T);
+    a.is_set(5, 4);
+    a.jnz(5, t_ready);
+    a.imm(0, 0); // t
+    a.env(6, Rank);
+    a.env(3, P);
+    a.imm(1, 1);
+    a.bind(t_loop);
+    a.alu(Shl, 2, 1, 0);
+    a.alu(Lt, 4, 2, 3);
+    a.jz(4, t_store); // 2^t >= p: the root owns the whole tree
+    a.alu(Shr, 5, 6, 0);
+    a.alu(And, 5, 5, 1);
+    a.jnz(5, t_store); // lowest set bit found
+    a.alu(Add, 0, 0, 1);
+    a.jmp(t_loop);
+    a.bind(t_store);
+    sts(&mut a, S_T, 0);
+    a.bind(t_ready);
+    lds(&mut a, 0, S_T); // r0 = t
+    lds(&mut a, 4, S_UPSEEN);
+    a.is_set(5, 4);
+    a.jnz(5, seen_ok);
+    a.imm(4, 0);
+    a.bind(seen_ok);
+    a.alu(Eq, 5, 4, 0); // all children ready?
+    a.jz(5, park);
+    lds(&mut a, 4, S_UPSENT);
+    a.is_set(5, 4);
+    a.jnz(5, nothing); // already acted
+    a.imm(4, 1);
+    sts(&mut a, S_UPSENT, 4);
+    a.env(6, Rank);
+    a.jz(6, root_down);
+    // non-root: empty token to parent = rank - 2^t, tagged step = t
+    a.imm(1, 1);
+    a.alu(Shl, 2, 1, 0);
+    a.alu(Sub, 7, 6, 2);
+    lds(&mut a, 8, S_OWN);
+    a.empty_like(8, 8);
+    a.emit(7, MsgType::Data, 0, 8);
+    a.halt();
+    a.bind(root_down);
+    lds(&mut a, 8, S_OWN);
+    sts(&mut a, S_TOTAL, 8);
+    a.jmp(down_deliver);
+
+    // -- down: store the root payload, forward it down, deliver.
+    a.bind(handle_down);
+    a.ldpkt(8);
+    sts(&mut a, S_TOTAL, 8);
+    // falls through: a down implies we sent our token, so t is set
+
+    a.bind(down_deliver);
+    lds(&mut a, 0, S_T);
+    lds(&mut a, 9, S_TOTAL);
+    a.env(6, Rank);
+    a.imm(1, 1);
+    a.alu(Sub, 0, 0, 1); // k = t-1 .. 0
+    a.bind(down_loop);
+    a.imm(2, 0);
+    a.alu(Lt, 4, 0, 2);
+    a.jnz(4, after_down);
+    a.alu(Shl, 3, 1, 0);
+    a.alu(Add, 7, 6, 3); // child = rank + 2^k
+    a.imm(5, 0);
+    a.emit(7, MsgType::Down, 5, 9);
+    a.alu(Sub, 0, 0, 1);
+    a.jmp(down_loop);
+    a.bind(after_down);
+    lds(&mut a, 4, S_DONE);
+    a.is_set(4, 4);
+    a.jnz(4, fin);
+    a.deliver(9);
+    a.imm(4, 1);
+    sts(&mut a, S_DONE, 4);
+    a.bind(fin);
+    a.halt();
+
+    a.bind(nothing);
+    a.halt();
+
+    a.bind(park);
+    a.park();
+
+    a.finish("handler:bcast", on_request, on_packet)
+}
+
+fn scan_program() -> &'static Program {
+    static P: OnceLock<Program> = OnceLock::new();
+    P.get_or_init(build_scan)
+}
+
+fn allreduce_program() -> &'static Program {
+    static P: OnceLock<Program> = OnceLock::new();
+    P.get_or_init(build_allreduce)
+}
+
+fn bcast_program() -> &'static Program {
+    static P: OnceLock<Program> = OnceLock::new();
+    P.get_or_init(build_bcast)
+}
+
+/// The program image a card loads for `coll` (shared, built once).
+pub fn program_for(coll: CollType) -> &'static Program {
+    match coll {
+        CollType::Scan | CollType::Exscan => scan_program(),
+        CollType::Allreduce | CollType::Barrier => allreduce_program(),
+        CollType::Bcast => bcast_program(),
+        CollType::Reduce => panic!("MPI_Reduce has no handler program"),
+    }
+}
+
+/// One handler-VM flow wrapped as a [`CollEngine`], so the NIC's engine
+/// table (creation on demand, retirement via `done`, the live-engine
+/// cap) treats programmable and fixed-function collectives uniformly.
+pub struct HandlerEngine {
+    prog: &'static Program,
+    flow: Flow,
+    algo: AlgoType,
+}
+
+/// Instantiate the handler engine for one collective invocation.
+pub fn handler_engine(coll: CollType) -> Box<dyn CollEngine> {
+    let algo = match coll {
+        CollType::Bcast => AlgoType::BinomialTree,
+        _ => AlgoType::RecursiveDoubling,
+    };
+    Box::new(HandlerEngine { prog: program_for(coll), flow: Flow::new(), algo })
+}
+
+impl CollEngine for HandlerEngine {
+    fn on_host_request(&mut self, ctx: &mut EngineCtx, req: &OffloadRequest) -> Vec<NicAction> {
+        vm::run(self.prog, &mut self.flow, ctx, Activation::Request(req))
+    }
+
+    fn on_packet(&mut self, ctx: &mut EngineCtx, pkt: &CollPacket) -> Vec<NicAction> {
+        vm::run(self.prog, &mut self.flow, ctx, Activation::Packet(pkt))
+    }
+
+    fn done(&self) -> bool {
+        self.flow.delivered
+    }
+
+    fn algo(&self) -> AlgoType {
+        self.algo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Payload;
+    use crate::fpga::engine::testutil::Harness;
+
+    fn handler_harness(p: usize, coll: CollType) -> Harness {
+        Harness::with_engines(p, coll, |_| handler_engine(coll))
+    }
+
+    fn contributions(p: usize) -> Vec<Vec<i32>> {
+        (0..p).map(|r| vec![r as i32 + 1, -(r as i32), 100 + r as i32]).collect()
+    }
+
+    fn orders(p: usize) -> Vec<Vec<usize>> {
+        vec![
+            (0..p).collect(),
+            (0..p).rev().collect(),
+            (0..p).step_by(2).chain((1..p).step_by(2)).collect(),
+        ]
+    }
+
+    #[test]
+    fn all_five_collectives_all_orders() {
+        for coll in CollType::HANDLER_SET {
+            for p in [2usize, 4, 8, 16] {
+                for order in orders(p) {
+                    let mut h = handler_harness(p, coll);
+                    let contribs = if coll == CollType::Barrier {
+                        vec![vec![]; p]
+                    } else {
+                        contributions(p)
+                    };
+                    h.run_and_check(&contribs, &order);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn handler_matches_fixed_function_bit_for_bit() {
+        // same contributions through the VM and through the fpga state
+        // machines: the shared ALU + identical fold order must produce
+        // identical bytes, not just tolerably-close values
+        use crate::packet::AlgoType;
+        for coll in [CollType::Scan, CollType::Exscan, CollType::Allreduce] {
+            for order in orders(8) {
+                let c = contributions(8);
+                let mut vmh = handler_harness(8, coll);
+                let mut ffh = Harness::new(AlgoType::RecursiveDoubling, 8, coll, false);
+                for &r in &order {
+                    vmh.call(r, Payload::from_i32(&c[r]));
+                    vmh.drain();
+                    ffh.call(r, Payload::from_i32(&c[r]));
+                    ffh.drain();
+                }
+                for r in 0..8 {
+                    let a = vmh.results[r].as_ref().unwrap();
+                    let b = ffh.results[r].as_ref().unwrap();
+                    assert_eq!(a.bytes(), b.bytes(), "{coll:?} rank {r} ({order:?})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bcast_delivers_only_after_the_subtree_called() {
+        // rank 0 calls first: nothing may complete (the ready-token
+        // phase gates the root) until every rank has entered
+        let mut h = handler_harness(4, CollType::Bcast);
+        let c = contributions(4);
+        h.call(0, Payload::from_i32(&c[0]));
+        h.drain();
+        assert!(h.results.iter().all(|r| r.is_none()), "no delivery before the last call");
+        for r in [2, 1, 3] {
+            h.call(r, Payload::from_i32(&c[r]));
+            h.drain();
+        }
+        for r in 0..4 {
+            assert_eq!(h.results[r].as_ref().unwrap().to_i32(), c[0], "rank {r}");
+        }
+    }
+
+    #[test]
+    fn programs_assemble_once_and_are_shared() {
+        let a = program_for(CollType::Scan) as *const Program;
+        let b = program_for(CollType::Exscan) as *const Program;
+        assert_eq!(a, b, "scan and exscan share one image");
+        assert!(program_for(CollType::Barrier).code.len() < 100, "programs stay tiny");
+    }
+}

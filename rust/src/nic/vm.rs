@@ -1,0 +1,657 @@
+//! A tiny deterministic register VM for sPIN-style per-packet handler
+//! programs (Hoefler et al., "sPIN: High-performance streaming
+//! Processing in the Network"; Schneider et al., "FPsPIN").
+//!
+//! One *program* implements one collective; one *flow* is one collective
+//! invocation on one card (the per-epoch scratchpad).  Every inbound
+//! event — the host's offload request or a reassembled peer packet —
+//! runs the program to completion ([`run`]), sPIN's
+//! handler-per-message model.  Handlers are pure state machines over
+//! the flow scratchpad: no heap, no host memory, no blocking.
+//!
+//! Machine model:
+//!
+//! - 16 general registers (`r0..r15`) holding a tagged [`Val`]: a
+//!   64-bit integer, a typed payload vector, or empty;
+//! - a per-flow scratchpad of [`SCRATCH_SLOTS`] value slots
+//!   (load/store by computed index — the inbox for out-of-order
+//!   packets lives here);
+//! - scalar ALU ops ([`AluOp`]) for control flow, plus [`Instr::Combine`],
+//!   which calls straight into the same [`EngineCtx::combine`] the
+//!   fixed-function `fpga::` machines use — the VM's vector ALU *is*
+//!   the existing dtype x op datapath, so results are bit-identical
+//!   across both offload paths;
+//! - intrinsics: `Emit` (frame towards a peer card), `Deliver` (Result
+//!   packet up to the host), `Drop` (park this activation waiting for
+//!   input — counted as a handler stall), `Halt`.
+//!
+//! Costing: every retired instruction charges
+//! `cost.handler_instr_cycles`; payload movement (scratchpad stores,
+//! frame emission, delivery) charges `cost.handler_copy_cycles_per_8b`
+//! per 8 bytes; combines charge `cost.nic_combine_cycles` exactly like
+//! the fixed-function path.  Cycles accumulate in [`EngineCtx::cycles`]
+//! and the NIC converts them to virtual time as usual.
+
+use crate::data::Payload;
+use crate::fpga::engine::{EngineCtx, NicAction};
+use crate::packet::{CollPacket, MsgType};
+use crate::sim::OffloadRequest;
+
+/// General-purpose registers per activation.
+pub const NREGS: usize = 16;
+
+/// Per-flow scratchpad slots (the card's per-collective SRAM budget).
+pub const SCRATCH_SLOTS: usize = 64;
+
+/// Per-activation instruction budget.  Handlers must run to completion
+/// in bounded time (the sPIN contract); exceeding this is a program
+/// bug, not a load condition, and fails loudly.
+pub const MAX_STEPS: usize = 4096;
+
+/// Register index (must be < [`NREGS`]).
+pub type Reg = u8;
+
+/// A register / scratchpad value.
+#[derive(Clone, Debug, Default)]
+pub enum Val {
+    #[default]
+    Empty,
+    Int(i64),
+    Vec(Payload),
+}
+
+/// Scalar ALU operations (64-bit signed).
+#[derive(Clone, Copy, Debug)]
+pub enum AluOp {
+    Add,
+    Sub,
+    Xor,
+    And,
+    /// `a << b` (b in 0..64).
+    Shl,
+    /// Arithmetic `a >> b` (b in 0..64).
+    Shr,
+    /// `(a < b) as i64`, signed.
+    Lt,
+    /// `(a == b) as i64`.
+    Eq,
+}
+
+/// Read-only environment values a handler can query.
+#[derive(Clone, Copy, Debug)]
+pub enum EnvVal {
+    /// Communicator-local rank of this card.
+    Rank,
+    /// Communicator size.
+    P,
+    /// 1 for inclusive collectives (MPI_Scan), 0 otherwise.
+    Inclusive,
+    /// Triggering packet's step field (0 for the host request).
+    PktStep,
+    /// Triggering packet's sender rank (own rank for the host request).
+    PktSrc,
+    /// Triggering message type, as its wire code (`MsgType::wire_code`;
+    /// the host request reads as `HostRequest`).
+    PktKind,
+}
+
+/// One VM instruction.
+#[derive(Clone, Copy, Debug)]
+pub enum Instr {
+    /// `dst = val`
+    Imm { dst: Reg, val: i64 },
+    /// `dst = src`
+    Mov { dst: Reg, src: Reg },
+    /// `dst = env[what]`
+    Env { dst: Reg, what: EnvVal },
+    /// `dst = ` the triggering event's payload.
+    LdPkt { dst: Reg },
+    /// `dst = ` zero-element payload with `src`'s dtype.
+    EmptyLike { dst: Reg, src: Reg },
+    /// `dst = ` op-identity payload shaped like `src`.
+    IdentLike { dst: Reg, src: Reg },
+    /// `dst = scratch[slot]` (Empty if never stored).
+    Ld { dst: Reg, slot: Reg },
+    /// `scratch[slot] = src` (charges per-byte for payloads).
+    St { slot: Reg, src: Reg },
+    /// `scratch[slot] = Empty`
+    Clr { slot: Reg },
+    /// `dst = a (op) b` over integers.
+    Alu { op: AluOp, dst: Reg, a: Reg, b: Reg },
+    /// `dst = combine(a, b)` through the shared dtype x op datapath.
+    Combine { dst: Reg, a: Reg, b: Reg },
+    /// `dst = (src != Empty) as i64`
+    IsSet { dst: Reg, src: Reg },
+    Jmp { to: usize },
+    /// Jump when `cond` is integer zero.
+    Jz { cond: Reg, to: usize },
+    /// Jump when `cond` is integer non-zero.
+    Jnz { cond: Reg, to: usize },
+    /// Emit a collective frame towards local rank `dst` (the NIC frames,
+    /// fragments and routes it).
+    Emit { dst: Reg, mt: MsgType, step: Reg, payload: Reg },
+    /// Deliver the final outcome to the local host (Result packet).
+    Deliver { payload: Reg },
+    /// Park: this event is buffered/absorbed, the flow waits for more
+    /// input.  Counted in `handler_stalls`.
+    Drop,
+    /// Normal end of activation.
+    Halt,
+}
+
+/// An assembled handler program with its two entry points.
+#[derive(Debug)]
+pub struct Program {
+    pub name: &'static str,
+    pub code: Vec<Instr>,
+    pub on_request: usize,
+    pub on_packet: usize,
+}
+
+/// Per-flow persistent state: the scratchpad plus the delivered flag the
+/// NIC's engine table retires on.
+#[derive(Debug)]
+pub struct Flow {
+    scratch: Vec<Val>,
+    pub delivered: bool,
+}
+
+impl Flow {
+    pub fn new() -> Flow {
+        Flow { scratch: vec![Val::Empty; SCRATCH_SLOTS], delivered: false }
+    }
+}
+
+impl Default for Flow {
+    fn default() -> Self {
+        Flow::new()
+    }
+}
+
+/// What triggered this activation.
+#[derive(Clone, Copy, Debug)]
+pub enum Activation<'a> {
+    Request(&'a OffloadRequest),
+    Packet(&'a CollPacket),
+}
+
+fn as_int(v: &Val, prog: &str, pc: usize) -> i64 {
+    match v {
+        Val::Int(i) => *i,
+        other => panic!("{prog}@{pc}: expected integer register, got {other:?}"),
+    }
+}
+
+fn as_vec<'a>(v: &'a Val, prog: &str, pc: usize) -> &'a Payload {
+    match v {
+        Val::Vec(p) => p,
+        other => panic!("{prog}@{pc}: expected payload register, got {other:?}"),
+    }
+}
+
+/// Run one activation of `prog` over `flow`, returning the NIC actions
+/// it produced.  Instruction/stall counts and datapath cycles are
+/// charged into `ctx` (the NIC adds pipeline latency and converts to
+/// virtual time exactly as for the fixed-function engines).
+pub fn run(
+    prog: &Program,
+    flow: &mut Flow,
+    ctx: &mut EngineCtx,
+    act: Activation,
+) -> Vec<NicAction> {
+    // stack register file: activations are the per-packet hot path
+    let mut regs: [Val; NREGS] = std::array::from_fn(|_| Val::Empty);
+    let mut out = Vec::new();
+    let mut pc = match act {
+        Activation::Request(_) => prog.on_request,
+        Activation::Packet(_) => prog.on_packet,
+    };
+    let mut steps = 0usize;
+    loop {
+        assert!(pc < prog.code.len(), "{}: pc {pc} out of range", prog.name);
+        steps += 1;
+        assert!(
+            steps <= MAX_STEPS,
+            "{}: instruction budget exceeded ({MAX_STEPS}) — runaway handler",
+            prog.name
+        );
+        ctx.instrs += 1;
+        ctx.cycles += ctx.cost.handler_instr_cycles;
+        let at = pc;
+        let instr = prog.code[pc];
+        pc += 1;
+        let r = |reg: Reg| -> usize {
+            let i = reg as usize;
+            assert!(i < NREGS, "{}@{at}: register r{reg} out of range", prog.name);
+            i
+        };
+        match instr {
+            Instr::Imm { dst, val } => regs[r(dst)] = Val::Int(val),
+            Instr::Mov { dst, src } => regs[r(dst)] = regs[r(src)].clone(),
+            Instr::Env { dst, what } => {
+                let v = match what {
+                    EnvVal::Rank => ctx.rank as i64,
+                    EnvVal::P => ctx.p as i64,
+                    EnvVal::Inclusive => ctx.inclusive as i64,
+                    EnvVal::PktStep => match act {
+                        Activation::Request(_) => 0,
+                        Activation::Packet(pkt) => pkt.step as i64,
+                    },
+                    EnvVal::PktSrc => match act {
+                        Activation::Request(req) => req.rank as i64,
+                        Activation::Packet(pkt) => pkt.rank as i64,
+                    },
+                    EnvVal::PktKind => match act {
+                        Activation::Request(_) => MsgType::HostRequest.wire_code() as i64,
+                        Activation::Packet(pkt) => pkt.msg_type.wire_code() as i64,
+                    },
+                };
+                regs[r(dst)] = Val::Int(v);
+            }
+            Instr::LdPkt { dst } => {
+                let p = match act {
+                    Activation::Request(req) => req.payload.clone(),
+                    Activation::Packet(pkt) => pkt.payload.clone(),
+                };
+                regs[r(dst)] = Val::Vec(p);
+            }
+            Instr::EmptyLike { dst, src } => {
+                let like = as_vec(&regs[r(src)], prog.name, at);
+                regs[r(dst)] = Val::Vec(like.slice(0, 0));
+            }
+            Instr::IdentLike { dst, src } => {
+                let like = as_vec(&regs[r(src)], prog.name, at).clone();
+                regs[r(dst)] = Val::Vec(ctx.identity(&like));
+            }
+            Instr::Ld { dst, slot } => {
+                let s = as_int(&regs[r(slot)], prog.name, at) as usize;
+                assert!(s < SCRATCH_SLOTS, "{}@{at}: scratch slot {s} out of range", prog.name);
+                regs[r(dst)] = flow.scratch[s].clone();
+            }
+            Instr::St { slot, src } => {
+                let s = as_int(&regs[r(slot)], prog.name, at) as usize;
+                assert!(s < SCRATCH_SLOTS, "{}@{at}: scratch slot {s} out of range", prog.name);
+                let v = regs[r(src)].clone();
+                if let Val::Vec(p) = &v {
+                    ctx.cycles += ctx.cost.handler_copy_cycles(p.byte_len());
+                }
+                flow.scratch[s] = v;
+            }
+            Instr::Clr { slot } => {
+                let s = as_int(&regs[r(slot)], prog.name, at) as usize;
+                assert!(s < SCRATCH_SLOTS, "{}@{at}: scratch slot {s} out of range", prog.name);
+                flow.scratch[s] = Val::Empty;
+            }
+            Instr::Alu { op, dst, a, b } => {
+                let x = as_int(&regs[r(a)], prog.name, at);
+                let y = as_int(&regs[r(b)], prog.name, at);
+                let v = match op {
+                    AluOp::Add => x.wrapping_add(y),
+                    AluOp::Sub => x.wrapping_sub(y),
+                    AluOp::Xor => x ^ y,
+                    AluOp::And => x & y,
+                    AluOp::Shl => {
+                        assert!((0..64).contains(&y), "{}@{at}: shift {y}", prog.name);
+                        x << y
+                    }
+                    AluOp::Shr => {
+                        assert!((0..64).contains(&y), "{}@{at}: shift {y}", prog.name);
+                        x >> y
+                    }
+                    AluOp::Lt => (x < y) as i64,
+                    AluOp::Eq => (x == y) as i64,
+                };
+                regs[r(dst)] = Val::Int(v);
+            }
+            Instr::Combine { dst, a, b } => {
+                let res = {
+                    let x = as_vec(&regs[r(a)], prog.name, at).clone();
+                    let y = as_vec(&regs[r(b)], prog.name, at).clone();
+                    ctx.combine(&x, &y)
+                };
+                regs[r(dst)] = Val::Vec(res);
+            }
+            Instr::IsSet { dst, src } => {
+                let set = !matches!(regs[r(src)], Val::Empty);
+                regs[r(dst)] = Val::Int(set as i64);
+            }
+            Instr::Jmp { to } => pc = to,
+            Instr::Jz { cond, to } => {
+                if as_int(&regs[r(cond)], prog.name, at) == 0 {
+                    pc = to;
+                }
+            }
+            Instr::Jnz { cond, to } => {
+                if as_int(&regs[r(cond)], prog.name, at) != 0 {
+                    pc = to;
+                }
+            }
+            Instr::Emit { dst, mt, step, payload } => {
+                let d = as_int(&regs[r(dst)], prog.name, at);
+                assert!(d >= 0 && (d as usize) < ctx.p, "{}@{at}: emit dst {d}", prog.name);
+                let s = as_int(&regs[r(step)], prog.name, at);
+                assert!(
+                    (0..=u16::MAX as i64).contains(&s),
+                    "{}@{at}: emit step {s} out of wire range",
+                    prog.name
+                );
+                let p = as_vec(&regs[r(payload)], prog.name, at).clone();
+                ctx.cycles += ctx.cost.handler_copy_cycles(p.byte_len());
+                out.push(NicAction::Send {
+                    dst: d as usize,
+                    mt,
+                    step: s as u16,
+                    tag: 0,
+                    payload: p,
+                });
+            }
+            Instr::Deliver { payload } => {
+                let p = as_vec(&regs[r(payload)], prog.name, at).clone();
+                ctx.cycles += ctx.cost.handler_copy_cycles(p.byte_len());
+                flow.delivered = true;
+                out.push(NicAction::Deliver { payload: p });
+            }
+            Instr::Drop => {
+                ctx.stalls += 1;
+                break;
+            }
+            Instr::Halt => break,
+        }
+    }
+    out
+}
+
+// --------------------------------------------------------------- asm
+
+/// A forward-referenceable jump target.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Label(usize);
+
+/// Tiny two-pass assembler: emit instructions with symbolic labels,
+/// then [`Asm::finish`] resolves every jump to an absolute index.
+pub struct Asm {
+    code: Vec<Instr>,
+    labels: Vec<Option<usize>>,
+}
+
+impl Default for Asm {
+    fn default() -> Self {
+        Asm::new()
+    }
+}
+
+impl Asm {
+    pub fn new() -> Asm {
+        Asm { code: Vec::new(), labels: Vec::new() }
+    }
+
+    pub fn label(&mut self) -> Label {
+        self.labels.push(None);
+        Label(self.labels.len() - 1)
+    }
+
+    pub fn bind(&mut self, l: Label) {
+        assert!(self.labels[l.0].is_none(), "label {} bound twice", l.0);
+        self.labels[l.0] = Some(self.code.len());
+    }
+
+    pub fn imm(&mut self, dst: Reg, val: i64) {
+        self.code.push(Instr::Imm { dst, val });
+    }
+
+    pub fn mov(&mut self, dst: Reg, src: Reg) {
+        self.code.push(Instr::Mov { dst, src });
+    }
+
+    pub fn env(&mut self, dst: Reg, what: EnvVal) {
+        self.code.push(Instr::Env { dst, what });
+    }
+
+    pub fn ldpkt(&mut self, dst: Reg) {
+        self.code.push(Instr::LdPkt { dst });
+    }
+
+    pub fn empty_like(&mut self, dst: Reg, src: Reg) {
+        self.code.push(Instr::EmptyLike { dst, src });
+    }
+
+    pub fn ident_like(&mut self, dst: Reg, src: Reg) {
+        self.code.push(Instr::IdentLike { dst, src });
+    }
+
+    pub fn ld(&mut self, dst: Reg, slot: Reg) {
+        self.code.push(Instr::Ld { dst, slot });
+    }
+
+    pub fn st(&mut self, slot: Reg, src: Reg) {
+        self.code.push(Instr::St { slot, src });
+    }
+
+    pub fn clr(&mut self, slot: Reg) {
+        self.code.push(Instr::Clr { slot });
+    }
+
+    pub fn alu(&mut self, op: AluOp, dst: Reg, a: Reg, b: Reg) {
+        self.code.push(Instr::Alu { op, dst, a, b });
+    }
+
+    pub fn combine(&mut self, dst: Reg, a: Reg, b: Reg) {
+        self.code.push(Instr::Combine { dst, a, b });
+    }
+
+    pub fn is_set(&mut self, dst: Reg, src: Reg) {
+        self.code.push(Instr::IsSet { dst, src });
+    }
+
+    pub fn jmp(&mut self, to: Label) {
+        self.code.push(Instr::Jmp { to: to.0 });
+    }
+
+    pub fn jz(&mut self, cond: Reg, to: Label) {
+        self.code.push(Instr::Jz { cond, to: to.0 });
+    }
+
+    pub fn jnz(&mut self, cond: Reg, to: Label) {
+        self.code.push(Instr::Jnz { cond, to: to.0 });
+    }
+
+    pub fn emit(&mut self, dst: Reg, mt: MsgType, step: Reg, payload: Reg) {
+        self.code.push(Instr::Emit { dst, mt, step, payload });
+    }
+
+    pub fn deliver(&mut self, payload: Reg) {
+        self.code.push(Instr::Deliver { payload });
+    }
+
+    pub fn park(&mut self) {
+        self.code.push(Instr::Drop);
+    }
+
+    pub fn halt(&mut self) {
+        self.code.push(Instr::Halt);
+    }
+
+    /// Resolve labels and seal the program.
+    pub fn finish(self, name: &'static str, on_request: Label, on_packet: Label) -> Program {
+        let resolve = |id: usize| {
+            self.labels[id].unwrap_or_else(|| panic!("{name}: label {id} never bound"))
+        };
+        let code: Vec<Instr> = self
+            .code
+            .iter()
+            .map(|i| match *i {
+                Instr::Jmp { to } => Instr::Jmp { to: resolve(to) },
+                Instr::Jz { cond, to } => Instr::Jz { cond, to: resolve(to) },
+                Instr::Jnz { cond, to } => Instr::Jnz { cond, to: resolve(to) },
+                other => other,
+            })
+            .collect();
+        let prog = Program {
+            name,
+            code,
+            on_request: resolve(on_request.0),
+            on_packet: resolve(on_packet.0),
+        };
+        assert!(prog.on_request < prog.code.len(), "{name}: empty on_request");
+        assert!(prog.on_packet < prog.code.len(), "{name}: empty on_packet");
+        prog
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CostModel;
+    use crate::data::{Dtype, Op};
+    use crate::packet::CollType;
+    use crate::runtime::NativeEngine;
+
+    fn req(vals: &[i32]) -> OffloadRequest {
+        OffloadRequest {
+            rank: 1,
+            comm: 0,
+            epoch: 0,
+            comm_size: 4,
+            coll: CollType::Scan,
+            algo: crate::packet::AlgoType::RecursiveDoubling,
+            op: Op::Sum,
+            dtype: Dtype::I32,
+            payload: Payload::from_i32(vals),
+        }
+    }
+
+    fn ctx_parts() -> (NativeEngine, CostModel) {
+        (NativeEngine::new(), CostModel::default())
+    }
+
+    fn make_ctx<'a>(compute: &'a NativeEngine, cost: &'a CostModel) -> EngineCtx<'a> {
+        EngineCtx {
+            rank: 1,
+            p: 4,
+            inclusive: true,
+            op: Op::Sum,
+            compute,
+            cost,
+            cycles: 0,
+            instrs: 0,
+            stalls: 0,
+        }
+    }
+
+    #[test]
+    fn alu_scratch_and_emit() {
+        // On request: r0 = (rank ^ 2), store payload at slot r0, load it
+        // back, combine with itself, emit to partner, halt.
+        let mut a = Asm::new();
+        let on_request = a.label();
+        let on_packet = a.label();
+        a.bind(on_request);
+        a.env(0, EnvVal::Rank);
+        a.imm(1, 2);
+        a.alu(AluOp::Xor, 2, 0, 1); // partner = rank ^ 2 = 3
+        a.ldpkt(3);
+        a.st(1, 3); // scratch[2] = payload
+        a.ld(4, 1);
+        a.combine(5, 3, 4); // doubled
+        a.imm(6, 7); // step
+        a.emit(2, MsgType::Data, 6, 5);
+        a.halt();
+        a.bind(on_packet);
+        a.park();
+        let prog = a.finish("t", on_request, on_packet);
+
+        let (compute, cost) = ctx_parts();
+        let mut ctx = make_ctx(&compute, &cost);
+        let mut flow = Flow::new();
+        let r = req(&[1, -2, 3]);
+        let actions = run(&prog, &mut flow, &mut ctx, Activation::Request(&r));
+        assert_eq!(actions.len(), 1);
+        match &actions[0] {
+            NicAction::Send { dst, mt, step, payload, .. } => {
+                assert_eq!(*dst, 3);
+                assert_eq!(*mt, MsgType::Data);
+                assert_eq!(*step, 7);
+                assert_eq!(payload.to_i32(), vec![2, -4, 6]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(ctx.instrs, 10, "every retired instruction is counted");
+        assert!(ctx.cycles >= 10, "per-instruction cycles charged");
+        assert_eq!(ctx.stalls, 0);
+        assert!(!flow.delivered);
+    }
+
+    #[test]
+    fn drop_counts_a_stall_and_deliver_marks_the_flow() {
+        let mut a = Asm::new();
+        let on_request = a.label();
+        let on_packet = a.label();
+        a.bind(on_request);
+        a.ldpkt(0);
+        a.deliver(0);
+        a.halt();
+        a.bind(on_packet);
+        a.park();
+        let prog = a.finish("t2", on_request, on_packet);
+
+        let (compute, cost) = ctx_parts();
+        let mut ctx = make_ctx(&compute, &cost);
+        let mut flow = Flow::new();
+        let r = req(&[5]);
+        let pkt = CollPacket {
+            comm_id: 0,
+            comm_size: 4,
+            coll_type: CollType::Scan,
+            algo_type: crate::packet::AlgoType::RecursiveDoubling,
+            node_type: crate::packet::NodeType::Generic,
+            msg_type: MsgType::Data,
+            step: 0,
+            rank: 0,
+            root: 0,
+            operation: Op::Sum,
+            data_type: Dtype::I32,
+            count: 1,
+            frag_idx: 0,
+            frag_total: 1,
+            tag: 0,
+            payload: Payload::from_i32(&[9]),
+        };
+        let none = run(&prog, &mut flow, &mut ctx, Activation::Packet(&pkt));
+        assert!(none.is_empty());
+        assert_eq!(ctx.stalls, 1);
+        assert!(!flow.delivered);
+
+        let actions = run(&prog, &mut flow, &mut ctx, Activation::Request(&r));
+        assert_eq!(actions.len(), 1);
+        assert!(matches!(&actions[0], NicAction::Deliver { payload } if payload.to_i32() == vec![5]));
+        assert!(flow.delivered);
+    }
+
+    #[test]
+    #[should_panic(expected = "instruction budget")]
+    fn runaway_program_trips_the_budget() {
+        let mut a = Asm::new();
+        let on_request = a.label();
+        a.bind(on_request);
+        let spin = a.label();
+        a.bind(spin);
+        a.jmp(spin);
+        let prog = a.finish("spin", on_request, on_request);
+        let (compute, cost) = ctx_parts();
+        let mut ctx = make_ctx(&compute, &cost);
+        let mut flow = Flow::new();
+        let r = req(&[1]);
+        run(&prog, &mut flow, &mut ctx, Activation::Request(&r));
+    }
+
+    #[test]
+    #[should_panic(expected = "never bound")]
+    fn unbound_label_fails_at_assembly() {
+        let mut a = Asm::new();
+        let on_request = a.label();
+        a.bind(on_request);
+        let nowhere = a.label();
+        a.jmp(nowhere);
+        a.finish("bad", on_request, on_request);
+    }
+}

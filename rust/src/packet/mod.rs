@@ -21,16 +21,28 @@ pub const COLL_HDR_LEN: usize = 36;
 /// `coll_type` enumeration.  The format is "intended to support a variety
 /// of collective operations"; this reproduction implements Scan + Exscan
 /// and enumerates the others the packet format reserves.
-#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
 pub enum CollType {
     Scan,
     Exscan,
     Barrier,
     Allreduce,
     Reduce,
+    /// MPI_Bcast — handler-VM programs and the software baseline only
+    /// (the paper's fixed-function datapath never implemented it).
+    Bcast,
 }
 
 impl CollType {
+    /// Every collective the handler VM ships a program for.
+    pub const HANDLER_SET: [CollType; 5] = [
+        CollType::Scan,
+        CollType::Exscan,
+        CollType::Allreduce,
+        CollType::Bcast,
+        CollType::Barrier,
+    ];
+
     pub fn wire_code(self) -> u16 {
         match self {
             CollType::Scan => 1,
@@ -38,6 +50,7 @@ impl CollType {
             CollType::Barrier => 3,
             CollType::Allreduce => 4,
             CollType::Reduce => 5,
+            CollType::Bcast => 6,
         }
     }
 
@@ -48,6 +61,31 @@ impl CollType {
             3 => Some(CollType::Barrier),
             4 => Some(CollType::Allreduce),
             5 => Some(CollType::Reduce),
+            6 => Some(CollType::Bcast),
+            _ => None,
+        }
+    }
+
+    /// CLI / grid-spec name.
+    pub fn name(self) -> &'static str {
+        match self {
+            CollType::Scan => "scan",
+            CollType::Exscan => "exscan",
+            CollType::Barrier => "barrier",
+            CollType::Allreduce => "allreduce",
+            CollType::Reduce => "reduce",
+            CollType::Bcast => "bcast",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<CollType> {
+        match s {
+            "scan" => Some(CollType::Scan),
+            "exscan" => Some(CollType::Exscan),
+            "barrier" => Some(CollType::Barrier),
+            "allreduce" => Some(CollType::Allreduce),
+            "reduce" => Some(CollType::Reduce),
+            "bcast" => Some(CollType::Bcast),
             _ => None,
         }
     }

@@ -123,6 +123,86 @@ fn oracle_for_rank(
 }
 
 #[test]
+fn handler_programs_agree_with_sw_and_oracle() {
+    // Every handler-VM program (scan, exscan, allreduce, bcast, barrier)
+    // against the software path and the reduction/prefix oracles, over
+    // random p <= 32 x dtype x op x topology.  Values must agree
+    // (exactly for integers, association-tolerance for floats);
+    // latencies are free to differ.
+    for_each_case(40, 0x5919_C0DE, |rng| {
+        let mut cfg = ExpConfig::default();
+        cfg.algo = AlgoType::RecursiveDoubling;
+        cfg.coll = *choose(rng, &CollType::HANDLER_SET);
+        cfg.p = *choose(rng, &[2usize, 4, 8, 16, 32]);
+        let mut topos: Vec<&str> = vec!["auto", "chain", "star:3", "fattree", "hypercube"];
+        if cfg.p >= 3 {
+            topos.push("ring");
+        }
+        cfg.topology = choose(rng, &topos).to_string();
+        cfg.dtype = *choose(rng, &Dtype::ALL);
+        cfg.op = loop {
+            let op = *choose(rng, &Op::ALL);
+            if op.valid_for(cfg.dtype) {
+                break op;
+            }
+        };
+        let elems =
+            if cfg.coll == CollType::Barrier { 0 } else { *choose(rng, &[1usize, 5, 33]) };
+        cfg.msg_bytes = elems * cfg.dtype.size();
+        cfg.seed = rng.next_u64();
+        cfg.cost.start_jitter_ns = *choose(rng, &[0u64, 5_000, 100_000]);
+        cfg.verify = false; // the TEST does the comparing, not the cluster
+
+        let compute = make_engine(EngineKind::Native, "artifacts");
+        let contribs: Vec<Payload> = if cfg.coll == CollType::Barrier {
+            (0..cfg.p).map(|_| Payload::identity(cfg.dtype, cfg.op, 0)).collect()
+        } else {
+            random_contributions(rng, &cfg)
+        };
+
+        let run_path = |handler: bool| -> Vec<Payload> {
+            let mut c = cfg.clone();
+            c.handler = handler;
+            c.offloaded = handler; // handler vs pure software baseline
+            let (results, _) = Cluster::scan_once(c, Rc::clone(&compute), contribs.clone())
+                .unwrap_or_else(|e| {
+                    panic!(
+                        "handler={handler} {:?} on {} p={}: {e}",
+                        cfg.coll, cfg.topology, cfg.p
+                    )
+                });
+            results
+        };
+        let hd = run_path(true);
+        let sw = run_path(false);
+
+        let ctx = format!(
+            "handler {:?} {}x{} {:?} {:?} on {}",
+            cfg.coll,
+            cfg.p,
+            cfg.msg_elems(),
+            cfg.op,
+            cfg.dtype,
+            cfg.topology
+        );
+        for r in 0..cfg.p {
+            let want = match cfg.coll {
+                CollType::Scan | CollType::Exscan => oracle_for_rank(&*compute, &contribs, &cfg, r),
+                CollType::Allreduce => {
+                    oracle_prefix(&*compute, &contribs, cfg.op, true, cfg.p - 1).expect("oracle")
+                }
+                // a barrier carries no data; a bcast carries the root's
+                CollType::Barrier => contribs[r].clone(),
+                CollType::Bcast => contribs[0].clone(),
+                CollType::Reduce => unreachable!(),
+            };
+            assert_agree(&hd[r], &want, &format!("handler rank {r} ({ctx})"));
+            assert_agree(&sw[r], &want, &format!("software rank {r} ({ctx})"));
+        }
+    });
+}
+
+#[test]
 fn software_offload_and_oracle_agree_on_every_rank() {
     for_each_case(40, 0xC0_55A1, |rng| {
         let cfg = random_case(rng);

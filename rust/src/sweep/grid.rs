@@ -105,16 +105,9 @@ impl GridSpec {
         let sizes = parse_usizes("sizes", base.msg_bytes)?;
         let ps = parse_usizes("p", base.p)?;
         let series = match doc.get_list("grid", "series")? {
-            None => vec![Series { algo: base.algo, offloaded: base.offloaded }],
+            None => vec![Series::of_config(&base)],
             Some(items) if items.is_empty() => return Err("grid.series is empty".into()),
-            Some(items) => items
-                .iter()
-                .map(|v| {
-                    Series::from_name(v).ok_or_else(|| {
-                        format!("grid.series item {v:?}: unknown (sw|NF)_(seq|rd|binomial)")
-                    })
-                })
-                .collect::<Result<Vec<_>, _>>()?,
+            Some(items) => Series::expand_list(&items).map_err(|e| format!("grid.{e}"))?,
         };
 
         let topologies = match doc.get_list("grid", "topology")? {
@@ -158,8 +151,7 @@ impl GridSpec {
                     for &size in &self.sizes {
                         let index = jobs.len();
                         let mut cfg = self.base.clone();
-                        cfg.algo = series.algo;
-                        cfg.offloaded = series.offloaded;
+                        series.apply(&mut cfg);
                         cfg.topology = topo.clone();
                         cfg.p = p;
                         cfg.msg_bytes = size;
@@ -292,7 +284,33 @@ mod tests {
         let jobs = spec.expand().unwrap();
         assert_eq!(jobs.len(), 1);
         assert_eq!(jobs[0].series.algo, AlgoType::RecursiveDoubling);
-        assert!(jobs[0].series.offloaded, "series defaults to the base config path");
+        assert!(jobs[0].series.offloaded(), "series defaults to the base config path");
+    }
+
+    #[test]
+    fn handler_series_axis_expands_and_validates() {
+        use crate::packet::CollType;
+        // the bare "handler" token fans out to all five VM collectives
+        let spec = GridSpec::from_toml(
+            "[grid]\nsizes = [4]\nseries = [\"handler\"]\n[run]\niters = 5\np = 8",
+        )
+        .unwrap();
+        assert_eq!(spec.n_jobs(), 5);
+        let jobs = spec.expand().unwrap();
+        assert!(jobs.iter().all(|j| j.cfg.handler && j.cfg.offloaded));
+        let colls: Vec<CollType> = jobs.iter().map(|j| j.cfg.coll).collect();
+        assert_eq!(colls, CollType::HANDLER_SET.to_vec());
+
+        // a pinned collective stays pinned
+        let spec =
+            GridSpec::from_toml("[grid]\nsizes = [4]\nseries = [\"handler:exscan\"]").unwrap();
+        assert_eq!(spec.expand().unwrap()[0].cfg.coll, CollType::Exscan);
+
+        // handler cells hit the power-of-two validation at parse time
+        let err =
+            GridSpec::from_toml("[grid]\np = [6]\nseries = [\"handler:scan\"]").unwrap_err();
+        assert!(err.contains("power-of-two"), "{err}");
+        assert!(GridSpec::from_toml("[grid]\nseries = [\"handler:reduce\"]").is_err());
     }
 
     #[test]

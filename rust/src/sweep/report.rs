@@ -34,6 +34,10 @@ pub struct JobResult {
     /// Frames the switch fabric transmitted (0 on direct wirings).
     pub switch_frames: u64,
     pub multicasts: u64,
+    /// Handler-VM instructions retired / activations parked (0 outside
+    /// `handler:*` series).
+    pub handler_instrs: u64,
+    pub handler_stalls: u64,
     pub sim_ns: u64,
 }
 
@@ -51,6 +55,8 @@ impl JobResult {
             total_frames: m.total_frames(),
             switch_frames: m.switch_frames_tx,
             multicasts: m.multicasts,
+            handler_instrs: m.handler_instrs,
+            handler_stalls: m.handler_stalls,
             sim_ns: m.sim_ns,
         }
     }
@@ -68,6 +74,8 @@ impl JobResult {
             ("total_frames".into(), Json::int(self.total_frames)),
             ("switch_frames".into(), Json::int(self.switch_frames)),
             ("multicasts".into(), Json::int(self.multicasts)),
+            ("handler_instrs".into(), Json::int(self.handler_instrs)),
+            ("handler_stalls".into(), Json::int(self.handler_stalls)),
             ("sim_ns".into(), Json::int(self.sim_ns)),
         ])
     }
@@ -97,6 +105,9 @@ impl JobResult {
             total_frames: get_u64("total_frames")?,
             switch_frames: j.get("switch_frames").and_then(|v| v.as_u64()).unwrap_or(0),
             multicasts: get_u64("multicasts")?,
+            // absent in pre-handler artifacts
+            handler_instrs: j.get("handler_instrs").and_then(|v| v.as_u64()).unwrap_or(0),
+            handler_stalls: j.get("handler_stalls").and_then(|v| v.as_u64()).unwrap_or(0),
             sim_ns: get_u64("sim_ns")?,
         })
     }
@@ -245,7 +256,13 @@ impl SweepReport {
         };
         emit(&self.name, &self.to_json())?;
         if self.name == FIGS_GRID {
-            for (stem, ..) in FIGURES {
+            for &(stem, _, _, nf_only) in FIGURES {
+                // a figs grid re-pointed at non-NF series (e.g.
+                // `--series handler`) has no on-NIC-only figures to draw
+                if nf_only && !self.series.iter().any(|s| s.starts_with("NF")) {
+                    println!("note: skipping {stem}.json (no NF_* series in this grid)");
+                    continue;
+                }
                 let doc = self.figure_json(stem).map_err(anyhow::Error::msg)?;
                 emit(stem, &doc)?;
             }
@@ -301,6 +318,8 @@ mod tests {
             total_frames: 7,
             switch_frames: 0,
             multicasts: 0,
+            handler_instrs: 0,
+            handler_stalls: 0,
             sim_ns: 1_000_000,
         };
         SweepReport {
