@@ -1,0 +1,115 @@
+//! K-way fold + streaming-reassembly bench: the two multi-payload hot
+//! paths the arena work targets, measured against in-repo reference
+//! implementations that replicate the pre-arena shapes.
+//! `cargo bench --bench fold_reassembly`.
+//!
+//! - **fold**: a 64-way chain fold (binomial root / verify-path shape):
+//!   pairwise allocating `combine` vs in-place `combine_into`;
+//! - **reassembly**: a 16 KB message from MTU fragments: buffer-clones +
+//!   `Payload::concat` (the old double copy) vs the streaming
+//!   `Reassembler` (first-fragment arena buffer + memcpy into place).
+
+use std::time::Instant;
+
+use nfscan::data::{Op, Payload};
+use nfscan::fpga::reassembly::Reassembler;
+use nfscan::net::frame::fragment;
+use nfscan::runtime::{Compute, NativeEngine};
+use nfscan::util::alloc as cnt;
+
+#[global_allocator]
+static ALLOC: nfscan::util::alloc::CountingAllocator = nfscan::util::alloc::CountingAllocator;
+
+fn contribs(k: usize, n: usize) -> Vec<Payload> {
+    (0..k)
+        .map(|s| Payload::from_i32(&(0..n as i32).map(|v| (v + s as i32) % 17 - 8).collect::<Vec<_>>()))
+        .collect()
+}
+
+fn measure(reps: usize, mut op: impl FnMut()) -> (f64, f64) {
+    op(); // warmup
+    op();
+    let a0 = cnt::allocation_count();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        op();
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / reps as f64;
+    (ns, (cnt::allocation_count() - a0) as f64 / reps as f64)
+}
+
+fn main() {
+    let e = NativeEngine::new();
+    let mut t = nfscan::metrics::Table::new(&[
+        "case", "pairwise_us", "pairwise_allocs", "inplace_us", "inplace_allocs", "speedup",
+    ]);
+    for (label, n, reps) in [("fold_k64_1k", 256usize, 2_000usize), ("fold_k64_16k", 4096, 300)] {
+        let xs = contribs(64, n);
+        let (pw_ns, pw_al) = measure(reps, || {
+            let mut acc = xs[0].clone();
+            for c in &xs[1..] {
+                acc = e.combine(&acc, c, Op::Sum).unwrap();
+            }
+            std::hint::black_box(&acc);
+        });
+        let (ip_ns, ip_al) = measure(reps, || {
+            let mut acc = xs[0].clone();
+            for c in &xs[1..] {
+                e.combine_into(&mut acc, c, Op::Sum).unwrap();
+            }
+            std::hint::black_box(&acc);
+        });
+        t.row(vec![
+            label.to_string(),
+            format!("{:.2}", pw_ns / 1e3),
+            format!("{pw_al:.1}"),
+            format!("{:.2}", ip_ns / 1e3),
+            format!("{ip_al:.1}"),
+            format!("{:.2}x", pw_ns / ip_ns),
+        ]);
+    }
+    println!("64-way chain fold, i32 MPI_SUM (us per whole fold, allocs per fold)");
+    print!("{}", t.render());
+    println!();
+
+    // ---- reassembly: old shape (clone fragments, concat at the end) vs
+    // the streaming reassembler
+    let msg = Payload::from_i32(&(0..4096).collect::<Vec<_>>()); // 16 KB
+    let frags = fragment(&msg);
+    let count = msg.len() as u32;
+    let reps = 20_000;
+    let (old_ns, old_al) = measure(reps, || {
+        // reference: the pre-streaming double copy
+        let mut parts: Vec<Option<Payload>> = vec![None; frags.len()];
+        for (idx, _total, _off, chunk) in &frags {
+            parts[*idx as usize] = Some(chunk.clone());
+        }
+        let chunks: Vec<Payload> = parts.into_iter().map(|p| p.unwrap()).collect();
+        std::hint::black_box(Payload::concat(&chunks));
+    });
+    let mut r: Reassembler<u32> = Reassembler::new(32);
+    let (new_ns, new_al) = measure(reps, || {
+        let mut whole = None;
+        for (idx, total, _off, chunk) in &frags {
+            whole = r.add(1, *idx, *total, count, chunk.clone());
+        }
+        std::hint::black_box(whole.expect("complete"));
+    });
+    let mut t = nfscan::metrics::Table::new(&[
+        "path", "us_per_msg", "allocs_per_msg", "speedup",
+    ]);
+    t.row(vec![
+        "buffer+concat".into(),
+        format!("{:.2}", old_ns / 1e3),
+        format!("{old_al:.1}"),
+        "1.00x".into(),
+    ]);
+    t.row(vec![
+        "streaming".into(),
+        format!("{:.2}", new_ns / 1e3),
+        format!("{new_al:.1}"),
+        format!("{:.2}x", old_ns / new_ns),
+    ]);
+    println!("16 KB message reassembly from {} MTU fragments ({reps} reps)", frags.len());
+    print!("{}", t.render());
+}

@@ -1,28 +1,57 @@
-//! Hot-path microbenchmark: the payload-combine datapath, XLA artifacts
-//! (PJRT) vs native Rust, across payload sizes.  This is the real
-//! wallclock cost of the runtime the simulator charges virtual time for,
-//! and the primary L3 perf-iteration target (EXPERIMENTS.md SSPerf).
+//! Hot-path microbenchmark: the payload-combine datapath — the in-place
+//! arena fold (`combine_into`) vs the allocating path vs the XLA
+//! artifacts (PJRT) — across payload sizes.  This is the real wallclock
+//! cost of the runtime the simulator charges virtual time for, and the
+//! primary L3 perf-iteration target (EXPERIMENTS.md SSPerf).
 //! `cargo bench --bench runtime_combine`.
 
 use nfscan::config::EngineKind;
 use nfscan::data::{Op, Payload};
 use nfscan::metrics::Table;
 use nfscan::runtime::{make_engine, Compute};
+use nfscan::util::alloc as cnt;
 
-fn bench_engine(engine: &dyn Compute, n: usize, reps: usize) -> (f64, f64) {
+// count allocations around the hot loops (allocs/op column)
+#[global_allocator]
+static ALLOC: nfscan::util::alloc::CountingAllocator = nfscan::util::alloc::CountingAllocator;
+
+fn inputs(n: usize) -> (Payload, Payload) {
     let a = Payload::from_i32(&(0..n as i32).map(|v| v % 17 - 8).collect::<Vec<_>>());
     let b = Payload::from_i32(&(0..n as i32).map(|v| v % 11 - 5).collect::<Vec<_>>());
-    // warmup (compile on first use for the XLA engine)
-    let mut acc = engine.combine(&a, &b, Op::Sum).unwrap();
+    (a, b)
+}
+
+/// Allocating combine: `acc = combine(acc, b)` (the pre-arena shape).
+fn bench_alloc(engine: &dyn Compute, n: usize, reps: usize) -> (f64, f64) {
+    let (a, b) = inputs(n);
+    let mut acc = engine.combine(&a, &b, Op::Sum).unwrap(); // warmup
+    let a0 = cnt::allocation_count();
     let t0 = std::time::Instant::now();
     for _ in 0..reps {
         acc = engine.combine(&acc, &b, Op::Sum).unwrap();
     }
     let dt = t0.elapsed().as_secs_f64();
+    let allocs = (cnt::allocation_count() - a0) as f64 / reps as f64;
     std::hint::black_box(&acc);
-    let per_call_us = dt / reps as f64 * 1e6;
-    let mbps = (n * 4 * reps) as f64 / dt / 1e6;
-    (per_call_us, mbps)
+    (dt / reps as f64 * 1e6, allocs)
+}
+
+/// In-place combine: `combine_into(&mut acc, b)` on a unique accumulator.
+fn bench_in_place(engine: &dyn Compute, n: usize, reps: usize) -> (f64, f64) {
+    let (a, b) = inputs(n);
+    let mut acc = a;
+    for _ in 0..16 {
+        engine.combine_into(&mut acc, &b, Op::Sum).unwrap(); // warmup + materialize
+    }
+    let a0 = cnt::allocation_count();
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        engine.combine_into(&mut acc, &b, Op::Sum).unwrap();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let allocs = (cnt::allocation_count() - a0) as f64 / reps as f64;
+    std::hint::black_box(&acc);
+    (dt / reps as f64 * 1e6, allocs)
 }
 
 fn main() {
@@ -31,30 +60,35 @@ fn main() {
     let reps = 2000;
     let mut t = Table::new(&[
         "elements",
-        "native_us",
-        "native_MB/s",
+        "alloc_us",
+        "alloc/op",
+        "inplace_us",
+        "inplace/op",
+        "speedup",
         "xla_us",
-        "xla_MB/s",
-        "xla/native",
     ]);
     for n in [64usize, 512, 2048, 8192, 65536] {
-        let (nu, nm) = bench_engine(&*native, n, reps);
-        let (xu, xm) = bench_engine(&*xla, n, reps.min(500));
+        let (au, aa) = bench_alloc(&*native, n, reps);
+        let (iu, ia) = bench_in_place(&*native, n, reps);
+        let (xu, _) = bench_alloc(&*xla, n, reps.min(500));
         t.row(vec![
             n.to_string(),
-            format!("{nu:.2}"),
-            format!("{nm:.0}"),
+            format!("{au:.2}"),
+            format!("{aa:.1}"),
+            format!("{iu:.2}"),
+            format!("{ia:.1}"),
+            format!("{:.2}x", au / iu),
             format!("{xu:.2}"),
-            format!("{xm:.0}"),
-            format!("{:.1}x", xu / nu),
         ]);
     }
     println!(
-        "combine hot path: i32 MPI_SUM, {} vs {} ({} reps)",
-        native.name(),
+        "combine hot path: i32 MPI_SUM, allocating vs in-place arena fold vs {} ({} reps)",
         xla.name(),
         reps
     );
     print!("{}", t.render());
-    println!("(xla column uses the AOT Pallas->HLO artifacts via PJRT; run `make artifacts`)");
+    println!(
+        "(inplace/op must read 0.0 — the zero-alloc regression test asserts it; \
+         xla column uses the AOT Pallas->HLO artifacts via PJRT; run `make artifacts`)"
+    );
 }

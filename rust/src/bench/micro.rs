@@ -1,0 +1,313 @@
+//! Hot-datapath microbenchmarks behind `nfscan bench` — the perf
+//! trajectory's data source.
+//!
+//! Each entry measures one steady-state hot-path operation in host
+//! wallclock ns/op plus allocations/op (when the counting allocator is
+//! installed — the `nfscan` binary installs it).  `nfscan bench --json
+//! --out BENCH_N.json` emits the machine-readable trajectory point CI
+//! uploads; `nfscan benchdiff` compares two points and warns on >10%
+//! ns/op regressions (advisory).
+//!
+//! Measured entries:
+//! - `combine_into_*` — steady-state in-place combine on a uniquely-owned
+//!   accumulator (the tentpole's zero-alloc claim);
+//! - `combine_alloc_*` — the allocating `combine` path, kept as the
+//!   in-repo baseline the speedup is measured against;
+//! - `fold_k64_*` — a 64-way `oracle_prefix` fold (verify-path shape);
+//! - `reassembly_16k` — streaming reassembly of a 16 KB message from MTU
+//!   fragments;
+//! - `handler_dispatch` — one handler-VM `on_host_request` activation
+//!   (engine construction included, as the cluster pays it per epoch);
+//! - `event_queue_hold256` — calendar-queue hold-model pop+push.
+
+use std::time::Instant;
+
+use crate::config::CostModel;
+use crate::data::{Op, Payload};
+use crate::fpga::engine::{CollEngine as _, EngineCtx};
+use crate::fpga::reassembly::Reassembler;
+use crate::metrics::json::Json;
+use crate::metrics::Table;
+use crate::net::frame::fragment;
+use crate::runtime::{engine::oracle_prefix, Compute, NativeEngine};
+use crate::sim::{EventKind, EventQueue, SimTime, SplitMix64};
+use crate::util::alloc as cnt;
+
+/// One measured entry of the trajectory point.
+pub struct BenchResult {
+    pub name: &'static str,
+    pub ns_per_op: f64,
+    /// None when the counting allocator is not installed.
+    pub allocs_per_op: Option<f64>,
+}
+
+/// Time `op` over `reps` iterations (after `warmup`), returning
+/// (ns/op, allocs/op).
+fn measure(
+    warmup: usize,
+    reps: usize,
+    counting: bool,
+    mut op: impl FnMut(),
+) -> (f64, Option<f64>) {
+    for _ in 0..warmup {
+        op();
+    }
+    let a0 = cnt::allocation_count();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        op();
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / reps as f64;
+    let allocs = (cnt::allocation_count() - a0) as f64 / reps as f64;
+    (ns, counting.then_some(allocs))
+}
+
+fn payload_i32(n: usize, salt: i32) -> Payload {
+    Payload::from_i32(&(0..n as i32).map(|v| (v + salt) % 17 - 8).collect::<Vec<_>>())
+}
+
+fn bench_combine_into(n: usize, reps: usize, counting: bool) -> (f64, Option<f64>) {
+    let e = NativeEngine::new();
+    let mut acc = payload_i32(n, 1);
+    let b = payload_i32(n, 5);
+    measure(64, reps, counting, || {
+        e.combine_into(&mut acc, &b, Op::Sum).unwrap();
+        std::hint::black_box(&acc);
+    })
+}
+
+fn bench_combine_alloc(n: usize, reps: usize, counting: bool) -> (f64, Option<f64>) {
+    let e = NativeEngine::new();
+    let mut acc = payload_i32(n, 1);
+    let b = payload_i32(n, 5);
+    measure(64, reps, counting, || {
+        acc = e.combine(&acc, &b, Op::Sum).unwrap();
+        std::hint::black_box(&acc);
+    })
+}
+
+fn bench_fold_k64(n: usize, reps: usize, counting: bool) -> (f64, Option<f64>) {
+    let e = NativeEngine::new();
+    let contribs: Vec<Payload> = (0..64).map(|k| payload_i32(n, k)).collect();
+    measure(8, reps, counting, || {
+        let acc = oracle_prefix(&e, &contribs, Op::Sum, true, 63).unwrap();
+        std::hint::black_box(&acc);
+    })
+}
+
+fn bench_reassembly_16k(reps: usize, counting: bool) -> (f64, Option<f64>) {
+    let msg = payload_i32(4096, 3); // 16 KB -> 12 MTU fragments
+    let frags = fragment(&msg);
+    let count = msg.len() as u32;
+    let mut r: Reassembler<u32> = Reassembler::new(32);
+    measure(16, reps, counting, || {
+        let mut whole = None;
+        for (idx, total, _off, chunk) in &frags {
+            whole = r.add(1, *idx, *total, count, chunk.clone());
+        }
+        std::hint::black_box(whole.expect("message completes each rep"));
+    })
+}
+
+fn bench_handler_dispatch(reps: usize, counting: bool) -> (f64, Option<f64>) {
+    use crate::packet::{AlgoType, CollType};
+    let compute = NativeEngine::new();
+    let cost = CostModel::default();
+    let req = crate::sim::OffloadRequest {
+        rank: 0,
+        comm: 0,
+        epoch: 0,
+        comm_size: 2,
+        coll: CollType::Allreduce,
+        algo: AlgoType::RecursiveDoubling,
+        op: Op::Sum,
+        dtype: crate::data::Dtype::I32,
+        payload: payload_i32(16, 0),
+    };
+    measure(64, reps, counting, || {
+        let mut engine = crate::nic::handler_engine(CollType::Allreduce);
+        let mut ctx = EngineCtx {
+            rank: 0,
+            p: 2,
+            inclusive: false,
+            op: Op::Sum,
+            compute: &compute,
+            cost: &cost,
+            cycles: 0,
+            instrs: 0,
+            stalls: 0,
+        };
+        let actions = engine.on_host_request(&mut ctx, &req);
+        std::hint::black_box(&actions);
+    })
+}
+
+fn bench_event_queue(reps: usize, counting: bool) -> (f64, Option<f64>) {
+    const DELTAS: &[u64] = &[120, 500, 992, 2_000, 28_000, 120_000];
+    let mut q = EventQueue::with_calendar();
+    let mut rng = SplitMix64::new(0xBE9C4);
+    for i in 0..256 {
+        q.push(SimTime::ns(rng.next_below(100_000)), EventKind::HostStart { rank: i });
+    }
+    measure(1024, reps, counting, || {
+        let (now, kind) = q.pop().expect("hold model never drains");
+        let delta = DELTAS[rng.next_below(DELTAS.len() as u64) as usize];
+        q.push(now + delta, kind);
+    })
+}
+
+/// Run the whole suite.  `quick` shrinks rep counts (CI smoke / tests).
+pub fn run_all(quick: bool) -> Vec<BenchResult> {
+    let counting = cnt::counting_installed();
+    let r = |full: usize, quick_reps: usize| if quick { quick_reps } else { full };
+    let mut out = Vec::new();
+    let mut push = |name: &'static str, (ns, allocs): (f64, Option<f64>)| {
+        out.push(BenchResult { name, ns_per_op: ns, allocs_per_op: allocs });
+    };
+    push("combine_into_256b", bench_combine_into(64, r(200_000, 2_000), counting));
+    push("combine_into_4k", bench_combine_into(1024, r(100_000, 1_000), counting));
+    push("combine_alloc_4k", bench_combine_alloc(1024, r(100_000, 1_000), counting));
+    push("fold_k64_4k", bench_fold_k64(1024, r(2_000, 50), counting));
+    push("reassembly_16k", bench_reassembly_16k(r(20_000, 200), counting));
+    push("handler_dispatch", bench_handler_dispatch(r(100_000, 1_000), counting));
+    push("event_queue_hold256", bench_event_queue(r(400_000, 4_000), counting));
+    out
+}
+
+/// Render the suite as an aligned table.
+pub fn table(results: &[BenchResult]) -> Table {
+    let mut t = Table::new(&["bench", "ns_per_op", "allocs_per_op"]);
+    for r in results {
+        t.row(vec![
+            r.name.to_string(),
+            format!("{:.1}", r.ns_per_op),
+            match r.allocs_per_op {
+                Some(a) => format!("{a:.3}"),
+                None => "n/a".to_string(),
+            },
+        ]);
+    }
+    t
+}
+
+/// Machine-readable trajectory point (`BENCH_N.json` schema).
+pub fn to_json(results: &[BenchResult]) -> Json {
+    let entries: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            Json::Obj(vec![
+                ("name".into(), Json::str(r.name)),
+                ("ns_per_op".into(), Json::Num(r.ns_per_op)),
+                (
+                    "allocs_per_op".into(),
+                    match r.allocs_per_op {
+                        Some(a) => Json::Num(a),
+                        None => Json::Null,
+                    },
+                ),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        ("schema".into(), Json::str("nfscan-bench/1")),
+        ("alloc_counting".into(), Json::Bool(results.iter().any(|r| r.allocs_per_op.is_some()))),
+        ("entries".into(), Json::Arr(entries)),
+    ])
+}
+
+/// Compare two trajectory points; returns (report lines, regression
+/// count).  A regression = ns/op more than `threshold` above the
+/// previous point (default callers use 0.10 = +10%).
+pub fn compare(prev: &Json, cur: &Json, threshold: f64) -> (Vec<String>, usize) {
+    let mut lines = Vec::new();
+    let mut regressions = 0;
+    let empty: &[Json] = &[];
+    let prev_entries = prev.get("entries").and_then(|e| e.as_arr()).unwrap_or(empty);
+    let cur_entries = cur.get("entries").and_then(|e| e.as_arr()).unwrap_or(empty);
+    for e in cur_entries {
+        let Some(name) = e.get("name").and_then(|n| n.as_str()) else { continue };
+        let Some(cur_ns) = e.get("ns_per_op").and_then(|v| v.as_f64()) else { continue };
+        let old = prev_entries
+            .iter()
+            .find(|p| p.get("name").and_then(|n| n.as_str()) == Some(name))
+            .and_then(|p| p.get("ns_per_op").and_then(|v| v.as_f64()));
+        match old {
+            Some(old_ns) if old_ns > 0.0 => {
+                let ratio = cur_ns / old_ns;
+                let verdict = if ratio > 1.0 + threshold {
+                    regressions += 1;
+                    "REGRESSION"
+                } else if ratio < 1.0 - threshold {
+                    "improved"
+                } else {
+                    "ok"
+                };
+                lines.push(format!(
+                    "{name}: {old_ns:.1} -> {cur_ns:.1} ns/op ({ratio:.2}x) {verdict}"
+                ));
+            }
+            _ => lines.push(format!("{name}: {cur_ns:.1} ns/op (new entry, no baseline)")),
+        }
+    }
+    // a bench that existed in the baseline but not in the current point is
+    // shrinking coverage — say so instead of silently dropping its history
+    for p in prev_entries {
+        let Some(name) = p.get("name").and_then(|n| n.as_str()) else { continue };
+        let in_cur =
+            cur_entries.iter().any(|e| e.get("name").and_then(|n| n.as_str()) == Some(name));
+        if !in_cur {
+            lines.push(format!("{name}: MISSING from current point (was in baseline)"));
+        }
+    }
+    (lines, regressions)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_suite_runs_and_serializes() {
+        let results = run_all(true);
+        assert_eq!(results.len(), 7);
+        assert!(results.iter().all(|r| r.ns_per_op > 0.0));
+        let doc = to_json(&results);
+        let parsed = Json::parse(&doc.pretty()).unwrap();
+        assert_eq!(parsed.get("schema").unwrap().as_str(), Some("nfscan-bench/1"));
+        assert_eq!(parsed.get("entries").unwrap().as_arr().unwrap().len(), 7);
+        // lib tests install the counting allocator: allocs must be
+        // *counted* (the zero-alloc value assertion lives in
+        // tests/alloc_free.rs, whose binary has no concurrent tests
+        // polluting the process-global counters)
+        let combine = &results[1];
+        assert_eq!(combine.name, "combine_into_4k");
+        assert!(combine.allocs_per_op.is_some(), "counting installed in lib tests");
+    }
+
+    #[test]
+    fn compare_flags_regressions_and_improvements() {
+        let mk = |ns: f64| {
+            Json::Obj(vec![(
+                "entries".into(),
+                Json::Arr(vec![Json::Obj(vec![
+                    ("name".into(), Json::str("x")),
+                    ("ns_per_op".into(), Json::Num(ns)),
+                ])]),
+            )])
+        };
+        let (lines, n) = compare(&mk(100.0), &mk(125.0), 0.10);
+        assert_eq!(n, 1, "{lines:?}");
+        assert!(lines[0].contains("REGRESSION"));
+        let (lines, n) = compare(&mk(100.0), &mk(80.0), 0.10);
+        assert_eq!(n, 0);
+        assert!(lines[0].contains("improved"));
+        let (lines, n) = compare(&mk(100.0), &mk(105.0), 0.10);
+        assert_eq!(n, 0);
+        assert!(lines[0].contains("ok"));
+        // a baseline entry absent from the current point is called out
+        let empty = Json::Obj(vec![("entries".into(), Json::Arr(vec![]))]);
+        let (lines, n) = compare(&mk(100.0), &empty, 0.10);
+        assert_eq!(n, 0);
+        assert!(lines.iter().any(|l| l.contains("MISSING")), "{lines:?}");
+    }
+}

@@ -7,6 +7,8 @@
 //! offload->release latency for the NF series (Figs. 6/7).  Each
 //! `figN_table` regenerates one figure as an aligned table / CSV.
 
+pub mod micro;
+
 use std::rc::Rc;
 
 use crate::config::ExpConfig;

@@ -113,6 +113,14 @@ COMMANDS
                          data and dump each rank's result bytes as JSON
                          (--series handler:scan --out f.json); used by CI
                          to prove handler results == offload/sw results
+  bench                  hot-datapath microbenchmarks (combine, k-way
+                         fold, reassembly, handler dispatch, event queue):
+                         ns/op + allocs/op; --json --out BENCH_N.json
+                         emits the machine-readable trajectory point,
+                         --quick shrinks reps for smoke runs
+  benchdiff              compare two bench JSONs (--prev OLD --cur NEW):
+                         warns on >10% ns/op regressions; advisory unless
+                         --strict
   selftest               verify the XLA artifact path against native compute
   perf                   wallclock breakdown of one PJRT combine call
   help                   this text
@@ -152,6 +160,8 @@ pub fn main_with_args(argv: &[String]) -> Result<()> {
         "fig4" | "fig5" | "fig6" | "fig7" => cmd_figure(&args),
         "sweep" => cmd_sweep(&args),
         "values" => cmd_values(&args),
+        "bench" => cmd_bench(&args),
+        "benchdiff" => cmd_benchdiff(&args),
         "selftest" => cmd_selftest(&args),
         "perf" => cmd_perf(&args),
         other => bail!("unknown command {other:?} (try `nfscan help`)"),
@@ -427,6 +437,73 @@ fn cmd_values(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Hot-datapath microbenchmarks: the perf-trajectory data source
+/// (`BENCH_N.json` artifacts, see perf/README.md).
+fn cmd_bench(args: &Args) -> Result<()> {
+    args.ensure_only(&["json", "out", "quick", "compare"])?;
+    let quick = args.get("quick") == Some("true");
+    if !crate::util::alloc::counting_installed() {
+        println!("note: counting allocator not installed — allocs/op will read n/a");
+    }
+    let results = crate::bench::micro::run_all(quick);
+    print!("{}", crate::bench::micro::table(&results).render());
+    let doc = crate::bench::micro::to_json(&results);
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, doc.pretty()).with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    } else if args.get("json") == Some("true") {
+        print!("{}", doc.pretty());
+    }
+    if let Some(prev_path) = args.get("compare") {
+        let text = std::fs::read_to_string(prev_path)
+            .with_context(|| format!("reading {prev_path}"))?;
+        let prev = crate::metrics::json::Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let (lines, regressions) = crate::bench::micro::compare(&prev, &doc, 0.10);
+        println!("vs {prev_path}:");
+        for l in lines {
+            println!("  {l}");
+        }
+        if regressions > 0 {
+            println!("advisory: {regressions} ns/op regression(s) > 10% vs {prev_path}");
+        }
+    }
+    Ok(())
+}
+
+/// Compare two bench trajectory points (CI's advisory perf-regression
+/// step).  Exit code stays 0 unless --strict.
+fn cmd_benchdiff(args: &Args) -> Result<()> {
+    args.ensure_only(&["prev", "cur", "strict", "threshold"])?;
+    let read = |key: &str| -> Result<crate::metrics::json::Json> {
+        let path = args.get(key).ok_or_else(|| anyhow!("benchdiff needs --{key} FILE"))?;
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        crate::metrics::json::Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))
+    };
+    let prev = read("prev")?;
+    let cur = read("cur")?;
+    let threshold: f64 = match args.get("threshold") {
+        Some(t) => t.parse().with_context(|| "--threshold")?,
+        None => 0.10,
+    };
+    let (lines, regressions) = crate::bench::micro::compare(&prev, &cur, threshold);
+    for l in &lines {
+        println!("{l}");
+    }
+    if regressions > 0 {
+        println!(
+            "warning: {regressions} ns/op regression(s) > {:.0}% (advisory{})",
+            threshold * 100.0,
+            if args.get("strict") == Some("true") { ", strict mode fails" } else { "" }
+        );
+        if args.get("strict") == Some("true") {
+            bail!("{regressions} perf regression(s) in strict mode");
+        }
+    } else {
+        println!("no ns/op regressions > {:.0}%", threshold * 100.0);
+    }
+    Ok(())
+}
+
 /// Legacy single-experiment sweep (`--config F.toml`).
 fn cmd_sweep_single(args: &Args) -> Result<()> {
     args.ensure_only(&["config", "artifacts"])?;
@@ -677,6 +754,67 @@ mod tests {
         let ff = emit("NF_rd", "o.json");
         assert_eq!(vm, ff, "handler scan bytes must equal the fixed-function path");
         assert!(vm.contains("results_hex"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bench_quick_writes_json_and_benchdiff_reads_it() {
+        let dir = std::env::temp_dir().join(format!("nfscan_cli_bench_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("BENCH_test.json");
+        let a = Args::parse(&argv(&["bench", "--quick", "--out", out.to_str().unwrap()]))
+            .unwrap();
+        cmd_bench(&a).unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        let doc = crate::metrics::json::Json::parse(&text).unwrap();
+        assert_eq!(doc.get("schema").unwrap().as_str(), Some("nfscan-bench/1"));
+        // diff a point against itself: no regressions, exit ok even strict
+        let a = Args::parse(&argv(&[
+            "benchdiff",
+            "--prev",
+            out.to_str().unwrap(),
+            "--cur",
+            out.to_str().unwrap(),
+            "--strict",
+        ]))
+        .unwrap();
+        cmd_benchdiff(&a).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn benchdiff_strict_fails_on_regression() {
+        let dir = std::env::temp_dir().join(format!("nfscan_cli_bdiff_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mk = |ns: f64| {
+            format!(
+                "{{\"schema\": \"nfscan-bench/1\", \"entries\": [{{\"name\": \"x\", \
+                 \"ns_per_op\": {ns}}}]}}"
+            )
+        };
+        let prev = dir.join("prev.json");
+        let cur = dir.join("cur.json");
+        std::fs::write(&prev, mk(100.0)).unwrap();
+        std::fs::write(&cur, mk(150.0)).unwrap();
+        let advisory = Args::parse(&argv(&[
+            "benchdiff",
+            "--prev",
+            prev.to_str().unwrap(),
+            "--cur",
+            cur.to_str().unwrap(),
+        ]))
+        .unwrap();
+        cmd_benchdiff(&advisory).unwrap();
+        let strict = Args::parse(&argv(&[
+            "benchdiff",
+            "--prev",
+            prev.to_str().unwrap(),
+            "--cur",
+            cur.to_str().unwrap(),
+            "--strict",
+        ]))
+        .unwrap();
+        assert!(cmd_benchdiff(&strict).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

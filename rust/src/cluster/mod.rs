@@ -535,7 +535,8 @@ impl Cluster {
                 let key = (msg.src, msg.kind as u16, msg.step, msg.epoch);
                 let total_bytes = msg.count as usize * msg.payload.dtype().size();
                 let reasm = &mut self.hosts[rank].sw_reasm;
-                let whole = reasm.add(key, msg.frag_idx, msg.frag_total, msg.payload.clone());
+                let whole =
+                    reasm.add(key, msg.frag_idx, msg.frag_total, msg.count, msg.payload.clone());
                 if let Some(whole) = whole {
                     let full = SwMsg { payload: whole, frag_idx: 0, frag_total: 1, ..msg };
                     let at = now + self.cfg.cost.sw_recv_ns(total_bytes);
@@ -545,7 +546,8 @@ impl Cluster {
             FrameBody::Coll(pkt) => {
                 let key = (pkt.rank as Rank, pkt.msg_type.wire_code(), pkt.step, pkt.epoch());
                 let reasm = &mut self.nics[rank].reasm;
-                let whole = reasm.add(key, pkt.frag_idx, pkt.frag_total, pkt.payload.clone());
+                let whole =
+                    reasm.add(key, pkt.frag_idx, pkt.frag_total, pkt.count, pkt.payload.clone());
                 if let Some(whole) = whole {
                     let full = CollPacket { payload: whole, frag_idx: 0, frag_total: 1, ..pkt };
                     self.activate_engine(now, rank, full.epoch(), None, Some(full));

@@ -240,6 +240,20 @@ impl ExpConfig {
                 self.dtype.size()
             ));
         }
+        // fragment budget: the streaming reassembler's seen-bitmap caps
+        // fragments per message; reject here, at config time, instead of
+        // panicking mid-run at the card
+        let chunk_elems = crate::net::frame::CHUNK_BYTES / self.dtype.size();
+        let frags = self.msg_elems().div_ceil(chunk_elems);
+        if frags > crate::fpga::reassembly::MAX_FRAGS_PER_MSG {
+            return Err(format!(
+                "msg_bytes {} needs {frags} MTU fragments, over the {}-fragment reassembly \
+                 budget (max ~{} bytes)",
+                self.msg_bytes,
+                crate::fpga::reassembly::MAX_FRAGS_PER_MSG,
+                crate::fpga::reassembly::MAX_FRAGS_PER_MSG * crate::net::frame::CHUNK_BYTES
+            ));
+        }
         if self.iters == 0 {
             return Err("iters must be > 0".into());
         }
@@ -354,6 +368,16 @@ mod tests {
         cfg = ExpConfig::default();
         cfg.msg_bytes = 7;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn validation_rejects_over_budget_fragmentation() {
+        let mut cfg = ExpConfig::default();
+        cfg.msg_bytes = 1 << 20; // ~733 fragments: over the 128-frag budget
+        let err = cfg.validate().unwrap_err();
+        assert!(err.contains("fragment"), "{err}");
+        cfg.msg_bytes = 16384; // 12 fragments: fine
+        cfg.validate().unwrap();
     }
 
     #[test]

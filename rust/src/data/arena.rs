@@ -1,0 +1,225 @@
+//! 8-byte-aligned, pooled payload backing — the simulator's answer to the
+//! NetFPGA's preallocated line-rate buffers.
+//!
+//! The hot datapath (combine folds, fragment reassembly, wire buffers)
+//! must not allocate in steady state: the hardware it models streams
+//! payloads through fixed SRAM, and malloc churn was the dominant
+//! simulator cost after the CoW-payload and calendar-queue passes
+//! (EXPERIMENTS.md SSPerf).  An [`AlignedBuf`] is a `Vec<u64>` store —
+//! 8-byte base alignment for free, so element-aligned windows of every
+//! supported dtype can be viewed as `&[i32]`/`&[f32]`/`&[f64]` without
+//! copying — whose storage is recycled through a thread-local free list
+//! when the buffer drops.  One pool per thread matches the sweep runner's
+//! one-`!Send`-engine-per-worker design: payloads never cross threads
+//! (`Rc` enforces it), so the pool needs no locks.
+//!
+//! Pool policy: exact-size bins keyed by word count.  A simulation run
+//! uses a small, fixed set of payload sizes (message size, MTU chunk,
+//! tail chunk), so exact bins hit essentially always; total held bytes
+//! are capped so pathological sweeps cannot hoard memory.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+/// Cap on pooled storage per thread (in u64 words): 16 MB.  Beyond this,
+/// dropped buffers free normally.
+const MAX_HELD_WORDS: usize = 2 << 20;
+
+/// Cap on buffers held per size bin — steady state needs only a handful
+/// of in-flight buffers per size.
+const MAX_PER_BIN: usize = 32;
+
+#[derive(Default)]
+struct Pool {
+    /// Free stores keyed by their word length.
+    bins: HashMap<usize, Vec<Vec<u64>>>,
+    held_words: usize,
+    hits: u64,
+    misses: u64,
+}
+
+impl Pool {
+    fn take(&mut self, words: usize) -> Option<Vec<u64>> {
+        match self.bins.get_mut(&words).and_then(|bin| bin.pop()) {
+            Some(v) => {
+                self.held_words -= v.capacity();
+                self.hits += 1;
+                Some(v)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    fn give(&mut self, v: Vec<u64>) {
+        let words = v.len();
+        if self.held_words + v.capacity() > MAX_HELD_WORDS {
+            return; // over budget: let it free
+        }
+        let bin = self.bins.entry(words).or_default();
+        if bin.len() >= MAX_PER_BIN {
+            return;
+        }
+        self.held_words += v.capacity();
+        bin.push(v);
+    }
+}
+
+thread_local! {
+    static POOL: RefCell<Pool> = RefCell::new(Pool::default());
+}
+
+/// (hits, misses) of this thread's arena pool — recycling observability
+/// for the zero-alloc regression tests and the microbench report.
+pub fn pool_stats() -> (u64, u64) {
+    POOL.with(|p| {
+        let p = p.borrow();
+        (p.hits, p.misses)
+    })
+}
+
+/// Buffers currently parked in this thread's pool.
+pub fn pool_free_buffers() -> usize {
+    POOL.with(|p| p.borrow().bins.values().map(|b| b.len()).sum())
+}
+
+/// An 8-byte-aligned byte buffer backed by a pooled `Vec<u64>`.
+///
+/// `len_b` is the valid byte length; the word store covers it rounded up
+/// to the next multiple of 8 (tail padding is zero).  On drop the word
+/// store returns to the thread-local free list, so steady-state payload
+/// traffic reuses storage instead of hitting the allocator.
+pub struct AlignedBuf {
+    words: Vec<u64>,
+    len_b: usize,
+}
+
+impl AlignedBuf {
+    fn with_store(len_b: usize, zero_all: bool) -> AlignedBuf {
+        let words = len_b.div_ceil(8);
+        // try_with: buffers dropped during thread teardown (after the
+        // pool's TLS slot is destroyed) must not panic — they just free.
+        let recycled = POOL.try_with(|p| p.borrow_mut().take(words)).ok().flatten();
+        let v = match recycled {
+            Some(mut v) => {
+                if zero_all {
+                    // re-zero for the zeroed() contract
+                    v.iter_mut().for_each(|w| *w = 0);
+                } else if let Some(last) = v.last_mut() {
+                    // caller overwrites every payload byte; only the tail
+                    // padding word must not leak a previous payload
+                    *last = 0;
+                }
+                v
+            }
+            None => vec![0u64; words],
+        };
+        debug_assert_eq!(v.len(), words);
+        AlignedBuf { words: v, len_b }
+    }
+
+    /// A zero-filled buffer of `len_b` bytes, recycled from the pool when
+    /// a matching store is free.
+    pub fn zeroed(len_b: usize) -> AlignedBuf {
+        AlignedBuf::with_store(len_b, true)
+    }
+
+    /// A recycled-or-fresh buffer whose first `len_b` bytes the caller
+    /// promises to overwrite entirely (constructors, concat): skips the
+    /// full memset, zeroing only the tail-padding word.
+    pub(crate) fn scratch(len_b: usize) -> AlignedBuf {
+        AlignedBuf::with_store(len_b, false)
+    }
+
+    /// A buffer holding a copy of `bytes` (tail padding zero).
+    pub fn copy_from(bytes: &[u8]) -> AlignedBuf {
+        let mut b = AlignedBuf::scratch(bytes.len());
+        b.bytes_mut().copy_from_slice(bytes);
+        b
+    }
+
+    pub fn len_b(&self) -> usize {
+        self.len_b
+    }
+
+    pub fn bytes(&self) -> &[u8] {
+        // SAFETY: words owns >= len_b initialized bytes; u64 -> u8 only
+        // weakens alignment; the slice lifetime is tied to &self.
+        unsafe { std::slice::from_raw_parts(self.words.as_ptr().cast::<u8>(), self.len_b) }
+    }
+
+    pub fn bytes_mut(&mut self) -> &mut [u8] {
+        // SAFETY: as above, with exclusive access through &mut self.
+        unsafe {
+            std::slice::from_raw_parts_mut(self.words.as_mut_ptr().cast::<u8>(), self.len_b)
+        }
+    }
+}
+
+impl Drop for AlignedBuf {
+    fn drop(&mut self) {
+        let v = std::mem::take(&mut self.words);
+        if v.capacity() == 0 {
+            return;
+        }
+        // ignore TLS-teardown failures: the store then frees normally
+        let _ = POOL.try_with(|p| p.borrow_mut().give(v));
+    }
+}
+
+impl std::fmt::Debug for AlignedBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "AlignedBuf({}B)", self.len_b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeroed_and_copy_roundtrip() {
+        let b = AlignedBuf::zeroed(13);
+        assert_eq!(b.len_b(), 13);
+        assert!(b.bytes().iter().all(|&x| x == 0));
+        let c = AlignedBuf::copy_from(&[1, 2, 3, 4, 5]);
+        assert_eq!(c.bytes(), &[1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn base_is_8_byte_aligned() {
+        for len in [1usize, 7, 8, 9, 4096] {
+            let b = AlignedBuf::zeroed(len);
+            assert_eq!(b.bytes().as_ptr().align_offset(8), 0, "len {len}");
+        }
+    }
+
+    #[test]
+    fn mutation_sticks() {
+        let mut b = AlignedBuf::zeroed(16);
+        b.bytes_mut()[3] = 0xAB;
+        b.bytes_mut()[15] = 0xCD;
+        assert_eq!(b.bytes()[3], 0xAB);
+        assert_eq!(b.bytes()[15], 0xCD);
+    }
+
+    #[test]
+    fn drop_recycles_into_the_pool() {
+        let (h0, _) = pool_stats();
+        // an uncommon size: first alloc misses, second (after drop) hits
+        let n = 6311 * 8;
+        drop(AlignedBuf::zeroed(n));
+        let b = AlignedBuf::zeroed(n);
+        let (h1, _) = pool_stats();
+        assert!(h1 > h0, "second allocation of the same size must reuse the store");
+        assert!(b.bytes().iter().all(|&x| x == 0), "recycled stores are re-zeroed");
+    }
+
+    #[test]
+    fn empty_buffer_ok() {
+        let b = AlignedBuf::zeroed(0);
+        assert!(b.bytes().is_empty());
+    }
+}

@@ -5,6 +5,7 @@
 //! packet (Fig. 1).  Payloads are raw little-endian bytes exactly as they
 //! would sit in a UDP datagram; typed views convert at the edges.
 
+pub mod arena;
 pub mod payload;
 
 pub use payload::Payload;

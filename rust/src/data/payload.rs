@@ -8,29 +8,52 @@
 
 use std::rc::Rc;
 
+use super::arena::AlignedBuf;
 use super::{Dtype, Op};
 
 /// SSPerf notes (EXPERIMENTS.md SSPerf has the iteration log):
 ///
-/// - payloads are copy-on-write (`Rc<Vec<u8>>`): the scan state machines
-///   clone payloads liberally (every send, buffer, fold input); with
-///   plain `Vec<u8>` those deep copies were the top simulator cost at
-///   multi-KB message sizes.  `clone()` is a refcount bump.
+/// - payloads are copy-on-write (`Rc<AlignedBuf>`): the scan state
+///   machines clone payloads liberally (every send, buffer, fold input);
+///   with plain `Vec<u8>` those deep copies were the top simulator cost
+///   at multi-KB message sizes.  `clone()` is a refcount bump.
 /// - `slice()` is a zero-copy *window* (offset+len into the shared
 ///   backing): MTU fragmentation of an N-byte message used to copy all N
 ///   bytes again; now it is O(fragments).
+/// - the backing is an 8-byte-aligned pooled arena buffer
+///   (`data::arena`): dropped payloads recycle their storage through a
+///   thread-local free list, and element-aligned windows expose
+///   **zero-copy typed views** (`as_i32`/`as_f32`/`as_f64`) — the
+///   combine datapath folds in place over them instead of allocating
+///   four `Vec`s per call (decode x2, result, re-encode).
+///
+/// Alignment contract for payload producers: every constructor places
+/// data at an 8-byte-aligned base, and `slice()` windows are element
+/// multiples, so typed views are always aligned in practice.  Code that
+/// somehow holds an unaligned window (hand-built wire slices) still
+/// works: typed *reads* fall back to copying (`to_i32` et al.), and
+/// `as_mut_*` first materializes the window into a fresh aligned buffer.
 #[derive(Clone)]
 pub struct Payload {
     dtype: Dtype,
-    bytes: Rc<Vec<u8>>,
-    /// window into `bytes` (byte offset / byte length)
+    buf: Rc<AlignedBuf>,
+    /// window into `buf` (byte offset / byte length)
     off: usize,
     len_b: usize,
 }
 
 impl PartialEq for Payload {
     fn eq(&self, other: &Self) -> bool {
-        self.dtype == other.dtype && self.bytes() == other.bytes()
+        if self.dtype != other.dtype || self.len_b != other.len_b {
+            return false;
+        }
+        // pointer+window fast path: clones of the same backing with the
+        // same window are equal without touching the bytes — the verify
+        // pass compares cloned results constantly.
+        if Rc::ptr_eq(&self.buf, &other.buf) && self.off == other.off {
+            return true;
+        }
+        self.bytes() == other.bytes()
     }
 }
 
@@ -49,19 +72,41 @@ impl Payload {
             dtype.size()
         );
         let len_b = bytes.len();
-        Payload { dtype, bytes: Rc::new(bytes), off: 0, len_b }
+        Payload { dtype, buf: Rc::new(AlignedBuf::copy_from(&bytes)), off: 0, len_b }
+    }
+
+    /// Zero-filled payload of `n` elements (arena-backed, pooled).  The
+    /// streaming reassembler writes fragments into one of these.
+    pub fn zeroed(dtype: Dtype, n: usize) -> Self {
+        let len_b = n * dtype.size();
+        Payload { dtype, buf: Rc::new(AlignedBuf::zeroed(len_b)), off: 0, len_b }
     }
 
     pub fn from_i32(v: &[i32]) -> Self {
-        Payload::from_bytes(Dtype::I32, v.iter().flat_map(|x| x.to_le_bytes()).collect())
+        let mut buf = AlignedBuf::scratch(v.len() * 4);
+        for (dst, x) in buf.bytes_mut().chunks_exact_mut(4).zip(v) {
+            dst.copy_from_slice(&x.to_le_bytes());
+        }
+        let len_b = v.len() * 4;
+        Payload { dtype: Dtype::I32, buf: Rc::new(buf), off: 0, len_b }
     }
 
     pub fn from_f32(v: &[f32]) -> Self {
-        Payload::from_bytes(Dtype::F32, v.iter().flat_map(|x| x.to_le_bytes()).collect())
+        let mut buf = AlignedBuf::scratch(v.len() * 4);
+        for (dst, x) in buf.bytes_mut().chunks_exact_mut(4).zip(v) {
+            dst.copy_from_slice(&x.to_le_bytes());
+        }
+        let len_b = v.len() * 4;
+        Payload { dtype: Dtype::F32, buf: Rc::new(buf), off: 0, len_b }
     }
 
     pub fn from_f64(v: &[f64]) -> Self {
-        Payload::from_bytes(Dtype::F64, v.iter().flat_map(|x| x.to_le_bytes()).collect())
+        let mut buf = AlignedBuf::scratch(v.len() * 8);
+        for (dst, x) in buf.bytes_mut().chunks_exact_mut(8).zip(v) {
+            dst.copy_from_slice(&x.to_le_bytes());
+        }
+        let len_b = v.len() * 8;
+        Payload { dtype: Dtype::F64, buf: Rc::new(buf), off: 0, len_b }
     }
 
     pub fn dtype(&self) -> Dtype {
@@ -82,16 +127,128 @@ impl Payload {
     }
 
     pub fn bytes(&self) -> &[u8] {
-        &self.bytes[self.off..self.off + self.len_b]
+        &self.buf.bytes()[self.off..self.off + self.len_b]
     }
 
     pub fn into_bytes(self) -> Vec<u8> {
-        if self.off == 0 && self.len_b == self.bytes.len() {
-            Rc::try_unwrap(self.bytes).unwrap_or_else(|rc| (*rc).clone())
-        } else {
-            self.bytes().to_vec()
+        self.bytes().to_vec()
+    }
+
+    /// True when no other payload shares this backing buffer — in-place
+    /// mutation through `as_mut_*` is then copy-free.
+    pub fn is_unique(&self) -> bool {
+        Rc::strong_count(&self.buf) == 1
+    }
+
+    // ---------------------------------------------- zero-copy typed views
+
+    fn typed<T>(&self) -> Option<&[T]> {
+        let b = self.bytes();
+        let es = std::mem::size_of::<T>();
+        debug_assert_eq!(b.len() % es, 0);
+        if b.as_ptr().align_offset(std::mem::align_of::<T>()) != 0 {
+            return None; // unaligned window: caller falls back to copying
+        }
+        // SAFETY: length/alignment checked; i32/f32/f64 admit all bit
+        // patterns; lifetime tied to &self.
+        Some(unsafe { std::slice::from_raw_parts(b.as_ptr().cast::<T>(), b.len() / es) })
+    }
+
+    /// Unique + aligned mutable typed window.  Shared or unaligned
+    /// backings are first materialized into a fresh pooled buffer
+    /// (`Rc::make_mut` semantics) — steady-state folds on uniquely-owned
+    /// payloads never copy and never allocate.
+    fn typed_mut<T>(&mut self) -> &mut [T] {
+        let es = std::mem::size_of::<T>();
+        let shared = Rc::get_mut(&mut self.buf).is_none();
+        let unaligned = self.bytes().as_ptr().align_offset(std::mem::align_of::<T>()) != 0;
+        if shared || unaligned {
+            let copy = AlignedBuf::copy_from(self.bytes());
+            self.buf = Rc::new(copy);
+            self.off = 0;
+        }
+        let (off, len_b) = (self.off, self.len_b);
+        let buf = Rc::get_mut(&mut self.buf).expect("unique after materialization");
+        let b = &mut buf.bytes_mut()[off..off + len_b];
+        debug_assert_eq!(b.as_ptr().align_offset(std::mem::align_of::<T>()), 0);
+        // SAFETY: as in `typed`, with exclusivity through &mut self.
+        unsafe { std::slice::from_raw_parts_mut(b.as_mut_ptr().cast::<T>(), b.len() / es) }
+    }
+
+    /// Zero-copy `&[i32]` view; `None` for an unaligned window (use
+    /// `to_i32` there).  Panics on dtype mismatch.
+    pub fn try_as_i32(&self) -> Option<&[i32]> {
+        assert_eq!(self.dtype, Dtype::I32);
+        self.typed::<i32>()
+    }
+
+    pub fn try_as_f32(&self) -> Option<&[f32]> {
+        assert_eq!(self.dtype, Dtype::F32);
+        self.typed::<f32>()
+    }
+
+    pub fn try_as_f64(&self) -> Option<&[f64]> {
+        assert_eq!(self.dtype, Dtype::F64);
+        self.typed::<f64>()
+    }
+
+    /// Zero-copy `&[i32]` view of an aligned window (the structural
+    /// invariant; see the alignment contract above).
+    pub fn as_i32(&self) -> &[i32] {
+        self.try_as_i32().expect("unaligned i32 window")
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        self.try_as_f32().expect("unaligned f32 window")
+    }
+
+    pub fn as_f64(&self) -> &[f64] {
+        self.try_as_f64().expect("unaligned f64 window")
+    }
+
+    /// In-place mutable `&mut [i32]` view (unique-ownership check; copies
+    /// once when shared).  Panics on dtype mismatch.
+    pub fn as_mut_i32(&mut self) -> &mut [i32] {
+        assert_eq!(self.dtype, Dtype::I32);
+        self.typed_mut::<i32>()
+    }
+
+    pub fn as_mut_f32(&mut self) -> &mut [f32] {
+        assert_eq!(self.dtype, Dtype::F32);
+        self.typed_mut::<f32>()
+    }
+
+    pub fn as_mut_f64(&mut self) -> &mut [f64] {
+        assert_eq!(self.dtype, Dtype::F64);
+        self.typed_mut::<f64>()
+    }
+
+    /// Test-only: a window at an arbitrary BYTE offset into a copy of
+    /// `bytes`.  No public constructor can produce a sub-element-aligned
+    /// window (slice() moves in element multiples), so this is how the
+    /// unaligned fallbacks stay reachable and tested.
+    #[cfg(test)]
+    pub(crate) fn misaligned_for_test(dtype: Dtype, bytes: &[u8], byte_off: usize) -> Payload {
+        assert!(byte_off <= bytes.len() && (bytes.len() - byte_off) % dtype.size() == 0);
+        Payload {
+            dtype,
+            buf: Rc::new(AlignedBuf::copy_from(bytes)),
+            off: byte_off,
+            len_b: bytes.len() - byte_off,
         }
     }
+
+    /// Copy `bytes` into the window at `byte_off`.  Requires unique
+    /// ownership (the streaming reassembler owns its in-progress buffers
+    /// exclusively) — shared backings panic instead of silently forking.
+    pub fn write_bytes_at(&mut self, byte_off: usize, bytes: &[u8]) {
+        assert!(byte_off + bytes.len() <= self.len_b, "write out of window");
+        let off = self.off;
+        let buf = Rc::get_mut(&mut self.buf).expect("write_bytes_at needs unique ownership");
+        buf.bytes_mut()[off + byte_off..off + byte_off + bytes.len()].copy_from_slice(bytes);
+    }
+
+    // --------------------------------------------------- copying accessors
 
     pub fn to_i32(&self) -> Vec<i32> {
         assert_eq!(self.dtype, Dtype::I32);
@@ -125,23 +282,25 @@ impl Payload {
         assert!((start + n) * es <= self.len_b, "slice out of range");
         Payload {
             dtype: self.dtype,
-            bytes: self.bytes.clone(),
+            buf: self.buf.clone(),
             off: self.off + start * es,
             len_b: n * es,
         }
     }
 
-    /// Concatenate chunks back together (reassembly).
+    /// Concatenate chunks back together (one aligned buffer, one copy).
     pub fn concat(chunks: &[Payload]) -> Payload {
         assert!(!chunks.is_empty());
         let dtype = chunks[0].dtype;
-        let mut bytes = Vec::with_capacity(chunks.iter().map(|c| c.byte_len()).sum());
+        let total: usize = chunks.iter().map(|c| c.byte_len()).sum();
+        let mut buf = AlignedBuf::scratch(total);
+        let mut at = 0;
         for c in chunks {
             assert_eq!(c.dtype, dtype);
-            bytes.extend_from_slice(c.bytes());
+            buf.bytes_mut()[at..at + c.byte_len()].copy_from_slice(c.bytes());
+            at += c.byte_len();
         }
-        let len_b = bytes.len();
-        Payload { dtype, bytes: Rc::new(bytes), off: 0, len_b }
+        Payload { dtype, buf: Rc::new(buf), off: 0, len_b: total }
     }
 
     /// Extend to `n` elements with the op identity (in place;
@@ -150,10 +309,7 @@ impl Payload {
         let cur = self.len();
         if cur < n {
             let pad = Payload::identity(self.dtype, op, n - cur);
-            let mut v = Vec::with_capacity(n * self.dtype.size());
-            v.extend_from_slice(self.bytes());
-            v.extend_from_slice(pad.bytes());
-            *self = Payload::from_bytes(self.dtype, v);
+            *self = Payload::concat(&[self.clone(), pad]);
         }
     }
 
@@ -208,6 +364,99 @@ mod tests {
 
         let f = Payload::from_f64(&[1.5, -2.25]);
         assert_eq!(f.to_f64(), vec![1.5, -2.25]);
+    }
+
+    #[test]
+    fn zero_copy_views_match_copying_accessors() {
+        let p = Payload::from_i32(&[7, -9, 0, i32::MAX]);
+        assert_eq!(p.as_i32(), p.to_i32().as_slice());
+        let f = Payload::from_f32(&[0.5, -3.25]);
+        assert_eq!(f.as_f32(), f.to_f32().as_slice());
+        let d = Payload::from_f64(&[1e300, -2.5]);
+        assert_eq!(d.as_f64(), d.to_f64().as_slice());
+    }
+
+    #[test]
+    fn views_of_odd_element_windows() {
+        // windows always start on element boundaries; i32 windows at odd
+        // element offsets are 4-aligned (base is 8-aligned) and must
+        // still view zero-copy
+        let p = Payload::from_i32(&(0..9).collect::<Vec<_>>());
+        let w = p.slice(1, 7);
+        assert_eq!(w.as_i32(), &[1, 2, 3, 4, 5, 6, 7]);
+        let f = Payload::from_f64(&[1.0, 2.0, 3.0]);
+        assert_eq!(f.slice(1, 2).as_f64(), &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn unaligned_window_fallbacks() {
+        // f64 data at byte offset +4: the zero-copy view must refuse, the
+        // copying accessor must work, and as_mut_* must realign by
+        // materializing into a fresh buffer
+        let vals = [1.5f64, -2.5, 3.25];
+        let mut raw = vec![0u8; 4];
+        for v in vals {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        let p = Payload::misaligned_for_test(Dtype::F64, &raw, 4);
+        assert!(p.try_as_f64().is_none(), "window at +4B cannot view as &[f64]");
+        assert_eq!(p.to_f64(), vals);
+        let mut q = p.clone();
+        assert_eq!(q.as_mut_f64(), &vals);
+        q.as_mut_f64()[0] = 9.0;
+        assert!(q.try_as_f64().is_some(), "materialization realigned the window");
+        assert_eq!(q.to_f64(), [9.0, -2.5, 3.25]);
+        assert_eq!(p.to_f64(), vals, "original untouched");
+    }
+
+    #[test]
+    fn as_mut_copies_shared_backing_once() {
+        let p = Payload::from_i32(&[1, 2, 3]);
+        let mut q = p.clone();
+        assert!(!q.is_unique());
+        q.as_mut_i32()[0] = 99;
+        assert!(q.is_unique(), "mutation forked the shared backing");
+        assert_eq!(p.to_i32(), vec![1, 2, 3], "original untouched");
+        assert_eq!(q.to_i32(), vec![99, 2, 3]);
+        // now unique: further mutation is in place (backing unchanged)
+        let before = q.bytes().as_ptr();
+        q.as_mut_i32()[1] = -1;
+        assert_eq!(q.bytes().as_ptr(), before, "unique mutation must not copy");
+        assert_eq!(q.to_i32(), vec![99, -1, 3]);
+    }
+
+    #[test]
+    fn as_mut_on_window_preserves_window_contents() {
+        let p = Payload::from_i32(&(0..6).collect::<Vec<_>>());
+        let mut w = p.slice(2, 3); // shared with p
+        w.as_mut_i32()[0] = 42;
+        assert_eq!(w.to_i32(), vec![42, 3, 4]);
+        assert_eq!(p.to_i32(), vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn eq_fast_path_same_backing() {
+        let p = Payload::from_i32(&(0..100).collect::<Vec<_>>());
+        let q = p.clone();
+        assert_eq!(p, q);
+        assert_eq!(p.slice(10, 5), q.slice(10, 5));
+        // different windows of the same backing compare by bytes
+        assert_ne!(p.slice(0, 5), p.slice(10, 5));
+        // equal bytes in different backings still compare equal
+        assert_eq!(p, Payload::from_i32(&(0..100).collect::<Vec<_>>()));
+    }
+
+    #[test]
+    fn write_bytes_at_requires_unique() {
+        let mut p = Payload::zeroed(Dtype::I32, 4);
+        p.write_bytes_at(4, &7i32.to_le_bytes());
+        assert_eq!(p.to_i32(), vec![0, 7, 0, 0]);
+        let _share = p.clone();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut p = p;
+            p.write_bytes_at(0, &[1, 2, 3, 4]);
+        }));
+        assert!(r.is_err(), "shared backing must refuse raw writes");
     }
 
     #[test]

@@ -84,18 +84,25 @@ impl TreeAllreduce {
         if self.block.is_some() || !self.called || self.children_seen != self.child_bufs.len() {
             return out;
         }
-        // fold children in rank order (child t-1 covers the lowest ranks)
+        // fold children in rank order (child t-1 covers the lowest ranks);
+        // k-way in-place fold: one pooled buffer for the whole chain
         let mut fold: Option<Payload> = None;
         for k in (0..self.t as usize).rev() {
             let c = self.child_bufs[k].clone().unwrap();
             fold = Some(match fold {
-                Some(f) => ctx.combine(&f, &c),
+                Some(mut f) => {
+                    ctx.combine_into(&mut f, &c);
+                    f
+                }
                 None => c,
             });
         }
         let own = self.own.clone().unwrap();
         let block = match fold {
-            Some(f) => ctx.combine(&f, &own),
+            Some(mut f) => {
+                ctx.combine_into(&mut f, &own);
+                f
+            }
             None => own,
         };
         self.block = Some(block.clone());
@@ -238,13 +245,15 @@ impl RdAllreduce {
             }
             let Some(incoming) = self.inbox.remove(&k) else { break };
             let partner = self.partner(k);
-            let value = self.value.take().unwrap();
-            // rank-ordered fold keeps non-commutative ops well-defined
-            self.value = Some(if partner < self.rank {
-                ctx.combine(&incoming, &value)
+            let mut value = self.value.take().unwrap();
+            // rank-ordered in-place fold keeps non-commutative ops
+            // well-defined (and bit-identical to the allocating path)
+            if partner < self.rank {
+                ctx.combine_into_rev(&mut value, &incoming);
             } else {
-                ctx.combine(&value, &incoming)
-            });
+                ctx.combine_into(&mut value, &incoming);
+            }
+            self.value = Some(value);
             self.step = k + 1;
         }
         if self.step == self.logp && !self.delivered {

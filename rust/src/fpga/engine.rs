@@ -58,6 +58,22 @@ impl EngineCtx<'_> {
         self.compute.combine(a, b, self.op).expect("engine combine")
     }
 
+    /// In-place combine `acc = acc (op) b` — identical cycle charge and
+    /// bit-identical result to [`EngineCtx::combine`], but the state
+    /// machines' running accumulators fold without allocating (the
+    /// hardware's preallocated-buffer discipline).
+    pub fn combine_into(&mut self, acc: &mut Payload, b: &Payload) {
+        self.cycles += self.cost.nic_combine_cycles(acc.byte_len());
+        self.compute.combine_into(acc, b, self.op).expect("engine combine");
+    }
+
+    /// In-place combine with the accumulator on the right:
+    /// `acc = a (op) acc` (the rank-ordered folds feed from both sides).
+    pub fn combine_into_rev(&mut self, acc: &mut Payload, a: &Payload) {
+        self.cycles += self.cost.nic_combine_cycles(a.byte_len());
+        self.compute.combine_into_rev(acc, a, self.op).expect("engine combine");
+    }
+
     /// Inverse-subtract (multicast optimization).  Charges NO extra
     /// cycles: the subtraction overlaps packet reception — "we do not
     /// need extra cycles to perform subtraction while streaming the

@@ -80,23 +80,30 @@ impl RdEngine {
         self.rank ^ (1usize << k)
     }
 
-    /// Fold partner data for step k into prefix + partial state.
+    /// Fold partner data for step k into prefix + partial state.  All
+    /// three accumulators fold in place (allocation-free in steady state;
+    /// operand order preserved bit-for-bit).
     fn fold_step(&mut self, ctx: &mut EngineCtx, k: u16, incoming: Payload) {
         let partner = self.partner(k);
-        let partial = self.partial.take().unwrap();
+        let mut partial = self.partial.take().unwrap();
         if partner < self.rank {
             // partner's block sits immediately below ours: it extends both
             // the prefix accumulators and the block partial from the left.
-            let inc = self.recv_inc.take().unwrap();
-            self.recv_inc = Some(ctx.combine(&incoming, &inc));
+            let mut inc = self.recv_inc.take().unwrap();
+            ctx.combine_into_rev(&mut inc, &incoming);
+            self.recv_inc = Some(inc);
             self.recv_exc = Some(match self.recv_exc.take() {
-                Some(exc) => ctx.combine(&incoming, &exc),
+                Some(mut exc) => {
+                    ctx.combine_into_rev(&mut exc, &incoming);
+                    exc
+                }
                 None => incoming.clone(),
             });
-            self.partial = Some(ctx.combine(&incoming, &partial));
+            ctx.combine_into_rev(&mut partial, &incoming);
         } else {
-            self.partial = Some(ctx.combine(&partial, &incoming));
+            ctx.combine_into(&mut partial, &incoming);
         }
+        self.partial = Some(partial);
         self.step = k + 1;
     }
 

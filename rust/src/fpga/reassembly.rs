@@ -1,15 +1,96 @@
-//! Fragment reassembly for messages larger than one MTU.
+//! Streaming fragment reassembly for messages larger than one MTU.
 //!
 //! The paper's hardware streams payload words through the combine pipeline
-//! as they arrive; the simulation's equivalent is to buffer fragments (they
-//! arrive in order on a FIFO link) and activate the state machine when the
-//! message is complete, charging line-rate combine cycles for the whole
-//! payload — identical completion time, simpler state.
+//! as they arrive; the simulation's equivalent buffers fragments (they
+//! arrive in order on a FIFO link) and activates the state machine when
+//! the message is complete, charging line-rate combine cycles for the
+//! whole payload — identical completion time, simpler state.
+//!
+//! The buffering itself is streaming: the whole-message arena buffer is
+//! allocated (from the thread-local pool) on the FIRST fragment and each
+//! fragment is memcpy'd straight into its slot — one copy per byte, like
+//! the card's preallocated receive SRAM.  The previous design buffered a
+//! `Vec<Option<Payload>>` of fragment clones and `concat`ed at the end,
+//! copying every multi-MTU message twice and allocating per message.
+//!
+//! A fragment's slot is derivable from its own shape: `fragment()` cuts
+//! uniform chunks except the last, so a non-last fragment of length L
+//! sits at element `frag_idx * L`, and the last sits at `count - L`.
+//! That keeps the wire format unchanged (no explicit offset field).
 
+use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::hash::Hash;
 
 use crate::data::Payload;
+
+/// Cap on fragments per message (the `seen` bitmap width).  128 MTU-sized
+/// fragments ≈ 180 KB — far beyond any benchmarked message; the card's
+/// reassembly SRAM would overflow long before.
+pub const MAX_FRAGS_PER_MSG: usize = 128;
+
+/// One in-progress message: the preallocated whole-message buffer plus a
+/// received-fragment bitmap.
+#[derive(Debug)]
+struct InProgress {
+    buf: Payload,
+    frag_total: u16,
+    total_elems: u32,
+    seen: u128,
+    /// Uniform non-last fragment length (elements), once observed — the
+    /// slot derivation relies on it, so it is checked, not assumed.
+    chunk_elems: Option<u32>,
+    /// Last fragment's length (elements), once observed.
+    last_elems: Option<u32>,
+}
+
+impl InProgress {
+    fn full_mask(frag_total: u16) -> u128 {
+        if frag_total as usize == MAX_FRAGS_PER_MSG {
+            u128::MAX
+        } else {
+            (1u128 << frag_total) - 1
+        }
+    }
+
+    /// Memcpy one fragment into its slot; true when the message is whole.
+    fn accept(&mut self, frag_idx: u16, frag_total: u16, total_count: u32, p: &Payload) -> bool {
+        assert_eq!(self.frag_total, frag_total, "inconsistent frag_total for message");
+        assert_eq!(self.total_elems, total_count, "inconsistent element count for message");
+        assert_eq!(self.buf.dtype(), p.dtype(), "inconsistent dtype for message");
+        let bit = 1u128 << frag_idx;
+        assert!(self.seen & bit == 0, "duplicate fragment {frag_idx}");
+        self.seen |= bit;
+        let len = p.len();
+        let off_elems = if frag_idx + 1 == frag_total {
+            self.last_elems = Some(len as u32);
+            (total_count as usize).checked_sub(len).expect("last fragment longer than message")
+        } else {
+            // all non-last fragments must share one chunk length — the
+            // slot derivation depends on it
+            match self.chunk_elems {
+                None => self.chunk_elems = Some(len as u32),
+                Some(c) => assert_eq!(
+                    c as usize, len,
+                    "non-uniform fragment length (frag {frag_idx})"
+                ),
+            }
+            frag_idx as usize * len
+        };
+        assert!(off_elems + len <= total_count as usize, "fragment overruns message");
+        // once both lengths are known the fragments must tile the message
+        // exactly — overlaps/gaps would otherwise pass the bitmap check
+        if let (Some(c), Some(l)) = (self.chunk_elems, self.last_elems) {
+            assert_eq!(
+                c as u64 * (frag_total as u64 - 1) + l as u64,
+                total_count as u64,
+                "fragments do not tile the message"
+            );
+        }
+        self.buf.write_bytes_at(off_elems * p.dtype().size(), p.bytes());
+        self.seen == Self::full_mask(frag_total)
+    }
+}
 
 /// In-progress messages keyed by K (src, type, step, epoch — caller's
 /// choice).  Capacity-limited: the NetFPGA has "preallocated buffers";
@@ -17,7 +98,7 @@ use crate::data::Payload;
 /// (the ACK machinery exists to make that impossible).
 #[derive(Debug)]
 pub struct Reassembler<K: Eq + Hash + Clone + std::fmt::Debug> {
-    parts: HashMap<K, Vec<Option<Payload>>>,
+    parts: HashMap<K, InProgress>,
     max_messages: usize,
 }
 
@@ -28,37 +109,57 @@ impl<K: Eq + Hash + Clone + std::fmt::Debug> Reassembler<K> {
         Reassembler { parts: HashMap::with_capacity(max_messages), max_messages }
     }
 
-    /// Add a fragment; returns the complete payload when all fragments of
-    /// the message have arrived.
+    /// Add a fragment (`total_count` = element count of the whole
+    /// message, the packet's `count` field); returns the complete payload
+    /// when all fragments have arrived.
     pub fn add(
         &mut self,
         key: K,
         frag_idx: u16,
         frag_total: u16,
+        total_count: u32,
         payload: Payload,
     ) -> Option<Payload> {
         assert!(frag_total >= 1 && frag_idx < frag_total, "bad fragment indices");
         if frag_total == 1 {
             return Some(payload); // fast path: unfragmented
         }
-        let entry = self.parts.entry(key.clone()).or_insert_with(|| {
-            vec![None; frag_total as usize]
-        });
-        assert_eq!(entry.len(), frag_total as usize, "inconsistent frag_total for {key:?}");
         assert!(
-            self.parts.len() <= self.max_messages,
-            "reassembly buffer overflow (> {} messages) — flow control failed",
-            self.max_messages
+            (frag_total as usize) <= MAX_FRAGS_PER_MSG,
+            "message of {frag_total} fragments exceeds the {MAX_FRAGS_PER_MSG}-fragment \
+             reassembly budget"
         );
-        let entry = self.parts.get_mut(&key).unwrap();
-        assert!(entry[frag_idx as usize].is_none(), "duplicate fragment {frag_idx} for {key:?}");
-        entry[frag_idx as usize] = Some(payload);
-        if entry.iter().all(|p| p.is_some()) {
-            let chunks: Vec<Payload> =
-                self.parts.remove(&key).unwrap().into_iter().map(|p| p.unwrap()).collect();
-            Some(Payload::concat(&chunks))
-        } else {
-            None
+        let live = self.parts.len();
+        match self.parts.entry(key) {
+            Entry::Occupied(mut e) => {
+                let done = e.get_mut().accept(frag_idx, frag_total, total_count, &payload);
+                if done {
+                    Some(e.remove().buf)
+                } else {
+                    None
+                }
+            }
+            Entry::Vacant(v) => {
+                // budget check BEFORE inserting: the violating insert
+                // itself panics, not the one after it
+                assert!(
+                    live < self.max_messages,
+                    "reassembly buffer overflow (> {} messages) — flow control failed",
+                    self.max_messages
+                );
+                let mut ip = InProgress {
+                    buf: Payload::zeroed(payload.dtype(), total_count as usize),
+                    frag_total,
+                    total_elems: total_count,
+                    seen: 0,
+                    chunk_elems: None,
+                    last_elems: None,
+                };
+                let done = ip.accept(frag_idx, frag_total, total_count, &payload);
+                debug_assert!(!done, "frag_total >= 2 cannot complete on one fragment");
+                v.insert(ip);
+                None
+            }
         }
     }
 
@@ -76,7 +177,7 @@ mod tests {
     fn single_fragment_passthrough() {
         let mut r: Reassembler<u32> = Reassembler::new(4);
         let p = Payload::from_i32(&[1, 2]);
-        assert_eq!(r.add(1, 0, 1, p.clone()), Some(p));
+        assert_eq!(r.add(1, 0, 1, 2, p.clone()), Some(p));
         assert_eq!(r.pending(), 0);
     }
 
@@ -85,43 +186,111 @@ mod tests {
         let mut r: Reassembler<u32> = Reassembler::new(4);
         let a = Payload::from_i32(&[1, 2]);
         let b = Payload::from_i32(&[3]);
-        assert_eq!(r.add(7, 0, 2, a), None);
+        assert_eq!(r.add(7, 0, 2, 3, a), None);
         assert_eq!(r.pending(), 1);
-        let whole = r.add(7, 1, 2, b).unwrap();
+        let whole = r.add(7, 1, 2, 3, b).unwrap();
         assert_eq!(whole.to_i32(), vec![1, 2, 3]);
         assert_eq!(r.pending(), 0);
     }
 
     #[test]
     fn out_of_order_fragments_ok() {
+        // the last (short) fragment first: its slot is count - len
         let mut r: Reassembler<u32> = Reassembler::new(4);
-        assert_eq!(r.add(7, 1, 2, Payload::from_i32(&[3])), None);
-        let whole = r.add(7, 0, 2, Payload::from_i32(&[1, 2])).unwrap();
+        assert_eq!(r.add(7, 1, 2, 3, Payload::from_i32(&[3])), None);
+        let whole = r.add(7, 0, 2, 3, Payload::from_i32(&[1, 2])).unwrap();
         assert_eq!(whole.to_i32(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn middle_fragments_any_order() {
+        // 3 uniform + 1 tail, delivered shuffled
+        let chunks: [&[i32]; 4] = [&[0, 1], &[2, 3], &[4, 5], &[6]];
+        for order in [[2u16, 0, 3, 1], [3, 2, 1, 0], [1, 3, 0, 2]] {
+            let mut r: Reassembler<u32> = Reassembler::new(4);
+            let mut whole = None;
+            for idx in order {
+                whole = r.add(9, idx, 4, 7, Payload::from_i32(chunks[idx as usize]));
+            }
+            assert_eq!(whole.unwrap().to_i32(), vec![0, 1, 2, 3, 4, 5, 6], "{order:?}");
+        }
     }
 
     #[test]
     fn interleaved_keys() {
         let mut r: Reassembler<(u32, u32)> = Reassembler::new(4);
-        assert_eq!(r.add((1, 0), 0, 2, Payload::from_i32(&[1])), None);
-        assert_eq!(r.add((2, 0), 0, 2, Payload::from_i32(&[9])), None);
-        assert!(r.add((1, 0), 1, 2, Payload::from_i32(&[2])).is_some());
-        assert!(r.add((2, 0), 1, 2, Payload::from_i32(&[10])).is_some());
+        assert_eq!(r.add((1, 0), 0, 2, 2, Payload::from_i32(&[1])), None);
+        assert_eq!(r.add((2, 0), 0, 2, 2, Payload::from_i32(&[9])), None);
+        assert!(r.add((1, 0), 1, 2, 2, Payload::from_i32(&[2])).is_some());
+        assert!(r.add((2, 0), 1, 2, 2, Payload::from_i32(&[10])).is_some());
     }
 
     #[test]
-    #[should_panic]
+    fn f64_fragments_reassemble() {
+        let mut r: Reassembler<u32> = Reassembler::new(4);
+        assert_eq!(r.add(1, 0, 2, 3, Payload::from_f64(&[1.5, 2.5])), None);
+        let whole = r.add(1, 1, 2, 3, Payload::from_f64(&[3.5])).unwrap();
+        assert_eq!(whole.to_f64(), vec![1.5, 2.5, 3.5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-uniform fragment length")]
+    fn non_uniform_chunks_rejected() {
+        // [3, 2, 2] tiling: slot derivation would corrupt silently, so it
+        // must refuse loudly
+        let mut r: Reassembler<u32> = Reassembler::new(4);
+        r.add(1, 0, 3, 7, Payload::from_i32(&[0, 1, 2]));
+        r.add(1, 1, 3, 7, Payload::from_i32(&[3, 4]));
+    }
+
+    #[test]
+    #[should_panic(expected = "do not tile")]
+    fn gapped_tiling_rejected() {
+        // chunk 3 + last 2 covers 5 of 7 elements: bitmap would complete
+        // with a hole, so the tiling equation must refuse
+        let mut r: Reassembler<u32> = Reassembler::new(4);
+        r.add(1, 0, 2, 7, Payload::from_i32(&[0, 1, 2]));
+        r.add(1, 1, 2, 7, Payload::from_i32(&[5, 6]));
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate fragment")]
     fn duplicate_fragment_panics() {
         let mut r: Reassembler<u32> = Reassembler::new(4);
-        r.add(7, 0, 2, Payload::from_i32(&[1]));
-        r.add(7, 0, 2, Payload::from_i32(&[1]));
+        r.add(7, 0, 2, 3, Payload::from_i32(&[1, 2]));
+        r.add(7, 0, 2, 3, Payload::from_i32(&[1, 2]));
     }
 
     #[test]
-    #[should_panic]
-    fn overflow_panics() {
+    #[should_panic(expected = "reassembly buffer overflow")]
+    fn overflow_panics_at_the_violating_insert() {
         let mut r: Reassembler<u32> = Reassembler::new(1);
-        r.add(1, 0, 2, Payload::from_i32(&[1]));
-        r.add(2, 0, 2, Payload::from_i32(&[1]));
+        r.add(1, 0, 2, 2, Payload::from_i32(&[1]));
+        r.add(2, 0, 2, 2, Payload::from_i32(&[1]));
+    }
+
+    #[test]
+    fn whole_message_reuses_pooled_storage() {
+        // same-shaped messages recycle the whole-message buffer: after
+        // the first, pool hits must grow
+        let mut r: Reassembler<u32> = Reassembler::new(4);
+        let n = 1217usize; // uncommon size so the bin is ours
+        let a: Vec<i32> = (0..n as i32).collect();
+        let head = Payload::from_i32(&a[..1000]);
+        let tail = Payload::from_i32(&a[1000..]);
+        let first = {
+            r.add(1, 0, 2, n as u32, head.clone());
+            r.add(1, 1, 2, n as u32, tail.clone()).unwrap()
+        };
+        assert_eq!(first.to_i32(), a);
+        drop(first);
+        let (h0, _) = crate::data::arena::pool_stats();
+        let second = {
+            r.add(2, 0, 2, n as u32, head);
+            r.add(2, 1, 2, n as u32, tail).unwrap()
+        };
+        assert_eq!(second.to_i32(), a);
+        let (h1, _) = crate::data::arena::pool_stats();
+        assert!(h1 > h0, "second message must draw its buffer from the pool");
     }
 }

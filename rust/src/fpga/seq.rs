@@ -102,7 +102,9 @@ impl SeqEngine {
                 });
             }
             if self.result.is_none() {
-                let prefix = ctx.combine(&upstream, &own);
+                // prefix = upstream (op) own, folded in place
+                let mut prefix = upstream.clone();
+                ctx.combine_into(&mut prefix, &own);
                 self.result = Some(if self.coll.inclusive() { prefix.clone() } else { upstream });
                 if !self.is_tail() && !self.sent_data {
                     self.sent_data = true;

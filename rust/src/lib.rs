@@ -37,3 +37,10 @@ pub mod sim;
 pub mod sweep;
 pub mod trace;
 pub mod util;
+
+// The lib test binary runs the allocation-counting assertions (pool
+// behavior, counting-allocator self-test); integration tests and the
+// nfscan binary install their own copies of the same allocator.
+#[cfg(test)]
+#[global_allocator]
+static TEST_ALLOC: util::alloc::CountingAllocator = util::alloc::CountingAllocator;

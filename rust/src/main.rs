@@ -3,6 +3,11 @@
 //! See `nfscan help` (or `cli::print_help`) for commands.  All the logic
 //! lives in the library; this binary only parses argv and reports errors.
 
+// Counting allocator: lets `nfscan bench` report allocs/op for the hot
+// datapath (two relaxed atomic increments per malloc — noise elsewhere).
+#[global_allocator]
+static ALLOC: nfscan::util::alloc::CountingAllocator = nfscan::util::alloc::CountingAllocator;
+
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if let Err(e) = nfscan::cli::main_with_args(&argv) {

@@ -60,12 +60,14 @@ impl SwRdAllreduce {
             }
             let Some(incoming) = self.inbox.remove(&k) else { break };
             let partner = self.partner(k);
-            let value = self.value.take().unwrap();
-            self.value = Some(if partner < self.rank {
-                ctx.combine(&incoming, &value)
+            // rank-ordered in-place fold (mirrors fpga::allreduce)
+            let mut value = self.value.take().unwrap();
+            if partner < self.rank {
+                ctx.combine_into_rev(&mut value, &incoming);
             } else {
-                ctx.combine(&value, &incoming)
-            });
+                ctx.combine_into(&mut value, &incoming);
+            }
+            self.value = Some(value);
             self.step = k + 1;
         }
         if self.step == self.logp && !self.completed {

@@ -65,18 +65,25 @@ impl SwBinomial {
         if self.block.is_some() || !self.called || self.children_seen != self.child_bufs.len() {
             return out;
         }
+        // k-way in-place fold: one pooled buffer for the whole chain
         let mut fold: Option<Payload> = None;
         for k in (0..self.t as usize).rev() {
             let c = self.child_bufs[k].clone().unwrap();
             fold = Some(match fold {
-                Some(f) => ctx.combine(&f, &c),
+                Some(mut f) => {
+                    ctx.combine_into(&mut f, &c);
+                    f
+                }
                 None => c,
             });
         }
         self.children_fold = fold.clone();
         let own = self.own.clone().unwrap();
         let block = match fold {
-            Some(f) => ctx.combine(&f, &own),
+            Some(mut f) => {
+                ctx.combine_into(&mut f, &own);
+                f
+            }
             None => own,
         };
         self.block = Some(block.clone());
@@ -103,8 +110,10 @@ impl SwBinomial {
             return Vec::new();
         }
         let down = self.down_in.clone().unwrap();
-        let block = self.block.clone().unwrap();
-        self.prefix = Some(ctx.combine(&down, &block));
+        // prefix = down (op) block, folded in place
+        let mut prefix = self.block.clone().unwrap();
+        ctx.combine_into_rev(&mut prefix, &down);
+        self.prefix = Some(prefix);
         self.finish(ctx)
     }
 
@@ -131,7 +140,11 @@ impl SwBinomial {
                 prefix
             } else {
                 match (&self.down_in, &self.children_fold) {
-                    (Some(d), Some(cf)) => ctx.combine(d, cf),
+                    (Some(d), Some(cf)) => {
+                        let mut r = cf.clone();
+                        ctx.combine_into_rev(&mut r, d); // r = d (op) cf
+                        r
+                    }
                     (Some(d), None) => d.clone(),
                     (None, Some(cf)) => cf.clone(),
                     (None, None) => ctx.identity(self.own.as_ref().unwrap()),

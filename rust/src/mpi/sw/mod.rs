@@ -47,6 +47,19 @@ impl SwCtx<'_> {
         self.compute.combine(a, b, self.op).expect("sw combine")
     }
 
+    /// In-place combine `acc = acc (op) b` — same time charge and
+    /// bit-identical result as [`SwCtx::combine`], without allocating.
+    pub fn combine_into(&mut self, acc: &mut Payload, b: &Payload) {
+        self.elapsed_ns += self.cost.host_combine_ns(acc.byte_len());
+        self.compute.combine_into(acc, b, self.op).expect("sw combine");
+    }
+
+    /// In-place combine with the accumulator on the right: `acc = a (op) acc`.
+    pub fn combine_into_rev(&mut self, acc: &mut Payload, a: &Payload) {
+        self.elapsed_ns += self.cost.host_combine_ns(a.byte_len());
+        self.compute.combine_into_rev(acc, a, self.op).expect("sw combine");
+    }
+
     pub fn identity(&self, like: &Payload) -> Payload {
         Payload::identity(like.dtype(), self.op, like.len())
     }

@@ -69,18 +69,24 @@ impl SwRd {
             }
             let Some(incoming) = self.inbox.remove(&k) else { break };
             let partner = self.partner(k);
-            let partial = self.partial.take().unwrap();
+            // accumulators fold in place (mirrors fpga::rd::fold_step)
+            let mut partial = self.partial.take().unwrap();
             if partner < self.rank {
-                let inc = self.recv_inc.take().unwrap();
-                self.recv_inc = Some(ctx.combine(&incoming, &inc));
+                let mut inc = self.recv_inc.take().unwrap();
+                ctx.combine_into_rev(&mut inc, &incoming);
+                self.recv_inc = Some(inc);
                 self.recv_exc = Some(match self.recv_exc.take() {
-                    Some(exc) => ctx.combine(&incoming, &exc),
+                    Some(mut exc) => {
+                        ctx.combine_into_rev(&mut exc, &incoming);
+                        exc
+                    }
                     None => incoming.clone(),
                 });
-                self.partial = Some(ctx.combine(&incoming, &partial));
+                ctx.combine_into_rev(&mut partial, &incoming);
             } else {
-                self.partial = Some(ctx.combine(&partial, &incoming));
+                ctx.combine_into(&mut partial, &incoming);
             }
+            self.partial = Some(partial);
             self.step = k + 1;
         }
         if self.step == self.logp && !self.completed {

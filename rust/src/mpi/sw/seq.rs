@@ -48,7 +48,9 @@ impl SwSeq {
             out.push(SwAction::Complete { result });
         } else if let Some(upstream) = self.upstream.clone() {
             self.completed = true;
-            let prefix = ctx.combine(&upstream, &own);
+            // prefix = upstream (op) own, folded in place
+            let mut prefix = upstream.clone();
+            ctx.combine_into(&mut prefix, &own);
             if self.rank + 1 < self.p {
                 out.push(SwAction::Send {
                     dst: self.rank + 1,

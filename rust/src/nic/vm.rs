@@ -189,6 +189,13 @@ fn as_vec<'a>(v: &'a Val, prog: &str, pc: usize) -> &'a Payload {
     }
 }
 
+fn into_vec(v: Val, prog: &str, pc: usize) -> Payload {
+    match v {
+        Val::Vec(p) => p,
+        other => panic!("{prog}@{pc}: expected payload register, got {other:?}"),
+    }
+}
+
 /// Run one activation of `prog` over `flow`, returning the NIC actions
 /// it produced.  Instruction/stall counts and datapath cycles are
 /// charged into `ctx` (the NIC adds pipeline latency and converts to
@@ -304,10 +311,31 @@ pub fn run(
                 regs[r(dst)] = Val::Int(v);
             }
             Instr::Combine { dst, a, b } => {
-                let res = {
+                // the accumulator forms `dst == a` / `dst == b` (every
+                // program fold) take the value OUT of the destination
+                // register and fold in place — zero allocations once the
+                // register uniquely owns its payload.  Operand order is
+                // preserved bit-for-bit in all cases.
+                let res = if a == b {
                     let x = as_vec(&regs[r(a)], prog.name, at).clone();
-                    let y = as_vec(&regs[r(b)], prog.name, at).clone();
-                    ctx.combine(&x, &y)
+                    let mut v = x.clone();
+                    ctx.combine_into(&mut v, &x);
+                    v
+                } else if dst == a {
+                    let mut v = into_vec(std::mem::take(&mut regs[r(a)]), prog.name, at);
+                    let y = as_vec(&regs[r(b)], prog.name, at);
+                    ctx.combine_into(&mut v, y); // v = a (op) b
+                    v
+                } else if dst == b {
+                    let mut v = into_vec(std::mem::take(&mut regs[r(b)]), prog.name, at);
+                    let x = as_vec(&regs[r(a)], prog.name, at);
+                    ctx.combine_into_rev(&mut v, x); // v = a (op) b
+                    v
+                } else {
+                    let mut v = as_vec(&regs[r(a)], prog.name, at).clone();
+                    let y = as_vec(&regs[r(b)], prog.name, at);
+                    ctx.combine_into(&mut v, y);
+                    v
                 };
                 regs[r(dst)] = Val::Vec(res);
             }

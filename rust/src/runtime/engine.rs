@@ -11,6 +11,28 @@ pub trait Compute {
     /// Elementwise `a (op) b`; shapes and dtypes must match.
     fn combine(&self, a: &Payload, b: &Payload, op: Op) -> Result<Payload>;
 
+    /// In-place left fold: `acc = acc (op) b`.  The native engine folds
+    /// over the payloads' zero-copy typed views with zero steady-state
+    /// allocations (a shared accumulator is materialized once into a
+    /// pooled arena buffer); the default delegates to [`Compute::combine`]
+    /// so engines without an in-place path stay bit-identical.
+    fn combine_into(&self, acc: &mut Payload, b: &Payload, op: Op) -> Result<()> {
+        let r = self.combine(acc, b, op)?;
+        *acc = r;
+        Ok(())
+    }
+
+    /// In-place right fold: `acc = a (op) acc`.  Kept separate from
+    /// [`Compute::combine_into`] because operand order must be preserved
+    /// bit-for-bit (Max/Min on IEEE floats are not symmetric in the
+    /// signed-zero/NaN corners), and the state machines fold from both
+    /// sides.
+    fn combine_into_rev(&self, acc: &mut Payload, a: &Payload, op: Op) -> Result<()> {
+        let r = self.combine(a, acc, op)?;
+        *acc = r;
+        Ok(())
+    }
+
     /// Prefix scan of a payload (any length; engines chunk internally).
     fn scan(&self, x: &Payload, op: Op, inclusive: bool) -> Result<Payload>;
 
@@ -56,9 +78,12 @@ pub fn oracle_prefix(
         return Ok(Payload::identity(c.dtype(), op, c.len()));
     }
     let last = if inclusive { rank } else { rank - 1 };
+    // k-way in-place fold: the first combine_into materializes the cloned
+    // head into a pooled buffer, every later step folds allocation-free —
+    // O(1) buffer traffic instead of O(k) allocations.
     let mut acc = contributions[0].clone();
     for c in &contributions[1..=last] {
-        acc = engine.combine(&acc, c, op)?;
+        engine.combine_into(&mut acc, c, op)?;
     }
     Ok(acc)
 }

@@ -26,6 +26,26 @@ macro_rules! zip_op {
     };
 }
 
+// In-place variants over the arena-backed typed views: `acc[i] = f(acc[i],
+// b[i])` (fwd) / `acc[i] = f(b[i], acc[i])` (rev).  Same closures, same
+// per-element order as zip_op, so results are bit-identical to `combine` —
+// the fold-equivalence prop test (tests/fold_equivalence.rs) pins this.
+macro_rules! fold_fwd {
+    ($acc:expr, $b:expr, $f:expr) => {
+        for (x, &y) in $acc.iter_mut().zip($b.iter()) {
+            *x = $f(*x, y);
+        }
+    };
+}
+
+macro_rules! fold_rev {
+    ($acc:expr, $b:expr, $f:expr) => {
+        for (x, &y) in $acc.iter_mut().zip($b.iter()) {
+            *x = $f(y, *x);
+        }
+    };
+}
+
 // SSPerf iteration 4 (REVERTED): a byte-level combine loop (one output
 // allocation, no typed intermediates) measured 66% SLOWER than this
 // typed-vector path — per-element [u8;N] encode/decode defeats the
@@ -67,25 +87,140 @@ fn apply_f64(op: Op, a: &[f64], b: &[f64]) -> Vec<f64> {
     }
 }
 
+// NOTE (SSPerf): the per-op match stays INSIDE each fold fn, exactly like
+// the apply fns above — the fn-pointer-hoisting regression applies to the
+// in-place path just the same (EXPERIMENTS.md SSPerf iteration 3).
+fn fold_i32(op: Op, acc: &mut [i32], b: &[i32]) {
+    match op {
+        Op::Sum => fold_fwd!(acc, b, |x: i32, y: i32| x.wrapping_add(y)),
+        Op::Prod => fold_fwd!(acc, b, |x: i32, y: i32| x.wrapping_mul(y)),
+        Op::Max => fold_fwd!(acc, b, |x: i32, y: i32| x.max(y)),
+        Op::Min => fold_fwd!(acc, b, |x: i32, y: i32| x.min(y)),
+        Op::Band => fold_fwd!(acc, b, |x: i32, y: i32| x & y),
+        Op::Bor => fold_fwd!(acc, b, |x: i32, y: i32| x | y),
+        Op::Bxor => fold_fwd!(acc, b, |x: i32, y: i32| x ^ y),
+    }
+}
+
+fn fold_rev_i32(op: Op, acc: &mut [i32], a: &[i32]) {
+    match op {
+        Op::Sum => fold_rev!(acc, a, |x: i32, y: i32| x.wrapping_add(y)),
+        Op::Prod => fold_rev!(acc, a, |x: i32, y: i32| x.wrapping_mul(y)),
+        Op::Max => fold_rev!(acc, a, |x: i32, y: i32| x.max(y)),
+        Op::Min => fold_rev!(acc, a, |x: i32, y: i32| x.min(y)),
+        Op::Band => fold_rev!(acc, a, |x: i32, y: i32| x & y),
+        Op::Bor => fold_rev!(acc, a, |x: i32, y: i32| x | y),
+        Op::Bxor => fold_rev!(acc, a, |x: i32, y: i32| x ^ y),
+    }
+}
+
+fn fold_f32(op: Op, acc: &mut [f32], b: &[f32]) {
+    match op {
+        Op::Sum => fold_fwd!(acc, b, |x: f32, y: f32| x + y),
+        Op::Prod => fold_fwd!(acc, b, |x: f32, y: f32| x * y),
+        Op::Max => fold_fwd!(acc, b, |x: f32, y: f32| x.max(y)),
+        Op::Min => fold_fwd!(acc, b, |x: f32, y: f32| x.min(y)),
+        _ => unreachable!("bitwise on float rejected earlier"),
+    }
+}
+
+fn fold_rev_f32(op: Op, acc: &mut [f32], a: &[f32]) {
+    match op {
+        Op::Sum => fold_rev!(acc, a, |x: f32, y: f32| x + y),
+        Op::Prod => fold_rev!(acc, a, |x: f32, y: f32| x * y),
+        Op::Max => fold_rev!(acc, a, |x: f32, y: f32| x.max(y)),
+        Op::Min => fold_rev!(acc, a, |x: f32, y: f32| x.min(y)),
+        _ => unreachable!("bitwise on float rejected earlier"),
+    }
+}
+
+fn fold_f64(op: Op, acc: &mut [f64], b: &[f64]) {
+    match op {
+        Op::Sum => fold_fwd!(acc, b, |x: f64, y: f64| x + y),
+        Op::Prod => fold_fwd!(acc, b, |x: f64, y: f64| x * y),
+        Op::Max => fold_fwd!(acc, b, |x: f64, y: f64| x.max(y)),
+        Op::Min => fold_fwd!(acc, b, |x: f64, y: f64| x.min(y)),
+        _ => unreachable!("bitwise on float rejected earlier"),
+    }
+}
+
+fn fold_rev_f64(op: Op, acc: &mut [f64], a: &[f64]) {
+    match op {
+        Op::Sum => fold_rev!(acc, a, |x: f64, y: f64| x + y),
+        Op::Prod => fold_rev!(acc, a, |x: f64, y: f64| x * y),
+        Op::Max => fold_rev!(acc, a, |x: f64, y: f64| x.max(y)),
+        Op::Min => fold_rev!(acc, a, |x: f64, y: f64| x.min(y)),
+        _ => unreachable!("bitwise on float rejected earlier"),
+    }
+}
+
+/// Shape/dtype/op validation shared by the allocating and in-place paths.
+fn check_combine(a: &Payload, b: &Payload, op: Op) -> Result<()> {
+    if a.dtype() != b.dtype() || a.len() != b.len() {
+        bail!(
+            "combine shape/dtype mismatch: {:?}x{} vs {:?}x{}",
+            a.dtype(),
+            a.len(),
+            b.dtype(),
+            b.len()
+        );
+    }
+    if !op.valid_for(a.dtype()) {
+        bail!("{} invalid for {}", op.name(), a.dtype().name());
+    }
+    Ok(())
+}
+
 impl Compute for NativeEngine {
     fn combine(&self, a: &Payload, b: &Payload, op: Op) -> Result<Payload> {
-        if a.dtype() != b.dtype() || a.len() != b.len() {
-            bail!(
-                "combine shape/dtype mismatch: {:?}x{} vs {:?}x{}",
-                a.dtype(),
-                a.len(),
-                b.dtype(),
-                b.len()
-            );
-        }
-        if !op.valid_for(a.dtype()) {
-            bail!("{} invalid for {}", op.name(), a.dtype().name());
-        }
+        check_combine(a, b, op)?;
         Ok(match a.dtype() {
             Dtype::I32 => Payload::from_i32(&apply_i32(op, &a.to_i32(), &b.to_i32())),
             Dtype::F32 => Payload::from_f32(&apply_f32(op, &a.to_f32(), &b.to_f32())),
             Dtype::F64 => Payload::from_f64(&apply_f64(op, &a.to_f64(), &b.to_f64())),
         })
+    }
+
+    fn combine_into(&self, acc: &mut Payload, b: &Payload, op: Op) -> Result<()> {
+        check_combine(acc, b, op)?;
+        // the accumulator view is always producible in place (as_mut_*
+        // materializes shared/unaligned windows); only an unaligned `b`
+        // window needs the copying fallback — structurally impossible for
+        // arena-backed payloads, kept for hand-built wire slices.
+        match acc.dtype() {
+            Dtype::I32 => match b.try_as_i32() {
+                Some(bs) => fold_i32(op, acc.as_mut_i32(), bs),
+                None => fold_i32(op, acc.as_mut_i32(), &b.to_i32()),
+            },
+            Dtype::F32 => match b.try_as_f32() {
+                Some(bs) => fold_f32(op, acc.as_mut_f32(), bs),
+                None => fold_f32(op, acc.as_mut_f32(), &b.to_f32()),
+            },
+            Dtype::F64 => match b.try_as_f64() {
+                Some(bs) => fold_f64(op, acc.as_mut_f64(), bs),
+                None => fold_f64(op, acc.as_mut_f64(), &b.to_f64()),
+            },
+        }
+        Ok(())
+    }
+
+    fn combine_into_rev(&self, acc: &mut Payload, a: &Payload, op: Op) -> Result<()> {
+        check_combine(a, acc, op)?;
+        match acc.dtype() {
+            Dtype::I32 => match a.try_as_i32() {
+                Some(xs) => fold_rev_i32(op, acc.as_mut_i32(), xs),
+                None => fold_rev_i32(op, acc.as_mut_i32(), &a.to_i32()),
+            },
+            Dtype::F32 => match a.try_as_f32() {
+                Some(xs) => fold_rev_f32(op, acc.as_mut_f32(), xs),
+                None => fold_rev_f32(op, acc.as_mut_f32(), &a.to_f32()),
+            },
+            Dtype::F64 => match a.try_as_f64() {
+                Some(xs) => fold_rev_f64(op, acc.as_mut_f64(), xs),
+                None => fold_rev_f64(op, acc.as_mut_f64(), &a.to_f64()),
+            },
+        }
+        Ok(())
     }
 
     fn scan(&self, x: &Payload, op: Op, inclusive: bool) -> Result<Payload> {
@@ -222,5 +357,107 @@ mod tests {
         let e = NativeEngine::new();
         let f = Payload::from_f32(&[1.0]);
         assert!(e.derive(&f, &f).is_err());
+    }
+
+    #[test]
+    fn combine_into_matches_combine_all_ops() {
+        let e = NativeEngine::new();
+        let a = Payload::from_i32(&[6, -3, 0b1100, i32::MAX]);
+        let b = Payload::from_i32(&[2, 5, 0b1010, 1]);
+        for op in Op::ALL {
+            let want = e.combine(&a, &b, op).unwrap();
+            let mut acc = a.clone();
+            e.combine_into(&mut acc, &b, op).unwrap();
+            assert_eq!(acc.bytes(), want.bytes(), "{op:?} fwd");
+            let want_rev = e.combine(&b, &a, op).unwrap();
+            let mut acc = a.clone();
+            e.combine_into_rev(&mut acc, &b, op).unwrap();
+            assert_eq!(acc.bytes(), want_rev.bytes(), "{op:?} rev");
+        }
+    }
+
+    #[test]
+    fn combine_into_floats_bit_identical() {
+        let e = NativeEngine::new();
+        let a = Payload::from_f64(&[1.5, -0.0, f64::MAX]);
+        let b = Payload::from_f64(&[0.5, 0.0, f64::MAX]);
+        for op in [Op::Sum, Op::Prod, Op::Max, Op::Min] {
+            let want = e.combine(&a, &b, op).unwrap();
+            let mut acc = a.clone();
+            e.combine_into(&mut acc, &b, op).unwrap();
+            assert_eq!(acc.bytes(), want.bytes(), "{op:?}");
+        }
+    }
+
+    #[test]
+    fn combine_into_unique_acc_runs_in_place() {
+        let e = NativeEngine::new();
+        let mut acc = Payload::from_i32(&[1, 2, 3]);
+        let b = Payload::from_i32(&[10, 20, 30]);
+        e.combine_into(&mut acc, &b, Op::Sum).unwrap(); // acc unique from birth
+        let before = acc.bytes().as_ptr();
+        e.combine_into(&mut acc, &b, Op::Sum).unwrap();
+        assert_eq!(acc.bytes().as_ptr(), before, "unique accumulator must not copy");
+        assert_eq!(acc.to_i32(), vec![21, 42, 63]);
+    }
+
+    #[test]
+    fn combine_into_shared_acc_leaves_original_untouched() {
+        let e = NativeEngine::new();
+        let orig = Payload::from_i32(&[1, 2]);
+        let mut acc = orig.clone();
+        e.combine_into(&mut acc, &Payload::from_i32(&[5, 5]), Op::Sum).unwrap();
+        assert_eq!(acc.to_i32(), vec![6, 7]);
+        assert_eq!(orig.to_i32(), vec![1, 2], "CoW fork must protect the sharer");
+    }
+
+    #[test]
+    fn combine_into_rejects_mismatches() {
+        let e = NativeEngine::new();
+        let mut a = Payload::from_i32(&[1]);
+        assert!(e.combine_into(&mut a, &Payload::from_i32(&[1, 2]), Op::Sum).is_err());
+        let mut f = Payload::from_f32(&[1.0]);
+        assert!(e.combine_into(&mut f, &Payload::from_f32(&[2.0]), Op::Band).is_err());
+    }
+
+    #[test]
+    fn combine_into_unaligned_operand_uses_copying_fallback() {
+        // a sub-element-aligned window (only constructible via the test
+        // hook) must route through the to_* fallback and still match the
+        // allocating path bit-for-bit, in both operand positions
+        let e = NativeEngine::new();
+        let vals = [1.5f64, -2.5];
+        let mut raw = vec![0u8; 4];
+        for v in vals {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        let misaligned = Payload::misaligned_for_test(Dtype::F64, &raw, 4);
+        let a = Payload::from_f64(&[10.0, 20.0]);
+        let want = e.combine(&a, &misaligned, Op::Sum).unwrap();
+        let mut acc = a.clone();
+        e.combine_into(&mut acc, &misaligned, Op::Sum).unwrap();
+        assert_eq!(acc.bytes(), want.bytes(), "fwd with unaligned b");
+        let want_rev = e.combine(&misaligned, &a, Op::Sum).unwrap();
+        let mut acc = a.clone();
+        e.combine_into_rev(&mut acc, &misaligned, Op::Sum).unwrap();
+        assert_eq!(acc.bytes(), want_rev.bytes(), "rev with unaligned a");
+        // unaligned ACCUMULATOR: as_mut_* realigns by materializing
+        let mut acc = misaligned.clone();
+        e.combine_into(&mut acc, &a, Op::Sum).unwrap();
+        let want_acc = e.combine(&misaligned, &a, Op::Sum).unwrap();
+        assert_eq!(acc.bytes(), want_acc.bytes(), "unaligned accumulator");
+    }
+
+    #[test]
+    fn combine_into_on_windows() {
+        // non-zero-offset windows (MTU chunks) fold correctly and do not
+        // disturb the rest of the shared message
+        let e = NativeEngine::new();
+        let msg = Payload::from_i32(&(0..8).collect::<Vec<_>>());
+        let mut acc = msg.slice(3, 4);
+        let b = Payload::from_i32(&[100, 100, 100, 100]);
+        e.combine_into(&mut acc, &b, Op::Sum).unwrap();
+        assert_eq!(acc.to_i32(), vec![103, 104, 105, 106]);
+        assert_eq!(msg.to_i32(), (0..8).collect::<Vec<_>>());
     }
 }

@@ -1,0 +1,86 @@
+//! A counting global allocator: `System` plus relaxed atomic counters.
+//!
+//! The hot-datapath work (arena payloads, in-place combine, streaming
+//! reassembly) claims *zero steady-state allocations*; that claim is only
+//! worth anything if it is measured.  The `nfscan` binary, the
+//! `fold_reassembly` bench and the `alloc_free` regression test install
+//! this allocator via `#[global_allocator]` and read the counters around
+//! their hot loops — two relaxed increments per malloc, unmeasurable
+//! against the allocator itself.
+//!
+//! Library builds that do NOT install it (other benches, downstream
+//! users) see counters frozen at zero; [`counting_installed`] probes for
+//! that so reports can say "n/a" instead of lying with 0.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static DEALLOCS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Install with `#[global_allocator] static A: CountingAllocator =
+/// CountingAllocator;` in a binary/test root.
+pub struct CountingAllocator;
+
+// SAFETY: defers every operation to `System`; the counters are plain
+// atomics with no allocation of their own.
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        DEALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // one allocation event (a grow/shrink hits the allocator once)
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    // alloc_zeroed: the default impl routes through self.alloc -> counted
+}
+
+/// Total allocation events since process start (0 if not installed).
+pub fn allocation_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Total deallocation events since process start.
+pub fn deallocation_count() -> u64 {
+    DEALLOCS.load(Ordering::Relaxed)
+}
+
+/// Total bytes requested since process start.
+pub fn allocated_bytes() -> u64 {
+    ALLOC_BYTES.load(Ordering::Relaxed)
+}
+
+/// True iff the counting allocator is actually the global allocator:
+/// performs one throwaway heap allocation and checks the counter moved.
+pub fn counting_installed() -> bool {
+    let before = allocation_count();
+    let probe = std::hint::black_box(Box::new(0xA5u8));
+    drop(std::hint::black_box(probe));
+    allocation_count() != before
+}
+
+#[cfg(test)]
+mod tests {
+    // the lib test binary installs CountingAllocator (see lib.rs), so the
+    // probe must see it
+    #[test]
+    fn installed_in_lib_tests_and_counts() {
+        assert!(super::counting_installed());
+        let a0 = super::allocation_count();
+        let v = std::hint::black_box(vec![1u8, 2, 3]);
+        drop(std::hint::black_box(v));
+        assert!(super::allocation_count() > a0);
+        assert!(super::allocated_bytes() >= 3);
+    }
+}

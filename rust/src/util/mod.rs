@@ -1,5 +1,8 @@
 //! Small shared utilities: power-of-two bit math used by every scan
-//! algorithm, and byte/duration formatting for reports.
+//! algorithm, byte/duration formatting for reports, and the counting
+//! allocator behind the zero-alloc regression gate.
+
+pub mod alloc;
 
 /// True iff `p` is a power of two (and non-zero).
 pub fn is_pow2(p: usize) -> bool {

@@ -1,0 +1,121 @@
+//! Zero-alloc regression gate for the hot datapath.
+//!
+//! The tentpole claim of the arena/in-place-combine work is that the
+//! steady-state combine/receive path does not allocate.  This binary
+//! installs the counting allocator and measures real allocation events
+//! around the hot loops.  Everything lives in ONE #[test] fn on purpose:
+//! the counters are process-global and libtest runs sibling tests on
+//! concurrent threads, which would pollute the deltas.
+
+use nfscan::data::{Op, Payload};
+use nfscan::fpga::reassembly::Reassembler;
+use nfscan::net::frame::fragment;
+use nfscan::runtime::{engine::oracle_prefix, Compute, NativeEngine};
+use nfscan::util::alloc as cnt;
+
+#[global_allocator]
+static ALLOC: nfscan::util::alloc::CountingAllocator = nfscan::util::alloc::CountingAllocator;
+
+/// Allocation events across `reps` runs of `op`, after `warmup` runs.
+fn allocs_of(warmup: usize, reps: usize, mut op: impl FnMut()) -> u64 {
+    for _ in 0..warmup {
+        op();
+    }
+    let a0 = cnt::allocation_count();
+    for _ in 0..reps {
+        op();
+    }
+    cnt::allocation_count() - a0
+}
+
+#[test]
+fn hot_datapath_steady_state_allocations() {
+    assert!(cnt::counting_installed(), "counting allocator must be the global allocator");
+    let e = NativeEngine::new();
+
+    // ---- combine_into on a uniquely-owned accumulator: ZERO allocations
+    // per call after warmup, for every dtype (the tentpole claim).
+    {
+        let mut acc = Payload::from_i32(&(0..1024).collect::<Vec<_>>());
+        let b = Payload::from_i32(&(0..1024).map(|v| v % 7 - 3).collect::<Vec<_>>());
+        let n = allocs_of(16, 1000, || {
+            e.combine_into(&mut acc, &b, Op::Sum).unwrap();
+            std::hint::black_box(&acc);
+        });
+        assert_eq!(n, 0, "i32 steady-state combine_into allocated {n} times in 1000 calls");
+    }
+    {
+        // odd element count: tail-padded arena words must not perturb
+        let mut acc = Payload::from_f32(&(0..513).map(|v| v as f32 * 0.25).collect::<Vec<_>>());
+        let b = Payload::from_f32(&(0..513).map(|v| v as f32 * 0.5 - 64.0).collect::<Vec<_>>());
+        let n = allocs_of(16, 1000, || {
+            e.combine_into(&mut acc, &b, Op::Max).unwrap();
+            std::hint::black_box(&acc);
+        });
+        assert_eq!(n, 0, "f32 steady-state combine_into allocated {n} times in 1000 calls");
+    }
+    {
+        let mut acc = Payload::from_f64(&(0..256).map(|v| v as f64).collect::<Vec<_>>());
+        let b = Payload::from_f64(&(0..256).map(|v| 1.0 - v as f64).collect::<Vec<_>>());
+        let n = allocs_of(16, 1000, || {
+            e.combine_into(&mut acc, &b, Op::Min).unwrap();
+            std::hint::black_box(&acc);
+        });
+        assert_eq!(n, 0, "f64 steady-state combine_into allocated {n} times in 1000 calls");
+    }
+    // the rev direction shares the same machinery
+    {
+        let mut acc = Payload::from_i32(&(0..500).collect::<Vec<_>>());
+        let a = Payload::from_i32(&(0..500).map(|v| -v).collect::<Vec<_>>());
+        let n = allocs_of(16, 1000, || {
+            e.combine_into_rev(&mut acc, &a, Op::Sum).unwrap();
+            std::hint::black_box(&acc);
+        });
+        assert_eq!(n, 0, "rev steady-state combine_into allocated {n} times in 1000 calls");
+    }
+
+    // ---- k-way fold (oracle_prefix): O(1) buffer traffic per whole
+    // fold, NOT O(k) allocations.  The cloned head materializes into one
+    // pooled buffer (an Rc control block is the only malloc).
+    {
+        let contribs: Vec<Payload> = (0..64)
+            .map(|k| Payload::from_i32(&(0..1024).map(|v| v % 13 - k).collect::<Vec<_>>()))
+            .collect();
+        let folds = 100;
+        let n = allocs_of(4, folds, || {
+            let acc = oracle_prefix(&e, &contribs, Op::Sum, true, 63).unwrap();
+            std::hint::black_box(&acc);
+        });
+        let per_fold = n as f64 / folds as f64;
+        assert!(
+            per_fold <= 2.0,
+            "64-way fold averaged {per_fold} allocations (want O(1), got close to O(k)?)"
+        );
+    }
+
+    // ---- streaming reassembly: the whole-message buffer comes from the
+    // pool; per message only constant bookkeeping may allocate.
+    {
+        let msg = Payload::from_i32(&(0..4096).collect::<Vec<_>>()); // 16 KB, 12 frags
+        let frags = fragment(&msg);
+        let count = msg.len() as u32;
+        let mut r: Reassembler<u32> = Reassembler::new(32);
+        let messages = 100;
+        let n = allocs_of(4, messages, || {
+            let mut whole = None;
+            for (idx, total, _off, chunk) in &frags {
+                whole = r.add(1, *idx, *total, count, chunk.clone());
+            }
+            std::hint::black_box(whole.expect("complete"));
+        });
+        let per_msg = n as f64 / messages as f64;
+        assert!(
+            per_msg <= 4.0,
+            "streaming reassembly averaged {per_msg} allocations per 12-fragment message"
+        );
+    }
+
+    // ---- the arena pool really is recycling (hits grew during the runs)
+    let (hits, _misses) = nfscan::data::arena::pool_stats();
+    assert!(hits > 0, "arena pool never served a recycled buffer");
+}

@@ -1,0 +1,141 @@
+//! Fold-equivalence property: the in-place combine path must be
+//! BIT-IDENTICAL to the allocating path and to the oracle fold, across
+//! dtype x op x payload length x window alignment.  This is the proof
+//! obligation behind rewiring every state machine onto `combine_into` —
+//! figure artifacts byte-compare in CI, and this test pins the engine
+//! layer underneath them.
+
+use nfscan::data::{Dtype, Op, Payload};
+use nfscan::runtime::{engine::oracle_prefix, Compute, NativeEngine};
+use nfscan::sim::SplitMix64;
+
+fn random_payload(rng: &mut SplitMix64, dtype: Dtype, n: usize) -> Payload {
+    match dtype {
+        Dtype::I32 => {
+            Payload::from_i32(&(0..n).map(|_| rng.range_i64(-50, 50) as i32).collect::<Vec<_>>())
+        }
+        Dtype::F32 => Payload::from_f32(
+            &(0..n).map(|_| (rng.next_f64() * 4.0 - 2.0) as f32).collect::<Vec<_>>(),
+        ),
+        Dtype::F64 => {
+            Payload::from_f64(&(0..n).map(|_| rng.next_f64() * 4.0 - 2.0).collect::<Vec<_>>())
+        }
+    }
+}
+
+/// Pairwise fold with the allocating `combine` (the pre-refactor shape).
+fn pairwise(e: &dyn Compute, xs: &[Payload], op: Op) -> Payload {
+    let mut acc = xs[0].clone();
+    for c in &xs[1..] {
+        acc = e.combine(&acc, c, op).unwrap();
+    }
+    acc
+}
+
+/// In-place fold with `combine_into`.
+fn in_place(e: &dyn Compute, xs: &[Payload], op: Op) -> Payload {
+    let mut acc = xs[0].clone();
+    for c in &xs[1..] {
+        e.combine_into(&mut acc, c, op).unwrap();
+    }
+    acc
+}
+
+#[test]
+fn in_place_fold_equals_pairwise_equals_oracle() {
+    let e = NativeEngine::new();
+    let mut rng = SplitMix64::new(0xF01D);
+    for dtype in Dtype::ALL {
+        for op in Op::ALL {
+            if !op.valid_for(dtype) {
+                continue;
+            }
+            for n in [1usize, 3, 8, 61, 500] {
+                let xs: Vec<Payload> =
+                    (0..5).map(|_| random_payload(&mut rng, dtype, n)).collect();
+                let a = pairwise(&e, &xs, op);
+                let b = in_place(&e, &xs, op);
+                let c = oracle_prefix(&e, &xs, op, true, 4).unwrap();
+                assert_eq!(
+                    a.bytes(),
+                    b.bytes(),
+                    "{dtype:?} {op:?} n={n}: in-place fold != pairwise combine"
+                );
+                assert_eq!(
+                    a.bytes(),
+                    c.bytes(),
+                    "{dtype:?} {op:?} n={n}: oracle fold != pairwise combine"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn rev_direction_matches_swapped_combine() {
+    let e = NativeEngine::new();
+    let mut rng = SplitMix64::new(0xBEEF);
+    for dtype in Dtype::ALL {
+        for op in Op::ALL {
+            if !op.valid_for(dtype) {
+                continue;
+            }
+            for n in [1usize, 17, 200] {
+                let a = random_payload(&mut rng, dtype, n);
+                let b = random_payload(&mut rng, dtype, n);
+                let want = e.combine(&a, &b, op).unwrap();
+                let mut acc = b.clone();
+                e.combine_into_rev(&mut acc, &a, op).unwrap();
+                assert_eq!(acc.bytes(), want.bytes(), "{dtype:?} {op:?} n={n} rev");
+            }
+        }
+    }
+}
+
+#[test]
+fn folds_over_unaligned_wire_windows() {
+    // windows at odd element offsets: 4-byte dtypes land on non-8B
+    // boundaries (the wire-slice case).  Both operand positions and both
+    // directions must match the allocating path bit-for-bit.
+    let e = NativeEngine::new();
+    let mut rng = SplitMix64::new(0x51DE);
+    for dtype in [Dtype::I32, Dtype::F32, Dtype::F64] {
+        for op in [Op::Sum, Op::Max, Op::Prod] {
+            let whole_a = random_payload(&mut rng, dtype, 130);
+            let whole_b = random_payload(&mut rng, dtype, 130);
+            for (start, n) in [(1usize, 64usize), (3, 9), (7, 123)] {
+                let wa = whole_a.slice(start, n);
+                let wb = whole_b.slice(start, n);
+                let want = e.combine(&wa, &wb, op).unwrap();
+                // window as accumulator (materializes on first fold)
+                let mut acc = wa.clone();
+                e.combine_into(&mut acc, &wb, op).unwrap();
+                assert_eq!(acc.bytes(), want.bytes(), "{dtype:?} {op:?} window acc");
+                // window as the read operand
+                let mut acc = wa.clone();
+                let b_owned = Payload::from_bytes(dtype, wb.bytes().to_vec());
+                e.combine_into(&mut acc, &b_owned, op).unwrap();
+                assert_eq!(acc.bytes(), want.bytes(), "{dtype:?} {op:?} owned b");
+                let mut acc = wb.clone();
+                e.combine_into_rev(&mut acc, &wa, op).unwrap();
+                assert_eq!(acc.bytes(), want.bytes(), "{dtype:?} {op:?} window rev");
+                // CoW forked: the shared whole-message backing is intact
+                assert_eq!(whole_a.slice(start, n).bytes(), wa.bytes());
+                assert_eq!(whole_b.slice(start, n).bytes(), wb.bytes());
+            }
+        }
+    }
+}
+
+#[test]
+fn scan_and_derive_unchanged_by_refactor() {
+    // spot-check the non-fold engine entry points still agree with the
+    // oracle shapes (they kept the allocating path)
+    let e = NativeEngine::new();
+    let x = Payload::from_i32(&[1, 2, 3, 4]);
+    assert_eq!(e.scan(&x, Op::Sum, true).unwrap().to_i32(), vec![1, 3, 6, 10]);
+    let own = Payload::from_i32(&[5, -7]);
+    let peer = Payload::from_i32(&[3, 11]);
+    let cum = e.combine(&peer, &own, Op::Sum).unwrap();
+    assert_eq!(e.derive(&cum, &own).unwrap().to_i32(), peer.to_i32());
+}
