@@ -49,6 +49,8 @@ fn activation_ns(mut mk: impl FnMut() -> Box<dyn CollEngine>, reps: usize) -> f6
             p: 2,
             inclusive: false,
             op: Op::Sum,
+            coll: CollType::Allreduce,
+            epoch: 0,
             compute: &compute,
             cost: &cost,
             cycles: 0,

@@ -131,6 +131,8 @@ fn bench_handler_dispatch(reps: usize, counting: bool) -> (f64, Option<f64>) {
             p: 2,
             inclusive: false,
             op: Op::Sum,
+            coll: CollType::Allreduce,
+            epoch: 0,
             compute: &compute,
             cost: &cost,
             cycles: 0,

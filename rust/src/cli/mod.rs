@@ -121,6 +121,11 @@ COMMANDS
   benchdiff              compare two bench JSONs (--prev OLD --cur NEW):
                          warns on >10% ns/op regressions; advisory unless
                          --strict
+  lint                   statically verify handler programs: all shipped
+                         images by default, or --file prog.hasm (text ISA);
+                         prints the per-entry worst-case cost report and
+                         every loop's bound, or the reject findings
+                         (exit 1).  --quiet prints verdicts only
   selftest               verify the XLA artifact path against native compute
   perf                   wallclock breakdown of one PJRT combine call
   help                   this text
@@ -162,6 +167,7 @@ pub fn main_with_args(argv: &[String]) -> Result<()> {
         "values" => cmd_values(&args),
         "bench" => cmd_bench(&args),
         "benchdiff" => cmd_benchdiff(&args),
+        "lint" => cmd_lint(&args),
         "selftest" => cmd_selftest(&args),
         "perf" => cmd_perf(&args),
         other => bail!("unknown command {other:?} (try `nfscan help`)"),
@@ -524,6 +530,81 @@ fn cmd_sweep_single(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `nfscan lint [--file prog.hasm] [--quiet]` — run the static verifier
+/// over handler programs and print the proof artifacts (per-entry
+/// worst-case cost, per-loop bounds) or the findings.  Exits non-zero
+/// if anything is rejected, so CI can gate on it.
+fn cmd_lint(args: &Args) -> Result<()> {
+    use crate::nic::verify::{verify, CostReport, RejectReason, LOOP_BOUND, MAX_P};
+    use crate::nic::vm::{Program, MAX_STEPS};
+    use crate::packet::CollType;
+
+    args.ensure_only(&["file", "quiet"])?;
+    let quiet = args.get("quiet") == Some("true");
+
+    let print_ok = |prog: &Program, report: &CostReport| {
+        println!(
+            "ok   {:<18} on_request <= {:>4} instrs, on_packet <= {:>4} instrs (budget {MAX_STEPS}, all p <= {MAX_P})",
+            prog.name, report.on_request_bound, report.on_packet_bound
+        );
+        if quiet {
+            return;
+        }
+        for l in &report.loops {
+            println!(
+                "       loop @{:<4} {:>3} instrs x {} back-edge(s) x {} trips -> {} instrs",
+                l.head, l.body, l.back_edges, LOOP_BOUND, l.bound
+            );
+        }
+    };
+    let print_rejects = |prog: &Program, reasons: &[RejectReason]| {
+        println!("FAIL {:<18} {} finding(s)", prog.name, reasons.len());
+        for r in reasons {
+            println!("       {r} [{}]", r.class());
+        }
+    };
+
+    let mut failed = 0usize;
+    if let Some(path) = args.get("file") {
+        let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let stem = std::path::Path::new(path)
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("program");
+        let prog = crate::nic::asm_text::assemble(stem, &src)
+            .map_err(|e| anyhow!("{path}: {e}"))?;
+        match verify(&prog) {
+            Ok(report) => print_ok(&prog, &report),
+            Err(reasons) => {
+                print_rejects(&prog, &reasons);
+                failed += 1;
+            }
+        }
+    } else {
+        // every shipped image, deduplicated (scan serves exscan too,
+        // allreduce serves barrier)
+        let mut seen: Vec<&str> = Vec::new();
+        for coll in CollType::HANDLER_SET {
+            let prog = crate::nic::program_for(coll);
+            if seen.contains(&prog.name) {
+                continue;
+            }
+            seen.push(prog.name);
+            match verify(prog) {
+                Ok(report) => print_ok(prog, &report),
+                Err(reasons) => {
+                    print_rejects(prog, &reasons);
+                    failed += 1;
+                }
+            }
+        }
+    }
+    if failed > 0 {
+        bail!("{failed} program(s) rejected by the static verifier");
+    }
+    Ok(())
+}
+
 fn cmd_selftest(args: &Args) -> Result<()> {
     use crate::data::{Op, Payload};
     let dir = args.get("artifacts").unwrap_or(crate::runtime::ARTIFACT_DIR);
@@ -815,6 +896,36 @@ mod tests {
         ]))
         .unwrap();
         assert!(cmd_benchdiff(&strict).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lint_accepts_every_shipped_image() {
+        let a = Args::parse(&argv(&["lint", "--quiet"])).unwrap();
+        cmd_lint(&a).expect("all shipped images must verify");
+    }
+
+    #[test]
+    fn lint_rejects_an_ill_formed_file_with_exit_error() {
+        let dir = std::env::temp_dir().join(format!("nfscan-lint-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.hasm");
+        // reads r1 before any write, then falls off the end
+        std::fs::write(&path, "start:\n  alu add r0, r1, r1\n").unwrap();
+        let a = Args::parse(&argv(&["lint", "--file", path.to_str().unwrap()])).unwrap();
+        let err = format!("{}", cmd_lint(&a).unwrap_err());
+        assert!(err.contains("rejected"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lint_accepts_a_well_formed_file() {
+        let dir = std::env::temp_dir().join(format!("nfscan-lintok-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ok.hasm");
+        std::fs::write(&path, "start:\n  ldpkt r0\n  deliver r0\n  halt\n").unwrap();
+        let a = Args::parse(&argv(&["lint", "--file", path.to_str().unwrap()])).unwrap();
+        cmd_lint(&a).expect("trivial deliver program verifies");
         std::fs::remove_dir_all(&dir).ok();
     }
 

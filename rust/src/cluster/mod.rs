@@ -595,6 +595,8 @@ impl Cluster {
             p: gsize,
             inclusive: coll.inclusive(),
             op,
+            coll,
+            epoch,
             compute: &*self.compute,
             cost: &self.cfg.cost,
             cycles: 0,

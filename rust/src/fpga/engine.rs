@@ -39,6 +39,12 @@ pub struct EngineCtx<'a> {
     pub p: usize,
     pub inclusive: bool,
     pub op: Op,
+    /// Which collective this activation serves — carried so dynamic
+    /// trips (handler-VM asserts, the static verifier's backstop) can
+    /// name the failing flow.
+    pub coll: CollType,
+    /// Epoch of the flow being activated (same role: diagnostics).
+    pub epoch: u16,
     pub compute: &'a dyn Compute,
     pub cost: &'a CostModel,
     /// Cycles consumed by this activation's datapath work.
@@ -276,6 +282,8 @@ pub(crate) mod testutil {
                 p: self.p,
                 inclusive: self.coll.inclusive(),
                 op: self.op,
+                coll: self.coll,
+                epoch: 0,
                 compute: &self.compute,
                 cost: &self.cost,
                 cycles: 0,
@@ -294,6 +302,8 @@ pub(crate) mod testutil {
                     p: self.p,
                     inclusive: self.coll.inclusive(),
                     op: self.op,
+                    coll: self.coll,
+                    epoch: 0,
                     compute: &self.compute,
                     cost: &self.cost,
                     cycles: 0,

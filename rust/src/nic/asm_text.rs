@@ -1,0 +1,353 @@
+//! Line-oriented text form of the handler ISA, so `nfscan lint` can
+//! verify programs that were never compiled into the binary — the
+//! workflow the verifier exists for: write a handler, lint it, only
+//! then let it near a flow table.
+//!
+//! Grammar (one item per line, `;` or `#` starts a comment):
+//!
+//! ```text
+//! .request start          ; entry label for the host-request activation
+//! .packet  on_pkt         ; entry label for the packet activation
+//! start:                  ; a label binds the next instruction
+//!   imm   r0, 42
+//!   env   r1, rank        ; rank | p | inclusive | pkt.step | pkt.src | pkt.kind
+//!   alu   add r2, r0, r1  ; add sub xor and shl shr lt eq
+//!   ldpkt r3
+//!   empty_like r4, r3
+//!   ident_like r4, r3
+//!   ld    r5, r0          ; dst, slot-index register
+//!   st    r0, r5          ; slot-index register, src
+//!   clr   r0
+//!   combine r3, r3, r4
+//!   is_set  r6, r3
+//!   jmp   start
+//!   jz    r6, start
+//!   jnz   r6, start
+//!   emit  r1, data, r0, r3   ; dst-rank, msg type, step, payload
+//!   deliver r3
+//!   drop
+//!   halt
+//! ```
+//!
+//! Registers beyond `r15` and labels that never bind parse fine — they
+//! are the *verifier's* findings (`bad-register`, `bad-target`), and
+//! lint exists to show them; only genuinely unreadable syntax errors
+//! here.
+
+use std::collections::HashMap;
+
+use super::vm::{AluOp, EnvVal, Instr, Program, Reg};
+use crate::packet::MsgType;
+
+/// A parse failure, carrying the 1-based source line.
+#[derive(Debug)]
+pub struct AsmError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for AsmError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "line {}: {}", self.line, self.msg)
+    }
+}
+
+fn err(line: usize, msg: impl Into<String>) -> AsmError {
+    AsmError { line, msg: msg.into() }
+}
+
+fn parse_reg(line: usize, tok: &str) -> Result<Reg, AsmError> {
+    let digits = tok
+        .strip_prefix('r')
+        .ok_or_else(|| err(line, format!("expected a register (rN), got `{tok}`")))?;
+    digits.parse::<Reg>().map_err(|_| err(line, format!("bad register `{tok}`")))
+}
+
+fn parse_int(line: usize, tok: &str) -> Result<i64, AsmError> {
+    let (neg, body) = match tok.strip_prefix('-') {
+        Some(rest) => (true, rest),
+        None => (false, tok),
+    };
+    let v = if let Some(hex) = body.strip_prefix("0x") {
+        i64::from_str_radix(hex, 16)
+    } else {
+        body.parse::<i64>()
+    }
+    .map_err(|_| err(line, format!("bad integer `{tok}`")))?;
+    Ok(if neg { -v } else { v })
+}
+
+fn parse_env(line: usize, tok: &str) -> Result<EnvVal, AsmError> {
+    Ok(match tok {
+        "rank" => EnvVal::Rank,
+        "p" => EnvVal::P,
+        "inclusive" => EnvVal::Inclusive,
+        "pkt.step" => EnvVal::PktStep,
+        "pkt.src" => EnvVal::PktSrc,
+        "pkt.kind" => EnvVal::PktKind,
+        _ => return Err(err(line, format!("unknown env value `{tok}`"))),
+    })
+}
+
+fn parse_alu(line: usize, tok: &str) -> Result<AluOp, AsmError> {
+    Ok(match tok {
+        "add" => AluOp::Add,
+        "sub" => AluOp::Sub,
+        "xor" => AluOp::Xor,
+        "and" => AluOp::And,
+        "shl" => AluOp::Shl,
+        "shr" => AluOp::Shr,
+        "lt" => AluOp::Lt,
+        "eq" => AluOp::Eq,
+        _ => return Err(err(line, format!("unknown alu op `{tok}`"))),
+    })
+}
+
+fn parse_msg_type(line: usize, tok: &str) -> Result<MsgType, AsmError> {
+    Ok(match tok {
+        "hostrequest" => MsgType::HostRequest,
+        "data" => MsgType::Data,
+        "ack" => MsgType::Ack,
+        "result" => MsgType::Result,
+        "cumtagged" => MsgType::CumTagged,
+        "down" => MsgType::Down,
+        _ => return Err(err(line, format!("unknown msg type `{tok}`"))),
+    })
+}
+
+/// A jump operand: resolved after all labels are seen.
+struct Fixup {
+    line: usize,
+    pc: usize,
+    label: String,
+}
+
+/// Assemble handler-ISA text into a [`Program`].  `name` is the image
+/// name used in diagnostics (typically the file stem).
+pub fn assemble(name: &str, src: &str) -> Result<Program, AsmError> {
+    let mut code: Vec<Instr> = Vec::new();
+    let mut labels: HashMap<String, usize> = HashMap::new();
+    let mut fixups: Vec<Fixup> = Vec::new();
+    let mut entry_request: Option<(usize, String)> = None;
+    let mut entry_packet: Option<(usize, String)> = None;
+
+    for (i, raw) in src.lines().enumerate() {
+        let line = i + 1;
+        let text = raw.split([';', '#']).next().unwrap_or("").trim();
+        if text.is_empty() {
+            continue;
+        }
+        if let Some(rest) = text.strip_prefix(".request") {
+            entry_request = Some((line, rest.trim().to_string()));
+            continue;
+        }
+        if let Some(rest) = text.strip_prefix(".packet") {
+            entry_packet = Some((line, rest.trim().to_string()));
+            continue;
+        }
+        if let Some(label) = text.strip_suffix(':') {
+            let label = label.trim();
+            if label.is_empty() || label.contains(char::is_whitespace) {
+                return Err(err(line, format!("bad label `{text}`")));
+            }
+            if labels.insert(label.to_string(), code.len()).is_some() {
+                return Err(err(line, format!("label `{label}` bound twice")));
+            }
+            continue;
+        }
+
+        // `op tok, tok, ...` — commas and whitespace both separate
+        let toks: Vec<&str> =
+            text.split([',', ' ', '\t']).filter(|t| !t.is_empty()).collect();
+        let op = toks[0];
+        let want = |n: usize| -> Result<(), AsmError> {
+            if toks.len() == n + 1 {
+                Ok(())
+            } else {
+                Err(err(line, format!("`{op}` takes {n} operand(s), got {}", toks.len() - 1)))
+            }
+        };
+        let mut jump = |label: &str| {
+            fixups.push(Fixup { line, pc: code.len(), label: label.to_string() });
+            0usize // patched later
+        };
+        let instr = match op {
+            "imm" => {
+                want(2)?;
+                Instr::Imm { dst: parse_reg(line, toks[1])?, val: parse_int(line, toks[2])? }
+            }
+            "mov" => {
+                want(2)?;
+                Instr::Mov { dst: parse_reg(line, toks[1])?, src: parse_reg(line, toks[2])? }
+            }
+            "env" => {
+                want(2)?;
+                Instr::Env { dst: parse_reg(line, toks[1])?, what: parse_env(line, toks[2])? }
+            }
+            "ldpkt" => {
+                want(1)?;
+                Instr::LdPkt { dst: parse_reg(line, toks[1])? }
+            }
+            "empty_like" => {
+                want(2)?;
+                Instr::EmptyLike { dst: parse_reg(line, toks[1])?, src: parse_reg(line, toks[2])? }
+            }
+            "ident_like" => {
+                want(2)?;
+                Instr::IdentLike { dst: parse_reg(line, toks[1])?, src: parse_reg(line, toks[2])? }
+            }
+            "ld" => {
+                want(2)?;
+                Instr::Ld { dst: parse_reg(line, toks[1])?, slot: parse_reg(line, toks[2])? }
+            }
+            "st" => {
+                want(2)?;
+                Instr::St { slot: parse_reg(line, toks[1])?, src: parse_reg(line, toks[2])? }
+            }
+            "clr" => {
+                want(1)?;
+                Instr::Clr { slot: parse_reg(line, toks[1])? }
+            }
+            "alu" => {
+                want(4)?;
+                Instr::Alu {
+                    op: parse_alu(line, toks[1])?,
+                    dst: parse_reg(line, toks[2])?,
+                    a: parse_reg(line, toks[3])?,
+                    b: parse_reg(line, toks[4])?,
+                }
+            }
+            "combine" => {
+                want(3)?;
+                Instr::Combine {
+                    dst: parse_reg(line, toks[1])?,
+                    a: parse_reg(line, toks[2])?,
+                    b: parse_reg(line, toks[3])?,
+                }
+            }
+            "is_set" => {
+                want(2)?;
+                Instr::IsSet { dst: parse_reg(line, toks[1])?, src: parse_reg(line, toks[2])? }
+            }
+            "jmp" => {
+                want(1)?;
+                Instr::Jmp { to: jump(toks[1]) }
+            }
+            "jz" => {
+                want(2)?;
+                Instr::Jz { cond: parse_reg(line, toks[1])?, to: jump(toks[2]) }
+            }
+            "jnz" => {
+                want(2)?;
+                Instr::Jnz { cond: parse_reg(line, toks[1])?, to: jump(toks[2]) }
+            }
+            "emit" => {
+                want(4)?;
+                Instr::Emit {
+                    dst: parse_reg(line, toks[1])?,
+                    mt: parse_msg_type(line, toks[2])?,
+                    step: parse_reg(line, toks[3])?,
+                    payload: parse_reg(line, toks[4])?,
+                }
+            }
+            "deliver" => {
+                want(1)?;
+                Instr::Deliver { payload: parse_reg(line, toks[1])? }
+            }
+            "drop" | "park" => {
+                want(0)?;
+                Instr::Drop
+            }
+            "halt" => {
+                want(0)?;
+                Instr::Halt
+            }
+            _ => return Err(err(line, format!("unknown instruction `{op}`"))),
+        };
+        code.push(instr);
+    }
+
+    // resolve: an unbound jump label becomes a deliberately out-of-range
+    // target so the verifier reports it as `bad-target` with the pc
+    let out_of_range = code.len().max(1);
+    for fx in fixups {
+        let target = labels.get(&fx.label).copied().unwrap_or(out_of_range);
+        match &mut code[fx.pc] {
+            Instr::Jmp { to } | Instr::Jz { to, .. } | Instr::Jnz { to, .. } => *to = target,
+            _ => unreachable!("fixup on non-jump at pc {}", fx.pc),
+        }
+    }
+    let resolve_entry = |e: &Option<(usize, String)>, which: &str| -> Result<usize, AsmError> {
+        match e {
+            Some((line, label)) => labels
+                .get(label)
+                .copied()
+                .ok_or_else(|| err(*line, format!("{which} entry label `{label}` never bound"))),
+            // default: first instruction, so tiny test programs need no
+            // directives at all
+            None => Ok(0),
+        }
+    };
+    let on_request = resolve_entry(&entry_request, ".request")?;
+    let on_packet = resolve_entry(&entry_packet, ".packet")?;
+
+    // Program.name is &'static str (images are compiled in); a linted
+    // file's name lives as long as the process anyway
+    let name: &'static str = Box::leak(name.to_string().into_boxed_str());
+    Ok(Program { name, code, on_request, on_packet })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nic::verify;
+
+    #[test]
+    fn round_trips_a_well_formed_program() {
+        let src = r"
+            ; k = 0; while (1 << k) < p { k += 1 }
+            .request start
+            .packet  start
+            start:
+              imm r0, 0
+              imm r1, 1
+            head:
+              alu shl r2, r1, r0
+              env r3, p
+              alu lt r4, r2, r3
+              jz  r4, done
+              alu add r0, r0, r1
+              jmp head
+            done:
+              halt
+        ";
+        let prog = assemble("rdloop", src).expect("assembles");
+        assert_eq!(prog.name, "rdloop");
+        assert_eq!(prog.on_request, 0);
+        let report = verify::verify(&prog).expect("verifies");
+        assert!(report.on_request_bound > 0);
+    }
+
+    #[test]
+    fn unbound_jump_label_becomes_bad_target() {
+        let src = "start:\n  jmp nowhere\n  halt\n";
+        let prog = assemble("t", src).expect("assembles");
+        let rejects = verify::verify(&prog).expect_err("rejected");
+        assert!(rejects.iter().any(|r| r.class() == "bad-target"));
+    }
+
+    #[test]
+    fn syntax_errors_carry_the_line() {
+        let e = assemble("t", "halt\nbogus r1\n").expect_err("syntax error");
+        assert_eq!(e.line, 2);
+        assert!(e.msg.contains("bogus"));
+    }
+
+    #[test]
+    fn comments_commas_and_hex_parse() {
+        let src = "imm r0, 0x10 ; sixteen\nimm r1 -3 # negative\nhalt\n";
+        let prog = assemble("t", src).expect("assembles");
+        assert!(matches!(prog.code[0], Instr::Imm { dst: 0, val: 16 }));
+        assert!(matches!(prog.code[1], Instr::Imm { dst: 1, val: -3 }));
+    }
+}

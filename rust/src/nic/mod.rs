@@ -13,7 +13,14 @@
 //!   costs charged through `config::cost`;
 //! - [`programs`] — the handler programs (scan, exscan, allreduce,
 //!   barrier, bcast) and the [`programs::HandlerEngine`] adapter that
-//!   slots a flow into the NIC's existing engine table.
+//!   slots a flow into the NIC's existing engine table;
+//! - [`verify`] — the static verifier: abstract interpretation over the
+//!   ISA proving initialization, scratch bounds, termination and the
+//!   per-activation instruction budget before an image is ever
+//!   installed (`nfscan lint`, and every [`programs`] image at
+//!   construction);
+//! - [`asm_text`] — the text form of the ISA, so `nfscan lint --file`
+//!   can verify programs that were never compiled in.
 //!
 //! The cluster dispatches to this subsystem instead of the `fpga::`
 //! state machines when `ExpConfig::handler` is set (the `handler[:coll]`
@@ -21,8 +28,11 @@
 //! the VM's vector ALU *is* `EngineCtx::combine` — only latencies (and
 //! the new `handler_instrs` / `handler_stalls` counters) differ.
 
+pub mod asm_text;
 pub mod programs;
+pub mod verify;
 pub mod vm;
 
 pub use programs::{handler_engine, program_for, HandlerEngine};
+pub use verify::{verify as verify_program, CostReport, RejectReason};
 pub use vm::{Activation, Asm, Flow, Instr, Program};

@@ -446,19 +446,29 @@ fn build_bcast() -> Program {
     a.finish("handler:bcast", on_request, on_packet)
 }
 
+/// Build + statically verify an image exactly once.  Verification at
+/// construction is the load-time gate: a program the verifier rejects
+/// panics here, before any flow is created, instead of tripping a VM
+/// assert mid-simulation.
+fn build_verified(build: fn() -> Program) -> Program {
+    let prog = build();
+    super::verify::verify_or_panic(&prog);
+    prog
+}
+
 fn scan_program() -> &'static Program {
     static P: OnceLock<Program> = OnceLock::new();
-    P.get_or_init(build_scan)
+    P.get_or_init(|| build_verified(build_scan))
 }
 
 fn allreduce_program() -> &'static Program {
     static P: OnceLock<Program> = OnceLock::new();
-    P.get_or_init(build_allreduce)
+    P.get_or_init(|| build_verified(build_allreduce))
 }
 
 fn bcast_program() -> &'static Program {
     static P: OnceLock<Program> = OnceLock::new();
-    P.get_or_init(build_bcast)
+    P.get_or_init(|| build_verified(build_bcast))
 }
 
 /// The program image a card loads for `coll` (shared, built once).

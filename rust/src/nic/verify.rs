@@ -1,0 +1,1358 @@
+//! Static verifier for handler programs: every invariant the VM enforces
+//! with a runtime `assert!` is proven (or rejected) here, **before any
+//! packet flies** — sPIN's run-to-completion contract as a load-time
+//! check instead of a mid-simulation panic.
+//!
+//! The verifier abstractly interprets a [`Program`] over an interval +
+//! type domain:
+//!
+//! - **register initialization** — no register is read before it is
+//!   written on any path (`UninitRead`);
+//! - **scratch-slot bounds** — every `Ld`/`St`/`Clr` slot index is
+//!   proven within `[0, SCRATCH_SLOTS)`, including computed indices like
+//!   the packet inbox `step + INBOX` (`ScratchOob`);
+//! - **shift ranges** — every `Shl`/`Shr` amount is proven within
+//!   `[0, 63]` (`ShiftRange`);
+//! - **type consistency** — an operand that can *never* have the type an
+//!   instruction requires (e.g. `Combine` over an integer register: the
+//!   shared dtype x op datapath needs payloads on both sides) is
+//!   rejected (`DtypeMismatch`).  Values loaded from scratch may be
+//!   `Empty` at runtime; those reads stay legal and the VM's (now
+//!   flow-attributed) asserts remain the dynamic backstop;
+//! - **termination** — every path ends in `Deliver`+`Halt`, `Drop` or
+//!   `Halt`: no fall-through off the end of the code (`MissingHalt`), no
+//!   unresolved jump target (`BadTarget`), and no reachable cycle that
+//!   cannot exit (`NoTermination`);
+//! - **instruction budget** — a worst-case instruction bound per
+//!   activation, valid for every p <= 2^16, is computed and checked
+//!   against [`MAX_STEPS`] (`BudgetExceeded`).
+//!
+//! Loop bounds come from the recursive-doubling round structure: a
+//! handler loop advances at least one RD round per iteration and a
+//! round counter k satisfies `1 << k < p <= 2^16`, so any back-edge is
+//! taken at most [`LOOP_BOUND`] times.  The interval domain *proves*
+//! that counters stay inside `[0, 16]` by refining branch conditions:
+//! the analyzer tracks `dst = (a < b)` and `dst = (1 << k)` facts, so
+//! falling through `jz` on `(1 << k) < p` tightens `k <= 15` exactly
+//! the way the programs' guards intend.
+//!
+//! Environment assumptions (documented contract, enforced upstream):
+//! `p <= 2^16` ([`MAX_P`]), `rank < p`, and an inbound packet's `step`
+//! field respects the RD round structure (`step <= 16`).  A hostile
+//! step field is still caught by the VM's slot-bound assert — the
+//! verifier guarantees the *program* cannot misbehave, the runtime
+//! asserts guard the *inputs*.
+
+use std::collections::VecDeque;
+use std::fmt;
+
+use super::vm::{AluOp, EnvVal, Instr, Program, Reg, MAX_STEPS, NREGS, SCRATCH_SLOTS};
+
+/// Largest communicator size the cost bound is proven for.
+pub const MAX_P: i64 = 1 << 16;
+
+/// Max recursive-doubling rounds for p <= [`MAX_P`]: ceil(log2(p)) <= 16.
+pub const MAX_ROUNDS: i64 = 16;
+
+/// Per-back-edge iteration bound: one trip per RD round plus the final
+/// bound-check trip.
+pub const LOOP_BOUND: usize = MAX_ROUNDS as usize + 1;
+
+// ------------------------------------------------------------ verdicts
+
+/// Why a program image was rejected.  Each variant is one invariant
+/// class; `class()` gives the stable short name the negative-corpus
+/// tests and `nfscan lint` match on.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// A register operand is >= [`NREGS`].
+    BadRegister { pc: usize, reg: Reg },
+    /// A jump targets an instruction index outside the code.
+    BadTarget { pc: usize, target: usize },
+    /// An entry point is outside the code (or the code is empty).
+    BadEntry { which: &'static str, target: usize },
+    /// The last instruction can fall through off the end of the code.
+    MissingHalt { pc: usize },
+    /// A reachable cycle from which no `Halt`/`Drop` is reachable.
+    NoTermination { pc: usize },
+    /// A register is read before any write on some path.
+    UninitRead { pc: usize, reg: Reg },
+    /// A scratch-slot index not provably within `[0, SCRATCH_SLOTS)`.
+    ScratchOob { pc: usize, lo: i64, hi: i64 },
+    /// A shift amount not provably within `[0, 63]`.
+    ShiftRange { pc: usize, lo: i64, hi: i64 },
+    /// An operand that can never have the required type (`Combine` /
+    /// `Emit` / `Deliver` need payloads; ALU / slot / branch operands
+    /// need integers).
+    DtypeMismatch { pc: usize, reg: Reg, expected: &'static str },
+    /// An `Emit` destination or step field provably always outside its
+    /// wire range.
+    WireRange { pc: usize, lo: i64, hi: i64 },
+    /// The worst-case instruction bound for an entry exceeds
+    /// [`MAX_STEPS`].
+    BudgetExceeded { entry: &'static str, bound: usize },
+}
+
+impl RejectReason {
+    /// Stable short class name (what the negative corpus asserts on).
+    pub fn class(&self) -> &'static str {
+        match self {
+            RejectReason::BadRegister { .. } => "bad-register",
+            RejectReason::BadTarget { .. } => "bad-target",
+            RejectReason::BadEntry { .. } => "bad-entry",
+            RejectReason::MissingHalt { .. } => "missing-halt",
+            RejectReason::NoTermination { .. } => "no-termination",
+            RejectReason::UninitRead { .. } => "uninit-read",
+            RejectReason::ScratchOob { .. } => "scratch-oob",
+            RejectReason::ShiftRange { .. } => "shift-range",
+            RejectReason::DtypeMismatch { .. } => "dtype-mismatch",
+            RejectReason::WireRange { .. } => "wire-range",
+            RejectReason::BudgetExceeded { .. } => "budget",
+        }
+    }
+}
+
+impl fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RejectReason::BadRegister { pc, reg } => {
+                write!(f, "@{pc}: register r{reg} out of range")
+            }
+            RejectReason::BadTarget { pc, target } => {
+                write!(f, "@{pc}: jump target {target} out of range")
+            }
+            RejectReason::BadEntry { which, target } => {
+                write!(f, "entry {which} = {target} out of range")
+            }
+            RejectReason::MissingHalt { pc } => {
+                write!(f, "@{pc}: control can fall off the end of the code")
+            }
+            RejectReason::NoTermination { pc } => {
+                write!(f, "@{pc}: in a cycle that can never reach halt/drop")
+            }
+            RejectReason::UninitRead { pc, reg } => {
+                write!(f, "@{pc}: r{reg} read before any write on some path")
+            }
+            RejectReason::ScratchOob { pc, lo, hi } => {
+                write!(f, "@{pc}: scratch slot in [{lo}, {hi}] not provably within 0..{SCRATCH_SLOTS}")
+            }
+            RejectReason::ShiftRange { pc, lo, hi } => {
+                write!(f, "@{pc}: shift amount in [{lo}, {hi}] not provably within 0..64")
+            }
+            RejectReason::DtypeMismatch { pc, reg, expected } => {
+                write!(f, "@{pc}: r{reg} can never hold the required {expected}")
+            }
+            RejectReason::WireRange { pc, lo, hi } => {
+                write!(f, "@{pc}: emit field in [{lo}, {hi}] always outside its wire range")
+            }
+            RejectReason::BudgetExceeded { entry, bound } => {
+                write!(f, "{entry}: worst-case bound {bound} instrs exceeds budget {MAX_STEPS}")
+            }
+        }
+    }
+}
+
+/// One loop (nontrivial strongly-connected component) in the program.
+#[derive(Clone, Debug)]
+pub struct LoopReport {
+    /// Smallest pc in the loop.
+    pub head: usize,
+    /// Number of instructions in the loop body.
+    pub body: usize,
+    /// Backwards (program-order) edges inside the loop.
+    pub back_edges: usize,
+    /// Worst-case instructions retired inside the loop per activation.
+    pub bound: usize,
+}
+
+/// Proof artifacts of a successful verification: the per-activation
+/// worst-case instruction bounds `nfscan lint` reports.
+#[derive(Clone, Debug)]
+pub struct CostReport {
+    /// Worst-case instructions for one `on_request` activation.
+    pub on_request_bound: usize,
+    /// Worst-case instructions for one `on_packet` activation.
+    pub on_packet_bound: usize,
+    /// Every loop found, with its contribution to the bound.
+    pub loops: Vec<LoopReport>,
+}
+
+// ------------------------------------------------------------- domain
+
+/// Inclusive integer interval.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct Iv {
+    lo: i64,
+    hi: i64,
+}
+
+impl Iv {
+    const TOP: Iv = Iv { lo: i64::MIN, hi: i64::MAX };
+
+    fn exact(v: i64) -> Iv {
+        Iv { lo: v, hi: v }
+    }
+
+    fn new(lo: i64, hi: i64) -> Iv {
+        Iv { lo, hi }
+    }
+
+    fn hull(a: Iv, b: Iv) -> Iv {
+        Iv { lo: a.lo.min(b.lo), hi: a.hi.max(b.hi) }
+    }
+
+    fn within(&self, lo: i64, hi: i64) -> bool {
+        self.lo >= lo && self.hi <= hi
+    }
+
+    fn disjoint(&self, lo: i64, hi: i64) -> bool {
+        self.hi < lo || self.lo > hi
+    }
+
+    fn is_exact(&self) -> Option<i64> {
+        (self.lo == self.hi).then_some(self.lo)
+    }
+}
+
+fn clamp128(v: i128) -> i64 {
+    v.clamp(i64::MIN as i128, i64::MAX as i128) as i64
+}
+
+/// Smallest `2^k - 1 >= v` (v >= 0) — the tightest mask bound for
+/// xor/and of non-negative ranges.
+fn bits_mask(v: i64) -> i64 {
+    if v <= 0 {
+        return 0;
+    }
+    let b = 64 - v.leading_zeros();
+    if b >= 63 {
+        i64::MAX
+    } else {
+        (1i64 << b) - 1
+    }
+}
+
+fn ilog2_floor(v: i64) -> i64 {
+    debug_assert!(v >= 1);
+    63 - (v as u64).leading_zeros() as i64
+}
+
+fn alu_iv(op: AluOp, a: Iv, b: Iv) -> Iv {
+    match op {
+        AluOp::Add => Iv::new(a.lo.saturating_add(b.lo), a.hi.saturating_add(b.hi)),
+        AluOp::Sub => Iv::new(a.lo.saturating_sub(b.hi), a.hi.saturating_sub(b.lo)),
+        AluOp::Xor => {
+            if a.lo >= 0 && b.lo >= 0 {
+                Iv::new(0, bits_mask(a.hi | b.hi))
+            } else {
+                Iv::TOP
+            }
+        }
+        AluOp::And => {
+            if a.lo >= 0 && b.lo >= 0 {
+                Iv::new(0, a.hi.min(b.hi))
+            } else {
+                Iv::TOP
+            }
+        }
+        AluOp::Shl => {
+            if a.lo >= 0 && b.within(0, 62) {
+                Iv::new(clamp128((a.lo as i128) << b.lo), clamp128((a.hi as i128) << b.hi))
+            } else {
+                Iv::TOP
+            }
+        }
+        AluOp::Shr => {
+            if b.within(0, 63) {
+                let c = [a.lo >> b.lo, a.lo >> b.hi, a.hi >> b.lo, a.hi >> b.hi];
+                Iv::new(*c.iter().min().unwrap(), *c.iter().max().unwrap())
+            } else {
+                Iv::TOP
+            }
+        }
+        AluOp::Lt => match (a.is_exact(), b.is_exact()) {
+            (Some(x), Some(y)) => Iv::exact((x < y) as i64),
+            _ if a.hi < b.lo => Iv::exact(1),
+            _ if a.lo >= b.hi => Iv::exact(0),
+            _ => Iv::new(0, 1),
+        },
+        AluOp::Eq => match (a.is_exact(), b.is_exact()) {
+            (Some(x), Some(y)) => Iv::exact((x == y) as i64),
+            _ if a.disjoint(b.lo, b.hi) => Iv::exact(0),
+            _ => Iv::new(0, 1),
+        },
+    }
+}
+
+/// Abstract value: which runtime shapes a register/slot can take, with
+/// an interval on the integer shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct AbsVal {
+    /// The register was never written on some path to here.
+    uninit: bool,
+    /// Can be `Val::Empty`.
+    empty: bool,
+    /// Can be `Val::Vec`.
+    vec: bool,
+    /// If it can be `Val::Int`, the interval it lies in.
+    int: Option<Iv>,
+}
+
+impl AbsVal {
+    const UNINIT: AbsVal = AbsVal { uninit: true, empty: true, vec: false, int: None };
+    const EMPTY: AbsVal = AbsVal { uninit: false, empty: true, vec: false, int: None };
+    const VEC: AbsVal = AbsVal { uninit: false, empty: false, vec: true, int: None };
+
+    fn int(iv: Iv) -> AbsVal {
+        AbsVal { uninit: false, empty: false, vec: false, int: Some(iv) }
+    }
+
+    fn join(a: AbsVal, b: AbsVal) -> AbsVal {
+        AbsVal {
+            uninit: a.uninit || b.uninit,
+            empty: a.empty || b.empty,
+            vec: a.vec || b.vec,
+            int: match (a.int, b.int) {
+                (Some(x), Some(y)) => Some(Iv::hull(x, y)),
+                (x, None) => x,
+                (None, y) => y,
+            },
+        }
+    }
+
+    /// Interval to use when the VM will read this as an integer.
+    fn iv(&self) -> Iv {
+        self.int.unwrap_or(Iv::TOP)
+    }
+
+    /// Definitely `Val::Empty` (an `IsSet` of this is exactly 0).
+    fn pure_empty(&self) -> bool {
+        !self.vec && self.int.is_none()
+    }
+}
+
+/// Relational fact about what a register currently holds; used to refine
+/// intervals at conditional branches.  Invalidated when any mentioned
+/// register (or the holder) is rewritten.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Fact {
+    None,
+    /// Holder = `(a < b)` over the current values of `a` and `b`.
+    Lt(Reg, Reg),
+    /// Holder = `(reg != Empty)` for the current value of `reg`.
+    SetOf(Reg),
+    /// Holder = `1 << k` over the current value of `k`.
+    Shl1(Reg),
+}
+
+impl Fact {
+    fn mentions(&self, r: usize) -> bool {
+        match *self {
+            Fact::None => false,
+            Fact::Lt(a, b) => a as usize == r || b as usize == r,
+            Fact::SetOf(s) => s as usize == r,
+            Fact::Shl1(k) => k as usize == r,
+        }
+    }
+}
+
+/// The dataflow state at one program point.
+#[derive(Clone, PartialEq, Eq)]
+struct State {
+    regs: [AbsVal; NREGS],
+    scratch: [AbsVal; SCRATCH_SLOTS],
+    facts: [Fact; NREGS],
+}
+
+impl State {
+    fn entry(scratch: &[AbsVal; SCRATCH_SLOTS]) -> State {
+        State {
+            regs: [AbsVal::UNINIT; NREGS],
+            scratch: *scratch,
+            facts: [Fact::None; NREGS],
+        }
+    }
+
+    fn write(&mut self, r: Reg, v: AbsVal) {
+        let ri = r as usize;
+        for f in self.facts.iter_mut() {
+            if f.mentions(ri) {
+                *f = Fact::None;
+            }
+        }
+        self.facts[ri] = Fact::None;
+        self.regs[ri] = v;
+    }
+
+    fn join(a: &State, b: &State) -> State {
+        State {
+            regs: std::array::from_fn(|i| AbsVal::join(a.regs[i], b.regs[i])),
+            scratch: std::array::from_fn(|i| AbsVal::join(a.scratch[i], b.scratch[i])),
+            facts: std::array::from_fn(|i| if a.facts[i] == b.facts[i] {
+                a.facts[i]
+            } else {
+                Fact::None
+            }),
+        }
+    }
+}
+
+/// Widening thresholds: the constants the handler ISA's invariants live
+/// at (round counts, slot bounds, wire ranges).  Climbing intervals jump
+/// to the next threshold so the fixpoint converges without losing the
+/// bounds the checks need.
+const THRESHOLDS: [i64; 17] = [
+    i64::MIN,
+    -2,
+    -1,
+    0,
+    1,
+    2,
+    15,
+    16,
+    17,
+    31,
+    32,
+    47,
+    48,
+    63,
+    64,
+    MAX_P - 1,
+    i64::MAX,
+];
+
+fn widen_iv(old: Iv, new: Iv) -> Iv {
+    let lo = if new.lo < old.lo {
+        *THRESHOLDS.iter().rev().find(|&&t| t <= new.lo).unwrap()
+    } else {
+        old.lo.min(new.lo)
+    };
+    let hi = if new.hi > old.hi {
+        *THRESHOLDS.iter().find(|&&t| t >= new.hi).unwrap()
+    } else {
+        old.hi.max(new.hi)
+    };
+    Iv::new(lo, hi)
+}
+
+fn widen_val(old: AbsVal, new: AbsVal) -> AbsVal {
+    AbsVal {
+        int: match (old.int, new.int) {
+            (Some(o), Some(n)) => Some(widen_iv(o, n)),
+            (o, n) => o.or(n),
+        },
+        ..new
+    }
+}
+
+fn env_iv(what: EnvVal) -> Iv {
+    match what {
+        EnvVal::Rank => Iv::new(0, MAX_P - 1),
+        EnvVal::P => Iv::new(1, MAX_P),
+        EnvVal::Inclusive => Iv::new(0, 1),
+        // RD round structure: an in-protocol step field is a round index.
+        EnvVal::PktStep => Iv::new(0, MAX_ROUNDS),
+        EnvVal::PktSrc => Iv::new(0, MAX_P - 1),
+        // MsgType wire codes are 1..=6.
+        EnvVal::PktKind => Iv::new(1, 6),
+    }
+}
+
+// --------------------------------------------------------- refinement
+
+/// Apply `fact` (known true when `positive`) to the state; `None` means
+/// the branch is infeasible.
+fn refine(mut st: State, fact: Fact, positive: bool) -> Option<State> {
+    match (fact, positive) {
+        (Fact::Lt(a, b), true) => {
+            // a < b
+            let (ia, ib) = (st.regs[a as usize].iv(), st.regs[b as usize].iv());
+            let a_hi = ia.hi.min(ib.hi.saturating_sub(1));
+            let b_lo = ib.lo.max(ia.lo.saturating_add(1));
+            if let Some(iv) = st.regs[a as usize].int.as_mut() {
+                iv.hi = iv.hi.min(a_hi);
+                if iv.lo > iv.hi {
+                    return None;
+                }
+            }
+            if let Some(iv) = st.regs[b as usize].int.as_mut() {
+                iv.lo = iv.lo.max(b_lo);
+                if iv.lo > iv.hi {
+                    return None;
+                }
+            }
+            // chain through 1<<k facts: (1 << k) <= a_hi  =>  k <= log2
+            if let Fact::Shl1(k) = st.facts[a as usize] {
+                if a_hi >= 1 {
+                    if let Some(iv) = st.regs[k as usize].int.as_mut() {
+                        iv.hi = iv.hi.min(ilog2_floor(a_hi));
+                        if iv.lo > iv.hi {
+                            return None;
+                        }
+                    }
+                }
+            }
+        }
+        (Fact::Lt(a, b), false) => {
+            // a >= b
+            let (ia, ib) = (st.regs[a as usize].iv(), st.regs[b as usize].iv());
+            let a_lo = ia.lo.max(ib.lo);
+            let b_hi = ib.hi.min(ia.hi);
+            if let Some(iv) = st.regs[a as usize].int.as_mut() {
+                iv.lo = iv.lo.max(a_lo);
+                if iv.lo > iv.hi {
+                    return None;
+                }
+            }
+            if let Some(iv) = st.regs[b as usize].int.as_mut() {
+                iv.hi = iv.hi.min(b_hi);
+                if iv.lo > iv.hi {
+                    return None;
+                }
+            }
+        }
+        (Fact::SetOf(s), true) => {
+            let v = &mut st.regs[s as usize];
+            if v.pure_empty() && !v.uninit {
+                return None; // definitely Empty: "set" branch infeasible
+            }
+            v.empty = false;
+            v.uninit = false;
+        }
+        (Fact::SetOf(s), false) => {
+            let v = &mut st.regs[s as usize];
+            if !v.empty && !v.uninit {
+                return None; // definitely set: "empty" branch infeasible
+            }
+            v.vec = false;
+            v.int = None;
+            v.empty = true;
+        }
+        _ => {}
+    }
+    Some(st)
+}
+
+/// Refine a branch condition register itself around zero.
+fn refine_cond(mut st: State, cond: Reg, taken_zero: bool) -> Option<State> {
+    if let Some(iv) = st.regs[cond as usize].int.as_mut() {
+        if taken_zero {
+            if iv.disjoint(0, 0) {
+                return None;
+            }
+            *iv = Iv::exact(0);
+        } else {
+            if iv.is_exact() == Some(0) {
+                return None;
+            }
+            if iv.lo == 0 {
+                iv.lo = 1;
+            } else if iv.hi == 0 {
+                iv.hi = -1;
+            }
+        }
+    }
+    Some(st)
+}
+
+// ----------------------------------------------------------- analyzer
+
+struct Analysis {
+    /// Converged in-state per pc (None = unreachable).
+    in_states: Vec<Option<State>>,
+}
+
+/// Scratch slot range a slot register can address (clamped); None if it
+/// can never be a valid slot.
+fn slot_range(v: AbsVal) -> Option<(usize, usize)> {
+    let iv = v.iv();
+    if iv.disjoint(0, SCRATCH_SLOTS as i64 - 1) {
+        return None;
+    }
+    let lo = iv.lo.clamp(0, SCRATCH_SLOTS as i64 - 1) as usize;
+    let hi = iv.hi.clamp(0, SCRATCH_SLOTS as i64 - 1) as usize;
+    Some((lo, hi))
+}
+
+/// Abstract transfer of one instruction: successor (pc, state) pairs.
+/// Terminators push their scratch into `exit_scratch` instead.
+fn transfer(
+    prog: &Program,
+    pc: usize,
+    st: &State,
+    exit_scratch: &mut [AbsVal; SCRATCH_SLOTS],
+) -> Vec<(usize, State)> {
+    let mut out = Vec::with_capacity(2);
+    let mut s = st.clone();
+    match prog.code[pc] {
+        Instr::Imm { dst, val } => {
+            s.write(dst, AbsVal::int(Iv::exact(val)));
+            out.push((pc + 1, s));
+        }
+        Instr::Mov { dst, src } => {
+            let v = s.regs[src as usize];
+            s.write(dst, v);
+            out.push((pc + 1, s));
+        }
+        Instr::Env { dst, what } => {
+            s.write(dst, AbsVal::int(env_iv(what)));
+            out.push((pc + 1, s));
+        }
+        Instr::LdPkt { dst } | Instr::EmptyLike { dst, .. } | Instr::IdentLike { dst, .. } => {
+            s.write(dst, AbsVal::VEC);
+            out.push((pc + 1, s));
+        }
+        Instr::Ld { dst, slot } => {
+            if let Some((lo, hi)) = slot_range(s.regs[slot as usize]) {
+                let mut v = s.scratch[lo];
+                for sl in lo + 1..=hi {
+                    v = AbsVal::join(v, s.scratch[sl]);
+                }
+                s.write(dst, v);
+                out.push((pc + 1, s));
+            }
+            // certainly-OOB slot: the path dies on the VM assert
+        }
+        Instr::St { slot, src } => {
+            let v = s.regs[src as usize];
+            let stored = AbsVal { uninit: false, ..v };
+            if let Some((lo, hi)) = slot_range(s.regs[slot as usize]) {
+                if lo == hi && s.regs[slot as usize].iv().is_exact().is_some() {
+                    s.scratch[lo] = stored; // strong update
+                } else {
+                    for sl in lo..=hi {
+                        s.scratch[sl] = AbsVal::join(s.scratch[sl], stored);
+                    }
+                }
+                out.push((pc + 1, s));
+            }
+        }
+        Instr::Clr { slot } => {
+            if let Some((lo, hi)) = slot_range(s.regs[slot as usize]) {
+                if lo == hi && s.regs[slot as usize].iv().is_exact().is_some() {
+                    s.scratch[lo] = AbsVal::EMPTY;
+                } else {
+                    for sl in lo..=hi {
+                        s.scratch[sl] = AbsVal::join(s.scratch[sl], AbsVal::EMPTY);
+                    }
+                }
+                out.push((pc + 1, s));
+            }
+        }
+        Instr::Alu { op, dst, a, b } => {
+            let (ia, ib) = (s.regs[a as usize].iv(), s.regs[b as usize].iv());
+            s.write(dst, AbsVal::int(alu_iv(op, ia, ib)));
+            // record relational facts for later branch refinement
+            let fact = match op {
+                AluOp::Lt if dst != a && dst != b => Fact::Lt(a, b),
+                AluOp::Shl if dst != b && ia.is_exact() == Some(1) => Fact::Shl1(b),
+                _ => Fact::None,
+            };
+            s.facts[dst as usize] = fact;
+            out.push((pc + 1, s));
+        }
+        Instr::Combine { dst, .. } => {
+            s.write(dst, AbsVal::VEC);
+            out.push((pc + 1, s));
+        }
+        Instr::IsSet { dst, src } => {
+            let v = s.regs[src as usize];
+            let res = if v.pure_empty() {
+                Iv::exact(0) // uninit or Empty both read as Empty
+            } else if !v.empty && !v.uninit {
+                Iv::exact(1)
+            } else {
+                Iv::new(0, 1)
+            };
+            let fact = if dst != src { Fact::SetOf(src) } else { Fact::None };
+            s.write(dst, AbsVal::int(res));
+            s.facts[dst as usize] = fact;
+            out.push((pc + 1, s));
+        }
+        Instr::Jmp { to } => out.push((to, s)),
+        Instr::Jz { cond, to } | Instr::Jnz { cond, to } => {
+            let jz = matches!(prog.code[pc], Instr::Jz { .. });
+            let fact = s.facts[cond as usize];
+            // taken edge
+            let taken_zero = jz; // Jz takes on zero, Jnz on non-zero
+            if let Some(t) = refine_cond(s.clone(), cond, taken_zero)
+                .and_then(|t| refine(t, fact, !jz))
+            {
+                out.push((to, t));
+            }
+            // fall-through edge
+            if let Some(ft) =
+                refine_cond(s, cond, !taken_zero).and_then(|t| refine(t, fact, jz))
+            {
+                out.push((pc + 1, ft));
+            }
+        }
+        Instr::Emit { .. } | Instr::Deliver { .. } => out.push((pc + 1, s)),
+        Instr::Drop | Instr::Halt => {
+            for (e, v) in exit_scratch.iter_mut().zip(s.scratch.iter()) {
+                *e = AbsVal::join(*e, *v);
+            }
+        }
+    }
+    out
+}
+
+/// Visits to a pc before interval widening kicks in.
+const WIDEN_AT: u32 = 6;
+/// Visits to a pc before a full blow-to-top (termination backstop).
+const TOP_AT: u32 = 60;
+
+fn analyze_entry(
+    prog: &Program,
+    entry: usize,
+    entry_scratch: &[AbsVal; SCRATCH_SLOTS],
+    exit_scratch: &mut [AbsVal; SCRATCH_SLOTS],
+) -> Analysis {
+    let n = prog.code.len();
+    let mut in_states: Vec<Option<State>> = vec![None; n];
+    let mut visits = vec![0u32; n];
+    let mut work: VecDeque<usize> = VecDeque::new();
+    in_states[entry] = Some(State::entry(entry_scratch));
+    work.push_back(entry);
+
+    while let Some(pc) = work.pop_front() {
+        let st = in_states[pc].clone().expect("queued pc has a state");
+        for (succ, new_st) in transfer(prog, pc, &st, exit_scratch) {
+            visits[succ] += 1;
+            let joined = match &in_states[succ] {
+                None => new_st,
+                Some(old) => {
+                    let mut j = State::join(old, &new_st);
+                    if visits[succ] >= TOP_AT {
+                        for v in j.regs.iter_mut().chain(j.scratch.iter_mut()) {
+                            if let Some(iv) = v.int.as_mut() {
+                                *iv = Iv::TOP;
+                            }
+                        }
+                    } else if visits[succ] >= WIDEN_AT {
+                        for (jv, ov) in j.regs.iter_mut().zip(old.regs.iter()) {
+                            *jv = widen_val(*ov, *jv);
+                        }
+                        for (jv, ov) in j.scratch.iter_mut().zip(old.scratch.iter()) {
+                            *jv = widen_val(*ov, *jv);
+                        }
+                    }
+                    j
+                }
+            };
+            if in_states[succ].as_ref() != Some(&joined) {
+                in_states[succ] = Some(joined);
+                work.push_back(succ);
+            }
+        }
+    }
+    Analysis { in_states }
+}
+
+// ------------------------------------------------------- structural
+
+/// Structural CFG successors (taken + fall-through).
+fn successors(instr: Instr, pc: usize) -> Vec<usize> {
+    match instr {
+        Instr::Jmp { to } => vec![to],
+        Instr::Jz { to, .. } | Instr::Jnz { to, .. } => vec![to, pc + 1],
+        Instr::Drop | Instr::Halt => vec![],
+        _ => vec![pc + 1],
+    }
+}
+
+/// Every register operand an instruction names.
+fn regs_of(instr: Instr) -> Vec<Reg> {
+    match instr {
+        Instr::Imm { dst, .. } | Instr::Env { dst, .. } | Instr::LdPkt { dst } => vec![dst],
+        Instr::Mov { dst, src }
+        | Instr::EmptyLike { dst, src }
+        | Instr::IdentLike { dst, src }
+        | Instr::IsSet { dst, src } => vec![dst, src],
+        Instr::Ld { dst, slot } => vec![dst, slot],
+        Instr::St { slot, src } => vec![slot, src],
+        Instr::Clr { slot } => vec![slot],
+        Instr::Alu { dst, a, b, .. } | Instr::Combine { dst, a, b } => vec![dst, a, b],
+        Instr::Jz { cond, .. } | Instr::Jnz { cond, .. } => vec![cond],
+        Instr::Emit { dst, step, payload, .. } => vec![dst, step, payload],
+        Instr::Deliver { payload } => vec![payload],
+        Instr::Jmp { .. } | Instr::Drop | Instr::Halt => vec![],
+    }
+}
+
+/// Checks that need no dataflow: entries and jump targets in range,
+/// register indices valid, no fall-through off the end.  Dataflow
+/// assumes these hold, so any hit here returns before it runs.
+fn structural_rejects(prog: &Program) -> Vec<RejectReason> {
+    let mut out = Vec::new();
+    let n = prog.code.len();
+    if prog.on_request >= n {
+        out.push(RejectReason::BadEntry { which: "on_request", target: prog.on_request });
+    }
+    if prog.on_packet >= n {
+        out.push(RejectReason::BadEntry { which: "on_packet", target: prog.on_packet });
+    }
+    for (pc, instr) in prog.code.iter().enumerate() {
+        for reg in regs_of(*instr) {
+            if reg as usize >= NREGS {
+                out.push(RejectReason::BadRegister { pc, reg });
+            }
+        }
+        if let Instr::Jmp { to } | Instr::Jz { to, .. } | Instr::Jnz { to, .. } = *instr {
+            if to >= n {
+                out.push(RejectReason::BadTarget { pc, target: to });
+            }
+        }
+    }
+    if n > 0 && !matches!(prog.code[n - 1], Instr::Halt | Instr::Drop | Instr::Jmp { .. }) {
+        out.push(RejectReason::MissingHalt { pc: n - 1 });
+    }
+    out
+}
+
+// -------------------------------------------------- termination + cost
+
+/// Strongly connected components of the reachable CFG, iterative Tarjan.
+/// Emitted sinks-first (reverse topological order of the condensation).
+fn sccs(n: usize, succs: &[Vec<usize>], reach: &[bool]) -> Vec<Vec<usize>> {
+    let mut index = vec![usize::MAX; n];
+    let mut low = vec![0usize; n];
+    let mut on_stack = vec![false; n];
+    let mut stack: Vec<usize> = Vec::new();
+    let mut next = 0usize;
+    let mut comps: Vec<Vec<usize>> = Vec::new();
+    for start in 0..n {
+        if !reach[start] || index[start] != usize::MAX {
+            continue;
+        }
+        let mut frames: Vec<(usize, usize)> = vec![(start, 0)];
+        while let Some(frame) = frames.last_mut() {
+            let v = frame.0;
+            if frame.1 == 0 && index[v] == usize::MAX {
+                index[v] = next;
+                low[v] = next;
+                next += 1;
+                stack.push(v);
+                on_stack[v] = true;
+            }
+            if frame.1 < succs[v].len() {
+                let w = succs[v][frame.1];
+                frame.1 += 1;
+                if index[w] == usize::MAX {
+                    frames.push((w, 0));
+                } else if on_stack[w] {
+                    low[v] = low[v].min(index[w]);
+                }
+            } else {
+                frames.pop();
+                if let Some(parent) = frames.last() {
+                    let u = parent.0;
+                    low[u] = low[u].min(low[v]);
+                }
+                if low[v] == index[v] {
+                    let mut comp = Vec::new();
+                    loop {
+                        let w = stack.pop().expect("tarjan stack");
+                        on_stack[w] = false;
+                        comp.push(w);
+                        if w == v {
+                            break;
+                        }
+                    }
+                    comps.push(comp);
+                }
+            }
+        }
+    }
+    comps
+}
+
+/// Worst-case instruction bound per activation.  Every nontrivial SCC
+/// costs `|SCC| * LOOP_BOUND^B` instructions (B = backwards program-order
+/// edges inside it: each is an RD-round back-edge taken at most
+/// [`LOOP_BOUND`] times, and any cycle must contain one); trivial nodes
+/// cost 1.  The entry bound is the longest path through the SCC
+/// condensation, which the sinks-first emission order makes a single
+/// backwards sweep.
+fn cost_bound(
+    prog: &Program,
+    succs: &[Vec<usize>],
+    reach: &[bool],
+) -> (CostReport, Vec<RejectReason>) {
+    let n = prog.code.len();
+    let comps = sccs(n, succs, reach);
+    let mut comp_of = vec![usize::MAX; n];
+    for (ci, comp) in comps.iter().enumerate() {
+        for &v in comp {
+            comp_of[v] = ci;
+        }
+    }
+    let mut cost: Vec<u128> = Vec::with_capacity(comps.len());
+    let mut loops: Vec<LoopReport> = Vec::new();
+    for comp in &comps {
+        let me = comp_of[comp[0]];
+        let nontrivial = comp.len() > 1 || succs[comp[0]].contains(&comp[0]);
+        if !nontrivial {
+            cost.push(1);
+            continue;
+        }
+        let mut back = 0usize;
+        for &u in comp {
+            for &w in &succs[u] {
+                if comp_of[w] == me && w <= u {
+                    back += 1;
+                }
+            }
+        }
+        let back = back.max(1);
+        let iters = (LOOP_BOUND as u128).checked_pow(back.min(8) as u32).unwrap_or(u128::MAX);
+        let bound = (comp.len() as u128).saturating_mul(iters);
+        loops.push(LoopReport {
+            head: *comp.iter().min().expect("nonempty scc"),
+            body: comp.len(),
+            back_edges: back,
+            bound: bound.min(usize::MAX as u128) as usize,
+        });
+        cost.push(bound);
+    }
+    let mut best = vec![0u128; comps.len()];
+    for (ci, comp) in comps.iter().enumerate() {
+        let mut downstream = 0u128;
+        for &v in comp {
+            for &w in &succs[v] {
+                let cw = comp_of[w];
+                if cw != ci {
+                    downstream = downstream.max(best[cw]);
+                }
+            }
+        }
+        best[ci] = cost[ci].saturating_add(downstream);
+    }
+    let bound_of =
+        |entry: usize| -> usize { best[comp_of[entry]].min(usize::MAX as u128) as usize };
+    let on_request_bound = bound_of(prog.on_request);
+    let on_packet_bound = bound_of(prog.on_packet);
+    let mut rejects = Vec::new();
+    if on_request_bound > MAX_STEPS {
+        rejects
+            .push(RejectReason::BudgetExceeded { entry: "on_request", bound: on_request_bound });
+    }
+    if on_packet_bound > MAX_STEPS {
+        rejects.push(RejectReason::BudgetExceeded { entry: "on_packet", bound: on_packet_bound });
+    }
+    loops.sort_by_key(|l| l.head);
+    (CostReport { on_request_bound, on_packet_bound, loops }, rejects)
+}
+
+// ---------------------------------------------------------- check pass
+
+/// Rejection checks for one instruction against its converged in-state.
+/// Run only after the fixpoint: transient states mid-analysis would
+/// produce spurious findings.
+fn check_instr(pc: usize, instr: Instr, st: &State) -> Vec<RejectReason> {
+    let mut out = Vec::new();
+    let int_read = |r: Reg, out: &mut Vec<RejectReason>| {
+        let v = st.regs[r as usize];
+        if v.uninit {
+            out.push(RejectReason::UninitRead { pc, reg: r });
+        } else if v.int.is_none() {
+            out.push(RejectReason::DtypeMismatch { pc, reg: r, expected: "integer" });
+        }
+    };
+    let vec_read = |r: Reg, out: &mut Vec<RejectReason>| {
+        let v = st.regs[r as usize];
+        if v.uninit {
+            out.push(RejectReason::UninitRead { pc, reg: r });
+        } else if !v.vec {
+            out.push(RejectReason::DtypeMismatch { pc, reg: r, expected: "payload" });
+        }
+    };
+    let any_read = |r: Reg, out: &mut Vec<RejectReason>| {
+        if st.regs[r as usize].uninit {
+            out.push(RejectReason::UninitRead { pc, reg: r });
+        }
+    };
+    let slot_bounds = |r: Reg, out: &mut Vec<RejectReason>| {
+        let v = st.regs[r as usize];
+        if !v.uninit {
+            if let Some(iv) = v.int {
+                if !iv.within(0, SCRATCH_SLOTS as i64 - 1) {
+                    out.push(RejectReason::ScratchOob { pc, lo: iv.lo, hi: iv.hi });
+                }
+            }
+        }
+    };
+    match instr {
+        Instr::Imm { .. } | Instr::Env { .. } | Instr::LdPkt { .. } => {}
+        Instr::Mov { src, .. } | Instr::IsSet { src, .. } => any_read(src, &mut out),
+        Instr::EmptyLike { src, .. } | Instr::IdentLike { src, .. } => vec_read(src, &mut out),
+        Instr::Ld { slot, .. } | Instr::Clr { slot } => {
+            int_read(slot, &mut out);
+            slot_bounds(slot, &mut out);
+        }
+        Instr::St { slot, src } => {
+            int_read(slot, &mut out);
+            slot_bounds(slot, &mut out);
+            any_read(src, &mut out);
+        }
+        Instr::Alu { op, a, b, .. } => {
+            int_read(a, &mut out);
+            int_read(b, &mut out);
+            if matches!(op, AluOp::Shl | AluOp::Shr) {
+                let v = st.regs[b as usize];
+                if !v.uninit {
+                    if let Some(iv) = v.int {
+                        if !iv.within(0, 63) {
+                            out.push(RejectReason::ShiftRange { pc, lo: iv.lo, hi: iv.hi });
+                        }
+                    }
+                }
+            }
+        }
+        Instr::Combine { a, b, .. } => {
+            vec_read(a, &mut out);
+            vec_read(b, &mut out);
+        }
+        Instr::Jz { cond, .. } | Instr::Jnz { cond, .. } => int_read(cond, &mut out),
+        Instr::Emit { dst, step, payload, .. } => {
+            int_read(dst, &mut out);
+            int_read(step, &mut out);
+            vec_read(payload, &mut out);
+            // only *certain* wire violations are static facts; "maybe
+            // out of [0, p)" is the runtime assert's job
+            let d = st.regs[dst as usize];
+            if !d.uninit {
+                if let Some(iv) = d.int {
+                    if iv.disjoint(0, MAX_P - 1) {
+                        out.push(RejectReason::WireRange { pc, lo: iv.lo, hi: iv.hi });
+                    }
+                }
+            }
+            let sv = st.regs[step as usize];
+            if !sv.uninit {
+                if let Some(iv) = sv.int {
+                    if iv.disjoint(0, u16::MAX as i64) {
+                        out.push(RejectReason::WireRange { pc, lo: iv.lo, hi: iv.hi });
+                    }
+                }
+            }
+        }
+        Instr::Deliver { payload } => vec_read(payload, &mut out),
+        Instr::Jmp { .. } | Instr::Drop | Instr::Halt => {}
+    }
+    out
+}
+
+// ------------------------------------------------------------- verify
+
+/// Statically verify a handler program.  `Ok` carries the proof
+/// artifacts (worst-case activation bounds); `Err` carries every
+/// finding, most fundamental first.
+pub fn verify(prog: &Program) -> Result<CostReport, Vec<RejectReason>> {
+    let mut rejects = structural_rejects(prog);
+    if !rejects.is_empty() {
+        return Err(rejects);
+    }
+    let n = prog.code.len();
+    let succs: Vec<Vec<usize>> = (0..n).map(|pc| successors(prog.code[pc], pc)).collect();
+
+    // reachability from both entries
+    let mut reach = vec![false; n];
+    let mut stack = vec![prog.on_request, prog.on_packet];
+    while let Some(v) = stack.pop() {
+        if !reach[v] {
+            reach[v] = true;
+            for &w in &succs[v] {
+                stack.push(w);
+            }
+        }
+    }
+
+    // termination: every reachable pc must reach a Halt/Drop
+    let mut preds: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for v in 0..n {
+        if reach[v] {
+            for &w in &succs[v] {
+                preds[w].push(v);
+            }
+        }
+    }
+    let mut can_exit = vec![false; n];
+    let mut stack: Vec<usize> = (0..n)
+        .filter(|&v| reach[v] && matches!(prog.code[v], Instr::Halt | Instr::Drop))
+        .collect();
+    for &v in &stack {
+        can_exit[v] = true;
+    }
+    while let Some(v) = stack.pop() {
+        for &u in &preds[v] {
+            if !can_exit[u] {
+                can_exit[u] = true;
+                stack.push(u);
+            }
+        }
+    }
+    if let Some(pc) = (0..n).find(|&v| reach[v] && !can_exit[v]) {
+        rejects.push(RejectReason::NoTermination { pc });
+    }
+
+    // worst-case instruction budget
+    let (report, budget_rejects) = cost_bound(prog, &succs, &reach);
+    rejects.extend(budget_rejects);
+
+    // dataflow, with the inter-activation scratch fixpoint: the
+    // scratchpad persists across activations, so each entry is analyzed
+    // against the join of every exit's scratch state until stable
+    let mut entry_scratch = [AbsVal::EMPTY; SCRATCH_SLOTS];
+    let mut rounds = 0usize;
+    let (req_an, pkt_an) = loop {
+        rounds += 1;
+        let mut out_scratch = entry_scratch;
+        let a = analyze_entry(prog, prog.on_request, &entry_scratch, &mut out_scratch);
+        let b = analyze_entry(prog, prog.on_packet, &entry_scratch, &mut out_scratch);
+        let mut next = entry_scratch;
+        let mut changed = false;
+        for i in 0..SCRATCH_SLOTS {
+            let mut j = AbsVal::join(entry_scratch[i], out_scratch[i]);
+            if rounds > 4 {
+                j = widen_val(entry_scratch[i], j);
+            }
+            if rounds > 32 {
+                if let Some(iv) = j.int.as_mut() {
+                    *iv = Iv::TOP;
+                }
+            }
+            if j != next[i] {
+                next[i] = j;
+                changed = true;
+            }
+        }
+        if !changed {
+            break (a, b);
+        }
+        entry_scratch = next;
+    };
+
+    for an in [&req_an, &pkt_an] {
+        for (pc, st) in an.in_states.iter().enumerate() {
+            if let Some(st) = st {
+                for r in check_instr(pc, prog.code[pc], st) {
+                    if !rejects.contains(&r) {
+                        rejects.push(r);
+                    }
+                }
+            }
+        }
+    }
+    if rejects.is_empty() {
+        Ok(report)
+    } else {
+        Err(rejects)
+    }
+}
+
+/// Verify at image-build time.  A rejected program never reaches the
+/// cluster: this panics with the full finding list, naming the image.
+pub fn verify_or_panic(prog: &Program) -> CostReport {
+    match verify(prog) {
+        Ok(report) => report,
+        Err(reasons) => {
+            let lines: Vec<String> =
+                reasons.iter().map(|r| format!("  {r} [{}]", r.class())).collect();
+            panic!(
+                "handler program {} rejected by the static verifier:\n{}",
+                prog.name,
+                lines.join("\n")
+            );
+        }
+    }
+}
+
+// --------------------------------------------------------------- tests
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nic::programs::program_for;
+    use crate::nic::vm::Asm;
+    use crate::packet::CollType;
+
+    /// Reject classes for a program the verifier must refuse.
+    fn classes(prog: &Program) -> Vec<&'static str> {
+        verify(prog).expect_err("must reject").iter().map(|r| r.class()).collect()
+    }
+
+    #[test]
+    fn shipped_images_verify_within_budget() {
+        for coll in CollType::HANDLER_SET {
+            let prog = program_for(coll);
+            let report = verify(prog).unwrap_or_else(|rs| {
+                let lines: Vec<String> = rs.iter().map(|r| r.to_string()).collect();
+                panic!("{coll:?} rejected:\n{}", lines.join("\n"))
+            });
+            assert!(
+                report.on_request_bound <= MAX_STEPS && report.on_packet_bound <= MAX_STEPS,
+                "{coll:?}: bounds {}/{} exceed {MAX_STEPS}",
+                report.on_request_bound,
+                report.on_packet_bound
+            );
+            assert!(report.on_request_bound > 0 && report.on_packet_bound > 0);
+        }
+    }
+
+    #[test]
+    fn scan_image_reports_bounded_loops() {
+        let report = verify(program_for(CollType::Scan)).expect("scan verifies");
+        assert!(!report.loops.is_empty(), "scan's advance loop must be reported");
+        for l in &report.loops {
+            assert!(l.back_edges >= 1);
+            assert!(l.bound <= MAX_STEPS, "loop @{} bound {} too large", l.head, l.bound);
+        }
+    }
+
+    #[test]
+    fn accepts_rd_style_counting_loop() {
+        // k = 0; while (1 << k) < p { k += 1 } — the idiom every shipped
+        // program uses.  Acceptance hinges on the Shl1 fact: falling
+        // through the guard proves (1 << k) < p <= 2^16, hence k <= 15,
+        // so the shift amount stays provably in range.
+        let mut a = Asm::new();
+        let entry = a.label();
+        a.bind(entry);
+        a.imm(0, 0); // k
+        a.imm(1, 1);
+        let head = a.label();
+        let done = a.label();
+        a.bind(head);
+        a.alu(AluOp::Shl, 2, 1, 0); // 1 << k
+        a.env(3, EnvVal::P);
+        a.alu(AluOp::Lt, 4, 2, 3);
+        a.jz(4, done);
+        a.alu(AluOp::Add, 0, 0, 1);
+        a.jmp(head);
+        a.bind(done);
+        a.halt();
+        let prog = a.finish("t-rdloop", entry, entry);
+        let report = verify(&prog).expect("rd counting loop verifies");
+        assert!(report.on_request_bound <= MAX_STEPS);
+        assert_eq!(report.loops.len(), 1);
+    }
+
+    #[test]
+    fn rejects_uninit_read() {
+        let mut a = Asm::new();
+        let entry = a.label();
+        a.bind(entry);
+        a.alu(AluOp::Add, 0, 1, 2); // r1, r2 never written
+        a.halt();
+        let prog = a.finish("t-uninit", entry, entry);
+        assert!(classes(&prog).contains(&"uninit-read"));
+    }
+
+    #[test]
+    fn rejects_fall_through_off_the_end() {
+        let mut a = Asm::new();
+        let entry = a.label();
+        a.bind(entry);
+        a.imm(0, 1);
+        let prog = a.finish("t-fallthrough", entry, entry);
+        assert!(classes(&prog).contains(&"missing-halt"));
+    }
+
+    #[test]
+    fn rejects_inescapable_loop() {
+        let mut a = Asm::new();
+        let entry = a.label();
+        a.bind(entry);
+        a.jmp(entry);
+        let prog = a.finish("t-spin", entry, entry);
+        assert!(classes(&prog).contains(&"no-termination"));
+    }
+
+    #[test]
+    fn rejects_scratch_oob() {
+        let mut a = Asm::new();
+        let entry = a.label();
+        a.bind(entry);
+        a.imm(0, SCRATCH_SLOTS as i64); // one past the end
+        a.imm(1, 7);
+        a.st(0, 1);
+        a.halt();
+        let prog = a.finish("t-oob", entry, entry);
+        assert!(classes(&prog).contains(&"scratch-oob"));
+    }
+
+    #[test]
+    fn rejects_combine_on_integers() {
+        let mut a = Asm::new();
+        let entry = a.label();
+        a.bind(entry);
+        a.imm(0, 1);
+        a.imm(1, 2);
+        a.combine(2, 0, 1);
+        a.halt();
+        let prog = a.finish("t-dtype", entry, entry);
+        assert!(classes(&prog).contains(&"dtype-mismatch"));
+    }
+
+    #[test]
+    fn rejects_shift_out_of_range() {
+        let mut a = Asm::new();
+        let entry = a.label();
+        a.bind(entry);
+        a.imm(0, 1);
+        a.imm(1, 64); // amount provably outside 0..64
+        a.alu(AluOp::Shl, 2, 0, 1);
+        a.halt();
+        let prog = a.finish("t-shift", entry, entry);
+        assert!(classes(&prog).contains(&"shift-range"));
+    }
+
+    #[test]
+    fn rejects_budget_blowup() {
+        // one structural loop whose body alone pushes body * LOOP_BOUND
+        // past the activation budget
+        let mut a = Asm::new();
+        let entry = a.label();
+        a.bind(entry);
+        a.imm(0, 0);
+        a.imm(1, 1);
+        let head = a.label();
+        a.bind(head);
+        for _ in 0..300 {
+            a.alu(AluOp::Add, 0, 0, 1);
+        }
+        a.env(2, EnvVal::P);
+        a.alu(AluOp::Lt, 3, 0, 2);
+        a.jnz(3, head);
+        a.halt();
+        let prog = a.finish("t-budget", entry, entry);
+        assert!(classes(&prog).contains(&"budget"));
+    }
+
+    #[test]
+    fn rejects_bad_target_and_bad_entry() {
+        let prog = Program {
+            name: "t-badjump",
+            code: vec![Instr::Jmp { to: 99 }, Instr::Halt],
+            on_request: 0,
+            on_packet: 0,
+        };
+        assert!(classes(&prog).contains(&"bad-target"));
+        let prog = Program {
+            name: "t-badentry",
+            code: vec![Instr::Halt],
+            on_request: 5,
+            on_packet: 0,
+        };
+        assert!(classes(&prog).contains(&"bad-entry"));
+    }
+
+    #[test]
+    fn reject_display_names_the_site() {
+        let r = RejectReason::UninitRead { pc: 7, reg: 3 };
+        let s = r.to_string();
+        assert!(s.contains("@7") && s.contains("r3"), "{s}");
+        assert_eq!(r.class(), "uninit-read");
+    }
+}

@@ -32,9 +32,11 @@
 //! the fixed-function path.  Cycles accumulate in [`EngineCtx::cycles`]
 //! and the NIC converts them to virtual time as usual.
 
+use std::fmt;
+
 use crate::data::Payload;
 use crate::fpga::engine::{EngineCtx, NicAction};
-use crate::packet::{CollPacket, MsgType};
+use crate::packet::{CollPacket, CollType, MsgType};
 use crate::sim::OffloadRequest;
 
 /// General-purpose registers per activation.
@@ -175,24 +177,48 @@ pub enum Activation<'a> {
     Packet(&'a CollPacket),
 }
 
-fn as_int(v: &Val, prog: &str, pc: usize) -> i64 {
+/// Panic-site context: which image, which flow (collective, rank,
+/// epoch), which pc.  A dynamic trip is the verifier's backstop — when
+/// one fires mid-simulation the message must identify the exact flow,
+/// not just the program.  Formatted only inside a panic, so the hot
+/// path never allocates for it.
+#[derive(Clone, Copy)]
+struct Site<'a> {
+    prog: &'a str,
+    coll: CollType,
+    rank: usize,
+    epoch: u16,
+    pc: usize,
+}
+
+impl fmt::Display for Site<'_> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}[{:?} rank {} epoch {}]@{}",
+            self.prog, self.coll, self.rank, self.epoch, self.pc
+        )
+    }
+}
+
+fn as_int(v: &Val, site: Site<'_>) -> i64 {
     match v {
         Val::Int(i) => *i,
-        other => panic!("{prog}@{pc}: expected integer register, got {other:?}"),
+        other => panic!("{site}: expected integer register, got {other:?}"),
     }
 }
 
-fn as_vec<'a>(v: &'a Val, prog: &str, pc: usize) -> &'a Payload {
+fn as_vec<'a>(v: &'a Val, site: Site<'_>) -> &'a Payload {
     match v {
         Val::Vec(p) => p,
-        other => panic!("{prog}@{pc}: expected payload register, got {other:?}"),
+        other => panic!("{site}: expected payload register, got {other:?}"),
     }
 }
 
-fn into_vec(v: Val, prog: &str, pc: usize) -> Payload {
+fn into_vec(v: Val, site: Site<'_>) -> Payload {
     match v {
         Val::Vec(p) => p,
-        other => panic!("{prog}@{pc}: expected payload register, got {other:?}"),
+        other => panic!("{site}: expected payload register, got {other:?}"),
     }
 }
 
@@ -214,13 +240,17 @@ pub fn run(
         Activation::Packet(_) => prog.on_packet,
     };
     let mut steps = 0usize;
+    // flow identity, copied out so `site` doesn't hold a borrow of the
+    // ctx the loop mutates
+    let (coll, rank, epoch) = (ctx.coll, ctx.rank, ctx.epoch);
+    let site = move |pc: usize| Site { prog: prog.name, coll, rank, epoch, pc };
     loop {
-        assert!(pc < prog.code.len(), "{}: pc {pc} out of range", prog.name);
+        assert!(pc < prog.code.len(), "{}: pc {pc} out of range", site(pc));
         steps += 1;
         assert!(
             steps <= MAX_STEPS,
             "{}: instruction budget exceeded ({MAX_STEPS}) — runaway handler",
-            prog.name
+            site(pc)
         );
         ctx.instrs += 1;
         ctx.cycles += ctx.cost.handler_instr_cycles;
@@ -229,7 +259,7 @@ pub fn run(
         pc += 1;
         let r = |reg: Reg| -> usize {
             let i = reg as usize;
-            assert!(i < NREGS, "{}@{at}: register r{reg} out of range", prog.name);
+            assert!(i < NREGS, "{}: register r{reg} out of range", site(at));
             i
         };
         match instr {
@@ -263,21 +293,21 @@ pub fn run(
                 regs[r(dst)] = Val::Vec(p);
             }
             Instr::EmptyLike { dst, src } => {
-                let like = as_vec(&regs[r(src)], prog.name, at);
+                let like = as_vec(&regs[r(src)], site(at));
                 regs[r(dst)] = Val::Vec(like.slice(0, 0));
             }
             Instr::IdentLike { dst, src } => {
-                let like = as_vec(&regs[r(src)], prog.name, at).clone();
+                let like = as_vec(&regs[r(src)], site(at)).clone();
                 regs[r(dst)] = Val::Vec(ctx.identity(&like));
             }
             Instr::Ld { dst, slot } => {
-                let s = as_int(&regs[r(slot)], prog.name, at) as usize;
-                assert!(s < SCRATCH_SLOTS, "{}@{at}: scratch slot {s} out of range", prog.name);
+                let s = as_int(&regs[r(slot)], site(at)) as usize;
+                assert!(s < SCRATCH_SLOTS, "{}: scratch slot {s} out of range", site(at));
                 regs[r(dst)] = flow.scratch[s].clone();
             }
             Instr::St { slot, src } => {
-                let s = as_int(&regs[r(slot)], prog.name, at) as usize;
-                assert!(s < SCRATCH_SLOTS, "{}@{at}: scratch slot {s} out of range", prog.name);
+                let s = as_int(&regs[r(slot)], site(at)) as usize;
+                assert!(s < SCRATCH_SLOTS, "{}: scratch slot {s} out of range", site(at));
                 let v = regs[r(src)].clone();
                 if let Val::Vec(p) = &v {
                     ctx.cycles += ctx.cost.handler_copy_cycles(p.byte_len());
@@ -285,24 +315,24 @@ pub fn run(
                 flow.scratch[s] = v;
             }
             Instr::Clr { slot } => {
-                let s = as_int(&regs[r(slot)], prog.name, at) as usize;
-                assert!(s < SCRATCH_SLOTS, "{}@{at}: scratch slot {s} out of range", prog.name);
+                let s = as_int(&regs[r(slot)], site(at)) as usize;
+                assert!(s < SCRATCH_SLOTS, "{}: scratch slot {s} out of range", site(at));
                 flow.scratch[s] = Val::Empty;
             }
             Instr::Alu { op, dst, a, b } => {
-                let x = as_int(&regs[r(a)], prog.name, at);
-                let y = as_int(&regs[r(b)], prog.name, at);
+                let x = as_int(&regs[r(a)], site(at));
+                let y = as_int(&regs[r(b)], site(at));
                 let v = match op {
                     AluOp::Add => x.wrapping_add(y),
                     AluOp::Sub => x.wrapping_sub(y),
                     AluOp::Xor => x ^ y,
                     AluOp::And => x & y,
                     AluOp::Shl => {
-                        assert!((0..64).contains(&y), "{}@{at}: shift {y}", prog.name);
+                        assert!((0..64).contains(&y), "{}: shift {y}", site(at));
                         x << y
                     }
                     AluOp::Shr => {
-                        assert!((0..64).contains(&y), "{}@{at}: shift {y}", prog.name);
+                        assert!((0..64).contains(&y), "{}: shift {y}", site(at));
                         x >> y
                     }
                     AluOp::Lt => (x < y) as i64,
@@ -317,23 +347,23 @@ pub fn run(
                 // register uniquely owns its payload.  Operand order is
                 // preserved bit-for-bit in all cases.
                 let res = if a == b {
-                    let x = as_vec(&regs[r(a)], prog.name, at).clone();
+                    let x = as_vec(&regs[r(a)], site(at)).clone();
                     let mut v = x.clone();
                     ctx.combine_into(&mut v, &x);
                     v
                 } else if dst == a {
-                    let mut v = into_vec(std::mem::take(&mut regs[r(a)]), prog.name, at);
-                    let y = as_vec(&regs[r(b)], prog.name, at);
+                    let mut v = into_vec(std::mem::take(&mut regs[r(a)]), site(at));
+                    let y = as_vec(&regs[r(b)], site(at));
                     ctx.combine_into(&mut v, y); // v = a (op) b
                     v
                 } else if dst == b {
-                    let mut v = into_vec(std::mem::take(&mut regs[r(b)]), prog.name, at);
-                    let x = as_vec(&regs[r(a)], prog.name, at);
+                    let mut v = into_vec(std::mem::take(&mut regs[r(b)]), site(at));
+                    let x = as_vec(&regs[r(a)], site(at));
                     ctx.combine_into_rev(&mut v, x); // v = a (op) b
                     v
                 } else {
-                    let mut v = as_vec(&regs[r(a)], prog.name, at).clone();
-                    let y = as_vec(&regs[r(b)], prog.name, at);
+                    let mut v = as_vec(&regs[r(a)], site(at)).clone();
+                    let y = as_vec(&regs[r(b)], site(at));
                     ctx.combine_into(&mut v, y);
                     v
                 };
@@ -345,25 +375,25 @@ pub fn run(
             }
             Instr::Jmp { to } => pc = to,
             Instr::Jz { cond, to } => {
-                if as_int(&regs[r(cond)], prog.name, at) == 0 {
+                if as_int(&regs[r(cond)], site(at)) == 0 {
                     pc = to;
                 }
             }
             Instr::Jnz { cond, to } => {
-                if as_int(&regs[r(cond)], prog.name, at) != 0 {
+                if as_int(&regs[r(cond)], site(at)) != 0 {
                     pc = to;
                 }
             }
             Instr::Emit { dst, mt, step, payload } => {
-                let d = as_int(&regs[r(dst)], prog.name, at);
-                assert!(d >= 0 && (d as usize) < ctx.p, "{}@{at}: emit dst {d}", prog.name);
-                let s = as_int(&regs[r(step)], prog.name, at);
+                let d = as_int(&regs[r(dst)], site(at));
+                assert!(d >= 0 && (d as usize) < ctx.p, "{}: emit dst {d}", site(at));
+                let s = as_int(&regs[r(step)], site(at));
                 assert!(
                     (0..=u16::MAX as i64).contains(&s),
-                    "{}@{at}: emit step {s} out of wire range",
-                    prog.name
+                    "{}: emit step {s} out of wire range",
+                    site(at)
                 );
-                let p = as_vec(&regs[r(payload)], prog.name, at).clone();
+                let p = as_vec(&regs[r(payload)], site(at)).clone();
                 ctx.cycles += ctx.cost.handler_copy_cycles(p.byte_len());
                 out.push(NicAction::Send {
                     dst: d as usize,
@@ -374,7 +404,7 @@ pub fn run(
                 });
             }
             Instr::Deliver { payload } => {
-                let p = as_vec(&regs[r(payload)], prog.name, at).clone();
+                let p = as_vec(&regs[r(payload)], site(at)).clone();
                 ctx.cycles += ctx.cost.handler_copy_cycles(p.byte_len());
                 flow.delivered = true;
                 out.push(NicAction::Deliver { payload: p });
@@ -558,12 +588,33 @@ mod tests {
             p: 4,
             inclusive: true,
             op: Op::Sum,
+            coll: CollType::Scan,
+            epoch: 0,
             compute,
             cost,
             cycles: 0,
             instrs: 0,
             stalls: 0,
         }
+    }
+
+    #[test]
+    #[should_panic(expected = "[Scan rank 1 epoch 0]")]
+    fn dynamic_trips_name_the_flow() {
+        // reading an integer out of a never-written register must say
+        // which flow (collective, rank, epoch) hit it, not just which
+        // program — the whole point of the flow-attributed Site
+        let mut a = Asm::new();
+        let entry = a.label();
+        a.bind(entry);
+        a.alu(AluOp::Add, 0, 1, 2);
+        a.halt();
+        let prog = a.finish("t-site", entry, entry);
+        let (compute, cost) = ctx_parts();
+        let mut ctx = make_ctx(&compute, &cost);
+        let mut flow = Flow::new();
+        let r = req(&[1]);
+        run(&prog, &mut flow, &mut ctx, Activation::Request(&r));
     }
 
     #[test]

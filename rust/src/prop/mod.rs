@@ -11,6 +11,8 @@ use crate::sim::SplitMix64;
 
 #[cfg(test)]
 pub mod cross;
+#[cfg(test)]
+pub mod verifier;
 
 /// Refcount for the global panic-hook suppression: `for_each_case` probes
 /// cases under `catch_unwind`, and without this every *expected* failure

@@ -1,0 +1,428 @@
+//! Verifier-vs-VM agreement properties.
+//!
+//! Two directions, per the verifier's soundness contract:
+//!
+//! - **accept soundness** — for random *well-formed* programs (drawn
+//!   from a generator that respects the machine's invariants by
+//!   construction), the verifier must accept, and the VM must then run
+//!   random activations without tripping a single dynamic assert;
+//!   moreover each activation must retire no more instructions than the
+//!   verifier's worst-case bound for its entry;
+//! - **reject completeness over known classes** — mutating a
+//!   well-formed program with a fault of a known invariant class
+//!   (uninit read, scratch OOB, missing halt, budget blowup, dtype
+//!   mismatch, unbounded loop, bad target) must make the verifier
+//!   reject with exactly that class among its findings.  Every
+//!   mutation here is *structural* — the witness is the appended
+//!   ill-formed block itself — which is the "reject reason is
+//!   structural" arm of the contract.
+
+use crate::config::CostModel;
+use crate::data::{Dtype, Op, Payload};
+use crate::fpga::engine::EngineCtx;
+use crate::nic::verify::{verify, RejectReason};
+use crate::nic::vm::{
+    run, Activation, AluOp, Asm, EnvVal, Flow, Instr, Program, Reg, MAX_STEPS,
+};
+use crate::packet::{AlgoType, CollPacket, CollType, MsgType, NodeType};
+use crate::prop::{choose, for_each_case};
+use crate::runtime::NativeEngine;
+use crate::sim::{OffloadRequest, SplitMix64};
+
+/// Register conventions for generated programs.  r5 always holds the
+/// pristine packet payload (so the payload pool is never empty), r14 is
+/// NEVER written — the uninit-read mutation depends on that.
+const POOL: [Reg; 5] = [0, 1, 2, 3, 4];
+const PKT: Reg = 5;
+const LOOP_I: Reg = 10;
+const LOOP_ONE: Reg = 11;
+const LOOP_LIM: Reg = 12;
+const TMP: Reg = 13;
+const NEVER: Reg = 14;
+
+/// Tracks which registers the generated program has definitely
+/// initialized (on every path), split by abstract type.
+struct Gen {
+    asm: Asm,
+    ints: Vec<Reg>,
+    vecs: Vec<Reg>,
+}
+
+impl Gen {
+    fn int(&self, rng: &mut SplitMix64) -> Reg {
+        *choose(rng, &self.ints)
+    }
+    fn vec(&self, rng: &mut SplitMix64) -> Reg {
+        *choose(rng, &self.vecs)
+    }
+    /// A destination: overwrite a pool register (possibly changing its
+    /// type), keeping the tracking lists consistent.  Never retires the
+    /// last initialized integer — operand selection must always have
+    /// something to draw from (r5 keeps the payload pool nonempty).
+    fn fresh(&mut self, rng: &mut SplitMix64, is_vec: bool) -> Reg {
+        let dst = loop {
+            let d = *choose(rng, &POOL);
+            if is_vec && self.ints.len() == 1 && self.ints[0] == d {
+                continue;
+            }
+            break d;
+        };
+        self.ints.retain(|&r| r != dst);
+        self.vecs.retain(|&r| r != dst);
+        if is_vec {
+            self.vecs.push(dst);
+        } else {
+            self.ints.push(dst);
+        }
+        dst
+    }
+
+    /// One safe instruction.  `in_block` suppresses writes to registers
+    /// that are not yet initialized on the other path of a branch.
+    fn safe_instr(&mut self, rng: &mut SplitMix64, in_block: bool) {
+        // inside a conditionally-skipped block only overwrite registers
+        // that are ALREADY initialized, so the join stays initialized
+        let pick_dst = |g: &mut Gen, rng: &mut SplitMix64, is_vec: bool| -> Option<Reg> {
+            if !in_block {
+                return Some(g.fresh(rng, is_vec));
+            }
+            let pool = if is_vec { &g.vecs } else { &g.ints };
+            if pool.is_empty() {
+                None
+            } else {
+                Some(*choose(rng, pool))
+            }
+        };
+        match rng.next_below(10) {
+            0 | 1 => {
+                if let Some(dst) = pick_dst(self, rng, false) {
+                    let val = rng.range_i64(-4, 64);
+                    self.asm.imm(dst, val);
+                }
+            }
+            2 => {
+                if let Some(dst) = pick_dst(self, rng, false) {
+                    let what = *choose(
+                        rng,
+                        &[EnvVal::Rank, EnvVal::P, EnvVal::Inclusive, EnvVal::PktStep,
+                          EnvVal::PktSrc, EnvVal::PktKind],
+                    );
+                    self.asm.env(dst, what);
+                }
+            }
+            3 | 4 => {
+                let (a, b) = (self.int(rng), self.int(rng));
+                let op = *choose(
+                    rng,
+                    &[AluOp::Add, AluOp::Sub, AluOp::Xor, AluOp::And, AluOp::Lt, AluOp::Eq],
+                );
+                if let Some(dst) = pick_dst(self, rng, false) {
+                    self.asm.alu(op, dst, a, b);
+                }
+            }
+            5 => {
+                // shift by a fresh small immediate — the only shift the
+                // generator emits, so the amount is provably in range
+                let a = self.int(rng);
+                self.asm.imm(TMP, rng.range_i64(0, 8));
+                if let Some(dst) = pick_dst(self, rng, false) {
+                    self.asm.alu(*choose(rng, &[AluOp::Shl, AluOp::Shr]), dst, a, TMP);
+                }
+            }
+            6 => {
+                // store any initialized value at an immediate slot
+                let src = if rng.next_below(2) == 0 && !self.vecs.is_empty() {
+                    self.vec(rng)
+                } else {
+                    self.int(rng)
+                };
+                self.asm.imm(TMP, rng.range_i64(0, 63));
+                self.asm.st(TMP, src);
+            }
+            7 => {
+                // load from scratch: the result's runtime type is
+                // unknowable, so generated programs only probe it —
+                // IsSet is the one op that's total over Val
+                self.asm.imm(TMP, rng.range_i64(0, 63));
+                if let Some(dst) = pick_dst(self, rng, false) {
+                    self.asm.ld(dst, TMP);
+                    self.asm.is_set(dst, dst);
+                }
+            }
+            8 => {
+                // shape-preserving payload ops (everything descends from
+                // the packet payload, so dtypes always agree)
+                let a = self.vec(rng);
+                if let Some(dst) = pick_dst(self, rng, true) {
+                    if rng.next_below(2) == 0 {
+                        self.asm.ident_like(dst, a);
+                    } else {
+                        let b = self.vec(rng);
+                        self.asm.combine(dst, a, b);
+                    }
+                }
+            }
+            _ => {
+                let src = if rng.next_below(2) == 0 && !self.vecs.is_empty() {
+                    self.vec(rng)
+                } else {
+                    self.int(rng)
+                };
+                self.asm.is_set(TMP, src);
+                // inside a skipped block the write happens on only one
+                // path, so TMP must NOT be marked initialized
+                if !in_block {
+                    self.ints.retain(|&r| r != TMP);
+                    self.vecs.retain(|&r| r != TMP);
+                    self.ints.push(TMP);
+                }
+            }
+        }
+    }
+}
+
+/// A random well-formed program: one entry serving both activations,
+/// a prologue that initializes a payload + an integer, random safe
+/// instructions, optional guarded skip-block, optional bounded counted
+/// loop, optional deliver/emit, halt.
+fn random_program(rng: &mut SplitMix64) -> Program {
+    let mut g = Gen { asm: Asm::new(), ints: Vec::new(), vecs: Vec::new() };
+    let entry = g.asm.label();
+    g.asm.bind(entry);
+    g.asm.ldpkt(PKT);
+    g.vecs.push(PKT);
+    g.asm.env(POOL[0], EnvVal::Rank);
+    g.ints.push(POOL[0]);
+
+    for _ in 0..rng.next_below(12) + 2 {
+        g.safe_instr(rng, false);
+    }
+
+    if rng.next_below(2) == 0 {
+        // guarded skip: jz over a couple of instructions that only
+        // touch already-initialized registers
+        let skip = g.asm.label();
+        let cond = g.int(rng);
+        g.asm.jz(cond, skip);
+        for _ in 0..rng.next_below(3) + 1 {
+            g.safe_instr(rng, true);
+        }
+        g.asm.bind(skip);
+    }
+
+    if rng.next_below(5) < 2 {
+        // bounded counted loop: i = 0; do { body; i += 1 } while i < c.
+        // The verifier's Lt refinement proves i <= c, so acceptance of
+        // this shape exercises exactly the machinery the shipped
+        // programs' RD loops rely on.
+        g.asm.imm(LOOP_I, 0);
+        g.asm.imm(LOOP_ONE, 1);
+        g.asm.imm(LOOP_LIM, rng.range_i64(1, 6));
+        let head = g.asm.label();
+        g.asm.bind(head);
+        for _ in 0..rng.next_below(3) + 1 {
+            g.safe_instr(rng, true);
+        }
+        g.asm.alu(AluOp::Add, LOOP_I, LOOP_I, LOOP_ONE);
+        g.asm.alu(AluOp::Lt, TMP, LOOP_I, LOOP_LIM);
+        g.asm.jnz(TMP, head);
+        // the loop registers become visible to LATER instructions only:
+        // had they been in `ints` during body generation, a body write
+        // to LOOP_LIM (say, env P) would unbound the loop at runtime
+        // while the verifier's structural budget still accepted it
+        g.ints.extend([LOOP_I, LOOP_ONE, LOOP_LIM]);
+        g.ints.retain(|&r| r != TMP);
+        g.ints.push(TMP);
+    }
+
+    if rng.next_below(2) == 0 {
+        // emit to self: rank < p on every activation, so the runtime
+        // wire asserts hold by construction.  The step register comes
+        // from the pool (never TMP, which holds the destination rank)
+        g.asm.env(TMP, EnvVal::Rank);
+        let step = g.fresh(rng, false);
+        g.asm.imm(step, rng.range_i64(0, 16));
+        let payload = g.vec(rng);
+        g.asm.emit(TMP, MsgType::Data, step, payload);
+    }
+    if rng.next_below(2) == 0 {
+        let payload = g.vec(rng);
+        g.asm.deliver(payload);
+    }
+    g.asm.halt();
+    g.asm.finish("prop-gen", entry, entry)
+}
+
+fn request(p: usize, rank: usize, elems: usize) -> OffloadRequest {
+    OffloadRequest {
+        rank,
+        comm: 0,
+        epoch: 0,
+        comm_size: p as u16,
+        coll: CollType::Scan,
+        algo: AlgoType::RecursiveDoubling,
+        op: Op::Sum,
+        dtype: Dtype::I32,
+        payload: Payload::from_i32(&(0..elems as i32).collect::<Vec<_>>()),
+    }
+}
+
+fn packet(p: usize, src: usize, step: u16, elems: usize) -> CollPacket {
+    CollPacket {
+        comm_id: 0,
+        comm_size: p as u16,
+        coll_type: CollType::Scan,
+        algo_type: AlgoType::RecursiveDoubling,
+        node_type: NodeType::Generic,
+        msg_type: MsgType::Data,
+        step,
+        rank: src as u16,
+        root: 0,
+        operation: Op::Sum,
+        data_type: Dtype::I32,
+        count: elems as u32,
+        frag_idx: 0,
+        frag_total: 1,
+        tag: 0,
+        payload: Payload::from_i32(&vec![1; elems]),
+    }
+}
+
+#[test]
+fn accepted_programs_never_trip_the_vm() {
+    let compute = NativeEngine::new();
+    let cost = CostModel::default();
+    for_each_case(60, 0x5EC5_CAFE, |rng| {
+        let prog = random_program(rng);
+        let report = verify(&prog).unwrap_or_else(|rs| {
+            let lines: Vec<String> = rs.iter().map(|r| r.to_string()).collect();
+            panic!("generated program rejected:\n{}\n{:#?}", lines.join("\n"), prog.code)
+        });
+        assert!(report.on_request_bound <= MAX_STEPS);
+        assert!(report.on_packet_bound <= MAX_STEPS);
+
+        // random environment; every activation must run assert-free and
+        // within the statically computed instruction bound
+        // 65535 is the largest p the u16 wire header can carry
+        let p = *choose(rng, &[1usize, 2, 8, 65535]);
+        let rank = rng.next_below(p as u64) as usize;
+        let elems = *choose(rng, &[1usize, 4]);
+        let mut flow = Flow::new();
+        let mut activate = |act: Activation, bound: usize| {
+            let mut ctx = EngineCtx {
+                rank,
+                p,
+                inclusive: true,
+                op: Op::Sum,
+                coll: CollType::Scan,
+                epoch: 0,
+                compute: &compute,
+                cost: &cost,
+                cycles: 0,
+                instrs: 0,
+                stalls: 0,
+            };
+            run(&prog, &mut flow, &mut ctx, act);
+            assert!(
+                ctx.instrs as usize <= bound,
+                "activation retired {} instrs, static bound is {bound}",
+                ctx.instrs
+            );
+        };
+        let req = request(p, rank, elems);
+        activate(Activation::Request(&req), report.on_request_bound);
+        for _ in 0..3 {
+            let pkt = packet(p, rng.next_below(p as u64) as usize,
+                             rng.next_below(17) as u16, elems);
+            activate(Activation::Packet(&pkt), report.on_packet_bound);
+        }
+    });
+}
+
+/// Append an ill-formed block of a known class and point `on_request`
+/// at it (appending never shifts existing jump targets).  Returns the
+/// class the verifier must report.
+fn inject_fault(prog: &mut Program, which: u64) -> &'static str {
+    let n = prog.code.len();
+    match which {
+        0 => {
+            // r14 is never written by the generator
+            prog.code.extend([
+                Instr::Alu { op: AluOp::Add, dst: 0, a: NEVER, b: NEVER },
+                Instr::Halt,
+            ]);
+            prog.on_request = n;
+            "uninit-read"
+        }
+        1 => {
+            prog.code.extend([
+                Instr::Imm { dst: 0, val: 64 },
+                Instr::Imm { dst: 1, val: 1 },
+                Instr::St { slot: 0, src: 1 },
+                Instr::Halt,
+            ]);
+            prog.on_request = n;
+            "scratch-oob"
+        }
+        2 => {
+            // the appended tail IS the last instruction, and falls off
+            prog.code.push(Instr::Imm { dst: 0, val: 1 });
+            prog.on_request = n;
+            "missing-halt"
+        }
+        3 => {
+            // counted loop with a 300-instruction body: the per-back-edge
+            // trip allowance makes the bound blow past MAX_STEPS
+            prog.code.push(Instr::Imm { dst: 0, val: 0 });
+            prog.code.push(Instr::Imm { dst: 1, val: 1 });
+            let head = prog.code.len();
+            for _ in 0..300 {
+                prog.code.push(Instr::Alu { op: AluOp::Add, dst: 0, a: 0, b: 1 });
+            }
+            prog.code.push(Instr::Env { dst: 2, what: EnvVal::P });
+            prog.code.push(Instr::Alu { op: AluOp::Lt, dst: 3, a: 0, b: 2 });
+            prog.code.push(Instr::Jnz { cond: 3, to: head });
+            prog.code.push(Instr::Halt);
+            prog.on_request = n;
+            "budget"
+        }
+        4 => {
+            prog.code.extend([
+                Instr::Imm { dst: 0, val: 1 },
+                Instr::Imm { dst: 1, val: 2 },
+                Instr::Combine { dst: 2, a: 0, b: 1 },
+                Instr::Halt,
+            ]);
+            prog.on_request = n;
+            "dtype-mismatch"
+        }
+        5 => {
+            // self-loop with no exit
+            prog.code.push(Instr::Jmp { to: n });
+            prog.on_request = n;
+            "no-termination"
+        }
+        _ => {
+            prog.code.extend([Instr::Jmp { to: n + 999 }, Instr::Halt]);
+            prog.on_request = n;
+            "bad-target"
+        }
+    }
+}
+
+#[test]
+fn injected_faults_are_rejected_with_their_class() {
+    for_each_case(70, 0xBAD_5EED, |rng| {
+        let mut prog = random_program(rng);
+        let which = rng.next_below(7);
+        let class = inject_fault(&mut prog, which);
+        match verify(&prog) {
+            Ok(_) => panic!("fault class {class} not detected"),
+            Err(rs) => assert!(
+                rs.iter().any(|r| r.class() == class),
+                "expected class {class}, got {:?}",
+                rs.iter().map(RejectReason::class).collect::<Vec<_>>()
+            ),
+        }
+    });
+}

@@ -1,0 +1,227 @@
+//! Negative-program corpus for the static verifier: one *minimal*
+//! ill-formed image per invariant class, each asserting the specific
+//! reject reason (by its stable class name AND the site it points at).
+//!
+//! These are the verifier's contract tests: if a refactor of the
+//! abstract interpreter silently stops catching one of these classes,
+//! the corresponding dynamic assert becomes the only line of defense
+//! again — exactly the regression PR 6 exists to prevent.
+
+use nfscan::nic::verify::{verify, RejectReason, LOOP_BOUND, MAX_P, MAX_ROUNDS};
+use nfscan::nic::vm::{AluOp, Asm, EnvVal, Instr, Program, MAX_STEPS, SCRATCH_SLOTS};
+
+/// Verify a program that must be rejected; return its findings.
+fn rejects(prog: &Program) -> Vec<RejectReason> {
+    match verify(prog) {
+        Ok(report) => panic!(
+            "{} must be rejected, but verified with bounds {}/{}",
+            prog.name, report.on_request_bound, report.on_packet_bound
+        ),
+        Err(reasons) => reasons,
+    }
+}
+
+fn has_class(reasons: &[RejectReason], class: &str) -> bool {
+    reasons.iter().any(|r| r.class() == class)
+}
+
+#[test]
+fn uninit_read_on_one_path() {
+    // r0 is written only on the taken branch; the fall-through path
+    // reaches the Emit-free read of r0 with it still uninitialized.
+    // Path-sensitivity matters: every straight-line prefix is fine.
+    let mut a = Asm::new();
+    let entry = a.label();
+    let skip = a.label();
+    a.bind(entry);
+    a.env(1, EnvVal::Rank);
+    a.jz(1, skip); // rank == 0: skip the init
+    a.imm(0, 7);
+    a.bind(skip);
+    a.alu(AluOp::Add, 2, 0, 1); // r0 uninit when rank == 0
+    a.halt();
+    let prog = a.finish("neg-uninit", entry, entry);
+    let rs = rejects(&prog);
+    assert!(has_class(&rs, "uninit-read"), "{rs:?}");
+    // the finding must name the faulting register, not just the pc
+    assert!(
+        rs.iter().any(|r| matches!(r, RejectReason::UninitRead { reg: 0, .. })),
+        "{rs:?}"
+    );
+}
+
+#[test]
+fn scratch_index_not_provably_in_bounds() {
+    // slot = rank + SCRATCH_SLOTS - 1: in range only for rank == 0, and
+    // the program never guards it — the interval [63, 63 + MAX_P - 1]
+    // is not within [0, 64).
+    let mut a = Asm::new();
+    let entry = a.label();
+    a.bind(entry);
+    a.env(0, EnvVal::Rank);
+    a.imm(1, SCRATCH_SLOTS as i64 - 1);
+    a.alu(AluOp::Add, 2, 0, 1);
+    a.imm(3, 5);
+    a.st(2, 3);
+    a.halt();
+    let prog = a.finish("neg-oob", entry, entry);
+    let rs = rejects(&prog);
+    assert!(has_class(&rs, "scratch-oob"), "{rs:?}");
+    assert!(
+        rs.iter().any(|r| matches!(
+            r,
+            RejectReason::ScratchOob { hi, .. } if *hi >= SCRATCH_SLOTS as i64
+        )),
+        "{rs:?}"
+    );
+}
+
+#[test]
+fn missing_halt_falls_off_the_end() {
+    let prog = Program {
+        name: "neg-nohalt",
+        code: vec![Instr::Imm { dst: 0, val: 1 }, Instr::Mov { dst: 1, src: 0 }],
+        on_request: 0,
+        on_packet: 0,
+    };
+    let rs = rejects(&prog);
+    assert!(has_class(&rs, "missing-halt"), "{rs:?}");
+    assert!(rs.iter().any(|r| matches!(r, RejectReason::MissingHalt { pc: 1 })), "{rs:?}");
+}
+
+#[test]
+fn inescapable_cycle_never_terminates() {
+    // jz can exit in principle, but its target re-enters the loop: no
+    // Halt/Drop is reachable from the cycle at all
+    let mut a = Asm::new();
+    let entry = a.label();
+    let head = a.label();
+    a.bind(entry);
+    a.imm(0, 1);
+    a.bind(head);
+    a.alu(AluOp::Add, 0, 0, 0);
+    a.jz(0, head);
+    a.jmp(head);
+    let prog = a.finish("neg-noterm", entry, entry);
+    let rs = rejects(&prog);
+    assert!(has_class(&rs, "no-termination"), "{rs:?}");
+}
+
+#[test]
+fn budget_blowup_via_oversized_loop_body() {
+    // one RD-style loop whose ~300-instruction body pushes
+    // body x LOOP_BOUND past MAX_STEPS: each back-edge is granted
+    // LOOP_BOUND trips, so the bound is ~301 x 17 > 4096
+    let mut a = Asm::new();
+    let entry = a.label();
+    a.bind(entry);
+    a.imm(0, 0);
+    a.imm(1, 1);
+    let head = a.label();
+    a.bind(head);
+    for _ in 0..300 {
+        a.alu(AluOp::Add, 0, 0, 1);
+    }
+    a.env(2, EnvVal::P);
+    a.alu(AluOp::Lt, 3, 0, 2);
+    a.jnz(3, head);
+    a.halt();
+    let prog = a.finish("neg-budget", entry, entry);
+    let rs = rejects(&prog);
+    assert!(has_class(&rs, "budget"), "{rs:?}");
+    let bound = rs
+        .iter()
+        .find_map(|r| match r {
+            RejectReason::BudgetExceeded { bound, .. } => Some(*bound),
+            _ => None,
+        })
+        .expect("budget finding carries its bound");
+    assert!(bound > MAX_STEPS, "reported bound {bound} must exceed {MAX_STEPS}");
+    assert!(
+        bound >= 300 * LOOP_BOUND,
+        "bound {bound} must reflect body x per-back-edge trips"
+    );
+}
+
+#[test]
+fn dtype_mismatch_combine_over_integers() {
+    // Combine drives the shared dtype x op datapath; an integer operand
+    // can never be valid, so this is a static fact, not a maybe
+    let mut a = Asm::new();
+    let entry = a.label();
+    a.bind(entry);
+    a.ldpkt(0);
+    a.imm(1, 3);
+    a.combine(2, 0, 1); // payload (op) integer
+    a.halt();
+    let prog = a.finish("neg-dtype", entry, entry);
+    let rs = rejects(&prog);
+    assert!(has_class(&rs, "dtype-mismatch"), "{rs:?}");
+    assert!(
+        rs.iter().any(|r| matches!(
+            r,
+            RejectReason::DtypeMismatch { reg: 1, expected: "payload", .. }
+        )),
+        "{rs:?}"
+    );
+}
+
+#[test]
+fn shift_amount_unbounded() {
+    // shift by PktStep's raw value is fine (<= MAX_ROUNDS), but shifting
+    // by an unguarded sum of steps is not provably < 64
+    assert!(MAX_ROUNDS < 64);
+    let mut a = Asm::new();
+    let entry = a.label();
+    a.bind(entry);
+    a.imm(0, 1);
+    a.imm(1, 70);
+    a.alu(AluOp::Shl, 2, 0, 1);
+    a.halt();
+    let prog = a.finish("neg-shift", entry, entry);
+    let rs = rejects(&prog);
+    assert!(has_class(&rs, "shift-range"), "{rs:?}");
+}
+
+#[test]
+fn emit_destination_provably_off_the_wire() {
+    // dst = -1 on every path: disjoint from [0, p), a static fact
+    let mut a = Asm::new();
+    let entry = a.label();
+    a.bind(entry);
+    a.imm(0, -1);
+    a.imm(1, 0);
+    a.ldpkt(2);
+    a.emit(0, nfscan::packet::MsgType::Data, 1, 2);
+    a.halt();
+    let prog = a.finish("neg-wire", entry, entry);
+    let rs = rejects(&prog);
+    assert!(has_class(&rs, "wire-range"), "{rs:?}");
+    let _ = MAX_P; // wire range is defined relative to MAX_P
+}
+
+#[test]
+fn every_reject_class_displays_distinctly() {
+    // the class names are API (negative corpus, lint output, prop test
+    // mutation oracle): they must stay unique and stable
+    let all = [
+        RejectReason::BadRegister { pc: 0, reg: 99 },
+        RejectReason::BadTarget { pc: 0, target: 9 },
+        RejectReason::BadEntry { which: "on_request", target: 9 },
+        RejectReason::MissingHalt { pc: 0 },
+        RejectReason::NoTermination { pc: 0 },
+        RejectReason::UninitRead { pc: 0, reg: 0 },
+        RejectReason::ScratchOob { pc: 0, lo: 64, hi: 64 },
+        RejectReason::ShiftRange { pc: 0, lo: 64, hi: 64 },
+        RejectReason::DtypeMismatch { pc: 0, reg: 0, expected: "payload" },
+        RejectReason::WireRange { pc: 0, lo: -1, hi: -1 },
+        RejectReason::BudgetExceeded { entry: "on_packet", bound: 5000 },
+    ];
+    let mut classes: Vec<&str> = all.iter().map(|r| r.class()).collect();
+    classes.sort_unstable();
+    classes.dedup();
+    assert_eq!(classes.len(), all.len(), "class names must be unique");
+    for r in &all {
+        assert!(!r.to_string().is_empty());
+    }
+}
