@@ -13,7 +13,7 @@
 use std::rc::Rc;
 
 use nfscan::cluster::Cluster;
-use nfscan::config::{EngineKind, ExpConfig};
+use nfscan::config::{EngineKind, ExecPath, ExpConfig};
 use nfscan::packet::AlgoType;
 use nfscan::runtime::make_engine;
 
@@ -21,7 +21,7 @@ fn run(multicast_opt: bool) -> anyhow::Result<nfscan::metrics::RunMetrics> {
     let mut cfg = ExpConfig::default();
     cfg.p = 4;
     cfg.algo = AlgoType::RecursiveDoubling;
-    cfg.offloaded = true;
+    cfg.path = ExecPath::Fpga;
     cfg.verify = true;
     cfg.iters = 200;
     cfg.warmup = 8;

@@ -10,7 +10,7 @@
 use std::rc::Rc;
 
 use nfscan::cluster::Cluster;
-use nfscan::config::{EngineKind, ExpConfig};
+use nfscan::config::{EngineKind, ExecPath, ExpConfig};
 use nfscan::data::Payload;
 use nfscan::packet::AlgoType;
 use nfscan::runtime::make_engine;
@@ -19,7 +19,7 @@ fn main() -> anyhow::Result<()> {
     let mut cfg = ExpConfig::default();
     cfg.p = 8;
     cfg.algo = AlgoType::RecursiveDoubling;
-    cfg.offloaded = true;
+    cfg.path = ExecPath::Fpga;
     cfg.verify = true;
     cfg.engine = EngineKind::Xla; // falls back to native if artifacts absent
 

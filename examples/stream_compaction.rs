@@ -14,7 +14,7 @@
 use std::rc::Rc;
 
 use nfscan::cluster::Cluster;
-use nfscan::config::{EngineKind, ExpConfig};
+use nfscan::config::{EngineKind, ExecPath, ExpConfig};
 use nfscan::data::{Op, Payload};
 use nfscan::packet::{AlgoType, CollType};
 use nfscan::runtime::make_engine;
@@ -43,7 +43,7 @@ fn main() -> anyhow::Result<()> {
     cfg.p = P;
     cfg.coll = CollType::Exscan;
     cfg.algo = AlgoType::BinomialTree;
-    cfg.offloaded = true;
+    cfg.path = ExecPath::Fpga;
     cfg.verify = true;
     let contributions: Vec<Payload> = counts.iter().map(|&c| Payload::from_i32(&[c])).collect();
     let (offsets, metrics) = Cluster::scan_once(cfg, Rc::clone(&compute), contributions)?;

@@ -14,14 +14,14 @@
 use std::rc::Rc;
 
 use nfscan::cluster::Cluster;
-use nfscan::config::{EngineKind, ExpConfig};
+use nfscan::config::{EngineKind, ExecPath, ExpConfig};
 use nfscan::packet::AlgoType;
 use nfscan::runtime::make_engine;
 
 fn cfg(ack: bool, iters: usize) -> ExpConfig {
     let mut c = ExpConfig::default();
     c.algo = AlgoType::Sequential;
-    c.offloaded = true;
+    c.path = ExecPath::Fpga;
     c.iters = iters;
     // single-shot runs must not pipeline at all (that's the point of the
     // comparison); back-to-back runs warm the pipeline first

@@ -9,7 +9,7 @@
 use std::rc::Rc;
 
 use nfscan::cluster::Cluster;
-use nfscan::config::{EngineKind, ExpConfig};
+use nfscan::config::{EngineKind, ExecPath, ExpConfig};
 use nfscan::metrics::Table;
 use nfscan::packet::AlgoType;
 use nfscan::runtime::make_engine;
@@ -18,7 +18,7 @@ fn run(opt: bool, late_ns: u64, iters: usize) -> nfscan::metrics::RunMetrics {
     let mut cfg = ExpConfig::default();
     cfg.p = 8;
     cfg.algo = AlgoType::RecursiveDoubling;
-    cfg.offloaded = true;
+    cfg.path = ExecPath::Fpga;
     cfg.iters = iters;
     cfg.warmup = 8;
     cfg.multicast_opt = opt;

@@ -8,7 +8,7 @@
 use std::rc::Rc;
 
 use nfscan::cluster::Cluster;
-use nfscan::config::{EngineKind, ExpConfig};
+use nfscan::config::{EngineKind, ExecPath, ExpConfig};
 use nfscan::metrics::Table;
 use nfscan::packet::{AlgoType, CollType};
 use nfscan::runtime::make_engine;
@@ -17,7 +17,7 @@ fn run(coll: CollType, algo: AlgoType, offloaded: bool, msg: usize, iters: usize
     let mut cfg = ExpConfig::default();
     cfg.coll = coll;
     cfg.algo = algo;
-    cfg.offloaded = offloaded;
+    cfg.path = if offloaded { ExecPath::Fpga } else { ExecPath::Sw };
     cfg.msg_bytes = msg;
     cfg.iters = iters;
     cfg.warmup = 8;

@@ -11,7 +11,7 @@
 use std::time::Instant;
 
 use nfscan::cluster::Cluster;
-use nfscan::config::{EngineKind, ExpConfig};
+use nfscan::config::{EngineKind, ExecPath, ExpConfig};
 use nfscan::metrics::Table;
 use nfscan::packet::AlgoType;
 use nfscan::runtime::make_engine;
@@ -55,7 +55,7 @@ fn main() {
     let mut cfg = ExpConfig::default();
     cfg.p = 128;
     cfg.algo = AlgoType::RecursiveDoubling;
-    cfg.offloaded = true;
+    cfg.path = ExecPath::Fpga;
     cfg.topology = "fattree".into();
     cfg.msg_bytes = 64;
     cfg.iters = 60;

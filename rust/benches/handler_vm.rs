@@ -17,7 +17,7 @@
 use std::time::Instant;
 
 use nfscan::cluster::Cluster;
-use nfscan::config::{CostModel, EngineKind, ExpConfig};
+use nfscan::config::{CostModel, EngineKind, ExecPath, ExpConfig};
 use nfscan::data::{Dtype, Op, Payload};
 use nfscan::fpga::allreduce::RdAllreduce;
 use nfscan::fpga::engine::{CollEngine, EngineCtx};
@@ -69,7 +69,7 @@ fn cell(handler: bool, iters: usize) -> (f64, f64, u64, u64) {
     cfg.msg_bytes = 64;
     cfg.iters = iters;
     cfg.warmup = 32;
-    cfg.handler = handler;
+    cfg.path = if handler { ExecPath::Handler } else { ExecPath::Fpga };
     let compute = make_engine(EngineKind::Native, "artifacts");
     let t0 = Instant::now();
     let mut cluster = Cluster::new(cfg, compute);

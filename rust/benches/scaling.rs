@@ -16,7 +16,7 @@
 use std::rc::Rc;
 
 use nfscan::cluster::Cluster;
-use nfscan::config::{EngineKind, ExpConfig};
+use nfscan::config::{EngineKind, ExecPath, ExpConfig};
 use nfscan::metrics::Table;
 use nfscan::packet::AlgoType;
 use nfscan::runtime::make_engine;
@@ -25,7 +25,7 @@ fn run(algo: AlgoType, offloaded: bool, p: usize, iters: usize) -> f64 {
     let mut cfg = ExpConfig::default();
     cfg.p = p;
     cfg.algo = algo;
-    cfg.offloaded = offloaded;
+    cfg.path = if offloaded { ExecPath::Fpga } else { ExecPath::Sw };
     cfg.iters = iters;
     cfg.warmup = if iters == 1 { 0 } else { 8 };
     cfg.cost.start_jitter_ns = 0; // all ranks call together

@@ -11,7 +11,7 @@ pub mod micro;
 
 use std::rc::Rc;
 
-use crate::config::ExpConfig;
+use crate::config::{ExecPath, ExpConfig};
 use crate::metrics::{us, LatencyStats, RunMetrics, Table};
 use crate::packet::{AlgoType, CollType};
 use crate::runtime::Compute;
@@ -61,14 +61,12 @@ impl Series {
     /// Handler configs pin their collective so the artifact label
     /// round-trips with `ExpConfig::series_name` ("handler:exscan").
     pub fn of_config(cfg: &ExpConfig) -> Series {
-        let path = if cfg.handler {
-            SeriesPath::Handler
-        } else if cfg.offloaded {
-            SeriesPath::Offload
-        } else {
-            SeriesPath::Sw
+        let path = match cfg.path {
+            ExecPath::Handler => SeriesPath::Handler,
+            ExecPath::Fpga => SeriesPath::Offload,
+            ExecPath::Sw => SeriesPath::Sw,
         };
-        let coll = if cfg.handler { Some(cfg.coll) } else { None };
+        let coll = if cfg.handler() { Some(cfg.coll) } else { None };
         Series { algo: cfg.algo, path, coll }
     }
 
@@ -79,8 +77,11 @@ impl Series {
     /// Overwrite the config fields this series pins.
     pub fn apply(&self, cfg: &mut ExpConfig) {
         cfg.algo = self.algo;
-        cfg.offloaded = self.path != SeriesPath::Sw;
-        cfg.handler = self.path == SeriesPath::Handler;
+        cfg.path = match self.path {
+            SeriesPath::Sw => ExecPath::Sw,
+            SeriesPath::Offload => ExecPath::Fpga,
+            SeriesPath::Handler => ExecPath::Handler,
+        };
         if let Some(coll) = self.coll {
             cfg.coll = coll;
         }
@@ -378,11 +379,11 @@ mod tests {
     fn series_apply_pins_the_path_and_collective() {
         let mut cfg = ExpConfig::default();
         Series::from_name("handler:exscan").unwrap().apply(&mut cfg);
-        assert!(cfg.handler && cfg.offloaded);
+        assert!(cfg.handler() && cfg.offloaded());
         assert_eq!(cfg.coll, CollType::Exscan);
         cfg.validate().unwrap();
         Series::from_name("sw_seq").unwrap().apply(&mut cfg);
-        assert!(!cfg.handler && !cfg.offloaded);
+        assert!(!cfg.handler() && !cfg.offloaded());
         assert_eq!(cfg.coll, CollType::Exscan, "non-handler series keep the collective");
     }
 }

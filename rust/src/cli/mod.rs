@@ -96,18 +96,19 @@ USAGE: nfscan <command> [--key value ...]
 COMMANDS
   quickstart             one offloaded MPI_Scan on 8 simulated nodes
   run                    one experiment cell; keys = [run] config keys
-                         (--algo rd --offloaded true --msg_bytes 64 ...)
+                         (--algo rd --path fpga --msg_bytes 64 ...)
   fig4|fig5|fig6|fig7    regenerate a paper figure (--iters N, --engine xla,
                          --sizes 4,64,1024)
-  sweep --grid F.toml    expand a grid spec (sizes x p x series x topology)
-                         and run every cell in parallel: --jobs N worker
-                         threads (default: all cores; the banner shows the
-                         resolved count), JSON artifacts under --out DIR
-                         (default out/).  --grid figs reproduces Figs. 4-7
-                         in one batch (fig4.json..fig7.json); artifact
-                         bytes are identical for any --jobs.  --topology
-                         a,b / --sizes n,m / --series a,b override the
-                         file's axes.
+  sweep --grid F.toml    expand a grid spec (sizes x p x tenants x series
+                         x topology) and run every cell in parallel:
+                         --jobs N worker threads (default: all cores; the
+                         banner shows the resolved count), JSON artifacts
+                         under --out DIR (default out/).  --grid figs
+                         reproduces Figs. 4-7 in one batch
+                         (fig4.json..fig7.json); artifact bytes are
+                         identical for any --jobs.  --topology a,b /
+                         --sizes n,m / --series a,b / --tenants 1,2,4
+                         override the file's axes.
   sweep --config F.toml  legacy: run ONE experiment described by a TOML
   values                 run ONE collective with deterministic per-rank
                          data and dump each rank's result bytes as JSON
@@ -132,12 +133,18 @@ COMMANDS
 
 Collectives: --coll scan|exscan|allreduce|barrier|bcast (allreduce/barrier
 need --algo rd or binomial; bcast needs the handler VM or the sw path).
-Concurrent communicators: --comms N.
+
+Multi-tenant fabric: --tenants N splits the p ranks into N equal
+communicators running concurrent collective streams; --hpus N bounds the
+per-card handler execution units (0 = unconstrained); --bg_flows /
+--bg_msgs / --bg_bytes / --bg_gap_ns add seeded background point-to-point
+traffic.  Per-tenant p50/p99 and a Jain fairness index land in the sweep
+artifacts.
 
 Series: (sw|NF)_(seq|rd|binomial) plus the programmable-NIC path
 handler[:coll] — `--series handler` sweeps all five handler collectives
 (scan, exscan, allreduce, bcast, barrier) as sPIN-style packet programs
-on the simulated card (`--handler true` on run/quickstart).
+on the simulated card (`--path handler` on run/quickstart).
 
 Topologies (--topology): chain | ring | hypercube (direct NetFPGA wiring,
 the paper's testbed), star[:group] | fattree[:k] (hierarchical switch
@@ -231,7 +238,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     println!("iterations  : {} x {} ranks", cfg.iters, cfg.p);
     println!("avg latency : {:.2} us", all.avg_us());
     println!("min latency : {:.2} us", all.min_us());
-    if cfg.offloaded {
+    if cfg.offloaded() {
         let nic = m.nic_overall();
         println!("on-NIC avg  : {:.2} us", nic.avg_us());
         println!("on-NIC min  : {:.2} us", nic.min_us());
@@ -282,7 +289,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
     args.ensure_only(&[
         "grid", "jobs", "out", "artifacts", "engine", "iters", "sizes", "topology", "series",
-        "csv",
+        "tenants", "csv",
     ])?;
     let grid = args
         .get("grid")
@@ -311,6 +318,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         spec.series =
             crate::bench::Series::expand_list(&tokens).map_err(|e| anyhow!("--{e}"))?;
     }
+    if let Some(tenants) = args.get("tenants") {
+        spec.tenants = tenants
+            .split(',')
+            .map(|t| t.trim().parse::<usize>().with_context(|| format!("--tenants item {t}")))
+            .collect::<Result<_>>()?;
+    }
     if let Some(e) = args.get("engine") {
         spec.base.engine =
             EngineKind::from_name(e).ok_or_else(|| anyhow!("unknown engine {e}"))?;
@@ -324,12 +337,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
     let n = spec.n_jobs();
     println!(
-        "sweep {}: {} jobs ({} series x {} topologies x {} p x {} sizes) on {} workers{}",
+        "sweep {}: {} jobs ({} series x {} topologies x {} p x {} tenants x {} sizes) on {} workers{}",
         spec.name,
         n,
         spec.series.len(),
         spec.topologies.len(),
         spec.ps.len(),
+        spec.tenants.len(),
         spec.sizes.len(),
         jobs.clamp(1, n.max(1)),
         if args.get("jobs").is_some() { "" } else { " (auto: available parallelism)" }
@@ -771,6 +785,42 @@ mod tests {
         assert_eq!(jobs.len(), 2);
         assert_eq!(jobs[0].get("topology").unwrap().as_str(), Some("auto"));
         assert_eq!(jobs[1].get("topology").unwrap().as_str(), Some("fattree"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sweep_tenants_axis_from_cli() {
+        let dir = std::env::temp_dir().join(format!("nfscan_cli_ten_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let grid = dir.join("grid.toml");
+        std::fs::write(
+            &grid,
+            "[grid]\nname = \"ten\"\nsizes = [64]\nseries = [\"NF_rd\"]\n\
+             [run]\niters = 5\nwarmup = 1\np = 8\n",
+        )
+        .unwrap();
+        let out = dir.join("out");
+        let a = Args::parse(&argv(&[
+            "sweep",
+            "--grid",
+            grid.to_str().unwrap(),
+            "--tenants",
+            "1,2",
+            "--jobs",
+            "2",
+            "--out",
+            out.to_str().unwrap(),
+        ]))
+        .unwrap();
+        cmd_sweep(&a).unwrap();
+        let report = std::fs::read_to_string(out.join("ten.json")).unwrap();
+        let doc = crate::metrics::json::Json::parse(&report).unwrap();
+        let jobs = doc.get("jobs").unwrap().as_arr().unwrap();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].get("tenants").unwrap().as_u64(), Some(1));
+        assert_eq!(jobs[1].get("tenants").unwrap().as_u64(), Some(2));
+        let p99 = jobs[1].get("tenant_p99_us").unwrap().as_arr().unwrap();
+        assert_eq!(p99.len(), 2, "one percentile per tenant");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -9,19 +9,23 @@
 //! and — on the offload path — the NIC's own offload->release timestamps
 //! (Figs. 6/7).
 
+pub mod session;
+
+pub use session::Session;
+
 use std::collections::HashMap;
 use std::rc::Rc;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
-use crate::config::ExpConfig;
+use crate::config::{ExpConfig, FabricConfig, WorkloadSpec};
 use crate::data::{Dtype, Op, Payload};
 use crate::fpga::engine::EngineOpts;
-use crate::fpga::{make_engine, EngineCtx, Nic, NicAction};
+use crate::fpga::{make_engine, EngineCtx, HpuJob, Nic, NicAction};
 use crate::metrics::RunMetrics;
 use crate::mpi::{make_sw, SwAction, SwCtx, SwScanAlgo};
 use crate::net::{
-    frame::fragment, Frame, FrameBody, PortNo, Rank, RouteTable, SwMsg, Topology,
+    frame::fragment, BgMsg, Frame, FrameBody, PortNo, Rank, RouteTable, SwMsg, Topology,
 };
 use crate::offload::{build_request, node_role};
 use crate::packet::{CollPacket, MsgType};
@@ -41,6 +45,26 @@ struct Host {
     done: bool,
 }
 
+/// One tenant: a contiguous communicator of `size` global ranks starting
+/// at `base`, running its own collective stream described by `cfg` (a
+/// fully composed per-tenant view — fabric fields shared, workload
+/// fields the tenant's own).
+struct Tenant {
+    comm: u16,
+    base: usize,
+    size: usize,
+    cfg: ExpConfig,
+}
+
+/// One background point-to-point flow: seeded (src, dst) pair injecting
+/// `remaining` more frames, self-clocked every `cfg.bg_gap_ns`.
+struct BgFlow {
+    src: Rank,
+    dst: Rank,
+    remaining: u64,
+    seq: u32,
+}
+
 pub struct Cluster {
     pub cfg: ExpConfig,
     topo: Topology,
@@ -50,9 +74,14 @@ pub struct Cluster {
     nics: Vec<Nic>,
     compute: Rc<dyn Compute>,
     pub metrics: RunMetrics,
-    /// Per-epoch contributions for the verify path.
-    contributions: HashMap<u32, Vec<Option<Payload>>>,
-    verified_counts: HashMap<u32, usize>,
+    /// The tenant table; `rank_tenant[r]` indexes into it.
+    tenants: Vec<Tenant>,
+    rank_tenant: Vec<usize>,
+    bg: Vec<BgFlow>,
+    /// Per-(communicator, epoch) contributions for the verify path,
+    /// communicator-locally indexed.
+    contributions: HashMap<(u16, u32), Vec<Option<Payload>>>,
+    verified_counts: HashMap<(u16, u32), usize>,
     master_rng: SplitMix64,
     /// Application mode: caller-provided contributions for iteration 0
     /// (see [`Cluster::scan_once`]) and the per-rank results collected.
@@ -63,30 +92,105 @@ pub struct Cluster {
 }
 
 impl Cluster {
+    /// Homogeneous construction: `cfg.tenants` identical communicators
+    /// splitting `cfg.p` contiguously (the flat-config entry point every
+    /// sweep and bench uses).
     pub fn new(cfg: ExpConfig, compute: Rc<dyn Compute>) -> Cluster {
         cfg.validate().expect("invalid experiment config");
+        let g = cfg.group_size();
+        let tenants = (0..cfg.tenants)
+            .map(|t| Tenant { comm: t as u16, base: t * g, size: g, cfg: cfg.clone() })
+            .collect();
+        Self::build(cfg, tenants, compute)
+    }
+
+    /// Heterogeneous construction: each `(size, spec)` entry is one
+    /// tenant over the next `size` global ranks, with its own collective,
+    /// algorithm, path and message size.  Sizes must sum to `fabric.p`.
+    /// The [`Session`] builder is the ergonomic front for this.
+    pub fn with_tenants(
+        fabric: &FabricConfig,
+        specs: &[(usize, WorkloadSpec)],
+        compute: Rc<dyn Compute>,
+    ) -> Result<Cluster> {
+        if specs.is_empty() {
+            bail!("at least one tenant required");
+        }
+        let total: usize = specs.iter().map(|(n, _)| n).sum();
+        if total != fabric.p {
+            bail!("tenant sizes sum to {total}, fabric has p = {}", fabric.p);
+        }
+        if fabric.bg_flows > 0 && fabric.bg_gap_ns == 0 {
+            bail!("bg_gap_ns must be > 0 when background flows are on");
+        }
+        let mut tenants = Vec::with_capacity(specs.len());
+        let mut base = 0;
+        for (i, (size, spec)) in specs.iter().enumerate() {
+            // validate each workload against the group it actually runs
+            // over (algorithm/collective rank constraints are per tenant,
+            // not per fabric)
+            let mut probe = ExpConfig::compose(fabric, spec);
+            probe.p = *size;
+            probe.topology = "auto".into();
+            probe.validate().map_err(|e| anyhow!("tenant {i}: {e}"))?;
+            let cfg = ExpConfig::compose(fabric, spec);
+            tenants.push(Tenant { comm: i as u16, base, size: *size, cfg });
+            base += *size;
+        }
+        // the shared wiring must build at full scale
+        let mut fcfg = ExpConfig::compose(fabric, &specs[0].1);
+        fcfg.tenants = specs.len();
+        Topology::build(fcfg.topology_spec(), fabric.p)
+            .map_err(|e| anyhow!("topology: {e}"))?;
+        Ok(Self::build(fcfg, tenants, compute))
+    }
+
+    /// Shared constructor body.  `cfg` carries the fabric-level knobs
+    /// (wiring, cost model, seed, background traffic); per-tenant reads
+    /// go through the tenant table.
+    fn build(cfg: ExpConfig, tenants: Vec<Tenant>, compute: Rc<dyn Compute>) -> Cluster {
         let topo = cfg.resolve_topology();
         let routes = RouteTable::build(&topo);
         let p = cfg.p;
-        let total_iters = (cfg.warmup + cfg.iters) as u32;
+        let mut rank_tenant = vec![usize::MAX; p];
+        for (ti, t) in tenants.iter().enumerate() {
+            for r in t.base..t.base + t.size {
+                rank_tenant[r] = ti;
+            }
+        }
+        assert!(rank_tenant.iter().all(|&ti| ti != usize::MAX), "tenants must cover all ranks");
         Cluster {
             master_rng: SplitMix64::new(cfg.seed),
             hosts: (0..p)
-                .map(|_| Host {
-                    iter: 0,
-                    total_iters,
-                    call_time: SimTime::ZERO,
-                    in_flight: false,
-                    sw: HashMap::with_capacity(4),
-                    sw_reasm: crate::fpga::reassembly::Reassembler::new(64),
-                    done: false,
+                .map(|r| {
+                    let tcfg = &tenants[rank_tenant[r]].cfg;
+                    Host {
+                        iter: 0,
+                        total_iters: (tcfg.warmup + tcfg.iters) as u32,
+                        call_time: SimTime::ZERO,
+                        in_flight: false,
+                        sw: HashMap::with_capacity(4),
+                        sw_reasm: crate::fpga::reassembly::Reassembler::new(64),
+                        done: false,
+                    }
                 })
                 .collect(),
             // one NIC per graph node: rank NICs first, then the switches
-            // of the hierarchical topologies (forward-only)
-            nics: (0..topo.nodes()).map(|n| Nic::new(n, topo.ports_of(n).max(1))).collect(),
+            // of the hierarchical topologies (forward-only).  Only rank
+            // NICs own handler units; switches never run activations.
+            nics: (0..topo.nodes())
+                .map(|n| {
+                    let mut nic = Nic::new(n, topo.ports_of(n).max(1));
+                    if n < p {
+                        nic.hpu.units = cfg.cost.hpus;
+                    }
+                    nic
+                })
+                .collect(),
             compute,
-            metrics: RunMetrics::new(p),
+            metrics: RunMetrics::with_tenants(p, tenants.len()),
+            rank_tenant,
+            bg: Vec::new(),
             // a handful of epochs are ever in flight at once (flow
             // control bounds pipelining) — presize for that steady state
             contributions: HashMap::with_capacity(if cfg.verify { 8 } else { 0 }),
@@ -98,6 +202,7 @@ impl Cluster {
             topo,
             routes,
             cfg,
+            tenants,
         }
     }
 
@@ -116,25 +221,20 @@ impl Cluster {
         compute: Rc<dyn Compute>,
         contributions: Vec<Payload>,
     ) -> Result<(Vec<Payload>, RunMetrics)> {
-        let mut cfg = cfg;
-        cfg.iters = 1;
-        cfg.warmup = 0;
         assert_eq!(contributions.len(), cfg.p, "one contribution per rank");
         assert!(
             contributions.iter().all(|c| c.dtype() == cfg.dtype),
             "contribution dtype must match config"
         );
-        cfg.msg_bytes = contributions[0].byte_len();
-        let mut cluster = Cluster::new(cfg, compute);
-        cluster.injected = Some(contributions);
-        let metrics = cluster.run()?;
-        let results = cluster
-            .results
-            .iter()
-            .cloned()
-            .map(|r| r.expect("every rank completed"))
-            .collect();
-        Ok((results, metrics))
+        // thin wrapper over the Session builder: one tenant per
+        // homogeneous group, all running the same workload
+        let g = cfg.group_size();
+        let w = cfg.workload();
+        let mut s = Session::on_fabric(cfg.fabric()).compute(compute);
+        for _ in 0..cfg.tenants {
+            s = s.tenant(g, w.clone());
+        }
+        s.scan_once(contributions)
     }
 
     /// Deterministic per-(rank, epoch) contribution, kept well-conditioned
@@ -195,6 +295,20 @@ impl Cluster {
             }
             self.q.push(SimTime::ns(jitter), EventKind::HostStart { rank });
         }
+        // background flows draw AFTER the rank-order jitter loop, so a
+        // bg-off run consumes exactly the same rng stream as before
+        for flow in 0..self.cfg.bg_flows {
+            let src = self.master_rng.next_below(self.cfg.p as u64) as usize;
+            let mut dst = self.master_rng.next_below(self.cfg.p as u64) as usize;
+            if dst == src {
+                dst = (dst + 1) % self.cfg.p;
+            }
+            let start = self.master_rng.next_below(self.cfg.bg_gap_ns);
+            self.bg.push(BgFlow { src, dst, remaining: self.cfg.bg_msgs, seq: 0 });
+            if self.cfg.bg_msgs > 0 {
+                self.q.push(SimTime::ns(start), EventKind::BgTick { flow: flow as u16 });
+            }
+        }
         while let Some((now, ev)) = self.q.pop() {
             match ev {
                 EventKind::HostStart { rank } => self.on_host_start(now, rank),
@@ -203,16 +317,19 @@ impl Cluster {
                     self.on_nic_recv(now, rank, port, frame)
                 }
                 EventKind::NicHostReq { rank, req } => self.on_nic_host_req(now, rank, req),
+                EventKind::HpuDone { rank } => self.on_hpu_done(now, rank),
+                EventKind::BgTick { flow } => self.on_bg_tick(now, flow),
             }
         }
         for (rank, h) in self.hosts.iter().enumerate() {
             if !h.done {
+                let tcfg = &self.tenants[self.rank_tenant[rank]].cfg;
                 bail!(
                     "deadlock: rank {rank} finished {}/{} iterations (algo {}, {})",
                     h.iter,
                     h.total_iters,
-                    self.cfg.algo.name(),
-                    self.cfg.series_name()
+                    tcfg.algo.name(),
+                    tcfg.series_name()
                 );
             }
         }
@@ -223,6 +340,7 @@ impl Cluster {
                 self.metrics.frames_tx[r] = nic.frames_tx;
                 self.metrics.bytes_tx[r] = nic.bytes_tx;
                 self.metrics.frames_forwarded[r] = nic.frames_forwarded;
+                self.metrics.hpu_queued += nic.hpu.queued_total;
             } else {
                 // switch nodes pool into the trunk counters
                 self.metrics.switch_frames_tx += nic.frames_tx;
@@ -246,30 +364,36 @@ impl Cluster {
         host.call_time = now;
         let epoch = host.iter;
         self.trace.record(now, rank, crate::trace::TraceKind::HostCall, format!("epoch {epoch}"));
+        let ti = self.rank_tenant[rank];
+        let (comm, base, gsize) = {
+            let t = &self.tenants[ti];
+            (t.comm, t.base, t.size)
+        };
         let payload = match &self.injected {
             Some(contribs) if epoch == 0 => contribs[rank].clone(),
-            _ => Self::gen_payload(&self.cfg, rank, epoch),
+            _ => Self::gen_payload(&self.tenants[ti].cfg, rank, epoch),
         };
         if self.cfg.verify {
             self.contributions
-                .entry(epoch)
-                .or_insert_with(|| vec![None; self.cfg.p])[rank] = Some(payload.clone());
+                .entry((comm, epoch))
+                .or_insert_with(|| vec![None; gsize])[rank - base] = Some(payload.clone());
         }
-        if self.cfg.offloaded {
+        if self.tenants[ti].cfg.offloaded() {
             // craft the HostRequest packet and push it down the
             // (unoptimized) driver — the first of the two crossings the
             // paper identifies as the offload overhead.
-            let mut req = build_request(&self.cfg, rank, (epoch & 0xFFFF) as u16, payload);
-            let (comm, _base, gsize) = self.cfg.comm_of(rank);
+            let mut req =
+                build_request(&self.tenants[ti].cfg, rank, (epoch & 0xFFFF) as u16, payload);
             req.comm = comm;
             req.comm_size = gsize as u16;
             let at = now + self.cfg.cost.offload_ns(req.payload.byte_len());
             self.q.push(at, EventKind::NicHostReq { rank, req });
         } else {
             // software machines run in communicator-local rank space
-            let (_comm, base, gsize) = self.cfg.comm_of(rank);
-            let algo = self.cfg.algo;
-            let coll = self.cfg.coll;
+            let (algo, coll, op) = {
+                let c = &self.tenants[ti].cfg;
+                (c.algo, c.coll, c.op)
+            };
             let machine = self.hosts[rank]
                 .sw
                 .entry(epoch)
@@ -278,7 +402,7 @@ impl Cluster {
                 rank: rank - base,
                 p: gsize,
                 inclusive: coll.inclusive(),
-                op: self.cfg.op,
+                op,
                 compute: &*self.compute,
                 cost: &self.cfg.cost,
                 elapsed_ns: 0,
@@ -293,9 +417,15 @@ impl Cluster {
         match msg {
             HostMsg::Sw(m) => {
                 let epoch = m.epoch;
-                let (_comm, base, gsize) = self.cfg.comm_of(rank);
-                let algo = self.cfg.algo;
-                let coll = self.cfg.coll;
+                let ti = self.rank_tenant[rank];
+                let (base, gsize) = {
+                    let t = &self.tenants[ti];
+                    (t.base, t.size)
+                };
+                let (algo, coll, op) = {
+                    let c = &self.tenants[ti].cfg;
+                    (c.algo, c.coll, c.op)
+                };
                 let machine = self.hosts[rank]
                     .sw
                     .entry(epoch)
@@ -304,7 +434,7 @@ impl Cluster {
                     rank: rank - base,
                     p: gsize,
                     inclusive: coll.inclusive(),
-                    op: self.cfg.op,
+                    op,
                     compute: &*self.compute,
                     cost: &self.cfg.cost,
                     elapsed_ns: 0,
@@ -316,7 +446,8 @@ impl Cluster {
             HostMsg::NfResult { epoch, payload, nic_elapsed_ns } => {
                 let iter = self.hosts[rank].iter;
                 debug_assert_eq!(epoch, (iter & 0xFFFF) as u16, "result for wrong epoch");
-                if iter >= self.cfg.warmup as u32 {
+                let warmup = self.tenants[self.rank_tenant[rank]].cfg.warmup as u32;
+                if iter >= warmup {
                     self.metrics.nic_elapsed[rank].record(nic_elapsed_ns);
                 }
                 self.complete_iteration(now, rank, iter, payload);
@@ -336,7 +467,7 @@ impl Cluster {
         actions: Vec<SwAction>,
     ) {
         // software machines emit communicator-local destinations
-        let (_comm, base, _gsize) = self.cfg.comm_of(rank);
+        let base = self.tenants[self.rank_tenant[rank]].base;
         let mut t = now + compute_ns;
         for action in actions {
             match action {
@@ -358,12 +489,15 @@ impl Cluster {
     fn complete_iteration(&mut self, at: SimTime, rank: Rank, epoch: u32, result: Payload) {
         let kind = crate::trace::TraceKind::HostComplete;
         self.trace.record(at, rank, kind, format!("epoch {epoch}"));
+        let ti = self.rank_tenant[rank];
+        let warmup = self.tenants[ti].cfg.warmup as u32;
         let host = &mut self.hosts[rank];
         assert!(host.in_flight, "completion without a call at rank {rank}");
         host.in_flight = false;
         let latency = at - host.call_time;
-        if epoch >= self.cfg.warmup as u32 {
+        if epoch >= warmup {
             self.metrics.host_latency[rank].record(latency);
+            self.metrics.tenant_host[ti].record(latency);
         }
         host.iter += 1;
         let gap = self.cfg.cost.host_call_gap_ns;
@@ -378,47 +512,45 @@ impl Cluster {
     }
 
     fn verify_result(&mut self, rank: Rank, epoch: u32, result: &Payload) {
+        let ti = self.rank_tenant[rank];
+        let (comm, base, gsize) = {
+            let t = &self.tenants[ti];
+            (t.comm, t.base, t.size)
+        };
+        let (coll, op, dtype, elems) = {
+            let c = &self.tenants[ti].cfg;
+            (c.coll, c.op, c.dtype, c.msg_elems())
+        };
+        let series = self.tenants[ti].cfg.series_name();
+        // contributions are communicator-locally indexed, one table per
+        // (tenant, epoch): tenants verify fully independently
         let contribs = self
             .contributions
-            .get(&epoch)
-            .unwrap_or_else(|| panic!("no contributions for epoch {epoch}"));
-        let (_comm, base, gsize) = self.cfg.comm_of(rank);
+            .get(&(comm, epoch))
+            .unwrap_or_else(|| panic!("no contributions for tenant {comm} epoch {epoch}"));
         use crate::packet::CollType as Ct;
-        if self.cfg.coll == Ct::Bcast {
+        if coll == Ct::Bcast {
             // every rank must receive the communicator root's contribution
-            let want = contribs[base]
-                .clone()
-                .expect("bcast completion implies the root contributed");
-            assert_payload_matches(result, &want, rank, epoch, &self.cfg.series_name());
-            let count = self.verified_counts.entry(epoch).or_insert(0);
-            *count += 1;
-            if *count == self.cfg.p {
-                self.contributions.remove(&epoch);
-                self.verified_counts.remove(&epoch);
-            }
+            let want =
+                contribs[0].clone().expect("bcast completion implies the root contributed");
+            assert_payload_matches(result, &want, rank, epoch, &series);
+            self.retire_verified(comm, epoch, gsize);
             return;
         }
-        if matches!(self.cfg.coll, Ct::Allreduce | Ct::Barrier) {
+        if matches!(coll, Ct::Allreduce | Ct::Barrier) {
             // every rank of the communicator receives the full reduction;
             // completion implies all its ranks contributed
             let present: Vec<Payload> = contribs
                 .iter()
-                .skip(base)
-                .take(gsize)
                 .map(|c| c.clone().expect("allreduce completion implies all contributions"))
                 .collect();
-            let want = oracle_prefix(&*self.compute, &present, self.cfg.op, true, gsize - 1)
-                .expect("oracle");
-            assert_payload_matches(result, &want, rank, epoch, &self.cfg.series_name());
-            let count = self.verified_counts.entry(epoch).or_insert(0);
-            *count += 1;
-            if *count == self.cfg.p {
-                self.contributions.remove(&epoch);
-                self.verified_counts.remove(&epoch);
-            }
+            let want =
+                oracle_prefix(&*self.compute, &present, op, true, gsize - 1).expect("oracle");
+            assert_payload_matches(result, &want, rank, epoch, &series);
+            self.retire_verified(comm, epoch, gsize);
             return;
         }
-        let inclusive = self.cfg.coll.inclusive();
+        let inclusive = coll.inclusive();
         // the scan runs within the rank's communicator: its result
         // depends only on contributions base..=rank (exclusive: ..rank);
         // later ranks may not even have called yet.
@@ -426,24 +558,29 @@ impl Cluster {
         let needed = if inclusive { local + 1 } else { local };
         let present: Vec<Payload> = contribs
             .iter()
-            .skip(base)
             .take(needed.max(1))
             .map(|c| c.clone().unwrap_or_else(|| panic!("missing contribution below {rank}")))
             .collect();
         let want = if inclusive {
-            oracle_prefix(&*self.compute, &present, self.cfg.op, true, local).expect("oracle")
+            oracle_prefix(&*self.compute, &present, op, true, local).expect("oracle")
         } else if local == 0 {
-            Payload::identity(self.cfg.dtype, self.cfg.op, self.cfg.msg_elems())
+            Payload::identity(dtype, op, elems)
         } else {
             // exclusive prefix of rank j == inclusive prefix of rank j-1
-            oracle_prefix(&*self.compute, &present, self.cfg.op, true, local - 1).expect("oracle")
+            oracle_prefix(&*self.compute, &present, op, true, local - 1).expect("oracle")
         };
-        assert_payload_matches(result, &want, rank, epoch, &self.cfg.series_name());
-        let count = self.verified_counts.entry(epoch).or_insert(0);
+        assert_payload_matches(result, &want, rank, epoch, &series);
+        self.retire_verified(comm, epoch, gsize);
+    }
+
+    /// Count one verified rank for `(comm, epoch)`; drop the bookkeeping
+    /// once the whole communicator checked out.
+    fn retire_verified(&mut self, comm: u16, epoch: u32, gsize: usize) {
+        let count = self.verified_counts.entry((comm, epoch)).or_insert(0);
         *count += 1;
-        if *count == self.cfg.p {
-            self.contributions.remove(&epoch);
-            self.verified_counts.remove(&epoch);
+        if *count == gsize {
+            self.contributions.remove(&(comm, epoch));
+            self.verified_counts.remove(&(comm, epoch));
         }
     }
 
@@ -462,10 +599,11 @@ impl Cluster {
         payload: Payload,
     ) {
         let count = payload.len() as u32;
-        let algo = self.cfg.algo.wire_code();
+        let ti = self.rank_tenant[src];
+        let algo = self.tenants[ti].cfg.algo.wire_code();
         // SwMsg.src is communicator-local (the algorithms reason in local
         // rank space); the frame addresses stay global.
-        let (_comm, base, _g) = self.cfg.comm_of(src);
+        let base = self.tenants[ti].base;
         for (frag_idx, frag_total, _off, chunk) in fragment(&payload) {
             let msg = SwMsg {
                 src: src - base,
@@ -553,6 +691,11 @@ impl Cluster {
                     self.activate_engine(now, rank, full.epoch(), None, Some(full));
                 }
             }
+            FrameBody::Bg(_) => {
+                // background traffic terminates at the NIC: it exists to
+                // contend for wire and port-FIFO time, not to reach hosts
+                self.metrics.bg_frames_rx += 1;
+            }
         }
     }
 
@@ -562,9 +705,12 @@ impl Cluster {
         self.activate_engine(now, rank, req.epoch, Some(req), None);
     }
 
-    /// Run one engine activation and realize its actions on the wire /
-    /// host boundary.  Engines run in communicator-local rank space; this
-    /// is the (comm_id -> collective state) table of the paper's SSVI.
+    /// Admit one engine activation to the NIC's handler pool.  The
+    /// fixed-function path (and an unconstrained pool, `cost.hpus == 0`)
+    /// runs inline exactly as before — no extra events, byte-identical
+    /// schedule.  A constrained handler pool parks the activation when
+    /// all units are busy; it runs later from [`Cluster::on_hpu_done`]
+    /// with the wait charged as queueing delay.
     fn activate_engine(
         &mut self,
         now: SimTime,
@@ -573,12 +719,72 @@ impl Cluster {
         req: Option<OffloadRequest>,
         pkt: Option<CollPacket>,
     ) {
-        let cfg = &self.cfg;
-        let opts = EngineOpts { multicast_opt: cfg.multicast_opt, ack_enabled: cfg.ack_enabled };
-        let (comm, base, gsize) = cfg.comm_of(rank);
+        let ti = self.rank_tenant[rank];
+        let constrained = self.tenants[ti].cfg.handler() && self.cfg.cost.hpus > 0;
+        if constrained {
+            if self.nics[rank].hpu.saturated() {
+                let comm = self.tenants[ti].comm;
+                let flow = CollPacket::make_comm_id(comm, epoch);
+                self.nics[rank].hpu.enqueue(flow, HpuJob { epoch, req, pkt, arrival: now });
+                return;
+            }
+            self.nics[rank].hpu.busy += 1;
+        }
+        self.run_activation(now, rank, epoch, req, pkt, constrained);
+    }
+
+    /// A handler unit retired its activation: run the next parked job
+    /// (round-robin across flows), or free the unit.
+    fn on_hpu_done(&mut self, now: SimTime, rank: Rank) {
+        if let Some(job) = self.nics[rank].hpu.next() {
+            self.metrics.hpu_queue_ns += now - job.arrival;
+            self.run_activation(now, rank, job.epoch, job.req, job.pkt, true);
+        } else {
+            self.nics[rank].hpu.busy -= 1;
+        }
+    }
+
+    /// Inject one background frame and reschedule the flow's next tick.
+    fn on_bg_tick(&mut self, now: SimTime, flow: u16) {
+        let (src, dst, seq, remaining) = {
+            let f = &mut self.bg[flow as usize];
+            f.remaining -= 1;
+            f.seq += 1;
+            (f.src, f.dst, f.seq, f.remaining)
+        };
+        let msg = BgMsg { flow, seq, len: self.cfg.bg_bytes as u32 };
+        let frame = Frame { src, dst, body: FrameBody::Bg(msg) };
+        self.transmit(src, dst, frame, now);
+        if remaining > 0 {
+            self.q.push(now + self.cfg.bg_gap_ns, EventKind::BgTick { flow });
+        }
+    }
+
+    /// Run one engine activation and realize its actions on the wire /
+    /// host boundary.  Engines run in communicator-local rank space; this
+    /// is the (comm_id -> collective state) table of the paper's SSVI.
+    /// `holds_unit` means the activation occupies a handler processing
+    /// unit until it completes (`ready`), at which point `HpuDone` fires.
+    fn run_activation(
+        &mut self,
+        now: SimTime,
+        rank: Rank,
+        epoch: u16,
+        req: Option<OffloadRequest>,
+        pkt: Option<CollPacket>,
+        holds_unit: bool,
+    ) {
+        let ti = self.rank_tenant[rank];
+        let (comm, base, gsize) = {
+            let t = &self.tenants[ti];
+            (t.comm, t.base, t.size)
+        };
+        let (algo, coll, op, handler, multicast_opt, ack_enabled) = {
+            let c = &self.tenants[ti].cfg;
+            (c.algo, c.coll, c.op, c.handler(), c.multicast_opt, c.ack_enabled)
+        };
+        let opts = EngineOpts { multicast_opt, ack_enabled };
         let comm_key = CollPacket::make_comm_id(comm, epoch);
-        let (algo, coll, op) = (cfg.algo, cfg.coll, cfg.op);
-        let handler = cfg.handler;
         let local = rank - base;
         let nic = &mut self.nics[rank];
         let engine = nic.engines.entry(comm_key).or_insert_with(|| {
@@ -627,6 +833,10 @@ impl Cluster {
         self.nics[rank].check_engine_pressure();
         self.process_nic_actions(ready, rank, epoch, actions);
         self.nics[rank].gc_engines();
+        if holds_unit {
+            // the unit is occupied for the activation's full runtime
+            self.q.push(ready, EventKind::HpuDone { rank });
+        }
     }
 
     fn process_nic_actions(
@@ -637,7 +847,7 @@ impl Cluster {
         actions: Vec<NicAction>,
     ) {
         // engines emit communicator-local destinations
-        let (_comm, base, _g) = self.cfg.comm_of(rank);
+        let base = self.tenants[self.rank_tenant[rank]].base;
         for action in actions {
             match action {
                 NicAction::Send { dst, mt, step, tag, payload } => {
@@ -693,8 +903,15 @@ impl Cluster {
         tag: u32,
         payload: Payload,
     ) {
-        let (coll, algo, op) = (self.cfg.coll, self.cfg.algo, self.cfg.op);
-        let (comm, base, gsize) = self.cfg.comm_of(src);
+        let ti = self.rank_tenant[src];
+        let (comm, base, gsize) = {
+            let t = &self.tenants[ti];
+            (t.comm, t.base, t.size)
+        };
+        let (coll, algo, op) = {
+            let c = &self.tenants[ti].cfg;
+            (c.coll, c.algo, c.op)
+        };
         let count = payload.len() as u32;
         for (frag_idx, frag_total, _off, chunk) in fragment(&payload) {
             let pkt = CollPacket {
@@ -757,7 +974,7 @@ fn assert_payload_matches(got: &Payload, want: &Payload, rank: Rank, epoch: u32,
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::EngineKind;
+    use crate::config::{EngineKind, ExecPath};
     use crate::packet::{AlgoType, CollType};
     use crate::runtime::make_engine as make_compute;
 
@@ -773,7 +990,7 @@ mod tests {
     fn base(algo: AlgoType, offloaded: bool) -> ExpConfig {
         let mut cfg = ExpConfig::default();
         cfg.algo = algo;
-        cfg.offloaded = offloaded;
+        cfg.path = if offloaded { ExecPath::Fpga } else { ExecPath::Sw };
         cfg.msg_bytes = 64;
         cfg
     }
@@ -990,7 +1207,7 @@ mod tests {
             for offloaded in [false, true] {
                 let mut cfg = base(algo, offloaded);
                 cfg.p = 8;
-                cfg.comms = 2;
+                cfg.tenants = 2;
                 let m = run_cfg(cfg);
                 assert_eq!(m.host_overall().count(), 8 * 20, "{algo:?} nf={offloaded}");
             }
@@ -1000,7 +1217,7 @@ mod tests {
     #[test]
     fn four_communicators_of_two() {
         let mut cfg = base(AlgoType::RecursiveDoubling, true);
-        cfg.comms = 4;
+        cfg.tenants = 4;
         run_cfg(cfg);
     }
 
@@ -1036,7 +1253,7 @@ mod tests {
     fn handler_vm_all_collectives_verify() {
         for coll in CollType::HANDLER_SET {
             let mut cfg = base(AlgoType::RecursiveDoubling, true);
-            cfg.handler = true;
+            cfg.path = ExecPath::Handler;
             cfg.coll = coll;
             let m = run_cfg(cfg);
             assert_eq!(m.host_overall().count(), 8 * 20, "{coll:?}");
@@ -1053,7 +1270,7 @@ mod tests {
             let run_path = |handler: bool| -> Vec<Payload> {
                 let mut cfg = base(AlgoType::RecursiveDoubling, true);
                 cfg.coll = coll;
-                cfg.handler = handler;
+                cfg.path = if handler { ExecPath::Handler } else { ExecPath::Fpga };
                 cfg.verify = true;
                 let contribs: Vec<Payload> =
                     (0..cfg.p).map(|r| Cluster::gen_payload(&cfg, r, 0)).collect();
@@ -1072,7 +1289,7 @@ mod tests {
     #[test]
     fn handler_stalls_counted_for_late_ranks() {
         let mut cfg = base(AlgoType::RecursiveDoubling, true);
-        cfg.handler = true;
+        cfg.path = ExecPath::Handler;
         cfg.p = 4;
         cfg.late_rank = Some(1);
         cfg.late_delay_ns = 200_000;
@@ -1085,7 +1302,7 @@ mod tests {
     fn handler_instruction_cost_is_charged() {
         let mk = |instr_cycles: u64| {
             let mut cfg = base(AlgoType::RecursiveDoubling, true);
-            cfg.handler = true;
+            cfg.path = ExecPath::Handler;
             cfg.cost.handler_instr_cycles = instr_cycles;
             run_cfg(cfg).host_overall().avg_ns()
         };
@@ -1097,14 +1314,14 @@ mod tests {
     #[test]
     fn handler_on_fattree_and_concurrent_communicators() {
         let mut cfg = base(AlgoType::RecursiveDoubling, true);
-        cfg.handler = true;
+        cfg.path = ExecPath::Handler;
         cfg.topology = "fattree".into();
         let m = run_cfg(cfg);
         assert!(m.switch_frames_forwarded > 0);
 
         let mut cfg = base(AlgoType::RecursiveDoubling, true);
-        cfg.handler = true;
-        cfg.comms = 2;
+        cfg.path = ExecPath::Handler;
+        cfg.tenants = 2;
         cfg.coll = CollType::Exscan;
         run_cfg(cfg);
     }
@@ -1144,11 +1361,114 @@ mod tests {
     }
 
     #[test]
-    fn comm_validation() {
+    fn hpu_saturation_queues_and_charges_delay() {
+        // long handler activations (~0.5 ms each) guarantee overlapping
+        // work at every card: the host request and the partner's step-0
+        // packet land within one activation window.  One unit per card
+        // must park the overlap; an unconstrained pool never does.
+        let mk = |hpus: u64| {
+            let mut cfg = base(AlgoType::RecursiveDoubling, true);
+            cfg.path = ExecPath::Handler;
+            cfg.cost.handler_instr_cycles = 2000;
+            cfg.cost.hpus = hpus;
+            run_cfg(cfg)
+        };
+        let free = mk(0);
+        assert_eq!(free.hpu_queued, 0, "unconstrained pool never parks");
+        assert_eq!(free.hpu_queue_ns, 0);
+        let one = mk(1);
+        assert!(one.hpu_queued > 0, "a single unit must park overlapping activations");
+        assert!(one.hpu_queue_ns > 0, "parked activations are charged queueing delay");
+        assert!(
+            one.host_overall().avg_ns() >= free.host_overall().avg_ns(),
+            "queueing cannot make the run faster: {} vs {}",
+            one.host_overall().avg_ns(),
+            free.host_overall().avg_ns()
+        );
+    }
+
+    #[test]
+    fn hpus_do_not_affect_fixed_function_path() {
+        // the bounded pool models handler execution units; the paper's
+        // fixed-function datapath is dedicated silicon and bypasses it
         let mut cfg = base(AlgoType::RecursiveDoubling, true);
-        cfg.comms = 3;
-        assert!(cfg.validate().is_err(), "3 does not divide 8");
-        cfg.comms = 8;
-        assert!(cfg.validate().is_err(), "groups of 1 are not a collective");
+        cfg.cost.hpus = 1;
+        let m = run_cfg(cfg);
+        assert_eq!(m.hpu_queued, 0);
+        assert_eq!(m.hpu_queue_ns, 0);
+    }
+
+    #[test]
+    fn background_traffic_arrives_and_costs_latency() {
+        let mk = |flows: usize| {
+            let mut cfg = base(AlgoType::RecursiveDoubling, true);
+            cfg.bg_flows = flows;
+            cfg.bg_msgs = 50;
+            run_cfg(cfg)
+        };
+        let quiet = mk(0);
+        assert_eq!(quiet.bg_frames_rx, 0);
+        let noisy = mk(4);
+        assert_eq!(noisy.bg_frames_rx, 4 * 50, "every injected frame must arrive");
+        assert!(
+            noisy.host_overall().avg_ns() >= quiet.host_overall().avg_ns(),
+            "interference cannot speed up the collective"
+        );
+    }
+
+    #[test]
+    fn tenant_latency_recorded_and_fairness_near_one() {
+        let mut cfg = base(AlgoType::RecursiveDoubling, true);
+        cfg.tenants = 2;
+        let m = run_cfg(cfg);
+        assert_eq!(m.tenant_host.len(), 2);
+        for t in &m.tenant_host {
+            assert_eq!(t.count(), 4 * 20, "per-tenant samples = group ranks x iters");
+            assert!(t.percentile_ns(99.0) >= t.percentile_ns(50.0));
+        }
+        let f = m.fairness();
+        assert!(f > 0.8 && f <= 1.0, "identical tenants should be near-fair: {f}");
+    }
+
+    #[test]
+    fn heterogeneous_session_verifies_under_interference() {
+        // 4 ranks of offloaded RD scan + 4 ranks of software sequential
+        // scan sharing one fat-tree with background flows, both
+        // oracle-checked
+        let mut fabric = ExpConfig::default().fabric();
+        fabric.topology = "fattree".into();
+        fabric.verify = true;
+        fabric.bg_flows = 2;
+        let mut w1 = ExpConfig::default().workload();
+        w1.msg_bytes = 64;
+        w1.iters = 10;
+        w1.warmup = 2;
+        let mut w2 = w1.clone();
+        w2.path = ExecPath::Sw;
+        w2.algo = AlgoType::Sequential;
+        w2.msg_bytes = 256;
+        let m = Session::on_fabric(fabric)
+            .compute(make_compute(EngineKind::Native, "artifacts"))
+            .tenant(4, w1)
+            .tenant(4, w2)
+            .run()
+            .expect("heterogeneous session completes");
+        assert_eq!(m.tenant_host.len(), 2);
+        assert_eq!(m.tenant_host[0].count(), 4 * 10);
+        assert_eq!(m.tenant_host[1].count(), 4 * 10);
+        assert!(m.bg_frames_rx > 0);
+    }
+
+    #[test]
+    fn tenant_sizes_must_sum_to_fabric() {
+        let fabric = ExpConfig::default().fabric(); // p = 8
+        let w = ExpConfig::default().workload();
+        let err = Cluster::with_tenants(
+            &fabric,
+            &[(4, w.clone()), (2, w)],
+            make_compute(EngineKind::Native, "artifacts"),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("sum"), "{err}");
     }
 }

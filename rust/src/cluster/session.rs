@@ -1,0 +1,173 @@
+//! The workload-oriented front door: build a multi-tenant run as
+//! "fabric + tenants" instead of one flat [`ExpConfig`].
+//!
+//! ```text
+//! Session::on_fabric(fabric)
+//!     .compute(engine)
+//!     .tenant(4, scan_workload)      // ranks 0..4
+//!     .tenant(4, allreduce_workload) // ranks 4..8
+//!     .run()?
+//! ```
+//!
+//! Tenants claim contiguous rank ranges in declaration order and must
+//! cover the fabric exactly.  With no tenants declared, one default
+//! workload spans the whole fabric — making `Session` a superset of the
+//! old `Cluster::new` + `run` flow.  [`Session::scan_once`] is the
+//! application-style entry (one collective over caller-provided
+//! contributions); [`crate::cluster::Cluster::scan_once`] is now a thin
+//! wrapper over it.
+
+use std::rc::Rc;
+
+use anyhow::{ensure, Result};
+
+use crate::config::{FabricConfig, WorkloadSpec};
+use crate::data::Payload;
+use crate::metrics::RunMetrics;
+use crate::runtime::Compute;
+
+use super::Cluster;
+
+pub struct Session {
+    fabric: FabricConfig,
+    compute: Option<Rc<dyn Compute>>,
+    tenants: Vec<(usize, WorkloadSpec)>,
+}
+
+impl Session {
+    /// Start describing a run over `fabric`.
+    pub fn on_fabric(fabric: FabricConfig) -> Session {
+        Session { fabric, compute: None, tenants: Vec::new() }
+    }
+
+    /// Use this compute engine (defaults to the fabric's configured
+    /// engine kind with the standard artifact directory).
+    pub fn compute(mut self, compute: Rc<dyn Compute>) -> Session {
+        self.compute = Some(compute);
+        self
+    }
+
+    /// Add one tenant over the next `ranks` global ranks.
+    pub fn tenant(mut self, ranks: usize, spec: WorkloadSpec) -> Session {
+        self.tenants.push((ranks, spec));
+        self
+    }
+
+    /// Construct the cluster (validating every tenant against its own
+    /// group) without running it — callers that want tracing or custom
+    /// driving use this.
+    pub fn build(self) -> Result<Cluster> {
+        let compute = match self.compute {
+            Some(c) => c,
+            None => crate::runtime::make_engine(self.fabric.engine, "artifacts"),
+        };
+        let tenants = if self.tenants.is_empty() {
+            vec![(self.fabric.p, WorkloadSpec::default())]
+        } else {
+            self.tenants
+        };
+        Cluster::with_tenants(&self.fabric, &tenants, compute)
+    }
+
+    /// Build and run the full benchmark loop (every tenant's warmup +
+    /// iters), returning the pooled metrics.
+    pub fn run(self) -> Result<RunMetrics> {
+        self.build()?.run()
+    }
+
+    /// Application entry point: run ONE collective per tenant over
+    /// caller-provided per-rank contributions (global rank order) and
+    /// return each rank's result.  Forces every tenant to a single
+    /// unmeasured-warmup-free iteration and takes each tenant's message
+    /// size from its first rank's contribution.
+    pub fn scan_once(mut self, contributions: Vec<Payload>) -> Result<(Vec<Payload>, RunMetrics)> {
+        if self.tenants.is_empty() {
+            self.tenants.push((self.fabric.p, WorkloadSpec::default()));
+        }
+        let total: usize = self.tenants.iter().map(|(n, _)| n).sum();
+        ensure!(
+            contributions.len() == total,
+            "one contribution per rank: got {}, tenants cover {total}",
+            contributions.len()
+        );
+        let mut base = 0;
+        for (i, (size, spec)) in self.tenants.iter_mut().enumerate() {
+            spec.iters = 1;
+            spec.warmup = 0;
+            spec.msg_bytes = contributions[base].byte_len();
+            for r in base..base + *size {
+                ensure!(
+                    contributions[r].dtype() == spec.dtype,
+                    "rank {r} contribution dtype does not match tenant {i}"
+                );
+                ensure!(
+                    contributions[r].byte_len() == spec.msg_bytes,
+                    "rank {r} contribution size differs within tenant {i}"
+                );
+            }
+            base += *size;
+        }
+        let mut cluster = self.build()?;
+        cluster.injected = Some(contributions);
+        let metrics = cluster.run()?;
+        let results = cluster
+            .results
+            .iter()
+            .cloned()
+            .map(|r| r.expect("every rank completed"))
+            .collect();
+        Ok((results, metrics))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{EngineKind, ExpConfig};
+    use crate::runtime::make_engine as make_compute;
+
+    #[test]
+    fn session_scan_once_matches_cluster_scan_once() {
+        // the wrapper and the builder must agree bit-for-bit
+        let mut cfg = ExpConfig::default();
+        cfg.msg_bytes = 64;
+        cfg.verify = true;
+        let contribs: Vec<Payload> =
+            (0..cfg.p).map(|r| Cluster::gen_payload(&cfg, r, 0)).collect();
+        let (via_wrapper, _) = Cluster::scan_once(
+            cfg.clone(),
+            make_compute(EngineKind::Native, "artifacts"),
+            contribs.clone(),
+        )
+        .unwrap();
+        let (via_session, _) = Session::on_fabric(cfg.fabric())
+            .compute(make_compute(EngineKind::Native, "artifacts"))
+            .tenant(cfg.p, cfg.workload())
+            .scan_once(contribs)
+            .unwrap();
+        for r in 0..cfg.p {
+            assert_eq!(via_wrapper[r].bytes(), via_session[r].bytes(), "rank {r}");
+        }
+    }
+
+    #[test]
+    fn session_defaults_to_single_tenant() {
+        // no .tenant() call: one default workload spans the fabric
+        let mut fabric = ExpConfig::default().fabric();
+        fabric.verify = true;
+        let cfg = ExpConfig::default();
+        let contribs: Vec<Payload> =
+            (0..fabric.p).map(|r| Cluster::gen_payload(&cfg, r, 0)).collect();
+        let (results, m) = Session::on_fabric(fabric).scan_once(contribs).unwrap();
+        assert_eq!(results.len(), 8);
+        assert_eq!(m.tenant_host.len(), 1);
+        assert_eq!(m.tenant_host[0].count(), 8);
+    }
+
+    #[test]
+    fn session_rejects_uncovered_ranks() {
+        let fabric = ExpConfig::default().fabric(); // p = 8
+        let w = ExpConfig::default().workload();
+        assert!(Session::on_fabric(fabric).tenant(6, w).run().is_err());
+    }
+}

@@ -63,6 +63,13 @@ pub struct CostModel {
     /// `nic_combine_cycles` — the VM's ALU IS the fixed-function
     /// datapath, so compute costs stay identical across both paths.
     pub handler_copy_cycles_per_8b: u64,
+    /// Handler processing units per card (sPIN's bounded HPU pool).
+    /// Each handler activation occupies one unit for its full duration;
+    /// when all are busy, activations queue (FIFO within a flow,
+    /// round-robin across flows) and the wait is charged as queueing
+    /// delay.  0 = unconstrained: activations never queue, which keeps
+    /// the pre-HPU event schedule byte-identical.
+    pub hpus: u64,
 
     // ---- inter-switch fabric (hierarchical topologies) ----
     /// Store-and-forward latency of one switch hop (lookup + buffer),
@@ -96,6 +103,7 @@ impl Default for CostModel {
             nic_pkt_gen_cycles: 12,
             handler_instr_cycles: 1,
             handler_copy_cycles_per_8b: 1,
+            hpus: 0,
             switch_fwd_ns: 1_000,
             host_call_gap_ns: 2_000,
             start_jitter_ns: 5_000,
@@ -170,6 +178,7 @@ impl CostModel {
             "nic_pkt_gen_cycles" => self.nic_pkt_gen_cycles = as_u64()?,
             "handler_instr_cycles" => self.handler_instr_cycles = as_u64()?,
             "handler_copy_cycles_per_8b" => self.handler_copy_cycles_per_8b = as_u64()?,
+            "hpus" => self.hpus = as_u64()?,
             "switch_fwd_ns" => self.switch_fwd_ns = as_u64()?,
             "host_call_gap_ns" => self.host_call_gap_ns = as_u64()?,
             "start_jitter_ns" => self.start_jitter_ns = as_u64()?,

@@ -1,11 +1,18 @@
 //! Experiment configuration: the cost model plus everything a single
 //! simulated run needs (cluster size, algorithm, path, workload).
+//!
+//! Two views of the same knobs exist: the flat [`ExpConfig`] every
+//! existing entry point consumes, and the split
+//! [`FabricConfig`]/[`WorkloadSpec`] pair (`workload` module) the
+//! multi-tenant [`crate::cluster::Session`] builder composes per tenant.
 
 pub mod cost;
 pub mod toml;
+pub mod workload;
 
 pub use cost::CostModel;
 pub use toml::TomlDoc;
+pub use workload::{FabricConfig, WorkloadSpec};
 
 use crate::data::{Dtype, Op};
 use crate::packet::{AlgoType, CollType};
@@ -31,6 +38,50 @@ impl EngineKind {
     }
 }
 
+/// Which execution path runs the collective.  Replaces the old
+/// `offloaded: bool` + `handler: bool` pair (whose "handler implies
+/// offloaded" coupling was a recurring footgun) with one field that
+/// mirrors the `Series` path naming.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum ExecPath {
+    /// Software MPI baseline: the host stack runs the algorithm.
+    Sw,
+    /// Fixed-function NetFPGA offload (the paper's NF_ path).
+    Fpga,
+    /// Offload via the programmable handler VM (`nic::vm`) — sPIN-style
+    /// packet programs instead of fixed-function state machines.
+    Handler,
+}
+
+impl ExecPath {
+    pub fn from_name(s: &str) -> Option<ExecPath> {
+        match s {
+            "sw" => Some(ExecPath::Sw),
+            "fpga" => Some(ExecPath::Fpga),
+            "handler" => Some(ExecPath::Handler),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecPath::Sw => "sw",
+            ExecPath::Fpga => "fpga",
+            ExecPath::Handler => "handler",
+        }
+    }
+
+    /// Does this path cross into the NIC?  (Both offload flavors do.)
+    pub fn offloaded(&self) -> bool {
+        !matches!(self, ExecPath::Sw)
+    }
+
+    /// Does this path run handler-VM programs on the NIC?
+    pub fn handler(&self) -> bool {
+        matches!(self, ExecPath::Handler)
+    }
+}
+
 /// Full description of one simulated experiment.
 #[derive(Clone, Debug)]
 pub struct ExpConfig {
@@ -38,12 +89,9 @@ pub struct ExpConfig {
     pub p: usize,
     /// Scan algorithm under test.
     pub algo: AlgoType,
-    /// true = NF_ offloaded path, false = software MPI baseline.
-    pub offloaded: bool,
-    /// Offloaded collectives run as handler-VM programs (`nic::vm`)
-    /// instead of the fixed-function `fpga::` state machines.  Implies
-    /// `offloaded`; selected by the `handler[:coll]` series.
-    pub handler: bool,
+    /// Execution path: software baseline, fixed-function NetFPGA offload,
+    /// or the programmable handler VM.
+    pub path: ExecPath,
     /// Topology spec: `chain`/`ring`/`hypercube` (direct NetFPGA-to-
     /// NetFPGA wirings), `star[:group]`/`fattree[:k]` (hierarchical
     /// multi-switch fabrics that scale past one 4-port card per host),
@@ -74,10 +122,22 @@ pub struct ExpConfig {
     /// Delay one rank's first call (Fig. 3 late-rank scenarios).
     pub late_rank: Option<usize>,
     pub late_delay_ns: u64,
-    /// Number of disjoint communicators running concurrent collectives on
-    /// the shared network (the paper's SSVI comm_id future work).  Ranks
-    /// split into `comms` contiguous groups of p/comms.
-    pub comms: usize,
+    /// Number of tenants — disjoint communicators running concurrent
+    /// collective streams on the shared network (the paper's SSVI comm_id
+    /// future work).  Ranks split into `tenants` contiguous groups of
+    /// p/tenants.  Heterogeneous tenants go through
+    /// [`crate::cluster::Session`] instead.
+    pub tenants: usize,
+    /// Background point-to-point flows sharing the fabric (0 = off).
+    /// Each flow picks a seeded (src, dst) pair and injects
+    /// `bg_msgs` frames of `bg_bytes` spaced `bg_gap_ns` apart.
+    pub bg_flows: usize,
+    /// Frames per background flow.
+    pub bg_msgs: u64,
+    /// Payload bytes per background frame.
+    pub bg_bytes: usize,
+    /// Inter-frame gap per background flow (ns).
+    pub bg_gap_ns: u64,
     pub cost: CostModel,
 }
 
@@ -86,8 +146,7 @@ impl Default for ExpConfig {
         ExpConfig {
             p: 8,
             algo: AlgoType::RecursiveDoubling,
-            offloaded: true,
-            handler: false,
+            path: ExecPath::Fpga,
             topology: "auto".into(),
             msg_bytes: 4,
             iters: 1000,
@@ -102,24 +161,39 @@ impl Default for ExpConfig {
             ack_enabled: true,
             late_rank: None,
             late_delay_ns: 0,
-            comms: 1,
+            tenants: 1,
+            bg_flows: 0,
+            bg_msgs: 200,
+            bg_bytes: 1024,
+            bg_gap_ns: 20_000,
             cost: CostModel::default(),
         }
     }
 }
 
 impl ExpConfig {
+    /// Does this experiment cross into the NIC?
+    pub fn offloaded(&self) -> bool {
+        self.path.offloaded()
+    }
+
+    /// Does this experiment run handler-VM programs?
+    pub fn handler(&self) -> bool {
+        self.path.handler()
+    }
+
     /// Elements per rank for the configured message size.
     pub fn msg_elems(&self) -> usize {
         (self.msg_bytes / self.dtype.size()).max(1)
     }
 
-    /// Ranks per communicator.
+    /// Ranks per tenant communicator.
     pub fn group_size(&self) -> usize {
-        self.p / self.comms
+        self.p / self.tenants
     }
 
-    /// (communicator id, base global rank, group size) of a global rank.
+    /// (communicator id, base global rank, group size) of a global rank
+    /// under the homogeneous contiguous split.
     pub fn comm_of(&self, rank: usize) -> (u16, usize, usize) {
         let g = self.group_size();
         ((rank / g) as u16, rank / g * g, g)
@@ -160,7 +234,9 @@ impl ExpConfig {
         Ok(cfg)
     }
 
-    /// Apply one `[run]` key.
+    /// Apply one `[run]` key.  `offloaded`/`handler`/`comms` remain as
+    /// aliases for configs and flags written before the `path`/`tenants`
+    /// redesign.
     pub fn set_run(&mut self, key: &str, v: &str) -> Result<(), String> {
         match key {
             "p" => self.p = v.parse().map_err(|e| format!("run.p: {e}"))?,
@@ -168,10 +244,30 @@ impl ExpConfig {
                 self.algo =
                     AlgoType::from_name(v).ok_or_else(|| format!("run.algo: unknown {v}"))?
             }
-            "offloaded" => {
-                self.offloaded = v.parse().map_err(|e| format!("run.offloaded: {e}"))?
+            "path" => {
+                self.path =
+                    ExecPath::from_name(v).ok_or_else(|| format!("run.path: unknown {v}"))?
             }
-            "handler" => self.handler = v.parse().map_err(|e| format!("run.handler: {e}"))?,
+            "offloaded" => {
+                // legacy alias: true selects an offload path without
+                // downgrading an already-selected Handler
+                let b: bool = v.parse().map_err(|e| format!("run.offloaded: {e}"))?;
+                self.path = match (b, self.path) {
+                    (true, ExecPath::Sw) => ExecPath::Fpga,
+                    (true, other) => other,
+                    (false, _) => ExecPath::Sw,
+                };
+            }
+            "handler" => {
+                // legacy alias: true selects the handler VM (which is an
+                // offload path by construction — the old footgun is gone)
+                let b: bool = v.parse().map_err(|e| format!("run.handler: {e}"))?;
+                self.path = match (b, self.path) {
+                    (true, _) => ExecPath::Handler,
+                    (false, ExecPath::Handler) => ExecPath::Fpga,
+                    (false, other) => other,
+                };
+            }
             "topology" => self.topology = v.to_string(),
             "msg_bytes" => {
                 self.msg_bytes = v.parse().map_err(|e| format!("run.msg_bytes: {e}"))?
@@ -205,7 +301,14 @@ impl ExpConfig {
             "late_delay_ns" => {
                 self.late_delay_ns = v.parse().map_err(|e| format!("run.late_delay_ns: {e}"))?
             }
-            "comms" => self.comms = v.parse().map_err(|e| format!("run.comms: {e}"))?,
+            "tenants" => self.tenants = v.parse().map_err(|e| format!("run.tenants: {e}"))?,
+            "comms" => self.tenants = v.parse().map_err(|e| format!("run.comms: {e}"))?,
+            "bg_flows" => self.bg_flows = v.parse().map_err(|e| format!("run.bg_flows: {e}"))?,
+            "bg_msgs" => self.bg_msgs = v.parse().map_err(|e| format!("run.bg_msgs: {e}"))?,
+            "bg_bytes" => self.bg_bytes = v.parse().map_err(|e| format!("run.bg_bytes: {e}"))?,
+            "bg_gap_ns" => {
+                self.bg_gap_ns = v.parse().map_err(|e| format!("run.bg_gap_ns: {e}"))?
+            }
             _ => return Err(format!("unknown run key: {key}")),
         }
         Ok(())
@@ -215,18 +318,18 @@ impl ExpConfig {
         if self.p < 2 {
             return Err("p must be >= 2".into());
         }
-        if self.comms == 0 || self.p % self.comms != 0 {
-            return Err(format!("comms {} must divide p {}", self.comms, self.p));
+        if self.tenants == 0 || self.p % self.tenants != 0 {
+            return Err(format!("tenants {} must divide p {}", self.tenants, self.p));
         }
-        let group = self.p / self.comms;
+        let group = self.p / self.tenants;
         if group < 2 {
-            return Err("each communicator needs >= 2 ranks".into());
+            return Err("each tenant needs >= 2 ranks".into());
         }
         if !crate::util::is_pow2(group)
             && matches!(self.algo, AlgoType::RecursiveDoubling | AlgoType::BinomialTree)
         {
             return Err(format!(
-                "{} requires power-of-two ranks per communicator (paper section II-B), got {group}",
+                "{} requires power-of-two ranks per tenant (paper section II-B), got {group}",
                 self.algo.name()
             ));
         }
@@ -257,26 +360,24 @@ impl ExpConfig {
         if self.iters == 0 {
             return Err("iters must be > 0".into());
         }
+        if self.bg_flows > 0 && self.bg_gap_ns == 0 {
+            return Err("bg_gap_ns must be > 0 when background flows are on".into());
+        }
         // build (and discard) the resolved wiring so bad specs fail at
         // config time with the cell that owns them, not mid-sweep —
         // "auto" included: it resolves to a hypercube whose p constraint
-        // (power of two over the WHOLE cluster, not per communicator)
+        // (power of two over the WHOLE cluster, not per tenant)
         // is stricter than the group check above
         crate::net::Topology::build(self.topology_spec(), self.p)
             .map_err(|e| format!("topology: {e}"))?;
-        if self.handler {
-            if !self.offloaded {
-                return Err("handler VM is an offload path; set offloaded = true".into());
-            }
-            if !crate::util::is_pow2(group) {
-                return Err(format!(
-                    "handler programs need power-of-two ranks per communicator, got {group}"
-                ));
-            }
+        if self.handler() && !crate::util::is_pow2(group) {
+            return Err(format!(
+                "handler programs need power-of-two ranks per tenant, got {group}"
+            ));
         }
         match self.coll {
             CollType::Allreduce | CollType::Barrier => {
-                if self.algo == AlgoType::Sequential && !self.handler {
+                if self.algo == AlgoType::Sequential && !self.handler() {
                     return Err(format!(
                         "{:?} has no sequential machine; use rd or binomial",
                         self.coll
@@ -287,10 +388,10 @@ impl ExpConfig {
                 }
             }
             CollType::Bcast => {
-                if self.offloaded && !self.handler {
+                if self.path == ExecPath::Fpga {
                     return Err(
                         "MPI_Bcast has no fixed-function machine; offload it via the \
-                         handler VM (series handler:bcast / --handler true) or run the \
+                         handler VM (series handler:bcast / --path handler) or run the \
                          software path"
                             .into(),
                     );
@@ -308,10 +409,10 @@ impl ExpConfig {
     /// Short tag for tables: "NF_rd" / "sw_seq" style (paper's naming);
     /// the handler VM path is named by its collective ("handler:exscan").
     pub fn series_name(&self) -> String {
-        if self.handler {
+        if self.handler() {
             return format!("handler:{}", self.coll.name());
         }
-        let prefix = if self.offloaded { "NF" } else { "sw" };
+        let prefix = if self.offloaded() { "NF" } else { "sw" };
         let algo = match self.algo {
             AlgoType::Sequential => "seq",
             AlgoType::RecursiveDoubling => "rd",
@@ -349,10 +450,29 @@ mod tests {
         .unwrap();
         assert_eq!(cfg.p, 16);
         assert_eq!(cfg.algo, AlgoType::BinomialTree);
-        assert!(!cfg.offloaded);
+        assert_eq!(cfg.path, ExecPath::Sw);
+        assert!(!cfg.offloaded());
         assert_eq!(cfg.msg_elems(), 8);
         assert_eq!(cfg.cost.link_prop_ns, 700);
         assert_eq!(cfg.series_name(), "sw_binomial");
+    }
+
+    #[test]
+    fn path_key_and_legacy_aliases_agree() {
+        let mut cfg = ExpConfig::default();
+        cfg.set_run("path", "handler").unwrap();
+        assert_eq!(cfg.path, ExecPath::Handler);
+        assert!(cfg.offloaded() && cfg.handler());
+        // legacy "offloaded = true" must not downgrade Handler to Fpga
+        cfg.set_run("offloaded", "true").unwrap();
+        assert_eq!(cfg.path, ExecPath::Handler);
+        cfg.set_run("handler", "false").unwrap();
+        assert_eq!(cfg.path, ExecPath::Fpga);
+        cfg.set_run("offloaded", "false").unwrap();
+        assert_eq!(cfg.path, ExecPath::Sw);
+        cfg.set_run("handler", "true").unwrap();
+        assert_eq!(cfg.path, ExecPath::Handler, "handler alias implies offload");
+        assert!(cfg.set_run("path", "warp").is_err());
     }
 
     #[test]
@@ -409,27 +529,38 @@ mod tests {
     #[test]
     fn handler_validation() {
         let mut cfg = ExpConfig::default();
-        cfg.handler = true;
+        cfg.path = ExecPath::Handler;
         cfg.validate().unwrap();
         assert_eq!(cfg.series_name(), "handler:scan");
         cfg.coll = CollType::Bcast;
         cfg.validate().unwrap();
         assert_eq!(cfg.series_name(), "handler:bcast");
-        cfg.handler = false;
+        cfg.path = ExecPath::Fpga;
         assert!(cfg.validate().is_err(), "bcast offload needs the handler VM");
-        cfg.offloaded = false;
+        cfg.path = ExecPath::Sw;
         cfg.validate().unwrap();
 
         let mut cfg = ExpConfig::default();
-        cfg.handler = true;
-        cfg.offloaded = false;
-        assert!(cfg.validate().is_err(), "handler implies offload");
-
-        let mut cfg = ExpConfig::default();
-        cfg.handler = true;
+        cfg.path = ExecPath::Handler;
         cfg.algo = AlgoType::Sequential;
         cfg.p = 6;
         assert!(cfg.validate().is_err(), "handler programs need power-of-two groups");
+    }
+
+    #[test]
+    fn tenant_validation() {
+        let mut cfg = ExpConfig::default();
+        cfg.tenants = 3;
+        assert!(cfg.validate().is_err(), "3 does not divide 8");
+        cfg.tenants = 8;
+        assert!(cfg.validate().is_err(), "groups of 1 are not a collective");
+        cfg.tenants = 2;
+        cfg.validate().unwrap();
+        cfg.set_run("comms", "4").unwrap();
+        assert_eq!(cfg.tenants, 4, "legacy comms key still lands on tenants");
+        cfg.bg_flows = 2;
+        cfg.bg_gap_ns = 0;
+        assert!(cfg.validate().is_err(), "flows need a positive gap");
     }
 
     #[test]

@@ -1,0 +1,205 @@
+//! The split view of [`ExpConfig`]: what belongs to the shared fabric
+//! versus what each tenant brings.
+//!
+//! [`FabricConfig`] is everything the simulated network owns — cluster
+//! size, wiring, cost model, seed, background traffic.  [`WorkloadSpec`]
+//! is one tenant's collective stream — which collective, which algorithm,
+//! which path, how many iterations.  `compose` glues one of each back
+//! into the flat [`ExpConfig`] the cluster machinery consumes; the
+//! [`crate::cluster::Session`] builder does exactly that once per tenant.
+
+use crate::config::cost::CostModel;
+use crate::config::{EngineKind, ExecPath, ExpConfig};
+use crate::data::{Dtype, Op};
+use crate::packet::{AlgoType, CollType};
+
+/// Everything shared by all tenants of one simulated run.
+#[derive(Clone, Debug)]
+pub struct FabricConfig {
+    pub p: usize,
+    pub topology: String,
+    pub seed: u64,
+    pub engine: EngineKind,
+    pub verify: bool,
+    pub late_rank: Option<usize>,
+    pub late_delay_ns: u64,
+    pub bg_flows: usize,
+    pub bg_msgs: u64,
+    pub bg_bytes: usize,
+    pub bg_gap_ns: u64,
+    pub cost: CostModel,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        ExpConfig::default().fabric()
+    }
+}
+
+/// One tenant's collective stream.
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    pub coll: CollType,
+    pub algo: AlgoType,
+    pub path: ExecPath,
+    pub op: Op,
+    pub dtype: Dtype,
+    pub msg_bytes: usize,
+    pub iters: usize,
+    pub warmup: usize,
+    pub multicast_opt: bool,
+    pub ack_enabled: bool,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        ExpConfig::default().workload()
+    }
+}
+
+impl ExpConfig {
+    /// The fabric half of this flat config.
+    pub fn fabric(&self) -> FabricConfig {
+        FabricConfig {
+            p: self.p,
+            topology: self.topology.clone(),
+            seed: self.seed,
+            engine: self.engine,
+            verify: self.verify,
+            late_rank: self.late_rank,
+            late_delay_ns: self.late_delay_ns,
+            bg_flows: self.bg_flows,
+            bg_msgs: self.bg_msgs,
+            bg_bytes: self.bg_bytes,
+            bg_gap_ns: self.bg_gap_ns,
+            cost: self.cost.clone(),
+        }
+    }
+
+    /// The per-tenant half of this flat config.
+    pub fn workload(&self) -> WorkloadSpec {
+        WorkloadSpec {
+            coll: self.coll,
+            algo: self.algo,
+            path: self.path,
+            op: self.op,
+            dtype: self.dtype,
+            msg_bytes: self.msg_bytes,
+            iters: self.iters,
+            warmup: self.warmup,
+            multicast_opt: self.multicast_opt,
+            ack_enabled: self.ack_enabled,
+        }
+    }
+
+    /// Recombine a fabric and one workload into the flat config the
+    /// cluster internals consume (single tenant spanning the fabric).
+    pub fn compose(fabric: &FabricConfig, w: &WorkloadSpec) -> ExpConfig {
+        ExpConfig {
+            p: fabric.p,
+            algo: w.algo,
+            path: w.path,
+            topology: fabric.topology.clone(),
+            msg_bytes: w.msg_bytes,
+            iters: w.iters,
+            warmup: w.warmup,
+            coll: w.coll,
+            op: w.op,
+            dtype: w.dtype,
+            seed: fabric.seed,
+            engine: fabric.engine,
+            verify: fabric.verify,
+            multicast_opt: w.multicast_opt,
+            ack_enabled: w.ack_enabled,
+            late_rank: fabric.late_rank,
+            late_delay_ns: fabric.late_delay_ns,
+            tenants: 1,
+            bg_flows: fabric.bg_flows,
+            bg_msgs: fabric.bg_msgs,
+            bg_bytes: fabric.bg_bytes,
+            bg_gap_ns: fabric.bg_gap_ns,
+            cost: fabric.cost.clone(),
+        }
+    }
+}
+
+impl WorkloadSpec {
+    /// Apply one `key = value` pair (the tenant-spec syntax used by
+    /// `Session` callers and docs: `coll`, `algo`, `path`, `op`, `dtype`,
+    /// `msg_bytes`, `iters`, `warmup`, `multicast_opt`, `ack_enabled`).
+    pub fn set(&mut self, key: &str, v: &str) -> Result<(), String> {
+        match key {
+            "coll" => {
+                self.coll =
+                    CollType::from_name(v).ok_or_else(|| format!("workload.coll: unknown {v}"))?
+            }
+            "algo" => {
+                self.algo =
+                    AlgoType::from_name(v).ok_or_else(|| format!("workload.algo: unknown {v}"))?
+            }
+            "path" => {
+                self.path = ExecPath::from_name(v)
+                    .ok_or_else(|| format!("workload.path: unknown {v}"))?
+            }
+            "op" => {
+                self.op = Op::from_name(v).ok_or_else(|| format!("workload.op: unknown {v}"))?
+            }
+            "dtype" => {
+                self.dtype =
+                    Dtype::from_name(v).ok_or_else(|| format!("workload.dtype: unknown {v}"))?
+            }
+            "msg_bytes" => {
+                self.msg_bytes = v.parse().map_err(|e| format!("workload.msg_bytes: {e}"))?
+            }
+            "iters" => self.iters = v.parse().map_err(|e| format!("workload.iters: {e}"))?,
+            "warmup" => self.warmup = v.parse().map_err(|e| format!("workload.warmup: {e}"))?,
+            "multicast_opt" => {
+                self.multicast_opt =
+                    v.parse().map_err(|e| format!("workload.multicast_opt: {e}"))?
+            }
+            "ack_enabled" => {
+                self.ack_enabled = v.parse().map_err(|e| format!("workload.ack_enabled: {e}"))?
+            }
+            _ => return Err(format!("unknown workload key: {key}")),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_and_compose_roundtrip() {
+        let mut cfg = ExpConfig::default();
+        cfg.p = 16;
+        cfg.path = ExecPath::Handler;
+        cfg.coll = CollType::Exscan;
+        cfg.msg_bytes = 256;
+        cfg.topology = "fattree".into();
+        cfg.bg_flows = 3;
+        let back = ExpConfig::compose(&cfg.fabric(), &cfg.workload());
+        assert_eq!(back.p, 16);
+        assert_eq!(back.path, ExecPath::Handler);
+        assert_eq!(back.coll, CollType::Exscan);
+        assert_eq!(back.msg_bytes, 256);
+        assert_eq!(back.topology, "fattree");
+        assert_eq!(back.bg_flows, 3);
+        assert_eq!(back.tenants, 1, "compose yields a single-tenant view");
+        back.validate().unwrap();
+    }
+
+    #[test]
+    fn workload_set_parses_keys() {
+        let mut w = WorkloadSpec::default();
+        w.set("coll", "allreduce").unwrap();
+        w.set("path", "handler").unwrap();
+        w.set("msg_bytes", "128").unwrap();
+        assert_eq!(w.coll, CollType::Allreduce);
+        assert_eq!(w.path, ExecPath::Handler);
+        assert_eq!(w.msg_bytes, 128);
+        assert!(w.set("bogus", "1").is_err());
+        assert!(w.set("path", "warp").is_err());
+    }
+}

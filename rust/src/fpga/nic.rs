@@ -6,10 +6,11 @@
 //! created on demand and retired on completion, with a hard capacity that
 //! models the card's limited resources.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 use crate::net::{PortNo, Rank};
-use crate::sim::SimTime;
+use crate::packet::CollPacket;
+use crate::sim::{OffloadRequest, SimTime};
 
 use super::engine::CollEngine;
 use super::reassembly::Reassembler;
@@ -23,6 +24,64 @@ pub const MAX_LIVE_ENGINES: usize = 8;
 
 /// Reassembly budget: in-progress multi-fragment messages per card.
 pub const MAX_REASM_MSGS: usize = 32;
+
+/// One parked handler activation: the input that would have run had a
+/// handler processing unit been free, plus when it arrived (so the wait
+/// can be charged as queueing delay when it finally runs).
+pub struct HpuJob {
+    pub epoch: u16,
+    pub req: Option<OffloadRequest>,
+    pub pkt: Option<CollPacket>,
+    pub arrival: SimTime,
+}
+
+/// sPIN-style bounded pool of handler processing units: `units`
+/// execution slots running handler activations to completion.  When all
+/// are busy, activations park in a per-flow run queue — FIFO within a
+/// flow (comm_id order must be preserved), round-robin across flows (no
+/// tenant starves another).  `units == 0` means unconstrained: nothing
+/// ever parks and the scheduler is never consulted, keeping the
+/// pre-HPU event schedule byte-identical.
+#[derive(Default)]
+pub struct HpuSched {
+    pub units: u64,
+    pub busy: u64,
+    /// Activations queued (lifetime total, for metrics).
+    pub queued_total: u64,
+    queues: HashMap<u32, VecDeque<HpuJob>>,
+    /// Round-robin order over flows with queued work.
+    ring: VecDeque<u32>,
+}
+
+impl HpuSched {
+    /// All units occupied?
+    pub fn saturated(&self) -> bool {
+        self.units > 0 && self.busy >= self.units
+    }
+
+    /// Park one activation on `flow`'s queue.
+    pub fn enqueue(&mut self, flow: u32, job: HpuJob) {
+        self.queued_total += 1;
+        let q = self.queues.entry(flow).or_default();
+        if q.is_empty() {
+            self.ring.push_back(flow);
+        }
+        q.push_back(job);
+    }
+
+    /// Pop the next runnable activation, round-robin across flows.
+    pub fn next(&mut self) -> Option<HpuJob> {
+        let flow = self.ring.pop_front()?;
+        let q = self.queues.get_mut(&flow).expect("ring entries have queues");
+        let job = q.pop_front().expect("ring entries have work");
+        if q.is_empty() {
+            self.queues.remove(&flow);
+        } else {
+            self.ring.push_back(flow);
+        }
+        Some(job)
+    }
+}
 
 pub struct Nic {
     pub rank: Rank,
@@ -40,6 +99,8 @@ pub struct Nic {
     pub frames_forwarded: u64,
     /// High-water mark of simultaneous engines (buffer-pressure metric).
     pub max_live_engines_seen: usize,
+    /// Handler processing units (sPIN's bounded execution pool).
+    pub hpu: HpuSched,
 }
 
 impl Nic {
@@ -54,6 +115,7 @@ impl Nic {
             bytes_tx: 0,
             frames_forwarded: 0,
             max_live_engines_seen: 0,
+            hpu: HpuSched::default(),
         }
     }
 
@@ -123,5 +185,31 @@ mod tests {
     fn bad_port_panics() {
         let mut n = Nic::new(0, 2);
         n.tx_reserve(5, SimTime::ZERO, 1);
+    }
+
+    #[test]
+    fn hpu_queue_is_fifo_within_flow_round_robin_across() {
+        let mut s = HpuSched { units: 1, ..Default::default() };
+        let job = |epoch| HpuJob { epoch, req: None, pkt: None, arrival: SimTime::ZERO };
+        // flow A gets two jobs, then flow B gets two
+        s.enqueue(0xA, job(1));
+        s.enqueue(0xA, job(2));
+        s.enqueue(0xB, job(3));
+        s.enqueue(0xB, job(4));
+        assert_eq!(s.queued_total, 4);
+        let order: Vec<u16> = std::iter::from_fn(|| s.next().map(|j| j.epoch)).collect();
+        // round-robin across flows, FIFO within each
+        assert_eq!(order, vec![1, 3, 2, 4]);
+        assert!(s.next().is_none());
+    }
+
+    #[test]
+    fn hpu_unconstrained_never_saturates() {
+        let mut s = HpuSched::default();
+        assert!(!s.saturated());
+        s.busy = 10_000;
+        assert!(!s.saturated(), "units == 0 means no constraint");
+        let c = HpuSched { units: 2, busy: 2, ..Default::default() };
+        assert!(c.saturated());
     }
 }

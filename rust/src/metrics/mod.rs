@@ -100,6 +100,73 @@ impl LatencyStats {
     }
 }
 
+/// Sample-retaining latency statistics: what per-tenant tail percentiles
+/// are computed from.  [`LatencyStats`] streams (count/sum/min/max) and
+/// cannot answer p50/p99; tenants are few and their sample counts modest
+/// (iters × group size), so retention is cheap where it is needed.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SampleStats {
+    samples: Vec<u64>,
+}
+
+impl SampleStats {
+    pub fn new() -> Self {
+        SampleStats { samples: Vec::new() }
+    }
+
+    pub fn record(&mut self, ns: u64) {
+        self.samples.push(ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.samples.len() as u64
+    }
+
+    pub fn sum_ns(&self) -> u128 {
+        self.samples.iter().map(|&s| s as u128).sum()
+    }
+
+    pub fn avg_ns(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.sum_ns() as f64 / self.samples.len() as f64
+        }
+    }
+
+    /// Nearest-rank percentile (`q` in [0, 100]): the smallest sample
+    /// such that at least q% of samples are <= it.  0 when empty.
+    pub fn percentile_ns(&self, q: f64) -> u64 {
+        if self.samples.is_empty() {
+            return 0;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_unstable();
+        let n = sorted.len();
+        let rank = ((q / 100.0) * n as f64).ceil() as usize;
+        sorted[rank.clamp(1, n) - 1]
+    }
+}
+
+/// Jain's fairness index over per-tenant completion rates
+/// (iterations per unit latency: count_i / sum_latency_i).  1.0 = every
+/// tenant progresses at the same rate; 1/n = one tenant hogs everything.
+/// Tenants with no samples are excluded; fewer than two rated tenants is
+/// trivially fair.
+pub fn jain_fairness(tenants: &[SampleStats]) -> f64 {
+    let rates: Vec<f64> = tenants
+        .iter()
+        .filter(|t| t.count() > 0 && t.sum_ns() > 0)
+        .map(|t| t.count() as f64 / t.sum_ns() as f64)
+        .collect();
+    if rates.len() < 2 {
+        return 1.0;
+    }
+    let sum: f64 = rates.iter().sum();
+    let sum_sq: f64 = rates.iter().map(|r| r * r).sum();
+    (sum * sum) / (rates.len() as f64 * sum_sq)
+}
+
 /// All measurements of one simulated experiment.
 #[derive(Clone, Debug, Default)]
 pub struct RunMetrics {
@@ -126,6 +193,17 @@ pub struct RunMetrics {
     pub handler_instrs: u64,
     /// Handler-VM activations that parked waiting for input (`drop`).
     pub handler_stalls: u64,
+    /// Host-observed latency samples pooled per tenant (p50/p99 +
+    /// fairness come from these).  One entry per tenant; a single-tenant
+    /// run has exactly one.
+    pub tenant_host: Vec<SampleStats>,
+    /// Total ns handler activations spent parked waiting for a free
+    /// handler processing unit (0 when `cost.hpus` is unconstrained).
+    pub hpu_queue_ns: u64,
+    /// Handler activations that had to queue for an HPU.
+    pub hpu_queued: u64,
+    /// Background-traffic frames that reached their destination NIC.
+    pub bg_frames_rx: u64,
     /// Total simulated duration.
     pub sim_ns: u64,
 }
@@ -144,8 +222,24 @@ impl RunMetrics {
             multicasts: 0,
             handler_instrs: 0,
             handler_stalls: 0,
+            tenant_host: vec![SampleStats::new()],
+            hpu_queue_ns: 0,
+            hpu_queued: 0,
+            bg_frames_rx: 0,
             sim_ns: 0,
         }
+    }
+
+    /// Per-tenant pooled host latency sized for `tenants` tenants.
+    pub fn with_tenants(p: usize, tenants: usize) -> Self {
+        let mut m = RunMetrics::new(p);
+        m.tenant_host = vec![SampleStats::new(); tenants.max(1)];
+        m
+    }
+
+    /// Jain's fairness index over the per-tenant completion rates.
+    pub fn fairness(&self) -> f64 {
+        jain_fairness(&self.tenant_host)
     }
 
     /// Cluster-wide host latency (all ranks' samples pooled — the OSU
@@ -185,6 +279,28 @@ impl RunMetrics {
             ("multicasts".into(), Json::int(self.multicasts)),
             ("handler_instrs".into(), Json::int(self.handler_instrs)),
             ("handler_stalls".into(), Json::int(self.handler_stalls)),
+            ("hpu_queue_ns".into(), Json::int(self.hpu_queue_ns)),
+            ("hpu_queued".into(), Json::int(self.hpu_queued)),
+            ("bg_frames_rx".into(), Json::int(self.bg_frames_rx)),
+            ("fairness".into(), Json::Num(self.fairness())),
+            (
+                "tenant_p50_us".into(),
+                Json::Arr(
+                    self.tenant_host
+                        .iter()
+                        .map(|t| Json::Num(ns_to_us(t.percentile_ns(50.0))))
+                        .collect(),
+                ),
+            ),
+            (
+                "tenant_p99_us".into(),
+                Json::Arr(
+                    self.tenant_host
+                        .iter()
+                        .map(|t| Json::Num(ns_to_us(t.percentile_ns(99.0))))
+                        .collect(),
+                ),
+            ),
             ("sim_ns".into(), Json::int(self.sim_ns)),
             ("host_latency".into(), stats_arr(&self.host_latency)),
             ("nic_elapsed".into(), stats_arr(&self.nic_elapsed)),
@@ -361,6 +477,43 @@ mod tests {
             Json::Int(-1)
         )]))
         .is_err());
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let mut s = SampleStats::new();
+        assert_eq!(s.percentile_ns(50.0), 0, "empty stats have no tail");
+        for ns in [50u64, 10, 40, 20, 30] {
+            s.record(ns);
+        }
+        assert_eq!(s.count(), 5);
+        assert_eq!(s.percentile_ns(50.0), 30);
+        assert_eq!(s.percentile_ns(99.0), 50);
+        assert_eq!(s.percentile_ns(0.0), 10, "q=0 clamps to the minimum");
+        assert_eq!(s.percentile_ns(100.0), 50);
+        assert!((s.avg_ns() - 30.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fairness_index_bounds() {
+        let fill = |ns: u64, n: usize| {
+            let mut s = SampleStats::new();
+            for _ in 0..n {
+                s.record(ns);
+            }
+            s
+        };
+        // identical tenants: perfectly fair
+        let even = vec![fill(100, 10), fill(100, 10), fill(100, 10)];
+        assert!((jain_fairness(&even) - 1.0).abs() < 1e-12);
+        // one tenant 100x slower: fairness well below 1
+        let skewed = vec![fill(100, 10), fill(10_000, 10)];
+        let j = jain_fairness(&skewed);
+        assert!(j < 0.6, "skewed rates must show: {j}");
+        assert!(j >= 0.5, "two tenants bound Jain at 1/2: {j}");
+        // empty tenants are excluded, single tenant trivially fair
+        assert_eq!(jain_fairness(&[fill(100, 5), SampleStats::new()]), 1.0);
+        assert_eq!(jain_fairness(&[]), 1.0);
     }
 
     #[test]

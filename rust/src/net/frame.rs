@@ -17,6 +17,9 @@ use super::{Rank, MTU, NFSCAN_UDP_PORT};
 /// Encoded size of the software-MPI message header inside the UDP body.
 pub const SW_HDR_LEN: usize = 24;
 
+/// Encoded size of the background-traffic header inside the UDP body.
+pub const BG_HDR_LEN: usize = 12;
+
 /// Max payload-data bytes per frame: MTU minus IP/UDP/collective headers,
 /// rounded down to a multiple of 8 so f64 elements never straddle frames.
 /// 1500 - 20 - 8 - 34 = 1438 -> 1432.
@@ -116,6 +119,45 @@ impl SwMsg {
     }
 }
 
+/// One frame of seeded background point-to-point traffic (the non-MPI
+/// tenant load sharing the fabric).  The payload is synthetic — only its
+/// length matters for serialization and trunk contention — so the frame
+/// carries a byte count, not data.
+#[derive(Clone, Debug)]
+pub struct BgMsg {
+    pub flow: u16,
+    pub seq: u32,
+    /// Synthetic payload bytes (zeros on the wire).
+    pub len: u32,
+}
+
+impl BgMsg {
+    pub fn encoded_len(&self) -> usize {
+        BG_HDR_LEN + self.len as usize
+    }
+
+    pub fn emit(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(b"BG"); // magic
+        out.extend_from_slice(&self.flow.to_be_bytes());
+        out.extend_from_slice(&self.seq.to_be_bytes());
+        out.extend_from_slice(&self.len.to_be_bytes());
+        out.resize(out.len() + self.len as usize, 0);
+    }
+
+    pub fn parse(b: &[u8]) -> Option<BgMsg> {
+        if b.len() < BG_HDR_LEN || &b[0..2] != b"BG" {
+            return None;
+        }
+        let flow = u16::from_be_bytes([b[2], b[3]]);
+        let seq = u32::from_be_bytes([b[4], b[5], b[6], b[7]]);
+        let len = u32::from_be_bytes([b[8], b[9], b[10], b[11]]);
+        if b.len() < BG_HDR_LEN + len as usize {
+            return None;
+        }
+        Some(BgMsg { flow, seq, len })
+    }
+}
+
 /// The UDP body of a frame.
 #[derive(Clone, Debug)]
 pub enum FrameBody {
@@ -123,6 +165,8 @@ pub enum FrameBody {
     Coll(CollPacket),
     /// Software-MPI baseline traffic.
     Sw(SwMsg),
+    /// Background point-to-point traffic (no collective semantics).
+    Bg(BgMsg),
 }
 
 impl FrameBody {
@@ -130,6 +174,7 @@ impl FrameBody {
         match self {
             FrameBody::Coll(p) => p.encoded_len(),
             FrameBody::Sw(m) => m.encoded_len(),
+            FrameBody::Bg(m) => m.encoded_len(),
         }
     }
 }
@@ -158,6 +203,7 @@ impl Frame {
         match &self.body {
             FrameBody::Coll(p) => p.emit(&mut body),
             FrameBody::Sw(m) => m.emit(&mut body),
+            FrameBody::Bg(m) => m.emit(&mut body),
         }
         let mut out = Vec::with_capacity(self.wire_bytes());
         EthHeader::new(self.src, self.dst).emit(&mut out);
@@ -179,7 +225,9 @@ impl Frame {
         {
             return None; // L2/L3 address mismatch
         }
-        let body = if let Some(m) = SwMsg::parse(body_bytes) {
+        let body = if let Some(m) = BgMsg::parse(body_bytes) {
+            FrameBody::Bg(m)
+        } else if let Some(m) = SwMsg::parse(body_bytes) {
             FrameBody::Sw(m)
         } else {
             FrameBody::Coll(CollPacket::parse(body_bytes)?)
@@ -328,6 +376,25 @@ mod tests {
         assert_eq!(frags.len(), 2);
         assert_eq!(frags[0].3.len(), CHUNK_BYTES / 8);
         assert_eq!(frags[1].3.len(), 1);
+    }
+
+    #[test]
+    fn frame_serialize_parse_roundtrip_bg() {
+        let f =
+            Frame { src: 4, dst: 6, body: FrameBody::Bg(BgMsg { flow: 3, seq: 41, len: 700 }) };
+        assert_eq!(
+            f.wire_bytes(),
+            ETH_HDR_LEN + IPV4_HDR_LEN + UDP_HDR_LEN + BG_HDR_LEN + 700
+        );
+        let back = Frame::parse(&f.serialize()).unwrap();
+        match back.body {
+            FrameBody::Bg(m) => {
+                assert_eq!(m.flow, 3);
+                assert_eq!(m.seq, 41);
+                assert_eq!(m.len, 700);
+            }
+            _ => panic!("wrong body"),
+        }
     }
 
     #[test]

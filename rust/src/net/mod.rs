@@ -11,7 +11,7 @@ pub mod headers;
 pub mod routing;
 pub mod topology;
 
-pub use frame::{Frame, FrameBody, SwMsg, SwMsgKind, CHUNK_BYTES};
+pub use frame::{BgMsg, Frame, FrameBody, SwMsg, SwMsgKind, CHUNK_BYTES};
 pub use headers::{EthHeader, Ipv4Header, MacAddr, UdpHeader};
 pub use routing::RouteTable;
 pub use topology::{NodeId, Topology};

@@ -12,7 +12,7 @@
 use std::rc::Rc;
 
 use crate::cluster::Cluster;
-use crate::config::{EngineKind, ExpConfig};
+use crate::config::{EngineKind, ExecPath, ExpConfig};
 use crate::data::{Dtype, Op, Payload};
 use crate::packet::{AlgoType, CollType};
 use crate::prop::{choose, for_each_case, vec_i32};
@@ -162,8 +162,8 @@ fn handler_programs_agree_with_sw_and_oracle() {
 
         let run_path = |handler: bool| -> Vec<Payload> {
             let mut c = cfg.clone();
-            c.handler = handler;
-            c.offloaded = handler; // handler vs pure software baseline
+            // handler vs pure software baseline
+            c.path = if handler { ExecPath::Handler } else { ExecPath::Sw };
             let (results, _) = Cluster::scan_once(c, Rc::clone(&compute), contribs.clone())
                 .unwrap_or_else(|e| {
                     panic!(
@@ -203,6 +203,78 @@ fn handler_programs_agree_with_sw_and_oracle() {
 }
 
 #[test]
+fn every_tenant_agrees_with_oracle_under_interference() {
+    // Multi-tenant fabrics must not leak values across communicators:
+    // for random tenant layouts (mixed paths, background traffic, a
+    // bounded HPU pool) every tenant's scan must still bit-match the
+    // oracle computed over that tenant's OWN contributions.
+    use crate::cluster::Session;
+    use crate::config::WorkloadSpec;
+
+    for_each_case(24, 0x7E4A_17, |rng| {
+        let n_tenants = *choose(rng, &[2usize, 3, 4]);
+        let group = *choose(rng, &[2usize, 4, 8]);
+        let p = n_tenants * group;
+
+        let mut fabric = ExpConfig::default().fabric();
+        fabric.p = p;
+        fabric.topology = if crate::util::is_pow2(p) {
+            choose(rng, &["auto", "fattree", "star:3"]).to_string()
+        } else {
+            choose(rng, &["fattree", "star:3"]).to_string()
+        };
+        fabric.seed = rng.next_u64();
+        fabric.bg_flows = *choose(rng, &[0usize, 2, 4]);
+        fabric.bg_msgs = 20;
+        fabric.cost.hpus = *choose(rng, &[0u64, 1, 2]);
+        fabric.cost.start_jitter_ns = *choose(rng, &[0u64, 5_000]);
+
+        let mut session = Session::on_fabric(fabric.clone())
+            .compute(make_engine(EngineKind::Native, "artifacts"));
+        let mut specs: Vec<WorkloadSpec> = Vec::new();
+        for _ in 0..n_tenants {
+            let mut w = WorkloadSpec::default();
+            w.path = *choose(rng, &[ExecPath::Sw, ExecPath::Fpga, ExecPath::Handler]);
+            w.coll = CollType::Scan;
+            w.dtype = Dtype::I32;
+            w.msg_bytes = *choose(rng, &[1usize, 5, 16]) * w.dtype.size();
+            if w.path != ExecPath::Handler {
+                w.algo = *choose(rng, &[AlgoType::Sequential, AlgoType::RecursiveDoubling]);
+            }
+            session = session.tenant(group, w.clone());
+            specs.push(w);
+        }
+
+        let compute = make_engine(EngineKind::Native, "artifacts");
+        let contribs: Vec<Payload> = (0..p)
+            .map(|r| {
+                let n = specs[r / group].msg_bytes / Dtype::I32.size();
+                Payload::from_i32(&vec_i32(rng, n, 9))
+            })
+            .collect();
+
+        let (results, metrics) = session.scan_once(contribs.clone()).unwrap();
+        assert_eq!(metrics.tenant_host.len(), n_tenants);
+        for t in 0..n_tenants {
+            let base = t * group;
+            let mine = &contribs[base..base + group];
+            for r in 0..group {
+                let want =
+                    oracle_prefix(&*compute, mine, specs[t].op, true, r).expect("oracle");
+                assert_agree(
+                    &results[base + r],
+                    &want,
+                    &format!(
+                        "tenant {t} rank {r} ({:?} on {} with {} bg flows, {} hpus)",
+                        specs[t].path, fabric.topology, fabric.bg_flows, fabric.cost.hpus
+                    ),
+                );
+            }
+        }
+    });
+}
+
+#[test]
 fn software_offload_and_oracle_agree_on_every_rank() {
     for_each_case(40, 0xC0_55A1, |rng| {
         let cfg = random_case(rng);
@@ -211,7 +283,7 @@ fn software_offload_and_oracle_agree_on_every_rank() {
 
         let run_path = |offloaded: bool| -> Vec<Payload> {
             let mut c = cfg.clone();
-            c.offloaded = offloaded;
+            c.path = if offloaded { ExecPath::Fpga } else { ExecPath::Sw };
             let (results, _) = Cluster::scan_once(c, Rc::clone(&compute), contribs.clone())
                 .unwrap_or_else(|e| {
                     panic!("{} on {} p={}: {e}", cfg.series_name(), cfg.topology, cfg.p)

@@ -1,10 +1,11 @@
 //! Event vocabulary of the simulated cluster.
 //!
-//! Four event kinds cover the whole system: host processes acting, data
-//! crossing the host/NIC boundary (in both directions), and frames
-//! arriving at NIC ports.  Costs (host stack, DMA crossing, wire time) are
-//! charged when the event is *scheduled*; the event fires when the thing
-//! has fully happened.
+//! Six event kinds cover the whole system: host processes acting, data
+//! crossing the host/NIC boundary (in both directions), frames arriving
+//! at NIC ports, NIC handler units retiring, and background-traffic
+//! injections.  Costs (host stack, DMA crossing, wire time) are charged
+//! when the event is *scheduled*; the event fires when the thing has
+//! fully happened.
 
 use crate::data::{Dtype, Op, Payload};
 use crate::net::{Frame, PortNo, Rank, SwMsg};
@@ -49,4 +50,9 @@ pub enum EventKind {
     NicRecv { rank: Rank, port: PortNo, frame: Frame },
     /// An offload request finished crossing from host to NIC.
     NicHostReq { rank: Rank, req: OffloadRequest },
+    /// A handler processing unit on `rank`'s NIC finished its activation
+    /// (only scheduled when `cost.hpus > 0` constrains the pool).
+    HpuDone { rank: Rank },
+    /// The background traffic generator injects flow `flow`'s next frame.
+    BgTick { flow: u16 },
 }

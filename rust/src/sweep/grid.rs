@@ -10,6 +10,7 @@
 //! p        = [4, 8, 64, 256]          # cluster-size axis
 //! series   = ["sw_rd", "NF_rd"]       # path x algorithm axis
 //! topology = ["auto", "fattree"]      # wiring axis (see net::Topology)
+//! tenants  = [1, 2, 4]                # concurrent-communicator axis
 //!
 //! [run]                               # scalar ExpConfig overrides
 //! iters = 300
@@ -19,7 +20,7 @@
 //! ```
 //!
 //! Expansion order is fixed — series outermost, then topology, then p,
-//! then sizes innermost — and each job derives its own seed from (master
+//! then tenants, then sizes innermost — and each job derives its own seed from (master
 //! seed, job index), so the job list is a pure function of the spec: the
 //! parallel runner can execute it with any `--jobs` and merge back into
 //! the same report bytes.
@@ -42,6 +43,8 @@ pub struct GridSpec {
     /// Topology specs (`auto`, `chain`, `fattree:8`, ...), one grid axis.
     pub topologies: Vec<String>,
     pub ps: Vec<usize>,
+    /// Concurrent-communicator counts (1 = the classic single-job runs).
+    pub tenants: Vec<usize>,
     pub sizes: Vec<usize>,
 }
 
@@ -80,9 +83,9 @@ impl GridSpec {
             base.cost.set(k, v)?;
         }
         for (k, _) in doc.section("grid") {
-            if !matches!(k, "name" | "sizes" | "p" | "series" | "topology") {
+            if !matches!(k, "name" | "sizes" | "p" | "series" | "topology" | "tenants") {
                 return Err(format!(
-                    "unknown grid key: {k} (expected name/sizes/p/series/topology)"
+                    "unknown grid key: {k} (expected name/sizes/p/series/topology/tenants)"
                 ));
             }
         }
@@ -104,6 +107,7 @@ impl GridSpec {
         };
         let sizes = parse_usizes("sizes", base.msg_bytes)?;
         let ps = parse_usizes("p", base.p)?;
+        let tenants = parse_usizes("tenants", base.tenants)?;
         let series = match doc.get_list("grid", "series")? {
             None => vec![Series::of_config(&base)],
             Some(items) if items.is_empty() => return Err("grid.series is empty".into()),
@@ -116,7 +120,7 @@ impl GridSpec {
             Some(items) => items,
         };
 
-        let spec = GridSpec { name, base, series, topologies, ps, sizes };
+        let spec = GridSpec { name, base, series, topologies, ps, tenants, sizes };
         spec.expand()?; // validate every cell loudly at parse time
         Ok(spec)
     }
@@ -131,38 +135,47 @@ impl GridSpec {
             series: bench::paper_series(),
             topologies: vec!["auto".to_string()],
             ps: vec![8],
+            // pinned to a single tenant so the figs job indices (and
+            // therefore derived seeds and golden figure bytes) are
+            // untouched by the tenants axis
+            tenants: vec![1],
             sizes: bench::OSU_SIZES.to_vec(),
         }
     }
 
     pub fn n_jobs(&self) -> usize {
-        self.series.len() * self.topologies.len() * self.ps.len() * self.sizes.len()
+        self.series.len() * self.topologies.len() * self.ps.len() * self.tenants.len()
+            * self.sizes.len()
     }
 
     /// Expand to the ordered job list (series, then topology, then p,
-    /// then sizes).  Every cell is validated; an invalid combination
-    /// (e.g. rd on a non-power-of-two p, a hypercube cell at a p that
-    /// isn't one) names the cell it came from.
+    /// then tenants, then sizes).  Every cell is validated; an invalid
+    /// combination (e.g. rd on a non-power-of-two p, a hypercube cell at
+    /// a p that isn't one) names the cell it came from.
     pub fn expand(&self) -> Result<Vec<Job>, String> {
         let mut jobs = Vec::with_capacity(self.n_jobs());
         for &series in &self.series {
             for topo in &self.topologies {
                 for &p in &self.ps {
-                    for &size in &self.sizes {
-                        let index = jobs.len();
-                        let mut cfg = self.base.clone();
-                        series.apply(&mut cfg);
-                        cfg.topology = topo.clone();
-                        cfg.p = p;
-                        cfg.msg_bytes = size;
-                        cfg.seed = derive_seed(self.base.seed, index as u64);
-                        cfg.validate().map_err(|e| {
-                            format!(
-                                "grid cell {index} ({} {topo} p={p} {size}B): {e}",
-                                series.name()
-                            )
-                        })?;
-                        jobs.push(Job { index, series, cfg });
+                    for &tenants in &self.tenants {
+                        for &size in &self.sizes {
+                            let index = jobs.len();
+                            let mut cfg = self.base.clone();
+                            series.apply(&mut cfg);
+                            cfg.topology = topo.clone();
+                            cfg.p = p;
+                            cfg.tenants = tenants;
+                            cfg.msg_bytes = size;
+                            cfg.seed = derive_seed(self.base.seed, index as u64);
+                            cfg.validate().map_err(|e| {
+                                format!(
+                                    "grid cell {index} ({} {topo} p={p} tenants={tenants} \
+                                     {size}B): {e}",
+                                    series.name()
+                                )
+                            })?;
+                            jobs.push(Job { index, series, cfg });
+                        }
                     }
                 }
             }
@@ -297,7 +310,7 @@ mod tests {
         .unwrap();
         assert_eq!(spec.n_jobs(), 5);
         let jobs = spec.expand().unwrap();
-        assert!(jobs.iter().all(|j| j.cfg.handler && j.cfg.offloaded));
+        assert!(jobs.iter().all(|j| j.cfg.handler() && j.cfg.offloaded()));
         let colls: Vec<CollType> = jobs.iter().map(|j| j.cfg.coll).collect();
         assert_eq!(colls, CollType::HANDLER_SET.to_vec());
 
@@ -328,10 +341,39 @@ mod tests {
     }
 
     #[test]
+    fn tenants_axis_expands_between_p_and_sizes() {
+        let spec = GridSpec::from_toml(
+            r#"
+            [grid]
+            sizes = [4, 64]
+            tenants = [1, 2]
+            series = ["NF_rd"]
+            [run]
+            iters = 5
+            "#,
+        )
+        .unwrap();
+        assert_eq!(spec.n_jobs(), 4);
+        let jobs = spec.expand().unwrap();
+        let key = |j: &Job| (j.cfg.tenants, j.cfg.msg_bytes);
+        assert_eq!(key(&jobs[0]), (1, 4));
+        assert_eq!(key(&jobs[1]), (1, 64));
+        assert_eq!(key(&jobs[2]), (2, 4));
+        assert_eq!(key(&jobs[3]), (2, 64));
+        // default: the [run] scalar seeds a single-value axis
+        let spec = GridSpec::from_toml("[grid]\nsizes = [4]\n[run]\ntenants = 2").unwrap();
+        assert_eq!(spec.tenants, vec![2]);
+        // invalid cells name themselves
+        let err = GridSpec::from_toml("[grid]\ntenants = [3]").unwrap_err();
+        assert!(err.contains("tenants=3"), "{err}");
+    }
+
+    #[test]
     fn figs_grid_matches_the_paper_evaluation() {
         let spec = GridSpec::figs(300);
         assert_eq!(spec.name, FIGS_GRID);
         assert_eq!(spec.ps, vec![8]);
+        assert_eq!(spec.tenants, vec![1], "figs indices must not shift under the tenants axis");
         assert_eq!(spec.sizes, crate::bench::OSU_SIZES);
         let names: Vec<String> = spec.series.iter().map(|s| s.name()).collect();
         assert_eq!(names, vec!["sw_seq", "sw_rd", "NF_seq", "NF_rd", "NF_binomial"]);

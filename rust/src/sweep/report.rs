@@ -38,6 +38,16 @@ pub struct JobResult {
     /// `handler:*` series).
     pub handler_instrs: u64,
     pub handler_stalls: u64,
+    /// Concurrent communicators in this cell (1 = classic runs).
+    pub tenants: usize,
+    /// Per-tenant host-latency tail percentiles, tenant order.
+    pub tenant_p50_us: Vec<f64>,
+    pub tenant_p99_us: Vec<f64>,
+    /// Jain's fairness index over per-tenant completion rates.
+    pub fairness: f64,
+    /// Total handler queueing delay charged / background frames received.
+    pub hpu_queue_ns: u64,
+    pub bg_frames: u64,
     pub sim_ns: u64,
 }
 
@@ -57,6 +67,20 @@ impl JobResult {
             multicasts: m.multicasts,
             handler_instrs: m.handler_instrs,
             handler_stalls: m.handler_stalls,
+            tenants: job.cfg.tenants,
+            tenant_p50_us: m
+                .tenant_host
+                .iter()
+                .map(|t| crate::util::ns_to_us(t.percentile_ns(50.0)))
+                .collect(),
+            tenant_p99_us: m
+                .tenant_host
+                .iter()
+                .map(|t| crate::util::ns_to_us(t.percentile_ns(99.0)))
+                .collect(),
+            fairness: m.fairness(),
+            hpu_queue_ns: m.hpu_queue_ns,
+            bg_frames: m.bg_frames_rx,
             sim_ns: m.sim_ns,
         }
     }
@@ -76,6 +100,18 @@ impl JobResult {
             ("multicasts".into(), Json::int(self.multicasts)),
             ("handler_instrs".into(), Json::int(self.handler_instrs)),
             ("handler_stalls".into(), Json::int(self.handler_stalls)),
+            ("tenants".into(), Json::int(self.tenants as u64)),
+            (
+                "tenant_p50_us".into(),
+                Json::Arr(self.tenant_p50_us.iter().map(|&v| Json::Num(v)).collect()),
+            ),
+            (
+                "tenant_p99_us".into(),
+                Json::Arr(self.tenant_p99_us.iter().map(|&v| Json::Num(v)).collect()),
+            ),
+            ("fairness".into(), Json::Num(self.fairness)),
+            ("hpu_queue_ns".into(), Json::int(self.hpu_queue_ns)),
+            ("bg_frames".into(), Json::int(self.bg_frames)),
             ("sim_ns".into(), Json::int(self.sim_ns)),
         ])
     }
@@ -108,6 +144,21 @@ impl JobResult {
             // absent in pre-handler artifacts
             handler_instrs: j.get("handler_instrs").and_then(|v| v.as_u64()).unwrap_or(0),
             handler_stalls: j.get("handler_stalls").and_then(|v| v.as_u64()).unwrap_or(0),
+            // absent in pre-multi-tenant artifacts: one tenant, no queueing
+            tenants: j.get("tenants").and_then(|v| v.as_u64()).unwrap_or(1) as usize,
+            tenant_p50_us: j
+                .get("tenant_p50_us")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|v| v.as_f64()).collect())
+                .unwrap_or_default(),
+            tenant_p99_us: j
+                .get("tenant_p99_us")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|v| v.as_f64()).collect())
+                .unwrap_or_default(),
+            fairness: j.get("fairness").and_then(|v| v.as_f64()).unwrap_or(1.0),
+            hpu_queue_ns: j.get("hpu_queue_ns").and_then(|v| v.as_u64()).unwrap_or(0),
+            bg_frames: j.get("bg_frames").and_then(|v| v.as_u64()).unwrap_or(0),
             sim_ns: get_u64("sim_ns")?,
         })
     }
@@ -138,6 +189,7 @@ pub struct SweepReport {
     pub series: Vec<String>,
     pub topologies: Vec<String>,
     pub ps: Vec<usize>,
+    pub tenants: Vec<usize>,
     pub sizes: Vec<usize>,
     pub jobs: Vec<JobResult>,
 }
@@ -149,6 +201,7 @@ impl SweepReport {
             series: spec.series.iter().map(|s| s.name()).collect(),
             topologies: spec.topologies.clone(),
             ps: spec.ps.clone(),
+            tenants: spec.tenants.clone(),
             sizes: spec.sizes.clone(),
             jobs,
         }
@@ -167,6 +220,10 @@ impl SweepReport {
                 Json::Arr(self.topologies.iter().map(|t| Json::str(t.clone())).collect()),
             ),
             ("p".into(), Json::Arr(self.ps.iter().map(|&p| Json::int(p as u64)).collect())),
+            (
+                "tenants".into(),
+                Json::Arr(self.tenants.iter().map(|&t| Json::int(t as u64)).collect()),
+            ),
             (
                 "sizes".into(),
                 Json::Arr(self.sizes.iter().map(|&s| Json::int(s as u64)).collect()),
@@ -196,6 +253,12 @@ impl SweepReport {
             return Err(format!(
                 "figure {stem} needs a single-topology grid, got {:?}",
                 self.topologies
+            ));
+        }
+        if self.tenants.len() > 1 {
+            return Err(format!(
+                "figure {stem} needs a single-tenants grid, got {:?}",
+                self.tenants
             ));
         }
         let series: Vec<&String> = self
@@ -320,6 +383,12 @@ mod tests {
             multicasts: 0,
             handler_instrs: 0,
             handler_stalls: 0,
+            tenants: 1,
+            tenant_p50_us: vec![],
+            tenant_p99_us: vec![],
+            fairness: 1.0,
+            hpu_queue_ns: 0,
+            bg_frames: 0,
             sim_ns: 1_000_000,
         };
         SweepReport {
@@ -327,6 +396,7 @@ mod tests {
             series: vec!["sw_seq".into(), "NF_rd".into()],
             topologies: vec!["auto".into()],
             ps: vec![8],
+            tenants: vec![1],
             sizes: vec![4, 64],
             jobs: vec![
                 mk(0, "sw_seq", 4, 40_000),
@@ -378,6 +448,14 @@ mod tests {
         r.topologies = vec!["auto".into(), "fattree".into()];
         let err = r.figure_json("fig4").unwrap_err();
         assert!(err.contains("single-topology"), "{err}");
+    }
+
+    #[test]
+    fn figure_json_rejects_multi_tenant_grids() {
+        let mut r = tiny_report();
+        r.tenants = vec![1, 2];
+        let err = r.figure_json("fig4").unwrap_err();
+        assert!(err.contains("single-tenants"), "{err}");
     }
 
     #[test]

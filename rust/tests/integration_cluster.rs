@@ -4,7 +4,7 @@
 use std::rc::Rc;
 
 use nfscan::cluster::Cluster;
-use nfscan::config::{EngineKind, ExpConfig};
+use nfscan::config::{EngineKind, ExecPath, ExpConfig};
 use nfscan::data::{Dtype, Op, Payload};
 use nfscan::packet::{AlgoType, CollType};
 use nfscan::runtime::make_engine;
@@ -46,7 +46,7 @@ fn ack_disabled_overflows_nic_buffers() {
     // overflows.  The model asserts instead of silently dropping.
     let mut cfg = ExpConfig::default();
     cfg.algo = AlgoType::Sequential;
-    cfg.offloaded = true;
+    cfg.path = ExecPath::Fpga;
     cfg.ack_enabled = false;
     cfg.iters = 400;
     cfg.warmup = 0;
@@ -61,7 +61,7 @@ fn topology_mismatch_costs_latency() {
     let run = |topology: &str| {
         let mut cfg = ExpConfig::default();
         cfg.algo = AlgoType::Sequential;
-        cfg.offloaded = true;
+        cfg.path = ExecPath::Fpga;
         cfg.topology = topology.into();
         cfg.iters = 50;
         cfg.warmup = 8;
@@ -88,7 +88,7 @@ fn algorithm_selection_policy_is_sane_end_to_end() {
     let measure = |algo: AlgoType, msg: usize| {
         let mut cfg = ExpConfig::default();
         cfg.algo = algo;
-        cfg.offloaded = true;
+        cfg.path = ExecPath::Fpga;
         cfg.msg_bytes = msg;
         cfg.iters = 60;
         cfg.warmup = 8;
@@ -115,7 +115,7 @@ fn all_dtypes_and_ops_verify_offloaded() {
             }
             let mut cfg = ExpConfig::default();
             cfg.algo = AlgoType::RecursiveDoubling;
-            cfg.offloaded = true;
+            cfg.path = ExecPath::Fpga;
             cfg.dtype = dtype;
             cfg.op = op;
             cfg.msg_bytes = 16 * dtype.size();
@@ -134,7 +134,7 @@ fn seq_supports_non_power_of_two() {
         let mut cfg = ExpConfig::default();
         cfg.p = p;
         cfg.algo = AlgoType::Sequential;
-        cfg.offloaded = true;
+        cfg.path = ExecPath::Fpga;
         cfg.iters = 10;
         cfg.warmup = 2;
         cfg.verify = true;
@@ -151,7 +151,7 @@ fn engine_table_stays_bounded_under_pipelining() {
     for algo in AlgoType::ALL {
         let mut cfg = ExpConfig::default();
         cfg.algo = algo;
-        cfg.offloaded = true;
+        cfg.path = ExecPath::Fpga;
         cfg.iters = 300;
         cfg.warmup = 0;
         cfg.cost.start_jitter_ns = 50_000; // heavy skew

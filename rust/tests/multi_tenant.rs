@@ -1,0 +1,173 @@
+//! Multi-tenant fabric integration: the tenants grid axis must keep the
+//! sweep byte-deterministic under any worker count, the per-tenant
+//! artifact fields must be populated, and concurrent tenants must stay
+//! oracle-correct under background interference and a bounded HPU pool.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use nfscan::cluster::Session;
+use nfscan::config::{EngineKind, ExecPath, ExpConfig, WorkloadSpec};
+use nfscan::metrics::json::Json;
+use nfscan::runtime::make_engine;
+use nfscan::sweep::{run_grid, GridSpec};
+
+/// Tenants axis crossed with both offload flavors, plus saturated HPUs
+/// and background traffic — the most scheduler-dependent grid we have.
+const TENANTS_GRID: &str = r#"
+    [grid]
+    name = "tenants"
+    sizes = [64]
+    tenants = [1, 2, 4]
+    series = ["NF_rd", "handler:scan"]
+
+    [run]
+    p = 8
+    iters = 12
+    warmup = 2
+    seed = 7
+    bg_flows = 4
+    bg_msgs = 30
+
+    [cost]
+    hpus = 1
+"#;
+
+fn scratch(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("nfscan_mt_{tag}_{}", std::process::id()))
+}
+
+#[test]
+fn tenants_sweep_bytes_identical_for_jobs_1_and_4() {
+    let spec = GridSpec::from_toml(TENANTS_GRID).unwrap();
+    let d1 = scratch("j1");
+    let d4 = scratch("j4");
+    let files1 = run_grid(&spec, 1, "artifacts").unwrap().write_artifacts(&d1).unwrap();
+    let files4 = run_grid(&spec, 4, "artifacts").unwrap().write_artifacts(&d4).unwrap();
+    assert!(!files1.is_empty());
+    for (a, b) in files1.iter().zip(files4.iter()) {
+        assert_eq!(
+            std::fs::read(a).unwrap(),
+            std::fs::read(b).unwrap(),
+            "{} differs between --jobs 1 and --jobs 4",
+            a.file_name().unwrap().to_string_lossy()
+        );
+    }
+    std::fs::remove_dir_all(&d1).ok();
+    std::fs::remove_dir_all(&d4).ok();
+}
+
+#[test]
+fn tenants_sweep_reports_per_tenant_percentiles_and_fairness() {
+    let spec = GridSpec::from_toml(TENANTS_GRID).unwrap();
+    let report = run_grid(&spec, 4, "artifacts").unwrap();
+    assert_eq!(report.jobs.len(), 6, "2 series x 3 tenants x 1 size");
+    for job in &report.jobs {
+        assert_eq!(job.tenant_p50_us.len(), job.tenants, "one p50 per tenant");
+        assert_eq!(job.tenant_p99_us.len(), job.tenants, "one p99 per tenant");
+        for (p50, p99) in job.tenant_p50_us.iter().zip(job.tenant_p99_us.iter()) {
+            assert!(*p50 > 0.0 && p99 >= p50, "p50 {p50} p99 {p99}");
+        }
+        assert!(
+            job.fairness > 0.0 && job.fairness <= 1.0 + 1e-12,
+            "Jain index out of range: {}",
+            job.fairness
+        );
+        assert!(job.bg_frames > 0, "background traffic must be simulated");
+    }
+    // a single homogeneous tenant is perfectly fair by definition
+    let single = report.jobs.iter().find(|j| j.tenants == 1).unwrap();
+    assert!((single.fairness - 1.0).abs() < 1e-12);
+
+    // the new fields survive a JSON round trip with the same bytes
+    let doc = report.to_json().pretty();
+    let parsed = Json::parse(&doc).unwrap();
+    let jobs = parsed.get("jobs").unwrap().as_arr().unwrap();
+    assert_eq!(jobs[0].get("tenants").unwrap().as_u64(), Some(1));
+    assert!(jobs.last().unwrap().get("fairness").unwrap().as_f64().is_some());
+}
+
+#[test]
+fn pre_tenant_artifacts_still_parse() {
+    // artifacts written before the tenants axis existed have none of the
+    // per-tenant fields; loading them must default to a single tenant
+    let legacy = r#"{
+        "index": 0, "series": "NF_rd", "topology": "auto", "p": 8,
+        "msg_bytes": 64, "seed": 1,
+        "host": {"count": 2, "sum_ns": 100, "min_ns": 40, "max_ns": 60},
+        "nic": {"count": 0, "sum_ns": 0, "min_ns": 0, "max_ns": 0},
+        "total_frames": 9, "switch_frames": 0,
+        "multicasts": 0, "sim_ns": 5
+    }"#;
+    let job = nfscan::sweep::JobResult::from_json(&Json::parse(legacy).unwrap()).unwrap();
+    assert_eq!(job.tenants, 1);
+    assert!(job.tenant_p50_us.is_empty());
+    assert_eq!(job.fairness, 1.0);
+    assert_eq!(job.bg_frames, 0);
+}
+
+#[test]
+fn concurrent_tenants_verify_against_oracle_under_interference() {
+    // two tenants on different datapaths, saturated HPUs, background
+    // flows: with verify on, every iteration of every tenant is checked
+    // against the reduction oracle inside the cluster — the run
+    // completing IS the assertion.
+    let mut fabric = ExpConfig::default().fabric();
+    fabric.topology = "fattree".into();
+    fabric.verify = true;
+    fabric.bg_flows = 3;
+    fabric.bg_msgs = 40;
+    fabric.cost.hpus = 1;
+
+    let mut handler = WorkloadSpec::default();
+    handler.path = ExecPath::Handler;
+    handler.msg_bytes = 64;
+    handler.iters = 8;
+    handler.warmup = 2;
+
+    let mut sw = WorkloadSpec::default();
+    sw.path = ExecPath::Sw;
+    sw.msg_bytes = 256;
+    sw.iters = 8;
+    sw.warmup = 2;
+
+    let m = Session::on_fabric(fabric)
+        .compute(make_engine(EngineKind::Native, "artifacts"))
+        .tenant(4, handler)
+        .tenant(4, sw)
+        .run()
+        .unwrap();
+    assert_eq!(m.tenant_host.len(), 2);
+    for t in &m.tenant_host {
+        assert_eq!(t.count(), 4 * 8, "4 ranks x 8 measured iterations");
+    }
+    assert!(m.bg_frames_rx > 0);
+    assert!(m.hpu_queued > 0, "hpus = 1 must queue handler activations");
+    let fairness = m.fairness();
+    assert!(fairness > 0.0 && fairness <= 1.0 + 1e-12, "{fairness}");
+}
+
+#[test]
+fn single_tenant_unconstrained_pool_matches_legacy_run() {
+    // tenants = 1 + hpus = 0 must reproduce the exact event stream of
+    // the pre-tenant cluster: same samples, same frame counts
+    let mut cfg = ExpConfig::default();
+    cfg.path = ExecPath::Handler;
+    cfg.msg_bytes = 64;
+    cfg.iters = 20;
+    cfg.warmup = 4;
+    let run = |cfg: &ExpConfig| {
+        let compute: Rc<dyn nfscan::runtime::Compute> =
+            make_engine(EngineKind::Native, "artifacts");
+        let mut cluster = nfscan::cluster::Cluster::new(cfg.clone(), compute);
+        cluster.run().unwrap()
+    };
+    let a = run(&cfg);
+    let mut with_pool = cfg.clone();
+    with_pool.cost.hpus = 0; // explicit default: unconstrained
+    let b = run(&with_pool);
+    assert_eq!(a.host_overall().avg_ns(), b.host_overall().avg_ns());
+    assert_eq!(a.total_frames(), b.total_frames());
+    assert_eq!(a.hpu_queued, 0);
+    assert_eq!(b.hpu_queued, 0);
+}

@@ -9,7 +9,7 @@
 use std::rc::Rc;
 
 use nfscan::cluster::Cluster;
-use nfscan::config::{EngineKind, ExpConfig};
+use nfscan::config::{EngineKind, ExecPath, ExpConfig};
 use nfscan::data::{Dtype, Op, Payload};
 use nfscan::net::frame::{fragment, reassemble};
 use nfscan::net::{Frame, FrameBody, RouteTable, Topology};
@@ -36,7 +36,7 @@ fn random_cfg(rng: &mut SplitMix64) -> ExpConfig {
         }
         _ => *choose(rng, &[2usize, 4, 8, 16]),
     };
-    cfg.offloaded = rng.next_below(2) == 0;
+    cfg.path = if rng.next_below(2) == 0 { ExecPath::Fpga } else { ExecPath::Sw };
     if rng.next_below(3) == 0 {
         // sometimes run on a hierarchical fabric instead of the
         // algorithm's natural direct wiring (valid at every p above)
@@ -108,7 +108,7 @@ fn scan_once_matches_oracle_for_arbitrary_payloads() {
         let mut cfg = ExpConfig::default();
         cfg.p = p;
         cfg.algo = algo;
-        cfg.offloaded = true;
+        cfg.path = ExecPath::Fpga;
         cfg.verify = true;
         let compute = make_engine(EngineKind::Native, "artifacts");
         let (results, _) =
@@ -239,7 +239,7 @@ fn sw_seq_pipeline_latency_beats_first_iteration() {
     // minimum latency must be well under a cold full-chain traversal.
     let mut cfg = ExpConfig::default();
     cfg.algo = AlgoType::Sequential;
-    cfg.offloaded = false;
+    cfg.path = ExecPath::Sw;
     cfg.iters = 100;
     cfg.warmup = 8;
     cfg.verify = true;

@@ -9,7 +9,7 @@
 //! O(log p), not O(p), along the fat-tree axis.
 
 use nfscan::cluster::Cluster;
-use nfscan::config::{EngineKind, ExpConfig};
+use nfscan::config::{EngineKind, ExecPath, ExpConfig};
 use nfscan::metrics::RunMetrics;
 use nfscan::packet::AlgoType;
 use nfscan::runtime::make_engine;
@@ -18,7 +18,7 @@ fn run(p: usize, topology: &str, algo: AlgoType, iters: usize) -> RunMetrics {
     let mut cfg = ExpConfig::default();
     cfg.p = p;
     cfg.algo = algo;
-    cfg.offloaded = true;
+    cfg.path = ExecPath::Fpga;
     cfg.topology = topology.into();
     cfg.msg_bytes = 4;
     cfg.iters = iters;
