@@ -18,7 +18,10 @@
 //!   fragments;
 //! - `handler_dispatch` — one handler-VM `on_host_request` activation
 //!   (engine construction included, as the cluster pays it per epoch);
-//! - `event_queue_hold256` — calendar-queue hold-model pop+push.
+//! - `event_queue_hold256` — calendar-queue hold-model pop+push;
+//! - `fault_gate_loss0` — the per-hop fault-plan gate a loss-free run
+//!   pays (one `lossy()` + `degrades()` check on a quiet plan; the
+//!   hostile-network tentpole's ~zero-overhead claim).
 
 use std::time::Instant;
 
@@ -29,6 +32,7 @@ use crate::fpga::reassembly::Reassembler;
 use crate::metrics::json::Json;
 use crate::metrics::Table;
 use crate::net::frame::fragment;
+use crate::net::FaultPlan;
 use crate::runtime::{engine::oracle_prefix, Compute, NativeEngine};
 use crate::sim::{EventKind, EventQueue, SimTime, SplitMix64};
 use crate::util::alloc as cnt;
@@ -158,6 +162,17 @@ fn bench_event_queue(reps: usize, counting: bool) -> (f64, Option<f64>) {
     })
 }
 
+fn bench_fault_gate(reps: usize, counting: bool) -> (f64, Option<f64>) {
+    // the per-hop cost a loss-free run pays for the fault layer: the
+    // lossy()/degrades() gate transmit pays before skipping the fault
+    // path entirely.  Expected ~0 ns/op and exactly 0 allocs/op.
+    let plan = FaultPlan::quiet(0xF00D);
+    measure(1024, reps, counting, || {
+        let p = std::hint::black_box(&plan);
+        std::hint::black_box(p.lossy() || p.degrades());
+    })
+}
+
 /// Run the whole suite.  `quick` shrinks rep counts (CI smoke / tests).
 pub fn run_all(quick: bool) -> Vec<BenchResult> {
     let counting = cnt::counting_installed();
@@ -173,6 +188,7 @@ pub fn run_all(quick: bool) -> Vec<BenchResult> {
     push("reassembly_16k", bench_reassembly_16k(r(20_000, 200), counting));
     push("handler_dispatch", bench_handler_dispatch(r(100_000, 1_000), counting));
     push("event_queue_hold256", bench_event_queue(r(400_000, 4_000), counting));
+    push("fault_gate_loss0", bench_fault_gate(r(400_000, 4_000), counting));
     out
 }
 
@@ -271,12 +287,12 @@ mod tests {
     #[test]
     fn quick_suite_runs_and_serializes() {
         let results = run_all(true);
-        assert_eq!(results.len(), 7);
+        assert_eq!(results.len(), 8);
         assert!(results.iter().all(|r| r.ns_per_op > 0.0));
         let doc = to_json(&results);
         let parsed = Json::parse(&doc.pretty()).unwrap();
         assert_eq!(parsed.get("schema").unwrap().as_str(), Some("nfscan-bench/1"));
-        assert_eq!(parsed.get("entries").unwrap().as_arr().unwrap().len(), 7);
+        assert_eq!(parsed.get("entries").unwrap().as_arr().unwrap().len(), 8);
         // lib tests install the counting allocator: allocs must be
         // *counted* (the zero-alloc value assertion lives in
         // tests/alloc_free.rs, whose binary has no concurrent tests

@@ -99,16 +99,16 @@ COMMANDS
                          (--algo rd --path fpga --msg_bytes 64 ...)
   fig4|fig5|fig6|fig7    regenerate a paper figure (--iters N, --engine xla,
                          --sizes 4,64,1024)
-  sweep --grid F.toml    expand a grid spec (sizes x p x tenants x series
-                         x topology) and run every cell in parallel:
+  sweep --grid F.toml    expand a grid spec (sizes x p x tenants x loss x
+                         series x topology) and run every cell in parallel:
                          --jobs N worker threads (default: all cores; the
                          banner shows the resolved count), JSON artifacts
                          under --out DIR (default out/).  --grid figs
                          reproduces Figs. 4-7 in one batch
                          (fig4.json..fig7.json); artifact bytes are
                          identical for any --jobs.  --topology a,b /
-                         --sizes n,m / --series a,b / --tenants 1,2,4
-                         override the file's axes.
+                         --sizes n,m / --series a,b / --tenants 1,2,4 /
+                         --loss 0,0.01,0.05 override the file's axes.
   sweep --config F.toml  legacy: run ONE experiment described by a TOML
   values                 run ONE collective with deterministic per-rank
                          data and dump each rank's result bytes as JSON
@@ -149,6 +149,15 @@ on the simulated card (`--path handler` on run/quickstart).
 Topologies (--topology): chain | ring | hypercube (direct NetFPGA wiring,
 the paper's testbed), star[:group] | fattree[:k] (hierarchical switch
 fabrics for p = 64..512), auto (each algorithm's natural direct wiring).
+
+Hostile networks: --loss P drops each frame independently with
+probability P (per-link, seeded); --drop \"0->1:3,2->*:1\" drops exact
+(link, nth-frame) pairs; --trunk_degrade F multiplies switch trunk
+serialization cost.  NICs recover via timeout/retransmit: tune
+--timeout_ns / --max_retries / --timeout_backoff.  Results still
+bit-match the lossless oracle; recovery cost lands in the
+retransmits / timeouts_fired / recovery_ns metrics (sweep artifacts
+carry them per job, and `--loss a,b` sweeps loss as a grid axis).
 
 Figures print aligned tables; add --csv true for CSV output."
     );
@@ -289,7 +298,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
     args.ensure_only(&[
         "grid", "jobs", "out", "artifacts", "engine", "iters", "sizes", "topology", "series",
-        "tenants", "csv",
+        "tenants", "loss", "csv",
     ])?;
     let grid = args
         .get("grid")
@@ -324,6 +333,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             .map(|t| t.trim().parse::<usize>().with_context(|| format!("--tenants item {t}")))
             .collect::<Result<_>>()?;
     }
+    if let Some(losses) = args.get("loss") {
+        spec.losses = losses
+            .split(',')
+            .map(|l| l.trim().parse::<f64>().with_context(|| format!("--loss item {l}")))
+            .collect::<Result<_>>()?;
+    }
     if let Some(e) = args.get("engine") {
         spec.base.engine =
             EngineKind::from_name(e).ok_or_else(|| anyhow!("unknown engine {e}"))?;
@@ -337,13 +352,14 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
     let n = spec.n_jobs();
     println!(
-        "sweep {}: {} jobs ({} series x {} topologies x {} p x {} tenants x {} sizes) on {} workers{}",
+        "sweep {}: {} jobs ({} series x {} topologies x {} p x {} tenants x {} loss x {} sizes) on {} workers{}",
         spec.name,
         n,
         spec.series.len(),
         spec.topologies.len(),
         spec.ps.len(),
         spec.tenants.len(),
+        spec.losses.len(),
         spec.sizes.len(),
         jobs.clamp(1, n.max(1)),
         if args.get("jobs").is_some() { "" } else { " (auto: available parallelism)" }
@@ -558,8 +574,8 @@ fn cmd_lint(args: &Args) -> Result<()> {
 
     let print_ok = |prog: &Program, report: &CostReport| {
         println!(
-            "ok   {:<18} on_request <= {:>4} instrs, on_packet <= {:>4} instrs (budget {MAX_STEPS}, all p <= {MAX_P})",
-            prog.name, report.on_request_bound, report.on_packet_bound
+            "ok   {:<18} on_request <= {:>4} instrs, on_packet <= {:>4} instrs, on_timer <= {:>4} instrs (budget {MAX_STEPS}, all p <= {MAX_P})",
+            prog.name, report.on_request_bound, report.on_packet_bound, report.on_timer_bound
         );
         if quiet {
             return;
@@ -822,6 +838,53 @@ mod tests {
         let p99 = jobs[1].get("tenant_p99_us").unwrap().as_arr().unwrap();
         assert_eq!(p99.len(), 2, "one percentile per tenant");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sweep_loss_axis_from_cli() {
+        let dir = std::env::temp_dir().join(format!("nfscan_cli_loss_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let grid = dir.join("grid.toml");
+        // max_retries = 8 keeps the lossy cell safely clear of give-up
+        std::fs::write(
+            &grid,
+            "[grid]\nname = \"lossy\"\nsizes = [64]\nseries = [\"NF_rd\"]\n\
+             [run]\niters = 5\nwarmup = 1\np = 4\nmax_retries = 8\n",
+        )
+        .unwrap();
+        let out = dir.join("out");
+        let a = Args::parse(&argv(&[
+            "sweep",
+            "--grid",
+            grid.to_str().unwrap(),
+            "--loss",
+            "0,0.02",
+            "--jobs",
+            "2",
+            "--out",
+            out.to_str().unwrap(),
+        ]))
+        .unwrap();
+        cmd_sweep(&a).unwrap();
+        let report = std::fs::read_to_string(out.join("lossy.json")).unwrap();
+        let doc = crate::metrics::json::Json::parse(&report).unwrap();
+        let jobs = doc.get("jobs").unwrap().as_arr().unwrap();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(jobs[0].get("loss").unwrap().as_f64(), Some(0.0));
+        assert_eq!(jobs[1].get("loss").unwrap().as_f64(), Some(0.02));
+        assert_eq!(jobs[0].get("retransmits").unwrap().as_u64(), Some(0));
+        assert!(jobs[1].get("timeouts_fired").unwrap().as_u64().is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn run_flags_reach_the_cost_model() {
+        let a = Args::parse(&argv(&["run", "--timeout_ns", "50000", "--max_retries", "7"]))
+            .unwrap();
+        let mut cfg = ExpConfig::default();
+        a.apply_run_flags(&mut cfg, &[]).unwrap();
+        assert_eq!(cfg.cost.timeout_ns, 50_000);
+        assert_eq!(cfg.cost.max_retries, 7);
     }
 
     #[test]

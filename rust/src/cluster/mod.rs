@@ -21,11 +21,12 @@ use anyhow::{anyhow, bail, Result};
 use crate::config::{ExpConfig, FabricConfig, WorkloadSpec};
 use crate::data::{Dtype, Op, Payload};
 use crate::fpga::engine::EngineOpts;
-use crate::fpga::{make_engine, EngineCtx, HpuJob, Nic, NicAction};
+use crate::fpga::{make_engine, EngineCtx, HpuJob, Nic, NicAction, PendingTx};
 use crate::metrics::RunMetrics;
 use crate::mpi::{make_sw, SwAction, SwCtx, SwScanAlgo};
 use crate::net::{
-    frame::fragment, BgMsg, Frame, FrameBody, PortNo, Rank, RouteTable, SwMsg, Topology,
+    frame::fragment, BgMsg, FaultPlan, Frame, FrameBody, PortNo, Rank, RelAck, RouteTable, SwMsg,
+    Topology,
 };
 use crate::offload::{build_request, node_role};
 use crate::packet::{CollPacket, MsgType};
@@ -83,6 +84,16 @@ pub struct Cluster {
     contributions: HashMap<(u16, u32), Vec<Option<Payload>>>,
     verified_counts: HashMap<(u16, u32), usize>,
     master_rng: SplitMix64,
+    /// The hostile-network fault model: seeded random loss, scheduled
+    /// drops, trunk degradation.  Quiet (`!lossy()`) by default, in which
+    /// case the reliability layer below never arms and the event
+    /// schedule is byte-identical to a fault-free build.
+    fault: FaultPlan,
+    /// Next reliable transaction id (0 is reserved for "unreliable").
+    next_txn: u64,
+    /// Set when a card exhausts its retransmit budget: the run stops and
+    /// surfaces this instead of deadlocking.
+    fatal: Option<String>,
     /// Application mode: caller-provided contributions for iteration 0
     /// (see [`Cluster::scan_once`]) and the per-rank results collected.
     injected: Option<Vec<Payload>>,
@@ -161,6 +172,9 @@ impl Cluster {
         assert!(rank_tenant.iter().all(|&ti| ti != usize::MAX), "tenants must cover all ranks");
         Cluster {
             master_rng: SplitMix64::new(cfg.seed),
+            fault: cfg.fault_plan(),
+            next_txn: 1,
+            fatal: None,
             hosts: (0..p)
                 .map(|r| {
                     let tcfg = &tenants[rank_tenant[r]].cfg;
@@ -319,7 +333,14 @@ impl Cluster {
                 EventKind::NicHostReq { rank, req } => self.on_nic_host_req(now, rank, req),
                 EventKind::HpuDone { rank } => self.on_hpu_done(now, rank),
                 EventKind::BgTick { flow } => self.on_bg_tick(now, flow),
+                EventKind::RetxTimer { rank, txn } => self.on_retx_timer(now, rank, txn),
             }
+            if self.fatal.is_some() {
+                break;
+            }
+        }
+        if let Some(f) = self.fatal.take() {
+            bail!("{f}");
         }
         for (rank, h) in self.hosts.iter().enumerate() {
             if !h.done {
@@ -616,13 +637,30 @@ impl Cluster {
                 frag_total,
                 payload: chunk,
             };
-            let frame = Frame { src, dst, body: FrameBody::Sw(msg) };
+            let frame = Frame::new(src, dst, FrameBody::Sw(msg));
             self.transmit(src, dst, frame, ready);
         }
     }
 
     /// Transmit one frame from `src`'s NIC towards `dst` (first hop).
-    fn transmit(&mut self, src: Rank, dst: Rank, frame: Frame, ready: SimTime) {
+    /// Under a lossy fault plan, data frames leaving their origin are
+    /// tagged with a transaction id and registered for timeout/
+    /// retransmit recovery; acks and background noise stay unreliable.
+    fn transmit(&mut self, src: Rank, dst: Rank, mut frame: Frame, ready: SimTime) {
+        if self.fault.lossy()
+            && frame.txn == 0
+            && frame.src == src
+            && matches!(frame.body, FrameBody::Coll(_) | FrameBody::Sw(_))
+        {
+            let txn = self.next_txn;
+            self.next_txn += 1;
+            frame.txn = txn;
+            self.nics[src]
+                .pending
+                .insert(txn, PendingTx { frame: frame.clone(), retries: 0, first_send: ready });
+            let at = ready + self.cfg.cost.retx_timeout_ns(0);
+            self.q.push(at, EventKind::RetxTimer { rank: src, txn });
+        }
         let port = self
             .routes
             .next_hop(src, dst)
@@ -632,7 +670,11 @@ impl Cluster {
 
     fn transmit_on_port(&mut self, src: Rank, port: PortNo, frame: Frame, ready: SimTime) {
         let wire = frame.wire_bytes();
-        let tx_ns = self.cfg.cost.tx_ns(wire);
+        let mut tx_ns = self.cfg.cost.tx_ns(wire);
+        if self.fault.degrades() && src >= self.cfg.p {
+            // degraded trunk: switch uplinks serialize slower
+            tx_ns = self.fault.scaled_tx_ns(tx_ns);
+        }
         let nic = &mut self.nics[src];
         let end = nic.tx_reserve(port, ready, tx_ns);
         nic.note_bytes(wire);
@@ -640,6 +682,11 @@ impl Cluster {
             .topo
             .neighbor(src, port)
             .unwrap_or_else(|| panic!("dangling port {port} on rank {src}"));
+        if self.fault.lossy() && self.fault.should_drop(src, neighbor) {
+            // the frame left the card (serialization was charged) but
+            // dies on the wire: no arrival event
+            return;
+        }
         let arrival = end + self.cfg.cost.link_prop_ns;
         self.q.push(arrival, EventKind::NicRecv { rank: neighbor, port: nport, frame });
     }
@@ -664,6 +711,19 @@ impl Cluster {
             let dst = frame.dst;
             self.transmit(rank, dst, frame, ready);
             return;
+        }
+        if frame.txn != 0 {
+            // reliability layer: ack every reliable frame end-to-end
+            // (the ack itself is unreliable — a lost ack just means one
+            // spurious retransmit, which the dedup below absorbs)
+            let ack = Frame::new(rank, frame.src, FrameBody::RelAck(RelAck { txn: frame.txn }));
+            let ready = now + self.cfg.cost.nic_fwd_cycles * 8;
+            self.transmit(rank, frame.src, ack, ready);
+            if !self.nics[rank].seen_txns.insert(frame.txn) {
+                // duplicate delivery (retransmit raced the ack): re-acked
+                // above, suppressed here
+                return;
+            }
         }
         match frame.body {
             FrameBody::Sw(msg) => {
@@ -695,6 +755,16 @@ impl Cluster {
                 // background traffic terminates at the NIC: it exists to
                 // contend for wire and port-FIFO time, not to reach hosts
                 self.metrics.bg_frames_rx += 1;
+            }
+            FrameBody::RelAck(ack) => {
+                if let Some(p) = self.nics[rank].pending.remove(&ack.txn) {
+                    if p.retries > 0 {
+                        // recovery latency: original send to eventual ack
+                        self.metrics.recovery_ns += now - p.first_send;
+                    }
+                }
+                // a duplicate ack (from a retransmit that raced the
+                // first ack) finds no pending entry and is ignored
             }
         }
     }
@@ -753,11 +823,106 @@ impl Cluster {
             (f.src, f.dst, f.seq, f.remaining)
         };
         let msg = BgMsg { flow, seq, len: self.cfg.bg_bytes as u32 };
-        let frame = Frame { src, dst, body: FrameBody::Bg(msg) };
+        let frame = Frame::new(src, dst, FrameBody::Bg(msg));
         self.transmit(src, dst, frame, now);
         if remaining > 0 {
             self.q.push(now + self.cfg.bg_gap_ns, EventKind::BgTick { flow });
         }
+    }
+
+    /// A reliable frame's retransmit timer expired.  A no-op if the ack
+    /// already landed; otherwise the datapath decides whether to replay
+    /// the frame — the handler path runs the program's `on_timer` entry
+    /// on the VM, the fixed-function and software paths hard-wire the
+    /// same policy — or gives up with a named, non-hanging failure.
+    fn on_retx_timer(&mut self, now: SimTime, rank: Rank, txn: u64) {
+        let Some(p) = self.nics[rank].pending.get(&txn) else {
+            return; // acked in time
+        };
+        let retries = p.retries;
+        let is_coll = matches!(p.frame.body, FrameBody::Coll(_));
+        let epoch = match &p.frame.body {
+            FrameBody::Coll(pkt) => pkt.epoch() as u32,
+            FrameBody::Sw(m) => m.epoch,
+            _ => 0,
+        };
+        self.metrics.timeouts_fired += 1;
+        let max_retries = self.cfg.cost.max_retries;
+        let ti = self.rank_tenant[rank];
+        let (retransmit, cycles) = if self.tenants[ti].cfg.handler() && is_coll {
+            self.run_timer_program(rank, (epoch & 0xFFFF) as u16, retries, max_retries)
+        } else {
+            (retries < max_retries, self.cfg.cost.nic_pipeline_cycles)
+        };
+        if !retransmit {
+            let tcfg = &self.tenants[ti].cfg;
+            self.fatal = Some(format!(
+                "recovery failed: ({}, rank {rank}, epoch {epoch}) gave up on txn {txn} \
+                 after {retries} retransmits ({})",
+                tcfg.coll.name(),
+                tcfg.series_name()
+            ));
+            self.nics[rank].pending.remove(&txn);
+            return;
+        }
+        let p = self.nics[rank].pending.get_mut(&txn).expect("still pending");
+        p.retries += 1;
+        let retries = p.retries;
+        let frame = p.frame.clone();
+        self.metrics.retransmits += 1;
+        let dst = frame.dst;
+        let ready = now + cycles * 8;
+        self.transmit(rank, dst, frame, ready);
+        let at = ready + self.cfg.cost.retx_timeout_ns(retries);
+        self.q.push(at, EventKind::RetxTimer { rank, txn });
+    }
+
+    /// Run the handler program's `on_timer` entry for a timed-out frame
+    /// on `rank`'s card: an ephemeral activation (timers carry no packet
+    /// and touch no flow state).  Returns the program's verdict (true =
+    /// retransmit) and the cycles to charge before the replay hits the
+    /// wire.
+    fn run_timer_program(
+        &mut self,
+        rank: Rank,
+        epoch: u16,
+        retries: u32,
+        max_retries: u32,
+    ) -> (bool, u64) {
+        let ti = self.rank_tenant[rank];
+        let (base, gsize) = {
+            let t = &self.tenants[ti];
+            (t.base, t.size)
+        };
+        let (coll, op) = {
+            let c = &self.tenants[ti].cfg;
+            (c.coll, c.op)
+        };
+        let prog = crate::nic::program_for(coll);
+        let mut flow = crate::nic::Flow::new();
+        let mut ctx = EngineCtx {
+            rank: rank - base,
+            p: gsize,
+            inclusive: coll.inclusive(),
+            op,
+            coll,
+            epoch,
+            compute: &*self.compute,
+            cost: &self.cfg.cost,
+            cycles: 0,
+            instrs: 0,
+            stalls: 0,
+        };
+        let actions = crate::nic::vm::run(
+            prog,
+            &mut flow,
+            &mut ctx,
+            crate::nic::Activation::Timer { retries, max_retries },
+        );
+        self.metrics.handler_instrs += ctx.instrs;
+        self.metrics.handler_stalls += ctx.stalls;
+        let cycles = self.cfg.cost.nic_pipeline_cycles + ctx.cycles;
+        (actions.iter().any(|a| matches!(a, NicAction::Retransmit)), cycles)
     }
 
     /// Run one engine activation and realize its actions on the wire /
@@ -870,6 +1035,9 @@ impl Cluster {
                         );
                     }
                 }
+                NicAction::Retransmit => {
+                    unreachable!("engine emitted Retransmit outside a timer activation")
+                }
                 NicAction::Deliver { payload } => {
                     // release timestamp + the second host crossing
                     self.trace.record(ready, rank, crate::trace::TraceKind::NicResult, "release");
@@ -932,7 +1100,7 @@ impl Cluster {
                 tag,
                 payload: chunk,
             };
-            let frame = Frame { src, dst, body: FrameBody::Coll(pkt) };
+            let frame = Frame::new(src, dst, FrameBody::Coll(pkt));
             self.transmit(src, dst, frame, ready);
         }
     }
@@ -1457,6 +1625,102 @@ mod tests {
         assert_eq!(m.tenant_host[0].count(), 4 * 10);
         assert_eq!(m.tenant_host[1].count(), 4 * 10);
         assert!(m.bg_frames_rx > 0);
+    }
+
+    #[test]
+    fn fault_knobs_off_leave_schedule_byte_identical() {
+        // with loss = 0 and no drop schedule the reliability layer must
+        // be completely inert: changing its tuning knobs cannot move a
+        // single event, and no recovery metric may tick
+        let mk = |timeout_ns: u64, max_retries: u32| {
+            let mut cfg = base(AlgoType::RecursiveDoubling, true);
+            cfg.cost.timeout_ns = timeout_ns;
+            cfg.cost.max_retries = max_retries;
+            run_cfg(cfg)
+        };
+        let a = mk(crate::config::CostModel::default().timeout_ns, 3);
+        let b = mk(999, 1);
+        assert_eq!(a.sim_ns, b.sim_ns, "timers must not exist at loss=0");
+        assert_eq!(a.total_frames(), b.total_frames());
+        for m in [&a, &b] {
+            assert_eq!(m.retransmits, 0);
+            assert_eq!(m.timeouts_fired, 0);
+            assert_eq!(m.recovery_ns, 0);
+        }
+    }
+
+    #[test]
+    fn random_loss_recovers_on_every_path() {
+        // 4% loss on every hop: all three execution paths must observe
+        // drops, retransmit, and still bit-match the oracle (run_cfg
+        // verifies).  max_retries is raised so a give-up is essentially
+        // impossible at this seed/loss combination.
+        for path in [ExecPath::Sw, ExecPath::Fpga, ExecPath::Handler] {
+            let mut cfg = base(AlgoType::RecursiveDoubling, true);
+            cfg.path = path;
+            cfg.loss = 0.04;
+            cfg.cost.max_retries = 8;
+            let m = run_cfg(cfg);
+            assert!(m.retransmits > 0, "{path:?}: 4% loss over ~thousands of frames");
+            assert!(m.timeouts_fired >= m.retransmits, "{path:?}: every resend needs a timer");
+        }
+    }
+
+    #[test]
+    fn scheduled_drop_is_recovered_deterministically() {
+        // kill exactly the first frame on the 0->1 wire: whichever frame
+        // that is (data or ack), recovery must fire and be charged
+        let mut cfg = base(AlgoType::RecursiveDoubling, true);
+        cfg.drop_spec = "0->1:1".into();
+        let m = run_cfg(cfg);
+        assert!(m.retransmits >= 1, "the dropped frame must be resent");
+        assert!(m.timeouts_fired >= 1);
+        assert!(m.recovery_ns > 0, "recovery latency must be attributed");
+    }
+
+    #[test]
+    fn retry_exhaustion_fails_loudly_with_flow_identity() {
+        // black-hole the 0->1 wire long enough to exhaust the retry
+        // budget: the run must surface a named error, not hang until the
+        // deadlock detector (or the test harness) gives up
+        let mut cfg = base(AlgoType::RecursiveDoubling, true);
+        cfg.p = 2;
+        cfg.iters = 1;
+        cfg.warmup = 0;
+        cfg.verify = false;
+        cfg.cost.max_retries = 2;
+        cfg.drop_spec =
+            (1..=12).map(|n| format!("0->1:{n}")).collect::<Vec<_>>().join(",");
+        let compute = make_compute(EngineKind::Native, "artifacts");
+        let mut cluster = Cluster::new(cfg, compute);
+        let err = cluster.run().expect_err("give-up must be an error, not a deadlock");
+        let msg = err.to_string();
+        assert!(msg.contains("recovery failed"), "{msg}");
+        assert!(msg.contains("rank"), "{msg}");
+        assert!(msg.contains("epoch"), "{msg}");
+    }
+
+    #[test]
+    fn trunk_degradation_slows_switch_topologies_only() {
+        let mk = |topology: &str, degrade: f64| {
+            let mut cfg = base(AlgoType::RecursiveDoubling, true);
+            cfg.topology = topology.into();
+            cfg.trunk_degrade = degrade;
+            run_cfg(cfg)
+        };
+        // star: every flow crosses the switch, whose uplinks degrade
+        let slow = mk("star:4", 4.0);
+        let fast = mk("star:4", 1.0);
+        assert!(
+            slow.host_overall().avg_ns() > fast.host_overall().avg_ns(),
+            "degraded trunks must cost latency: {} vs {}",
+            slow.host_overall().avg_ns(),
+            fast.host_overall().avg_ns()
+        );
+        // direct wiring has no switch trunks: the knob must be inert
+        let a = mk("auto", 1.0);
+        let b = mk("auto", 4.0);
+        assert_eq!(a.sim_ns, b.sim_ns, "no trunks to degrade on direct wiring");
     }
 
     #[test]

@@ -71,6 +71,18 @@ pub struct CostModel {
     /// the pre-HPU event schedule byte-identical.
     pub hpus: u64,
 
+    // ---- NIC reliability protocol (lossy runs only) ----
+    /// Retransmit timer for an unacked reliable frame, ns.  Only armed
+    /// when the fault plan is lossy (`loss > 0` or a drop schedule is
+    /// set); fault-free runs schedule no timers at all.
+    pub timeout_ns: u64,
+    /// Retransmissions before the NIC gives up on a frame and the run
+    /// fails with a named `(coll, rank, epoch)` error.
+    pub max_retries: u32,
+    /// Exponential backoff base: the nth retransmit timer is
+    /// `timeout_ns * timeout_backoff^n`.
+    pub timeout_backoff: f64,
+
     // ---- inter-switch fabric (hierarchical topologies) ----
     /// Store-and-forward latency of one switch hop (lookup + buffer),
     /// ns.  Wire serialization and trunk contention are charged
@@ -104,6 +116,9 @@ impl Default for CostModel {
             handler_instr_cycles: 1,
             handler_copy_cycles_per_8b: 1,
             hpus: 0,
+            timeout_ns: 100_000,
+            max_retries: 3,
+            timeout_backoff: 2.0,
             switch_fwd_ns: 1_000,
             host_call_gap_ns: 2_000,
             start_jitter_ns: 5_000,
@@ -117,6 +132,12 @@ impl CostModel {
     pub fn tx_ns(&self, wire_bytes: usize) -> u64 {
         let total = (wire_bytes + crate::net::WIRE_OVERHEAD_BYTES) as u64;
         total * 8_000_000_000 / self.link_bandwidth_bps
+    }
+
+    /// Retransmit timer for a frame that has already been retransmitted
+    /// `retries` times (exponential backoff).
+    pub fn retx_timeout_ns(&self, retries: u32) -> u64 {
+        (self.timeout_ns as f64 * self.timeout_backoff.powi(retries as i32)).max(1.0) as u64
     }
 
     /// Host-side cost to hand one message of `bytes` to the stack.
@@ -179,6 +200,12 @@ impl CostModel {
             "handler_instr_cycles" => self.handler_instr_cycles = as_u64()?,
             "handler_copy_cycles_per_8b" => self.handler_copy_cycles_per_8b = as_u64()?,
             "hpus" => self.hpus = as_u64()?,
+            "timeout_ns" => self.timeout_ns = as_u64()?,
+            "max_retries" => {
+                self.max_retries =
+                    value.parse().map_err(|e| format!("cost.{key}: bad integer: {e}"))?
+            }
+            "timeout_backoff" => self.timeout_backoff = as_f64()?,
             "switch_fwd_ns" => self.switch_fwd_ns = as_u64()?,
             "host_call_gap_ns" => self.host_call_gap_ns = as_u64()?,
             "start_jitter_ns" => self.start_jitter_ns = as_u64()?,
@@ -212,6 +239,18 @@ mod tests {
         let c = CostModel::default();
         assert!(c.offload_ns(4) < c.offload_ns(4096));
         assert!(c.offload_ns(4) > 28_000);
+    }
+
+    #[test]
+    fn retx_backoff_is_exponential() {
+        let mut c = CostModel::default();
+        c.set("timeout_ns", "1000").unwrap();
+        c.set("timeout_backoff", "2.0").unwrap();
+        c.set("max_retries", "5").unwrap();
+        assert_eq!(c.max_retries, 5);
+        assert_eq!(c.retx_timeout_ns(0), 1000);
+        assert_eq!(c.retx_timeout_ns(1), 2000);
+        assert_eq!(c.retx_timeout_ns(3), 8000);
     }
 
     #[test]

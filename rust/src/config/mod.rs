@@ -119,9 +119,23 @@ pub struct ExpConfig {
     /// Sequential ACK flow control (SSIII-B); the ablation that shows why
     /// the paper needs it (disabling overflows the single NIC buffer).
     pub ack_enabled: bool,
-    /// Delay one rank's first call (Fig. 3 late-rank scenarios).
+    /// Delay one rank's first call (Fig. 3 late-rank scenarios; the
+    /// fault model's straggler knob — a fabric-level setting and sweep
+    /// axis, not just the `late_rank` example's private flag).
     pub late_rank: Option<usize>,
     pub late_delay_ns: u64,
+    /// Per-hop packet loss probability in [0, 1) for the hostile-network
+    /// fault model (`net::fault`).  Any nonzero value arms the NIC
+    /// timeout/retransmit protocol; 0 keeps the event schedule and wire
+    /// format byte-identical to a fault-free run.
+    pub loss: f64,
+    /// Deterministic drop schedule, `"src->dst:nth"` rules (see
+    /// `net::fault::parse_drop_spec`); empty = none.  A nonempty
+    /// schedule arms the retransmit protocol like `loss > 0`.
+    pub drop_spec: String,
+    /// Trunk (switch-node) bandwidth degradation multiplier: >= 1.0
+    /// scales switch transmission time.  1.0 = full rate, never applied.
+    pub trunk_degrade: f64,
     /// Number of tenants — disjoint communicators running concurrent
     /// collective streams on the shared network (the paper's SSVI comm_id
     /// future work).  Ranks split into `tenants` contiguous groups of
@@ -161,6 +175,9 @@ impl Default for ExpConfig {
             ack_enabled: true,
             late_rank: None,
             late_delay_ns: 0,
+            loss: 0.0,
+            drop_spec: String::new(),
+            trunk_degrade: 1.0,
             tenants: 1,
             bg_flows: 0,
             bg_msgs: 200,
@@ -301,6 +318,12 @@ impl ExpConfig {
             "late_delay_ns" => {
                 self.late_delay_ns = v.parse().map_err(|e| format!("run.late_delay_ns: {e}"))?
             }
+            "loss" => self.loss = v.parse().map_err(|e| format!("run.loss: {e}"))?,
+            "drop" => self.drop_spec = v.to_string(),
+            "trunk_degrade" => {
+                self.trunk_degrade =
+                    v.parse().map_err(|e| format!("run.trunk_degrade: {e}"))?
+            }
             "tenants" => self.tenants = v.parse().map_err(|e| format!("run.tenants: {e}"))?,
             "comms" => self.tenants = v.parse().map_err(|e| format!("run.comms: {e}"))?,
             "bg_flows" => self.bg_flows = v.parse().map_err(|e| format!("run.bg_flows: {e}"))?,
@@ -309,7 +332,14 @@ impl ExpConfig {
             "bg_gap_ns" => {
                 self.bg_gap_ns = v.parse().map_err(|e| format!("run.bg_gap_ns: {e}"))?
             }
-            _ => return Err(format!("unknown run key: {key}")),
+            _ => {
+                // every [cost] knob doubles as a run key, so flags like
+                // --hpus or --timeout_ns work without a [cost] section
+                self.cost.set(key, v).map_err(|e| match e.starts_with("unknown cost key") {
+                    true => format!("unknown run key: {key}"),
+                    false => e,
+                })?
+            }
         }
         Ok(())
     }
@@ -363,6 +393,26 @@ impl ExpConfig {
         if self.bg_flows > 0 && self.bg_gap_ns == 0 {
             return Err("bg_gap_ns must be > 0 when background flows are on".into());
         }
+        // fault knobs: build (and discard) the plan so bad loss rates and
+        // malformed drop schedules fail at config time, with the rule text
+        let plan = crate::net::FaultPlan::new(
+            self.loss,
+            &self.drop_spec,
+            self.trunk_degrade,
+            self.seed,
+        )
+        .map_err(|e| format!("fault: {e}"))?;
+        if plan.lossy() {
+            if self.cost.timeout_ns == 0 {
+                return Err("cost.timeout_ns must be > 0 on lossy runs".into());
+            }
+            if self.cost.timeout_backoff < 1.0 {
+                return Err(format!(
+                    "cost.timeout_backoff {} must be >= 1.0",
+                    self.cost.timeout_backoff
+                ));
+            }
+        }
         // build (and discard) the resolved wiring so bad specs fail at
         // config time with the cell that owns them, not mid-sweep —
         // "auto" included: it resolves to a hypercube whose p constraint
@@ -404,6 +454,12 @@ impl ExpConfig {
             _ => {}
         }
         Ok(())
+    }
+
+    /// Build this run's fault plan (panics on knobs `validate` rejects).
+    pub fn fault_plan(&self) -> crate::net::FaultPlan {
+        crate::net::FaultPlan::new(self.loss, &self.drop_spec, self.trunk_degrade, self.seed)
+            .expect("fault knobs were validated")
     }
 
     /// Short tag for tables: "NF_rd" / "sw_seq" style (paper's naming);
@@ -561,6 +617,42 @@ mod tests {
         cfg.bg_flows = 2;
         cfg.bg_gap_ns = 0;
         assert!(cfg.validate().is_err(), "flows need a positive gap");
+    }
+
+    #[test]
+    fn fault_knobs_parse_and_validate() {
+        let cfg = ExpConfig::from_toml(
+            r#"
+            [run]
+            loss = 0.05
+            drop = ["0->1:1", "2->*:3"]
+            trunk_degrade = 2.0
+            late_rank = 3
+            late_delay_ns = 100000
+            [cost]
+            timeout_ns = 50000
+            max_retries = 5
+            timeout_backoff = 1.5
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.loss, 0.05);
+        assert_eq!(cfg.trunk_degrade, 2.0);
+        assert_eq!(cfg.cost.max_retries, 5);
+        let plan = cfg.fault_plan();
+        assert!(plan.lossy() && plan.degrades());
+
+        let mut bad = ExpConfig::default();
+        bad.loss = 1.5;
+        assert!(bad.validate().is_err(), "loss over 1 rejected");
+        let mut bad = ExpConfig::default();
+        bad.drop_spec = "nonsense".into();
+        let err = bad.validate().unwrap_err();
+        assert!(err.contains("drop rule"), "{err}");
+        let mut bad = ExpConfig::default();
+        bad.loss = 0.1;
+        bad.cost.timeout_ns = 0;
+        assert!(bad.validate().is_err(), "lossy runs need a timeout");
     }
 
     #[test]

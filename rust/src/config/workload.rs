@@ -23,6 +23,11 @@ pub struct FabricConfig {
     pub verify: bool,
     pub late_rank: Option<usize>,
     pub late_delay_ns: u64,
+    /// Hostile-network fault model (shared: faults live on the wires,
+    /// not in any tenant's workload).
+    pub loss: f64,
+    pub drop_spec: String,
+    pub trunk_degrade: f64,
     pub bg_flows: usize,
     pub bg_msgs: u64,
     pub bg_bytes: usize,
@@ -68,6 +73,9 @@ impl ExpConfig {
             verify: self.verify,
             late_rank: self.late_rank,
             late_delay_ns: self.late_delay_ns,
+            loss: self.loss,
+            drop_spec: self.drop_spec.clone(),
+            trunk_degrade: self.trunk_degrade,
             bg_flows: self.bg_flows,
             bg_msgs: self.bg_msgs,
             bg_bytes: self.bg_bytes,
@@ -113,6 +121,9 @@ impl ExpConfig {
             ack_enabled: w.ack_enabled,
             late_rank: fabric.late_rank,
             late_delay_ns: fabric.late_delay_ns,
+            loss: fabric.loss,
+            drop_spec: fabric.drop_spec.clone(),
+            trunk_degrade: fabric.trunk_degrade,
             tenants: 1,
             bg_flows: fabric.bg_flows,
             bg_msgs: fabric.bg_msgs,
@@ -179,6 +190,9 @@ mod tests {
         cfg.msg_bytes = 256;
         cfg.topology = "fattree".into();
         cfg.bg_flows = 3;
+        cfg.loss = 0.1;
+        cfg.drop_spec = "0->1:1".into();
+        cfg.trunk_degrade = 3.0;
         let back = ExpConfig::compose(&cfg.fabric(), &cfg.workload());
         assert_eq!(back.p, 16);
         assert_eq!(back.path, ExecPath::Handler);

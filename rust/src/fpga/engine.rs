@@ -29,6 +29,10 @@ pub enum NicAction {
     /// Deliver the final outcome up to the local host (the Result packet;
     /// the NIC attaches the elapsed-time register value).
     Deliver { payload: Payload },
+    /// Resend the pending reliable frame this activation was fired for.
+    /// Only meaningful from a timer activation; the NIC (which owns the
+    /// pending-transaction store) clones and re-transmits the frame.
+    Retransmit,
 }
 
 /// Activation context: compute access + cycle accounting.  The engine
@@ -230,6 +234,9 @@ pub(crate) mod testutil {
                     NicAction::Deliver { payload } => {
                         assert!(self.results[from].is_none(), "double result at {from}");
                         self.results[from] = Some(payload);
+                    }
+                    NicAction::Retransmit => {
+                        panic!("engine emitted Retransmit outside a timer activation")
                     }
                 }
             }

@@ -25,5 +25,5 @@ pub mod registers;
 pub mod seq;
 
 pub use engine::{make_engine, CollEngine, EngineCtx, EngineOpts, NicAction};
-pub use nic::{HpuJob, HpuSched, Nic};
+pub use nic::{HpuJob, HpuSched, Nic, PendingTx};
 pub use registers::Registers;

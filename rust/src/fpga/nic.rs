@@ -6,9 +6,9 @@
 //! created on demand and retired on completion, with a hard capacity that
 //! models the card's limited resources.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 
-use crate::net::{PortNo, Rank};
+use crate::net::{Frame, PortNo, Rank};
 use crate::packet::CollPacket;
 use crate::sim::{OffloadRequest, SimTime};
 
@@ -24,6 +24,16 @@ pub const MAX_LIVE_ENGINES: usize = 8;
 
 /// Reassembly budget: in-progress multi-fragment messages per card.
 pub const MAX_REASM_MSGS: usize = 32;
+
+/// One reliable frame awaiting its end-to-end ack: the frame itself (so
+/// the card can replay it bit-identically), how often it has been
+/// resent, and when the original copy first left the card (so recovery
+/// latency can be charged once the ack finally lands).
+pub struct PendingTx {
+    pub frame: Frame,
+    pub retries: u32,
+    pub first_send: SimTime,
+}
 
 /// One parked handler activation: the input that would have run had a
 /// handler processing unit been free, plus when it arrived (so the wait
@@ -101,6 +111,14 @@ pub struct Nic {
     pub max_live_engines_seen: usize,
     /// Handler processing units (sPIN's bounded execution pool).
     pub hpu: HpuSched,
+    /// Reliable frames this card sent that are still awaiting their
+    /// end-to-end ack, keyed by transaction id.  Empty unless the run's
+    /// fault plan is lossy (txn 0 = reliability layer off).
+    pub pending: HashMap<u64, PendingTx>,
+    /// Transaction ids this card has already accepted as final
+    /// destination (receiver-side dedup: a duplicate is re-acked but
+    /// not re-processed).
+    pub seen_txns: HashSet<u64>,
 }
 
 impl Nic {
@@ -116,6 +134,8 @@ impl Nic {
             frames_forwarded: 0,
             max_live_engines_seen: 0,
             hpu: HpuSched::default(),
+            pending: HashMap::new(),
+            seen_txns: HashSet::new(),
         }
     }
 

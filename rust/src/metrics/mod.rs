@@ -204,6 +204,15 @@ pub struct RunMetrics {
     pub hpu_queued: u64,
     /// Background-traffic frames that reached their destination NIC.
     pub bg_frames_rx: u64,
+    /// Reliable frames replayed by the NIC recovery layer (0 unless the
+    /// fault plan is lossy).
+    pub retransmits: u64,
+    /// Retransmit-timer expirations (each either replays or gives up;
+    /// a timer whose ack arrived first is a no-op and not counted).
+    pub timeouts_fired: u64,
+    /// Total original-send -> eventual-ack latency over frames that
+    /// needed at least one retransmit.
+    pub recovery_ns: u64,
     /// Total simulated duration.
     pub sim_ns: u64,
 }
@@ -226,6 +235,9 @@ impl RunMetrics {
             hpu_queue_ns: 0,
             hpu_queued: 0,
             bg_frames_rx: 0,
+            retransmits: 0,
+            timeouts_fired: 0,
+            recovery_ns: 0,
             sim_ns: 0,
         }
     }
@@ -282,6 +294,9 @@ impl RunMetrics {
             ("hpu_queue_ns".into(), Json::int(self.hpu_queue_ns)),
             ("hpu_queued".into(), Json::int(self.hpu_queued)),
             ("bg_frames_rx".into(), Json::int(self.bg_frames_rx)),
+            ("retransmits".into(), Json::int(self.retransmits)),
+            ("timeouts_fired".into(), Json::int(self.timeouts_fired)),
+            ("recovery_ns".into(), Json::int(self.recovery_ns)),
             ("fairness".into(), Json::Num(self.fairness())),
             (
                 "tenant_p50_us".into(),

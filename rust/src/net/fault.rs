@@ -1,0 +1,248 @@
+//! Deterministic hostile-network fault model.
+//!
+//! Everything here is driven by the per-job seed: random per-hop packet
+//! loss (`loss`), explicit drop schedules replayable from TOML
+//! (`drop = "src->dst:nth"`), and degraded trunk bandwidth
+//! (`trunk_degrade`).  The plan is consulted once per frame hop in
+//! `Cluster::transmit_on_port`; a quiet plan (loss 0, no rules, degrade
+//! 1.0) is never consulted at all, so fault-free runs keep the
+//! pre-fault event schedule — and the golden figure bytes —
+//! byte-identical.
+//!
+//! Drop-schedule syntax (one rule per comma-separated entry, bare or as
+//! a TOML string array):
+//!
+//! - `"3->1:2"` — drop the 2nd frame transmitted on the directed
+//!   physical link from node 3 to node 1 (nodes >= p are switches);
+//! - `"0->*:1"` — drop the 1st frame node 0 transmits on ANY link
+//!   (wildcard destination — the easy way to guarantee a loss without
+//!   knowing the topology's wiring).
+//!
+//! `nth` is 1-based and counts every frame on the edge, retransmissions
+//! and transport acks included — so a schedule can kill the same frame
+//! repeatedly (`"0->1:1, 0->1:2, ..."`) to exhaust `max_retries`.
+
+use std::collections::HashMap;
+
+use crate::sim::SplitMix64;
+
+/// One scheduled deterministic drop: the `nth` (1-based) frame on the
+/// directed edge `src -> dst`, or on any edge out of `src` when `dst`
+/// is the wildcard.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DropRule {
+    pub src: usize,
+    /// `None` = wildcard destination (`src->*:nth`).
+    pub dst: Option<usize>,
+    /// 1-based frame ordinal on the matched edge/source.
+    pub nth: u64,
+}
+
+/// Parse a drop schedule: comma-separated `src->dst:nth` rules, with
+/// `*` as a wildcard destination.  Accepts both the bare form
+/// (`"0->1:1, 2->*:3"`) and the raw bracketed TOML-array form
+/// (`["0->1:1", "2->*:3"]`) — the mini-TOML parser hands list values
+/// through as their source text.
+pub fn parse_drop_spec(spec: &str) -> Result<Vec<DropRule>, String> {
+    let mut rules = Vec::new();
+    let cleaned: String =
+        spec.chars().filter(|c| !matches!(c, '[' | ']' | '"' | '\'')).collect();
+    for part in cleaned.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (edge, nth) = part
+            .split_once(':')
+            .ok_or_else(|| format!("drop rule '{part}': expected src->dst:nth"))?;
+        let (src, dst) = edge
+            .split_once("->")
+            .ok_or_else(|| format!("drop rule '{part}': expected src->dst:nth"))?;
+        let src: usize =
+            src.trim().parse().map_err(|e| format!("drop rule '{part}': bad src: {e}"))?;
+        let dst = match dst.trim() {
+            "*" => None,
+            d => Some(d.parse().map_err(|e| format!("drop rule '{part}': bad dst: {e}"))?),
+        };
+        let nth: u64 =
+            nth.trim().parse().map_err(|e| format!("drop rule '{part}': bad nth: {e}"))?;
+        if nth == 0 {
+            return Err(format!("drop rule '{part}': nth is 1-based, 0 never matches"));
+        }
+        rules.push(DropRule { src, dst, nth });
+    }
+    Ok(rules)
+}
+
+/// The per-run fault plan: seeded loss draws, scheduled drops and trunk
+/// degradation, plus the per-edge frame counters the schedules match
+/// against.
+pub struct FaultPlan {
+    /// Per-hop loss probability in [0, 1) for reliable-protocol frames.
+    pub loss: f64,
+    /// Bandwidth multiplier on switch-node (trunk) transmissions; 1.0
+    /// means full rate and is never applied.
+    pub trunk_degrade: f64,
+    rules: Vec<DropRule>,
+    rng: SplitMix64,
+    /// Frames seen per directed edge (counting starts at 1).
+    edge_seen: HashMap<(usize, usize), u64>,
+    /// Frames seen per source node (for wildcard rules).
+    src_seen: HashMap<usize, u64>,
+    /// Total frames this plan has dropped (diagnostics).
+    pub drops_injected: u64,
+}
+
+impl FaultPlan {
+    pub fn new(
+        loss: f64,
+        drop_spec: &str,
+        trunk_degrade: f64,
+        seed: u64,
+    ) -> Result<FaultPlan, String> {
+        if !(0.0..1.0).contains(&loss) {
+            return Err(format!("loss {loss} must be in [0, 1)"));
+        }
+        if !trunk_degrade.is_finite() || trunk_degrade < 1.0 {
+            return Err(format!("trunk_degrade {trunk_degrade} must be >= 1.0"));
+        }
+        Ok(FaultPlan {
+            loss,
+            trunk_degrade,
+            rules: parse_drop_spec(drop_spec)?,
+            // forked off the job seed so the fault stream never perturbs
+            // the jitter / payload / background draws
+            rng: SplitMix64::new(seed ^ 0xFAD7_1A11),
+            edge_seen: HashMap::new(),
+            src_seen: HashMap::new(),
+            drops_injected: 0,
+        })
+    }
+
+    /// A quiet plan that is never consulted (the default).
+    pub fn quiet(seed: u64) -> FaultPlan {
+        FaultPlan::new(0.0, "", 1.0, seed).expect("quiet plan is always valid")
+    }
+
+    /// Does this plan ever drop frames?  Only lossy plans arm the
+    /// timeout/retransmit protocol (txn ids, acks, timers) — a non-lossy
+    /// plan leaves the wire format and event schedule untouched.
+    pub fn lossy(&self) -> bool {
+        self.loss > 0.0 || !self.rules.is_empty()
+    }
+
+    /// Does this plan slow trunk links down?
+    pub fn degrades(&self) -> bool {
+        self.trunk_degrade != 1.0
+    }
+
+    /// Scale one trunk transmission's serialization time.
+    pub fn scaled_tx_ns(&self, tx_ns: u64) -> u64 {
+        (tx_ns as f64 * self.trunk_degrade) as u64
+    }
+
+    /// Consult the plan for one frame hop on the directed edge
+    /// `src -> dst`.  Counts the hop, applies scheduled drops first
+    /// (deterministic, no RNG draw), then the seeded loss coin.  Only
+    /// call when [`FaultPlan::lossy`] — every call advances counters.
+    pub fn should_drop(&mut self, src: usize, dst: usize) -> bool {
+        let edge_n = {
+            let c = self.edge_seen.entry((src, dst)).or_insert(0);
+            *c += 1;
+            *c
+        };
+        let src_n = {
+            let c = self.src_seen.entry(src).or_insert(0);
+            *c += 1;
+            *c
+        };
+        let scheduled = self.rules.iter().any(|r| {
+            r.src == src
+                && match r.dst {
+                    Some(d) => d == dst && r.nth == edge_n,
+                    None => r.nth == src_n,
+                }
+        });
+        if scheduled {
+            self.drops_injected += 1;
+            return true;
+        }
+        if self.loss > 0.0 && self.rng.next_f64() < self.loss {
+            self.drops_injected += 1;
+            return true;
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_bare_and_bracketed_forms() {
+        let bare = parse_drop_spec("0->1:1, 2->*:3").unwrap();
+        let toml = parse_drop_spec(r#"["0->1:1", "2->*:3"]"#).unwrap();
+        assert_eq!(bare, toml);
+        assert_eq!(bare[0], DropRule { src: 0, dst: Some(1), nth: 1 });
+        assert_eq!(bare[1], DropRule { src: 2, dst: None, nth: 3 });
+        assert!(parse_drop_spec("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_rules() {
+        assert!(parse_drop_spec("0-1:1").is_err());
+        assert!(parse_drop_spec("0->1").is_err());
+        assert!(parse_drop_spec("a->1:1").is_err());
+        assert!(parse_drop_spec("0->1:0").is_err(), "nth is 1-based");
+    }
+
+    #[test]
+    fn scheduled_drop_hits_exactly_the_nth_frame() {
+        let mut p = FaultPlan::new(0.0, "3->1:2", 1.0, 7).unwrap();
+        assert!(p.lossy());
+        assert!(!p.should_drop(3, 1), "1st frame passes");
+        assert!(p.should_drop(3, 1), "2nd frame dropped");
+        assert!(!p.should_drop(3, 1), "3rd frame passes");
+        assert!(!p.should_drop(1, 3), "reverse edge counts separately");
+        assert_eq!(p.drops_injected, 1);
+    }
+
+    #[test]
+    fn wildcard_counts_across_all_destinations() {
+        let mut p = FaultPlan::new(0.0, "0->*:3", 1.0, 7).unwrap();
+        assert!(!p.should_drop(0, 1));
+        assert!(!p.should_drop(0, 2));
+        assert!(p.should_drop(0, 5), "3rd frame out of node 0, any edge");
+    }
+
+    #[test]
+    fn random_loss_is_seed_deterministic() {
+        let run = |seed| {
+            let mut p = FaultPlan::new(0.25, "", 1.0, seed).unwrap();
+            (0..200).map(|i| p.should_drop(i % 4, (i + 1) % 4)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(42), run(42));
+        assert_ne!(run(42), run(43));
+        let drops = run(42).iter().filter(|&&d| d).count();
+        assert!(drops > 10 && drops < 100, "≈25% of 200: got {drops}");
+    }
+
+    #[test]
+    fn quiet_plan_is_not_lossy_and_validation_rejects_bad_knobs() {
+        let p = FaultPlan::quiet(1);
+        assert!(!p.lossy());
+        assert!(!p.degrades());
+        assert!(FaultPlan::new(1.0, "", 1.0, 1).is_err(), "loss must stay below 1");
+        assert!(FaultPlan::new(-0.1, "", 1.0, 1).is_err());
+        assert!(FaultPlan::new(0.0, "", 0.5, 1).is_err(), "degrade < 1 would speed trunks up");
+    }
+
+    #[test]
+    fn trunk_degrade_scales_tx() {
+        let p = FaultPlan::new(0.0, "", 2.5, 1).unwrap();
+        assert!(p.degrades());
+        assert_eq!(p.scaled_tx_ns(1000), 2500);
+        assert!(!p.lossy(), "degradation alone does not arm the retransmit protocol");
+    }
+}

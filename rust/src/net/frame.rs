@@ -20,6 +20,15 @@ pub const SW_HDR_LEN: usize = 24;
 /// Encoded size of the background-traffic header inside the UDP body.
 pub const BG_HDR_LEN: usize = 12;
 
+/// Encoded size of a transport-level ack body ([`RelAck`]).
+pub const RELACK_LEN: usize = 12;
+
+/// Encoded size of the reliability shim prepended to the UDP body when a
+/// frame carries a nonzero transaction id: magic + pad + 8-byte txn.
+/// Only lossy runs pay these bytes — `txn == 0` frames are wire-identical
+/// to the pre-fault format.
+pub const TXN_SHIM_LEN: usize = 12;
+
 /// Max payload-data bytes per frame: MTU minus IP/UDP/collective headers,
 /// rounded down to a multiple of 8 so f64 elements never straddle frames.
 /// 1500 - 20 - 8 - 34 = 1438 -> 1432.
@@ -158,6 +167,35 @@ impl BgMsg {
     }
 }
 
+/// Transport-level acknowledgement for the NIC reliability protocol:
+/// the final destination confirms transaction `txn` end-to-end.  Acks
+/// are themselves unreliable (txn 0) — a lost ack just costs one
+/// retransmission, which the receiver dedups and re-acks.
+#[derive(Clone, Copy, Debug)]
+pub struct RelAck {
+    pub txn: u64,
+}
+
+impl RelAck {
+    pub fn encoded_len(&self) -> usize {
+        RELACK_LEN
+    }
+
+    pub fn emit(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(b"RA"); // magic
+        out.extend_from_slice(&[0, 0]);
+        out.extend_from_slice(&self.txn.to_be_bytes());
+    }
+
+    pub fn parse(b: &[u8]) -> Option<RelAck> {
+        if b.len() < RELACK_LEN || &b[0..2] != b"RA" {
+            return None;
+        }
+        let txn = u64::from_be_bytes(b[4..12].try_into().ok()?);
+        Some(RelAck { txn })
+    }
+}
+
 /// The UDP body of a frame.
 #[derive(Clone, Debug)]
 pub enum FrameBody {
@@ -167,6 +205,8 @@ pub enum FrameBody {
     Sw(SwMsg),
     /// Background point-to-point traffic (no collective semantics).
     Bg(BgMsg),
+    /// Transport-level reliability ack (lossy runs only).
+    RelAck(RelAck),
 }
 
 impl FrameBody {
@@ -175,6 +215,7 @@ impl FrameBody {
             FrameBody::Coll(p) => p.encoded_len(),
             FrameBody::Sw(m) => m.encoded_len(),
             FrameBody::Bg(m) => m.encoded_len(),
+            FrameBody::RelAck(a) => a.encoded_len(),
         }
     }
 }
@@ -185,25 +226,43 @@ pub struct Frame {
     pub src: Rank,
     pub dst: Rank,
     pub body: FrameBody,
+    /// Reliability transaction id: 0 = unreliable (the pre-fault wire
+    /// format, bit for bit), nonzero = tracked by the sender NIC's
+    /// timeout/retransmit protocol and acked end-to-end by the
+    /// destination.  Assigned by the cluster only on lossy runs.
+    pub txn: u64,
 }
 
 impl Frame {
+    /// An unreliable frame (txn 0) — every pre-fault construction site.
+    pub fn new(src: Rank, dst: Rank, body: FrameBody) -> Frame {
+        Frame { src, dst, body, txn: 0 }
+    }
+
     /// Exact bytes this frame occupies from MAC header through UDP body
     /// (excludes preamble/FCS/IFG — see `net::WIRE_OVERHEAD_BYTES`).
     pub fn wire_bytes(&self) -> usize {
+        let shim = if self.txn != 0 { TXN_SHIM_LEN } else { 0 };
         // minimum Ethernet payload is 46 bytes (frames are padded on wire)
-        let l3 = IPV4_HDR_LEN + UDP_HDR_LEN + self.body.encoded_len();
+        let l3 = IPV4_HDR_LEN + UDP_HDR_LEN + shim + self.body.encoded_len();
         ETH_HDR_LEN + l3.max(46)
     }
 
     /// Full byte serialization (Ethernet + IPv4 + UDP + body) — the frame
     /// exactly as it would appear on the cable, checksums included.
     pub fn serialize(&self) -> Vec<u8> {
-        let mut body = Vec::with_capacity(self.body.encoded_len());
+        let shim = if self.txn != 0 { TXN_SHIM_LEN } else { 0 };
+        let mut body = Vec::with_capacity(shim + self.body.encoded_len());
+        if self.txn != 0 {
+            body.extend_from_slice(b"TX"); // reliability shim magic
+            body.extend_from_slice(&[0, 0]);
+            body.extend_from_slice(&self.txn.to_be_bytes());
+        }
         match &self.body {
             FrameBody::Coll(p) => p.emit(&mut body),
             FrameBody::Sw(m) => m.emit(&mut body),
             FrameBody::Bg(m) => m.emit(&mut body),
+            FrameBody::RelAck(a) => a.emit(&mut body),
         }
         let mut out = Vec::with_capacity(self.wire_bytes());
         EthHeader::new(self.src, self.dst).emit(&mut out);
@@ -225,14 +284,26 @@ impl Frame {
         {
             return None; // L2/L3 address mismatch
         }
+        let (txn, body_bytes) =
+            if body_bytes.len() >= TXN_SHIM_LEN && &body_bytes[0..2] == b"TX" {
+                let t = u64::from_be_bytes(body_bytes[4..12].try_into().ok()?);
+                if t == 0 {
+                    return None; // a shim carrying txn 0 is malformed
+                }
+                (t, &body_bytes[TXN_SHIM_LEN..])
+            } else {
+                (0, body_bytes)
+            };
         let body = if let Some(m) = BgMsg::parse(body_bytes) {
             FrameBody::Bg(m)
         } else if let Some(m) = SwMsg::parse(body_bytes) {
             FrameBody::Sw(m)
+        } else if let Some(a) = RelAck::parse(body_bytes) {
+            FrameBody::RelAck(a)
         } else {
             FrameBody::Coll(CollPacket::parse(body_bytes)?)
         };
-        Some(Frame { src, dst, body })
+        Some(Frame { src, dst, body, txn })
     }
 }
 
@@ -299,7 +370,7 @@ mod tests {
 
     #[test]
     fn frame_serialize_parse_roundtrip_sw() {
-        let f = Frame { src: 2, dst: 5, body: FrameBody::Sw(sw_msg(3)) };
+        let f = Frame::new(2, 5, FrameBody::Sw(sw_msg(3)));
         let bytes = f.serialize();
         let back = Frame::parse(&bytes).unwrap();
         assert_eq!(back.src, 2);
@@ -330,7 +401,7 @@ mod tests {
             tag: 0,
             payload: Payload::from_f64(&[1.5, 2.5]),
         };
-        let f = Frame { src: 1, dst: 3, body: FrameBody::Coll(pkt) };
+        let f = Frame::new(1, 3, FrameBody::Coll(pkt));
         let back = Frame::parse(&f.serialize()).unwrap();
         match back.body {
             FrameBody::Coll(p) => assert_eq!(p.payload.to_f64(), vec![1.5, 2.5]),
@@ -341,7 +412,7 @@ mod tests {
     #[test]
     fn min_frame_padding() {
         // 4-byte scan payload still occupies a minimum-size frame
-        let f = Frame { src: 0, dst: 1, body: FrameBody::Sw(sw_msg(1)) };
+        let f = Frame::new(0, 1, FrameBody::Sw(sw_msg(1)));
         let payload_min = 46.max(IPV4_HDR_LEN + UDP_HDR_LEN + SW_HDR_LEN + 4);
         assert_eq!(f.wire_bytes(), ETH_HDR_LEN + payload_min);
     }
@@ -381,7 +452,7 @@ mod tests {
     #[test]
     fn frame_serialize_parse_roundtrip_bg() {
         let f =
-            Frame { src: 4, dst: 6, body: FrameBody::Bg(BgMsg { flow: 3, seq: 41, len: 700 }) };
+            Frame::new(4, 6, FrameBody::Bg(BgMsg { flow: 3, seq: 41, len: 700 }));
         assert_eq!(
             f.wire_bytes(),
             ETH_HDR_LEN + IPV4_HDR_LEN + UDP_HDR_LEN + BG_HDR_LEN + 700
@@ -399,9 +470,40 @@ mod tests {
 
     #[test]
     fn corrupted_frame_rejected() {
-        let f = Frame { src: 2, dst: 5, body: FrameBody::Sw(sw_msg(3)) };
+        let f = Frame::new(2, 5, FrameBody::Sw(sw_msg(3)));
         let mut bytes = f.serialize();
         bytes[20] ^= 0xFF; // corrupt IP header
         assert!(Frame::parse(&bytes).is_none());
+    }
+
+    #[test]
+    fn txn_shim_roundtrips_and_costs_exactly_its_bytes() {
+        let plain = Frame::new(2, 5, FrameBody::Sw(sw_msg(100)));
+        let mut reliable = plain.clone();
+        reliable.txn = 0xDEAD_BEEF;
+        // the shim adds exactly its encoded length above padding range
+        assert_eq!(reliable.wire_bytes(), plain.wire_bytes() + TXN_SHIM_LEN);
+        let back = Frame::parse(&reliable.serialize()).unwrap();
+        assert_eq!(back.txn, 0xDEAD_BEEF);
+        match back.body {
+            FrameBody::Sw(m) => assert_eq!(m.count, 100),
+            _ => panic!("wrong body"),
+        }
+        // txn 0 stays byte-identical to the pre-fault wire format
+        let back = Frame::parse(&plain.serialize()).unwrap();
+        assert_eq!(back.txn, 0);
+    }
+
+    #[test]
+    fn relack_roundtrip() {
+        let f = Frame::new(5, 2, FrameBody::RelAck(RelAck { txn: 77 }));
+        // acks are minimum-size frames
+        assert_eq!(f.wire_bytes(), ETH_HDR_LEN + 46);
+        let back = Frame::parse(&f.serialize()).unwrap();
+        assert_eq!(back.txn, 0, "acks are themselves unreliable");
+        match back.body {
+            FrameBody::RelAck(a) => assert_eq!(a.txn, 77),
+            _ => panic!("wrong body"),
+        }
     }
 }

@@ -6,12 +6,14 @@
 //! physical port graph ([`topology`]) and BFS routing tables ([`routing`])
 //! used by the NetFPGA's reference-router forwarding path.
 
+pub mod fault;
 pub mod frame;
 pub mod headers;
 pub mod routing;
 pub mod topology;
 
-pub use frame::{BgMsg, Frame, FrameBody, SwMsg, SwMsgKind, CHUNK_BYTES};
+pub use fault::{parse_drop_spec, DropRule, FaultPlan};
+pub use frame::{BgMsg, Frame, FrameBody, RelAck, SwMsg, SwMsgKind, CHUNK_BYTES};
 pub use headers::{EthHeader, Ipv4Header, MacAddr, UdpHeader};
 pub use routing::RouteTable;
 pub use topology::{NodeId, Topology};

@@ -8,9 +8,14 @@
 //! ```text
 //! .request start          ; entry label for the host-request activation
 //! .packet  on_pkt         ; entry label for the packet activation
+//! .timer   on_tmr         ; entry label for the retransmit-timer
+//!                         ; activation; when absent, the standard
+//!                         ; policy (retx while retries < max_retries)
+//!                         ; is appended, exactly as `Asm::finish` does
 //! start:                  ; a label binds the next instruction
 //!   imm   r0, 42
-//!   env   r1, rank        ; rank | p | inclusive | pkt.step | pkt.src | pkt.kind
+//!   env   r1, rank        ; rank | p | inclusive | pkt.step | pkt.src
+//!                         ; | pkt.kind | retries | max_retries
 //!   alu   add r2, r0, r1  ; add sub xor and shl shr lt eq
 //!   ldpkt r3
 //!   empty_like r4, r3
@@ -25,6 +30,7 @@
 //!   jnz   r6, start
 //!   emit  r1, data, r0, r3   ; dst-rank, msg type, step, payload
 //!   deliver r3
+//!   retx                  ; replay the timed-out frame (timer entry only)
 //!   drop
 //!   halt
 //! ```
@@ -85,6 +91,8 @@ fn parse_env(line: usize, tok: &str) -> Result<EnvVal, AsmError> {
         "pkt.step" => EnvVal::PktStep,
         "pkt.src" => EnvVal::PktSrc,
         "pkt.kind" => EnvVal::PktKind,
+        "retries" => EnvVal::Retries,
+        "max_retries" => EnvVal::MaxRetries,
         _ => return Err(err(line, format!("unknown env value `{tok}`"))),
     })
 }
@@ -130,6 +138,7 @@ pub fn assemble(name: &str, src: &str) -> Result<Program, AsmError> {
     let mut fixups: Vec<Fixup> = Vec::new();
     let mut entry_request: Option<(usize, String)> = None;
     let mut entry_packet: Option<(usize, String)> = None;
+    let mut entry_timer: Option<(usize, String)> = None;
 
     for (i, raw) in src.lines().enumerate() {
         let line = i + 1;
@@ -143,6 +152,10 @@ pub fn assemble(name: &str, src: &str) -> Result<Program, AsmError> {
         }
         if let Some(rest) = text.strip_prefix(".packet") {
             entry_packet = Some((line, rest.trim().to_string()));
+            continue;
+        }
+        if let Some(rest) = text.strip_prefix(".timer") {
+            entry_timer = Some((line, rest.trim().to_string()));
             continue;
         }
         if let Some(label) = text.strip_suffix(':') {
@@ -254,6 +267,10 @@ pub fn assemble(name: &str, src: &str) -> Result<Program, AsmError> {
                 want(1)?;
                 Instr::Deliver { payload: parse_reg(line, toks[1])? }
             }
+            "retx" => {
+                want(0)?;
+                Instr::Retx
+            }
             "drop" | "park" => {
                 want(0)?;
                 Instr::Drop
@@ -266,6 +283,29 @@ pub fn assemble(name: &str, src: &str) -> Result<Program, AsmError> {
         };
         code.push(instr);
     }
+
+    // timer entry: explicit label, or the standard policy block appended
+    // at the end — exactly what `Asm::finish` emits, so text-form and
+    // compiled-in images get identical default retransmit behavior.
+    // Appended BEFORE the unbound-label sentinel is computed: the block
+    // grows the code, and the sentinel must stay out of range.
+    let on_timer = match &entry_timer {
+        Some((line, label)) => labels.get(label).copied().ok_or_else(|| {
+            err(*line, format!(".timer entry label `{label}` never bound"))
+        })?,
+        None => {
+            let t = code.len();
+            code.extend([
+                Instr::Env { dst: 0, what: EnvVal::Retries },
+                Instr::Env { dst: 1, what: EnvVal::MaxRetries },
+                Instr::Alu { op: AluOp::Lt, dst: 2, a: 0, b: 1 },
+                Instr::Jz { cond: 2, to: t + 5 },
+                Instr::Retx,
+                Instr::Halt,
+            ]);
+            t
+        }
+    };
 
     // resolve: an unbound jump label becomes a deliberately out-of-range
     // target so the verifier reports it as `bad-target` with the pc
@@ -294,7 +334,7 @@ pub fn assemble(name: &str, src: &str) -> Result<Program, AsmError> {
     // Program.name is &'static str (images are compiled in); a linted
     // file's name lives as long as the process anyway
     let name: &'static str = Box::leak(name.to_string().into_boxed_str());
-    Ok(Program { name, code, on_request, on_packet })
+    Ok(Program { name, code, on_request, on_packet, on_timer })
 }
 
 #[cfg(test)]
@@ -334,6 +374,47 @@ mod tests {
         let prog = assemble("t", src).expect("assembles");
         let rejects = verify::verify(&prog).expect_err("rejected");
         assert!(rejects.iter().any(|r| r.class() == "bad-target"));
+    }
+
+    #[test]
+    fn timer_directive_and_retx_parse() {
+        let src = r"
+            .request start
+            .packet  start
+            .timer   tmr
+            start:
+              halt
+            tmr:                    ; double the budget before giving up
+              env r0, retries
+              env r1, max_retries
+              alu add r1, r1, r1
+              alu lt r2, r0, r1
+              jz  r2, give_up
+              retx
+            give_up:
+              halt
+        ";
+        let prog = assemble("t-timer", src).expect("assembles");
+        assert_eq!(prog.on_timer, 1);
+        assert!(prog.code.iter().any(|i| matches!(i, Instr::Retx)));
+        let report = verify::verify(&prog).expect("custom timer policy verifies");
+        assert!(report.on_timer_bound > 0);
+    }
+
+    #[test]
+    fn missing_timer_directive_appends_standard_policy() {
+        let src = ".request s\n.packet s\ns:\n  halt\n";
+        let prog = assemble("t-default", src).expect("assembles");
+        assert_eq!(prog.on_timer, 1, "standard block appended after user code");
+        assert!(matches!(prog.code[prog.on_timer], Instr::Env { what: EnvVal::Retries, .. }));
+        assert!(prog.code.iter().any(|i| matches!(i, Instr::Retx)));
+        verify::verify(&prog).expect("default retransmit policy verifies");
+    }
+
+    #[test]
+    fn unbound_timer_label_is_a_parse_error() {
+        let e = assemble("t", ".timer nowhere\nhalt\n").expect_err("unbound");
+        assert!(e.msg.contains("nowhere"), "{}", e.msg);
     }
 
     #[test]

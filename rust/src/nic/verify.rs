@@ -24,8 +24,12 @@
 //!   unresolved jump target (`BadTarget`), and no reachable cycle that
 //!   cannot exit (`NoTermination`);
 //! - **instruction budget** — a worst-case instruction bound per
-//!   activation, valid for every p <= 2^16, is computed and checked
-//!   against [`MAX_STEPS`] (`BudgetExceeded`).
+//!   activation (request, packet *and* retransmit-timer), valid for
+//!   every p <= 2^16, is computed and checked against [`MAX_STEPS`]
+//!   (`BudgetExceeded`).  Bounding `on_timer` matters doubly: the
+//!   timer entry runs while the card is already in recovery, so an
+//!   unbounded retransmit handler would wedge exactly the flow it is
+//!   supposed to rescue.
 //!
 //! Loop bounds come from the recursive-doubling round structure: a
 //! handler loop advances at least one RD round per iteration and a
@@ -173,6 +177,9 @@ pub struct CostReport {
     pub on_request_bound: usize,
     /// Worst-case instructions for one `on_packet` activation.
     pub on_packet_bound: usize,
+    /// Worst-case instructions for one `on_timer` (retransmit-timer)
+    /// activation.
+    pub on_timer_bound: usize,
     /// Every loop found, with its contribution to the bound.
     pub loops: Vec<LoopReport>,
 }
@@ -453,8 +460,11 @@ fn env_iv(what: EnvVal) -> Iv {
         // RD round structure: an in-protocol step field is a round index.
         EnvVal::PktStep => Iv::new(0, MAX_ROUNDS),
         EnvVal::PktSrc => Iv::new(0, MAX_P - 1),
-        // MsgType wire codes are 1..=6.
-        EnvVal::PktKind => Iv::new(1, 6),
+        // MsgType wire codes are 1..=6; 0 inside a timer activation.
+        EnvVal::PktKind => Iv::new(0, 6),
+        // Retry counters are u32s maintained by the NIC; the program
+        // only ever compares them, so the full unsigned range is fine.
+        EnvVal::Retries | EnvVal::MaxRetries => Iv::new(0, u32::MAX as i64),
     }
 }
 
@@ -687,7 +697,7 @@ fn transfer(
                 out.push((pc + 1, ft));
             }
         }
-        Instr::Emit { .. } | Instr::Deliver { .. } => out.push((pc + 1, s)),
+        Instr::Emit { .. } | Instr::Deliver { .. } | Instr::Retx => out.push((pc + 1, s)),
         Instr::Drop | Instr::Halt => {
             for (e, v) in exit_scratch.iter_mut().zip(s.scratch.iter()) {
                 *e = AbsVal::join(*e, *v);
@@ -776,7 +786,7 @@ fn regs_of(instr: Instr) -> Vec<Reg> {
         Instr::Jz { cond, .. } | Instr::Jnz { cond, .. } => vec![cond],
         Instr::Emit { dst, step, payload, .. } => vec![dst, step, payload],
         Instr::Deliver { payload } => vec![payload],
-        Instr::Jmp { .. } | Instr::Drop | Instr::Halt => vec![],
+        Instr::Jmp { .. } | Instr::Drop | Instr::Halt | Instr::Retx => vec![],
     }
 }
 
@@ -791,6 +801,9 @@ fn structural_rejects(prog: &Program) -> Vec<RejectReason> {
     }
     if prog.on_packet >= n {
         out.push(RejectReason::BadEntry { which: "on_packet", target: prog.on_packet });
+    }
+    if prog.on_timer >= n {
+        out.push(RejectReason::BadEntry { which: "on_timer", target: prog.on_timer });
     }
     for (pc, instr) in prog.code.iter().enumerate() {
         for reg in regs_of(*instr) {
@@ -932,6 +945,7 @@ fn cost_bound(
         |entry: usize| -> usize { best[comp_of[entry]].min(usize::MAX as u128) as usize };
     let on_request_bound = bound_of(prog.on_request);
     let on_packet_bound = bound_of(prog.on_packet);
+    let on_timer_bound = bound_of(prog.on_timer);
     let mut rejects = Vec::new();
     if on_request_bound > MAX_STEPS {
         rejects
@@ -940,8 +954,11 @@ fn cost_bound(
     if on_packet_bound > MAX_STEPS {
         rejects.push(RejectReason::BudgetExceeded { entry: "on_packet", bound: on_packet_bound });
     }
+    if on_timer_bound > MAX_STEPS {
+        rejects.push(RejectReason::BudgetExceeded { entry: "on_timer", bound: on_timer_bound });
+    }
     loops.sort_by_key(|l| l.head);
-    (CostReport { on_request_bound, on_packet_bound, loops }, rejects)
+    (CostReport { on_request_bound, on_packet_bound, on_timer_bound, loops }, rejects)
 }
 
 // ---------------------------------------------------------- check pass
@@ -1038,7 +1055,9 @@ fn check_instr(pc: usize, instr: Instr, st: &State) -> Vec<RejectReason> {
             }
         }
         Instr::Deliver { payload } => vec_read(payload, &mut out),
-        Instr::Jmp { .. } | Instr::Drop | Instr::Halt => {}
+        // Retx replays a frame the NIC already holds: it names no
+        // registers and writes nothing, so there is nothing to check.
+        Instr::Jmp { .. } | Instr::Drop | Instr::Halt | Instr::Retx => {}
     }
     out
 }
@@ -1056,9 +1075,9 @@ pub fn verify(prog: &Program) -> Result<CostReport, Vec<RejectReason>> {
     let n = prog.code.len();
     let succs: Vec<Vec<usize>> = (0..n).map(|pc| successors(prog.code[pc], pc)).collect();
 
-    // reachability from both entries
+    // reachability from all three entries
     let mut reach = vec![false; n];
-    let mut stack = vec![prog.on_request, prog.on_packet];
+    let mut stack = vec![prog.on_request, prog.on_packet, prog.on_timer];
     while let Some(v) = stack.pop() {
         if !reach[v] {
             reach[v] = true;
@@ -1105,11 +1124,12 @@ pub fn verify(prog: &Program) -> Result<CostReport, Vec<RejectReason>> {
     // against the join of every exit's scratch state until stable
     let mut entry_scratch = [AbsVal::EMPTY; SCRATCH_SLOTS];
     let mut rounds = 0usize;
-    let (req_an, pkt_an) = loop {
+    let (req_an, pkt_an, tmr_an) = loop {
         rounds += 1;
         let mut out_scratch = entry_scratch;
         let a = analyze_entry(prog, prog.on_request, &entry_scratch, &mut out_scratch);
         let b = analyze_entry(prog, prog.on_packet, &entry_scratch, &mut out_scratch);
+        let c = analyze_entry(prog, prog.on_timer, &entry_scratch, &mut out_scratch);
         let mut next = entry_scratch;
         let mut changed = false;
         for i in 0..SCRATCH_SLOTS {
@@ -1128,12 +1148,12 @@ pub fn verify(prog: &Program) -> Result<CostReport, Vec<RejectReason>> {
             }
         }
         if !changed {
-            break (a, b);
+            break (a, b, c);
         }
         entry_scratch = next;
     };
 
-    for an in [&req_an, &pkt_an] {
+    for an in [&req_an, &pkt_an, &tmr_an] {
         for (pc, st) in an.in_states.iter().enumerate() {
             if let Some(st) = st {
                 for r in check_instr(pc, prog.code[pc], st) {
@@ -1191,12 +1211,16 @@ mod tests {
                 panic!("{coll:?} rejected:\n{}", lines.join("\n"))
             });
             assert!(
-                report.on_request_bound <= MAX_STEPS && report.on_packet_bound <= MAX_STEPS,
-                "{coll:?}: bounds {}/{} exceed {MAX_STEPS}",
+                report.on_request_bound <= MAX_STEPS
+                    && report.on_packet_bound <= MAX_STEPS
+                    && report.on_timer_bound <= MAX_STEPS,
+                "{coll:?}: bounds {}/{}/{} exceed {MAX_STEPS}",
                 report.on_request_bound,
-                report.on_packet_bound
+                report.on_packet_bound,
+                report.on_timer_bound
             );
             assert!(report.on_request_bound > 0 && report.on_packet_bound > 0);
+            assert!(report.on_timer_bound > 0, "{coll:?}: timer entry must be reachable");
         }
     }
 
@@ -1251,11 +1275,15 @@ mod tests {
 
     #[test]
     fn rejects_fall_through_off_the_end() {
-        let mut a = Asm::new();
-        let entry = a.label();
-        a.bind(entry);
-        a.imm(0, 1);
-        let prog = a.finish("t-fallthrough", entry, entry);
+        // Hand-built image: `Asm::finish` would append the (Halt-
+        // terminated) standard timer block and mask the fall-through.
+        let prog = Program {
+            name: "t-fallthrough",
+            code: vec![Instr::Imm { dst: 0, val: 1 }],
+            on_request: 0,
+            on_packet: 0,
+            on_timer: 0,
+        };
         assert!(classes(&prog).contains(&"missing-halt"));
     }
 
@@ -1337,6 +1365,7 @@ mod tests {
             code: vec![Instr::Jmp { to: 99 }, Instr::Halt],
             on_request: 0,
             on_packet: 0,
+            on_timer: 1,
         };
         assert!(classes(&prog).contains(&"bad-target"));
         let prog = Program {
@@ -1344,8 +1373,72 @@ mod tests {
             code: vec![Instr::Halt],
             on_request: 5,
             on_packet: 0,
+            on_timer: 0,
         };
         assert!(classes(&prog).contains(&"bad-entry"));
+        let prog = Program {
+            name: "t-badtimer",
+            code: vec![Instr::Halt],
+            on_request: 0,
+            on_packet: 0,
+            on_timer: 9,
+        };
+        let rejects = verify(&prog).expect_err("must reject");
+        assert!(
+            rejects
+                .iter()
+                .any(|r| matches!(r, RejectReason::BadEntry { which: "on_timer", .. })),
+            "{rejects:?}"
+        );
+    }
+
+    #[test]
+    fn standard_timer_block_verifies_with_small_bound() {
+        // The auto-appended retry policy (retries < max_retries -> Retx)
+        // must prove out on its own: straight-line, loop-free, tiny.
+        let mut a = Asm::new();
+        let entry = a.label();
+        a.bind(entry);
+        a.halt();
+        let prog = a.finish("t-timer-default", entry, entry);
+        let report = verify(&prog).expect("default timer block verifies");
+        assert!(
+            report.on_timer_bound >= 4 && report.on_timer_bound <= 16,
+            "straight-line timer policy, got bound {}",
+            report.on_timer_bound
+        );
+    }
+
+    #[test]
+    fn rejects_uninit_read_reachable_only_from_timer_entry() {
+        // A defect on the retransmit path alone must still be caught:
+        // the timer entry is verified like the other two.
+        let mut a = Asm::new();
+        let entry = a.label();
+        a.bind(entry);
+        a.halt();
+        let timer = a.label();
+        a.bind(timer);
+        a.alu(AluOp::Add, 0, 1, 2); // r1, r2 never written on this path
+        a.halt();
+        let prog = a.finish_with_timer("t-timer-uninit", entry, entry, timer);
+        assert!(classes(&prog).contains(&"uninit-read"));
+    }
+
+    #[test]
+    fn rejects_unbounded_timer_loop() {
+        // An inescapable spin in the retransmit handler would wedge the
+        // very flow recovery is meant to rescue.
+        let mut a = Asm::new();
+        let entry = a.label();
+        a.bind(entry);
+        a.halt();
+        let timer = a.label();
+        a.bind(timer);
+        a.retx();
+        a.jmp(timer);
+        let prog = a.finish_with_timer("t-timer-spin", entry, entry, timer);
+        assert!(classes(&prog).contains(&"no-termination"));
     }
 
     #[test]

@@ -93,8 +93,14 @@ pub enum EnvVal {
     /// Triggering packet's sender rank (own rank for the host request).
     PktSrc,
     /// Triggering message type, as its wire code (`MsgType::wire_code`;
-    /// the host request reads as `HostRequest`).
+    /// the host request reads as `HostRequest`, a timer reads as 0).
     PktKind,
+    /// Retransmit attempts already made for the timed-out frame
+    /// (0 outside a timer activation).
+    Retries,
+    /// The card's configured retransmit budget (`cost.max_retries`;
+    /// 0 outside a timer activation).
+    MaxRetries,
 }
 
 /// One VM instruction.
@@ -137,17 +143,26 @@ pub enum Instr {
     /// Park: this event is buffered/absorbed, the flow waits for more
     /// input.  Counted in `handler_stalls`.
     Drop,
+    /// Ask the NIC to replay the pending reliable frame this timer
+    /// activation fired for (the NIC owns the pending store; the program
+    /// only decides the policy).  Meaningless outside `on_timer`.
+    Retx,
     /// Normal end of activation.
     Halt,
 }
 
-/// An assembled handler program with its two entry points.
+/// An assembled handler program with its three entry points.
 #[derive(Debug)]
 pub struct Program {
     pub name: &'static str,
     pub code: Vec<Instr>,
     pub on_request: usize,
     pub on_packet: usize,
+    /// Entry run when a reliable frame's retransmit timer expires.
+    /// [`Asm::finish`] installs the standard policy (retransmit while
+    /// under budget) unless the program supplies its own via
+    /// [`Asm::finish_with_timer`].
+    pub on_timer: usize,
 }
 
 /// Per-flow persistent state: the scratchpad plus the delivered flag the
@@ -175,6 +190,10 @@ impl Default for Flow {
 pub enum Activation<'a> {
     Request(&'a OffloadRequest),
     Packet(&'a CollPacket),
+    /// A reliable frame's retransmit timer expired with the ack still
+    /// outstanding.  Carries the retry ledger; there is no packet, so
+    /// `LdPkt` is illegal and the `Pkt*` env values read as defaults.
+    Timer { retries: u32, max_retries: u32 },
 }
 
 /// Panic-site context: which image, which flow (collective, rank,
@@ -238,6 +257,7 @@ pub fn run(
     let mut pc = match act {
         Activation::Request(_) => prog.on_request,
         Activation::Packet(_) => prog.on_packet,
+        Activation::Timer { .. } => prog.on_timer,
     };
     let mut steps = 0usize;
     // flow identity, copied out so `site` doesn't hold a borrow of the
@@ -271,16 +291,26 @@ pub fn run(
                     EnvVal::P => ctx.p as i64,
                     EnvVal::Inclusive => ctx.inclusive as i64,
                     EnvVal::PktStep => match act {
-                        Activation::Request(_) => 0,
+                        Activation::Request(_) | Activation::Timer { .. } => 0,
                         Activation::Packet(pkt) => pkt.step as i64,
                     },
                     EnvVal::PktSrc => match act {
                         Activation::Request(req) => req.rank as i64,
                         Activation::Packet(pkt) => pkt.rank as i64,
+                        Activation::Timer { .. } => ctx.rank as i64,
                     },
                     EnvVal::PktKind => match act {
                         Activation::Request(_) => MsgType::HostRequest.wire_code() as i64,
                         Activation::Packet(pkt) => pkt.msg_type.wire_code() as i64,
+                        Activation::Timer { .. } => 0,
+                    },
+                    EnvVal::Retries => match act {
+                        Activation::Timer { retries, .. } => retries as i64,
+                        _ => 0,
+                    },
+                    EnvVal::MaxRetries => match act {
+                        Activation::Timer { max_retries, .. } => max_retries as i64,
+                        _ => 0,
                     },
                 };
                 regs[r(dst)] = Val::Int(v);
@@ -289,6 +319,9 @@ pub fn run(
                 let p = match act {
                     Activation::Request(req) => req.payload.clone(),
                     Activation::Packet(pkt) => pkt.payload.clone(),
+                    Activation::Timer { .. } => {
+                        panic!("{}: LdPkt in a timer activation (no packet)", site(at))
+                    }
                 };
                 regs[r(dst)] = Val::Vec(p);
             }
@@ -413,6 +446,7 @@ pub fn run(
                 ctx.stalls += 1;
                 break;
             }
+            Instr::Retx => out.push(NicAction::Retransmit),
             Instr::Halt => break,
         }
     }
@@ -525,12 +559,41 @@ impl Asm {
         self.code.push(Instr::Drop);
     }
 
+    pub fn retx(&mut self) {
+        self.code.push(Instr::Retx);
+    }
+
     pub fn halt(&mut self) {
         self.code.push(Instr::Halt);
     }
 
-    /// Resolve labels and seal the program.
-    pub fn finish(self, name: &'static str, on_request: Label, on_packet: Label) -> Program {
+    /// Resolve labels and seal the program, appending the standard
+    /// retransmit-timer policy as the `on_timer` entry: replay the
+    /// pending frame while `retries < max_retries`, otherwise give up
+    /// (halt without `Retx`, surfaced by the NIC as a recovery failure).
+    pub fn finish(mut self, name: &'static str, on_request: Label, on_packet: Label) -> Program {
+        let on_timer = self.label();
+        let give_up = self.label();
+        self.bind(on_timer);
+        self.env(0, EnvVal::Retries);
+        self.env(1, EnvVal::MaxRetries);
+        self.alu(AluOp::Lt, 2, 0, 1);
+        self.jz(2, give_up);
+        self.retx();
+        self.bind(give_up);
+        self.halt();
+        self.finish_with_timer(name, on_request, on_packet, on_timer)
+    }
+
+    /// Resolve labels and seal a program that supplies its own
+    /// retransmit-timer entry.
+    pub fn finish_with_timer(
+        self,
+        name: &'static str,
+        on_request: Label,
+        on_packet: Label,
+        on_timer: Label,
+    ) -> Program {
         let resolve = |id: usize| {
             self.labels[id].unwrap_or_else(|| panic!("{name}: label {id} never bound"))
         };
@@ -549,9 +612,11 @@ impl Asm {
             code,
             on_request: resolve(on_request.0),
             on_packet: resolve(on_packet.0),
+            on_timer: resolve(on_timer.0),
         };
         assert!(prog.on_request < prog.code.len(), "{name}: empty on_request");
         assert!(prog.on_packet < prog.code.len(), "{name}: empty on_packet");
+        assert!(prog.on_timer < prog.code.len(), "{name}: empty on_timer");
         prog
     }
 }
@@ -704,6 +769,44 @@ mod tests {
         assert_eq!(actions.len(), 1);
         assert!(matches!(&actions[0], NicAction::Deliver { payload } if payload.to_i32() == vec![5]));
         assert!(flow.delivered);
+    }
+
+    #[test]
+    fn standard_timer_entry_retransmits_until_budget_exhausted() {
+        // any program sealed with `finish` gets the standard policy:
+        // Retx while retries < max_retries, bare Halt afterwards
+        let mut a = Asm::new();
+        let entry = a.label();
+        a.bind(entry);
+        a.halt();
+        let prog = a.finish("t-timer", entry, entry);
+        let (compute, cost) = ctx_parts();
+        let mut ctx = make_ctx(&compute, &cost);
+        let mut flow = Flow::new();
+        let acts =
+            run(&prog, &mut flow, &mut ctx, Activation::Timer { retries: 1, max_retries: 3 });
+        assert!(matches!(acts[..], [NicAction::Retransmit]), "{acts:?}");
+        let acts =
+            run(&prog, &mut flow, &mut ctx, Activation::Timer { retries: 3, max_retries: 3 });
+        assert!(acts.is_empty(), "exhausted budget gives up: {acts:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "LdPkt in a timer activation")]
+    fn ldpkt_is_illegal_in_timer_activations() {
+        let mut a = Asm::new();
+        let entry = a.label();
+        a.bind(entry);
+        a.halt();
+        let timer = a.label();
+        a.bind(timer);
+        a.ldpkt(0);
+        a.halt();
+        let prog = a.finish_with_timer("t-nopkt", entry, entry, timer);
+        let (compute, cost) = ctx_parts();
+        let mut ctx = make_ctx(&compute, &cost);
+        let mut flow = Flow::new();
+        run(&prog, &mut flow, &mut ctx, Activation::Timer { retries: 0, max_retries: 3 });
     }
 
     #[test]

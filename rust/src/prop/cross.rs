@@ -275,6 +275,74 @@ fn every_tenant_agrees_with_oracle_under_interference() {
 }
 
 #[test]
+fn recovery_agrees_with_oracle_under_loss() {
+    // Hostile networks must be value-invisible: under seeded random
+    // per-hop loss PLUS a scheduled drop, every execution path's
+    // recovered result must still bit-match the lossless oracle — the
+    // timeout/retransmit layer may cost time, never change bytes.
+    // I32 + Sum keeps the match exact (no float association slack).
+    let mut total_retransmits = 0u64;
+    let mut total_timeouts = 0u64;
+    for_each_case(24, 0xFA17_5EED, |rng| {
+        let mut cfg = ExpConfig::default();
+        cfg.algo = AlgoType::RecursiveDoubling;
+        cfg.coll = *choose(rng, &[CollType::Scan, CollType::Exscan]);
+        cfg.path = *choose(rng, &[ExecPath::Sw, ExecPath::Fpga, ExecPath::Handler]);
+        cfg.p = *choose(rng, &[2usize, 4, 8, 16, 32]);
+        let mut topos: Vec<&str> = vec!["auto", "chain", "star:3", "fattree", "hypercube"];
+        if cfg.p >= 3 {
+            topos.push("ring");
+        }
+        cfg.topology = choose(rng, &topos).to_string();
+        cfg.dtype = Dtype::I32;
+        cfg.op = Op::Sum;
+        cfg.msg_bytes = *choose(rng, &[1usize, 5, 33]) * cfg.dtype.size();
+        cfg.seed = rng.next_u64();
+        cfg.cost.start_jitter_ns = *choose(rng, &[0u64, 5_000]);
+        cfg.verify = false; // the TEST does the comparing, not the cluster
+        // the hostile part: random loss and one scheduled wildcard drop.
+        // max_retries = 8 puts give-up ~loss^9 per txn out of reach, so
+        // the fixed-seed run always recovers.
+        cfg.loss = *choose(rng, &[0.01, 0.03, 0.08]);
+        cfg.cost.max_retries = 8;
+        let victim = rng.next_below(cfg.p as u64) as usize;
+        cfg.drop_spec = format!("{victim}->*:{}", 1 + rng.next_below(3));
+
+        let compute = make_engine(EngineKind::Native, "artifacts");
+        let contribs = random_contributions(rng, &cfg);
+        let (results, metrics) =
+            Cluster::scan_once(cfg.clone(), Rc::clone(&compute), contribs.clone())
+                .unwrap_or_else(|e| {
+                    panic!(
+                        "{:?}/{:?} on {} p={} loss={} drop={:?}: {e}",
+                        cfg.path, cfg.coll, cfg.topology, cfg.p, cfg.loss, cfg.drop_spec
+                    )
+                });
+        total_retransmits += metrics.retransmits;
+        total_timeouts += metrics.timeouts_fired;
+
+        let ctx = format!(
+            "{:?}/{:?} {}x{} on {} loss={} drop={:?}",
+            cfg.path,
+            cfg.coll,
+            cfg.p,
+            cfg.msg_elems(),
+            cfg.topology,
+            cfg.loss,
+            cfg.drop_spec
+        );
+        for r in 0..cfg.p {
+            let want = oracle_for_rank(&*compute, &contribs, &cfg, r);
+            assert_agree(&results[r], &want, &format!("recovered rank {r} ({ctx})"));
+        }
+    });
+    // the property is vacuous if nothing was ever dropped — the random
+    // space must actually exercise the recovery machinery
+    assert!(total_retransmits > 0, "hostile cases never retransmitted");
+    assert!(total_timeouts >= total_retransmits, "every resend follows a timer expiry");
+}
+
+#[test]
 fn software_offload_and_oracle_agree_on_every_rank() {
     for_each_case(40, 0xC0_55A1, |rng| {
         let cfg = random_case(rng);

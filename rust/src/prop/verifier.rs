@@ -300,6 +300,7 @@ fn accepted_programs_never_trip_the_vm() {
         });
         assert!(report.on_request_bound <= MAX_STEPS);
         assert!(report.on_packet_bound <= MAX_STEPS);
+        assert!(report.on_timer_bound <= MAX_STEPS);
 
         // random environment; every activation must run assert-free and
         // within the statically computed instruction bound
@@ -336,6 +337,10 @@ fn accepted_programs_never_trip_the_vm() {
                              rng.next_below(17) as u16, elems);
             activate(Activation::Packet(&pkt), report.on_packet_bound);
         }
+        // the retransmit-timer entry (the auto-appended standard policy
+        // here) must respect its own bound on both sides of the budget
+        let retries = rng.next_below(5) as u32;
+        activate(Activation::Timer { retries, max_retries: 3 }, report.on_timer_bound);
     });
 }
 

@@ -1,9 +1,9 @@
 //! Event vocabulary of the simulated cluster.
 //!
-//! Six event kinds cover the whole system: host processes acting, data
+//! Seven event kinds cover the whole system: host processes acting, data
 //! crossing the host/NIC boundary (in both directions), frames arriving
-//! at NIC ports, NIC handler units retiring, and background-traffic
-//! injections.  Costs (host stack, DMA crossing, wire time) are charged
+//! at NIC ports, NIC handler units retiring, background-traffic
+//! injections, and retransmit-timer expiry for the reliability layer.  Costs (host stack, DMA crossing, wire time) are charged
 //! when the event is *scheduled*; the event fires when the thing has
 //! fully happened.
 
@@ -55,4 +55,9 @@ pub enum EventKind {
     HpuDone { rank: Rank },
     /// The background traffic generator injects flow `flow`'s next frame.
     BgTick { flow: u16 },
+    /// The retransmit timer for reliable transaction `txn`, armed on
+    /// `rank`'s NIC when the frame was sent, expires.  A no-op if the
+    /// ack already came back (the pending entry is gone); otherwise the
+    /// NIC retransmits or gives up.
+    RetxTimer { rank: Rank, txn: u64 },
 }

@@ -11,6 +11,7 @@
 //! series   = ["sw_rd", "NF_rd"]       # path x algorithm axis
 //! topology = ["auto", "fattree"]      # wiring axis (see net::Topology)
 //! tenants  = [1, 2, 4]                # concurrent-communicator axis
+//! loss     = [0.0, 0.01, 0.05]        # per-hop loss-probability axis
 //!
 //! [run]                               # scalar ExpConfig overrides
 //! iters = 300
@@ -20,10 +21,10 @@
 //! ```
 //!
 //! Expansion order is fixed — series outermost, then topology, then p,
-//! then tenants, then sizes innermost — and each job derives its own seed from (master
-//! seed, job index), so the job list is a pure function of the spec: the
-//! parallel runner can execute it with any `--jobs` and merge back into
-//! the same report bytes.
+//! then tenants, then loss, then sizes innermost — and each job derives
+//! its own seed from (master seed, job index), so the job list is a pure
+//! function of the spec: the parallel runner can execute it with any
+//! `--jobs` and merge back into the same report bytes.
 
 use crate::bench::{self, Series};
 use crate::config::{ExpConfig, TomlDoc};
@@ -45,6 +46,8 @@ pub struct GridSpec {
     pub ps: Vec<usize>,
     /// Concurrent-communicator counts (1 = the classic single-job runs).
     pub tenants: Vec<usize>,
+    /// Per-hop loss probabilities (0.0 = the classic reliable fabric).
+    pub losses: Vec<f64>,
     pub sizes: Vec<usize>,
 }
 
@@ -83,9 +86,9 @@ impl GridSpec {
             base.cost.set(k, v)?;
         }
         for (k, _) in doc.section("grid") {
-            if !matches!(k, "name" | "sizes" | "p" | "series" | "topology" | "tenants") {
+            if !matches!(k, "name" | "sizes" | "p" | "series" | "topology" | "tenants" | "loss") {
                 return Err(format!(
-                    "unknown grid key: {k} (expected name/sizes/p/series/topology/tenants)"
+                    "unknown grid key: {k} (expected name/sizes/p/series/topology/tenants/loss)"
                 ));
             }
         }
@@ -108,6 +111,14 @@ impl GridSpec {
         let sizes = parse_usizes("sizes", base.msg_bytes)?;
         let ps = parse_usizes("p", base.p)?;
         let tenants = parse_usizes("tenants", base.tenants)?;
+        let losses = match doc.get_list("grid", "loss")? {
+            None => vec![base.loss],
+            Some(items) if items.is_empty() => return Err("grid.loss is empty".into()),
+            Some(items) => items
+                .iter()
+                .map(|v| v.parse::<f64>().map_err(|e| format!("grid.loss item {v:?}: {e}")))
+                .collect::<Result<Vec<f64>, String>>()?,
+        };
         let series = match doc.get_list("grid", "series")? {
             None => vec![Series::of_config(&base)],
             Some(items) if items.is_empty() => return Err("grid.series is empty".into()),
@@ -120,7 +131,7 @@ impl GridSpec {
             Some(items) => items,
         };
 
-        let spec = GridSpec { name, base, series, topologies, ps, tenants, sizes };
+        let spec = GridSpec { name, base, series, topologies, ps, tenants, losses, sizes };
         spec.expand()?; // validate every cell loudly at parse time
         Ok(spec)
     }
@@ -135,21 +146,22 @@ impl GridSpec {
             series: bench::paper_series(),
             topologies: vec!["auto".to_string()],
             ps: vec![8],
-            // pinned to a single tenant so the figs job indices (and
-            // therefore derived seeds and golden figure bytes) are
-            // untouched by the tenants axis
+            // pinned to a single tenant and a lossless fabric so the
+            // figs job indices (and therefore derived seeds and golden
+            // figure bytes) are untouched by the tenants and loss axes
             tenants: vec![1],
+            losses: vec![0.0],
             sizes: bench::OSU_SIZES.to_vec(),
         }
     }
 
     pub fn n_jobs(&self) -> usize {
         self.series.len() * self.topologies.len() * self.ps.len() * self.tenants.len()
-            * self.sizes.len()
+            * self.losses.len() * self.sizes.len()
     }
 
     /// Expand to the ordered job list (series, then topology, then p,
-    /// then tenants, then sizes).  Every cell is validated; an invalid
+    /// then tenants, then loss, then sizes).  Every cell is validated; an invalid
     /// combination (e.g. rd on a non-power-of-two p, a hypercube cell at
     /// a p that isn't one) names the cell it came from.
     pub fn expand(&self) -> Result<Vec<Job>, String> {
@@ -158,23 +170,26 @@ impl GridSpec {
             for topo in &self.topologies {
                 for &p in &self.ps {
                     for &tenants in &self.tenants {
-                        for &size in &self.sizes {
-                            let index = jobs.len();
-                            let mut cfg = self.base.clone();
-                            series.apply(&mut cfg);
-                            cfg.topology = topo.clone();
-                            cfg.p = p;
-                            cfg.tenants = tenants;
-                            cfg.msg_bytes = size;
-                            cfg.seed = derive_seed(self.base.seed, index as u64);
-                            cfg.validate().map_err(|e| {
-                                format!(
-                                    "grid cell {index} ({} {topo} p={p} tenants={tenants} \
-                                     {size}B): {e}",
-                                    series.name()
-                                )
-                            })?;
-                            jobs.push(Job { index, series, cfg });
+                        for &loss in &self.losses {
+                            for &size in &self.sizes {
+                                let index = jobs.len();
+                                let mut cfg = self.base.clone();
+                                series.apply(&mut cfg);
+                                cfg.topology = topo.clone();
+                                cfg.p = p;
+                                cfg.tenants = tenants;
+                                cfg.loss = loss;
+                                cfg.msg_bytes = size;
+                                cfg.seed = derive_seed(self.base.seed, index as u64);
+                                cfg.validate().map_err(|e| {
+                                    format!(
+                                        "grid cell {index} ({} {topo} p={p} tenants={tenants} \
+                                         loss={loss} {size}B): {e}",
+                                        series.name()
+                                    )
+                                })?;
+                                jobs.push(Job { index, series, cfg });
+                            }
                         }
                     }
                 }
@@ -369,11 +384,47 @@ mod tests {
     }
 
     #[test]
+    fn loss_axis_expands_between_tenants_and_sizes() {
+        let spec = GridSpec::from_toml(
+            r#"
+            [grid]
+            sizes = [4, 64]
+            loss = [0.0, 0.02]
+            series = ["NF_rd"]
+            [run]
+            iters = 5
+            "#,
+        )
+        .unwrap();
+        assert_eq!(spec.n_jobs(), 4);
+        let jobs = spec.expand().unwrap();
+        let key = |j: &Job| (j.cfg.loss, j.cfg.msg_bytes);
+        assert_eq!(key(&jobs[0]), (0.0, 4));
+        assert_eq!(key(&jobs[1]), (0.0, 64));
+        assert_eq!(key(&jobs[2]), (0.02, 4));
+        assert_eq!(key(&jobs[3]), (0.02, 64));
+        // default: the [run] scalar seeds a single-value axis
+        let spec = GridSpec::from_toml("[grid]\nsizes = [4]\n[run]\nloss = 0.01").unwrap();
+        assert_eq!(spec.losses, vec![0.01]);
+        // an out-of-range rate hits config validation and names its cell
+        let err = GridSpec::from_toml("[grid]\nloss = [1.5]").unwrap_err();
+        assert!(err.contains("loss"), "{err}");
+        // a lossless grid must not perturb job indices (seed stability)
+        let with = GridSpec::from_toml("[grid]\nsizes = [4, 64]\nloss = [0.0]").unwrap();
+        let without = GridSpec::from_toml("[grid]\nsizes = [4, 64]").unwrap();
+        let seeds = |s: &GridSpec| -> Vec<u64> {
+            s.expand().unwrap().iter().map(|j| j.cfg.seed).collect()
+        };
+        assert_eq!(seeds(&with), seeds(&without), "loss=[0.0] is index-neutral");
+    }
+
+    #[test]
     fn figs_grid_matches_the_paper_evaluation() {
         let spec = GridSpec::figs(300);
         assert_eq!(spec.name, FIGS_GRID);
         assert_eq!(spec.ps, vec![8]);
         assert_eq!(spec.tenants, vec![1], "figs indices must not shift under the tenants axis");
+        assert_eq!(spec.losses, vec![0.0], "figs runs on a lossless fabric");
         assert_eq!(spec.sizes, crate::bench::OSU_SIZES);
         let names: Vec<String> = spec.series.iter().map(|s| s.name()).collect();
         assert_eq!(names, vec!["sw_seq", "sw_rd", "NF_seq", "NF_rd", "NF_binomial"]);

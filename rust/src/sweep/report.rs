@@ -27,6 +27,8 @@ pub struct JobResult {
     pub topology: String,
     pub p: usize,
     pub msg_bytes: usize,
+    /// Per-hop loss probability of the cell (0.0 = reliable fabric).
+    pub loss: f64,
     pub seed: u64,
     pub host: LatencyStats,
     pub nic: LatencyStats,
@@ -48,6 +50,10 @@ pub struct JobResult {
     /// Total handler queueing delay charged / background frames received.
     pub hpu_queue_ns: u64,
     pub bg_frames: u64,
+    /// Recovery-protocol activity (all 0 on lossless cells).
+    pub retransmits: u64,
+    pub timeouts_fired: u64,
+    pub recovery_ns: u64,
     pub sim_ns: u64,
 }
 
@@ -59,6 +65,7 @@ impl JobResult {
             topology: job.cfg.topology.clone(),
             p: job.cfg.p,
             msg_bytes: job.cfg.msg_bytes,
+            loss: job.cfg.loss,
             seed: job.cfg.seed,
             host: m.host_overall(),
             nic: m.nic_overall(),
@@ -81,6 +88,9 @@ impl JobResult {
             fairness: m.fairness(),
             hpu_queue_ns: m.hpu_queue_ns,
             bg_frames: m.bg_frames_rx,
+            retransmits: m.retransmits,
+            timeouts_fired: m.timeouts_fired,
+            recovery_ns: m.recovery_ns,
             sim_ns: m.sim_ns,
         }
     }
@@ -92,6 +102,7 @@ impl JobResult {
             ("topology".into(), Json::str(self.topology.clone())),
             ("p".into(), Json::int(self.p as u64)),
             ("msg_bytes".into(), Json::int(self.msg_bytes as u64)),
+            ("loss".into(), Json::Num(self.loss)),
             ("seed".into(), Json::int(self.seed)),
             ("host".into(), self.host.to_json()),
             ("nic".into(), self.nic.to_json()),
@@ -112,6 +123,9 @@ impl JobResult {
             ("fairness".into(), Json::Num(self.fairness)),
             ("hpu_queue_ns".into(), Json::int(self.hpu_queue_ns)),
             ("bg_frames".into(), Json::int(self.bg_frames)),
+            ("retransmits".into(), Json::int(self.retransmits)),
+            ("timeouts_fired".into(), Json::int(self.timeouts_fired)),
+            ("recovery_ns".into(), Json::int(self.recovery_ns)),
             ("sim_ns".into(), Json::int(self.sim_ns)),
         ])
     }
@@ -135,6 +149,8 @@ impl JobResult {
                 .to_string(),
             p: get_u64("p")? as usize,
             msg_bytes: get_u64("msg_bytes")? as usize,
+            // absent in pre-fault artifacts: a reliable fabric
+            loss: j.get("loss").and_then(|v| v.as_f64()).unwrap_or(0.0),
             seed: get_u64("seed")?,
             host: LatencyStats::from_json(j.get("host").ok_or("job: missing host")?)?,
             nic: LatencyStats::from_json(j.get("nic").ok_or("job: missing nic")?)?,
@@ -159,6 +175,9 @@ impl JobResult {
             fairness: j.get("fairness").and_then(|v| v.as_f64()).unwrap_or(1.0),
             hpu_queue_ns: j.get("hpu_queue_ns").and_then(|v| v.as_u64()).unwrap_or(0),
             bg_frames: j.get("bg_frames").and_then(|v| v.as_u64()).unwrap_or(0),
+            retransmits: j.get("retransmits").and_then(|v| v.as_u64()).unwrap_or(0),
+            timeouts_fired: j.get("timeouts_fired").and_then(|v| v.as_u64()).unwrap_or(0),
+            recovery_ns: j.get("recovery_ns").and_then(|v| v.as_u64()).unwrap_or(0),
             sim_ns: get_u64("sim_ns")?,
         })
     }
@@ -190,6 +209,7 @@ pub struct SweepReport {
     pub topologies: Vec<String>,
     pub ps: Vec<usize>,
     pub tenants: Vec<usize>,
+    pub losses: Vec<f64>,
     pub sizes: Vec<usize>,
     pub jobs: Vec<JobResult>,
 }
@@ -202,6 +222,7 @@ impl SweepReport {
             topologies: spec.topologies.clone(),
             ps: spec.ps.clone(),
             tenants: spec.tenants.clone(),
+            losses: spec.losses.clone(),
             sizes: spec.sizes.clone(),
             jobs,
         }
@@ -223,6 +244,10 @@ impl SweepReport {
             (
                 "tenants".into(),
                 Json::Arr(self.tenants.iter().map(|&t| Json::int(t as u64)).collect()),
+            ),
+            (
+                "loss".into(),
+                Json::Arr(self.losses.iter().map(|&l| Json::Num(l)).collect()),
             ),
             (
                 "sizes".into(),
@@ -259,6 +284,12 @@ impl SweepReport {
             return Err(format!(
                 "figure {stem} needs a single-tenants grid, got {:?}",
                 self.tenants
+            ));
+        }
+        if self.losses.len() > 1 {
+            return Err(format!(
+                "figure {stem} needs a single-loss grid, got {:?}",
+                self.losses
             ));
         }
         let series: Vec<&String> = self
@@ -336,8 +367,8 @@ impl SweepReport {
     /// Human summary: one row per job.
     pub fn summary_table(&self) -> Table {
         let mut t = Table::new(&[
-            "job", "series", "topology", "p", "msg_size", "host_avg_us", "host_min_us",
-            "nic_avg_us", "frames",
+            "job", "series", "topology", "p", "msg_size", "loss", "host_avg_us", "host_min_us",
+            "nic_avg_us", "frames", "retx",
         ]);
         for j in &self.jobs {
             t.row(vec![
@@ -346,10 +377,12 @@ impl SweepReport {
                 j.topology.clone(),
                 j.p.to_string(),
                 fmt_bytes(j.msg_bytes),
+                format!("{}", j.loss),
                 us(j.host.avg_us()),
                 us(j.host.min_us()),
                 us(j.nic.avg_us()),
                 j.total_frames.to_string(),
+                j.retransmits.to_string(),
             ]);
         }
         t
@@ -375,6 +408,7 @@ mod tests {
             topology: "auto".into(),
             p: 8,
             msg_bytes: size,
+            loss: 0.0,
             seed: 1000 + index as u64,
             host: stats(&[base, base + 2_000]),
             nic: stats(&[base / 4]),
@@ -389,6 +423,9 @@ mod tests {
             fairness: 1.0,
             hpu_queue_ns: 0,
             bg_frames: 0,
+            retransmits: 0,
+            timeouts_fired: 0,
+            recovery_ns: 0,
             sim_ns: 1_000_000,
         };
         SweepReport {
@@ -397,6 +434,7 @@ mod tests {
             topologies: vec!["auto".into()],
             ps: vec![8],
             tenants: vec![1],
+            losses: vec![0.0],
             sizes: vec![4, 64],
             jobs: vec![
                 mk(0, "sw_seq", 4, 40_000),
@@ -456,6 +494,14 @@ mod tests {
         r.tenants = vec![1, 2];
         let err = r.figure_json("fig4").unwrap_err();
         assert!(err.contains("single-tenants"), "{err}");
+    }
+
+    #[test]
+    fn figure_json_rejects_multi_loss_grids() {
+        let mut r = tiny_report();
+        r.losses = vec![0.0, 0.05];
+        let err = r.figure_json("fig4").unwrap_err();
+        assert!(err.contains("single-loss"), "{err}");
     }
 
     #[test]

@@ -158,11 +158,7 @@ fn frame_wire_roundtrip_fuzz() {
             frag_total: 1,
             payload: Payload::from_i32(&vec_i32(rng, n, i32::MAX as i64)),
         };
-        let f = Frame {
-            src: msg.src,
-            dst: rng.next_below(200) as usize,
-            body: FrameBody::Sw(msg.clone()),
-        };
+        let f = Frame::new(msg.src, rng.next_below(200) as usize, FrameBody::Sw(msg.clone()));
         let back = Frame::parse(&f.serialize()).expect("roundtrip");
         match back.body {
             FrameBody::Sw(m) => {
@@ -193,7 +189,7 @@ fn corrupted_frames_never_parse_as_valid() {
             frag_total: 1,
             payload: Payload::from_i32(&[1, 2, 3, 4]),
         };
-        let f = Frame { src: 2, dst: 5, body: FrameBody::Sw(msg) };
+        let f = Frame::new(2, 5, FrameBody::Sw(msg));
         let mut bytes = f.serialize();
         // corrupt within the IP header: always detected by its checksum
         let pos = 14 + rng.next_below(20) as usize;
