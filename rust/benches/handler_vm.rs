@@ -54,6 +54,7 @@ fn activation_ns(mut mk: impl FnMut() -> Box<dyn CollEngine>, reps: usize) -> f6
             compute: &compute,
             cost: &cost,
             cycles: 0,
+            combine_cycles: 0,
             instrs: 0,
             stalls: 0,
         };

@@ -140,6 +140,7 @@ fn bench_handler_dispatch(reps: usize, counting: bool) -> (f64, Option<f64>) {
             compute: &compute,
             cost: &cost,
             cycles: 0,
+            combine_cycles: 0,
             instrs: 0,
             stalls: 0,
         };

@@ -96,7 +96,17 @@ USAGE: nfscan <command> [--key value ...]
 COMMANDS
   quickstart             one offloaded MPI_Scan on 8 simulated nodes
   run                    one experiment cell; keys = [run] config keys
-                         (--algo rd --path fpga --msg_bytes 64 ...)
+                         (--algo rd --path fpga --msg_bytes 64 ...);
+                         --trace true prints the per-rank span timeline
+                         (--trace_cols W sets its width, --trace_cap N the
+                         ring capacity, --trace_raw true the raw span list),
+                         --profile true the event-loop self-profile, and
+                         --attribution true the latency breakdown
+  trace                  one cell with span tracing on; emits Chrome-trace/
+                         Perfetto JSON (--out trace.json, --cap N events;
+                         same [run] keys as run).  Open in ui.perfetto.dev
+                         or chrome://tracing; flow arrows follow each
+                         reliable txn through drops and retransmits
   fig4|fig5|fig6|fig7    regenerate a paper figure (--iters N, --engine xla,
                          --sizes 4,64,1024)
   sweep --grid F.toml    expand a grid spec (sizes x p x tenants x loss x
@@ -108,7 +118,9 @@ COMMANDS
                          (fig4.json..fig7.json); artifact bytes are
                          identical for any --jobs.  --topology a,b /
                          --sizes n,m / --series a,b / --tenants 1,2,4 /
-                         --loss 0,0.01,0.05 override the file's axes.
+                         --loss 0,0.01,0.05 / --late_rank none,3 override
+                         the file's axes; --attribution true adds the
+                         latency breakdown to every job's artifact row.
   sweep --config F.toml  legacy: run ONE experiment described by a TOML
   values                 run ONE collective with deterministic per-rank
                          data and dump each rank's result bytes as JSON
@@ -159,6 +171,15 @@ bit-match the lossless oracle; recovery cost lands in the
 retransmits / timeouts_fired / recovery_ns metrics (sweep artifacts
 carry them per job, and `--loss a,b` sweeps loss as a grid axis).
 
+Observability: span tracing and latency attribution are off by default
+and cost nothing when off (artifact bytes stay identical).
+--attribution true splits each run's measured latency into wire /
+switch_queue / hpu_queue / handler_exec / compute / recovery / host
+components that sum exactly to latency_ns, plus a log2 latency
+histogram; `nfscan trace` exports the typed span stream as Perfetto
+JSON; --profile true prints per-event-kind pop counts, wall-clock, and
+allocations of the event loop itself.
+
 Figures print aligned tables; add --csv true for CSV output."
     );
 }
@@ -178,6 +199,7 @@ pub fn main_with_args(argv: &[String]) -> Result<()> {
         }
         "quickstart" => cmd_quickstart(&args),
         "run" => cmd_run(&args),
+        "trace" => cmd_trace(&args),
         "fig4" | "fig5" | "fig6" | "fig7" => cmd_figure(&args),
         "sweep" => cmd_sweep(&args),
         "values" => cmd_values(&args),
@@ -230,16 +252,28 @@ fn cmd_quickstart(args: &Args) -> Result<()> {
 
 fn cmd_run(args: &Args) -> Result<()> {
     let mut cfg = ExpConfig::default();
-    args.apply_run_flags(&mut cfg, &["artifacts", "csv", "trace"])?;
+    args.apply_run_flags(
+        &mut cfg,
+        &["artifacts", "csv", "trace", "trace_cols", "trace_cap", "trace_raw", "profile"],
+    )?;
     let compute = engine_from(args, &cfg);
     let mut cluster = crate::cluster::Cluster::new(cfg.clone(), compute);
-    let want_trace = args.get("trace") == Some("true");
+    let want_raw = args.get("trace_raw") == Some("true");
+    let want_trace = args.get("trace") == Some("true") || want_raw;
+    let trace_cols = args.get_usize("trace_cols", 100)?;
+    let trace_cap = args.get_usize("trace_cap", 4096)?;
     if want_trace {
-        cluster.enable_trace(4096);
+        cluster.enable_trace(trace_cap);
+    }
+    if args.get("profile") == Some("true") {
+        cluster.enable_profile();
     }
     let m = cluster.run()?;
     if want_trace {
-        println!("{}", cluster.trace.timeline(cfg.p, 100));
+        println!("{}", cluster.trace.timeline(cfg.p, trace_cols));
+    }
+    if want_raw {
+        println!("{}", cluster.trace.dump(trace_cap));
     }
     let all = m.host_overall();
     println!("series      : {}", cfg.series_name());
@@ -255,6 +289,46 @@ fn cmd_run(args: &Args) -> Result<()> {
     println!("frames      : {}", m.total_frames());
     println!("multicasts  : {}", m.multicasts);
     println!("sim time    : {:.3} ms", m.sim_ns as f64 / 1e6);
+    if let Some(a) = m.attribution {
+        println!("attribution (pooled measured latency, sums exactly):");
+        for (k, v) in crate::metrics::Attribution::FIELDS.iter().zip(a.values()) {
+            println!("  {k:<16}: {:>12.2} us", v as f64 / 1e3);
+        }
+        println!("  p50 <= {:.2} us | p99 <= {:.2} us (log2 histogram upper bounds)",
+            m.host_hist.percentile_upper_ns(50.0) as f64 / 1e3,
+            m.host_hist.percentile_upper_ns(99.0) as f64 / 1e3,
+        );
+    }
+    if let Some(prof) = cluster.profile() {
+        println!("event-loop self-profile:");
+        print!("{}", prof.render());
+    }
+    Ok(())
+}
+
+/// `nfscan trace` — run one experiment cell with span tracing on and
+/// export the Chrome-trace / Perfetto JSON (one track per rank's host,
+/// NIC, and HPU lanes; flow arrows follow each reliable transaction
+/// through drops and retransmits).
+fn cmd_trace(args: &Args) -> Result<()> {
+    let mut cfg = ExpConfig::default();
+    args.apply_run_flags(&mut cfg, &["artifacts", "out", "cap"])?;
+    let cap = args.get_usize("cap", 65_536)?;
+    let compute = engine_from(args, &cfg);
+    let mut cluster = crate::cluster::Cluster::new(cfg.clone(), compute);
+    cluster.enable_trace(cap);
+    cluster.run()?;
+    let doc = cluster.trace.chrome_trace(cfg.p);
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, doc.pretty()).with_context(|| format!("writing {path}"))?;
+            println!(
+                "wrote {path} ({} events; open in ui.perfetto.dev or chrome://tracing)",
+                cluster.trace.len()
+            );
+        }
+        None => print!("{}", doc.pretty()),
+    }
     Ok(())
 }
 
@@ -298,7 +372,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
     args.ensure_only(&[
         "grid", "jobs", "out", "artifacts", "engine", "iters", "sizes", "topology", "series",
-        "tenants", "loss", "csv",
+        "tenants", "loss", "late_rank", "attribution", "csv",
     ])?;
     let grid = args
         .get("grid")
@@ -339,6 +413,21 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             .map(|l| l.trim().parse::<f64>().with_context(|| format!("--loss item {l}")))
             .collect::<Result<_>>()?;
     }
+    if let Some(lates) = args.get("late_rank") {
+        spec.late_ranks = lates
+            .split(',')
+            .map(|l| match l.trim() {
+                "none" => Ok(None),
+                t => t
+                    .parse::<usize>()
+                    .map(Some)
+                    .with_context(|| format!("--late_rank item {t}")),
+            })
+            .collect::<Result<_>>()?;
+    }
+    if let Some(v) = args.get("attribution") {
+        spec.base.attribution = v.parse().with_context(|| "--attribution")?;
+    }
     if let Some(e) = args.get("engine") {
         spec.base.engine =
             EngineKind::from_name(e).ok_or_else(|| anyhow!("unknown engine {e}"))?;
@@ -352,7 +441,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
     let n = spec.n_jobs();
     println!(
-        "sweep {}: {} jobs ({} series x {} topologies x {} p x {} tenants x {} loss x {} sizes) on {} workers{}",
+        "sweep {}: {} jobs ({} series x {} topologies x {} p x {} tenants x {} loss x {} late_rank x {} sizes) on {} workers{}",
         spec.name,
         n,
         spec.series.len(),
@@ -360,6 +449,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         spec.ps.len(),
         spec.tenants.len(),
         spec.losses.len(),
+        spec.late_ranks.len(),
         spec.sizes.len(),
         jobs.clamp(1, n.max(1)),
         if args.get("jobs").is_some() { "" } else { " (auto: available parallelism)" }
@@ -875,6 +965,104 @@ mod tests {
         assert_eq!(jobs[0].get("retransmits").unwrap().as_u64(), Some(0));
         assert!(jobs[1].get("timeouts_fired").unwrap().as_u64().is_some());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sweep_late_rank_axis_from_cli() {
+        let dir = std::env::temp_dir().join(format!("nfscan_cli_late_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let grid = dir.join("grid.toml");
+        std::fs::write(
+            &grid,
+            "[grid]\nname = \"late\"\nsizes = [64]\nseries = [\"NF_rd\"]\n\
+             [run]\niters = 5\nwarmup = 1\np = 4\n",
+        )
+        .unwrap();
+        let out = dir.join("out");
+        let a = Args::parse(&argv(&[
+            "sweep",
+            "--grid",
+            grid.to_str().unwrap(),
+            "--late_rank",
+            "none,3",
+            "--attribution",
+            "true",
+            "--jobs",
+            "2",
+            "--out",
+            out.to_str().unwrap(),
+        ]))
+        .unwrap();
+        cmd_sweep(&a).unwrap();
+        let report = std::fs::read_to_string(out.join("late.json")).unwrap();
+        let doc = crate::metrics::json::Json::parse(&report).unwrap();
+        let axis = doc.get("late_rank").unwrap().as_arr().unwrap();
+        assert_eq!(axis[0].as_str(), Some("none"));
+        assert_eq!(axis[1].as_u64(), Some(3));
+        let jobs = doc.get("jobs").unwrap().as_arr().unwrap();
+        assert_eq!(jobs.len(), 2);
+        assert!(jobs[0].get("late_rank").is_none(), "\"none\" cell omits the field");
+        assert_eq!(jobs[1].get("late_rank").unwrap().as_u64(), Some(3));
+        for j in jobs {
+            let a = j.get("attribution").expect("--attribution true reaches every cell");
+            let sum: u64 = crate::metrics::Attribution::FIELDS[..7]
+                .iter()
+                .map(|k| a.get(k).unwrap().as_u64().unwrap())
+                .sum();
+            assert_eq!(sum, a.get("latency_ns").unwrap().as_u64().unwrap());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn trace_cmd_writes_valid_chrome_trace() {
+        let dir = std::env::temp_dir().join(format!("nfscan_cli_trace_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("trace.json");
+        let a = Args::parse(&argv(&[
+            "trace",
+            "--iters",
+            "3",
+            "--warmup",
+            "1",
+            "--p",
+            "4",
+            "--out",
+            out.to_str().unwrap(),
+        ]))
+        .unwrap();
+        cmd_trace(&a).unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        let doc = crate::metrics::json::Json::parse(&text).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!events.is_empty());
+        assert!(events.iter().any(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X")));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn run_with_observability_flags() {
+        let a = Args::parse(&argv(&[
+            "run",
+            "--iters",
+            "5",
+            "--warmup",
+            "1",
+            "--p",
+            "4",
+            "--trace",
+            "true",
+            "--trace_cols",
+            "60",
+            "--trace_raw",
+            "true",
+            "--profile",
+            "true",
+            "--attribution",
+            "true",
+        ]))
+        .unwrap();
+        cmd_run(&a).unwrap();
     }
 
     #[test]

@@ -22,7 +22,7 @@ use crate::config::{ExpConfig, FabricConfig, WorkloadSpec};
 use crate::data::{Dtype, Op, Payload};
 use crate::fpga::engine::EngineOpts;
 use crate::fpga::{make_engine, EngineCtx, HpuJob, Nic, NicAction, PendingTx};
-use crate::metrics::RunMetrics;
+use crate::metrics::{Attribution, RunMetrics};
 use crate::mpi::{make_sw, SwAction, SwCtx, SwScanAlgo};
 use crate::net::{
     frame::fragment, BgMsg, FaultPlan, Frame, FrameBody, PortNo, Rank, RelAck, RouteTable, SwMsg,
@@ -31,7 +31,8 @@ use crate::net::{
 use crate::offload::{build_request, node_role};
 use crate::packet::{CollPacket, MsgType};
 use crate::runtime::{engine::oracle_prefix, Compute};
-use crate::sim::{EventKind, EventQueue, HostMsg, OffloadRequest, SimTime, SplitMix64};
+use crate::sim::{EventKind, EventQueue, HostMsg, OffloadRequest, SimTime, SplitMix64, EVENT_KINDS};
+use crate::trace::{SpanData, TraceKind};
 
 /// Per-rank host process: the OSU-style benchmark driver plus (software
 /// path) the per-epoch algorithm instances and their unexpected-message
@@ -64,6 +65,87 @@ struct BgFlow {
     dst: Rank,
     remaining: u64,
     seq: u32,
+}
+
+/// Raw latency-attribution accumulators (only built when the run has
+/// `attribution = true`).  Components are charged as events fire,
+/// gated on the charged rank being inside a measured (post-warmup)
+/// iteration; [`Cluster::run`] folds them into an [`Attribution`]
+/// whose parts sum exactly to the pooled measured host latency.
+struct AttrState {
+    /// Per-rank "inside a measured iteration" flag.
+    measuring: Vec<bool>,
+    /// Pooled measured host latency (the breakdown's exact total).
+    total: u64,
+    wire: u64,
+    switch_queue: u64,
+    hpu_queue: u64,
+    handler_exec: u64,
+    compute: u64,
+    recovery: u64,
+}
+
+impl AttrState {
+    fn new(p: usize) -> AttrState {
+        AttrState {
+            measuring: vec![false; p],
+            total: 0,
+            wire: 0,
+            switch_queue: 0,
+            hpu_queue: 0,
+            handler_exec: 0,
+            compute: 0,
+            recovery: 0,
+        }
+    }
+}
+
+/// Event-loop self-profile (`nfscan run --profile`): per-`EventKind`
+/// pop counts, handler wall-clock, and allocation events (the latter
+/// non-zero only when the counting allocator is installed).  Purely
+/// observational — wall-clock is host noise and never feeds back into
+/// sim time or artifacts.
+#[derive(Clone, Debug, Default)]
+pub struct LoopProfile {
+    /// Total events popped.
+    pub pops: u64,
+    /// Pops by [`EventKind::index`] slot.
+    pub counts: [u64; EVENT_KINDS],
+    /// Host wall-clock spent in each kind's handler, nanoseconds.
+    pub wall_ns: [u64; EVENT_KINDS],
+    /// Allocation events inside each kind's handler.
+    pub allocs: [u64; EVENT_KINDS],
+}
+
+impl LoopProfile {
+    /// Fixed-width table: one row per event kind plus a total row.
+    pub fn render(&self) -> String {
+        let mut t = crate::metrics::Table::new(&["event", "pops", "wall_us", "allocs"]);
+        for i in 0..EVENT_KINDS {
+            t.row(vec![
+                crate::sim::EVENT_KIND_NAMES[i].to_string(),
+                self.counts[i].to_string(),
+                format!("{:.1}", self.wall_ns[i] as f64 / 1e3),
+                self.allocs[i].to_string(),
+            ]);
+        }
+        t.row(vec![
+            "total".into(),
+            self.pops.to_string(),
+            format!("{:.1}", self.wall_ns.iter().sum::<u64>() as f64 / 1e3),
+            self.allocs.iter().sum::<u64>().to_string(),
+        ]);
+        t.render()
+    }
+}
+
+/// Epoch carried by a frame's body (0 for background and ack frames).
+fn frame_epoch(frame: &Frame) -> u16 {
+    match &frame.body {
+        FrameBody::Coll(pkt) => pkt.epoch(),
+        FrameBody::Sw(m) => (m.epoch & 0xFFFF) as u16,
+        _ => 0,
+    }
 }
 
 pub struct Cluster {
@@ -100,6 +182,10 @@ pub struct Cluster {
     pub results: Vec<Option<Payload>>,
     /// Milestone trace (disabled by default; `enable_trace` turns it on).
     pub trace: crate::trace::Trace,
+    /// Latency-attribution accumulators (`cfg.attribution` runs only).
+    attr: Option<Box<AttrState>>,
+    /// Event-loop self-profile (`enable_profile` turns it on).
+    profile: Option<Box<LoopProfile>>,
 }
 
 impl Cluster {
@@ -213,6 +299,8 @@ impl Cluster {
             injected: None,
             results: vec![None; p],
             trace: crate::trace::Trace::disabled(),
+            attr: if cfg.attribution { Some(Box::new(AttrState::new(p))) } else { None },
+            profile: None,
             topo,
             routes,
             cfg,
@@ -224,6 +312,33 @@ impl Cluster {
     /// completions) for `Trace::timeline` rendering.
     pub fn enable_trace(&mut self, cap: usize) {
         self.trace = crate::trace::Trace::new(cap, true);
+    }
+
+    /// Turn on the event-loop self-profile (per-kind pop counts, host
+    /// wall-clock, allocation events).  Purely observational: sim time
+    /// and artifact bytes are unaffected.
+    pub fn enable_profile(&mut self) {
+        self.profile = Some(Box::default());
+    }
+
+    pub fn profile(&self) -> Option<&LoopProfile> {
+        self.profile.as_deref()
+    }
+
+    /// True when `rank` is a host rank currently inside a measured
+    /// (post-warmup) iteration of an attribution run.
+    fn attr_measuring(&self, rank: Rank) -> bool {
+        match &self.attr {
+            Some(a) => rank < self.cfg.p && a.measuring[rank],
+            None => false,
+        }
+    }
+
+    /// Charge attribution components for `rank` if it is measuring.
+    fn attr_charge(&mut self, rank: Rank, f: impl FnOnce(&mut AttrState)) {
+        if self.attr_measuring(rank) {
+            f(self.attr.as_deref_mut().expect("measuring implies attribution"));
+        }
     }
 
     /// Application entry point: run ONE collective over caller-provided
@@ -324,6 +439,11 @@ impl Cluster {
             }
         }
         while let Some((now, ev)) = self.q.pop() {
+            // self-profile bookkeeping costs two reads per pop and only
+            // when enabled; wall-clock never feeds back into sim time
+            let prof_start = self.profile.as_ref().map(|_| {
+                (ev.index(), std::time::Instant::now(), crate::util::alloc::allocation_count())
+            });
             match ev {
                 EventKind::HostStart { rank } => self.on_host_start(now, rank),
                 EventKind::HostRecv { rank, msg } => self.on_host_recv(now, rank, msg),
@@ -334,6 +454,13 @@ impl Cluster {
                 EventKind::HpuDone { rank } => self.on_hpu_done(now, rank),
                 EventKind::BgTick { flow } => self.on_bg_tick(now, flow),
                 EventKind::RetxTimer { rank, txn } => self.on_retx_timer(now, rank, txn),
+            }
+            if let (Some((idx, t0, a0)), Some(prof)) = (prof_start, self.profile.as_deref_mut()) {
+                prof.pops += 1;
+                prof.counts[idx] += 1;
+                prof.wall_ns[idx] += t0.elapsed().as_nanos() as u64;
+                prof.allocs[idx] +=
+                    crate::util::alloc::allocation_count().saturating_sub(a0);
             }
             if self.fatal.is_some() {
                 break;
@@ -369,6 +496,17 @@ impl Cluster {
                 self.metrics.switch_frames_forwarded += nic.frames_forwarded;
             }
         }
+        if let Some(a) = self.attr.take() {
+            self.metrics.attribution = Some(Attribution::finalize(
+                a.wire,
+                a.switch_queue,
+                a.hpu_queue,
+                a.handler_exec,
+                a.compute,
+                a.recovery,
+                a.total,
+            ));
+        }
         Ok(self.metrics.clone())
     }
 
@@ -384,8 +522,13 @@ impl Cluster {
         host.in_flight = true;
         host.call_time = now;
         let epoch = host.iter;
-        self.trace.record(now, rank, crate::trace::TraceKind::HostCall, format!("epoch {epoch}"));
+        self.trace
+            .record(now, rank, TraceKind::HostCall, SpanData::instant((epoch & 0xFFFF) as u16));
         let ti = self.rank_tenant[rank];
+        if self.attr.is_some() {
+            let measured = epoch >= self.tenants[ti].cfg.warmup as u32;
+            self.attr.as_deref_mut().expect("checked").measuring[rank] = measured;
+        }
         let (comm, base, gsize) = {
             let t = &self.tenants[ti];
             (t.comm, t.base, t.size)
@@ -489,6 +632,9 @@ impl Cluster {
     ) {
         // software machines emit communicator-local destinations
         let base = self.tenants[self.rank_tenant[rank]].base;
+        if compute_ns > 0 {
+            self.attr_charge(rank, |a| a.compute += compute_ns);
+        }
         let mut t = now + compute_ns;
         for action in actions {
             match action {
@@ -508,8 +654,12 @@ impl Cluster {
     }
 
     fn complete_iteration(&mut self, at: SimTime, rank: Rank, epoch: u32, result: Payload) {
-        let kind = crate::trace::TraceKind::HostComplete;
-        self.trace.record(at, rank, kind, format!("epoch {epoch}"));
+        self.trace.record(
+            at,
+            rank,
+            TraceKind::HostComplete,
+            SpanData::instant((epoch & 0xFFFF) as u16),
+        );
         let ti = self.rank_tenant[rank];
         let warmup = self.tenants[ti].cfg.warmup as u32;
         let host = &mut self.hosts[rank];
@@ -519,6 +669,10 @@ impl Cluster {
         if epoch >= warmup {
             self.metrics.host_latency[rank].record(latency);
             self.metrics.tenant_host[ti].record(latency);
+            if let Some(a) = self.attr.as_deref_mut() {
+                a.total += latency;
+                self.metrics.host_hist.record(latency);
+            }
         }
         host.iter += 1;
         let gap = self.cfg.cost.host_call_gap_ns;
@@ -676,8 +830,34 @@ impl Cluster {
             tx_ns = self.fault.scaled_tx_ns(tx_ns);
         }
         let nic = &mut self.nics[src];
-        let end = nic.tx_reserve(port, ready, tx_ns);
+        let (start, end) = nic.tx_reserve(port, ready, tx_ns);
         nic.note_bytes(wire);
+        // attribution: wire time goes to the frame's origin rank (the
+        // only rank whose latency it can be part of); the port-FIFO
+        // wait is switch/trunk queueing.  Background noise is
+        // interference, never collective work, and is never charged.
+        let origin = if src < self.cfg.p { src } else { frame.src };
+        let is_bg = matches!(frame.body, FrameBody::Bg(_));
+        if !is_bg {
+            let queued = start - ready;
+            self.attr_charge(origin, |a| {
+                a.switch_queue += queued;
+                a.wire += tx_ns;
+            });
+        }
+        if self.trace.enabled() {
+            let epoch = frame_epoch(&frame);
+            if start > ready {
+                self.trace
+                    .record(ready, src, TraceKind::SwitchQueue, SpanData::span(start, epoch));
+            }
+            self.trace.record(
+                start,
+                src,
+                TraceKind::NicSend,
+                SpanData::span(end, epoch).txn(frame.txn).arg(frame.dst as u64),
+            );
+        }
         let (neighbor, nport) = self
             .topo
             .neighbor(src, port)
@@ -685,7 +865,19 @@ impl Cluster {
         if self.fault.lossy() && self.fault.should_drop(src, neighbor) {
             // the frame left the card (serialization was charged) but
             // dies on the wire: no arrival event
+            if self.trace.enabled() {
+                self.trace.record(
+                    end,
+                    src,
+                    TraceKind::Dropped,
+                    SpanData::instant(frame_epoch(&frame)).txn(frame.txn),
+                );
+            }
             return;
+        }
+        if !is_bg {
+            let prop = self.cfg.cost.link_prop_ns;
+            self.attr_charge(origin, |a| a.wire += prop);
         }
         let arrival = end + self.cfg.cost.link_prop_ns;
         self.q.push(arrival, EventKind::NicRecv { rank: neighbor, port: nport, frame });
@@ -711,6 +903,14 @@ impl Cluster {
             let dst = frame.dst;
             self.transmit(rank, dst, frame, ready);
             return;
+        }
+        if self.trace.enabled() {
+            self.trace.record(
+                now,
+                rank,
+                TraceKind::NicRecvd,
+                SpanData::instant(frame_epoch(&frame)).txn(frame.txn),
+            );
         }
         if frame.txn != 0 {
             // reliability layer: ack every reliable frame end-to-end
@@ -758,9 +958,17 @@ impl Cluster {
             }
             FrameBody::RelAck(ack) => {
                 if let Some(p) = self.nics[rank].pending.remove(&ack.txn) {
+                    self.trace.record(
+                        now,
+                        rank,
+                        TraceKind::NicAck,
+                        SpanData::instant(frame_epoch(&p.frame)).txn(ack.txn),
+                    );
                     if p.retries > 0 {
                         // recovery latency: original send to eventual ack
-                        self.metrics.recovery_ns += now - p.first_send;
+                        let rec = now - p.first_send;
+                        self.metrics.recovery_ns += rec;
+                        self.attr_charge(rank, |a| a.recovery += rec);
                     }
                 }
                 // a duplicate ack (from a retransmit that raced the
@@ -770,7 +978,7 @@ impl Cluster {
     }
 
     fn on_nic_host_req(&mut self, now: SimTime, rank: Rank, req: OffloadRequest) {
-        self.trace.record(now, rank, crate::trace::TraceKind::Offload, "request at NIC");
+        self.trace.record(now, rank, TraceKind::Offload, SpanData::instant(req.epoch));
         self.nics[rank].regs.stamp_offload(req.epoch, now);
         self.activate_engine(now, rank, req.epoch, Some(req), None);
     }
@@ -807,7 +1015,17 @@ impl Cluster {
     /// (round-robin across flows), or free the unit.
     fn on_hpu_done(&mut self, now: SimTime, rank: Rank) {
         if let Some(job) = self.nics[rank].hpu.next() {
-            self.metrics.hpu_queue_ns += now - job.arrival;
+            let waited = now - job.arrival;
+            self.metrics.hpu_queue_ns += waited;
+            self.attr_charge(rank, |a| a.hpu_queue += waited);
+            if self.trace.enabled() && waited > 0 {
+                self.trace.record(
+                    job.arrival,
+                    rank,
+                    TraceKind::HpuQueue,
+                    SpanData::span(now, job.epoch),
+                );
+            }
             self.run_activation(now, rank, job.epoch, job.req, job.pkt, true);
         } else {
             self.nics[rank].hpu.busy -= 1;
@@ -847,6 +1065,12 @@ impl Cluster {
             _ => 0,
         };
         self.metrics.timeouts_fired += 1;
+        self.trace.record(
+            now,
+            rank,
+            TraceKind::Timeout,
+            SpanData::instant((epoch & 0xFFFF) as u16).txn(txn),
+        );
         let max_retries = self.cfg.cost.max_retries;
         let ti = self.rank_tenant[rank];
         let (retransmit, cycles) = if self.tenants[ti].cfg.handler() && is_coll {
@@ -872,6 +1096,12 @@ impl Cluster {
         self.metrics.retransmits += 1;
         let dst = frame.dst;
         let ready = now + cycles * 8;
+        self.trace.record(
+            ready,
+            rank,
+            TraceKind::Retransmit,
+            SpanData::instant((epoch & 0xFFFF) as u16).txn(txn).arg(retries as u64),
+        );
         self.transmit(rank, dst, frame, ready);
         let at = ready + self.cfg.cost.retx_timeout_ns(retries);
         self.q.push(at, EventKind::RetxTimer { rank, txn });
@@ -910,6 +1140,7 @@ impl Cluster {
             compute: &*self.compute,
             cost: &self.cfg.cost,
             cycles: 0,
+            combine_cycles: 0,
             instrs: 0,
             stalls: 0,
         };
@@ -971,6 +1202,7 @@ impl Cluster {
             compute: &*self.compute,
             cost: &self.cfg.cost,
             cycles: 0,
+            combine_cycles: 0,
             instrs: 0,
             stalls: 0,
         };
@@ -994,7 +1226,27 @@ impl Cluster {
             + generations * self.cfg.cost.nic_pkt_gen_cycles;
         self.metrics.handler_instrs += ctx.instrs;
         self.metrics.handler_stalls += ctx.stalls;
+        let combine_cycles = ctx.combine_cycles;
         let ready = now + cycles * 8;
+        // activation time splits into combine arithmetic (compute) and
+        // everything else (pipeline, packet handling, VM retirement)
+        let combine_ns = combine_cycles * 8;
+        let exec_ns = cycles * 8 - combine_ns;
+        self.attr_charge(rank, |a| {
+            a.handler_exec += exec_ns;
+            a.compute += combine_ns;
+        });
+        if self.trace.enabled() {
+            self.trace.record(now, rank, TraceKind::HandlerExec, SpanData::span(ready, epoch));
+            if combine_cycles > 0 {
+                self.trace.record(
+                    ready,
+                    rank,
+                    TraceKind::Combine,
+                    SpanData::instant(epoch).arg(combine_cycles),
+                );
+            }
+        }
         self.nics[rank].check_engine_pressure();
         self.process_nic_actions(ready, rank, epoch, actions);
         self.nics[rank].gc_engines();
@@ -1040,7 +1292,7 @@ impl Cluster {
                 }
                 NicAction::Deliver { payload } => {
                     // release timestamp + the second host crossing
-                    self.trace.record(ready, rank, crate::trace::TraceKind::NicResult, "release");
+                    self.trace.record(ready, rank, TraceKind::NicResult, SpanData::instant(epoch));
                     let elapsed = self.nics[rank].regs.stamp_release(epoch, ready);
                     let at = ready + self.cfg.cost.result_ns(payload.byte_len());
                     self.q.push(
@@ -1526,6 +1778,82 @@ mod tests {
         }
         let timeline = cluster.trace.timeline(8, 60);
         assert!(timeline.contains("r0 |"));
+        // the span layer records wire serialization with real durations
+        assert!(
+            cluster.trace.iter().any(|e| e.kind == TraceKind::NicSend && e.end() > e.at),
+            "NicSend spans must have duration"
+        );
+    }
+
+    #[test]
+    fn attribution_sums_and_leaves_schedule_untouched() {
+        let mk = |attr: bool| {
+            let mut cfg = base(AlgoType::RecursiveDoubling, true);
+            cfg.attribution = attr;
+            run_cfg(cfg)
+        };
+        let off = mk(false);
+        let on = mk(true);
+        assert_eq!(off.sim_ns, on.sim_ns, "attribution must not move a single event");
+        assert_eq!(off.total_frames(), on.total_frames());
+        assert_eq!(off.host_overall().avg_ns(), on.host_overall().avg_ns());
+        assert!(off.attribution.is_none());
+        assert!(off.host_hist.is_empty());
+        let a = on.attribution.expect("attribution populated when enabled");
+        assert_eq!(a.components_sum(), a.latency_ns, "exact sum identity");
+        assert!(a.latency_ns > 0);
+        assert!(a.wire_ns > 0, "frames crossed wires");
+        assert!(a.handler_exec_ns > 0, "NIC activations ran");
+        // the latency histogram pools exactly the measured samples
+        assert_eq!(on.host_hist.count(), on.host_overall().count());
+    }
+
+    #[test]
+    fn attribution_covers_all_paths_and_recovery() {
+        for path in [ExecPath::Sw, ExecPath::Fpga, ExecPath::Handler] {
+            let mut cfg = base(AlgoType::RecursiveDoubling, true);
+            cfg.path = path;
+            cfg.attribution = true;
+            cfg.loss = 0.04;
+            cfg.cost.max_retries = 8;
+            let m = run_cfg(cfg);
+            let a = m.attribution.expect("attribution populated");
+            assert_eq!(a.components_sum(), a.latency_ns, "{path:?}: sum identity");
+            assert!(a.compute_ns > 0, "{path:?}: combine folds happened");
+            assert!(m.retransmits > 0, "{path:?}: the lossy run recovered");
+        }
+    }
+
+    #[test]
+    fn hpu_queueing_shows_up_in_attribution() {
+        let mut cfg = base(AlgoType::RecursiveDoubling, true);
+        cfg.path = ExecPath::Handler;
+        cfg.cost.handler_instr_cycles = 2000;
+        cfg.cost.hpus = 1;
+        cfg.attribution = true;
+        let m = run_cfg(cfg);
+        let a = m.attribution.unwrap();
+        assert_eq!(a.components_sum(), a.latency_ns);
+        assert!(a.hpu_queue_ns > 0, "a single unit must park measured activations");
+    }
+
+    #[test]
+    fn profile_counts_every_pop() {
+        let mut cfg = base(AlgoType::RecursiveDoubling, true);
+        cfg.iters = 5;
+        cfg.warmup = 1;
+        cfg.verify = true;
+        let compute = make_compute(EngineKind::Native, "artifacts");
+        let mut cluster = Cluster::new(cfg, compute);
+        cluster.enable_profile();
+        cluster.run().unwrap();
+        let prof = cluster.profile().expect("profile enabled");
+        assert_eq!(prof.counts.iter().sum::<u64>(), prof.pops);
+        assert!(prof.counts[0] > 0, "host_start events popped");
+        assert!(prof.counts[2] > 0, "nic_recv events popped");
+        let table = prof.render();
+        assert!(table.contains("host_start"));
+        assert!(table.contains("total"));
     }
 
     #[test]

@@ -152,6 +152,13 @@ pub struct ExpConfig {
     pub bg_bytes: usize,
     /// Inter-frame gap per background flow (ns).
     pub bg_gap_ns: u64,
+    /// Latency attribution: account every measured nanosecond to one of
+    /// the breakdown components (wire / switch-queue / hpu-queue /
+    /// handler-exec / compute / recovery / host) and emit them in run
+    /// metrics and artifacts.  Off by default: disabled attribution is
+    /// zero-cost and leaves artifact bytes identical to pre-attribution
+    /// builds.
+    pub attribution: bool,
     pub cost: CostModel,
 }
 
@@ -183,6 +190,7 @@ impl Default for ExpConfig {
             bg_msgs: 200,
             bg_bytes: 1024,
             bg_gap_ns: 20_000,
+            attribution: false,
             cost: CostModel::default(),
         }
     }
@@ -313,7 +321,12 @@ impl ExpConfig {
                 self.ack_enabled = v.parse().map_err(|e| format!("run.ack_enabled: {e}"))?
             }
             "late_rank" => {
-                self.late_rank = Some(v.parse().map_err(|e| format!("run.late_rank: {e}"))?)
+                // "none" clears the straggler (the late_rank sweep axis
+                // uses it for its baseline cells)
+                self.late_rank = match v {
+                    "none" => None,
+                    _ => Some(v.parse().map_err(|e| format!("run.late_rank: {e}"))?),
+                }
             }
             "late_delay_ns" => {
                 self.late_delay_ns = v.parse().map_err(|e| format!("run.late_delay_ns: {e}"))?
@@ -331,6 +344,9 @@ impl ExpConfig {
             "bg_bytes" => self.bg_bytes = v.parse().map_err(|e| format!("run.bg_bytes: {e}"))?,
             "bg_gap_ns" => {
                 self.bg_gap_ns = v.parse().map_err(|e| format!("run.bg_gap_ns: {e}"))?
+            }
+            "attribution" => {
+                self.attribution = v.parse().map_err(|e| format!("run.attribution: {e}"))?
             }
             _ => {
                 // every [cost] knob doubles as a run key, so flags like
@@ -653,6 +669,21 @@ mod tests {
         bad.loss = 0.1;
         bad.cost.timeout_ns = 0;
         assert!(bad.validate().is_err(), "lossy runs need a timeout");
+    }
+
+    #[test]
+    fn late_rank_none_and_attribution_keys() {
+        let mut cfg = ExpConfig::default();
+        cfg.set_run("late_rank", "3").unwrap();
+        assert_eq!(cfg.late_rank, Some(3));
+        cfg.set_run("late_rank", "none").unwrap();
+        assert_eq!(cfg.late_rank, None, "\"none\" clears the straggler");
+        assert!(cfg.set_run("late_rank", "soon").is_err());
+
+        assert!(!cfg.attribution, "attribution defaults off");
+        cfg.set_run("attribution", "true").unwrap();
+        assert!(cfg.attribution);
+        assert!(cfg.set_run("attribution", "yes").is_err());
     }
 
     #[test]

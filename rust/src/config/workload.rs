@@ -32,6 +32,9 @@ pub struct FabricConfig {
     pub bg_msgs: u64,
     pub bg_bytes: usize,
     pub bg_gap_ns: u64,
+    /// Latency attribution (fabric-wide: the accumulators live on the
+    /// shared cluster, charged per measuring rank).
+    pub attribution: bool,
     pub cost: CostModel,
 }
 
@@ -80,6 +83,7 @@ impl ExpConfig {
             bg_msgs: self.bg_msgs,
             bg_bytes: self.bg_bytes,
             bg_gap_ns: self.bg_gap_ns,
+            attribution: self.attribution,
             cost: self.cost.clone(),
         }
     }
@@ -129,6 +133,7 @@ impl ExpConfig {
             bg_msgs: fabric.bg_msgs,
             bg_bytes: fabric.bg_bytes,
             bg_gap_ns: fabric.bg_gap_ns,
+            attribution: fabric.attribution,
             cost: fabric.cost.clone(),
         }
     }

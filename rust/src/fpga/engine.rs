@@ -53,6 +53,10 @@ pub struct EngineCtx<'a> {
     pub cost: &'a CostModel,
     /// Cycles consumed by this activation's datapath work.
     pub cycles: u64,
+    /// The subset of `cycles` spent in combine folds (the arithmetic
+    /// itself, not packet handling) — latency attribution splits an
+    /// activation into handler-exec vs compute along this line.
+    pub combine_cycles: u64,
     /// Handler-VM instructions retired by this activation (0 on the
     /// fixed-function path) — pooled into `metrics.handler_instrs`.
     pub instrs: u64,
@@ -64,7 +68,9 @@ pub struct EngineCtx<'a> {
 impl EngineCtx<'_> {
     /// Elementwise combine, charging line-rate cycles (64-bit datapath).
     pub fn combine(&mut self, a: &Payload, b: &Payload) -> Payload {
-        self.cycles += self.cost.nic_combine_cycles(a.byte_len());
+        let c = self.cost.nic_combine_cycles(a.byte_len());
+        self.cycles += c;
+        self.combine_cycles += c;
         self.compute.combine(a, b, self.op).expect("engine combine")
     }
 
@@ -73,14 +79,18 @@ impl EngineCtx<'_> {
     /// machines' running accumulators fold without allocating (the
     /// hardware's preallocated-buffer discipline).
     pub fn combine_into(&mut self, acc: &mut Payload, b: &Payload) {
-        self.cycles += self.cost.nic_combine_cycles(acc.byte_len());
+        let c = self.cost.nic_combine_cycles(acc.byte_len());
+        self.cycles += c;
+        self.combine_cycles += c;
         self.compute.combine_into(acc, b, self.op).expect("engine combine");
     }
 
     /// In-place combine with the accumulator on the right:
     /// `acc = a (op) acc` (the rank-ordered folds feed from both sides).
     pub fn combine_into_rev(&mut self, acc: &mut Payload, a: &Payload) {
-        self.cycles += self.cost.nic_combine_cycles(a.byte_len());
+        let c = self.cost.nic_combine_cycles(a.byte_len());
+        self.cycles += c;
+        self.combine_cycles += c;
         self.compute.combine_into_rev(acc, a, self.op).expect("engine combine");
     }
 
@@ -294,6 +304,7 @@ pub(crate) mod testutil {
                 compute: &self.compute,
                 cost: &self.cost,
                 cycles: 0,
+                combine_cycles: 0,
                 instrs: 0,
                 stalls: 0,
             };
@@ -314,6 +325,7 @@ pub(crate) mod testutil {
                     compute: &self.compute,
                     cost: &self.cost,
                     cycles: 0,
+                    combine_cycles: 0,
                     instrs: 0,
                     stalls: 0,
                 };

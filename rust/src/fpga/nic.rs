@@ -139,18 +139,20 @@ impl Nic {
         }
     }
 
-    /// Reserve the output port for one frame: returns the moment the last
-    /// bit leaves the card.  `ready_at` is when the frame is ready to go
-    /// (engine pipeline exit / forwarding decision done); transmission
-    /// starts when both the frame and the port are ready.
-    pub fn tx_reserve(&mut self, port: PortNo, ready_at: SimTime, tx_ns: u64) -> SimTime {
+    /// Reserve the output port for one frame: returns when transmission
+    /// actually starts and when the last bit leaves the card.  `ready_at`
+    /// is when the frame is ready to go (engine pipeline exit /
+    /// forwarding decision done); transmission starts when both the
+    /// frame and the port are ready, so `start - ready_at` is the time
+    /// spent queued behind the port FIFO (switch/trunk contention).
+    pub fn tx_reserve(&mut self, port: PortNo, ready_at: SimTime, tx_ns: u64) -> (SimTime, SimTime) {
         let p = port as usize;
         assert!(p < self.ports_busy.len(), "port {port} out of range");
         let start = self.ports_busy[p].max(ready_at);
         let end = start + tx_ns;
         self.ports_busy[p] = end;
         self.frames_tx += 1;
-        end
+        (start, end)
     }
 
     pub fn note_bytes(&mut self, bytes: usize) {
@@ -182,12 +184,15 @@ mod tests {
     fn port_fifo_serializes() {
         let mut n = Nic::new(0, 4);
         // two frames ready at the same instant on one port queue up
-        let end1 = n.tx_reserve(1, SimTime::ns(100), 500);
-        let end2 = n.tx_reserve(1, SimTime::ns(100), 500);
+        let (start1, end1) = n.tx_reserve(1, SimTime::ns(100), 500);
+        let (start2, end2) = n.tx_reserve(1, SimTime::ns(100), 500);
+        assert_eq!(start1.as_ns(), 100);
         assert_eq!(end1.as_ns(), 600);
+        assert_eq!(start2.as_ns(), 600, "second frame queues behind the first");
         assert_eq!(end2.as_ns(), 1100);
         // a different port is independent
-        let end3 = n.tx_reserve(2, SimTime::ns(100), 500);
+        let (start3, end3) = n.tx_reserve(2, SimTime::ns(100), 500);
+        assert_eq!(start3.as_ns(), 100);
         assert_eq!(end3.as_ns(), 600);
         assert_eq!(n.frames_tx, 3);
     }
@@ -196,7 +201,8 @@ mod tests {
     fn idle_port_starts_at_ready() {
         let mut n = Nic::new(0, 4);
         n.tx_reserve(0, SimTime::ns(0), 100);
-        let end = n.tx_reserve(0, SimTime::ns(10_000), 100);
+        let (start, end) = n.tx_reserve(0, SimTime::ns(10_000), 100);
+        assert_eq!(start.as_ns(), 10_000, "idle port does not queue");
         assert_eq!(end.as_ns(), 10_100, "idle port does not delay");
     }
 

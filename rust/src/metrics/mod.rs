@@ -148,6 +148,237 @@ impl SampleStats {
     }
 }
 
+/// Streaming log-bucketed histogram over nanosecond values: bucket 0
+/// holds zeros, bucket i (i >= 1) holds `[2^(i-1), 2^i)`.  Fixed
+/// storage (no allocation after construction), deterministic, and
+/// mergeable by elementwise addition — the shape that lets sweep
+/// workers pool percentile-grade data without retaining samples the
+/// way [`SampleStats`] does.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LogHistogram {
+    buckets: [u64; 65],
+    count: u64,
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        LogHistogram { buckets: [0; 65], count: 0 }
+    }
+
+    fn bucket_of(ns: u64) -> usize {
+        if ns == 0 {
+            0
+        } else {
+            64 - ns.leading_zeros() as usize
+        }
+    }
+
+    /// Inclusive upper bound of bucket `i`'s value range.
+    fn upper_of(i: usize) -> u64 {
+        match i {
+            0 => 0,
+            64 => u64::MAX,
+            _ => (1u64 << i) - 1,
+        }
+    }
+
+    pub fn record(&mut self, ns: u64) {
+        self.buckets[Self::bucket_of(ns)] += 1;
+        self.count += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Elementwise merge — order-independent, so pooling across sweep
+    /// workers is deterministic regardless of completion order.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+    }
+
+    /// Nearest-rank percentile, resolved to the holding bucket's upper
+    /// bound (a conservative tail estimate; exact to within one power
+    /// of two).  0 when empty.
+    pub fn percentile_upper_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = (((q / 100.0) * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return Self::upper_of(i);
+            }
+        }
+        u64::MAX
+    }
+
+    /// Sparse JSON: `[[bucket_index, count], ...]` for occupied buckets.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.buckets
+                .iter()
+                .enumerate()
+                .filter(|(_, &c)| c > 0)
+                .map(|(i, &c)| Json::Arr(vec![Json::int(i as u64), Json::int(c)]))
+                .collect(),
+        )
+    }
+
+    /// Inverse of [`LogHistogram::to_json`].
+    pub fn from_json(j: &Json) -> Result<LogHistogram, String> {
+        let mut h = LogHistogram::new();
+        for pair in j.as_arr().ok_or("histogram: expected array")? {
+            let pair = pair.as_arr().ok_or("histogram: expected [index, count] pairs")?;
+            let (i, c) = match pair {
+                [i, c] => (
+                    i.as_u64().ok_or("histogram: bad bucket index")? as usize,
+                    c.as_u64().ok_or("histogram: bad bucket count")?,
+                ),
+                _ => return Err("histogram: expected [index, count] pairs".into()),
+            };
+            if i >= h.buckets.len() {
+                return Err(format!("histogram: bucket index {i} out of range"));
+            }
+            h.buckets[i] += c;
+            h.count += c;
+        }
+        Ok(h)
+    }
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram::new()
+    }
+}
+
+/// Where one run's measured latency went: every component in
+/// nanoseconds, summing *exactly* to `latency_ns` (the pooled
+/// host-observed latency).  Built by [`Attribution::finalize`], which
+/// clamps raw accumulators in a fixed priority order — concurrent work
+/// (two ranks' frames on the wire at once) legitimately accumulates
+/// more component time than wall-clock latency, so later components
+/// absorb the truncation and `host_ns` is the exact residual.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Attribution {
+    /// Frame serialization + link propagation.
+    pub wire_ns: u64,
+    /// Output-port / switch-trunk FIFO queueing.
+    pub switch_queue_ns: u64,
+    /// Handler activations parked waiting for an HPU.
+    pub hpu_queue_ns: u64,
+    /// NIC activation time excluding combine folds (pipeline, packet
+    /// handling, handler-VM instruction retirement).
+    pub handler_exec_ns: u64,
+    /// Combine-fold arithmetic (NIC datapath + software path compute).
+    pub compute_ns: u64,
+    /// Timeout/retransmit episodes (first send to eventual ack of
+    /// frames that needed at least one retransmit).
+    pub recovery_ns: u64,
+    /// Host-side residual: protocol-stack crossings, host compute gaps,
+    /// and everything concurrency hides from the other components.
+    pub host_ns: u64,
+    /// The measured total the components sum to (pooled host latency).
+    pub latency_ns: u64,
+}
+
+impl Attribution {
+    /// Fold raw accumulators into a breakdown whose components sum
+    /// exactly to `total_ns`.  Clamp priority: wire, switch-queue,
+    /// hpu-queue, handler-exec, compute, recovery; `host_ns` takes the
+    /// remainder.
+    pub fn finalize(
+        wire: u64,
+        switch_queue: u64,
+        hpu_queue: u64,
+        handler_exec: u64,
+        compute: u64,
+        recovery: u64,
+        total_ns: u64,
+    ) -> Attribution {
+        fn take(v: u64, rem: &mut u64) -> u64 {
+            let c = v.min(*rem);
+            *rem -= c;
+            c
+        }
+        let mut rem = total_ns;
+        let wire_ns = take(wire, &mut rem);
+        let switch_queue_ns = take(switch_queue, &mut rem);
+        let hpu_queue_ns = take(hpu_queue, &mut rem);
+        let handler_exec_ns = take(handler_exec, &mut rem);
+        let compute_ns = take(compute, &mut rem);
+        let recovery_ns = take(recovery, &mut rem);
+        Attribution {
+            wire_ns,
+            switch_queue_ns,
+            hpu_queue_ns,
+            handler_exec_ns,
+            compute_ns,
+            recovery_ns,
+            host_ns: rem,
+            latency_ns: total_ns,
+        }
+    }
+
+    /// Sum of the seven components — equals `latency_ns` by
+    /// construction; tests assert it anyway.
+    pub fn components_sum(&self) -> u64 {
+        self.wire_ns
+            + self.switch_queue_ns
+            + self.hpu_queue_ns
+            + self.handler_exec_ns
+            + self.compute_ns
+            + self.recovery_ns
+            + self.host_ns
+    }
+
+    /// Field names in artifact order (shared by emitters and docs).
+    pub const FIELDS: [&'static str; 8] = [
+        "wire_ns",
+        "switch_queue_ns",
+        "hpu_queue_ns",
+        "handler_exec_ns",
+        "compute_ns",
+        "recovery_ns",
+        "host_ns",
+        "latency_ns",
+    ];
+
+    /// Values in [`Attribution::FIELDS`] order.
+    pub fn values(&self) -> [u64; 8] {
+        [
+            self.wire_ns,
+            self.switch_queue_ns,
+            self.hpu_queue_ns,
+            self.handler_exec_ns,
+            self.compute_ns,
+            self.recovery_ns,
+            self.host_ns,
+            self.latency_ns,
+        ]
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            Self::FIELDS
+                .iter()
+                .zip(self.values())
+                .map(|(k, v)| (k.to_string(), Json::int(v)))
+                .collect(),
+        )
+    }
+}
+
 /// Jain's fairness index over per-tenant completion rates
 /// (iterations per unit latency: count_i / sum_latency_i).  1.0 = every
 /// tenant progresses at the same rate; 1/n = one tenant hogs everything.
@@ -215,6 +446,13 @@ pub struct RunMetrics {
     pub recovery_ns: u64,
     /// Total simulated duration.
     pub sim_ns: u64,
+    /// Latency attribution breakdown (populated only when the run had
+    /// `attribution = true`; `None` keeps artifact bytes identical to
+    /// pre-attribution runs).
+    pub attribution: Option<Attribution>,
+    /// Log-bucketed histogram of measured host latency samples
+    /// (populated only alongside `attribution`; empty otherwise).
+    pub host_hist: LogHistogram,
 }
 
 impl RunMetrics {
@@ -239,6 +477,8 @@ impl RunMetrics {
             timeouts_fired: 0,
             recovery_ns: 0,
             sim_ns: 0,
+            attribution: None,
+            host_hist: LogHistogram::new(),
         }
     }
 
@@ -281,7 +521,7 @@ impl RunMetrics {
         let u64_arr = |v: &[u64]| Json::Arr(v.iter().map(|&x| Json::int(x)).collect());
         let stats_arr =
             |v: &[LatencyStats]| Json::Arr(v.iter().map(|s| s.to_json()).collect());
-        Json::Obj(vec![
+        let mut fields: Vec<(String, Json)> = vec![
             ("host_overall".into(), self.host_overall().to_json()),
             ("nic_overall".into(), self.nic_overall().to_json()),
             ("total_frames".into(), Json::int(self.total_frames())),
@@ -297,6 +537,17 @@ impl RunMetrics {
             ("retransmits".into(), Json::int(self.retransmits)),
             ("timeouts_fired".into(), Json::int(self.timeouts_fired)),
             ("recovery_ns".into(), Json::int(self.recovery_ns)),
+        ];
+        // Attribution / histogram fields only exist when the run opted
+        // in — their absence keeps pre-attribution artifact bytes
+        // byte-identical.
+        if let Some(a) = &self.attribution {
+            fields.push(("attribution".into(), a.to_json()));
+        }
+        if !self.host_hist.is_empty() {
+            fields.push(("host_hist_log2".into(), self.host_hist.to_json()));
+        }
+        fields.extend([
             ("fairness".into(), Json::Num(self.fairness())),
             (
                 "tenant_p50_us".into(),
@@ -322,7 +573,8 @@ impl RunMetrics {
             ("frames_tx".into(), u64_arr(&self.frames_tx)),
             ("bytes_tx".into(), u64_arr(&self.bytes_tx)),
             ("frames_forwarded".into(), u64_arr(&self.frames_forwarded)),
-        ])
+        ]);
+        Json::Obj(fields)
     }
 }
 
@@ -545,5 +797,80 @@ mod tests {
             LatencyStats::from_json(j.get("host_overall").unwrap()).unwrap();
         assert_eq!(overall.count(), 2);
         assert_eq!(j.get("host_latency").unwrap().as_arr().unwrap().len(), 2);
+        // attribution off / hist empty: no such keys at all
+        assert!(j.get("attribution").is_none());
+        assert!(j.get("host_hist_log2").is_none());
+        m.attribution = Some(Attribution::finalize(10, 0, 0, 0, 5, 0, 300));
+        m.host_hist.record(100);
+        let j = m.to_json();
+        let a = j.get("attribution").unwrap();
+        assert_eq!(a.get("wire_ns").unwrap().as_u64(), Some(10));
+        assert_eq!(a.get("host_ns").unwrap().as_u64(), Some(285));
+        assert_eq!(a.get("latency_ns").unwrap().as_u64(), Some(300));
+        assert!(j.get("host_hist_log2").is_some());
+    }
+
+    #[test]
+    fn attribution_sums_exactly_and_clamps_in_order() {
+        // normal case: components fit, host takes the residual
+        let a = Attribution::finalize(100, 20, 30, 40, 50, 60, 1000);
+        assert_eq!(a.components_sum(), a.latency_ns);
+        assert_eq!(a.host_ns, 700);
+        // concurrency overflow: raw sums exceed total; later components
+        // are truncated in priority order, the identity still holds
+        let b = Attribution::finalize(600, 300, 200, 100, 50, 25, 1000);
+        assert_eq!(b.components_sum(), b.latency_ns);
+        assert_eq!(b.wire_ns, 600);
+        assert_eq!(b.switch_queue_ns, 300);
+        assert_eq!(b.hpu_queue_ns, 100, "third component absorbs the clamp");
+        assert_eq!(b.handler_exec_ns, 0);
+        assert_eq!(b.compute_ns, 0);
+        assert_eq!(b.recovery_ns, 0);
+        assert_eq!(b.host_ns, 0);
+        // degenerate totals
+        let c = Attribution::finalize(5, 5, 5, 5, 5, 5, 0);
+        assert_eq!(c.components_sum(), 0);
+        assert_eq!(c.latency_ns, 0);
+        // field/value arrays stay in lockstep
+        assert_eq!(Attribution::FIELDS.len(), a.values().len());
+        assert_eq!(a.values()[7], a.latency_ns);
+    }
+
+    #[test]
+    fn log_histogram_buckets_merge_and_percentiles() {
+        let mut h = LogHistogram::new();
+        assert_eq!(h.percentile_upper_ns(50.0), 0, "empty hist has no tail");
+        h.record(0); // bucket 0
+        h.record(1); // [1,2)
+        h.record(7); // [4,8)
+        h.record(8); // [8,16)
+        assert_eq!(h.count(), 4);
+        // p100 lands in the [8,16) bucket; upper bound is 15
+        assert_eq!(h.percentile_upper_ns(100.0), 15);
+        // p25 is the zero bucket
+        assert_eq!(h.percentile_upper_ns(25.0), 0);
+        // merge is elementwise and order-independent
+        let mut other = LogHistogram::new();
+        other.record(1u64 << 40);
+        let mut ab = h.clone();
+        ab.merge(&other);
+        let mut ba = other.clone();
+        ba.merge(&h);
+        assert_eq!(ab, ba);
+        assert_eq!(ab.count(), 5);
+        assert_eq!(ab.percentile_upper_ns(100.0), (1u64 << 41) - 1);
+        // extreme value saturates the top bucket
+        let mut top = LogHistogram::new();
+        top.record(u64::MAX);
+        assert_eq!(top.percentile_upper_ns(50.0), u64::MAX);
+        // JSON round-trip is sparse and exact
+        let j = ab.to_json();
+        let back = LogHistogram::from_json(&j).unwrap();
+        assert_eq!(back, ab);
+        assert!(LogHistogram::from_json(&Json::Arr(vec![Json::Arr(vec![
+            Json::int(99u64),
+            Json::int(1u64),
+        ])]))
+        .is_err());
     }
 }

@@ -658,6 +658,7 @@ mod tests {
             compute,
             cost,
             cycles: 0,
+            combine_cycles: 0,
             instrs: 0,
             stalls: 0,
         }

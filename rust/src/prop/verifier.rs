@@ -320,6 +320,7 @@ fn accepted_programs_never_trip_the_vm() {
                 compute: &compute,
                 cost: &cost,
                 cycles: 0,
+                combine_cycles: 0,
                 instrs: 0,
                 stalls: 0,
             };

@@ -61,3 +61,39 @@ pub enum EventKind {
     /// NIC retransmits or gives up.
     RetxTimer { rank: Rank, txn: u64 },
 }
+
+/// Number of [`EventKind`] variants ([`EventKind::index`] stays below
+/// this) — sizes the event-loop self-profile's fixed tables.
+pub const EVENT_KINDS: usize = 7;
+
+/// Display names by [`EventKind::index`] slot (profile table rows).
+pub const EVENT_KIND_NAMES: [&str; EVENT_KINDS] =
+    ["host_start", "host_recv", "nic_recv", "nic_host_req", "hpu_done", "bg_tick", "retx_timer"];
+
+impl EventKind {
+    /// Stable display name, in [`EventKind::index`] order.
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::HostStart { .. } => "host_start",
+            EventKind::HostRecv { .. } => "host_recv",
+            EventKind::NicRecv { .. } => "nic_recv",
+            EventKind::NicHostReq { .. } => "nic_host_req",
+            EventKind::HpuDone { .. } => "hpu_done",
+            EventKind::BgTick { .. } => "bg_tick",
+            EventKind::RetxTimer { .. } => "retx_timer",
+        }
+    }
+
+    /// Dense variant index in `0..EVENT_KINDS` (profile table slot).
+    pub fn index(&self) -> usize {
+        match self {
+            EventKind::HostStart { .. } => 0,
+            EventKind::HostRecv { .. } => 1,
+            EventKind::NicRecv { .. } => 2,
+            EventKind::NicHostReq { .. } => 3,
+            EventKind::HpuDone { .. } => 4,
+            EventKind::BgTick { .. } => 5,
+            EventKind::RetxTimer { .. } => 6,
+        }
+    }
+}

@@ -16,7 +16,7 @@ pub mod queue;
 pub mod rng;
 pub mod time;
 
-pub use event::{EventKind, HostMsg, OffloadRequest};
+pub use event::{EventKind, HostMsg, OffloadRequest, EVENT_KINDS, EVENT_KIND_NAMES};
 pub use queue::EventQueue;
 pub use rng::SplitMix64;
 pub use time::SimTime;

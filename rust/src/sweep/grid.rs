@@ -12,6 +12,7 @@
 //! topology = ["auto", "fattree"]      # wiring axis (see net::Topology)
 //! tenants  = [1, 2, 4]                # concurrent-communicator axis
 //! loss     = [0.0, 0.01, 0.05]        # per-hop loss-probability axis
+//! late_rank = ["none", 3]             # forced-late-rank axis ("none" = nobody late)
 //!
 //! [run]                               # scalar ExpConfig overrides
 //! iters = 300
@@ -21,7 +22,7 @@
 //! ```
 //!
 //! Expansion order is fixed — series outermost, then topology, then p,
-//! then tenants, then loss, then sizes innermost — and each job derives
+//! then tenants, then loss, then late_rank, then sizes innermost — and each job derives
 //! its own seed from (master seed, job index), so the job list is a pure
 //! function of the spec: the parallel runner can execute it with any
 //! `--jobs` and merge back into the same report bytes.
@@ -48,6 +49,8 @@ pub struct GridSpec {
     pub tenants: Vec<usize>,
     /// Per-hop loss probabilities (0.0 = the classic reliable fabric).
     pub losses: Vec<f64>,
+    /// Forced-late-rank scenarios (`None` = nobody is held back).
+    pub late_ranks: Vec<Option<usize>>,
     pub sizes: Vec<usize>,
 }
 
@@ -86,9 +89,13 @@ impl GridSpec {
             base.cost.set(k, v)?;
         }
         for (k, _) in doc.section("grid") {
-            if !matches!(k, "name" | "sizes" | "p" | "series" | "topology" | "tenants" | "loss") {
+            if !matches!(
+                k,
+                "name" | "sizes" | "p" | "series" | "topology" | "tenants" | "loss" | "late_rank"
+            ) {
                 return Err(format!(
-                    "unknown grid key: {k} (expected name/sizes/p/series/topology/tenants/loss)"
+                    "unknown grid key: {k} \
+                     (expected name/sizes/p/series/topology/tenants/loss/late_rank)"
                 ));
             }
         }
@@ -119,6 +126,20 @@ impl GridSpec {
                 .map(|v| v.parse::<f64>().map_err(|e| format!("grid.loss item {v:?}: {e}")))
                 .collect::<Result<Vec<f64>, String>>()?,
         };
+        let late_ranks = match doc.get_list("grid", "late_rank")? {
+            None => vec![base.late_rank],
+            Some(items) if items.is_empty() => return Err("grid.late_rank is empty".into()),
+            Some(items) => items
+                .iter()
+                .map(|v| match v.as_str() {
+                    "none" => Ok(None),
+                    _ => v
+                        .parse::<usize>()
+                        .map(Some)
+                        .map_err(|e| format!("grid.late_rank item {v:?}: {e}")),
+                })
+                .collect::<Result<Vec<Option<usize>>, String>>()?,
+        };
         let series = match doc.get_list("grid", "series")? {
             None => vec![Series::of_config(&base)],
             Some(items) if items.is_empty() => return Err("grid.series is empty".into()),
@@ -131,7 +152,8 @@ impl GridSpec {
             Some(items) => items,
         };
 
-        let spec = GridSpec { name, base, series, topologies, ps, tenants, losses, sizes };
+        let spec =
+            GridSpec { name, base, series, topologies, ps, tenants, losses, late_ranks, sizes };
         spec.expand()?; // validate every cell loudly at parse time
         Ok(spec)
     }
@@ -151,17 +173,18 @@ impl GridSpec {
             // figure bytes) are untouched by the tenants and loss axes
             tenants: vec![1],
             losses: vec![0.0],
+            late_ranks: vec![None],
             sizes: bench::OSU_SIZES.to_vec(),
         }
     }
 
     pub fn n_jobs(&self) -> usize {
         self.series.len() * self.topologies.len() * self.ps.len() * self.tenants.len()
-            * self.losses.len() * self.sizes.len()
+            * self.losses.len() * self.late_ranks.len() * self.sizes.len()
     }
 
     /// Expand to the ordered job list (series, then topology, then p,
-    /// then tenants, then loss, then sizes).  Every cell is validated; an invalid
+    /// then tenants, then loss, then late_rank, then sizes).  Every cell is validated; an invalid
     /// combination (e.g. rd on a non-power-of-two p, a hypercube cell at
     /// a p that isn't one) names the cell it came from.
     pub fn expand(&self) -> Result<Vec<Job>, String> {
@@ -171,24 +194,32 @@ impl GridSpec {
                 for &p in &self.ps {
                     for &tenants in &self.tenants {
                         for &loss in &self.losses {
-                            for &size in &self.sizes {
-                                let index = jobs.len();
-                                let mut cfg = self.base.clone();
-                                series.apply(&mut cfg);
-                                cfg.topology = topo.clone();
-                                cfg.p = p;
-                                cfg.tenants = tenants;
-                                cfg.loss = loss;
-                                cfg.msg_bytes = size;
-                                cfg.seed = derive_seed(self.base.seed, index as u64);
-                                cfg.validate().map_err(|e| {
-                                    format!(
-                                        "grid cell {index} ({} {topo} p={p} tenants={tenants} \
-                                         loss={loss} {size}B): {e}",
-                                        series.name()
-                                    )
-                                })?;
-                                jobs.push(Job { index, series, cfg });
+                            for &late_rank in &self.late_ranks {
+                                for &size in &self.sizes {
+                                    let index = jobs.len();
+                                    let mut cfg = self.base.clone();
+                                    series.apply(&mut cfg);
+                                    cfg.topology = topo.clone();
+                                    cfg.p = p;
+                                    cfg.tenants = tenants;
+                                    cfg.loss = loss;
+                                    cfg.late_rank = late_rank;
+                                    cfg.msg_bytes = size;
+                                    cfg.seed = derive_seed(self.base.seed, index as u64);
+                                    cfg.validate().map_err(|e| {
+                                        let late = match late_rank {
+                                            Some(r) => r.to_string(),
+                                            None => "none".into(),
+                                        };
+                                        format!(
+                                            "grid cell {index} ({} {topo} p={p} \
+                                             tenants={tenants} loss={loss} late_rank={late} \
+                                             {size}B): {e}",
+                                            series.name()
+                                        )
+                                    })?;
+                                    jobs.push(Job { index, series, cfg });
+                                }
                             }
                         }
                     }
@@ -419,12 +450,48 @@ mod tests {
     }
 
     #[test]
+    fn late_rank_axis_expands_between_loss_and_sizes() {
+        let spec = GridSpec::from_toml(
+            r#"
+            [grid]
+            sizes = [4, 64]
+            late_rank = ["none", 3]
+            series = ["NF_rd"]
+            [run]
+            iters = 5
+            "#,
+        )
+        .unwrap();
+        assert_eq!(spec.n_jobs(), 4);
+        let jobs = spec.expand().unwrap();
+        let key = |j: &Job| (j.cfg.late_rank, j.cfg.msg_bytes);
+        assert_eq!(key(&jobs[0]), (None, 4));
+        assert_eq!(key(&jobs[1]), (None, 64));
+        assert_eq!(key(&jobs[2]), (Some(3), 4));
+        assert_eq!(key(&jobs[3]), (Some(3), 64));
+        // default: the [run] scalar seeds a single-value axis
+        let spec = GridSpec::from_toml("[grid]\nsizes = [4]\n[run]\nlate_rank = 3").unwrap();
+        assert_eq!(spec.late_ranks, vec![Some(3)]);
+        // a non-numeric token other than "none" is loud
+        let err = GridSpec::from_toml("[grid]\nlate_rank = [\"maybe\"]").unwrap_err();
+        assert!(err.contains("late_rank"), "{err}");
+        // an all-"none" grid must not perturb job indices (seed stability)
+        let with = GridSpec::from_toml("[grid]\nsizes = [4, 64]\nlate_rank = [\"none\"]").unwrap();
+        let without = GridSpec::from_toml("[grid]\nsizes = [4, 64]").unwrap();
+        let seeds = |s: &GridSpec| -> Vec<u64> {
+            s.expand().unwrap().iter().map(|j| j.cfg.seed).collect()
+        };
+        assert_eq!(seeds(&with), seeds(&without), "late_rank=[\"none\"] is index-neutral");
+    }
+
+    #[test]
     fn figs_grid_matches_the_paper_evaluation() {
         let spec = GridSpec::figs(300);
         assert_eq!(spec.name, FIGS_GRID);
         assert_eq!(spec.ps, vec![8]);
         assert_eq!(spec.tenants, vec![1], "figs indices must not shift under the tenants axis");
         assert_eq!(spec.losses, vec![0.0], "figs runs on a lossless fabric");
+        assert_eq!(spec.late_ranks, vec![None], "figs indices must not shift under late_rank");
         assert_eq!(spec.sizes, crate::bench::OSU_SIZES);
         let names: Vec<String> = spec.series.iter().map(|s| s.name()).collect();
         assert_eq!(names, vec!["sw_seq", "sw_rd", "NF_seq", "NF_rd", "NF_binomial"]);

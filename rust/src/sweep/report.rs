@@ -12,7 +12,7 @@ use anyhow::{Context, Result};
 
 use crate::bench::Metric;
 use crate::metrics::json::Json;
-use crate::metrics::{us, LatencyStats, RunMetrics, Table};
+use crate::metrics::{us, Attribution, LatencyStats, RunMetrics, Table};
 use crate::util::fmt_bytes;
 
 use super::grid::{GridSpec, Job, FIGS_GRID};
@@ -29,6 +29,8 @@ pub struct JobResult {
     pub msg_bytes: usize,
     /// Per-hop loss probability of the cell (0.0 = reliable fabric).
     pub loss: f64,
+    /// Forced-late rank of the cell (`None` = nobody held back).
+    pub late_rank: Option<usize>,
     pub seed: u64,
     pub host: LatencyStats,
     pub nic: LatencyStats,
@@ -54,6 +56,10 @@ pub struct JobResult {
     pub retransmits: u64,
     pub timeouts_fired: u64,
     pub recovery_ns: u64,
+    /// Latency attribution breakdown (`None` unless the cell ran with
+    /// `attribution = true`; its components sum exactly to
+    /// `latency_ns`).
+    pub attribution: Option<Attribution>,
     pub sim_ns: u64,
 }
 
@@ -66,6 +72,7 @@ impl JobResult {
             p: job.cfg.p,
             msg_bytes: job.cfg.msg_bytes,
             loss: job.cfg.loss,
+            late_rank: job.cfg.late_rank,
             seed: job.cfg.seed,
             host: m.host_overall(),
             nic: m.nic_overall(),
@@ -91,18 +98,26 @@ impl JobResult {
             retransmits: m.retransmits,
             timeouts_fired: m.timeouts_fired,
             recovery_ns: m.recovery_ns,
+            attribution: m.attribution,
             sim_ns: m.sim_ns,
         }
     }
 
     pub fn to_json(&self) -> Json {
-        Json::Obj(vec![
+        let mut fields: Vec<(String, Json)> = vec![
             ("index".into(), Json::int(self.index as u64)),
             ("series".into(), Json::str(self.series.clone())),
             ("topology".into(), Json::str(self.topology.clone())),
             ("p".into(), Json::int(self.p as u64)),
             ("msg_bytes".into(), Json::int(self.msg_bytes as u64)),
             ("loss".into(), Json::Num(self.loss)),
+        ];
+        // emitted only when somebody is held back: absence keeps every
+        // pre-late_rank-axis artifact byte-identical
+        if let Some(r) = self.late_rank {
+            fields.push(("late_rank".into(), Json::int(r as u64)));
+        }
+        fields.extend([
             ("seed".into(), Json::int(self.seed)),
             ("host".into(), self.host.to_json()),
             ("nic".into(), self.nic.to_json()),
@@ -126,8 +141,16 @@ impl JobResult {
             ("retransmits".into(), Json::int(self.retransmits)),
             ("timeouts_fired".into(), Json::int(self.timeouts_fired)),
             ("recovery_ns".into(), Json::int(self.recovery_ns)),
-            ("sim_ns".into(), Json::int(self.sim_ns)),
-        ])
+        ]);
+        // breakdown object, only when the cell measured it: absence
+        // keeps attribution-off artifacts byte-identical, and nesting
+        // keeps the clamped wire_ns/... fields from colliding with the
+        // raw hpu_queue_ns / recovery_ns accumulators above
+        if let Some(a) = &self.attribution {
+            fields.push(("attribution".into(), a.to_json()));
+        }
+        fields.push(("sim_ns".into(), Json::int(self.sim_ns)));
+        Json::Obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<JobResult, String> {
@@ -151,6 +174,8 @@ impl JobResult {
             msg_bytes: get_u64("msg_bytes")? as usize,
             // absent in pre-fault artifacts: a reliable fabric
             loss: j.get("loss").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            // absent unless the cell forced a rank late
+            late_rank: j.get("late_rank").and_then(|v| v.as_u64()).map(|r| r as usize),
             seed: get_u64("seed")?,
             host: LatencyStats::from_json(j.get("host").ok_or("job: missing host")?)?,
             nic: LatencyStats::from_json(j.get("nic").ok_or("job: missing nic")?)?,
@@ -178,6 +203,27 @@ impl JobResult {
             retransmits: j.get("retransmits").and_then(|v| v.as_u64()).unwrap_or(0),
             timeouts_fired: j.get("timeouts_fired").and_then(|v| v.as_u64()).unwrap_or(0),
             recovery_ns: j.get("recovery_ns").and_then(|v| v.as_u64()).unwrap_or(0),
+            // absent in legacy / attribution-off artifacts
+            attribution: match j.get("attribution") {
+                None => None,
+                Some(a) => {
+                    let f = |k: &str| {
+                        a.get(k)
+                            .and_then(|v| v.as_u64())
+                            .ok_or_else(|| format!("job: missing attribution field {k:?}"))
+                    };
+                    Some(Attribution {
+                        wire_ns: f("wire_ns")?,
+                        switch_queue_ns: f("switch_queue_ns")?,
+                        hpu_queue_ns: f("hpu_queue_ns")?,
+                        handler_exec_ns: f("handler_exec_ns")?,
+                        compute_ns: f("compute_ns")?,
+                        recovery_ns: f("recovery_ns")?,
+                        host_ns: f("host_ns")?,
+                        latency_ns: f("latency_ns")?,
+                    })
+                }
+            },
             sim_ns: get_u64("sim_ns")?,
         })
     }
@@ -210,6 +256,7 @@ pub struct SweepReport {
     pub ps: Vec<usize>,
     pub tenants: Vec<usize>,
     pub losses: Vec<f64>,
+    pub late_ranks: Vec<Option<usize>>,
     pub sizes: Vec<usize>,
     pub jobs: Vec<JobResult>,
 }
@@ -223,6 +270,7 @@ impl SweepReport {
             ps: spec.ps.clone(),
             tenants: spec.tenants.clone(),
             losses: spec.losses.clone(),
+            late_ranks: spec.late_ranks.clone(),
             sizes: spec.sizes.clone(),
             jobs,
         }
@@ -230,7 +278,7 @@ impl SweepReport {
 
     /// The full report as one JSON document.
     pub fn to_json(&self) -> Json {
-        Json::Obj(vec![
+        let mut fields: Vec<(String, Json)> = vec![
             ("grid".into(), Json::str(self.name.clone())),
             (
                 "series".into(),
@@ -249,12 +297,31 @@ impl SweepReport {
                 "loss".into(),
                 Json::Arr(self.losses.iter().map(|&l| Json::Num(l)).collect()),
             ),
+        ];
+        // axis key only when the grid actually swept late ranks:
+        // absence keeps every pre-axis report byte-identical
+        if self.late_ranks != [None] {
+            fields.push((
+                "late_rank".into(),
+                Json::Arr(
+                    self.late_ranks
+                        .iter()
+                        .map(|lr| match lr {
+                            Some(r) => Json::int(*r as u64),
+                            None => Json::str("none"),
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        fields.extend([
             (
                 "sizes".into(),
                 Json::Arr(self.sizes.iter().map(|&s| Json::int(s as u64)).collect()),
             ),
             ("jobs".into(), Json::Arr(self.jobs.iter().map(|j| j.to_json()).collect())),
-        ])
+        ]);
+        Json::Obj(fields)
     }
 
     fn job_at(&self, series: &str, p: usize, size: usize) -> Option<&JobResult> {
@@ -290,6 +357,12 @@ impl SweepReport {
             return Err(format!(
                 "figure {stem} needs a single-loss grid, got {:?}",
                 self.losses
+            ));
+        }
+        if self.late_ranks.len() > 1 {
+            return Err(format!(
+                "figure {stem} needs a single-late_rank grid, got {:?}",
+                self.late_ranks
             ));
         }
         let series: Vec<&String> = self
@@ -367,8 +440,8 @@ impl SweepReport {
     /// Human summary: one row per job.
     pub fn summary_table(&self) -> Table {
         let mut t = Table::new(&[
-            "job", "series", "topology", "p", "msg_size", "loss", "host_avg_us", "host_min_us",
-            "nic_avg_us", "frames", "retx",
+            "job", "series", "topology", "p", "msg_size", "loss", "late", "host_avg_us",
+            "host_min_us", "nic_avg_us", "frames", "retx",
         ]);
         for j in &self.jobs {
             t.row(vec![
@@ -378,6 +451,10 @@ impl SweepReport {
                 j.p.to_string(),
                 fmt_bytes(j.msg_bytes),
                 format!("{}", j.loss),
+                match j.late_rank {
+                    Some(r) => r.to_string(),
+                    None => "-".into(),
+                },
                 us(j.host.avg_us()),
                 us(j.host.min_us()),
                 us(j.nic.avg_us()),
@@ -409,6 +486,7 @@ mod tests {
             p: 8,
             msg_bytes: size,
             loss: 0.0,
+            late_rank: None,
             seed: 1000 + index as u64,
             host: stats(&[base, base + 2_000]),
             nic: stats(&[base / 4]),
@@ -426,6 +504,7 @@ mod tests {
             retransmits: 0,
             timeouts_fired: 0,
             recovery_ns: 0,
+            attribution: None,
             sim_ns: 1_000_000,
         };
         SweepReport {
@@ -435,6 +514,7 @@ mod tests {
             ps: vec![8],
             tenants: vec![1],
             losses: vec![0.0],
+            late_ranks: vec![None],
             sizes: vec![4, 64],
             jobs: vec![
                 mk(0, "sw_seq", 4, 40_000),
@@ -502,6 +582,46 @@ mod tests {
         r.losses = vec![0.0, 0.05];
         let err = r.figure_json("fig4").unwrap_err();
         assert!(err.contains("single-loss"), "{err}");
+    }
+
+    #[test]
+    fn figure_json_rejects_multi_late_rank_grids() {
+        let mut r = tiny_report();
+        r.late_ranks = vec![None, Some(3)];
+        let err = r.figure_json("fig4").unwrap_err();
+        assert!(err.contains("single-late_rank"), "{err}");
+    }
+
+    #[test]
+    fn optional_schema_fields_stay_absent_until_used() {
+        let r = tiny_report();
+        // late_rank: off everywhere -> no job field, no axis key
+        let doc = r.to_json().pretty();
+        assert!(!doc.contains("late_rank"), "default report must stay byte-identical");
+        assert!(!doc.contains("\"attribution\""), "default report must stay byte-identical");
+
+        let mut r = r;
+        r.late_ranks = vec![None, Some(3)];
+        r.jobs[1].late_rank = Some(3);
+        r.jobs[1].attribution = Some(Attribution::finalize(10, 2, 0, 5, 3, 0, 300));
+        let doc = Json::parse(&r.to_json().pretty()).unwrap();
+        let axis = doc.get("late_rank").unwrap().as_arr().unwrap();
+        assert_eq!(axis[0].as_str(), Some("none"));
+        assert_eq!(axis[1].as_u64(), Some(3));
+        let jobs = doc.get("jobs").unwrap().as_arr().unwrap();
+        assert!(jobs[0].get("late_rank").is_none());
+        assert_eq!(jobs[1].get("late_rank").and_then(|v| v.as_u64()), Some(3));
+        let attr = jobs[1].get("attribution").unwrap();
+        assert_eq!(attr.get("wire_ns").and_then(|v| v.as_u64()), Some(10));
+        assert_eq!(attr.get("host_ns").and_then(|v| v.as_u64()), Some(280));
+        assert_eq!(attr.get("latency_ns").and_then(|v| v.as_u64()), Some(300));
+
+        // and the enriched job round-trips, including the breakdown
+        let text = r.jobs[1].to_json().pretty();
+        let back = JobResult::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.late_rank, Some(3));
+        assert_eq!(back.attribution, r.jobs[1].attribution);
+        assert_eq!(back.to_json().pretty(), text, "emission is stable");
     }
 
     #[test]

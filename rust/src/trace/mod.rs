@@ -1,21 +1,53 @@
-//! Event tracing: a ring buffer of simulation milestones and an ASCII
-//! timeline renderer for debugging scan schedules.
+//! Structured span tracing: a bounded recorder of typed simulation
+//! spans plus renderers — the ASCII timeline (`nfscan run --trace`),
+//! a raw event dump, and a Chrome-trace/Perfetto JSON export
+//! (`nfscan trace`).
 //!
-//! Used by `nfscan run --trace true` style debugging and by tests that
-//! assert event ordering (e.g. "the ACK precedes the result delivery").
+//! Every record is a fixed-size `Copy` value ([`SpanData`]), so the
+//! recorder never allocates per event: the backing ring is sized once
+//! at `Trace::new` and at capacity a push recycles the slot the
+//! oldest event vacates.  A disabled trace ([`Trace::disabled`])
+//! rejects records before touching any payload — the hot path pays
+//! one branch, zero allocations, and the event schedule is untouched.
 
+use crate::metrics::json::Json;
 use crate::net::Rank;
 use crate::sim::SimTime;
 
+/// Span/instant taxonomy.  The first seven kinds are the original
+/// milestone glyphs; the rest arrived with latency attribution and
+/// cover where time actually goes between a host call and its
+/// completion.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum TraceKind {
+    /// Host process issues the collective (instant).
     HostCall,
+    /// Offload request arrived at the local NIC (instant).
     Offload,
+    /// NIC put a frame on the wire (span: serialization + propagation).
     NicSend,
+    /// Frame fully arrived at a NIC port (instant).
     NicRecvd,
+    /// End-to-end reliability ack consumed (instant).
     NicAck,
+    /// NIC releases the Result packet up to the host (instant).
     NicResult,
+    /// Host observed the completed collective (instant).
     HostComplete,
+    /// Frame waited for an output port / switch trunk FIFO (span).
+    SwitchQueue,
+    /// Handler activation waited for a free HPU (span).
+    HpuQueue,
+    /// Handler/engine activation executed on the NIC (span).
+    HandlerExec,
+    /// One combine fold inside an activation (instant; `a` = cycles).
+    Combine,
+    /// Retransmit timer fired for a pending transaction (instant).
+    Timeout,
+    /// NIC retransmitted a timed-out frame (instant; `a` = retry no.).
+    Retransmit,
+    /// The fault plan dropped a frame on the wire (instant).
+    Dropped,
 }
 
 impl TraceKind {
@@ -28,16 +60,88 @@ impl TraceKind {
             TraceKind::NicAck => 'a',
             TraceKind::NicResult => 'R',
             TraceKind::HostComplete => '*',
+            TraceKind::SwitchQueue => 'q',
+            TraceKind::HpuQueue => 'h',
+            TraceKind::HandlerExec => 'x',
+            TraceKind::Combine => '+',
+            TraceKind::Timeout => 'T',
+            TraceKind::Retransmit => '!',
+            TraceKind::Dropped => 'D',
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceKind::HostCall => "host_call",
+            TraceKind::Offload => "offload",
+            TraceKind::NicSend => "nic_send",
+            TraceKind::NicRecvd => "nic_recv",
+            TraceKind::NicAck => "nic_ack",
+            TraceKind::NicResult => "nic_result",
+            TraceKind::HostComplete => "host_complete",
+            TraceKind::SwitchQueue => "switch_queue",
+            TraceKind::HpuQueue => "hpu_queue",
+            TraceKind::HandlerExec => "handler_exec",
+            TraceKind::Combine => "combine",
+            TraceKind::Timeout => "timeout",
+            TraceKind::Retransmit => "retransmit",
+            TraceKind::Dropped => "dropped",
         }
     }
 }
 
-#[derive(Clone, Debug)]
+/// Fixed-size, `Copy` payload of one record.  `end == at` marks an
+/// instant; `end > at` a span.  `txn` links records of one reliable
+/// transaction across ranks (0 = none); `a` is kind-specific (peer
+/// rank for sends, cycles for combines, retry ordinal for
+/// retransmits).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpanData {
+    pub end: SimTime,
+    pub txn: u64,
+    pub epoch: u16,
+    pub a: u64,
+}
+
+impl SpanData {
+    /// A zero-duration record at the record's own timestamp.
+    pub fn instant(epoch: u16) -> SpanData {
+        SpanData { end: SimTime::ZERO, txn: 0, epoch, a: 0 }
+    }
+
+    /// A record spanning from its timestamp to `end`.
+    pub fn span(end: SimTime, epoch: u16) -> SpanData {
+        SpanData { end, txn: 0, epoch, a: 0 }
+    }
+
+    pub fn txn(mut self, txn: u64) -> SpanData {
+        self.txn = txn;
+        self
+    }
+
+    pub fn arg(mut self, a: u64) -> SpanData {
+        self.a = a;
+        self
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
 pub struct TraceEvent {
     pub at: SimTime,
     pub rank: Rank,
     pub kind: TraceKind,
-    pub detail: String,
+    pub data: SpanData,
+}
+
+impl TraceEvent {
+    /// Span end (== `at` for instants).
+    pub fn end(&self) -> SimTime {
+        if self.data.end.as_ns() > self.at.as_ns() {
+            self.data.end
+        } else {
+            self.at
+        }
+    }
 }
 
 /// Bounded trace recorder (keeps the most recent `cap` events).
@@ -50,21 +154,27 @@ pub struct Trace {
 
 impl Trace {
     pub fn new(cap: usize, enabled: bool) -> Trace {
-        Trace { events: std::collections::VecDeque::new(), cap, enabled }
+        // the ring is sized here, once: at capacity a record recycles
+        // the popped slot, so steady-state recording never allocates
+        Trace { events: std::collections::VecDeque::with_capacity(cap), cap, enabled }
     }
 
     pub fn disabled() -> Trace {
         Trace::new(0, false)
     }
 
-    pub fn record(&mut self, at: SimTime, rank: Rank, kind: TraceKind, detail: impl Into<String>) {
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn record(&mut self, at: SimTime, rank: Rank, kind: TraceKind, data: SpanData) {
         if !self.enabled {
             return;
         }
         if self.events.len() == self.cap {
             self.events.pop_front();
         }
-        self.events.push_back(TraceEvent { at, rank, kind, detail: detail.into() });
+        self.events.push_back(TraceEvent { at, rank, kind, data });
     }
 
     pub fn len(&self) -> usize {
@@ -109,13 +219,158 @@ impl Trace {
         for (r, row) in grid.iter().enumerate() {
             out.push_str(&format!("r{r:<2}|{}|\n", row.iter().collect::<String>()));
         }
-        out.push_str("    C=call O=offload >=send <=recv a=ack R=result *=complete\n");
+        out.push_str(
+            "    C=call O=offload >=send <=recv a=ack R=result *=complete\n    \
+             q=switch-queue h=hpu-queue x=exec +=combine T=timeout !=retx D=drop\n",
+        );
+        out
+    }
+
+    /// Raw event listing, newest-truncated to `limit` lines (0 = all).
+    pub fn dump(&self, limit: usize) -> String {
+        let total = self.events.len();
+        let skip = if limit > 0 && total > limit { total - limit } else { 0 };
+        let mut out = format!("{total} events (showing {})\n", total - skip);
+        out.push_str("        at_ns       end_ns rank kind            txn epoch     a\n");
+        for e in self.events.iter().skip(skip) {
+            out.push_str(&format!(
+                "{:>13} {:>12} {:>4} {:<13} {:>6} {:>5} {:>5}\n",
+                e.at.as_ns(),
+                e.end().as_ns(),
+                e.rank,
+                e.kind.name(),
+                e.data.txn,
+                e.data.epoch,
+                e.data.a,
+            ));
+        }
         out
     }
 
     /// Ordering assertion helper: first index of each kind for a rank.
     pub fn first_of(&self, rank: Rank, kind: TraceKind) -> Option<SimTime> {
         self.events.iter().find(|e| e.rank == rank && e.kind == kind).map(|e| e.at)
+    }
+
+    /// Chrome-trace ("Trace Event Format") JSON, loadable in Perfetto
+    /// or chrome://tracing.  One process per node (ranks then
+    /// switches), three threads per process (host / nic / hpu), `X`
+    /// duration events for spans, `i` instants, and `s`/`t`/`f` flow
+    /// arrows stitching every record of one reliable transaction id —
+    /// so a retransmitted frame reads as one arrow chain across drops.
+    pub fn chrome_trace(&self, p: usize) -> Json {
+        fn tid_of(kind: TraceKind) -> (i128, &'static str) {
+            match kind {
+                TraceKind::HostCall | TraceKind::HostComplete => (0, "host"),
+                TraceKind::HpuQueue | TraceKind::HandlerExec | TraceKind::Combine => (2, "hpu"),
+                _ => (1, "nic"),
+            }
+        }
+        let mut events: Vec<Json> = Vec::new();
+        // metadata: name every process/thread that has at least one event
+        let mut seen: Vec<(Rank, [bool; 3])> = Vec::new();
+        for e in &self.events {
+            let (tid, _) = tid_of(e.kind);
+            match seen.iter_mut().find(|(r, _)| *r == e.rank) {
+                Some((_, tids)) => tids[tid as usize] = true,
+                None => {
+                    let mut tids = [false; 3];
+                    tids[tid as usize] = true;
+                    seen.push((e.rank, tids));
+                }
+            }
+        }
+        seen.sort_by_key(|(r, _)| *r);
+        for (r, tids) in &seen {
+            let pname =
+                if *r < p { format!("rank {r}") } else { format!("switch {}", *r - p) };
+            events.push(Json::Obj(vec![
+                ("ph".into(), Json::str("M")),
+                ("name".into(), Json::str("process_name")),
+                ("pid".into(), Json::int(*r as u64)),
+                ("args".into(), Json::Obj(vec![("name".into(), Json::str(pname))])),
+            ]));
+            for (tid, tname) in [(0usize, "host"), (1, "nic"), (2, "hpu")] {
+                if tids[tid] {
+                    events.push(Json::Obj(vec![
+                        ("ph".into(), Json::str("M")),
+                        ("name".into(), Json::str("thread_name")),
+                        ("pid".into(), Json::int(*r as u64)),
+                        ("tid".into(), Json::int(tid as u64)),
+                        ("args".into(), Json::Obj(vec![("name".into(), Json::str(tname))])),
+                    ]));
+                }
+            }
+        }
+        // flow endpoints: first and last record index per transaction
+        let mut txn_span: Vec<(u64, usize, usize)> = Vec::new(); // (txn, first, last)
+        for (i, e) in self.events.iter().enumerate() {
+            if e.data.txn != 0 {
+                match txn_span.iter_mut().find(|(t, _, _)| *t == e.data.txn) {
+                    Some((_, _, last)) => *last = i,
+                    None => txn_span.push((e.data.txn, i, i)),
+                }
+            }
+        }
+        for (i, e) in self.events.iter().enumerate() {
+            let (tid, _) = tid_of(e.kind);
+            let ts = e.at.as_ns() as f64 / 1000.0;
+            let dur_ns = e.end() - e.at;
+            let mut fields: Vec<(String, Json)> = vec![
+                ("name".into(), Json::str(e.kind.name())),
+                ("ph".into(), Json::str(if dur_ns > 0 { "X" } else { "i" })),
+                ("ts".into(), Json::Num(ts)),
+                ("pid".into(), Json::int(e.rank as u64)),
+                ("tid".into(), Json::int(tid)),
+            ];
+            if dur_ns > 0 {
+                fields.push(("dur".into(), Json::Num(dur_ns as f64 / 1000.0)));
+            } else {
+                fields.push(("s".into(), Json::str("t")));
+            }
+            fields.push((
+                "args".into(),
+                Json::Obj(vec![
+                    ("epoch".into(), Json::int(e.data.epoch as u64)),
+                    ("txn".into(), Json::int(e.data.txn)),
+                    ("a".into(), Json::int(e.data.a)),
+                ]),
+            ));
+            events.push(Json::Obj(fields));
+            // flow arrow through this record's transaction
+            if e.data.txn != 0 {
+                let &(_, first, last) = txn_span
+                    .iter()
+                    .find(|(t, _, _)| *t == e.data.txn)
+                    .expect("txn indexed above");
+                if first != last {
+                    let ph = if i == first {
+                        "s"
+                    } else if i == last {
+                        "f"
+                    } else {
+                        "t"
+                    };
+                    let mut flow: Vec<(String, Json)> = vec![
+                        ("name".into(), Json::str("txn")),
+                        ("cat".into(), Json::str("txn")),
+                        ("ph".into(), Json::str(ph)),
+                        ("id".into(), Json::int(e.data.txn)),
+                        ("ts".into(), Json::Num(ts)),
+                        ("pid".into(), Json::int(e.rank as u64)),
+                        ("tid".into(), Json::int(tid)),
+                    ];
+                    if ph == "f" {
+                        flow.push(("bp".into(), Json::str("e")));
+                    }
+                    events.push(Json::Obj(flow));
+                }
+            }
+        }
+        Json::Obj(vec![
+            ("displayTimeUnit".into(), Json::str("ns")),
+            ("traceEvents".into(), Json::Arr(events)),
+        ])
     }
 }
 
@@ -125,10 +380,10 @@ mod tests {
 
     fn sample() -> Trace {
         let mut t = Trace::new(16, true);
-        t.record(SimTime::us(1), 0, TraceKind::HostCall, "call");
-        t.record(SimTime::us(2), 0, TraceKind::Offload, "offload");
-        t.record(SimTime::us(3), 1, TraceKind::NicRecvd, "data");
-        t.record(SimTime::us(4), 0, TraceKind::HostComplete, "done");
+        t.record(SimTime::us(1), 0, TraceKind::HostCall, SpanData::instant(0));
+        t.record(SimTime::us(2), 0, TraceKind::Offload, SpanData::instant(0));
+        t.record(SimTime::us(3), 1, TraceKind::NicRecvd, SpanData::instant(0).txn(7));
+        t.record(SimTime::us(4), 0, TraceKind::HostComplete, SpanData::instant(0));
         t
     }
 
@@ -144,7 +399,7 @@ mod tests {
     fn ring_buffer_caps() {
         let mut t = Trace::new(2, true);
         for i in 0..5 {
-            t.record(SimTime::us(i), 0, TraceKind::NicSend, "");
+            t.record(SimTime::us(i), 0, TraceKind::NicSend, SpanData::instant(0));
         }
         assert_eq!(t.len(), 2);
         assert_eq!(t.iter().next().unwrap().at, SimTime::us(3));
@@ -153,7 +408,7 @@ mod tests {
     #[test]
     fn disabled_records_nothing() {
         let mut t = Trace::disabled();
-        t.record(SimTime::us(1), 0, TraceKind::HostCall, "");
+        t.record(SimTime::us(1), 0, TraceKind::HostCall, SpanData::instant(0));
         assert!(t.is_empty());
     }
 
@@ -165,5 +420,50 @@ mod tests {
         assert!(s.contains('C'));
         assert!(s.contains('*'));
         assert_eq!(Trace::disabled().timeline(2, 10), "(empty trace)");
+    }
+
+    #[test]
+    fn spans_know_their_duration() {
+        let mut t = Trace::new(4, true);
+        t.record(SimTime::ns(100), 0, TraceKind::NicSend, SpanData::span(SimTime::ns(600), 1));
+        t.record(SimTime::ns(700), 0, TraceKind::NicAck, SpanData::instant(1));
+        let evs: Vec<_> = t.iter().collect();
+        assert_eq!(evs[0].end() - evs[0].at, 500);
+        assert_eq!(evs[1].end(), evs[1].at);
+    }
+
+    #[test]
+    fn dump_lists_and_truncates() {
+        let t = sample();
+        let all = t.dump(0);
+        assert!(all.contains("host_call"));
+        assert!(all.contains("host_complete"));
+        let last2 = t.dump(2);
+        assert!(!last2.contains("host_call"));
+        assert!(last2.contains("host_complete"));
+        assert!(last2.starts_with("4 events (showing 2)"));
+    }
+
+    #[test]
+    fn chrome_trace_structure_and_flows() {
+        let mut t = Trace::new(16, true);
+        // one txn seen at three points: send, drop, retransmit
+        t.record(SimTime::ns(0), 0, TraceKind::NicSend, SpanData::span(SimTime::ns(80), 0).txn(9));
+        t.record(SimTime::ns(40), 1, TraceKind::Dropped, SpanData::instant(0).txn(9));
+        t.record(SimTime::ns(500), 0, TraceKind::Retransmit, SpanData::instant(0).txn(9).arg(1));
+        let doc = t.chrome_trace(2);
+        assert_eq!(doc.get("displayTimeUnit").unwrap().as_str(), Some("ns"));
+        let evs = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let phs = |ph: &str| {
+            evs.iter().filter(|e| e.get("ph").unwrap().as_str() == Some(ph)).count()
+        };
+        assert_eq!(phs("X"), 1, "one duration span");
+        assert_eq!(phs("i"), 2, "two instants");
+        assert_eq!(phs("s"), 1, "flow start");
+        assert_eq!(phs("t"), 1, "flow step");
+        assert_eq!(phs("f"), 1, "flow finish");
+        // the export round-trips through our own parser byte-stably
+        let text = doc.pretty();
+        assert_eq!(Json::parse(&text).unwrap().pretty(), text);
     }
 }

@@ -115,6 +115,51 @@ fn hot_datapath_steady_state_allocations() {
         );
     }
 
+    // ---- a disabled trace is zero-cost: record() rejects before
+    // touching the ring, so the instrumented hot path never allocates
+    {
+        use nfscan::sim::SimTime;
+        use nfscan::trace::{SpanData, Trace, TraceKind};
+        let mut t = Trace::disabled();
+        let mut i = 0u64;
+        let n = allocs_of(16, 1000, || {
+            i += 1;
+            t.record(SimTime::ns(i), 0, TraceKind::NicSend, SpanData::instant(0).txn(i));
+            std::hint::black_box(&t);
+        });
+        assert_eq!(n, 0, "disabled trace recording allocated {n} times in 1000 records");
+        assert!(t.is_empty());
+    }
+
+    // ---- an enabled trace at capacity recycles the oldest slot:
+    // steady-state recording is allocation-free too
+    {
+        use nfscan::sim::SimTime;
+        use nfscan::trace::{SpanData, Trace, TraceKind};
+        let mut t = Trace::new(64, true);
+        let mut i = 0u64;
+        let n = allocs_of(128, 1000, || {
+            i += 1;
+            t.record(SimTime::ns(i), 0, TraceKind::NicSend, SpanData::instant(0).txn(i));
+            std::hint::black_box(&t);
+        });
+        assert_eq!(n, 0, "at-capacity trace recording allocated {n} times in 1000 records");
+        assert_eq!(t.len(), 64);
+    }
+
+    // ---- the attribution histogram is fixed-storage by construction
+    {
+        use nfscan::metrics::LogHistogram;
+        let mut h = LogHistogram::new();
+        let mut i = 0u64;
+        let n = allocs_of(16, 1000, || {
+            i += 1;
+            h.record(i * 37);
+            std::hint::black_box(&h);
+        });
+        assert_eq!(n, 0, "histogram recording allocated {n} times in 1000 records");
+    }
+
     // ---- the arena pool really is recycling (hits grew during the runs)
     let (hits, _misses) = nfscan::data::arena::pool_stats();
     assert!(hits > 0, "arena pool never served a recycled buffer");

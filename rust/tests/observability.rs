@@ -1,0 +1,125 @@
+//! Integration: the observability layer end to end.  The Perfetto
+//! export round-trips through the crate's own JSON parser and its flow
+//! arrows follow a retransmitted frame across the drop; turning
+//! latency attribution on measures where time went without perturbing
+//! a single latency sample or event.
+
+use std::rc::Rc;
+
+use nfscan::cluster::Cluster;
+use nfscan::config::ExpConfig;
+use nfscan::metrics::json::Json;
+use nfscan::runtime::NativeEngine;
+use nfscan::trace::TraceKind;
+
+/// Default offloaded run with a deterministic first-frame drop on the
+/// 0->1 link, so exactly which txn retransmits is knowable.
+fn lossy_cfg() -> ExpConfig {
+    let mut cfg = ExpConfig::default();
+    cfg.p = 4;
+    cfg.iters = 3;
+    cfg.warmup = 1;
+    cfg.set_run("drop", "0->1:1").unwrap();
+    cfg.set_run("max_retries", "8").unwrap();
+    cfg.validate().unwrap();
+    cfg
+}
+
+#[test]
+fn perfetto_export_follows_a_retransmitted_frame() {
+    let cfg = lossy_cfg();
+    let mut cluster = Cluster::new(cfg.clone(), Rc::new(NativeEngine::new()));
+    cluster.enable_trace(65_536);
+    let m = cluster.run().unwrap();
+    assert!(m.retransmits > 0, "the drop schedule must force a retransmit");
+
+    // the dropped frame's txn shows up again at its retransmit
+    let dropped_txn = cluster
+        .trace
+        .iter()
+        .find(|e| e.kind == TraceKind::Dropped)
+        .expect("the dropped frame is recorded")
+        .data
+        .txn;
+    assert_ne!(dropped_txn, 0, "reliable frames carry a txn id");
+    assert!(cluster
+        .trace
+        .iter()
+        .any(|e| e.kind == TraceKind::Retransmit && e.data.txn == dropped_txn));
+
+    // the export is valid JSON by our own strict parser, byte-stably
+    let doc = cluster.trace.chrome_trace(cfg.p);
+    let text = doc.pretty();
+    let back = Json::parse(&text).unwrap();
+    assert_eq!(back.pretty(), text, "chrome-trace JSON round-trips");
+
+    // flow arrows: the dropped txn reads as one start -> ... -> finish
+    // chain (the drop and the retransmit are interior steps)
+    let events = back.get("traceEvents").unwrap().as_arr().unwrap();
+    let flows = |ph: &str| {
+        events
+            .iter()
+            .filter(|e| {
+                e.get("ph").and_then(|v| v.as_str()) == Some(ph)
+                    && e.get("id").and_then(|v| v.as_u64()) == Some(dropped_txn)
+            })
+            .count()
+    };
+    assert_eq!(flows("s"), 1, "one flow start for the dropped txn");
+    assert!(flows("t") >= 1, "flow steps through the drop");
+    assert_eq!(flows("f"), 1, "one flow finish for the dropped txn");
+    let named = |name: &str| {
+        events.iter().any(|e| {
+            e.get("name").and_then(|v| v.as_str()) == Some(name)
+                && e.get("args").and_then(|a| a.get("txn")).and_then(|v| v.as_u64())
+                    == Some(dropped_txn)
+        })
+    };
+    assert!(named("dropped"), "the drop instant is on the chain");
+    assert!(named("retransmit"), "the retransmit instant is on the chain");
+}
+
+#[test]
+fn attribution_measures_without_perturbing_the_run() {
+    let mut base = ExpConfig::default();
+    base.p = 4;
+    base.iters = 5;
+    base.warmup = 1;
+    base.validate().unwrap();
+
+    let run = |attribution: bool| {
+        let mut cfg = base.clone();
+        cfg.attribution = attribution;
+        let mut cluster = Cluster::new(cfg, Rc::new(NativeEngine::new()));
+        cluster.run().unwrap()
+    };
+    let off = run(false);
+    let on = run(true);
+
+    // measuring must not move anything: same samples, same schedule
+    assert_eq!(off.host_overall(), on.host_overall(), "latency samples identical");
+    assert_eq!(off.sim_ns, on.sim_ns, "event schedule identical");
+    assert_eq!(off.total_frames(), on.total_frames());
+    assert!(off.attribution.is_none(), "off by default");
+    assert!(off.host_hist.is_empty(), "no histogram unless asked");
+
+    let a = on.attribution.expect("attribution measured");
+    assert_eq!(a.components_sum(), a.latency_ns, "components sum exactly to the total");
+    assert!(a.wire_ns > 0, "frames crossed wires");
+    assert_eq!(
+        on.host_hist.count(),
+        on.host_overall().count(),
+        "one histogram sample per measured completion"
+    );
+}
+
+#[test]
+fn attribution_sums_exactly_on_a_lossy_run() {
+    let mut cfg = lossy_cfg();
+    cfg.attribution = true;
+    let mut cluster = Cluster::new(cfg, Rc::new(NativeEngine::new()));
+    let m = cluster.run().unwrap();
+    assert!(m.retransmits > 0);
+    let a = m.attribution.unwrap();
+    assert_eq!(a.components_sum(), a.latency_ns, "sum identity survives recovery");
+}

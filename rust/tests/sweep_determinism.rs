@@ -102,6 +102,48 @@ fn figs_grid_emits_all_four_figures() {
 }
 
 #[test]
+fn default_artifacts_carry_no_observability_fields() {
+    // the observability schema additions are conditional: a grid that
+    // never asked for attribution or a late_rank axis must emit
+    // artifacts with none of the new keys (pre-PR byte compatibility)
+    let spec = GridSpec::from_toml(GRID).unwrap();
+    let text = run_grid(&spec, 2, "artifacts").unwrap().to_json().pretty();
+    for key in ["attribution", "wire_ns", "late_rank", "host_hist"] {
+        assert!(!text.contains(key), "default artifacts must not mention {key:?}");
+    }
+}
+
+#[test]
+fn attribution_artifacts_identical_for_jobs_1_and_4() {
+    // attribution pools per-rank accumulators across the run; the
+    // breakdown must still be a pure function of the cell, not of
+    // worker scheduling
+    let spec = GridSpec::from_toml(&GRID.replace("seed = 99", "seed = 99\nattribution = true"))
+        .unwrap();
+    let a = run_grid(&spec, 1, "artifacts").unwrap().to_json().pretty();
+    let b = run_grid(&spec, 4, "artifacts").unwrap().to_json().pretty();
+    assert_eq!(a, b, "attribution-on artifacts differ between --jobs 1 and --jobs 4");
+    assert!(a.contains("wire_ns"), "every cell carries the breakdown");
+
+    // and each job's components sum exactly to its latency_ns
+    let doc = Json::parse(&a).unwrap();
+    let jobs = doc.get("jobs").unwrap().as_arr().unwrap();
+    assert!(!jobs.is_empty());
+    for j in jobs {
+        let attr = j.get("attribution").unwrap();
+        let f = |k: &str| attr.get(k).unwrap().as_u64().unwrap();
+        let sum = f("wire_ns")
+            + f("switch_queue_ns")
+            + f("hpu_queue_ns")
+            + f("handler_exec_ns")
+            + f("compute_ns")
+            + f("recovery_ns")
+            + f("host_ns");
+        assert_eq!(sum, f("latency_ns"), "job {:?}", j.get("index"));
+    }
+}
+
+#[test]
 fn reseeded_master_changes_artifacts() {
     // the derived-seed scheme must actually feed the simulations: a
     // different master seed must produce different latency samples
