@@ -21,7 +21,10 @@
 //! - `event_queue_hold256` — calendar-queue hold-model pop+push;
 //! - `fault_gate_loss0` — the per-hop fault-plan gate a loss-free run
 //!   pays (one `lossy()` + `degrades()` check on a quiet plan; the
-//!   hostile-network tentpole's ~zero-overhead claim).
+//!   hostile-network tentpole's ~zero-overhead claim);
+//! - `crash_gate_quiet` — the per-event fail-stop gate a crash-free run
+//!   pays (one `has_crashes()` + `rank_crash_epoch()` check on a quiet
+//!   plan; the fault-tolerance stack's ~zero-overhead claim).
 
 use std::time::Instant;
 
@@ -174,6 +177,18 @@ fn bench_fault_gate(reps: usize, counting: bool) -> (f64, Option<f64>) {
     })
 }
 
+fn bench_crash_gate(reps: usize, counting: bool) -> (f64, Option<f64>) {
+    // the per-event cost a crash-free run pays for the fail-stop layer:
+    // the has_crashes()/rank_crash_epoch() gate host-start and nic-recv
+    // pay before skipping liveness bookkeeping entirely.  Expected ~0
+    // ns/op and exactly 0 allocs/op.
+    let plan = FaultPlan::quiet(0xF00D);
+    measure(1024, reps, counting, || {
+        let p = std::hint::black_box(&plan);
+        std::hint::black_box(p.has_crashes() || p.rank_crash_epoch(3).is_some());
+    })
+}
+
 /// Run the whole suite.  `quick` shrinks rep counts (CI smoke / tests).
 pub fn run_all(quick: bool) -> Vec<BenchResult> {
     let counting = cnt::counting_installed();
@@ -190,6 +205,7 @@ pub fn run_all(quick: bool) -> Vec<BenchResult> {
     push("handler_dispatch", bench_handler_dispatch(r(100_000, 1_000), counting));
     push("event_queue_hold256", bench_event_queue(r(400_000, 4_000), counting));
     push("fault_gate_loss0", bench_fault_gate(r(400_000, 4_000), counting));
+    push("crash_gate_quiet", bench_crash_gate(r(400_000, 4_000), counting));
     out
 }
 
@@ -288,12 +304,12 @@ mod tests {
     #[test]
     fn quick_suite_runs_and_serializes() {
         let results = run_all(true);
-        assert_eq!(results.len(), 8);
+        assert_eq!(results.len(), 9);
         assert!(results.iter().all(|r| r.ns_per_op > 0.0));
         let doc = to_json(&results);
         let parsed = Json::parse(&doc.pretty()).unwrap();
         assert_eq!(parsed.get("schema").unwrap().as_str(), Some("nfscan-bench/1"));
-        assert_eq!(parsed.get("entries").unwrap().as_arr().unwrap().len(), 8);
+        assert_eq!(parsed.get("entries").unwrap().as_arr().unwrap().len(), 9);
         // lib tests install the counting allocator: allocs must be
         // *counted* (the zero-alloc value assertion lives in
         // tests/alloc_free.rs, whose binary has no concurrent tests

@@ -118,10 +118,19 @@ COMMANDS
                          (fig4.json..fig7.json); artifact bytes are
                          identical for any --jobs.  --topology a,b /
                          --sizes n,m / --series a,b / --tenants 1,2,4 /
-                         --loss 0,0.01,0.05 / --late_rank none,3 override
-                         the file's axes; --attribution true adds the
-                         latency breakdown to every job's artifact row.
+                         --loss 0,0.01,0.05 / --late_rank none,3 /
+                         --crash \";rank:3@epoch:2\" (';'-separated
+                         schedules; a leading ';' is the quiet cell)
+                         override the file's axes; --attribution true adds
+                         the latency breakdown to every job's artifact row.
+                         Any fault axis adds fig_recovery.json.
   sweep --config F.toml  legacy: run ONE experiment described by a TOML
+  chaos                  seeded fail-stop soak campaign (--seed S --runs K
+                         --iters N): every run draws a random hostile
+                         scenario (crashes, loss, corruption, reordering)
+                         and must end with verified values or a named
+                         structured error — a hang or watchdog abort
+                         fails the campaign
   values                 run ONE collective with deterministic per-rank
                          data and dump each rank's result bytes as JSON
                          (--series handler:scan --out f.json); used by CI
@@ -164,12 +173,24 @@ fabrics for p = 64..512), auto (each algorithm's natural direct wiring).
 
 Hostile networks: --loss P drops each frame independently with
 probability P (per-link, seeded); --drop \"0->1:3,2->*:1\" drops exact
-(link, nth-frame) pairs; --trunk_degrade F multiplies switch trunk
-serialization cost.  NICs recover via timeout/retransmit: tune
---timeout_ns / --max_retries / --timeout_backoff.  Results still
-bit-match the lossless oracle; recovery cost lands in the
-retransmits / timeouts_fired / recovery_ns metrics (sweep artifacts
-carry them per job, and `--loss a,b` sweeps loss as a grid axis).
+(link, nth-frame) pairs; --corrupt / --reorder use the same syntax to
+mangle (wire-CRC-detected, treated as drops) or hold back exact frames;
+--trunk_degrade F multiplies switch trunk serialization cost.  NICs
+recover via timeout/retransmit: tune --timeout_ns / --max_retries /
+--timeout_backoff.  Results still bit-match the lossless oracle;
+recovery cost lands in the retransmits / timeouts_fired / recovery_ns
+metrics (sweep artifacts carry them per job, and `--loss a,b` sweeps
+loss as a grid axis).
+
+Fail-stop faults: --crash \"rank:3@epoch:2\" kills a rank at the top of
+an epoch, \"switch:1@ns:500000\" a switch at a sim time (comma-combined).
+NIC heartbeats (ack piggyback + --probe_interval_ns probes) detect the
+silence, BFS reroutes around dead switches, and the surviving group
+completes a shrunk oracle-verified scan or surfaces a structured
+(coll, epoch, dead_ranks) failure — never a hang (--watchdog_ns caps
+any stall).  Detection/recovery activity lands in the crashes /
+false_suspicions / detection_ns / reroutes / degraded_completions
+metrics, present in artifacts only when nonzero.
 
 Observability: span tracing and latency attribution are off by default
 and cost nothing when off (artifact bytes stay identical).
@@ -202,6 +223,7 @@ pub fn main_with_args(argv: &[String]) -> Result<()> {
         "trace" => cmd_trace(&args),
         "fig4" | "fig5" | "fig6" | "fig7" => cmd_figure(&args),
         "sweep" => cmd_sweep(&args),
+        "chaos" => cmd_chaos(&args),
         "values" => cmd_values(&args),
         "bench" => cmd_bench(&args),
         "benchdiff" => cmd_benchdiff(&args),
@@ -372,7 +394,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
     args.ensure_only(&[
         "grid", "jobs", "out", "artifacts", "engine", "iters", "sizes", "topology", "series",
-        "tenants", "loss", "late_rank", "attribution", "csv",
+        "tenants", "loss", "crash", "late_rank", "attribution", "csv",
     ])?;
     let grid = args
         .get("grid")
@@ -413,6 +435,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             .map(|l| l.trim().parse::<f64>().with_context(|| format!("--loss item {l}")))
             .collect::<Result<_>>()?;
     }
+    if let Some(crashes) = args.get("crash") {
+        // ';'-separated because crash schedules themselves use commas
+        // ("rank:3@epoch:2,switch:1@ns:500"); a leading ';' encodes the
+        // quiet schedule: --crash ";rank:3@epoch:2" sweeps none-vs-one
+        spec.crashes = crashes.split(';').map(|c| c.trim().to_string()).collect();
+    }
     if let Some(lates) = args.get("late_rank") {
         spec.late_ranks = lates
             .split(',')
@@ -441,7 +469,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
     let n = spec.n_jobs();
     println!(
-        "sweep {}: {} jobs ({} series x {} topologies x {} p x {} tenants x {} loss x {} late_rank x {} sizes) on {} workers{}",
+        "sweep {}: {} jobs ({} series x {} topologies x {} p x {} tenants x {} loss x {} crash x {} late_rank x {} sizes) on {} workers{}",
         spec.name,
         n,
         spec.series.len(),
@@ -449,6 +477,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         spec.ps.len(),
         spec.tenants.len(),
         spec.losses.len(),
+        spec.crashes.len(),
         spec.late_ranks.len(),
         spec.sizes.len(),
         jobs.clamp(1, n.max(1)),
@@ -516,6 +545,102 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         println!("wrote {}", f.display());
     }
     println!("[{n} jobs in {wallclock:.2}s wallclock]");
+    Ok(())
+}
+
+/// `nfscan chaos --seed S --runs K` — seeded fail-stop soak campaign.
+/// Every run draws a random hostile scenario (a crash schedule, loss,
+/// corruption, and/or reordering over an assorted topology) and must
+/// terminate with oracle-verified values or one of the named structured
+/// failures.  A watchdog abort fails the campaign: it means the
+/// detection/degradation stack left survivors stuck, which is exactly
+/// the hang class this command exists to rule out.
+fn cmd_chaos(args: &Args) -> Result<()> {
+    use crate::sim::SplitMix64;
+    args.ensure_only(&["seed", "runs", "iters", "artifacts"])?;
+    let master = args.get_usize("seed", 1)? as u64;
+    let runs = args.get_usize("runs", 20)?;
+    let iters = args.get_usize("iters", 8)?;
+    if iters == 0 {
+        bail!("chaos needs --iters >= 1");
+    }
+    let mut rng = SplitMix64::new(master ^ 0x5EED_C0DE);
+    let (mut verified, mut degraded, mut named) = (0usize, 0usize, 0usize);
+    for i in 0..runs {
+        let mut cfg = ExpConfig::default();
+        cfg.iters = iters;
+        cfg.warmup = 2;
+        cfg.verify = true;
+        cfg.msg_bytes = 64;
+        cfg.p = 8;
+        cfg.seed = rng.next_u64();
+        cfg.cost.max_retries = 8;
+        let topos = ["auto", "hypercube", "star:4", "fattree"];
+        cfg.topology = topos[(rng.next_u64() % topos.len() as u64) as usize].into();
+        // at least one hostile ingredient per run, often several
+        let roll = rng.next_u64();
+        if roll & 1 != 0 {
+            cfg.loss = 0.01;
+        }
+        if roll & 2 != 0 {
+            cfg.corrupt_spec = "0->1:1".into();
+        }
+        if roll & 4 != 0 {
+            cfg.reorder_spec = "1->0:1".into();
+        }
+        let rank_crash = |rng: &mut SplitMix64| {
+            format!("rank:{}@epoch:{}", rng.next_u64() % 8, rng.next_u64() % iters as u64)
+        };
+        match roll % 3 {
+            0 => cfg.crash_spec = rank_crash(&mut rng),
+            1 => {
+                // a switch death where the wiring has switches, else a rank
+                let topo = crate::net::Topology::build(cfg.topology_spec(), cfg.p)
+                    .map_err(|e| anyhow!("{e}"))?;
+                cfg.crash_spec = if topo.switches() > 0 {
+                    format!(
+                        "switch:{}@ns:{}",
+                        rng.next_u64() % topo.switches() as u64,
+                        100_000 + rng.next_u64() % 400_000
+                    )
+                } else {
+                    rank_crash(&mut rng)
+                };
+            }
+            _ => {} // no crash this run: loss/corrupt/reorder only
+        }
+        cfg.validate().map_err(|e| {
+            anyhow!("chaos run {i}: generated an invalid config ({e}) — generator bug")
+        })?;
+        let compute = engine_from(args, &cfg);
+        let summary = format!(
+            "{} p={} crash={:?} loss={} corrupt={:?} reorder={:?}",
+            cfg.topology, cfg.p, cfg.crash_spec, cfg.loss, cfg.corrupt_spec, cfg.reorder_spec
+        );
+        let mut cluster = crate::cluster::Cluster::new(cfg.clone(), compute);
+        match cluster.run() {
+            Ok(m) => {
+                verified += 1;
+                if m.degraded_completions > 0 {
+                    degraded += 1;
+                }
+                println!("chaos run {i:>3}: ok       {summary}");
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                let expected = ["recovery failed", "partition", "degraded failure"];
+                if !expected.iter().any(|w| msg.contains(w)) {
+                    bail!("chaos run {i} (seed {}): {summary}: unexpected failure: {msg}", cfg.seed);
+                }
+                named += 1;
+                println!("chaos run {i:>3}: named    {summary}: {msg}");
+            }
+        }
+    }
+    println!(
+        "chaos: {runs} runs — {verified} verified ({degraded} degraded-but-complete), \
+         {named} named structured failures, 0 hangs"
+    );
     Ok(())
 }
 
@@ -965,6 +1090,69 @@ mod tests {
         assert_eq!(jobs[0].get("retransmits").unwrap().as_u64(), Some(0));
         assert!(jobs[1].get("timeouts_fired").unwrap().as_u64().is_some());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sweep_crash_axis_from_cli() {
+        let dir = std::env::temp_dir().join(format!("nfscan_cli_crash_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let grid = dir.join("grid.toml");
+        std::fs::write(
+            &grid,
+            "[grid]\nname = \"crashy\"\nsizes = [64]\nseries = [\"NF_rd\"]\n\
+             [run]\niters = 5\nwarmup = 1\np = 8\n",
+        )
+        .unwrap();
+        let out = dir.join("out");
+        let a = Args::parse(&argv(&[
+            "sweep",
+            "--grid",
+            grid.to_str().unwrap(),
+            "--crash",
+            ";rank:3@epoch:2",
+            "--jobs",
+            "2",
+            "--out",
+            out.to_str().unwrap(),
+        ]))
+        .unwrap();
+        cmd_sweep(&a).unwrap();
+        let report = std::fs::read_to_string(out.join("crashy.json")).unwrap();
+        let doc = crate::metrics::json::Json::parse(&report).unwrap();
+        let axis = doc.get("crash").unwrap().as_arr().unwrap();
+        assert_eq!(axis[0].as_str(), Some(""));
+        assert_eq!(axis[1].as_str(), Some("rank:3@epoch:2"));
+        let jobs = doc.get("jobs").unwrap().as_arr().unwrap();
+        assert_eq!(jobs.len(), 2);
+        assert!(jobs[0].get("crash").is_none(), "quiet cell omits the field");
+        assert!(jobs[0].get("crashes").is_none(), "quiet cell has no crash counters");
+        assert_eq!(jobs[1].get("crash").unwrap().as_str(), Some("rank:3@epoch:2"));
+        assert_eq!(jobs[1].get("crashes").unwrap().as_u64(), Some(1));
+        assert!(jobs[1].get("degraded_completions").unwrap().as_u64().unwrap() >= 1);
+        // the fault axis triggers the recovery-cost figure artifact
+        let fig = std::fs::read_to_string(out.join("fig_recovery.json")).unwrap();
+        let fig = crate::metrics::json::Json::parse(&fig).unwrap();
+        let rows = fig.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2, "one row per grid cell");
+        assert_eq!(rows[1].get("crashes").unwrap().as_u64(), Some(1));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn chaos_campaign_terminates_with_verified_or_named_outcomes() {
+        let a =
+            Args::parse(&argv(&["chaos", "--seed", "7", "--runs", "6", "--iters", "6"])).unwrap();
+        cmd_chaos(&a).unwrap();
+        // a different seed draws different scenarios and must also hold
+        let a =
+            Args::parse(&argv(&["chaos", "--seed", "11", "--runs", "4", "--iters", "5"])).unwrap();
+        cmd_chaos(&a).unwrap();
+    }
+
+    #[test]
+    fn chaos_rejects_unknown_flags() {
+        let a = Args::parse(&argv(&["chaos", "--bogus", "1"])).unwrap();
+        assert!(cmd_chaos(&a).is_err());
     }
 
     #[test]

@@ -13,7 +13,7 @@ pub mod session;
 
 pub use session::Session;
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::rc::Rc;
 
 use anyhow::{anyhow, bail, Result};
@@ -25,8 +25,8 @@ use crate::fpga::{make_engine, EngineCtx, HpuJob, Nic, NicAction, PendingTx};
 use crate::metrics::{Attribution, RunMetrics};
 use crate::mpi::{make_sw, SwAction, SwCtx, SwScanAlgo};
 use crate::net::{
-    frame::fragment, BgMsg, FaultPlan, Frame, FrameBody, PortNo, Rank, RelAck, RouteTable, SwMsg,
-    Topology,
+    frame::fragment, BgMsg, FaultPlan, Frame, FrameBody, LinkFault, PortNo, Probe, Rank, RelAck,
+    RouteTable, SwMsg, Topology,
 };
 use crate::offload::{build_request, node_role};
 use crate::packet::{CollPacket, MsgType};
@@ -148,6 +148,12 @@ fn frame_epoch(frame: &Frame) -> u16 {
     }
 }
 
+/// How long a reorder fault parks a frame past its normal arrival: long
+/// enough that a back-to-back successor frame on the same link lands
+/// first (one switch forwarding delay plus slack), short enough that the
+/// retransmit timer does not fire spuriously.
+const REORDER_HOLD_NS: u64 = 2_000;
+
 pub struct Cluster {
     pub cfg: ExpConfig,
     topo: Topology,
@@ -173,12 +179,34 @@ pub struct Cluster {
     fault: FaultPlan,
     /// Next reliable transaction id (0 is reserved for "unreliable").
     next_txn: u64,
+    /// Fail-stop state, indexed by graph node (ranks then switches).
+    /// Dead nodes emit, forward and accept nothing; set by scheduled
+    /// crashes and by suspicion-driven exclusion.
+    dead: Vec<bool>,
+    /// Per-rank "the survivors have declared this rank dead" flag —
+    /// suspicion dedup (a rank is excluded at most once).
+    dead_declared: Vec<bool>,
+    /// When each crashed node actually died (detection-latency metric;
+    /// a suspect absent here is a false suspicion).
+    crash_times: HashMap<usize, SimTime>,
+    /// Tenants whose group has shrunk: the in-flight epoch completed
+    /// over the survivor communicator and the stream stops.
+    degraded_tenants: Vec<bool>,
+    /// (comm, epoch) pairs completed via shrunk-group degradation —
+    /// their results come from the survivor oracle, so the in-run
+    /// verifier must not compare them against the full-group one.
+    degraded: HashSet<(u16, u32)>,
+    /// Last completion timestamp: the progress the watchdog watches.
+    last_progress: SimTime,
     /// Set when a card exhausts its retransmit budget: the run stops and
     /// surfaces this instead of deadlocking.
     fatal: Option<String>,
     /// Application mode: caller-provided contributions for iteration 0
     /// (see [`Cluster::scan_once`]) and the per-rank results collected.
-    injected: Option<Vec<Payload>>,
+    /// Crate-visible so the crash property tests can inject known data
+    /// and read survivor slots without the all-ranks-completed check
+    /// [`Session::scan_once`] applies.
+    pub(crate) injected: Option<Vec<Payload>>,
     pub results: Vec<Option<Payload>>,
     /// Milestone trace (disabled by default; `enable_trace` turns it on).
     pub trace: crate::trace::Trace,
@@ -260,6 +288,12 @@ impl Cluster {
             master_rng: SplitMix64::new(cfg.seed),
             fault: cfg.fault_plan(),
             next_txn: 1,
+            dead: vec![false; topo.nodes()],
+            dead_declared: vec![false; p],
+            crash_times: HashMap::new(),
+            degraded_tenants: vec![false; tenants.len()],
+            degraded: HashSet::new(),
+            last_progress: SimTime::ZERO,
             fatal: None,
             hosts: (0..p)
                 .map(|r| {
@@ -438,6 +472,24 @@ impl Cluster {
                 self.q.push(SimTime::ns(start), EventKind::BgTick { flow: flow as u16 });
             }
         }
+        // crash-scheduled runs arm the liveness protocol: one low-rate
+        // probe timer per rank (deterministically staggered — no RNG
+        // draw, so the seed streams above are untouched) plus the
+        // scheduled switch deaths.  Quiet and loss-only plans schedule
+        // nothing here, keeping their event streams byte-identical.
+        if self.fault.has_crashes() {
+            for rank in 0..self.cfg.p {
+                let at = SimTime::ns(self.cfg.cost.probe_interval_ns + rank as u64 * 64);
+                self.q.push(at, EventKind::ProbeTimer { rank });
+            }
+            for (s, at_ns) in self.fault.switch_crashes() {
+                self.q.push(SimTime::ns(at_ns), EventKind::CrashSwitch { node: self.cfg.p + s });
+            }
+        }
+        // the watchdog turns any would-be hang into a named error; it
+        // only arms alongside the failure machinery (one comparison per
+        // pop otherwise changes nothing)
+        let watchdog_armed = self.fault.lossy() && self.cfg.cost.watchdog_ns > 0;
         while let Some((now, ev)) = self.q.pop() {
             // self-profile bookkeeping costs two reads per pop and only
             // when enabled; wall-clock never feeds back into sim time
@@ -454,6 +506,19 @@ impl Cluster {
                 EventKind::HpuDone { rank } => self.on_hpu_done(now, rank),
                 EventKind::BgTick { flow } => self.on_bg_tick(now, flow),
                 EventKind::RetxTimer { rank, txn } => self.on_retx_timer(now, rank, txn),
+                EventKind::ProbeTimer { rank } => self.on_probe_timer(now, rank),
+                EventKind::CrashSwitch { node } => self.on_crash_switch(now, node),
+            }
+            if watchdog_armed
+                && self.fatal.is_none()
+                && now - self.last_progress > self.cfg.cost.watchdog_ns
+            {
+                self.fatal = Some(format!(
+                    "watchdog: no collective progress for {} ns (last completion at {} ns) — \
+                     aborting instead of hanging",
+                    self.cfg.cost.watchdog_ns,
+                    self.last_progress.as_ns()
+                ));
             }
             if let (Some((idx, t0, a0)), Some(prof)) = (prof_start, self.profile.as_deref_mut()) {
                 prof.pops += 1;
@@ -513,6 +578,23 @@ impl Cluster {
     // ------------------------------------------------------------ hosts
 
     fn on_host_start(&mut self, now: SimTime, rank: Rank) {
+        if self.dead[rank] {
+            return; // fail-stopped: the host takes no further actions
+        }
+        if self.fault.rank_crash_epoch(rank) == Some(self.hosts[rank].iter)
+            && self.hosts[rank].iter < self.hosts[rank].total_iters
+        {
+            // fail-stop at the top of the scheduled epoch: the rank dies
+            // before contributing anything to it
+            self.crash_rank(now, rank);
+            return;
+        }
+        if self.degraded_tenants[self.rank_tenant[rank]] {
+            // the shrunk group already completed its final epoch; the
+            // survivor stream stops here
+            self.hosts[rank].done = true;
+            return;
+        }
         let host = &mut self.hosts[rank];
         if host.iter >= host.total_iters {
             host.done = true;
@@ -578,6 +660,14 @@ impl Cluster {
     }
 
     fn on_host_recv(&mut self, now: SimTime, rank: Rank, msg: HostMsg) {
+        if self.dead[rank] {
+            return; // messages to a fail-stopped host die at the edge
+        }
+        if self.degraded_tenants[self.rank_tenant[rank]] {
+            // straggler deliveries from the aborted epoch — the shrunk
+            // group already completed, nothing left to advance
+            return;
+        }
         match msg {
             HostMsg::Sw(m) => {
                 let epoch = m.epoch;
@@ -675,6 +765,7 @@ impl Cluster {
             }
         }
         host.iter += 1;
+        self.last_progress = self.last_progress.max(at);
         let gap = self.cfg.cost.host_call_gap_ns;
         self.q.push(at + gap, EventKind::HostStart { rank });
 
@@ -697,6 +788,15 @@ impl Cluster {
             (c.coll, c.op, c.dtype, c.msg_elems())
         };
         let series = self.tenants[ti].cfg.series_name();
+        if self.degraded.contains(&(comm, epoch)) {
+            // shrunk-group completion: the value came from the survivor
+            // oracle itself (abort-and-shrink is modeled analytically),
+            // so there is nothing independent to compare in-run — the
+            // crash corpus and property tests cross-check these values
+            // against externally computed survivor oracles instead
+            self.retire_verified(comm, epoch, gsize);
+            return;
+        }
         // contributions are communicator-locally indexed, one table per
         // (tenant, epoch): tenants verify fully independently
         let contribs = self
@@ -804,7 +904,7 @@ impl Cluster {
         if self.fault.lossy()
             && frame.txn == 0
             && frame.src == src
-            && matches!(frame.body, FrameBody::Coll(_) | FrameBody::Sw(_))
+            && matches!(frame.body, FrameBody::Coll(_) | FrameBody::Sw(_) | FrameBody::Probe(_))
         {
             let txn = self.next_txn;
             self.next_txn += 1;
@@ -815,14 +915,19 @@ impl Cluster {
             let at = ready + self.cfg.cost.retx_timeout_ns(0);
             self.q.push(at, EventKind::RetxTimer { rank: src, txn });
         }
-        let port = self
-            .routes
-            .next_hop(src, dst)
-            .unwrap_or_else(|| panic!("no route {src} -> {dst} on {}", self.topo.name()));
+        let Some(port) = self.routes.next_hop(src, dst) else {
+            if self.fault.lossy() {
+                // the destination became unreachable (dead node or
+                // post-reroute hole): the frame dies here and the
+                // retransmit/suspicion machinery owns what happens next
+                return;
+            }
+            panic!("no route {src} -> {dst} on {}", self.topo.name());
+        };
         self.transmit_on_port(src, port, frame, ready);
     }
 
-    fn transmit_on_port(&mut self, src: Rank, port: PortNo, frame: Frame, ready: SimTime) {
+    fn transmit_on_port(&mut self, src: Rank, port: PortNo, mut frame: Frame, ready: SimTime) {
         let wire = frame.wire_bytes();
         let mut tx_ns = self.cfg.cost.tx_ns(wire);
         if self.fault.degrades() && src >= self.cfg.p {
@@ -862,30 +967,53 @@ impl Cluster {
             .topo
             .neighbor(src, port)
             .unwrap_or_else(|| panic!("dangling port {port} on rank {src}"));
-        if self.fault.lossy() && self.fault.should_drop(src, neighbor) {
-            // the frame left the card (serialization was charged) but
-            // dies on the wire: no arrival event
-            if self.trace.enabled() {
-                self.trace.record(
-                    end,
-                    src,
-                    TraceKind::Dropped,
-                    SpanData::instant(frame_epoch(&frame)).txn(frame.txn),
-                );
+        let mut hold = 0;
+        if self.fault.lossy() {
+            match self.fault.link_fault(src, neighbor) {
+                Some(LinkFault::Drop) => {
+                    // the frame left the card (serialization was charged)
+                    // but dies on the wire: no arrival event
+                    if self.trace.enabled() {
+                        self.trace.record(
+                            end,
+                            src,
+                            TraceKind::Dropped,
+                            SpanData::instant(frame_epoch(&frame)).txn(frame.txn),
+                        );
+                    }
+                    return;
+                }
+                Some(LinkFault::Corrupt) => {
+                    // bits flip in flight: the frame still arrives and
+                    // costs its wire time, but the receiver's CRC check
+                    // will discard it (recovery-wise a drop)
+                    frame.corrupt = true;
+                }
+                Some(LinkFault::Reorder) => {
+                    // park the frame past its normal arrival so a
+                    // back-to-back successor overtakes it
+                    hold = REORDER_HOLD_NS;
+                }
+                None => {}
             }
-            return;
         }
         if !is_bg {
             let prop = self.cfg.cost.link_prop_ns;
             self.attr_charge(origin, |a| a.wire += prop);
         }
-        let arrival = end + self.cfg.cost.link_prop_ns;
+        let arrival = end + self.cfg.cost.link_prop_ns + hold;
         self.q.push(arrival, EventKind::NicRecv { rank: neighbor, port: nport, frame });
     }
 
     // -------------------------------------------------------------- nics
 
     fn on_nic_recv(&mut self, now: SimTime, rank: Rank, _port: PortNo, frame: Frame) {
+        if self.dead[rank] {
+            // a fail-stopped card neither forwards nor terminates
+            // anything: the frame dies in flight, and if it was reliable
+            // its sender's retransmit timer owns recovery
+            return;
+        }
         if frame.dst != rank {
             // store-and-forward towards the destination: either the
             // reference-router path of an intermediate NetFPGA (topology/
@@ -911,6 +1039,26 @@ impl Cluster {
                 TraceKind::NicRecvd,
                 SpanData::instant(frame_epoch(&frame)).txn(frame.txn),
             );
+        }
+        if frame.corrupt {
+            // the wire CRC fails at ingress: the frame is discarded
+            // before any protocol processing — no ack, no liveness
+            // update (a mangled source field cannot be trusted), so the
+            // sender's retransmit timer recovers it exactly like a drop
+            if self.trace.enabled() {
+                self.trace.record(
+                    now,
+                    rank,
+                    TraceKind::Dropped,
+                    SpanData::instant(frame_epoch(&frame)).txn(frame.txn),
+                );
+            }
+            return;
+        }
+        if self.fault.has_crashes() {
+            // liveness piggybacks on every clean arrival from the
+            // origin: data, acks and probes all refresh the peer
+            self.nics[rank].last_heard.insert(frame.src, now);
         }
         if frame.txn != 0 {
             // reliability layer: ack every reliable frame end-to-end
@@ -956,6 +1104,11 @@ impl Cluster {
                 // contend for wire and port-FIFO time, not to reach hosts
                 self.metrics.bg_frames_rx += 1;
             }
+            FrameBody::Probe(_) => {
+                // liveness probe: nothing to deliver — the reliable-layer
+                // ack above is the whole reply, and the last_heard
+                // refresh already happened
+            }
             FrameBody::RelAck(ack) => {
                 if let Some(p) = self.nics[rank].pending.remove(&ack.txn) {
                     self.trace.record(
@@ -978,6 +1131,9 @@ impl Cluster {
     }
 
     fn on_nic_host_req(&mut self, now: SimTime, rank: Rank, req: OffloadRequest) {
+        if self.dead[rank] || self.degraded_tenants[self.rank_tenant[rank]] {
+            return;
+        }
         self.trace.record(now, rank, TraceKind::Offload, SpanData::instant(req.epoch));
         self.nics[rank].regs.stamp_offload(req.epoch, now);
         self.activate_engine(now, rank, req.epoch, Some(req), None);
@@ -1014,6 +1170,9 @@ impl Cluster {
     /// A handler unit retired its activation: run the next parked job
     /// (round-robin across flows), or free the unit.
     fn on_hpu_done(&mut self, now: SimTime, rank: Rank) {
+        if self.dead[rank] {
+            return;
+        }
         if let Some(job) = self.nics[rank].hpu.next() {
             let waited = now - job.arrival;
             self.metrics.hpu_queue_ns += waited;
@@ -1034,6 +1193,9 @@ impl Cluster {
 
     /// Inject one background frame and reschedule the flow's next tick.
     fn on_bg_tick(&mut self, now: SimTime, flow: u16) {
+        if self.dead[self.bg[flow as usize].src] {
+            return; // the injecting card died; the flow dies with it
+        }
         let (src, dst, seq, remaining) = {
             let f = &mut self.bg[flow as usize];
             f.remaining -= 1;
@@ -1054,11 +1216,15 @@ impl Cluster {
     /// on the VM, the fixed-function and software paths hard-wire the
     /// same policy — or gives up with a named, non-hanging failure.
     fn on_retx_timer(&mut self, now: SimTime, rank: Rank, txn: u64) {
+        if self.dead[rank] {
+            return; // a dead card retransmits nothing
+        }
         let Some(p) = self.nics[rank].pending.get(&txn) else {
             return; // acked in time
         };
         let retries = p.retries;
-        let is_coll = matches!(p.frame.body, FrameBody::Coll(_));
+        let dst = p.frame.dst;
+        let runs_vm = matches!(p.frame.body, FrameBody::Coll(_) | FrameBody::Probe(_));
         let epoch = match &p.frame.body {
             FrameBody::Coll(pkt) => pkt.epoch() as u32,
             FrameBody::Sw(m) => m.epoch,
@@ -1073,12 +1239,20 @@ impl Cluster {
         );
         let max_retries = self.cfg.cost.max_retries;
         let ti = self.rank_tenant[rank];
-        let (retransmit, cycles) = if self.tenants[ti].cfg.handler() && is_coll {
+        let (retransmit, cycles) = if self.tenants[ti].cfg.handler() && runs_vm {
             self.run_timer_program(rank, (epoch & 0xFFFF) as u16, retries, max_retries)
         } else {
             (retries < max_retries, self.cfg.cost.nic_pipeline_cycles)
         };
         if !retransmit {
+            self.nics[rank].pending.remove(&txn);
+            if self.fault.has_crashes() {
+                // under the fail-stop model a give-up is not fatal: it is
+                // the suspicion signal.  Declare the silent peer dead and
+                // let the survivors shrink or surface a partition.
+                self.declare_dead(now, dst);
+                return;
+            }
             let tcfg = &self.tenants[ti].cfg;
             self.fatal = Some(format!(
                 "recovery failed: ({}, rank {rank}, epoch {epoch}) gave up on txn {txn} \
@@ -1086,7 +1260,6 @@ impl Cluster {
                 tcfg.coll.name(),
                 tcfg.series_name()
             ));
-            self.nics[rank].pending.remove(&txn);
             return;
         }
         let p = self.nics[rank].pending.get_mut(&txn).expect("still pending");
@@ -1105,6 +1278,249 @@ impl Cluster {
         self.transmit(rank, dst, frame, ready);
         let at = ready + self.cfg.cost.retx_timeout_ns(retries);
         self.q.push(at, EventKind::RetxTimer { rank, txn });
+    }
+
+    // -------------------------------------------------- fail-stop faults
+
+    /// A scheduled rank crash fires: the host and its card fail-stop
+    /// together, silently.  Survivors find out through the liveness
+    /// protocol (ack silence / probe give-up), never through this call.
+    fn crash_rank(&mut self, now: SimTime, rank: Rank) {
+        self.dead[rank] = true;
+        self.crash_times.insert(rank, now);
+        self.metrics.crashes += 1;
+        let host = &mut self.hosts[rank];
+        host.in_flight = false;
+        host.done = true; // a dead rank owes the driver nothing further
+        // the card dies with the host: nothing pending will ever resend
+        self.nics[rank].pending.clear();
+        if let Some(a) = self.attr.as_deref_mut() {
+            a.measuring[rank] = false;
+        }
+    }
+
+    /// A scheduled switch death fires: mark the node dead, reroute the
+    /// fabric around it, and fail loudly if that partitions survivors.
+    fn on_crash_switch(&mut self, now: SimTime, node: usize) {
+        if self.dead[node] {
+            return;
+        }
+        self.dead[node] = true;
+        self.crash_times.insert(node, now);
+        self.metrics.crashes += 1;
+        self.nics[node].pending.clear();
+        self.rebuild_routes_and_check("switch death");
+    }
+
+    /// The survivors' verdict on a silent peer: exclude it, reroute, and
+    /// shrink its communicator.  Deduplicated — later give-ups against
+    /// the same peer are no-ops.  Only rank peers are declared here;
+    /// switch deaths arrive via their own scheduled event.
+    fn declare_dead(&mut self, now: SimTime, suspect: Rank) {
+        if suspect >= self.cfg.p || self.dead_declared[suspect] {
+            return;
+        }
+        self.dead_declared[suspect] = true;
+        match self.crash_times.get(&suspect) {
+            Some(&died) => self.metrics.detection_ns += now - died,
+            None => {
+                // the peer was alive: an over-aggressive timeout evicted
+                // it anyway (the fail-stop detector's inherent risk)
+                self.metrics.false_suspicions += 1;
+            }
+        }
+        if !self.dead[suspect] {
+            // exclusion is fail-stop from the group's point of view even
+            // when the suspicion was false: the evicted rank stops
+            self.dead[suspect] = true;
+            self.hosts[suspect].in_flight = false;
+            self.hosts[suspect].done = true;
+            self.nics[suspect].pending.clear();
+            if let Some(a) = self.attr.as_deref_mut() {
+                a.measuring[suspect] = false;
+            }
+        }
+        self.rebuild_routes_and_check("rank exclusion");
+        if self.fatal.is_some() {
+            return;
+        }
+        self.degrade_tenant(now, self.rank_tenant[suspect]);
+    }
+
+    /// Recompute BFS routes around every dead node and check that all
+    /// live rank pairs of non-degraded tenants can still reach each
+    /// other; an unreachable pair is a named partition error (no
+    /// protocol can terminate across it, so continuing would hang).
+    fn rebuild_routes_and_check(&mut self, cause: &str) {
+        self.routes = RouteTable::build_avoiding(&self.topo, &self.dead);
+        for (ti, t) in self.tenants.iter().enumerate() {
+            if self.degraded_tenants[ti] {
+                continue;
+            }
+            let live: Vec<Rank> =
+                (t.base..t.base + t.size).filter(|&r| !self.dead[r]).collect();
+            for &a in &live {
+                for &b in &live {
+                    if a != b && !self.routes.reaches(a, b) {
+                        self.fatal = Some(format!(
+                            "partition: ranks {a} and {b} (tenant {}) cannot reach each other \
+                             after {cause} on {}",
+                            t.comm,
+                            self.topo.name()
+                        ));
+                        return;
+                    }
+                }
+            }
+        }
+        self.metrics.reroutes += 1;
+    }
+
+    /// Graceful degradation: the shrunk survivor group of tenant `ti`
+    /// aborts its in-flight epoch and completes it over the survivor
+    /// communicator — each live caller gets the survivor-oracle value
+    /// for ITS in-flight epoch (pipelined ranks may be on different
+    /// epochs), then the stream stops.  A Bcast whose root died has no
+    /// survivor holding the data: that is a structured named failure.
+    fn degrade_tenant(&mut self, now: SimTime, ti: usize) {
+        if self.degraded_tenants[ti] {
+            return;
+        }
+        self.degraded_tenants[ti] = true;
+        let (comm, base, gsize) = {
+            let t = &self.tenants[ti];
+            (t.comm, t.base, t.size)
+        };
+        let tcfg = self.tenants[ti].cfg.clone();
+        let dead_local: Vec<bool> = (0..gsize).map(|i| self.dead[base + i]).collect();
+        let dead_ranks: Vec<Rank> =
+            (0..gsize).filter(|&i| dead_local[i]).map(|i| base + i).collect();
+        let stuck: Vec<(Rank, u32)> = (base..base + gsize)
+            .filter(|&g| !self.dead[g] && self.hosts[g].in_flight)
+            .map(|g| (g, self.hosts[g].iter))
+            .collect();
+        if tcfg.coll == crate::packet::CollType::Bcast && dead_local[0] {
+            let epoch = stuck.first().map(|&(_, e)| e).unwrap_or(0);
+            self.fatal = Some(format!(
+                "degraded failure: (coll {}, epoch {epoch}, dead ranks {dead_ranks:?}) — \
+                 the root died and no survivor holds its data",
+                tcfg.coll.name()
+            ));
+            return;
+        }
+        for (g, epoch) in stuck {
+            let result = self.survivor_result(&tcfg, comm, base, gsize, g, epoch, &dead_local);
+            self.degraded.insert((comm, epoch));
+            self.metrics.degraded_completions += 1;
+            // abort + shrink is charged one host call gap: the survivors
+            // already hold their partial state, the group agreement rides
+            // the detection latency that elapsed before this call
+            self.complete_iteration(now + self.cfg.cost.host_call_gap_ns, g, epoch, result);
+        }
+    }
+
+    /// A rank's contribution to `(comm, epoch)` as the survivor oracle
+    /// needs it: the recorded one if the rank got far enough to
+    /// contribute, otherwise regenerated from the deterministic
+    /// generator (or the injected application data for epoch 0).
+    fn survivor_contribution(
+        &self,
+        tcfg: &ExpConfig,
+        comm: u16,
+        base: usize,
+        epoch: u32,
+        local: usize,
+    ) -> Payload {
+        if let Some(c) =
+            self.contributions.get(&(comm, epoch)).and_then(|v| v[local].clone())
+        {
+            return c;
+        }
+        if epoch == 0 {
+            if let Some(inj) = &self.injected {
+                return inj[base + local].clone();
+            }
+        }
+        Cluster::gen_payload(tcfg, base + local, epoch)
+    }
+
+    /// The shrunk-group result for global rank `g` at `epoch`: the
+    /// collective recomputed over survivor contributions only, in
+    /// original rank order (ULFM-shrink semantics — survivors keep their
+    /// relative order, dead ranks simply vanish from the fold).
+    fn survivor_result(
+        &self,
+        tcfg: &ExpConfig,
+        comm: u16,
+        base: usize,
+        gsize: usize,
+        g: Rank,
+        epoch: u32,
+        dead_local: &[bool],
+    ) -> Payload {
+        use crate::packet::CollType as Ct;
+        if tcfg.coll == Ct::Bcast {
+            // root survived (the dead-root case errored before this)
+            return self.survivor_contribution(tcfg, comm, base, epoch, 0);
+        }
+        let live: Vec<usize> = (0..gsize).filter(|&i| !dead_local[i]).collect();
+        let present: Vec<Payload> = live
+            .iter()
+            .map(|&i| self.survivor_contribution(tcfg, comm, base, epoch, i))
+            .collect();
+        let sidx = live
+            .iter()
+            .position(|&i| i == g - base)
+            .expect("degraded completion only reaches live ranks");
+        match tcfg.coll {
+            Ct::Allreduce | Ct::Barrier => {
+                oracle_prefix(&*self.compute, &present, tcfg.op, true, live.len() - 1)
+                    .expect("survivor oracle")
+            }
+            _ if tcfg.coll.inclusive() => {
+                oracle_prefix(&*self.compute, &present, tcfg.op, true, sidx)
+                    .expect("survivor oracle")
+            }
+            _ if sidx == 0 => Payload::identity(tcfg.dtype, tcfg.op, tcfg.msg_elems()),
+            _ => oracle_prefix(&*self.compute, &present, tcfg.op, true, sidx - 1)
+                .expect("survivor oracle"),
+        }
+    }
+
+    /// The low-rate liveness probe timer (crash-scheduled runs only).
+    /// Each rank monitors its ring successor within its communicator;
+    /// if the peer has been silent for a probe interval, a reliable
+    /// Probe frame goes out — its ack refreshes liveness, and its
+    /// retransmit give-up is the suspicion verdict.
+    fn on_probe_timer(&mut self, now: SimTime, rank: Rank) {
+        if self.dead[rank] || self.hosts[rank].done {
+            return; // dead or retired cards stop probing (and re-arming)
+        }
+        let ti = self.rank_tenant[rank];
+        if self.degraded_tenants[ti] {
+            return;
+        }
+        let (base, gsize) = {
+            let t = &self.tenants[ti];
+            (t.base, t.size)
+        };
+        if gsize > 1 {
+            let peer = base + ((rank - base + 1) % gsize);
+            let interval = self.cfg.cost.probe_interval_ns;
+            let fresh = self.nics[rank]
+                .last_heard
+                .get(&peer)
+                .is_some_and(|&heard| now - heard < interval);
+            if !fresh && !self.dead_declared[peer] {
+                let nic = &mut self.nics[rank];
+                nic.probe_seq += 1;
+                nic.probes_tx += 1;
+                let seq = nic.probe_seq;
+                let frame = Frame::new(rank, peer, FrameBody::Probe(Probe { seq }));
+                self.transmit(rank, peer, frame, now);
+            }
+        }
+        self.q.push(now + self.cfg.cost.probe_interval_ns, EventKind::ProbeTimer { rank });
     }
 
     /// Run the handler program's `on_timer` entry for a timed-out frame
@@ -1957,23 +2373,36 @@ mod tests {
 
     #[test]
     fn fault_knobs_off_leave_schedule_byte_identical() {
-        // with loss = 0 and no drop schedule the reliability layer must
-        // be completely inert: changing its tuning knobs cannot move a
-        // single event, and no recovery metric may tick
-        let mk = |timeout_ns: u64, max_retries: u32| {
+        // with loss = 0 and no drop/crash/corrupt/reorder schedule the
+        // whole failure stack must be completely inert: changing its
+        // tuning knobs cannot move a single event, and no recovery or
+        // crash metric may tick
+        let mk = |timeout_ns: u64, max_retries: u32, probe_ns: u64, watchdog_ns: u64| {
             let mut cfg = base(AlgoType::RecursiveDoubling, true);
             cfg.cost.timeout_ns = timeout_ns;
             cfg.cost.max_retries = max_retries;
+            cfg.cost.probe_interval_ns = probe_ns;
+            cfg.cost.watchdog_ns = watchdog_ns;
+            // empty schedules are the quiet default, spelled explicitly
+            cfg.crash_spec = String::new();
+            cfg.corrupt_spec = String::new();
+            cfg.reorder_spec = String::new();
             run_cfg(cfg)
         };
-        let a = mk(crate::config::CostModel::default().timeout_ns, 3);
-        let b = mk(999, 1);
-        assert_eq!(a.sim_ns, b.sim_ns, "timers must not exist at loss=0");
+        let d = crate::config::CostModel::default();
+        let a = mk(d.timeout_ns, 3, d.probe_interval_ns, d.watchdog_ns);
+        let b = mk(999, 1, 77, 1);
+        assert_eq!(a.sim_ns, b.sim_ns, "timers must not exist on a quiet plan");
         assert_eq!(a.total_frames(), b.total_frames());
         for m in [&a, &b] {
             assert_eq!(m.retransmits, 0);
             assert_eq!(m.timeouts_fired, 0);
             assert_eq!(m.recovery_ns, 0);
+            assert_eq!(m.crashes, 0);
+            assert_eq!(m.false_suspicions, 0);
+            assert_eq!(m.detection_ns, 0);
+            assert_eq!(m.reroutes, 0);
+            assert_eq!(m.degraded_completions, 0);
         }
     }
 
@@ -2026,6 +2455,129 @@ mod tests {
         assert!(msg.contains("recovery failed"), "{msg}");
         assert!(msg.contains("rank"), "{msg}");
         assert!(msg.contains("epoch"), "{msg}");
+    }
+
+    #[test]
+    fn rank_crash_mid_run_degrades_and_survivors_complete() {
+        // rank 3 fail-stops at the top of epoch 10: its silence must be
+        // detected through ack give-up, the group must shrink, and every
+        // stuck survivor epoch must complete with the survivor-oracle
+        // value instead of hanging
+        let mut cfg = base(AlgoType::RecursiveDoubling, true);
+        cfg.crash_spec = "rank:3@epoch:10".into();
+        let m = run_cfg(cfg);
+        assert_eq!(m.crashes, 1, "exactly the scheduled crash");
+        assert_eq!(m.false_suspicions, 0, "nobody healthy was evicted");
+        assert!(m.detection_ns > 0, "detection latency is measured from death to verdict");
+        assert!(m.degraded_completions >= 1, "stuck survivor epochs complete shrunk");
+        assert!(m.reroutes >= 1, "the dead rank is excluded from the route table");
+    }
+
+    #[test]
+    fn lone_survivor_completes_its_own_prefix() {
+        // p=2 and the partner dies before its first contribution: the
+        // survivor's inclusive scan degenerates to its own payload, and
+        // the run must terminate cleanly with one degraded completion
+        let mut cfg = base(AlgoType::RecursiveDoubling, true);
+        cfg.p = 2;
+        cfg.crash_spec = "rank:1@epoch:0".into();
+        let m = run_cfg(cfg);
+        assert_eq!(m.crashes, 1);
+        assert_eq!(m.degraded_completions, 1, "only epoch 0 was in flight");
+        assert_eq!(m.false_suspicions, 0);
+    }
+
+    #[test]
+    fn switch_crash_on_fattree_reroutes_and_completes() {
+        // agg(0,1) (switch index 3 in pod-major numbering) dies mid-run:
+        // pod 0 still has agg(0,0), so BFS reroutes around the corpse
+        // and every rank finishes every iteration
+        let mut cfg = base(AlgoType::RecursiveDoubling, true);
+        cfg.topology = "fattree".into();
+        cfg.crash_spec = "switch:3@ns:300000".into();
+        let m = run_cfg(cfg);
+        assert_eq!(m.crashes, 1, "the switch death is a crash");
+        assert!(m.reroutes >= 1, "routes were rebuilt around the dead switch");
+        assert_eq!(m.degraded_completions, 0, "no rank died — no degradation");
+        assert_eq!(m.host_overall().count(), 8 * 20, "all iterations complete");
+    }
+
+    #[test]
+    fn star_trunk_death_is_a_named_partition() {
+        // leaf switch 0 of star:4 carries hosts 0..4: its death cuts
+        // them off from the rest, which must surface as a structured
+        // partition error, never a hang
+        let mut cfg = base(AlgoType::RecursiveDoubling, true);
+        cfg.topology = "star:4".into();
+        cfg.crash_spec = "switch:0@ns:200000".into();
+        cfg.verify = false;
+        let compute = make_compute(EngineKind::Native, "artifacts");
+        let mut cluster = Cluster::new(cfg, compute);
+        let err = cluster.run().expect_err("a partition must be an error");
+        let msg = err.to_string();
+        assert!(msg.contains("partition"), "{msg}");
+        assert!(msg.contains("star"), "{msg}");
+    }
+
+    #[test]
+    fn corrupt_frames_fail_crc_and_are_recovered() {
+        // mangle exactly the first frame on the 0->1 wire: the receiver's
+        // CRC check must discard it pre-ack and the retransmit path must
+        // recover it like a drop (run_cfg verifies the values)
+        let mut cfg = base(AlgoType::RecursiveDoubling, true);
+        cfg.corrupt_spec = "0->1:1".into();
+        let m = run_cfg(cfg);
+        assert!(m.retransmits >= 1, "the corrupted frame must be resent");
+        assert!(m.recovery_ns > 0, "recovery latency must be attributed");
+    }
+
+    #[test]
+    fn reordered_frames_still_verify() {
+        // park the first frame on the 0->1 wire long enough for its
+        // successors to overtake: dedup + engine state machines must
+        // still produce oracle-exact values (run_cfg verifies)
+        let mut cfg = base(AlgoType::RecursiveDoubling, true);
+        cfg.reorder_spec = "0->1:1".into();
+        let quiet = run_cfg(base(AlgoType::RecursiveDoubling, true));
+        let held = run_cfg(cfg);
+        assert!(held.sim_ns != quiet.sim_ns, "the hold must actually move the schedule");
+    }
+
+    #[test]
+    fn false_suspicion_evicts_live_rank_and_terminates() {
+        // a black-holed wire under a crash-scheduled plan: the give-up
+        // verdict wrongly convicts the (alive) silent peer.  The group
+        // must treat the eviction as fail-stop — count it as a false
+        // suspicion, shrink, and terminate — because ULFM-style
+        // agreement cannot distinguish dead from unreachable.
+        let mut cfg = base(AlgoType::RecursiveDoubling, true);
+        cfg.p = 2;
+        cfg.crash_spec = "rank:1@epoch:18".into(); // arms detection; never reached
+        cfg.drop_spec = (1..=12).map(|n| format!("0->1:{n}")).collect::<Vec<_>>().join(",");
+        cfg.cost.max_retries = 2;
+        let m = run_cfg(cfg);
+        assert_eq!(m.false_suspicions, 1, "the live rank was wrongly convicted");
+        assert_eq!(m.crashes, 0, "nobody actually died");
+        assert!(m.degraded_completions >= 1, "the survivor still completes");
+    }
+
+    #[test]
+    fn watchdog_converts_undetectable_stall_to_named_error() {
+        // a retry budget so deep that give-up (and therefore suspicion)
+        // would take longer than anyone is willing to wait: the watchdog
+        // must convert the stall into a named error instead of a hang
+        let mut cfg = base(AlgoType::RecursiveDoubling, true);
+        cfg.p = 2;
+        cfg.iters = 1;
+        cfg.warmup = 0;
+        cfg.verify = false;
+        cfg.crash_spec = "rank:1@epoch:0".into();
+        cfg.cost.max_retries = 60;
+        cfg.cost.watchdog_ns = 5_000_000;
+        let compute = make_compute(EngineKind::Native, "artifacts");
+        let mut cluster = Cluster::new(cfg, compute);
+        let err = cluster.run().expect_err("the stall must be an error, not a hang");
+        assert!(err.to_string().contains("watchdog"), "{err}");
     }
 
     #[test]

@@ -83,6 +83,20 @@ pub struct CostModel {
     /// `timeout_ns * timeout_backoff^n`.
     pub timeout_backoff: f64,
 
+    // ---- NIC liveness protocol (crash-scheduled runs only) ----
+    /// Heartbeat probe period, ns.  Each rank's NIC monitors its
+    /// communicator-ring successor; a probe is only sent when nothing
+    /// has been heard from the peer for a full period (receptions and
+    /// transport acks piggyback as liveness evidence).  Only armed when
+    /// the fault plan schedules crashes; fault-free runs schedule no
+    /// probe timers at all.
+    pub probe_interval_ns: u64,
+    /// Global no-progress watchdog, ns: if no rank completes an
+    /// iteration for this long under an armed fault plan, the run fails
+    /// with a named `watchdog:` error instead of hanging.  Sized well
+    /// above the worst full retransmit-backoff chain.
+    pub watchdog_ns: u64,
+
     // ---- inter-switch fabric (hierarchical topologies) ----
     /// Store-and-forward latency of one switch hop (lookup + buffer),
     /// ns.  Wire serialization and trunk contention are charged
@@ -119,6 +133,8 @@ impl Default for CostModel {
             timeout_ns: 100_000,
             max_retries: 3,
             timeout_backoff: 2.0,
+            probe_interval_ns: 50_000,
+            watchdog_ns: 500_000_000,
             switch_fwd_ns: 1_000,
             host_call_gap_ns: 2_000,
             start_jitter_ns: 5_000,
@@ -206,6 +222,8 @@ impl CostModel {
                     value.parse().map_err(|e| format!("cost.{key}: bad integer: {e}"))?
             }
             "timeout_backoff" => self.timeout_backoff = as_f64()?,
+            "probe_interval_ns" => self.probe_interval_ns = as_u64()?,
+            "watchdog_ns" => self.watchdog_ns = as_u64()?,
             "switch_fwd_ns" => self.switch_fwd_ns = as_u64()?,
             "host_call_gap_ns" => self.host_call_gap_ns = as_u64()?,
             "start_jitter_ns" => self.start_jitter_ns = as_u64()?,

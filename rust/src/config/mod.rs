@@ -136,6 +136,19 @@ pub struct ExpConfig {
     /// Trunk (switch-node) bandwidth degradation multiplier: >= 1.0
     /// scales switch transmission time.  1.0 = full rate, never applied.
     pub trunk_degrade: f64,
+    /// Fail-stop crash schedule, `"rank:R@epoch:E, switch:S@ns:T"` rules
+    /// (see `net::fault::parse_crash_spec`); empty = none.  A nonempty
+    /// schedule arms the retransmit protocol, heartbeat probes and the
+    /// degrade-don't-hang recovery machinery.
+    pub crash_spec: String,
+    /// Deterministic frame-corruption schedule, same `"src->dst:nth"`
+    /// rule syntax as `drop`; corrupted frames are delivered, fail the
+    /// receiver's CRC check, and are recovered by retransmission.
+    pub corrupt_spec: String,
+    /// Deterministic frame-reordering schedule, same `"src->dst:nth"`
+    /// rule syntax as `drop`; reordered frames are delivered late,
+    /// behind frames transmitted after them.
+    pub reorder_spec: String,
     /// Number of tenants — disjoint communicators running concurrent
     /// collective streams on the shared network (the paper's SSVI comm_id
     /// future work).  Ranks split into `tenants` contiguous groups of
@@ -185,6 +198,9 @@ impl Default for ExpConfig {
             loss: 0.0,
             drop_spec: String::new(),
             trunk_degrade: 1.0,
+            crash_spec: String::new(),
+            corrupt_spec: String::new(),
+            reorder_spec: String::new(),
             tenants: 1,
             bg_flows: 0,
             bg_msgs: 200,
@@ -333,6 +349,9 @@ impl ExpConfig {
             }
             "loss" => self.loss = v.parse().map_err(|e| format!("run.loss: {e}"))?,
             "drop" => self.drop_spec = v.to_string(),
+            "crash" => self.crash_spec = v.to_string(),
+            "corrupt" => self.corrupt_spec = v.to_string(),
+            "reorder" => self.reorder_spec = v.to_string(),
             "trunk_degrade" => {
                 self.trunk_degrade =
                     v.parse().map_err(|e| format!("run.trunk_degrade: {e}"))?
@@ -410,13 +429,15 @@ impl ExpConfig {
             return Err("bg_gap_ns must be > 0 when background flows are on".into());
         }
         // fault knobs: build (and discard) the plan so bad loss rates and
-        // malformed drop schedules fail at config time, with the rule text
+        // malformed drop/crash/corrupt/reorder schedules fail at config
+        // time, with the rule text
         let plan = crate::net::FaultPlan::new(
             self.loss,
             &self.drop_spec,
             self.trunk_degrade,
             self.seed,
         )
+        .and_then(|p| p.with_failures(&self.crash_spec, &self.corrupt_spec, &self.reorder_spec))
         .map_err(|e| format!("fault: {e}"))?;
         if plan.lossy() {
             if self.cost.timeout_ns == 0 {
@@ -429,13 +450,30 @@ impl ExpConfig {
                 ));
             }
         }
+        if plan.has_crashes() && self.cost.probe_interval_ns == 0 {
+            return Err("cost.probe_interval_ns must be > 0 when crashes are scheduled".into());
+        }
+        if let Some(r) = plan.max_crash_rank() {
+            if r >= self.p {
+                return Err(format!("crash: rank {r} out of range (p = {})", self.p));
+            }
+        }
         // build (and discard) the resolved wiring so bad specs fail at
         // config time with the cell that owns them, not mid-sweep —
         // "auto" included: it resolves to a hypercube whose p constraint
         // (power of two over the WHOLE cluster, not per tenant)
         // is stricter than the group check above
-        crate::net::Topology::build(self.topology_spec(), self.p)
+        let topo = crate::net::Topology::build(self.topology_spec(), self.p)
             .map_err(|e| format!("topology: {e}"))?;
+        if let Some(s) = plan.max_crash_switch() {
+            if s >= topo.switches() {
+                return Err(format!(
+                    "crash: switch {s} out of range ({} has {} switches)",
+                    topo.name(),
+                    topo.switches()
+                ));
+            }
+        }
         if self.handler() && !crate::util::is_pow2(group) {
             return Err(format!(
                 "handler programs need power-of-two ranks per tenant, got {group}"
@@ -475,6 +513,9 @@ impl ExpConfig {
     /// Build this run's fault plan (panics on knobs `validate` rejects).
     pub fn fault_plan(&self) -> crate::net::FaultPlan {
         crate::net::FaultPlan::new(self.loss, &self.drop_spec, self.trunk_degrade, self.seed)
+            .and_then(|p| {
+                p.with_failures(&self.crash_spec, &self.corrupt_spec, &self.reorder_spec)
+            })
             .expect("fault knobs were validated")
     }
 
@@ -669,6 +710,47 @@ mod tests {
         bad.loss = 0.1;
         bad.cost.timeout_ns = 0;
         assert!(bad.validate().is_err(), "lossy runs need a timeout");
+    }
+
+    #[test]
+    fn crash_corrupt_reorder_knobs_parse_and_validate() {
+        let cfg = ExpConfig::from_toml(
+            r#"
+            [run]
+            topology = "fattree"
+            crash = ["rank:3@epoch:2", "switch:1@ns:5000"]
+            corrupt = "0->1:2"
+            reorder = ["2->*:1"]
+            [cost]
+            max_retries = 6
+            "#,
+        )
+        .unwrap();
+        let plan = cfg.fault_plan();
+        assert!(plan.lossy() && plan.has_crashes());
+        assert_eq!(plan.rank_crash_epoch(3), Some(2));
+        assert_eq!(plan.switch_crashes(), vec![(1, 5000)]);
+
+        let mut bad = ExpConfig::default();
+        bad.crash_spec = "rank:9@epoch:1".into();
+        let err = bad.validate().unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+        let mut bad = ExpConfig::default();
+        bad.crash_spec = "switch:0@ns:100".into();
+        let err = bad.validate().unwrap_err();
+        assert!(err.contains("switch"), "hypercube has no switches: {err}");
+        let mut bad = ExpConfig::default();
+        bad.corrupt_spec = "nonsense".into();
+        let err = bad.validate().unwrap_err();
+        assert!(err.contains("corrupt rule"), "{err}");
+        let mut bad = ExpConfig::default();
+        bad.reorder_spec = "0->1:0".into();
+        let err = bad.validate().unwrap_err();
+        assert!(err.contains("reorder rule"), "{err}");
+        let mut bad = ExpConfig::default();
+        bad.crash_spec = "rank:3@epoch:2".into();
+        bad.cost.probe_interval_ns = 0;
+        assert!(bad.validate().is_err(), "crash runs need a probe interval");
     }
 
     #[test]

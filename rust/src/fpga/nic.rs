@@ -119,6 +119,14 @@ pub struct Nic {
     /// destination (receiver-side dedup: a duplicate is re-acked but
     /// not re-processed).
     pub seen_txns: HashSet<u64>,
+    /// Liveness bookkeeping (crash-scheduled runs only): when each peer
+    /// rank was last heard from (any frame sourced by it that reached
+    /// this card).  Fresh entries suppress redundant probes.
+    pub last_heard: HashMap<Rank, SimTime>,
+    /// Liveness probes this card originated (metrics / tests).
+    pub probes_tx: u64,
+    /// Monotonic sequence for probes this card originates.
+    pub probe_seq: u64,
 }
 
 impl Nic {
@@ -136,6 +144,9 @@ impl Nic {
             hpu: HpuSched::default(),
             pending: HashMap::new(),
             seen_txns: HashSet::new(),
+            last_heard: HashMap::new(),
+            probes_tx: 0,
+            probe_seq: 0,
         }
     }
 

@@ -444,6 +444,17 @@ pub struct RunMetrics {
     /// Total original-send -> eventual-ack latency over frames that
     /// needed at least one retransmit.
     pub recovery_ns: u64,
+    /// Fail-stop crashes that fired (scheduled rank + switch deaths).
+    pub crashes: u64,
+    /// Live peers the suspicion protocol wrongly declared dead.
+    pub false_suspicions: u64,
+    /// Total crash -> declared-dead latency over true detections.
+    pub detection_ns: u64,
+    /// Route-table recomputations that kept the survivors connected.
+    pub reroutes: u64,
+    /// Iterations completed over a shrunk survivor communicator after a
+    /// rank was declared dead.
+    pub degraded_completions: u64,
     /// Total simulated duration.
     pub sim_ns: u64,
     /// Latency attribution breakdown (populated only when the run had
@@ -476,10 +487,25 @@ impl RunMetrics {
             retransmits: 0,
             timeouts_fired: 0,
             recovery_ns: 0,
+            crashes: 0,
+            false_suspicions: 0,
+            detection_ns: 0,
+            reroutes: 0,
+            degraded_completions: 0,
             sim_ns: 0,
             attribution: None,
             host_hist: LogHistogram::new(),
         }
+    }
+
+    /// True when any fail-stop machinery left a trace in this run —
+    /// gates the conditional artifact fields below.
+    pub fn has_failure_activity(&self) -> bool {
+        self.crashes != 0
+            || self.false_suspicions != 0
+            || self.detection_ns != 0
+            || self.reroutes != 0
+            || self.degraded_completions != 0
     }
 
     /// Per-tenant pooled host latency sized for `tenants` tenants.
@@ -538,6 +564,18 @@ impl RunMetrics {
             ("timeouts_fired".into(), Json::int(self.timeouts_fired)),
             ("recovery_ns".into(), Json::int(self.recovery_ns)),
         ];
+        // Failure-model fields only exist when a crash/suspicion/reroute
+        // actually happened: fault-free artifact bytes stay identical to
+        // pre-failure-model runs, and legacy parsers default them to 0.
+        if self.has_failure_activity() {
+            fields.extend([
+                ("crashes".into(), Json::int(self.crashes)),
+                ("false_suspicions".into(), Json::int(self.false_suspicions)),
+                ("detection_ns".into(), Json::int(self.detection_ns)),
+                ("reroutes".into(), Json::int(self.reroutes)),
+                ("degraded_completions".into(), Json::int(self.degraded_completions)),
+            ]);
+        }
         // Attribution / histogram fields only exist when the run opted
         // in — their absence keeps pre-attribution artifact bytes
         // byte-identical.
@@ -800,6 +838,18 @@ mod tests {
         // attribution off / hist empty: no such keys at all
         assert!(j.get("attribution").is_none());
         assert!(j.get("host_hist_log2").is_none());
+        // no failure activity: the fail-stop fields are absent too
+        assert!(j.get("crashes").is_none());
+        assert!(j.get("degraded_completions").is_none());
+        m.crashes = 1;
+        m.detection_ns = 700;
+        let j = m.to_json();
+        assert_eq!(j.get("crashes").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("detection_ns").unwrap().as_u64(), Some(700));
+        assert_eq!(j.get("false_suspicions").unwrap().as_u64(), Some(0));
+        assert_eq!(j.get("reroutes").unwrap().as_u64(), Some(0));
+        m.crashes = 0;
+        m.detection_ns = 0;
         m.attribution = Some(Attribution::finalize(10, 0, 0, 0, 5, 0, 300));
         m.host_hist.record(100);
         let j = m.to_json();

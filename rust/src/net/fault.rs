@@ -2,33 +2,45 @@
 //!
 //! Everything here is driven by the per-job seed: random per-hop packet
 //! loss (`loss`), explicit drop schedules replayable from TOML
-//! (`drop = "src->dst:nth"`), and degraded trunk bandwidth
-//! (`trunk_degrade`).  The plan is consulted once per frame hop in
-//! `Cluster::transmit_on_port`; a quiet plan (loss 0, no rules, degrade
-//! 1.0) is never consulted at all, so fault-free runs keep the
-//! pre-fault event schedule — and the golden figure bytes —
-//! byte-identical.
+//! (`drop = "src->dst:nth"`), frame corruption and reordering schedules
+//! (`corrupt` / `reorder`, same rule syntax), fail-stop crash schedules
+//! (`crash = "rank:3@epoch:2, switch:1@ns:5000"`), and degraded trunk
+//! bandwidth (`trunk_degrade`).  The plan is consulted once per frame
+//! hop in `Cluster::transmit_on_port`; a quiet plan (loss 0, no rules,
+//! no crashes, degrade 1.0) is never consulted at all, so fault-free
+//! runs keep the pre-fault event schedule — and the golden figure
+//! bytes — byte-identical.
 //!
-//! Drop-schedule syntax (one rule per comma-separated entry, bare or as
-//! a TOML string array):
+//! Link-rule syntax (one rule per comma-separated entry, bare or as a
+//! TOML string array), shared by `drop`, `corrupt` and `reorder`:
 //!
-//! - `"3->1:2"` — drop the 2nd frame transmitted on the directed
+//! - `"3->1:2"` — hit the 2nd frame transmitted on the directed
 //!   physical link from node 3 to node 1 (nodes >= p are switches);
-//! - `"0->*:1"` — drop the 1st frame node 0 transmits on ANY link
-//!   (wildcard destination — the easy way to guarantee a loss without
+//! - `"0->*:1"` — hit the 1st frame node 0 transmits on ANY link
+//!   (wildcard destination — the easy way to guarantee a fault without
 //!   knowing the topology's wiring).
 //!
 //! `nth` is 1-based and counts every frame on the edge, retransmissions
 //! and transport acks included — so a schedule can kill the same frame
-//! repeatedly (`"0->1:1, 0->1:2, ..."`) to exhaust `max_retries`.
+//! repeatedly (`"0->1:1, 0->1:2, ..."`) to exhaust `max_retries`.  The
+//! three rule kinds share ONE per-edge counter: the 3rd frame on a link
+//! is the 3rd frame, whether a rule drops, corrupts or reorders it
+//! (drop wins over corrupt wins over reorder if several match).
+//!
+//! Crash-schedule syntax (comma-separated, bare or TOML array):
+//!
+//! - `"rank:3@epoch:2"` — rank 3 fail-stops (host and NIC die) the
+//!   instant it would start collective epoch 2;
+//! - `"switch:1@ns:5000"` — the topology's switch #1 (node id `p + 1`)
+//!   dies at simulated time 5000 ns.
 
 use std::collections::HashMap;
 
 use crate::sim::SplitMix64;
 
-/// One scheduled deterministic drop: the `nth` (1-based) frame on the
-/// directed edge `src -> dst`, or on any edge out of `src` when `dst`
-/// is the wildcard.
+/// One scheduled deterministic link fault: the `nth` (1-based) frame on
+/// the directed edge `src -> dst`, or on any edge out of `src` when
+/// `dst` is the wildcard.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct DropRule {
     pub src: usize,
@@ -38,15 +50,43 @@ pub struct DropRule {
     pub nth: u64,
 }
 
-/// Parse a drop schedule: comma-separated `src->dst:nth` rules, with
-/// `*` as a wildcard destination.  Accepts both the bare form
+/// What the plan does to one frame hop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkFault {
+    /// Frame vanishes in flight (scheduled drop or seeded loss coin).
+    Drop,
+    /// Frame arrives with a flipped payload: the receiver's CRC check
+    /// rejects it, so it behaves like a drop that costs delivery time.
+    Corrupt,
+    /// Frame is held back in flight and delivered late, behind frames
+    /// transmitted after it.
+    Reorder,
+}
+
+/// One scheduled fail-stop crash.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CrashSpec {
+    /// `rank:R@epoch:E` — rank R's host and NIC die when the rank would
+    /// start collective epoch E (0-based iteration index).
+    Rank { rank: usize, epoch: u32 },
+    /// `switch:S@ns:T` — switch #S (0-based, node id `p + S`) dies at
+    /// simulated time T ns.
+    Switch { switch: usize, at_ns: u64 },
+}
+
+fn clean_list(spec: &str) -> String {
+    spec.chars().filter(|c| !matches!(c, '[' | ']' | '"' | '\'')).collect()
+}
+
+/// Parse a link-fault schedule: comma-separated `src->dst:nth` rules,
+/// with `*` as a wildcard destination.  Accepts both the bare form
 /// (`"0->1:1, 2->*:3"`) and the raw bracketed TOML-array form
 /// (`["0->1:1", "2->*:3"]`) — the mini-TOML parser hands list values
-/// through as their source text.
-pub fn parse_drop_spec(spec: &str) -> Result<Vec<DropRule>, String> {
+/// through as their source text.  `knob` names the schedule in errors
+/// (`drop` / `corrupt` / `reorder`).
+pub fn parse_link_spec(spec: &str, knob: &str) -> Result<Vec<DropRule>, String> {
     let mut rules = Vec::new();
-    let cleaned: String =
-        spec.chars().filter(|c| !matches!(c, '[' | ']' | '"' | '\'')).collect();
+    let cleaned = clean_list(spec);
     for part in cleaned.split(',') {
         let part = part.trim();
         if part.is_empty() {
@@ -54,29 +94,87 @@ pub fn parse_drop_spec(spec: &str) -> Result<Vec<DropRule>, String> {
         }
         let (edge, nth) = part
             .split_once(':')
-            .ok_or_else(|| format!("drop rule '{part}': expected src->dst:nth"))?;
+            .ok_or_else(|| format!("{knob} rule '{part}': expected src->dst:nth"))?;
         let (src, dst) = edge
             .split_once("->")
-            .ok_or_else(|| format!("drop rule '{part}': expected src->dst:nth"))?;
+            .ok_or_else(|| format!("{knob} rule '{part}': expected src->dst:nth"))?;
         let src: usize =
-            src.trim().parse().map_err(|e| format!("drop rule '{part}': bad src: {e}"))?;
+            src.trim().parse().map_err(|e| format!("{knob} rule '{part}': bad src: {e}"))?;
         let dst = match dst.trim() {
             "*" => None,
-            d => Some(d.parse().map_err(|e| format!("drop rule '{part}': bad dst: {e}"))?),
+            d => Some(d.parse().map_err(|e| format!("{knob} rule '{part}': bad dst: {e}"))?),
         };
         let nth: u64 =
-            nth.trim().parse().map_err(|e| format!("drop rule '{part}': bad nth: {e}"))?;
+            nth.trim().parse().map_err(|e| format!("{knob} rule '{part}': bad nth: {e}"))?;
         if nth == 0 {
-            return Err(format!("drop rule '{part}': nth is 1-based, 0 never matches"));
+            return Err(format!("{knob} rule '{part}': nth is 1-based, 0 never matches"));
         }
         rules.push(DropRule { src, dst, nth });
     }
     Ok(rules)
 }
 
-/// The per-run fault plan: seeded loss draws, scheduled drops and trunk
-/// degradation, plus the per-edge frame counters the schedules match
-/// against.
+/// Parse a drop schedule (see [`parse_link_spec`]).
+pub fn parse_drop_spec(spec: &str) -> Result<Vec<DropRule>, String> {
+    parse_link_spec(spec, "drop")
+}
+
+/// Parse a fail-stop crash schedule: comma-separated
+/// `rank:R@epoch:E` / `switch:S@ns:T` entries, bare or as a TOML
+/// string array.
+pub fn parse_crash_spec(spec: &str) -> Result<Vec<CrashSpec>, String> {
+    let mut crashes = Vec::new();
+    let cleaned = clean_list(spec);
+    for part in cleaned.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (who, when) = part.split_once('@').ok_or_else(|| {
+            format!("crash rule '{part}': expected rank:R@epoch:E or switch:S@ns:T")
+        })?;
+        let (kind, idx) = who
+            .split_once(':')
+            .ok_or_else(|| format!("crash rule '{part}': expected rank:R or switch:S"))?;
+        let idx: usize = idx
+            .trim()
+            .parse()
+            .map_err(|e| format!("crash rule '{part}': bad index: {e}"))?;
+        let (wkey, wval) = when
+            .split_once(':')
+            .ok_or_else(|| format!("crash rule '{part}': expected @epoch:E or @ns:T"))?;
+        match (kind.trim(), wkey.trim()) {
+            ("rank", "epoch") => {
+                let epoch: u32 = wval
+                    .trim()
+                    .parse()
+                    .map_err(|e| format!("crash rule '{part}': bad epoch: {e}"))?;
+                crashes.push(CrashSpec::Rank { rank: idx, epoch });
+            }
+            ("switch", "ns") => {
+                let at_ns: u64 = wval
+                    .trim()
+                    .parse()
+                    .map_err(|e| format!("crash rule '{part}': bad ns: {e}"))?;
+                crashes.push(CrashSpec::Switch { switch: idx, at_ns });
+            }
+            ("rank", k) => {
+                return Err(format!("crash rule '{part}': rank crashes take @epoch:E, not @{k}"));
+            }
+            ("switch", k) => {
+                return Err(format!("crash rule '{part}': switch crashes take @ns:T, not @{k}"));
+            }
+            (k, _) => {
+                return Err(format!("crash rule '{part}': unknown component '{k}' (rank|switch)"));
+            }
+        }
+    }
+    Ok(crashes)
+}
+
+/// The per-run fault plan: seeded loss draws, scheduled drops /
+/// corruptions / reorders, fail-stop crashes and trunk degradation,
+/// plus the per-edge frame counters the schedules match against.
 pub struct FaultPlan {
     /// Per-hop loss probability in [0, 1) for reliable-protocol frames.
     pub loss: f64,
@@ -84,6 +182,9 @@ pub struct FaultPlan {
     /// means full rate and is never applied.
     pub trunk_degrade: f64,
     rules: Vec<DropRule>,
+    corrupt_rules: Vec<DropRule>,
+    reorder_rules: Vec<DropRule>,
+    crashes: Vec<CrashSpec>,
     rng: SplitMix64,
     /// Frames seen per directed edge (counting starts at 1).
     edge_seen: HashMap<(usize, usize), u64>,
@@ -91,6 +192,10 @@ pub struct FaultPlan {
     src_seen: HashMap<usize, u64>,
     /// Total frames this plan has dropped (diagnostics).
     pub drops_injected: u64,
+    /// Total frames this plan has corrupted (diagnostics).
+    pub corruptions_injected: u64,
+    /// Total frames this plan has reordered (diagnostics).
+    pub reorders_injected: u64,
 }
 
 impl FaultPlan {
@@ -110,13 +215,32 @@ impl FaultPlan {
             loss,
             trunk_degrade,
             rules: parse_drop_spec(drop_spec)?,
+            corrupt_rules: Vec::new(),
+            reorder_rules: Vec::new(),
+            crashes: Vec::new(),
             // forked off the job seed so the fault stream never perturbs
             // the jitter / payload / background draws
             rng: SplitMix64::new(seed ^ 0xFAD7_1A11),
             edge_seen: HashMap::new(),
             src_seen: HashMap::new(),
             drops_injected: 0,
+            corruptions_injected: 0,
+            reorders_injected: 0,
         })
+    }
+
+    /// Attach the fail-stop / corruption / reorder schedules (empty
+    /// strings are no-ops, keeping the plan quiet).
+    pub fn with_failures(
+        mut self,
+        crash_spec: &str,
+        corrupt_spec: &str,
+        reorder_spec: &str,
+    ) -> Result<FaultPlan, String> {
+        self.crashes = parse_crash_spec(crash_spec)?;
+        self.corrupt_rules = parse_link_spec(corrupt_spec, "corrupt")?;
+        self.reorder_rules = parse_link_spec(reorder_spec, "reorder")?;
+        Ok(self)
     }
 
     /// A quiet plan that is never consulted (the default).
@@ -124,11 +248,65 @@ impl FaultPlan {
         FaultPlan::new(0.0, "", 1.0, seed).expect("quiet plan is always valid")
     }
 
-    /// Does this plan ever drop frames?  Only lossy plans arm the
-    /// timeout/retransmit protocol (txn ids, acks, timers) — a non-lossy
-    /// plan leaves the wire format and event schedule untouched.
+    /// Does this plan ever lose, damage or kill anything?  Only lossy
+    /// plans arm the timeout/retransmit protocol (txn ids, acks,
+    /// timers) and — when crashes are scheduled — the heartbeat probes;
+    /// a non-lossy plan leaves the wire format and event schedule
+    /// untouched.  Crash schedules count: detecting a dead peer rides
+    /// on the same ack/timeout machinery.
     pub fn lossy(&self) -> bool {
-        self.loss > 0.0 || !self.rules.is_empty()
+        self.loss > 0.0
+            || !self.rules.is_empty()
+            || !self.corrupt_rules.is_empty()
+            || !self.reorder_rules.is_empty()
+            || !self.crashes.is_empty()
+    }
+
+    /// Does this plan schedule any fail-stop crash?  Arms heartbeat
+    /// probes, liveness tracking and the degrade-don't-hang machinery.
+    pub fn has_crashes(&self) -> bool {
+        !self.crashes.is_empty()
+    }
+
+    /// The epoch at which `rank` is scheduled to fail-stop, if any.
+    pub fn rank_crash_epoch(&self, rank: usize) -> Option<u32> {
+        self.crashes.iter().find_map(|c| match c {
+            CrashSpec::Rank { rank: r, epoch } if *r == rank => Some(*epoch),
+            _ => None,
+        })
+    }
+
+    /// All scheduled switch crashes as `(switch_index, at_ns)` pairs.
+    pub fn switch_crashes(&self) -> Vec<(usize, u64)> {
+        self.crashes
+            .iter()
+            .filter_map(|c| match c {
+                CrashSpec::Switch { switch, at_ns } => Some((*switch, *at_ns)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Largest rank index named by a rank-crash rule (validation).
+    pub fn max_crash_rank(&self) -> Option<usize> {
+        self.crashes
+            .iter()
+            .filter_map(|c| match c {
+                CrashSpec::Rank { rank, .. } => Some(*rank),
+                _ => None,
+            })
+            .max()
+    }
+
+    /// Largest switch index named by a switch-crash rule (validation).
+    pub fn max_crash_switch(&self) -> Option<usize> {
+        self.crashes
+            .iter()
+            .filter_map(|c| match c {
+                CrashSpec::Switch { switch, .. } => Some(*switch),
+                _ => None,
+            })
+            .max()
     }
 
     /// Does this plan slow trunk links down?
@@ -142,10 +320,11 @@ impl FaultPlan {
     }
 
     /// Consult the plan for one frame hop on the directed edge
-    /// `src -> dst`.  Counts the hop, applies scheduled drops first
-    /// (deterministic, no RNG draw), then the seeded loss coin.  Only
-    /// call when [`FaultPlan::lossy`] — every call advances counters.
-    pub fn should_drop(&mut self, src: usize, dst: usize) -> bool {
+    /// `src -> dst`.  Counts the hop, applies scheduled rules first
+    /// (deterministic, no RNG draw; drop beats corrupt beats reorder),
+    /// then the seeded loss coin.  Only call when [`FaultPlan::lossy`]
+    /// — every call advances counters.
+    pub fn link_fault(&mut self, src: usize, dst: usize) -> Option<LinkFault> {
         let edge_n = {
             let c = self.edge_seen.entry((src, dst)).or_insert(0);
             *c += 1;
@@ -156,22 +335,39 @@ impl FaultPlan {
             *c += 1;
             *c
         };
-        let scheduled = self.rules.iter().any(|r| {
-            r.src == src
-                && match r.dst {
-                    Some(d) => d == dst && r.nth == edge_n,
-                    None => r.nth == src_n,
-                }
-        });
-        if scheduled {
+        let hit = |rules: &[DropRule]| {
+            rules.iter().any(|r| {
+                r.src == src
+                    && match r.dst {
+                        Some(d) => d == dst && r.nth == edge_n,
+                        None => r.nth == src_n,
+                    }
+            })
+        };
+        if hit(&self.rules) {
             self.drops_injected += 1;
-            return true;
+            return Some(LinkFault::Drop);
+        }
+        if hit(&self.corrupt_rules) {
+            self.corruptions_injected += 1;
+            return Some(LinkFault::Corrupt);
+        }
+        if hit(&self.reorder_rules) {
+            self.reorders_injected += 1;
+            return Some(LinkFault::Reorder);
         }
         if self.loss > 0.0 && self.rng.next_f64() < self.loss {
             self.drops_injected += 1;
-            return true;
+            return Some(LinkFault::Drop);
         }
-        false
+        None
+    }
+
+    /// Legacy drop-only view of [`FaultPlan::link_fault`] (kept for the
+    /// PR 8 call sites and tests; corrupt/reorder hits return false but
+    /// still advance the shared counters).
+    pub fn should_drop(&mut self, src: usize, dst: usize) -> bool {
+        matches!(self.link_fault(src, dst), Some(LinkFault::Drop))
     }
 }
 
@@ -198,6 +394,41 @@ mod tests {
     }
 
     #[test]
+    fn parse_crash_bare_and_bracketed_forms() {
+        let bare = parse_crash_spec("rank:3@epoch:2, switch:1@ns:5000").unwrap();
+        let toml = parse_crash_spec(r#"["rank:3@epoch:2", "switch:1@ns:5000"]"#).unwrap();
+        assert_eq!(bare, toml);
+        assert_eq!(bare[0], CrashSpec::Rank { rank: 3, epoch: 2 });
+        assert_eq!(bare[1], CrashSpec::Switch { switch: 1, at_ns: 5000 });
+        assert!(parse_crash_spec("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_crash_rejects_malformed_rules() {
+        assert!(parse_crash_spec("rank:3").is_err(), "missing @when");
+        assert!(parse_crash_spec("rank:3@ns:5").is_err(), "ranks die at epochs");
+        assert!(parse_crash_spec("switch:1@epoch:2").is_err(), "switches die at ns");
+        assert!(parse_crash_spec("host:1@epoch:2").is_err(), "unknown component");
+        assert!(parse_crash_spec("rank:x@epoch:2").is_err());
+        assert!(parse_crash_spec("rank:3@epoch:x").is_err());
+    }
+
+    #[test]
+    fn crash_plan_accessors() {
+        let p = FaultPlan::quiet(1)
+            .with_failures("rank:3@epoch:2, switch:1@ns:5000, rank:5@epoch:0", "", "")
+            .unwrap();
+        assert!(p.lossy(), "crash schedules arm the reliable protocol");
+        assert!(p.has_crashes());
+        assert_eq!(p.rank_crash_epoch(3), Some(2));
+        assert_eq!(p.rank_crash_epoch(5), Some(0));
+        assert_eq!(p.rank_crash_epoch(0), None);
+        assert_eq!(p.switch_crashes(), vec![(1, 5000)]);
+        assert_eq!(p.max_crash_rank(), Some(5));
+        assert_eq!(p.max_crash_switch(), Some(1));
+    }
+
+    #[test]
     fn scheduled_drop_hits_exactly_the_nth_frame() {
         let mut p = FaultPlan::new(0.0, "3->1:2", 1.0, 7).unwrap();
         assert!(p.lossy());
@@ -206,6 +437,32 @@ mod tests {
         assert!(!p.should_drop(3, 1), "3rd frame passes");
         assert!(!p.should_drop(1, 3), "reverse edge counts separately");
         assert_eq!(p.drops_injected, 1);
+    }
+
+    #[test]
+    fn corrupt_and_reorder_rules_share_the_edge_counter() {
+        let mut p =
+            FaultPlan::new(0.0, "", 1.0, 7).unwrap().with_failures("", "0->1:2", "0->1:3").unwrap();
+        assert!(p.lossy(), "corrupt/reorder schedules arm the reliable protocol");
+        assert!(!p.has_crashes());
+        assert_eq!(p.link_fault(0, 1), None, "1st frame clean");
+        assert_eq!(p.link_fault(0, 1), Some(LinkFault::Corrupt), "2nd corrupted");
+        assert_eq!(p.link_fault(0, 1), Some(LinkFault::Reorder), "3rd reordered");
+        assert_eq!(p.link_fault(0, 1), None, "4th clean");
+        assert_eq!(p.corruptions_injected, 1);
+        assert_eq!(p.reorders_injected, 1);
+        assert_eq!(p.drops_injected, 0);
+    }
+
+    #[test]
+    fn drop_beats_corrupt_beats_reorder_on_one_frame() {
+        let mut p = FaultPlan::new(0.0, "0->1:1", 1.0, 7)
+            .unwrap()
+            .with_failures("", "0->1:1", "0->1:1")
+            .unwrap();
+        assert_eq!(p.link_fault(0, 1), Some(LinkFault::Drop));
+        assert_eq!(p.drops_injected, 1);
+        assert_eq!(p.corruptions_injected, 0);
     }
 
     #[test]
@@ -233,9 +490,13 @@ mod tests {
         let p = FaultPlan::quiet(1);
         assert!(!p.lossy());
         assert!(!p.degrades());
+        assert!(!p.has_crashes());
         assert!(FaultPlan::new(1.0, "", 1.0, 1).is_err(), "loss must stay below 1");
         assert!(FaultPlan::new(-0.1, "", 1.0, 1).is_err());
         assert!(FaultPlan::new(0.0, "", 0.5, 1).is_err(), "degrade < 1 would speed trunks up");
+        assert!(FaultPlan::quiet(1).with_failures("rank:1@epoch", "", "").is_err());
+        assert!(FaultPlan::quiet(1).with_failures("", "0->1", "").is_err());
+        assert!(FaultPlan::quiet(1).with_failures("", "", "0->1:0").is_err());
     }
 
     #[test]

@@ -24,10 +24,30 @@ pub const BG_HDR_LEN: usize = 12;
 pub const RELACK_LEN: usize = 12;
 
 /// Encoded size of the reliability shim prepended to the UDP body when a
-/// frame carries a nonzero transaction id: magic + pad + 8-byte txn.
-/// Only lossy runs pay these bytes — `txn == 0` frames are wire-identical
-/// to the pre-fault format.
-pub const TXN_SHIM_LEN: usize = 12;
+/// frame carries a nonzero transaction id: magic + pad + 8-byte txn +
+/// 4-byte CRC32 over the body (corruption detection — a frame whose CRC
+/// fails is counted and dropped by the receiving NIC, and the sender's
+/// retransmit timer recovers it).  Only lossy runs pay these bytes —
+/// `txn == 0` frames are wire-identical to the pre-fault format.
+pub const TXN_SHIM_LEN: usize = 16;
+
+/// Encoded size of a liveness probe body ([`Probe`]).
+pub const PROBE_LEN: usize = 12;
+
+/// CRC-32 (IEEE 802.3 polynomial, bitwise) over `bytes` — the check
+/// carried in the reliability shim.  Bitwise is plenty: frames are
+/// small and the shim only exists on armed (lossy) runs.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
 
 /// Max payload-data bytes per frame: MTU minus IP/UDP/collective headers,
 /// rounded down to a multiple of 8 so f64 elements never straddle frames.
@@ -196,6 +216,36 @@ impl RelAck {
     }
 }
 
+/// NIC-level liveness probe (crash-scheduled runs only): a minimal
+/// reliable frame whose end-to-end ack is the only answer — a live peer
+/// NIC acks it like any reliable frame, a dead one lets its retransmit
+/// timer exhaust, which is the suspicion signal.  `seq` numbers the
+/// probes a monitor has sent.
+#[derive(Clone, Copy, Debug)]
+pub struct Probe {
+    pub seq: u64,
+}
+
+impl Probe {
+    pub fn encoded_len(&self) -> usize {
+        PROBE_LEN
+    }
+
+    pub fn emit(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(b"PB"); // magic
+        out.extend_from_slice(&[0, 0]);
+        out.extend_from_slice(&self.seq.to_be_bytes());
+    }
+
+    pub fn parse(b: &[u8]) -> Option<Probe> {
+        if b.len() < PROBE_LEN || &b[0..2] != b"PB" {
+            return None;
+        }
+        let seq = u64::from_be_bytes(b[4..12].try_into().ok()?);
+        Some(Probe { seq })
+    }
+}
+
 /// The UDP body of a frame.
 #[derive(Clone, Debug)]
 pub enum FrameBody {
@@ -207,6 +257,8 @@ pub enum FrameBody {
     Bg(BgMsg),
     /// Transport-level reliability ack (lossy runs only).
     RelAck(RelAck),
+    /// NIC liveness probe (crash-scheduled runs only).
+    Probe(Probe),
 }
 
 impl FrameBody {
@@ -216,6 +268,7 @@ impl FrameBody {
             FrameBody::Sw(m) => m.encoded_len(),
             FrameBody::Bg(m) => m.encoded_len(),
             FrameBody::RelAck(a) => a.encoded_len(),
+            FrameBody::Probe(p) => p.encoded_len(),
         }
     }
 }
@@ -231,12 +284,17 @@ pub struct Frame {
     /// timeout/retransmit protocol and acked end-to-end by the
     /// destination.  Assigned by the cluster only on lossy runs.
     pub txn: u64,
+    /// Set in flight by a corruption fault: the serialized frame carries
+    /// a mangled CRC, and the receiving NIC discards it on the CRC check
+    /// (which the retransmit path then recovers).  Never set at
+    /// construction; costs nothing when false.
+    pub corrupt: bool,
 }
 
 impl Frame {
     /// An unreliable frame (txn 0) — every pre-fault construction site.
     pub fn new(src: Rank, dst: Rank, body: FrameBody) -> Frame {
-        Frame { src, dst, body, txn: 0 }
+        Frame { src, dst, body, txn: 0, corrupt: false }
     }
 
     /// Exact bytes this frame occupies from MAC header through UDP body
@@ -257,12 +315,21 @@ impl Frame {
             body.extend_from_slice(b"TX"); // reliability shim magic
             body.extend_from_slice(&[0, 0]);
             body.extend_from_slice(&self.txn.to_be_bytes());
+            body.extend_from_slice(&[0, 0, 0, 0]); // CRC placeholder
         }
         match &self.body {
             FrameBody::Coll(p) => p.emit(&mut body),
             FrameBody::Sw(m) => m.emit(&mut body),
             FrameBody::Bg(m) => m.emit(&mut body),
             FrameBody::RelAck(a) => a.emit(&mut body),
+            FrameBody::Probe(p) => p.emit(&mut body),
+        }
+        if self.txn != 0 {
+            let mut crc = crc32(&body[TXN_SHIM_LEN..]);
+            if self.corrupt {
+                crc ^= 0xA5A5_5A5A; // in-flight bit flips: CRC no longer matches
+            }
+            body[TXN_SHIM_LEN - 4..TXN_SHIM_LEN].copy_from_slice(&crc.to_be_bytes());
         }
         let mut out = Vec::with_capacity(self.wire_bytes());
         EthHeader::new(self.src, self.dst).emit(&mut out);
@@ -290,6 +357,10 @@ impl Frame {
                 if t == 0 {
                     return None; // a shim carrying txn 0 is malformed
                 }
+                let want = u32::from_be_bytes(body_bytes[12..16].try_into().ok()?);
+                if crc32(&body_bytes[TXN_SHIM_LEN..]) != want {
+                    return None; // CRC mismatch: corrupt in flight, drop
+                }
                 (t, &body_bytes[TXN_SHIM_LEN..])
             } else {
                 (0, body_bytes)
@@ -300,10 +371,12 @@ impl Frame {
             FrameBody::Sw(m)
         } else if let Some(a) = RelAck::parse(body_bytes) {
             FrameBody::RelAck(a)
+        } else if let Some(p) = Probe::parse(body_bytes) {
+            FrameBody::Probe(p)
         } else {
             FrameBody::Coll(CollPacket::parse(body_bytes)?)
         };
-        Some(Frame { src, dst, body, txn })
+        Some(Frame { src, dst, body, txn, corrupt: false })
     }
 }
 
@@ -492,6 +565,50 @@ mod tests {
         // txn 0 stays byte-identical to the pre-fault wire format
         let back = Frame::parse(&plain.serialize()).unwrap();
         assert_eq!(back.txn, 0);
+    }
+
+    #[test]
+    fn crc_shim_detects_in_flight_corruption() {
+        let mut f = Frame::new(2, 5, FrameBody::Sw(sw_msg(8)));
+        f.txn = 41;
+        // clean reliable frame roundtrips through the CRC check
+        let back = Frame::parse(&f.serialize()).unwrap();
+        assert_eq!(back.txn, 41);
+        // a corruption fault mangles the CRC: the receiver rejects it
+        f.corrupt = true;
+        assert!(Frame::parse(&f.serialize()).is_none(), "bad CRC must be dropped");
+        assert_eq!(f.wire_bytes(), {
+            let mut clean = f.clone();
+            clean.corrupt = false;
+            clean.wire_bytes()
+        }, "corruption never changes the frame's wire size");
+        // flipping a payload byte (not the stored CRC) is also caught
+        let clean = {
+            let mut c = f.clone();
+            c.corrupt = false;
+            c
+        };
+        let mut bytes = clean.serialize();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        assert!(Frame::parse(&bytes).is_none());
+    }
+
+    #[test]
+    fn probe_roundtrip() {
+        let mut f = Frame::new(3, 4, FrameBody::Probe(Probe { seq: 9 }));
+        f.txn = 17; // probes are always reliable
+        // probes are minimum-size frames even with the shim
+        assert_eq!(
+            f.wire_bytes(),
+            ETH_HDR_LEN + 46.max(IPV4_HDR_LEN + UDP_HDR_LEN + TXN_SHIM_LEN + PROBE_LEN)
+        );
+        let back = Frame::parse(&f.serialize()).unwrap();
+        assert_eq!(back.txn, 17);
+        match back.body {
+            FrameBody::Probe(p) => assert_eq!(p.seq, 9),
+            _ => panic!("wrong body"),
+        }
     }
 
     #[test]

@@ -12,8 +12,8 @@ pub mod headers;
 pub mod routing;
 pub mod topology;
 
-pub use fault::{parse_drop_spec, DropRule, FaultPlan};
-pub use frame::{BgMsg, Frame, FrameBody, RelAck, SwMsg, SwMsgKind, CHUNK_BYTES};
+pub use fault::{parse_crash_spec, parse_drop_spec, CrashSpec, DropRule, FaultPlan, LinkFault};
+pub use frame::{BgMsg, Frame, FrameBody, Probe, RelAck, SwMsg, SwMsgKind, CHUNK_BYTES};
 pub use headers::{EthHeader, Ipv4Header, MacAddr, UdpHeader};
 pub use routing::RouteTable;
 pub use topology::{NodeId, Topology};

@@ -26,12 +26,27 @@ pub struct RouteTable {
 impl RouteTable {
     /// All-pairs next-hop ports via BFS from every destination rank.
     pub fn build(topo: &Topology) -> RouteTable {
+        RouteTable::build_avoiding(topo, &[])
+    }
+
+    /// All-pairs next-hop ports via BFS, routing AROUND dead nodes
+    /// (fail-stop recovery: a dead switch or rank forwards nothing, so
+    /// BFS never expands through it).  `dead` is indexed by node id and
+    /// may be shorter than the node count (missing entries = alive);
+    /// an empty slice is exactly [`RouteTable::build`].  Dead
+    /// destinations keep unreachable (all-None) columns.  Tie-breaking
+    /// stays port-ordered, so rebuilt tables are deterministic too.
+    pub fn build_avoiding(topo: &Topology, dead: &[bool]) -> RouteTable {
         let nodes = topo.nodes();
         let p = topo.p();
+        let is_dead = |n: usize| dead.get(n).copied().unwrap_or(false);
         let mut next = vec![vec![None; p]; nodes];
         let mut dist = vec![usize::MAX; nodes];
         let mut q = VecDeque::new();
         for dst in 0..p {
+            if is_dead(dst) {
+                continue;
+            }
             // BFS outward from dst; the first hop each node uses to reach
             // its BFS parent is its next-hop towards dst.
             dist.iter_mut().for_each(|d| *d = usize::MAX);
@@ -40,7 +55,7 @@ impl RouteTable {
             q.push_back(dst);
             while let Some(u) = q.pop_front() {
                 for &(_, v) in topo.neighbors(u) {
-                    if dist[v] == usize::MAX {
+                    if dist[v] == usize::MAX && !is_dead(v) {
                         dist[v] = dist[u] + 1;
                         // v reaches dst by sending to u: find v's port to u.
                         // neighbor lookup is port-ordered => deterministic.
@@ -52,6 +67,12 @@ impl RouteTable {
             }
         }
         RouteTable { next }
+    }
+
+    /// Can `src` still reach rank `dst` under this table?  (Trivially
+    /// true for src == dst.)  Used for the post-reroute partition check.
+    pub fn reaches(&self, src: usize, dst: Rank) -> bool {
+        src == dst || self.next[src][dst].is_some()
     }
 
     /// Output port at `node` for traffic to rank `dst`; None if
@@ -157,6 +178,72 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn reroute_around_dead_switch_on_fattree() {
+        let t = Topology::fattree(16, 4).unwrap();
+        let alive = RouteTable::build(&t);
+        // kill the first hop out of host 0 (its edge switch): hosts under
+        // it are cut off, but every other pair reroutes
+        let edge0 = t.neighbors(0)[0].1;
+        let mut dead = vec![false; t.nodes()];
+        dead[edge0] = true;
+        let r = RouteTable::build_avoiding(&t, &dead);
+        assert!(!r.reaches(0, 2), "host under the dead edge switch is cut off");
+        for s in 4..16usize {
+            for d in 4..16usize {
+                assert!(r.reaches(s, d), "{s}->{d} must survive an edge-switch death");
+                if s != d {
+                    assert!(r.hops(&t, s, d).is_some());
+                }
+            }
+        }
+        // killing an AGGREGATION-layer switch instead cuts nothing off:
+        // fat-trees have redundant paths above the edge layer
+        let agg = t.neighbors(edge0).iter().map(|&(_, v)| v).find(|&v| v != 0 && t.is_switch(v));
+        if let Some(agg) = agg {
+            let mut dead = vec![false; t.nodes()];
+            dead[agg] = true;
+            let r = RouteTable::build_avoiding(&t, &dead);
+            for s in 0..16usize {
+                for d in 0..16usize {
+                    assert!(r.reaches(s, d), "{s}->{d} must reroute around a dead agg switch");
+                }
+            }
+        }
+        // empty dead set is exactly build()
+        let rebuilt = RouteTable::build_avoiding(&t, &[]);
+        for s in 0..t.nodes() {
+            for d in 0..16usize {
+                assert_eq!(rebuilt.next_hop(s, d), alive.next_hop(s, d));
+            }
+        }
+    }
+
+    #[test]
+    fn star_trunk_death_partitions() {
+        let t = Topology::star(8, 4).unwrap();
+        // kill one leaf switch: its hosts are partitioned from the rest
+        let leaf0 = t.neighbors(0)[0].1;
+        assert!(t.is_switch(leaf0));
+        let mut dead = vec![false; t.nodes()];
+        dead[leaf0] = true;
+        let r = RouteTable::build_avoiding(&t, &dead);
+        assert!(!r.reaches(0, 7), "hosts behind a dead leaf are unreachable");
+        assert!(r.reaches(4, 7), "the other leaf's hosts still talk");
+    }
+
+    #[test]
+    fn ring_reroutes_around_dead_rank() {
+        let t = Topology::ring(8);
+        let mut dead = vec![false; t.nodes()];
+        dead[3] = true;
+        let r = RouteTable::build_avoiding(&t, &dead);
+        // 2 -> 4 now goes the long way around the ring
+        assert!(r.reaches(2, 4));
+        assert_eq!(r.hops(&t, 2, 4), Some(6));
+        assert!(!r.reaches(0, 3), "dead destination stays unreachable");
     }
 
     #[test]

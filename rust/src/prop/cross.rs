@@ -343,6 +343,93 @@ fn recovery_agrees_with_oracle_under_loss() {
 }
 
 #[test]
+fn survivors_agree_with_shrunk_oracle() {
+    // Fail-stop degradation must be ULFM-shrink exact: for random
+    // (victim rank, path, algorithm, topology, tenant layout) with the
+    // victim fail-stopping before its first contribution, every
+    // survivor's result must bit-match the oracle prefix computed over
+    // the survivor contributions ONLY, in original rank order — and a
+    // tenant the victim does not belong to must keep its full-group
+    // values.  The plans are crash-only (no loss), so the detector must
+    // never evict a healthy rank.  I32 + Sum keeps the match exact.
+    let mut total_crashes = 0u64;
+    let mut total_degraded = 0u64;
+    for_each_case(20, 0xDEAD_5CAB, |rng| {
+        let mut cfg = ExpConfig::default();
+        cfg.path = *choose(rng, &[ExecPath::Sw, ExecPath::Fpga, ExecPath::Handler]);
+        cfg.algo = if cfg.path == ExecPath::Handler {
+            AlgoType::RecursiveDoubling // the handler VM brings its own program
+        } else {
+            *choose(rng, &[AlgoType::RecursiveDoubling, AlgoType::Sequential])
+        };
+        cfg.coll = *choose(rng, &[CollType::Scan, CollType::Exscan]);
+        cfg.p = *choose(rng, &[4usize, 8, 16]);
+        cfg.tenants = if cfg.p >= 8 { *choose(rng, &[1usize, 2]) } else { 1 };
+        // rank death never partitions these fabrics: hosts hang off
+        // switches (fattree, star) or a >=2-connected host graph
+        // (hypercube at p >= 4)
+        cfg.topology = choose(rng, &["hypercube", "fattree", "star:3"]).to_string();
+        cfg.dtype = Dtype::I32;
+        cfg.op = Op::Sum;
+        cfg.msg_bytes = *choose(rng, &[1usize, 5, 16]) * cfg.dtype.size();
+        cfg.seed = rng.next_u64();
+        cfg.cost.start_jitter_ns = *choose(rng, &[0u64, 5_000]);
+        cfg.iters = 1; // injection covers epoch 0 only
+        cfg.warmup = 0;
+        cfg.verify = false; // the TEST does the comparing, not the cluster
+        let victim = rng.next_below(cfg.p as u64) as usize;
+        cfg.crash_spec = format!("rank:{victim}@epoch:0");
+
+        let compute = make_engine(EngineKind::Native, "artifacts");
+        let contribs = random_contributions(rng, &cfg);
+        let mut cluster = Cluster::new(cfg.clone(), Rc::clone(&compute));
+        cluster.injected = Some(contribs.clone());
+        let ctx = format!(
+            "{:?}/{:?}/{:?} p={} tenants={} on {} victim={victim}",
+            cfg.path, cfg.algo, cfg.coll, cfg.p, cfg.tenants, cfg.topology
+        );
+        let metrics = cluster.run().unwrap_or_else(|e| panic!("{ctx}: {e}"));
+        assert_eq!(metrics.crashes, 1, "the scheduled crash fires ({ctx})");
+        assert_eq!(
+            metrics.false_suspicions, 0,
+            "a crash-only plan must never evict a healthy rank ({ctx})"
+        );
+        total_crashes += metrics.crashes;
+        total_degraded += metrics.degraded_completions;
+
+        let gsize = cfg.p / cfg.tenants;
+        for r in 0..cfg.p {
+            if r == victim {
+                assert!(
+                    cluster.results[r].is_none(),
+                    "a dead rank returns nothing ({ctx})"
+                );
+                continue;
+            }
+            // the survivor group of r's tenant, original rank order —
+            // for the victim's tenant this is the shrunk group, for any
+            // other tenant it is the full group
+            let base = (r / gsize) * gsize;
+            let live: Vec<usize> =
+                (base..base + gsize).filter(|&g| g != victim).collect();
+            let present: Vec<Payload> =
+                live.iter().map(|&g| contribs[g].clone()).collect();
+            let sidx = live.iter().position(|&g| g == r).expect("r survives");
+            let want =
+                oracle_prefix(&*compute, &present, cfg.op, cfg.coll.inclusive(), sidx)
+                    .expect("survivor oracle");
+            let got = cluster.results[r]
+                .as_ref()
+                .unwrap_or_else(|| panic!("survivor rank {r} never completed ({ctx})"));
+            assert_agree(got, &want, &format!("survivor rank {r} ({ctx})"));
+        }
+    });
+    // the random space must actually exercise the degradation machinery
+    assert_eq!(total_crashes, 20, "every case schedules exactly one crash");
+    assert!(total_degraded > 0, "no case ever completed a shrunk epoch");
+}
+
+#[test]
 fn software_offload_and_oracle_agree_on_every_rank() {
     for_each_case(40, 0xC0_55A1, |rng| {
         let cfg = random_case(rng);

@@ -1,9 +1,11 @@
 //! Event vocabulary of the simulated cluster.
 //!
-//! Seven event kinds cover the whole system: host processes acting, data
+//! Nine event kinds cover the whole system: host processes acting, data
 //! crossing the host/NIC boundary (in both directions), frames arriving
 //! at NIC ports, NIC handler units retiring, background-traffic
-//! injections, and retransmit-timer expiry for the reliability layer.  Costs (host stack, DMA crossing, wire time) are charged
+//! injections, retransmit-timer expiry for the reliability layer, the
+//! liveness probe timer, and scheduled switch deaths (the last two only
+//! on crash-scheduled runs).  Costs (host stack, DMA crossing, wire time) are charged
 //! when the event is *scheduled*; the event fires when the thing has
 //! fully happened.
 
@@ -60,15 +62,34 @@ pub enum EventKind {
     /// ack already came back (the pending entry is gone); otherwise the
     /// NIC retransmits or gives up.
     RetxTimer { rank: Rank, txn: u64 },
+    /// `rank`'s NIC low-rate liveness probe timer fires: if its monitored
+    /// peer has been silent for a probe interval, send a reliable Probe
+    /// frame (whose retransmit give-up is the suspicion signal).  Only
+    /// armed on crash-scheduled runs.
+    ProbeTimer { rank: Rank },
+    /// Scheduled fail-stop death of switch `node` (node id, i.e. `p + s`
+    /// for switch index `s`): the switch stops forwarding, routes are
+    /// rebuilt around it, and unreachable survivor pairs become a named
+    /// partition error.  Only scheduled on crash-scheduled runs.
+    CrashSwitch { node: usize },
 }
 
 /// Number of [`EventKind`] variants ([`EventKind::index`] stays below
 /// this) — sizes the event-loop self-profile's fixed tables.
-pub const EVENT_KINDS: usize = 7;
+pub const EVENT_KINDS: usize = 9;
 
 /// Display names by [`EventKind::index`] slot (profile table rows).
-pub const EVENT_KIND_NAMES: [&str; EVENT_KINDS] =
-    ["host_start", "host_recv", "nic_recv", "nic_host_req", "hpu_done", "bg_tick", "retx_timer"];
+pub const EVENT_KIND_NAMES: [&str; EVENT_KINDS] = [
+    "host_start",
+    "host_recv",
+    "nic_recv",
+    "nic_host_req",
+    "hpu_done",
+    "bg_tick",
+    "retx_timer",
+    "probe_timer",
+    "crash_switch",
+];
 
 impl EventKind {
     /// Stable display name, in [`EventKind::index`] order.
@@ -81,6 +102,8 @@ impl EventKind {
             EventKind::HpuDone { .. } => "hpu_done",
             EventKind::BgTick { .. } => "bg_tick",
             EventKind::RetxTimer { .. } => "retx_timer",
+            EventKind::ProbeTimer { .. } => "probe_timer",
+            EventKind::CrashSwitch { .. } => "crash_switch",
         }
     }
 
@@ -94,6 +117,8 @@ impl EventKind {
             EventKind::HpuDone { .. } => 4,
             EventKind::BgTick { .. } => 5,
             EventKind::RetxTimer { .. } => 6,
+            EventKind::ProbeTimer { .. } => 7,
+            EventKind::CrashSwitch { .. } => 8,
         }
     }
 }

@@ -12,6 +12,7 @@
 //! topology = ["auto", "fattree"]      # wiring axis (see net::Topology)
 //! tenants  = [1, 2, 4]                # concurrent-communicator axis
 //! loss     = [0.0, 0.01, 0.05]        # per-hop loss-probability axis
+//! crash    = ["", "rank:3@epoch:4"]   # fail-stop crash-schedule axis ("" = nobody dies)
 //! late_rank = ["none", 3]             # forced-late-rank axis ("none" = nobody late)
 //!
 //! [run]                               # scalar ExpConfig overrides
@@ -22,7 +23,7 @@
 //! ```
 //!
 //! Expansion order is fixed — series outermost, then topology, then p,
-//! then tenants, then loss, then late_rank, then sizes innermost — and each job derives
+//! then tenants, then loss, then crash, then late_rank, then sizes innermost — and each job derives
 //! its own seed from (master seed, job index), so the job list is a pure
 //! function of the spec: the parallel runner can execute it with any
 //! `--jobs` and merge back into the same report bytes.
@@ -49,6 +50,9 @@ pub struct GridSpec {
     pub tenants: Vec<usize>,
     /// Per-hop loss probabilities (0.0 = the classic reliable fabric).
     pub losses: Vec<f64>,
+    /// Fail-stop crash schedules (`""` = nobody dies; see
+    /// [`crate::net::fault::parse_crash_spec`] for the syntax).
+    pub crashes: Vec<String>,
     /// Forced-late-rank scenarios (`None` = nobody is held back).
     pub late_ranks: Vec<Option<usize>>,
     pub sizes: Vec<usize>,
@@ -91,11 +95,12 @@ impl GridSpec {
         for (k, _) in doc.section("grid") {
             if !matches!(
                 k,
-                "name" | "sizes" | "p" | "series" | "topology" | "tenants" | "loss" | "late_rank"
+                "name" | "sizes" | "p" | "series" | "topology" | "tenants" | "loss" | "crash"
+                    | "late_rank"
             ) {
                 return Err(format!(
                     "unknown grid key: {k} \
-                     (expected name/sizes/p/series/topology/tenants/loss/late_rank)"
+                     (expected name/sizes/p/series/topology/tenants/loss/crash/late_rank)"
                 ));
             }
         }
@@ -126,6 +131,13 @@ impl GridSpec {
                 .map(|v| v.parse::<f64>().map_err(|e| format!("grid.loss item {v:?}: {e}")))
                 .collect::<Result<Vec<f64>, String>>()?,
         };
+        let crashes = match doc.get_list("grid", "crash")? {
+            None => vec![base.crash_spec.clone()],
+            Some(items) if items.is_empty() => return Err("grid.crash is empty".into()),
+            // items are crash schedules verbatim; cell validation below
+            // rejects malformed specs and names the cell they came from
+            Some(items) => items,
+        };
         let late_ranks = match doc.get_list("grid", "late_rank")? {
             None => vec![base.late_rank],
             Some(items) if items.is_empty() => return Err("grid.late_rank is empty".into()),
@@ -152,8 +164,18 @@ impl GridSpec {
             Some(items) => items,
         };
 
-        let spec =
-            GridSpec { name, base, series, topologies, ps, tenants, losses, late_ranks, sizes };
+        let spec = GridSpec {
+            name,
+            base,
+            series,
+            topologies,
+            ps,
+            tenants,
+            losses,
+            crashes,
+            late_ranks,
+            sizes,
+        };
         spec.expand()?; // validate every cell loudly at parse time
         Ok(spec)
     }
@@ -173,6 +195,7 @@ impl GridSpec {
             // figure bytes) are untouched by the tenants and loss axes
             tenants: vec![1],
             losses: vec![0.0],
+            crashes: vec![String::new()],
             late_ranks: vec![None],
             sizes: bench::OSU_SIZES.to_vec(),
         }
@@ -180,11 +203,11 @@ impl GridSpec {
 
     pub fn n_jobs(&self) -> usize {
         self.series.len() * self.topologies.len() * self.ps.len() * self.tenants.len()
-            * self.losses.len() * self.late_ranks.len() * self.sizes.len()
+            * self.losses.len() * self.crashes.len() * self.late_ranks.len() * self.sizes.len()
     }
 
     /// Expand to the ordered job list (series, then topology, then p,
-    /// then tenants, then loss, then late_rank, then sizes).  Every cell is validated; an invalid
+    /// then tenants, then loss, then crash, then late_rank, then sizes).  Every cell is validated; an invalid
     /// combination (e.g. rd on a non-power-of-two p, a hypercube cell at
     /// a p that isn't one) names the cell it came from.
     pub fn expand(&self) -> Result<Vec<Job>, String> {
@@ -194,31 +217,34 @@ impl GridSpec {
                 for &p in &self.ps {
                     for &tenants in &self.tenants {
                         for &loss in &self.losses {
-                            for &late_rank in &self.late_ranks {
-                                for &size in &self.sizes {
-                                    let index = jobs.len();
-                                    let mut cfg = self.base.clone();
-                                    series.apply(&mut cfg);
-                                    cfg.topology = topo.clone();
-                                    cfg.p = p;
-                                    cfg.tenants = tenants;
-                                    cfg.loss = loss;
-                                    cfg.late_rank = late_rank;
-                                    cfg.msg_bytes = size;
-                                    cfg.seed = derive_seed(self.base.seed, index as u64);
-                                    cfg.validate().map_err(|e| {
-                                        let late = match late_rank {
-                                            Some(r) => r.to_string(),
-                                            None => "none".into(),
-                                        };
-                                        format!(
-                                            "grid cell {index} ({} {topo} p={p} \
-                                             tenants={tenants} loss={loss} late_rank={late} \
-                                             {size}B): {e}",
-                                            series.name()
-                                        )
-                                    })?;
-                                    jobs.push(Job { index, series, cfg });
+                            for crash in &self.crashes {
+                                for &late_rank in &self.late_ranks {
+                                    for &size in &self.sizes {
+                                        let index = jobs.len();
+                                        let mut cfg = self.base.clone();
+                                        series.apply(&mut cfg);
+                                        cfg.topology = topo.clone();
+                                        cfg.p = p;
+                                        cfg.tenants = tenants;
+                                        cfg.loss = loss;
+                                        cfg.crash_spec = crash.clone();
+                                        cfg.late_rank = late_rank;
+                                        cfg.msg_bytes = size;
+                                        cfg.seed = derive_seed(self.base.seed, index as u64);
+                                        cfg.validate().map_err(|e| {
+                                            let late = match late_rank {
+                                                Some(r) => r.to_string(),
+                                                None => "none".into(),
+                                            };
+                                            format!(
+                                                "grid cell {index} ({} {topo} p={p} \
+                                                 tenants={tenants} loss={loss} crash={crash:?} \
+                                                 late_rank={late} {size}B): {e}",
+                                                series.name()
+                                            )
+                                        })?;
+                                        jobs.push(Job { index, series, cfg });
+                                    }
                                 }
                             }
                         }
@@ -450,6 +476,45 @@ mod tests {
     }
 
     #[test]
+    fn crash_axis_expands_between_loss_and_late_rank() {
+        let spec = GridSpec::from_toml(
+            r#"
+            [grid]
+            sizes = [4, 64]
+            crash = ["", "rank:3@epoch:2"]
+            series = ["NF_rd"]
+            [run]
+            iters = 5
+            "#,
+        )
+        .unwrap();
+        assert_eq!(spec.n_jobs(), 4);
+        let jobs = spec.expand().unwrap();
+        let key = |j: &Job| (j.cfg.crash_spec.clone(), j.cfg.msg_bytes);
+        assert_eq!(key(&jobs[0]), (String::new(), 4));
+        assert_eq!(key(&jobs[1]), (String::new(), 64));
+        assert_eq!(key(&jobs[2]), ("rank:3@epoch:2".to_string(), 4));
+        assert_eq!(key(&jobs[3]), ("rank:3@epoch:2".to_string(), 64));
+        // default: the [run] scalar seeds a single-value axis
+        let spec =
+            GridSpec::from_toml("[grid]\nsizes = [4]\n[run]\ncrash = \"rank:1@epoch:0\"").unwrap();
+        assert_eq!(spec.crashes, vec!["rank:1@epoch:0".to_string()]);
+        // a malformed schedule hits cell validation and names its cell
+        let err = GridSpec::from_toml("[grid]\ncrash = [\"rank:9000\"]").unwrap_err();
+        assert!(err.contains("crash"), "{err}");
+        // a crash rank out of range for p is loud too
+        let err = GridSpec::from_toml("[grid]\ncrash = [\"rank:99@epoch:0\"]").unwrap_err();
+        assert!(err.contains("crash"), "{err}");
+        // a quiet crash axis must not perturb job indices (seed stability)
+        let with = GridSpec::from_toml("[grid]\nsizes = [4, 64]\ncrash = [\"\"]").unwrap();
+        let without = GridSpec::from_toml("[grid]\nsizes = [4, 64]").unwrap();
+        let seeds = |s: &GridSpec| -> Vec<u64> {
+            s.expand().unwrap().iter().map(|j| j.cfg.seed).collect()
+        };
+        assert_eq!(seeds(&with), seeds(&without), "crash=[\"\"] is index-neutral");
+    }
+
+    #[test]
     fn late_rank_axis_expands_between_loss_and_sizes() {
         let spec = GridSpec::from_toml(
             r#"
@@ -491,6 +556,7 @@ mod tests {
         assert_eq!(spec.ps, vec![8]);
         assert_eq!(spec.tenants, vec![1], "figs indices must not shift under the tenants axis");
         assert_eq!(spec.losses, vec![0.0], "figs runs on a lossless fabric");
+        assert_eq!(spec.crashes, vec![String::new()], "figs indices must not shift under crash");
         assert_eq!(spec.late_ranks, vec![None], "figs indices must not shift under late_rank");
         assert_eq!(spec.sizes, crate::bench::OSU_SIZES);
         let names: Vec<String> = spec.series.iter().map(|s| s.name()).collect();

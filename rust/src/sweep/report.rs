@@ -31,6 +31,8 @@ pub struct JobResult {
     pub loss: f64,
     /// Forced-late rank of the cell (`None` = nobody held back).
     pub late_rank: Option<usize>,
+    /// Fail-stop crash schedule of the cell (`""` = nobody dies).
+    pub crash: String,
     pub seed: u64,
     pub host: LatencyStats,
     pub nic: LatencyStats,
@@ -56,6 +58,12 @@ pub struct JobResult {
     pub retransmits: u64,
     pub timeouts_fired: u64,
     pub recovery_ns: u64,
+    /// Fail-stop recovery activity (all 0 on crash-free cells).
+    pub crashes: u64,
+    pub false_suspicions: u64,
+    pub detection_ns: u64,
+    pub reroutes: u64,
+    pub degraded_completions: u64,
     /// Latency attribution breakdown (`None` unless the cell ran with
     /// `attribution = true`; its components sum exactly to
     /// `latency_ns`).
@@ -73,6 +81,7 @@ impl JobResult {
             msg_bytes: job.cfg.msg_bytes,
             loss: job.cfg.loss,
             late_rank: job.cfg.late_rank,
+            crash: job.cfg.crash_spec.clone(),
             seed: job.cfg.seed,
             host: m.host_overall(),
             nic: m.nic_overall(),
@@ -98,6 +107,11 @@ impl JobResult {
             retransmits: m.retransmits,
             timeouts_fired: m.timeouts_fired,
             recovery_ns: m.recovery_ns,
+            crashes: m.crashes,
+            false_suspicions: m.false_suspicions,
+            detection_ns: m.detection_ns,
+            reroutes: m.reroutes,
+            degraded_completions: m.degraded_completions,
             attribution: m.attribution,
             sim_ns: m.sim_ns,
         }
@@ -116,6 +130,11 @@ impl JobResult {
         // pre-late_rank-axis artifact byte-identical
         if let Some(r) = self.late_rank {
             fields.push(("late_rank".into(), Json::int(r as u64)));
+        }
+        // emitted only when somebody is scheduled to die: absence keeps
+        // every pre-crash-axis artifact byte-identical
+        if !self.crash.is_empty() {
+            fields.push(("crash".into(), Json::str(self.crash.clone())));
         }
         fields.extend([
             ("seed".into(), Json::int(self.seed)),
@@ -142,6 +161,22 @@ impl JobResult {
             ("timeouts_fired".into(), Json::int(self.timeouts_fired)),
             ("recovery_ns".into(), Json::int(self.recovery_ns)),
         ]);
+        // fail-stop recovery activity, only when the cell saw any:
+        // absence keeps every crash-free artifact byte-identical
+        if self.crashes != 0
+            || self.false_suspicions != 0
+            || self.detection_ns != 0
+            || self.reroutes != 0
+            || self.degraded_completions != 0
+        {
+            fields.extend([
+                ("crashes".into(), Json::int(self.crashes)),
+                ("false_suspicions".into(), Json::int(self.false_suspicions)),
+                ("detection_ns".into(), Json::int(self.detection_ns)),
+                ("reroutes".into(), Json::int(self.reroutes)),
+                ("degraded_completions".into(), Json::int(self.degraded_completions)),
+            ]);
+        }
         // breakdown object, only when the cell measured it: absence
         // keeps attribution-off artifacts byte-identical, and nesting
         // keeps the clamped wire_ns/... fields from colliding with the
@@ -176,6 +211,8 @@ impl JobResult {
             loss: j.get("loss").and_then(|v| v.as_f64()).unwrap_or(0.0),
             // absent unless the cell forced a rank late
             late_rank: j.get("late_rank").and_then(|v| v.as_u64()).map(|r| r as usize),
+            // absent in pre-crash artifacts and on quiet cells
+            crash: j.get("crash").and_then(|v| v.as_str()).unwrap_or("").to_string(),
             seed: get_u64("seed")?,
             host: LatencyStats::from_json(j.get("host").ok_or("job: missing host")?)?,
             nic: LatencyStats::from_json(j.get("nic").ok_or("job: missing nic")?)?,
@@ -203,6 +240,14 @@ impl JobResult {
             retransmits: j.get("retransmits").and_then(|v| v.as_u64()).unwrap_or(0),
             timeouts_fired: j.get("timeouts_fired").and_then(|v| v.as_u64()).unwrap_or(0),
             recovery_ns: j.get("recovery_ns").and_then(|v| v.as_u64()).unwrap_or(0),
+            crashes: j.get("crashes").and_then(|v| v.as_u64()).unwrap_or(0),
+            false_suspicions: j.get("false_suspicions").and_then(|v| v.as_u64()).unwrap_or(0),
+            detection_ns: j.get("detection_ns").and_then(|v| v.as_u64()).unwrap_or(0),
+            reroutes: j.get("reroutes").and_then(|v| v.as_u64()).unwrap_or(0),
+            degraded_completions: j
+                .get("degraded_completions")
+                .and_then(|v| v.as_u64())
+                .unwrap_or(0),
             // absent in legacy / attribution-off artifacts
             attribution: match j.get("attribution") {
                 None => None,
@@ -256,6 +301,7 @@ pub struct SweepReport {
     pub ps: Vec<usize>,
     pub tenants: Vec<usize>,
     pub losses: Vec<f64>,
+    pub crashes: Vec<String>,
     pub late_ranks: Vec<Option<usize>>,
     pub sizes: Vec<usize>,
     pub jobs: Vec<JobResult>,
@@ -270,6 +316,7 @@ impl SweepReport {
             ps: spec.ps.clone(),
             tenants: spec.tenants.clone(),
             losses: spec.losses.clone(),
+            crashes: spec.crashes.clone(),
             late_ranks: spec.late_ranks.clone(),
             sizes: spec.sizes.clone(),
             jobs,
@@ -298,6 +345,14 @@ impl SweepReport {
                 Json::Arr(self.losses.iter().map(|&l| Json::Num(l)).collect()),
             ),
         ];
+        // axis key only when the grid actually scheduled crashes:
+        // absence keeps every pre-axis report byte-identical
+        if self.crashes != [String::new()] {
+            fields.push((
+                "crash".into(),
+                Json::Arr(self.crashes.iter().map(|c| Json::str(c.clone())).collect()),
+            ));
+        }
         // axis key only when the grid actually swept late ranks:
         // absence keeps every pre-axis report byte-identical
         if self.late_ranks != [None] {
@@ -359,6 +414,12 @@ impl SweepReport {
                 self.losses
             ));
         }
+        if self.crashes != [String::new()] {
+            return Err(format!(
+                "figure {stem} needs a crash-free grid, got {:?}",
+                self.crashes
+            ));
+        }
         if self.late_ranks.len() > 1 {
             return Err(format!(
                 "figure {stem} needs a single-late_rank grid, got {:?}",
@@ -408,8 +469,55 @@ impl SweepReport {
         ]))
     }
 
+    /// Recovery-cost figure: every cell's latency next to its fault
+    /// knobs and recovery activity, so latency-vs-loss and
+    /// latency-vs-crash curves can be read straight off the rows.
+    /// Row order is grid order, a pure function of the spec.
+    pub fn recovery_figure_json(&self) -> Json {
+        let rows = self
+            .jobs
+            .iter()
+            .map(|j| {
+                Json::Obj(vec![
+                    ("series".into(), Json::str(j.series.clone())),
+                    ("topology".into(), Json::str(j.topology.clone())),
+                    ("p".into(), Json::int(j.p as u64)),
+                    ("msg_bytes".into(), Json::int(j.msg_bytes as u64)),
+                    ("loss".into(), Json::Num(j.loss)),
+                    ("crash".into(), Json::str(j.crash.clone())),
+                    ("host_avg_us".into(), Json::Num(j.host.avg_us())),
+                    ("host_min_us".into(), Json::Num(j.host.min_us())),
+                    ("retransmits".into(), Json::int(j.retransmits)),
+                    ("recovery_ns".into(), Json::int(j.recovery_ns)),
+                    ("crashes".into(), Json::int(j.crashes)),
+                    ("false_suspicions".into(), Json::int(j.false_suspicions)),
+                    ("detection_ns".into(), Json::int(j.detection_ns)),
+                    ("reroutes".into(), Json::int(j.reroutes)),
+                    ("degraded_completions".into(), Json::int(j.degraded_completions)),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("figure".into(), Json::str("fig_recovery")),
+            (
+                "title".into(),
+                Json::str("recovery cost: MPI_Scan latency vs loss rate and crash schedule"),
+            ),
+            (
+                "loss".into(),
+                Json::Arr(self.losses.iter().map(|&l| Json::Num(l)).collect()),
+            ),
+            (
+                "crash".into(),
+                Json::Arr(self.crashes.iter().map(|c| Json::str(c.clone())).collect()),
+            ),
+            ("rows".into(), Json::Arr(rows)),
+        ])
+    }
+
     /// Write `<name>.json` (always) plus fig4..fig7.json for the
-    /// built-in figs grid.  Returns the files written.
+    /// built-in figs grid and fig_recovery.json whenever the grid
+    /// sweeps a fault axis.  Returns the files written.
     pub fn write_artifacts(&self, out_dir: &Path) -> Result<Vec<PathBuf>> {
         std::fs::create_dir_all(out_dir)
             .with_context(|| format!("creating {}", out_dir.display()))?;
@@ -433,6 +541,12 @@ impl SweepReport {
                 let doc = self.figure_json(stem).map_err(anyhow::Error::msg)?;
                 emit(stem, &doc)?;
             }
+        }
+        // recovery-cost figure only when a fault axis is actually swept
+        // (or a crash is pinned): quiet sweeps keep their artifact list
+        // — and therefore their bytes — unchanged
+        if self.losses.len() > 1 || self.crashes != [String::new()] {
+            emit("fig_recovery", &self.recovery_figure_json())?;
         }
         Ok(written)
     }
@@ -487,6 +601,7 @@ mod tests {
             msg_bytes: size,
             loss: 0.0,
             late_rank: None,
+            crash: String::new(),
             seed: 1000 + index as u64,
             host: stats(&[base, base + 2_000]),
             nic: stats(&[base / 4]),
@@ -504,6 +619,11 @@ mod tests {
             retransmits: 0,
             timeouts_fired: 0,
             recovery_ns: 0,
+            crashes: 0,
+            false_suspicions: 0,
+            detection_ns: 0,
+            reroutes: 0,
+            degraded_completions: 0,
             attribution: None,
             sim_ns: 1_000_000,
         };
@@ -514,6 +634,7 @@ mod tests {
             ps: vec![8],
             tenants: vec![1],
             losses: vec![0.0],
+            crashes: vec![String::new()],
             late_ranks: vec![None],
             sizes: vec![4, 64],
             jobs: vec![
@@ -585,6 +706,41 @@ mod tests {
     }
 
     #[test]
+    fn figure_json_rejects_crash_grids() {
+        let mut r = tiny_report();
+        r.crashes = vec![String::new(), "rank:3@epoch:2".into()];
+        let err = r.figure_json("fig4").unwrap_err();
+        assert!(err.contains("crash-free"), "{err}");
+        // even a single pinned crash disqualifies the paper figures
+        let mut r = tiny_report();
+        r.crashes = vec!["rank:3@epoch:2".into()];
+        assert!(r.figure_json("fig4").is_err());
+    }
+
+    #[test]
+    fn recovery_figure_lists_every_cell_with_its_fault_knobs() {
+        let mut r = tiny_report();
+        r.losses = vec![0.0, 0.02];
+        r.crashes = vec![String::new(), "rank:3@epoch:2".into()];
+        r.jobs[3].crash = "rank:3@epoch:2".into();
+        r.jobs[3].crashes = 1;
+        r.jobs[3].detection_ns = 700;
+        r.jobs[3].degraded_completions = 2;
+        let doc = Json::parse(&r.recovery_figure_json().pretty()).unwrap();
+        assert_eq!(doc.get("figure").unwrap().as_str(), Some("fig_recovery"));
+        let crash_axis = doc.get("crash").unwrap().as_arr().unwrap();
+        assert_eq!(crash_axis[1].as_str(), Some("rank:3@epoch:2"));
+        let rows = doc.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), r.jobs.len(), "one row per grid cell");
+        assert_eq!(rows[0].get("crash").unwrap().as_str(), Some(""));
+        assert_eq!(rows[3].get("crashes").and_then(|v| v.as_u64()), Some(1));
+        assert_eq!(rows[3].get("detection_ns").and_then(|v| v.as_u64()), Some(700));
+        assert_eq!(rows[3].get("degraded_completions").and_then(|v| v.as_u64()), Some(2));
+        // emission is deterministic
+        assert_eq!(r.recovery_figure_json().pretty(), r.recovery_figure_json().pretty());
+    }
+
+    #[test]
     fn figure_json_rejects_multi_late_rank_grids() {
         let mut r = tiny_report();
         r.late_ranks = vec![None, Some(3)];
@@ -599,18 +755,35 @@ mod tests {
         let doc = r.to_json().pretty();
         assert!(!doc.contains("late_rank"), "default report must stay byte-identical");
         assert!(!doc.contains("\"attribution\""), "default report must stay byte-identical");
+        assert!(!doc.contains("\"crash"), "default report must stay byte-identical");
+        assert!(!doc.contains("false_suspicions"), "default report must stay byte-identical");
 
         let mut r = r;
         r.late_ranks = vec![None, Some(3)];
         r.jobs[1].late_rank = Some(3);
+        r.crashes = vec![String::new(), "rank:2@epoch:1".into()];
+        r.jobs[2].crash = "rank:2@epoch:1".into();
+        r.jobs[2].crashes = 1;
+        r.jobs[2].reroutes = 1;
+        r.jobs[2].degraded_completions = 3;
         r.jobs[1].attribution = Some(Attribution::finalize(10, 2, 0, 5, 3, 0, 300));
         let doc = Json::parse(&r.to_json().pretty()).unwrap();
         let axis = doc.get("late_rank").unwrap().as_arr().unwrap();
         assert_eq!(axis[0].as_str(), Some("none"));
         assert_eq!(axis[1].as_u64(), Some(3));
+        let crash_axis = doc.get("crash").unwrap().as_arr().unwrap();
+        assert_eq!(crash_axis[0].as_str(), Some(""));
+        assert_eq!(crash_axis[1].as_str(), Some("rank:2@epoch:1"));
         let jobs = doc.get("jobs").unwrap().as_arr().unwrap();
         assert!(jobs[0].get("late_rank").is_none());
         assert_eq!(jobs[1].get("late_rank").and_then(|v| v.as_u64()), Some(3));
+        assert!(jobs[0].get("crash").is_none(), "quiet cell emits no crash fields");
+        assert!(jobs[0].get("crashes").is_none(), "quiet cell emits no crash fields");
+        assert_eq!(jobs[2].get("crash").and_then(|v| v.as_str()), Some("rank:2@epoch:1"));
+        assert_eq!(jobs[2].get("crashes").and_then(|v| v.as_u64()), Some(1));
+        assert_eq!(jobs[2].get("false_suspicions").and_then(|v| v.as_u64()), Some(0));
+        assert_eq!(jobs[2].get("reroutes").and_then(|v| v.as_u64()), Some(1));
+        assert_eq!(jobs[2].get("degraded_completions").and_then(|v| v.as_u64()), Some(3));
         let attr = jobs[1].get("attribution").unwrap();
         assert_eq!(attr.get("wire_ns").and_then(|v| v.as_u64()), Some(10));
         assert_eq!(attr.get("host_ns").and_then(|v| v.as_u64()), Some(280));
@@ -621,6 +794,15 @@ mod tests {
         let back = JobResult::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back.late_rank, Some(3));
         assert_eq!(back.attribution, r.jobs[1].attribution);
+        assert_eq!(back.to_json().pretty(), text, "emission is stable");
+
+        // the crashed job round-trips too, counters included
+        let text = r.jobs[2].to_json().pretty();
+        let back = JobResult::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.crash, "rank:2@epoch:1");
+        assert_eq!(back.crashes, 1);
+        assert_eq!(back.reroutes, 1);
+        assert_eq!(back.degraded_completions, 3);
         assert_eq!(back.to_json().pretty(), text, "emission is stable");
     }
 

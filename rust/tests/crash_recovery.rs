@@ -1,0 +1,290 @@
+//! Fail-stop regression corpus: crash schedules replayed from TOML
+//! configs, heartbeat detection, reroute-and-degrade recovery, and the
+//! no-crash invariants that keep a crash-free fabric byte-identical to
+//! the pre-failure simulator.
+//!
+//! The scenarios here are the locked-in contract for the failure model:
+//! - a scheduled rank death is detected, the group shrinks, and the
+//!   survivors complete with survivor-oracle values — never a hang;
+//! - a redundant-path switch death reroutes and the full group still
+//!   finishes; a trunk death that partitions survivors is a NAMED
+//!   error;
+//! - corrupted frames fail the CRC, count as drops, and ride the
+//!   existing retransmit path; reordered frames still verify;
+//! - the `crash` sweep axis is deterministic across worker counts, and
+//!   a `crash = [""]` grid is byte-identical to one that never mentions
+//!   crashes at all.
+
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use nfscan::cluster::Cluster;
+use nfscan::config::{EngineKind, ExpConfig};
+use nfscan::runtime::make_engine;
+use nfscan::sweep::{run_grid, GridSpec};
+
+fn native() -> Rc<dyn nfscan::runtime::Compute> {
+    make_engine(EngineKind::Native, "artifacts")
+}
+
+/// Replay one TOML experiment (the failure schedules live in the config
+/// text, exactly as a user would commit them) and return its metrics.
+fn replay(toml: &str) -> nfscan::metrics::RunMetrics {
+    let cfg = ExpConfig::from_toml(toml).expect("scenario config parses");
+    let mut cluster = Cluster::new(cfg, native());
+    cluster.run().expect("scenario terminates cleanly")
+}
+
+#[test]
+fn scheduled_rank_death_shrinks_the_group_and_completes() {
+    // Rank 1 fail-stops at the top of its 3rd epoch on a hypercube.
+    // Its silence must be detected (ack give-up or probe), the fabric
+    // rerouted, and every stuck survivor epoch completed over the
+    // shrunk group — with verify on, the in-run verifier accepts the
+    // survivor-oracle values for degraded epochs.
+    let m = replay(
+        r#"
+        [run]
+        p = 4
+        algo = "rd"
+        path = "fpga"
+        msg_bytes = 64
+        iters = 8
+        warmup = 0
+        verify = true
+        crash = "rank:1@epoch:2"
+
+        [cost]
+        max_retries = 8
+        "#,
+    );
+    assert_eq!(m.crashes, 1, "exactly the scheduled death");
+    assert_eq!(m.false_suspicions, 0, "no healthy rank was evicted");
+    assert!(m.detection_ns > 0, "death-to-verdict latency must be attributed");
+    assert!(m.reroutes >= 1, "the corpse must leave the route table");
+    assert!(m.degraded_completions >= 1, "stuck survivor epochs complete shrunk");
+}
+
+#[test]
+fn redundant_switch_death_reroutes_and_the_full_group_finishes() {
+    // Kill one aggregation switch of a p = 8 fat-tree mid-run: BFS
+    // recomputation routes around it through the pod's sibling, every
+    // rank survives, and the run completes full-group (no degradation).
+    // Frames in flight through the corpse are dropped and re-covered by
+    // the retransmit layer.
+    let m = replay(
+        r#"
+        [run]
+        p = 8
+        algo = "rd"
+        path = "fpga"
+        topology = "fattree"
+        msg_bytes = 256
+        iters = 8
+        warmup = 0
+        verify = true
+        crash = "switch:3@ns:300000"
+
+        [cost]
+        max_retries = 8
+        "#,
+    );
+    assert_eq!(m.crashes, 1, "exactly the scheduled switch death");
+    assert!(m.reroutes >= 1, "the fabric must be rerouted around the corpse");
+    assert_eq!(m.degraded_completions, 0, "no rank died — the full group finishes");
+    assert_eq!(m.false_suspicions, 0, "rerouting must not smell like a rank death");
+}
+
+#[test]
+fn trunk_switch_death_is_a_named_partition_error() {
+    // A star fabric has no redundant paths: killing a leaf switch
+    // strands its hosts, no protocol can terminate across the cut, and
+    // the run must FAIL with an error naming the partition — not hang
+    // until a watchdog or the test harness gives up.
+    let cfg = ExpConfig::from_toml(
+        r#"
+        [run]
+        p = 8
+        algo = "rd"
+        path = "fpga"
+        topology = "star:4"
+        msg_bytes = 64
+        iters = 4
+        warmup = 0
+        verify = false
+        crash = "switch:0@ns:200000"
+        "#,
+    )
+    .expect("scenario config parses");
+    let mut cluster = Cluster::new(cfg, native());
+    let err = format!("{:#}", cluster.run().expect_err("a partition must be an error"));
+    assert!(err.contains("partition"), "error must name the partition: {err}");
+    assert!(err.contains("star"), "error must name the topology: {err}");
+}
+
+#[test]
+fn dead_bcast_root_is_a_structured_degraded_failure() {
+    // Shrinking cannot save a broadcast whose root died before epoch 1:
+    // no survivor holds the data.  The run must surface the structured
+    // (coll, epoch, dead ranks) failure — named, attributable, never a
+    // hang against the silent peer.
+    let cfg = ExpConfig::from_toml(
+        r#"
+        [run]
+        p = 4
+        algo = "rd"
+        path = "sw"
+        coll = "bcast"
+        msg_bytes = 64
+        iters = 4
+        warmup = 0
+        verify = false
+        crash = "rank:0@epoch:1"
+        "#,
+    )
+    .expect("scenario config parses");
+    let mut cluster = Cluster::new(cfg, native());
+    let err = format!("{:#}", cluster.run().expect_err("a dead root must be an error"));
+    assert!(err.contains("degraded failure"), "{err}");
+    assert!(err.contains("bcast"), "error must name the collective: {err}");
+    assert!(err.contains("dead ranks"), "error must name the dead set: {err}");
+}
+
+#[test]
+fn corrupted_frame_fails_crc_and_rides_the_retransmit_path() {
+    // Mangle the first frame on the 0 -> 1 wire: the receiver's CRC
+    // check must reject it pre-ack, the sender's timer re-covers it,
+    // and the scan still verifies against the oracle.
+    let m = replay(
+        r#"
+        [run]
+        p = 2
+        algo = "seq"
+        path = "fpga"
+        msg_bytes = 64
+        iters = 2
+        warmup = 0
+        verify = true
+        corrupt = "0->1:1"
+        "#,
+    );
+    assert!(m.retransmits >= 1, "a CRC-rejected frame must be resent");
+    assert!(m.timeouts_fired >= 1, "the resend is timer-driven");
+    assert!(m.recovery_ns > 0, "recovery latency must be attributed");
+}
+
+#[test]
+fn reordered_frames_still_verify() {
+    // Hold the first 0 -> 1 frame back so a later one overtakes it:
+    // reassembly and the dedup layer must absorb the inversion and the
+    // results must still be oracle-exact (verify is on).
+    let m = replay(
+        r#"
+        [run]
+        p = 4
+        algo = "rd"
+        path = "fpga"
+        msg_bytes = 4096
+        iters = 4
+        warmup = 0
+        verify = true
+        reorder = "0->1:1"
+        "#,
+    );
+    assert!(m.total_frames() > 0);
+}
+
+const CHAOS_GRID: &str = r#"
+    [grid]
+    name = "chaos"
+    sizes = [64]
+    p = [8]
+    series = ["NF_rd"]
+    loss = [0.0, 0.02]
+    crash = ["", "rank:3@epoch:4"]
+
+    [run]
+    iters = 8
+    warmup = 2
+    seed = 9
+    verify = true
+
+    [cost]
+    max_retries = 8
+"#;
+
+fn scratch(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("nfscan_crash_{tag}_{}", std::process::id()))
+}
+
+#[test]
+fn chaos_grid_artifacts_identical_for_jobs_1_and_4() {
+    // Failure recovery is event-driven simulation, not wall clock: a
+    // crash-axis grid must produce byte-identical artifacts for any
+    // worker count, its crashed cells must record the death and shrunk
+    // completions, and its baseline cells must record neither.
+    let spec = GridSpec::from_toml(CHAOS_GRID).unwrap();
+    let d1 = scratch("j1");
+    let d4 = scratch("j4");
+    let files1 = run_grid(&spec, 1, "artifacts").unwrap().write_artifacts(&d1).unwrap();
+    let files4 = run_grid(&spec, 4, "artifacts").unwrap().write_artifacts(&d4).unwrap();
+    assert!(!files1.is_empty());
+    assert!(
+        files1.iter().any(|f| f.file_name().unwrap().to_string_lossy() == "fig_recovery.json"),
+        "a crash/loss grid must emit the recovery-cost figure"
+    );
+    for (a, b) in files1.iter().zip(files4.iter()) {
+        assert_eq!(
+            std::fs::read(a).unwrap(),
+            std::fs::read(b).unwrap(),
+            "{} differs between --jobs 1 and --jobs 4",
+            a.file_name().unwrap().to_string_lossy()
+        );
+    }
+
+    let report = run_grid(&spec, 2, "artifacts").unwrap();
+    let doc = report.to_json();
+    let jobs = doc.get("jobs").unwrap().as_arr().unwrap();
+    assert_eq!(jobs.len(), 4, "2 loss x 2 crash cells");
+    let crashed: Vec<_> = jobs.iter().filter(|j| j.get("crash").is_some()).collect();
+    assert_eq!(crashed.len(), 2, "the crash schedule tags exactly its cells");
+    for j in &crashed {
+        assert_eq!(j.get("crashes").unwrap().as_u64(), Some(1));
+        assert!(j.get("degraded_completions").unwrap().as_u64().unwrap() >= 1);
+    }
+    for j in jobs.iter().filter(|j| j.get("crash").is_none()) {
+        assert!(j.get("crashes").is_none(), "crash-free cells stay schema-clean");
+        assert!(j.get("degraded_completions").is_none());
+    }
+
+    std::fs::remove_dir_all(&d1).ok();
+    std::fs::remove_dir_all(&d4).ok();
+}
+
+#[test]
+fn empty_crash_axis_is_byte_invisible() {
+    // A grid that says `crash = [""]` and one that never mentions
+    // crashes must emit byte-identical reports: job indices, derived
+    // seeds, schedules, metrics — everything.  Same no-regression
+    // anchor as the loss axis, extended to the failure model.
+    let with_key = CHAOS_GRID
+        .replace("crash = [\"\", \"rank:3@epoch:4\"]", "crash = [\"\"]")
+        .replace("loss = [0.0, 0.02]", "loss = [0.0]");
+    let without_key = with_key.replace("crash = [\"\"]\n", "");
+    let a = run_grid(&GridSpec::from_toml(&with_key).unwrap(), 2, "artifacts").unwrap();
+    let b = run_grid(&GridSpec::from_toml(&without_key).unwrap(), 2, "artifacts").unwrap();
+    assert_eq!(a.to_json().pretty(), b.to_json().pretty());
+}
+
+#[test]
+fn quiet_corrupt_and_reorder_knobs_are_byte_invisible() {
+    // Explicit empty corrupt/reorder schedules in [run] must leave the
+    // report byte-identical to a config that never mentions them.
+    let quiet = CHAOS_GRID
+        .replace("crash = [\"\", \"rank:3@epoch:4\"]", "")
+        .replace("loss = [0.0, 0.02]", "loss = [0.0]");
+    let explicit = quiet.replace("verify = true", "verify = true\n    corrupt = \"\"\n    reorder = \"\"");
+    let a = run_grid(&GridSpec::from_toml(&quiet).unwrap(), 2, "artifacts").unwrap();
+    let b = run_grid(&GridSpec::from_toml(&explicit).unwrap(), 2, "artifacts").unwrap();
+    assert_eq!(a.to_json().pretty(), b.to_json().pretty());
+}
